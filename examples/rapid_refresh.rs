@@ -1,0 +1,95 @@
+//! Rapid-refresh demo: the memory-aware expander under out-of-order
+//! arrivals and same-user bursts — per-user single-flight, pseudo
+//! pre-inference, and at-most-once DRAM→HBM reload per burst (§3.4),
+//! demonstrated against real device buffers.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example rapid_refresh
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use relaygr::relay::expander::{DramPolicy, Expander, PseudoAction};
+use relaygr::relay::hbm::HbmCache;
+use relaygr::runtime::{synth_embedding, Engine, FnKind};
+use relaygr::serve::Payload;
+
+fn main() -> Result<()> {
+    relaygr::util::logging::init();
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let engine = Engine::load(&dir)?;
+    let spec = engine.manifest.default_variant().ok_or_else(|| anyhow!("run `make artifacts`"))?;
+    let prefix_m = engine.model(FnKind::Prefix, &spec)?;
+    let rank_m = engine.model(FnKind::Rank, &spec)?;
+
+    let mut hbm: HbmCache<Payload> = HbmCache::new(64 << 20);
+    let mut ex: Expander<Payload> = Expander::new(DramPolicy::Capacity(1 << 30), 2);
+    let user = 99u64;
+    let kv_bytes = spec.kv_bytes();
+    let t_life = 300_000;
+
+    // --- request #1: normal relay race ------------------------------------
+    println!("request #1: pre-infer → HBM → rank-on-cache");
+    let prefix = synth_embedding(user ^ 1, spec.prefix_len, spec.dim, 0.5);
+    let incr = synth_embedding(user ^ 2, spec.incr_len, spec.dim, 0.5);
+    let items = synth_embedding(user ^ 3, spec.num_items, spec.dim, 0.5);
+    hbm.begin_produce(user, kv_bytes, 0, t_life).unwrap();
+    let kv = Arc::new(prefix_m.execute_to_device(&[&prefix])?);
+    hbm.complete_produce(user, Payload::Device(kv.clone()));
+    assert_eq!(ex.pseudo_pre_infer(user, &mut hbm, 0), PseudoAction::HbmHit);
+    let scores1 = rank_m.execute_with_kv(&kv, &[&incr, &items])?;
+    // Consume → spill host copy to DRAM → window slides past the entry.
+    hbm.consume(user);
+    let host = Arc::new(kv.to_host()?);
+    ex.spill(user, kv_bytes, Payload::Host(host));
+    hbm.evict(user);
+    println!("  ψ spilled to DRAM ({:.2} MB), HBM window slid", kv_bytes as f64 / 1e6);
+
+    // --- rapid refresh burst: 3 out-of-order ranking requests --------------
+    println!("\nrapid refresh burst: 3 ranking requests arrive before any pre-infer");
+    let a1 = ex.pseudo_pre_infer(user, &mut hbm, 0);
+    let a2 = ex.pseudo_pre_infer(user, &mut hbm, 0);
+    let a3 = ex.pseudo_pre_infer(user, &mut hbm, 0);
+    println!("  pseudo-pre-infer: {a1:?}, {a2:?}, {a3:?}");
+    assert!(matches!(a1, PseudoAction::StartReload { .. }), "first starts the reload");
+    assert_eq!(a2, PseudoAction::JoinReload, "second joins");
+    assert_eq!(a3, PseudoAction::JoinReload, "third joins");
+
+    // The single reload performs the only H2D of the burst.
+    let t0 = std::time::Instant::now();
+    let Some((bytes, Payload::Host(data))) = ex.dram_payload(user) else {
+        anyhow::bail!("payload vanished")
+    };
+    let kv2 = Arc::new(rank_m.kv_from_host(&data)?);
+    let h2d = t0.elapsed();
+    let done = ex.complete_reload(user, Payload::Device(kv2.clone()), bytes, 10, t_life, &mut hbm);
+    println!(
+        "  one H2D reload ({h2d:.2?}) served {} joined waiters; installed={}",
+        done.joiners, done.installed
+    );
+    assert_eq!(done.joiners, 2);
+    assert_eq!(ex.stats().reloads_started, 1, "at most one reload per burst");
+
+    // All three rank on the reloaded ψ — scores must match request #1
+    // bit-for-bit (same prefix ⇒ same ψ ⇒ same scores).
+    for i in 0..3 {
+        let scores = rank_m.execute_with_kv(&kv2, &[&incr, &items])?;
+        let eps = scores1
+            .iter()
+            .zip(&scores)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("  refresh rank #{i}: ε vs request #1 = {eps:.3e}");
+        assert!(eps <= 1e-5, "spill/reload must preserve ψ exactly");
+    }
+
+    let s = ex.stats();
+    println!(
+        "\nexpander stats: dram_hits={} joins={} reloads={} spills={}",
+        s.dram_hits, s.reloads_joined, s.reloads_started, s.spills
+    );
+    println!("rapid_refresh OK");
+    Ok(())
+}

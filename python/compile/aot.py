@@ -1,0 +1,136 @@
+"""AOT lowering: jax → HLO **text** artifacts + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from the ``python/`` directory, as `make artifacts` does)::
+
+    python -m compile.aot --out-dir ../artifacts [--grid default|tiny]
+
+Python runs only here, at build time; the rust coordinator loads the
+resulting artifacts via PJRT and never touches python on the request
+path.  Re-running is a no-op when inputs are unchanged (the Makefile
+guards on source mtimes).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import List
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import ModelConfig, config_to_dict, default_grid, tiny
+
+FNS = ("prefix", "rank", "full")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser).
+
+    ``return_tuple=False``: every entry point returns exactly one array
+    (ψ or the score vector), so the module root is the raw array.  The
+    rust hot path can then keep ψ as an on-device PjRtBuffer and feed it
+    straight back into the rank executable via ``execute_b`` — the
+    in-HBM residency the paper's relay race relies on — without a host
+    round-trip or tuple unpacking.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    # CRITICAL: the default HLO printer elides large literals as
+    # `constant({...})`, which the text parser silently re-materialises as
+    # ZEROS — the baked model weights would vanish.  Print with
+    # print_large_constants so the artifact is self-contained.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # The consumer is xla_extension 0.5.1's HLO parser, which predates
+    # newer metadata attributes (source_end_line etc.) — strip metadata.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    if "{...}" in text:
+        raise RuntimeError("HLO still contains elided constants")
+    return text
+
+
+def lower_entry(cfg: ModelConfig, fn: str) -> str:
+    specs = model.input_specs(cfg, fn)
+    lowered = jax.jit(model.entry(cfg, fn)).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def artifact_record(cfg: ModelConfig, fn: str, path: str, hlo: str) -> dict:
+    specs = model.input_specs(cfg, fn)
+    out_shapes = {
+        "prefix": [[cfg.layers, 2, cfg.heads, cfg.prefix_len, cfg.head_dim]],
+        "rank": [[cfg.num_items]],
+        "full": [[cfg.num_items]],
+    }[fn]
+    return {
+        "name": f"{fn}_{cfg.name}",
+        "fn": fn,
+        "path": os.path.basename(path),
+        "sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+        "config": config_to_dict(cfg),
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+        ],
+        "outputs": [{"shape": s, "dtype": "float32"} for s in out_shapes],
+    }
+
+
+def build(out_dir: str, grid: List[ModelConfig], verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    records = []
+    t_start = time.time()
+    for cfg in grid:
+        cfg.validate()
+        for fn in FNS:
+            name = f"{fn}_{cfg.name}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            t0 = time.time()
+            hlo = lower_entry(cfg, fn)
+            with open(path, "w") as f:
+                f.write(hlo)
+            records.append(artifact_record(cfg, fn, path, hlo))
+            if verbose:
+                print(
+                    f"  {name:48s} {len(hlo) / 1e6:7.2f} MB hlo  "
+                    f"{time.time() - t0:5.1f}s",
+                    flush=True,
+                )
+    manifest = {
+        "version": 1,
+        "generated_unix": int(time.time()),
+        "jax_version": jax.__version__,
+        "artifacts": records,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(
+            f"wrote {len(records)} artifacts + manifest.json "
+            f"in {time.time() - t_start:.1f}s"
+        )
+    return manifest
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--grid", choices=("default", "tiny"), default="default")
+    args = ap.parse_args(argv)
+    grid = default_grid() if args.grid == "default" else [tiny()]
+    build(args.out_dir, grid)
+
+
+if __name__ == "__main__":
+    main()

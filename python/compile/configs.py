@@ -1,0 +1,123 @@
+"""Model-variant grid for the RelayGR reproduction.
+
+Each :class:`ModelConfig` describes one GR backbone variant (the paper's
+Type 1 = HSTU, Type 2 = HSTU with revised attention, Type 3 = a
+LONGER-style cached backbone feeding a RankMixer-style DLRM tower).
+
+For every config three entry points are AOT-lowered to HLO text:
+
+* ``prefix``  — pre-inference over the long-term behaviour prefix,
+  producing the per-layer KV cache ψ (the paper's cached object).
+* ``rank``    — ranking-on-cache: consumes ψ plus the incremental tokens
+  (short-term behaviours + cross features) and the candidate items.
+* ``full``    — the production baseline: full inline inference.
+
+Sequence-length *buckets* are static shapes (PJRT AOT requires static
+shapes); the rust coordinator picks the smallest bucket that fits a
+request, exactly as production serving stacks bucket their inputs.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+
+# Block size used by the Pallas attention kernel.  All sequence buckets,
+# incremental lengths and candidate counts must be multiples of this.
+BLOCK = 64
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One GR backbone variant (static-shape bucket)."""
+
+    model_type: int  # 1 = HSTU, 2 = HSTU-rev, 3 = LONGER+RankMixer-style
+    layers: int
+    dim: int
+    heads: int
+    prefix_len: int      # S_l : long-term behaviour prefix tokens
+    incr_len: int        # S~l : short-term behaviours + cross features
+    num_items: int       # |I| : candidate items scored per request
+    dtype: str = "float32"
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    @property
+    def total_len(self) -> int:
+        return self.prefix_len + self.incr_len + self.num_items
+
+    @property
+    def items_start(self) -> int:
+        return self.prefix_len + self.incr_len
+
+    @property
+    def kv_bytes(self) -> int:
+        """ψ footprint in bytes: per-layer K and V over the prefix.
+
+        Table 1 sanity: 8 layers, 2K tokens, dim 256, fp32
+        -> 8 * 2 * 2048 * 256 * 4 B = 32 MiB.
+        """
+        itemsize = 4 if self.dtype == "float32" else 2
+        return self.layers * 2 * self.prefix_len * self.dim * itemsize
+
+    @property
+    def name(self) -> str:
+        return (
+            f"t{self.model_type}_L{self.layers}_D{self.dim}_H{self.heads}"
+            f"_S{self.prefix_len}_I{self.incr_len}_N{self.num_items}"
+        )
+
+    def validate(self) -> None:
+        for v, what in [
+            (self.prefix_len, "prefix_len"),
+            (self.incr_len, "incr_len"),
+            (self.num_items, "num_items"),
+        ]:
+            if v % BLOCK != 0 or v <= 0:
+                raise ValueError(f"{what}={v} must be a positive multiple of {BLOCK}")
+        if self.dim % self.heads != 0:
+            raise ValueError("dim must be divisible by heads")
+        if self.model_type not in (1, 2, 3):
+            raise ValueError("model_type must be 1, 2 or 3")
+
+
+# ---------------------------------------------------------------------------
+# Default artifact grid.
+#
+# Live-mode (real PJRT CPU execution) uses small dims so that `make
+# artifacts` stays fast; the rust discrete-event simulator covers the
+# paper-scale dims (256..1024, 8..16 layers, up to 15K tokens) through the
+# calibrated cost model.
+# ---------------------------------------------------------------------------
+
+def default_grid() -> List[ModelConfig]:
+    grid: List[ModelConfig] = []
+    # Sequence-length scaling family (Type 1 = HSTU-style).
+    for prefix in (256, 512, 1024, 2048):
+        grid.append(ModelConfig(1, 2, 64, 2, prefix, 64, 128))
+    # A deeper/wider config for the end-to-end example.
+    grid.append(ModelConfig(1, 4, 128, 4, 512, 64, 128))
+    # Candidate-set scaling (Fig. 14a live calibration).
+    grid.append(ModelConfig(1, 2, 64, 2, 512, 64, 256))
+    # Model generality (Fig. 15a): Type 2 and Type 3 variants.
+    grid.append(ModelConfig(2, 2, 64, 2, 512, 64, 128))
+    grid.append(ModelConfig(3, 2, 64, 2, 512, 64, 128))
+    for cfg in grid:
+        cfg.validate()
+    return grid
+
+
+def tiny() -> ModelConfig:
+    """Smallest config — used by unit tests and the quickstart example."""
+    return ModelConfig(1, 2, 32, 2, 128, 64, 64)
+
+
+def config_to_dict(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["head_dim"] = cfg.head_dim
+    d["kv_bytes"] = cfg.kv_bytes
+    d["name"] = cfg.name
+    return d

@@ -1,0 +1,158 @@
+"""L1 Pallas kernel: HSTU-style pointwise attention for generative
+recommendation, with full-sequence and KV-cached (relay-race) variants.
+
+HSTU attention (Zhai et al., "Actions Speak Louder than Words") replaces
+softmax with a pointwise nonlinearity::
+
+    A = phi(Q K^T / sqrt(d_h)) * M / n        (phi = SiLU for Type 1,
+    O = A V                                    sigmoid for Type 2 "rev")
+
+Because there is no row-wise softmax there is no running-max/denominator
+rescaling: the output is a plain sum over key blocks, so the kernel tiles
+(q-block × k-block) and *accumulates* into the output ref across the key
+grid dimension.  This is the TPU-idiomatic reformulation of the paper's
+Ascend-cube kernel: the BlockSpec grid expresses the HBM↔VMEM schedule
+that a GPU/NPU kernel would express with threadblocks.
+
+The attention mask is computed **inside the kernel** from global row/col
+indices (broadcasted_iota) instead of materialising an S×S mask in HBM:
+
+* behaviour rows (global row < items_start): causal — ``col <= row``;
+* candidate-item rows (global row >= items_start): attend to every
+  behaviour token plus themselves, but *not* to other candidates —
+  ``col < items_start or col == row``.  Candidates are therefore scored
+  independently, which is what makes the per-layer KV of the behaviour
+  prefix a reusable cache object ψ.
+
+The cached variant is the same kernel with ``q_offset > 0``: the query
+rows are the incremental tokens (short-term + cross features + items)
+whose global indices start after the cached prefix, and K/V span
+[prefix ‖ incremental].
+
+Lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU perf is estimated in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import BLOCK
+
+
+def _phi(x, model_type: int):
+    """Pointwise attention nonlinearity per model type."""
+    if model_type == 2:  # "revised" attention: sigmoid gating
+        return jax.nn.sigmoid(x)
+    return jax.nn.silu(x)  # Types 1 and 3
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    scale: float,
+    inv_n: float,
+    bq: int,
+    bk: int,
+    q_offset: int,
+    items_start: int,
+    model_type: int,
+):
+    """One (head, q-block, k-block) grid step.
+
+    Refs carry a leading singleton head axis selected by the index maps:
+    q_ref [1, bq, dh], k_ref/v_ref [1, bk, dh], o_ref [1, bq, dh].
+    """
+    ik = pl.program_id(2)
+
+    q = q_ref[0]  # [bq, dh]
+    k = k_ref[0]  # [bk, dh]
+    v = v_ref[0]  # [bk, dh]
+
+    # MXU-friendly block matmul in fp32 accumulation.
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    a = _phi(s, model_type)
+
+    # Global indices of this tile's rows/cols.
+    iq = pl.program_id(1)
+    rows = q_offset + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    causal = cols <= rows
+    item_row = rows >= items_start
+    item_ok = (cols < items_start) | (cols == rows)
+    mask = jnp.where(item_row, item_ok, causal)
+
+    a = jnp.where(mask, a, 0.0) * inv_n
+    contrib = jnp.dot(a.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    # Accumulate across the key grid dimension (sequential innermost dim).
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[0] = contrib.astype(o_ref.dtype)
+
+    @pl.when(ik > 0)
+    def _acc():
+        o_ref[0] = o_ref[0] + contrib.astype(o_ref.dtype)
+
+
+def hstu_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_offset: int,
+    items_start: int,
+    total_len: int,
+    model_type: int = 1,
+    block_q: int = BLOCK,
+    block_k: int = BLOCK,
+) -> jax.Array:
+    """Pointwise-normalised multi-head attention.
+
+    Args:
+      q: [H, Sq, dh] query rows (the tokens being computed this call).
+      k: [H, Sk, dh] keys spanning [cached prefix ‖ new tokens].
+      v: [H, Sk, dh] values, same span as ``k``.
+      q_offset: global sequence index of q row 0 (0 for full/prefix
+        inference, ``prefix_len`` for ranking-on-cache).
+      items_start: global index of the first candidate-item token.
+      total_len: S_l + S~l + |I|; the 1/n normaliser uses this so that the
+        full and cached computations are bit-comparable.
+      model_type: 1/3 = SiLU (HSTU), 2 = sigmoid (revised attention).
+
+    Returns [H, Sq, dh].
+    """
+    heads, sq, dh = q.shape
+    _, sk, _ = k.shape
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"Sq={sq}/Sk={sk} must be multiples of {block_q}/{block_k}")
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=1.0 / float(dh) ** 0.5,
+        inv_n=1.0 / float(total_len),
+        bq=block_q,
+        bk=block_k,
+        q_offset=q_offset,
+        items_start=items_start,
+        model_type=model_type,
+    )
+    grid = (heads, sq // block_q, sk // block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, sq, dh), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)

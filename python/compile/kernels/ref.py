@@ -1,0 +1,42 @@
+"""Pure-jnp correctness oracle for the HSTU attention kernel.
+
+Dense O(S²) reference with an explicitly materialised mask — slow but
+obviously correct.  Every pytest kernel case asserts the Pallas kernel
+against this.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_matrix(sq: int, sk: int, q_offset: int, items_start: int) -> jax.Array:
+    """[Sq, Sk] boolean relay-race mask (see hstu_attention.py docstring)."""
+    rows = q_offset + jnp.arange(sq)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    causal = cols <= rows
+    item_row = rows >= items_start
+    item_ok = (cols < items_start) | (cols == rows)
+    return jnp.where(item_row, item_ok, causal)
+
+
+def hstu_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_offset: int,
+    items_start: int,
+    total_len: int,
+    model_type: int = 1,
+) -> jax.Array:
+    """Reference pointwise attention. Shapes as in hstu_attention()."""
+    _, sq, dh = q.shape
+    _, sk, _ = k.shape
+    s = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    if model_type == 2:
+        a = jax.nn.sigmoid(s)
+    else:
+        a = jax.nn.silu(s)
+    m = mask_matrix(sq, sk, q_offset, items_start)
+    a = jnp.where(m[None, :, :], a, 0.0) / jnp.float32(total_len)
+    return jnp.einsum("hqk,hkd->hqd", a.astype(v.dtype), v)

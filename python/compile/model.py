@@ -1,0 +1,226 @@
+"""L2: the GR ranking model f — an HSTU-style generative backbone plus a
+task tower — with three entry points mirroring the paper's formalisation
+
+    ψ ← f([U, S_l, ∅, ∅], ∅)                     (prefix_forward)
+    scores = f([∅, ∅, S~l, I], ψ)                 (rank_forward)
+    scores = f([U, S_l, S~l, I], ∅)               (full_forward)
+
+with the ε-bound  |full − rank∘prefix| ≤ ε  checked by pytest and by the
+rust integration tests.
+
+The backbone stacks HSTU blocks::
+
+    x̂   = rms_norm(x)
+    q,k,v,u = x̂ W_q, x̂ W_k, x̂ W_v, x̂ W_u          (per-head split)
+    a   = hstu_attention(q, k_cat, v_cat)           (L1 Pallas kernel)
+    y   = rms_norm(a) ⊙ silu(u)
+    x   = x + y W_o
+
+ψ is the per-layer (K, V) of the behaviour prefix: [L, 2, H, S_l, dh].
+Cache correctness rests on K/V being functions of the *prefix tokens
+only* (candidates never write into behaviour rows — enforced by the
+relay-race mask), so the cached and recomputed values are identical.
+
+Weights are generated from a fixed seed at trace time and baked into the
+HLO as constants: the rust request path then needs no weight plumbing,
+matching the "artifact = self-contained model variant" contract.
+
+Model types:
+  1 — HSTU (SiLU pointwise attention), MLP task tower.
+  2 — HSTU-rev: identical except sigmoid attention ("differs only in its
+      attention computation", §4.4).
+  3 — LONGER-style cached backbone + a RankMixer-style DLRM tower (deeper
+      MLP with a feature-mixing layer); only the backbone is cached,
+      matching "for Type 3 we cache only the Longer component".
+"""
+
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.hstu_attention import hstu_attention
+
+
+class LayerParams(NamedTuple):
+    wq: jax.Array  # [D, D]
+    wk: jax.Array
+    wv: jax.Array
+    wu: jax.Array
+    wo: jax.Array
+
+
+class TowerParams(NamedTuple):
+    ws: Tuple[jax.Array, ...]  # MLP weights; last maps to scalar
+    w_mix: Optional[jax.Array]  # Type-3 feature-mixing matrix or None
+
+
+class Params(NamedTuple):
+    layers: Tuple[LayerParams, ...]
+    tower: TowerParams
+
+
+def init_params(cfg: ModelConfig) -> Params:
+    """Deterministic weight init (fixed seed ⇒ reproducible artifacts)."""
+    key = jax.random.PRNGKey(cfg.seed + 1000 * cfg.model_type)
+    d = cfg.dim
+    scale = 1.0 / d**0.5
+    layers: List[LayerParams] = []
+    for _ in range(cfg.layers):
+        key, *ks = jax.random.split(key, 6)
+        layers.append(
+            LayerParams(*(jax.random.normal(k, (d, d), jnp.float32) * scale for k in ks))
+        )
+    if cfg.model_type == 3:
+        # RankMixer-style: deeper tower + token/feature mixing.
+        widths = [d, 4 * d, 4 * d, 1]
+        key, km = jax.random.split(key)
+        w_mix = jax.random.normal(km, (d, d), jnp.float32) * scale
+    else:
+        widths = [d, 2 * d, 1]
+        w_mix = None
+    ws = []
+    for a, b in zip(widths[:-1], widths[1:]):
+        key, k = jax.random.split(key)
+        ws.append(jax.random.normal(k, (a, b), jnp.float32) * (1.0 / a**0.5))
+    return Params(tuple(layers), TowerParams(tuple(ws), w_mix))
+
+
+def rms_norm(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+
+
+def _split_heads(x: jax.Array, heads: int) -> jax.Array:
+    s, d = x.shape
+    return x.reshape(s, heads, d // heads).transpose(1, 0, 2)  # [H, S, dh]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    h, s, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * dh)
+
+
+def backbone(
+    tokens: jax.Array,
+    params: Params,
+    cfg: ModelConfig,
+    kv_in: Optional[jax.Array],
+    q_offset: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Run the HSTU stack over ``tokens`` (the *new* rows).
+
+    Args:
+      tokens: [S_new, D] pre-embedded input rows.
+      kv_in: optional cached ψ [L, 2, H, S_prev, dh]; K/V are concatenated
+        in front of this call's K/V so new rows attend over the full span.
+      q_offset: global index of tokens[0] (= S_prev).
+
+    Returns (hidden [S_new, D], kv_out [L, 2, H, S_new, dh]).
+    """
+    h = tokens
+    kv_out = []
+    for li, p in enumerate(params.layers):
+        xn = rms_norm(h)
+        q = _split_heads(xn @ p.wq, cfg.heads)
+        k = _split_heads(xn @ p.wk, cfg.heads)
+        v = _split_heads(xn @ p.wv, cfg.heads)
+        u = xn @ p.wu
+        kv_out.append(jnp.stack([k, v]))
+        if kv_in is not None:
+            k = jnp.concatenate([kv_in[li, 0], k], axis=1)
+            v = jnp.concatenate([kv_in[li, 1], v], axis=1)
+        a = hstu_attention(
+            q,
+            k,
+            v,
+            q_offset=q_offset,
+            items_start=cfg.items_start,
+            total_len=cfg.total_len,
+            model_type=cfg.model_type,
+        )
+        y = rms_norm(_merge_heads(a)) * jax.nn.silu(u)
+        h = h + y @ p.wo
+    return h, jnp.stack(kv_out)
+
+
+def tower(h_items: jax.Array, params: Params, cfg: ModelConfig) -> jax.Array:
+    """Task tower: per-candidate hidden → score logit [N_items]."""
+    x = h_items
+    if cfg.model_type == 3 and params.tower.w_mix is not None:
+        # RankMixer-style feature mixing across the embedding dimension.
+        x = x + jax.nn.silu(x @ params.tower.w_mix)
+    for i, w in enumerate(params.tower.ws):
+        x = x @ w
+        if i + 1 < len(params.tower.ws):
+            x = jax.nn.silu(x)
+    return x[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Entry points (one HLO artifact each).
+# ---------------------------------------------------------------------------
+
+def prefix_forward(cfg: ModelConfig, params: Params, prefix_tokens: jax.Array):
+    """Pre-inference: behaviour prefix [S_l, D] → ψ [L, 2, H, S_l, dh]."""
+    _, kv = backbone(prefix_tokens, params, cfg, kv_in=None, q_offset=0)
+    return (kv,)
+
+
+def rank_forward(
+    cfg: ModelConfig,
+    params: Params,
+    kv: jax.Array,
+    incr_tokens: jax.Array,
+    item_tokens: jax.Array,
+):
+    """Ranking-on-cache: ψ + incremental + candidates → scores [N]."""
+    new_tokens = jnp.concatenate([incr_tokens, item_tokens], axis=0)
+    h, _ = backbone(new_tokens, params, cfg, kv_in=kv, q_offset=cfg.prefix_len)
+    h_items = h[cfg.incr_len :]
+    return (tower(h_items, params, cfg),)
+
+
+def full_forward(
+    cfg: ModelConfig,
+    params: Params,
+    prefix_tokens: jax.Array,
+    incr_tokens: jax.Array,
+    item_tokens: jax.Array,
+):
+    """Baseline: full inline inference → scores [N]."""
+    tokens = jnp.concatenate([prefix_tokens, incr_tokens, item_tokens], axis=0)
+    h, _ = backbone(tokens, params, cfg, kv_in=None, q_offset=0)
+    h_items = h[cfg.items_start :]
+    return (tower(h_items, params, cfg),)
+
+
+def input_specs(cfg: ModelConfig, fn: str):
+    """ShapeDtypeStructs for jit.lower, in artifact parameter order."""
+    f32 = jnp.float32
+    d, dh = cfg.dim, cfg.head_dim
+    specs = {
+        "prefix": [jax.ShapeDtypeStruct((cfg.prefix_len, d), f32)],
+        "rank": [
+            jax.ShapeDtypeStruct((cfg.layers, 2, cfg.heads, cfg.prefix_len, dh), f32),
+            jax.ShapeDtypeStruct((cfg.incr_len, d), f32),
+            jax.ShapeDtypeStruct((cfg.num_items, d), f32),
+        ],
+        "full": [
+            jax.ShapeDtypeStruct((cfg.prefix_len, d), f32),
+            jax.ShapeDtypeStruct((cfg.incr_len, d), f32),
+            jax.ShapeDtypeStruct((cfg.num_items, d), f32),
+        ],
+    }
+    return specs[fn]
+
+
+def entry(cfg: ModelConfig, fn: str):
+    """Bind cfg+params into a positional function ready for jit.lower."""
+    params = init_params(cfg)
+    fns = {
+        "prefix": lambda *xs: prefix_forward(cfg, params, *xs),
+        "rank": lambda *xs: rank_forward(cfg, params, *xs),
+        "full": lambda *xs: full_forward(cfg, params, *xs),
+    }
+    return fns[fn]

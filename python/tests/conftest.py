@@ -1,0 +1,9 @@
+"""Make the `compile` package importable whether pytest runs from the
+repo root (`pytest python/tests/`) or from `python/` (`pytest tests/`)."""
+
+import sys
+from pathlib import Path
+
+PKG_ROOT = Path(__file__).resolve().parent.parent  # .../python
+if str(PKG_ROOT) not in sys.path:
+    sys.path.insert(0, str(PKG_ROOT))

@@ -1,0 +1,148 @@
+"""L1 correctness: the Pallas HSTU attention kernel vs the pure-jnp
+oracle, including hypothesis sweeps over shapes/offsets/dtypes — the CORE
+correctness signal for the compute layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import BLOCK
+from compile.kernels.hstu_attention import hstu_attention
+from compile.kernels.ref import hstu_attention_ref, mask_matrix
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype) * scale
+
+
+def run_both(h, sq, sk, dh, q_offset, items_start, total_len, model_type=1, dtype=jnp.float32):
+    q = rand(1, (h, sq, dh), dtype)
+    k = rand(2, (h, sk, dh), dtype)
+    v = rand(3, (h, sk, dh), dtype)
+    kw = dict(
+        q_offset=q_offset, items_start=items_start, total_len=total_len, model_type=model_type
+    )
+    out = hstu_attention(q, k, v, **kw)
+    ref = hstu_attention_ref(q, k, v, **kw)
+    return np.asarray(out), np.asarray(ref)
+
+
+class TestKernelVsRef:
+    def test_full_sequence_causal_plus_items(self):
+        # Full inference layout: [prefix | incr | items].
+        out, ref = run_both(2, 256, 256, 32, q_offset=0, items_start=192, total_len=256)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_cached_incremental_rows(self):
+        # Rank-on-cache: q rows start at the prefix boundary.
+        out, ref = run_both(2, 192, 448, 32, q_offset=256, items_start=320, total_len=448)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_prefix_only_pure_causal(self):
+        # Pre-inference: no items in range (items_start beyond the span).
+        out, ref = run_both(4, 128, 128, 16, q_offset=0, items_start=10_000, total_len=128)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_sigmoid_attention_type2(self):
+        out, ref = run_both(2, 128, 128, 32, 0, 64, 128, model_type=2)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_single_head_and_tiny_head_dim(self):
+        out, ref = run_both(1, 64, 64, 8, 0, 64, 64)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_bf16_inputs_tolerant(self):
+        out, ref = run_both(2, 128, 128, 32, 0, 64, 128, dtype=jnp.bfloat16)
+        np.testing.assert_allclose(
+            out.astype(np.float32), ref.astype(np.float32), rtol=3e-2, atol=3e-2
+        )
+
+    def test_rejects_non_block_multiple(self):
+        q = rand(1, (1, BLOCK + 1, 16))
+        with pytest.raises(ValueError, match="multiples"):
+            hstu_attention(q, q, q, q_offset=0, items_start=0, total_len=65)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=st.integers(1, 3),
+        sq_blocks=st.integers(1, 4),
+        extra_k_blocks=st.integers(0, 4),
+        dh=st.sampled_from([8, 16, 32]),
+        model_type=st.sampled_from([1, 2, 3]),
+        data=st.data(),
+    )
+    def test_prop_matches_ref(self, h, sq_blocks, extra_k_blocks, dh, model_type, data):
+        """Hypothesis sweep: arbitrary block-multiple shapes, offsets and
+        item boundaries must all match the dense oracle."""
+        sq = sq_blocks * BLOCK
+        sk = sq + extra_k_blocks * BLOCK
+        q_offset = sk - sq  # cached layout: q rows end at the kv span end
+        total_len = sk
+        items_start = data.draw(st.integers(0, total_len), label="items_start")
+        out, ref = run_both(h, sq, sk, dh, q_offset, items_start, total_len, model_type)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+class TestMaskSemantics:
+    def test_behaviour_rows_are_causal(self):
+        m = np.asarray(mask_matrix(8, 8, q_offset=0, items_start=6))
+        for r in range(6):
+            for c in range(8):
+                assert m[r, c] == (c <= r)
+
+    def test_item_rows_skip_other_items(self):
+        m = np.asarray(mask_matrix(8, 8, q_offset=0, items_start=4))
+        for r in range(4, 8):
+            for c in range(8):
+                expected = c < 4 or c == r
+                assert m[r, c] == expected, (r, c)
+
+    def test_items_scored_independently(self):
+        """Changing one candidate must not change any other candidate's
+        output — the property that makes ψ reusable across item sets."""
+        h, s, dh = 2, 128, 16
+        items_start = 64
+        q = np.asarray(rand(1, (h, s, dh)))
+        k = np.asarray(rand(2, (h, s, dh)))
+        v = np.asarray(rand(3, (h, s, dh)))
+        out1 = np.asarray(
+            hstu_attention(jnp.array(q), jnp.array(k), jnp.array(v),
+                           q_offset=0, items_start=items_start, total_len=s)
+        )
+        # Perturb the last item's K/V/Q.
+        q2, k2, v2 = q.copy(), k.copy(), v.copy()
+        q2[:, -1], k2[:, -1], v2[:, -1] = 9.0, 9.0, 9.0
+        out2 = np.asarray(
+            hstu_attention(jnp.array(q2), jnp.array(k2), jnp.array(v2),
+                           q_offset=0, items_start=items_start, total_len=s)
+        )
+        # All other item rows unchanged.
+        np.testing.assert_allclose(out1[:, items_start:-1], out2[:, items_start:-1], rtol=1e-6)
+        # Behaviour rows unchanged too (items never write into behaviours).
+        np.testing.assert_allclose(out1[:, :items_start], out2[:, :items_start], rtol=1e-6)
+
+
+class TestNumerics:
+    def test_normalizer_uses_total_len(self):
+        out_a, _ = run_both(1, 64, 64, 8, 0, 64, total_len=64)
+        out_b, _ = run_both(1, 64, 64, 8, 0, 64, total_len=128)
+        np.testing.assert_allclose(out_a, out_b * 2.0, rtol=1e-5)
+
+    def test_zero_inputs_zero_output(self):
+        z = jnp.zeros((2, 64, 16), jnp.float32)
+        out = hstu_attention(z, z, z, q_offset=0, items_start=64, total_len=64)
+        # silu(0) = 0 ⇒ zero attention everywhere.
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_block_shape_invariance(self):
+        """The same computation tiled with different block sizes must agree
+        (accumulation order differs only in fp-rounding)."""
+        q = rand(1, (2, 256, 16))
+        k = rand(2, (2, 256, 16))
+        v = rand(3, (2, 256, 16))
+        kw = dict(q_offset=0, items_start=192, total_len=256)
+        a = hstu_attention(q, k, v, block_q=64, block_k=64, **kw)
+        b = hstu_attention(q, k, v, block_q=128, block_k=32, **kw)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)

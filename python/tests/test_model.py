@@ -1,0 +1,118 @@
+"""L2 correctness: the paper's ε-bound (cached vs full inference), cache
+semantics, shapes and determinism across all three model types."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import ModelConfig, tiny
+
+
+def make_inputs(cfg, seed=0, scale=0.5):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        jax.random.normal(ks[0], (cfg.prefix_len, cfg.dim), jnp.float32) * scale,
+        jax.random.normal(ks[1], (cfg.incr_len, cfg.dim), jnp.float32) * scale,
+        jax.random.normal(ks[2], (cfg.num_items, cfg.dim), jnp.float32) * scale,
+    )
+
+
+@pytest.mark.parametrize("model_type", [1, 2, 3])
+def test_epsilon_bound_all_types(model_type):
+    """|f(full) − f(cached ψ)| ≤ ε — the paper's §2.3 contract."""
+    cfg = ModelConfig(model_type, 2, 32, 2, 128, 64, 64)
+    params = model.init_params(cfg)
+    prefix, incr, items = make_inputs(cfg)
+    (full,) = model.full_forward(cfg, params, prefix, incr, items)
+    (kv,) = model.prefix_forward(cfg, params, prefix)
+    (cached,) = model.rank_forward(cfg, params, kv, incr, items)
+    eps = float(np.max(np.abs(np.asarray(full) - np.asarray(cached))))
+    assert eps <= 1e-4, f"type {model_type}: ε = {eps}"
+
+
+def test_kv_shape_matches_table1_arithmetic():
+    cfg = tiny()
+    params = model.init_params(cfg)
+    prefix, _, _ = make_inputs(cfg)
+    (kv,) = model.prefix_forward(cfg, params, prefix)
+    assert kv.shape == (cfg.layers, 2, cfg.heads, cfg.prefix_len, cfg.head_dim)
+    assert kv.size * 4 == cfg.kv_bytes
+
+
+def test_scores_shape_and_finite():
+    cfg = tiny()
+    params = model.init_params(cfg)
+    prefix, incr, items = make_inputs(cfg)
+    (scores,) = model.full_forward(cfg, params, prefix, incr, items)
+    assert scores.shape == (cfg.num_items,)
+    assert np.isfinite(np.asarray(scores)).all()
+    assert float(np.abs(np.asarray(scores)).max()) > 0.0
+
+
+def test_cache_is_item_independent():
+    """ψ must not depend on the candidate set: rank two different item
+    sets against one ψ and check each matches its own full inference."""
+    cfg = tiny()
+    params = model.init_params(cfg)
+    prefix, incr, items_a = make_inputs(cfg, seed=0)
+    _, _, items_b = make_inputs(cfg, seed=9)
+    (kv,) = model.prefix_forward(cfg, params, prefix)
+    for items in (items_a, items_b):
+        (full,) = model.full_forward(cfg, params, prefix, incr, items)
+        (cached,) = model.rank_forward(cfg, params, kv, incr, items)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(cached), atol=1e-4)
+
+
+def test_scores_differ_across_item_sets():
+    cfg = tiny()
+    params = model.init_params(cfg)
+    prefix, incr, items_a = make_inputs(cfg, seed=0)
+    _, _, items_b = make_inputs(cfg, seed=9)
+    (kv,) = model.prefix_forward(cfg, params, prefix)
+    (a,) = model.rank_forward(cfg, params, kv, incr, items_a)
+    (b,) = model.rank_forward(cfg, params, kv, incr, items_b)
+    assert float(np.max(np.abs(np.asarray(a) - np.asarray(b)))) > 1e-3
+
+
+def test_params_deterministic_per_config():
+    cfg = tiny()
+    a = model.init_params(cfg)
+    b = model.init_params(cfg)
+    np.testing.assert_array_equal(np.asarray(a.layers[0].wq), np.asarray(b.layers[0].wq))
+    # Different model types get different weights.
+    cfg2 = ModelConfig(2, cfg.layers, cfg.dim, cfg.heads, cfg.prefix_len, cfg.incr_len, cfg.num_items)
+    c = model.init_params(cfg2)
+    assert float(np.max(np.abs(np.asarray(a.layers[0].wq) - np.asarray(c.layers[0].wq)))) > 0
+
+
+def test_type3_has_mixing_tower():
+    cfg = ModelConfig(3, 2, 32, 2, 128, 64, 64)
+    params = model.init_params(cfg)
+    assert params.tower.w_mix is not None
+    assert len(params.tower.ws) == 3  # deeper RankMixer-style MLP
+    cfg1 = tiny()
+    assert model.init_params(cfg1).tower.w_mix is None
+
+
+def test_long_prefix_influences_scores():
+    """The long-term prefix must actually matter for ranking (otherwise
+    caching it would be pointless)."""
+    cfg = tiny()
+    params = model.init_params(cfg)
+    prefix_a, incr, items = make_inputs(cfg, seed=0)
+    prefix_b = prefix_a.at[: cfg.prefix_len // 2].set(-prefix_a[: cfg.prefix_len // 2])
+    (sa,) = model.full_forward(cfg, params, prefix_a, incr, items)
+    (sb,) = model.full_forward(cfg, params, prefix_b, incr, items)
+    assert float(np.max(np.abs(np.asarray(sa) - np.asarray(sb)))) > 1e-3
+
+
+def test_input_specs_match_entry_arity():
+    cfg = tiny()
+    for fn in ("prefix", "rank", "full"):
+        specs = model.input_specs(cfg, fn)
+        entry = model.entry(cfg, fn)
+        args = [jnp.zeros(s.shape, s.dtype) for s in specs]
+        (out,) = entry(*args)
+        assert out.shape is not None

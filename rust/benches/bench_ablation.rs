@@ -1,0 +1,130 @@
+//! Ablation benches for the design choices DESIGN.md calls out: the
+//! trigger's admission knobs (M, r2, headroom), the router's virtual-node
+//! count, and the expander's reload-concurrency cap.  Each prints a
+//! table of the end-to-end effect through the simulator.
+
+#[path = "harness.rs"]
+mod harness;
+
+use relaygr::cluster::{run_sim, SimConfig};
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::expander::DramPolicy;
+use relaygr::relay::router::{HashRing, Router, RouterConfig};
+use relaygr::workload::WorkloadConfig;
+
+fn wl(qps: f64) -> WorkloadConfig {
+    WorkloadConfig {
+        qps,
+        duration_us: 8_000_000,
+        num_users: 30_000,
+        fixed_long_len: Some(3072),
+        max_prefix: 3072,
+        refresh_prob: 0.5,
+        seed: 21,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    println!("=== ablation: model slots M (trigger Eq. 3 compute bound) ===");
+    println!("{:>3} {:>10} {:>10} {:>10} {:>9}", "M", "p99_ms", "success", "hbm_hits", "admitted");
+    for m_slots in [1usize, 2, 5, 10] {
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.m_slots = m_slots;
+        let m = run_sim(cfg, &wl(300.0)).unwrap();
+        println!(
+            "{:>3} {:>10.1} {:>10.4} {:>10} {:>9}",
+            m_slots,
+            m.p99_e2e() / 1e3,
+            m.success_rate(),
+            m.outcome_counts[1],
+            m.trigger.admitted
+        );
+    }
+
+    println!("\n=== ablation: special-instance fraction r2 (placement density) ===");
+    println!("{:>5} {:>9} {:>10} {:>10} {:>13}", "r2", "specials", "p99_ms", "success", "special_util");
+    for r2 in [0.05, 0.1, 0.2, 0.4] {
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.router.r2 = r2;
+        let m = run_sim(cfg, &wl(300.0)).unwrap();
+        println!(
+            "{:>5} {:>9} {:>10.1} {:>10.4} {:>12.1}%",
+            r2,
+            m.special_instances.len(),
+            m.p99_e2e() / 1e3,
+            m.success_rate(),
+            m.special_util() * 100.0
+        );
+    }
+
+    println!("\n=== ablation: trigger headroom (risk-test threshold) ===");
+    println!("{:>9} {:>9} {:>12} {:>10}", "headroom", "admitted", "not_at_risk", "success");
+    for headroom in [0.4, 0.8, 1.2] {
+        // Headroom scales which lengths count as at-risk via the budget.
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.pipeline.rank_budget_us = 50_000.0 * headroom / 0.8;
+        let m = run_sim(cfg, &wl(200.0)).unwrap();
+        println!(
+            "{:>9} {:>9} {:>12} {:>10.4}",
+            headroom,
+            m.trigger.admitted,
+            m.trigger.not_at_risk,
+            m.success_rate()
+        );
+    }
+
+    println!("\n=== ablation: expander reload concurrency cap ===");
+    println!("{:>4} {:>9} {:>9} {:>9} {:>10}", "cap", "reloads", "queued", "joined", "load_p99");
+    for cap in [1usize, 2, 4, 8] {
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) });
+        cfg.max_reload_concurrency = cap;
+        let mut w = wl(300.0);
+        w.refresh_prob = 0.9;
+        let m = run_sim(cfg, &w).unwrap();
+        println!(
+            "{:>4} {:>9} {:>9} {:>9} {:>10.2}",
+            cap,
+            m.expander.reloads_started,
+            m.expander.reloads_queued,
+            m.expander.reloads_joined,
+            m.load.p99() / 1e3
+        );
+    }
+
+    println!("\n=== ablation: consistent-hash virtual nodes (balance vs ring size) ===");
+    println!("{:>7} {:>12} {:>12}", "vnodes", "max/mean", "moved_on_churn");
+    for vnodes in [4usize, 16, 64, 256] {
+        let ring = HashRing::new(&(0..10).collect::<Vec<_>>(), vnodes);
+        let mut counts = vec![0u64; 10];
+        for key in 0..100_000u64 {
+            counts[ring.route(key).unwrap()] += 1;
+        }
+        let mean = 100_000.0 / 10.0;
+        let max = *counts.iter().max().unwrap() as f64;
+        // Churn: remove node 0, count remapped keys.
+        let mut router = Router::new(RouterConfig {
+            vnodes,
+            ..RouterConfig::default()
+        })
+        .unwrap();
+        let before: Vec<usize> =
+            (0..20_000u64).map(|u| { let r = router.route_special(u); router.on_complete(r.instance); r.instance }).collect();
+        let victim = router.special_instances()[0];
+        router.remove_special(victim);
+        let moved = (0..20_000u64)
+            .filter(|&u| {
+                let r = router.route_special(u);
+                router.on_complete(r.instance);
+                r.instance != before[u as usize]
+            })
+            .count();
+        println!(
+            "{:>7} {:>12.3} {:>11.1}%",
+            vnodes,
+            max / mean,
+            moved as f64 / 200.0
+        );
+    }
+    println!("\nablation OK");
+}

@@ -1,0 +1,33 @@
+//! End-to-end figure benches: one timed entry per paper table/figure.
+//!
+//! Each bench runs the corresponding figure experiment (shortened sweep)
+//! and reports wall-clock cost, so `cargo bench` both regenerates every
+//! figure's machinery and tracks the harness's own performance.  Full
+//! paper-quality sweeps: `relaygr figure all`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_results};
+use relaygr::figures;
+use relaygr::util::cli::Args;
+
+fn quick_args() -> Args {
+    Args::parse(
+        ["bench", "figure", "--quick", "--results", "results/bench-figures"]
+            .iter()
+            .map(|s| s.to_string()),
+    )
+    .unwrap()
+}
+
+fn main() {
+    let args = quick_args();
+    let mut results = Vec::new();
+    for id in figures::ALL {
+        results.push(bench(&format!("figure/{id}"), 0, 1, || {
+            figures::run_one(id, &args).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        }));
+    }
+    write_results("figures", &results);
+}

@@ -1,0 +1,153 @@
+//! L3 hot-path microbenchmarks: the per-request coordinator operations
+//! (routing, admission, cache lookups, expander bookkeeping, histogram
+//! recording) plus live PJRT execution benches when artifacts exist.
+//!
+//! The coordinator budget is microseconds — it must never show up next
+//! to the tens-of-milliseconds ranking budget.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_results};
+use relaygr::relay::expander::{DramPolicy, Expander};
+use relaygr::relay::hbm::HbmCache;
+use relaygr::relay::router::{Router, RouterConfig};
+use relaygr::relay::trigger::{BehaviorMeta, Trigger, TriggerConfig};
+use relaygr::util::rng::Rng;
+use relaygr::util::stats::Histogram;
+
+fn main() {
+    let mut results = Vec::new();
+    let mut rng = Rng::new(7);
+
+    // --- router ------------------------------------------------------------
+    let mut router = Router::new(RouterConfig::default()).unwrap();
+    let users: Vec<u64> = (0..4096).map(|_| rng.next_u64() % 100_000).collect();
+    let mut i = 0;
+    results.push(bench("router/route_special+complete", 100, 20_000, || {
+        let u = users[i & 4095];
+        i += 1;
+        let r = router.route_special(u);
+        router.on_complete(r.instance);
+    }));
+    let mut i = 0;
+    results.push(bench("router/route_normal_least_conn", 100, 20_000, || {
+        let u = users[i & 4095];
+        i += 1;
+        let r = router.route_normal(u);
+        router.on_complete(r.instance);
+    }));
+
+    // --- trigger -----------------------------------------------------------
+    let mut trigger = Trigger::new(
+        TriggerConfig::paper_example(),
+        Box::new(|m: &BehaviorMeta| m.prefix_len as f64 * 20.0),
+    );
+    let mut now = 0u64;
+    let mut i = 0;
+    results.push(bench("trigger/decide+release", 100, 20_000, || {
+        now += 500;
+        let meta = BehaviorMeta { user: users[i & 4095], prefix_len: 4096, dim: 256 };
+        i += 1;
+        if trigger.decide(now, &meta) == relaygr::relay::trigger::Decision::Admit {
+            trigger.release();
+        }
+    }));
+
+    // --- HBM cache ---------------------------------------------------------
+    let mut hbm: HbmCache<u32> = HbmCache::new(16 << 30);
+    let mut now = 0u64;
+    let mut u = 0u64;
+    results.push(bench("hbm/produce+consume+evict", 100, 20_000, || {
+        now += 100;
+        u += 1;
+        let user = u % 512;
+        let _ = hbm.begin_produce(user, 32 << 20, now, 300_000);
+        hbm.complete_produce(user, 1);
+        hbm.consume(user);
+        hbm.evict(user);
+    }));
+
+    // --- expander ----------------------------------------------------------
+    let mut ex: Expander<u32> = Expander::new(DramPolicy::Capacity(64 << 30), 4);
+    let mut hbm2: HbmCache<u32> = HbmCache::new(16 << 30);
+    for user in 0..512u64 {
+        ex.spill(user, 32 << 20, user as u32);
+    }
+    let mut u = 0u64;
+    results.push(bench("expander/pseudo+reload_cycle", 100, 20_000, || {
+        u += 1;
+        let user = u % 512;
+        match ex.pseudo_pre_infer(user, &mut hbm2, u) {
+            relaygr::relay::expander::PseudoAction::StartReload { bytes } => {
+                let done = ex.complete_reload(user, 0, bytes, u, 1 << 40, &mut hbm2);
+                let _ = done;
+                hbm2.consume(user);
+                hbm2.evict(user);
+            }
+            _ => {
+                hbm2.consume(user);
+                hbm2.evict(user);
+            }
+        }
+    }));
+
+    // --- metrics -----------------------------------------------------------
+    let mut h = Histogram::new();
+    let mut x = 1.0f64;
+    results.push(bench("stats/histogram_record+p99", 100, 50_000, || {
+        x = (x * 1.37) % 1e6 + 1.0;
+        h.record(x);
+        if (x as u64) % 64 == 0 {
+            std::hint::black_box(h.p99());
+        }
+    }));
+
+    // --- end-to-end simulated second ----------------------------------------
+    results.push(bench("sim/one_simulated_second_300qps", 1, 20, || {
+        let cfg = relaygr::cluster::SimConfig::standard(relaygr::relay::baseline::Mode::RelayGr {
+            dram: DramPolicy::Capacity(500 << 30),
+        });
+        let wl = relaygr::workload::WorkloadConfig {
+            qps: 300.0,
+            duration_us: 1_000_000,
+            num_users: 10_000,
+            ..Default::default()
+        };
+        std::hint::black_box(relaygr::cluster::run_sim(cfg, &wl).unwrap());
+    }));
+
+    // --- live PJRT execution (when artifacts are present) -------------------
+    if let Ok(engine) = relaygr::runtime::Engine::load("artifacts") {
+        if let Some(spec) = engine.manifest.default_variant() {
+            use relaygr::runtime::{synth_embedding, FnKind};
+            let prefix_m = engine.model(FnKind::Prefix, &spec).unwrap();
+            let rank_m = engine.model(FnKind::Rank, &spec).unwrap();
+            let full_m = engine.model(FnKind::Full, &spec).unwrap();
+            let prefix = synth_embedding(1, spec.prefix_len, spec.dim, 0.5);
+            let incr = synth_embedding(2, spec.incr_len, spec.dim, 0.5);
+            let items = synth_embedding(3, spec.num_items, spec.dim, 0.5);
+            let kv = prefix_m.execute_to_device(&[&prefix]).unwrap();
+            results.push(bench(&format!("pjrt/prefix[{}]", spec.name()), 3, 30, || {
+                std::hint::black_box(prefix_m.execute_to_device(&[&prefix]).unwrap());
+            }));
+            results.push(bench(&format!("pjrt/rank_on_psi[{}]", spec.name()), 3, 30, || {
+                std::hint::black_box(rank_m.execute_with_kv(&kv, &[&incr, &items]).unwrap());
+            }));
+            results.push(bench(&format!("pjrt/full[{}]", spec.name()), 3, 30, || {
+                std::hint::black_box(full_m.execute_host(&[&prefix, &incr, &items]).unwrap());
+            }));
+            results.push(bench(&format!("pjrt/spill_d2h[{}]", spec.name()), 3, 30, || {
+                std::hint::black_box(kv.to_host().unwrap());
+            }));
+            let host = kv.to_host().unwrap();
+            results.push(bench(&format!("pjrt/reload_h2d[{}]", spec.name()), 3, 30, || {
+                std::hint::black_box(rank_m.kv_from_host(&host).unwrap());
+            }));
+        }
+    } else {
+        eprintln!("(skipping pjrt benches: no artifacts — run `make artifacts`)");
+    }
+
+    write_results("hotpath", &results);
+}

@@ -1,0 +1,72 @@
+#![allow(dead_code)]
+
+//! Minimal benchmark harness (the offline vendor set has no `criterion`):
+//! warm-up + timed iterations with mean / p50 / p99 reporting and JSON
+//! persistence under `results/bench/`.
+//!
+//! Shared by both bench binaries via `#[path]` include.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub min_us: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: mean,
+        p50_us: samples[n / 2],
+        p99_us: samples[(n as f64 * 0.99) as usize % n],
+        min_us: samples[0],
+    };
+    println!(
+        "{:<44} {:>8} iters  mean {:>12.2} µs  p50 {:>12.2} µs  p99 {:>12.2} µs",
+        r.name, r.iters, r.mean_us, r.p50_us, r.p99_us
+    );
+    r
+}
+
+/// Persist a suite of results as JSON.
+pub fn write_results(file: &str, results: &[BenchResult]) {
+    use relaygr::util::json::Json;
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut j = Json::obj();
+            j.set("name", r.name.as_str().into())
+                .set("iters", (r.iters as usize).into())
+                .set("mean_us", r.mean_us.into())
+                .set("p50_us", r.p50_us.into())
+                .set("p99_us", r.p99_us.into())
+                .set("min_us", r.min_us.into());
+            j
+        })
+        .collect();
+    let _ = std::fs::create_dir_all("results/bench");
+    let mut j = Json::obj();
+    j.set("suite", file.into()).set("results", Json::Arr(rows));
+    let path = format!("results/bench/{file}.json");
+    if std::fs::write(&path, j.to_string_pretty()).is_ok() {
+        println!("wrote {path}");
+    }
+}

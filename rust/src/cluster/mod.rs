@@ -1,0 +1,118 @@
+//! Discrete-event cluster simulator: the production-mirror substrate
+//! standing in for the paper's Ascend testbed (see DESIGN.md
+//! §Substitutions).  Queueing, affinity, admission and cache lifecycle
+//! run through the exact `relay::*` state machines; only raw execution
+//! durations come from the calibrated cost model.
+
+pub mod sim;
+
+pub use sim::{run_sim, Sim, SimConfig};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RunMetrics;
+    use crate::relay::baseline::Mode;
+    use crate::relay::expander::DramPolicy;
+    use crate::workload::WorkloadConfig;
+
+    fn small_workload(qps: f64) -> WorkloadConfig {
+        WorkloadConfig {
+            qps,
+            duration_us: 10_000_000,
+            num_users: 20_000,
+            ..Default::default()
+        }
+    }
+
+    fn run(mode: Mode, qps: f64) -> RunMetrics {
+        run_sim(SimConfig::standard(mode), &small_workload(qps)).unwrap()
+    }
+
+    #[test]
+    fn baseline_low_load_meets_slo() {
+        // At very low QPS with mostly-short sequences the production
+        // baseline is comfortably compliant.
+        let m = run(Mode::Baseline, 20.0);
+        assert!(m.completed > 150, "{}", m.brief());
+        assert!(m.success_rate() > 0.9, "{}", m.brief());
+        // All requests are full inference in baseline mode.
+        assert_eq!(m.outcome_counts[1] + m.outcome_counts[2] + m.outcome_counts[3], 0);
+    }
+
+    #[test]
+    fn relaygr_serves_long_requests_from_cache() {
+        let m = run(Mode::RelayGr { dram: DramPolicy::Disabled }, 50.0);
+        assert!(m.completed > 400, "{}", m.brief());
+        assert!(m.outcome_counts[1] > 0, "expected HBM hits: {}", m.brief());
+        assert!(m.trigger.admitted > 0);
+        // Long-sequence tail should beat baseline's at the same load.
+        let b = run(Mode::Baseline, 50.0);
+        assert!(
+            m.e2e_long.p99() < b.e2e_long.p99(),
+            "relay p99 {} !< baseline p99 {}",
+            m.e2e_long.p99(),
+            b.e2e_long.p99()
+        );
+    }
+
+    #[test]
+    fn dram_tier_produces_dram_hits_on_refresh() {
+        let wl = WorkloadConfig {
+            qps: 50.0,
+            duration_us: 10_000_000,
+            num_users: 20_000,
+            refresh_prob: 0.8,
+            ..Default::default()
+        };
+        let cfg =
+            SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(512 << 30) });
+        let m = run_sim(cfg, &wl).unwrap();
+        assert!(
+            m.outcome_counts[2] + m.outcome_counts[3] > 0,
+            "expected DRAM hits: {}",
+            m.brief()
+        );
+        assert!(m.expander.spills > 0);
+        assert!(m.dram_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(Mode::RelayGr { dram: DramPolicy::Disabled }, 40.0);
+        let b = run(Mode::RelayGr { dram: DramPolicy::Disabled }, 40.0);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.outcome_counts, b.outcome_counts);
+        assert_eq!(a.p99_e2e(), b.p99_e2e());
+    }
+
+    #[test]
+    fn overload_violates_slo() {
+        // Far beyond capacity the baseline must blow through the SLO.
+        let m = run(Mode::Baseline, 2_000.0);
+        assert!(!m.slo_compliant(0.999), "{}", m.brief());
+    }
+
+    #[test]
+    fn all_requests_complete_no_leaks() {
+        // Every generated request must produce exactly one lifecycle.
+        let wl = small_workload(80.0);
+        let trace_len = crate::workload::generate(&wl).len();
+        let m = run_sim(
+            SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(64 << 30) }),
+            &wl,
+        )
+        .unwrap();
+        assert_eq!(m.completed as usize, trace_len);
+    }
+
+    #[test]
+    fn utilization_bounded_and_nonzero() {
+        let m = run(Mode::RelayGr { dram: DramPolicy::Disabled }, 100.0);
+        assert!(!m.util.is_empty());
+        for &u in &m.util {
+            assert!((0.0..=1.0).contains(&u), "util {u}");
+        }
+        assert!(m.mean_util(None) > 0.0);
+    }
+}

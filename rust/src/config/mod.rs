@@ -1,0 +1,214 @@
+//! Configuration system: typed run configs assembled from defaults, an
+//! optional JSON config file (`--config path.json`) and CLI overrides.
+//!
+//! The precedence is CLI > file > defaults, the usual production layering.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cluster::SimConfig;
+use crate::model::{Dtype, HardwareProfile, ModelSpec, ModelType};
+use crate::relay::baseline::Mode;
+use crate::relay::expander::DramPolicy;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::WorkloadConfig;
+
+/// Parse a `Mode` string: `baseline`, `relaygr`, `relaygr+dram<N>g`.
+pub fn parse_mode(s: &str) -> Result<Mode> {
+    if s == "baseline" {
+        return Ok(Mode::Baseline);
+    }
+    if s == "relaygr" {
+        return Ok(Mode::RelayGr { dram: DramPolicy::Disabled });
+    }
+    if let Some(rest) = s.strip_prefix("relaygr+dram") {
+        let gb: usize = rest
+            .strip_suffix('g')
+            .ok_or_else(|| anyhow!("mode '{s}': expected relaygr+dram<N>g"))?
+            .parse()
+            .with_context(|| format!("mode '{s}'"))?;
+        return Ok(Mode::RelayGr { dram: DramPolicy::Capacity(gb << 30) });
+    }
+    bail!("unknown mode '{s}' (baseline | relaygr | relaygr+dram<N>g)")
+}
+
+/// Apply a JSON object onto a [`ModelSpec`].
+fn spec_from_json(mut spec: ModelSpec, j: &Json) -> Result<ModelSpec> {
+    if let Some(v) = j.get("model_type").and_then(Json::as_usize) {
+        spec.model_type = ModelType::from_index(v).ok_or_else(|| anyhow!("bad model_type"))?;
+    }
+    if let Some(v) = j.get("layers").and_then(Json::as_usize) {
+        spec.layers = v;
+    }
+    if let Some(v) = j.get("dim").and_then(Json::as_usize) {
+        spec.dim = v;
+    }
+    if let Some(v) = j.get("heads").and_then(Json::as_usize) {
+        spec.heads = v;
+    }
+    if let Some(v) = j.get("prefix_len").and_then(Json::as_usize) {
+        spec.prefix_len = v;
+    }
+    if let Some(v) = j.get("incr_len").and_then(Json::as_usize) {
+        spec.incr_len = v;
+    }
+    if let Some(v) = j.get("num_items").and_then(Json::as_usize) {
+        spec.num_items = v;
+    }
+    if let Some(v) = j.get("dtype").and_then(Json::as_str) {
+        spec.dtype = match v {
+            "float32" | "fp32" => Dtype::F32,
+            "float16" | "fp16" => Dtype::F16,
+            other => bail!("bad dtype '{other}'"),
+        };
+    }
+    Ok(spec)
+}
+
+/// Build a [`SimConfig`] from mode + optional file + CLI overrides.
+pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
+    let mut cfg = SimConfig::standard(mode);
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        if let Some(spec_j) = j.get("spec") {
+            cfg.spec = spec_from_json(cfg.spec, spec_j)?;
+        }
+        if let Some(v) = j.get("hw").and_then(Json::as_str) {
+            cfg.hw = HardwareProfile::by_name(v).ok_or_else(|| anyhow!("unknown hw '{v}'"))?;
+        }
+        if let Some(v) = j.get("n_instances").and_then(Json::as_usize) {
+            cfg.router.n_instances = v;
+        }
+        if let Some(v) = j.get("servers").and_then(Json::as_usize) {
+            cfg.router.servers = v;
+        }
+        if let Some(v) = j.get("r2").and_then(Json::as_f64) {
+            cfg.router.r2 = v;
+        }
+        if let Some(v) = j.get("m_slots").and_then(Json::as_usize) {
+            cfg.m_slots = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_usize) {
+            cfg.seed = v as u64;
+        }
+    }
+    // CLI overrides.
+    if let Some(hw) = args.get("hw") {
+        cfg.hw = HardwareProfile::by_name(hw).ok_or_else(|| anyhow!("unknown hw '{hw}'"))?;
+    }
+    cfg.router.n_instances = args.get_usize("instances", cfg.router.n_instances)?;
+    cfg.router.servers = args.get_usize("servers", cfg.router.servers)?;
+    cfg.router.r2 = args.get_f64("r2", cfg.router.r2)?;
+    cfg.m_slots = args.get_usize("slots", cfg.m_slots)?;
+    cfg.spec.layers = args.get_usize("layers", cfg.spec.layers)?;
+    cfg.spec.dim = args.get_usize("dim", cfg.spec.dim)?;
+    cfg.spec.num_items = args.get_usize("items", cfg.spec.num_items)?;
+    cfg.long_threshold = args.get_usize("long-threshold", cfg.long_threshold)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if cfg.spec.dim % cfg.spec.heads != 0 {
+        // Keep heads consistent when dim is overridden.
+        cfg.spec.heads = (cfg.spec.dim / 64).max(1);
+    }
+    Ok(cfg)
+}
+
+/// Build a [`WorkloadConfig`] from CLI overrides.
+pub fn workload_config(args: &Args) -> Result<WorkloadConfig> {
+    let mut wl = WorkloadConfig::default();
+    wl.qps = args.get_f64("qps", wl.qps)?;
+    wl.duration_us = (args.get_f64("duration-s", wl.duration_us as f64 / 1e6)? * 1e6) as u64;
+    wl.num_users = args.get_u64("users", wl.num_users)?;
+    wl.long_frac = args.get_f64("long-frac", wl.long_frac)?;
+    wl.long_threshold = args.get_usize("long-threshold", wl.long_threshold)?;
+    wl.max_prefix = args.get_usize("max-prefix", wl.max_prefix)?;
+    wl.refresh_prob = args.get_f64("refresh-prob", wl.refresh_prob)?;
+    wl.seed = args.get_u64("seed", wl.seed)?;
+    Ok(wl)
+}
+
+/// Serialize a SimConfig summary for run records.
+pub fn sim_config_json(cfg: &SimConfig, wl: &WorkloadConfig) -> Json {
+    let mut j = Json::obj();
+    j.set("mode", cfg.mode.label().as_str().into())
+        .set("hw", cfg.hw.name.as_str().into())
+        .set("spec", cfg.spec.name().as_str().into())
+        .set("instances", cfg.router.n_instances.into())
+        .set("servers", cfg.router.servers.into())
+        .set("r2", cfg.router.r2.into())
+        .set("m_slots", cfg.m_slots.into())
+        .set("qps", wl.qps.into())
+        .set("duration_s", (wl.duration_us as f64 / 1e6).into())
+        .set("seed", cfg.seed.into());
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(std::iter::once("prog".to_string()).chain(v.iter().map(|s| s.to_string())))
+            .unwrap()
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(parse_mode("baseline").unwrap(), Mode::Baseline);
+        assert_eq!(
+            parse_mode("relaygr").unwrap(),
+            Mode::RelayGr { dram: DramPolicy::Disabled }
+        );
+        assert_eq!(
+            parse_mode("relaygr+dram500g").unwrap(),
+            Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) }
+        );
+        assert!(parse_mode("remote").is_err());
+        assert!(parse_mode("relaygr+dramXg").is_err());
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let a = args(&["figure", "--dim", "512", "--instances", "40", "--qps", "123"]);
+        let cfg = sim_config(&a, Mode::Baseline).unwrap();
+        assert_eq!(cfg.spec.dim, 512);
+        assert_eq!(cfg.router.n_instances, 40);
+        let wl = workload_config(&a).unwrap();
+        assert!((wl.qps - 123.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn config_file_layering() {
+        let dir = std::env::temp_dir().join("relaygr_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"spec": {"layers": 16, "dim": 128}, "hw": "ascend-310", "r2": 0.2}"#,
+        )
+        .unwrap();
+        // CLI --dim beats the file; file layers/hw survive.
+        let a = args(&["x", "--config", path.to_str().unwrap(), "--dim", "256"]);
+        let cfg = sim_config(&a, Mode::Baseline).unwrap();
+        assert_eq!(cfg.spec.layers, 16);
+        assert_eq!(cfg.spec.dim, 256);
+        assert_eq!(cfg.hw.name, "ascend-310");
+        assert!((cfg.router.r2 - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_config_is_rejected() {
+        let a = args(&["x", "--hw", "h100"]);
+        assert!(sim_config(&a, Mode::Baseline).is_err());
+    }
+
+    #[test]
+    fn run_record_roundtrips() {
+        let cfg = SimConfig::standard(Mode::Baseline);
+        let wl = WorkloadConfig::default();
+        let j = sim_config_json(&cfg, &wl);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req_str("mode").unwrap(), "baseline");
+        assert_eq!(parsed.req_usize("instances").unwrap(), 20);
+    }
+}

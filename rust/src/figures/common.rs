@@ -1,0 +1,189 @@
+//! Shared infrastructure for the figure runners: table rendering, result
+//! persistence (`results/<figure>.json`), standard sweeps and the
+//! mode/variant sets the paper compares.
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{run_sim, SimConfig};
+use crate::metrics::RunMetrics;
+use crate::relay::baseline::Mode;
+use crate::relay::expander::DramPolicy;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::WorkloadConfig;
+
+/// The sequence-length sweep used across Figs. 11/13 (paper: 1K → ~15K).
+pub fn seq_lens() -> Vec<usize> {
+    vec![1024, 2048, 3072, 4096, 6144, 8192, 12288, 15360]
+}
+
+/// The four variants of Fig. 11/13: baseline, plain RelayGR, and two
+/// DRAM-budget variants (the paper's "+x%" rows; x is *measured*).
+pub fn standard_modes() -> Vec<Mode> {
+    vec![
+        Mode::Baseline,
+        Mode::RelayGr { dram: DramPolicy::Disabled },
+        Mode::RelayGr { dram: DramPolicy::Capacity(2 << 30) },
+        Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) },
+    ]
+}
+
+/// Run durations: full by default, short with `--quick` (used by tests).
+pub fn durations(args: &Args) -> (u64, u64) {
+    if args.has_flag("quick") {
+        (6_000_000, 4_000_000) // (latency runs, search runs)
+    } else {
+        (20_000_000, 10_000_000)
+    }
+}
+
+/// Workload whose long users all have exactly `len` tokens.
+pub fn fixed_len_workload(len: usize, qps: f64, duration_us: u64, seed: u64) -> WorkloadConfig {
+    WorkloadConfig {
+        qps,
+        duration_us,
+        num_users: 50_000,
+        fixed_long_len: Some(len),
+        max_prefix: len.max(2048),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Same, with an explicit special-service threshold (Fig. 14 width/depth
+/// sweeps lower the threshold so the 2K-token long class is
+/// relay-eligible — "length larger than a configured threshold", §4.1).
+pub fn fixed_len_workload_thresh(
+    len: usize,
+    threshold: usize,
+    qps: f64,
+    duration_us: u64,
+    seed: u64,
+) -> WorkloadConfig {
+    let mut wl = fixed_len_workload(len, qps, duration_us, seed);
+    wl.long_threshold = threshold;
+    wl
+}
+
+/// Run one simulation, with config errors contextualised by figure name.
+pub fn sim(figure: &str, cfg: SimConfig, wl: &WorkloadConfig) -> Result<RunMetrics> {
+    run_sim(cfg, wl).with_context(|| format!("{figure}: simulation failed"))
+}
+
+/// A rendered figure: header + rows, printed and persisted as JSON.
+pub struct Table {
+    pub name: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub meta: Json,
+}
+
+impl Table {
+    pub fn new(name: &str, title: &str, columns: &[&str]) -> Table {
+        Table {
+            name: name.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            meta: Json::obj(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Print aligned and write `results/<name>.json`.
+    pub fn emit(&self, args: &Args) -> Result<()> {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        println!("\n=== {} — {} ===", self.name, self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.columns));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        let dir = args.get_or("results", "results");
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir}"))?;
+        let mut j = Json::obj();
+        j.set("figure", self.name.as_str().into())
+            .set("title", self.title.as_str().into())
+            .set("columns", Json::Arr(self.columns.iter().map(|c| c.as_str().into()).collect()))
+            .set(
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| c.as_str().into()).collect()))
+                        .collect(),
+                ),
+            )
+            .set("meta", self.meta.clone());
+        let path = format!("{dir}/{}.json", self.name);
+        std::fs::write(&path, j.to_string_pretty()).with_context(|| format!("writing {path}"))?;
+        Ok(())
+    }
+}
+
+/// ms with 1 decimal.
+pub fn ms(us: f64) -> String {
+    format!("{:.1}", us / 1e3)
+}
+
+pub fn qps(v: f64) -> String {
+    format!("{v:.0}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.0}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_emit_writes_json() {
+        let dir = std::env::temp_dir().join("relaygr_fig_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let args = Args::parse(
+            ["p", "figure", "--results", dir.to_str().unwrap()].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut t = Table::new("testfig", "demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.emit(&args).unwrap();
+        let text = std::fs::read_to_string(dir.join("testfig.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.req_str("figure").unwrap(), "testfig");
+        assert_eq!(j.req_array("rows").unwrap().len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", "y", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(ms(12_345.0), "12.3");
+        assert_eq!(qps(99.6), "100");
+        assert_eq!(pct(0.104), "10%");
+    }
+}

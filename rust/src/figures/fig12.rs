@@ -1,0 +1,37 @@
+//! Fig. 12 — affinity is necessary: local (RelayGR) cache access vs
+//! remote fetch from a no-affinity distributed KV pool.  Remote fetch is
+//! orders of magnitude slower and can exceed the lifecycle window.
+
+use anyhow::Result;
+
+use crate::figures::common::{self, Table};
+use crate::model::{HardwareProfile, ModelSpec};
+use crate::relay::baseline::RemotePool;
+use crate::util::cli::Args;
+
+pub fn fig12(args: &Args) -> Result<()> {
+    let hw = HardwareProfile::by_name(args.get_or("hw", "ascend-910c"))
+        .ok_or_else(|| anyhow::anyhow!("unknown hw"))?;
+    let spec = ModelSpec::paper_default();
+    let pool = RemotePool { n_servers: args.get_usize("servers", 25)? };
+    let t_life_ms = 300.0;
+    let mut t = Table::new(
+        "fig12",
+        "local (RelayGR) vs remote fetch latency per ψ size",
+        &["seq_len", "kv_mb", "local_ms", "remote_ms", "ratio", "exceeds_lifecycle"],
+    );
+    for len in common::seq_lens() {
+        let kv = spec.kv_bytes_for(len);
+        let local = pool.local_access_us(&hw);
+        let remote = pool.remote_fetch_us(&hw, kv);
+        t.row(vec![
+            len.to_string(),
+            format!("{:.0}", kv as f64 / 1e6),
+            common::ms(local),
+            common::ms(remote),
+            format!("{:.0}x", remote / local),
+            (remote / 1e3 > t_life_ms).to_string(),
+        ]);
+    }
+    t.emit(args)
+}

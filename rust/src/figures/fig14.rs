@@ -1,0 +1,143 @@
+//! Fig. 14 — extension of RelayGR (Q3): candidate-set size, NPU
+//! utilization, embedding-dimension scaling and model-depth scaling.
+
+use anyhow::Result;
+
+use crate::cluster::SimConfig;
+use crate::figures::common::{self, Table};
+use crate::metrics::slo;
+use crate::relay::baseline::Mode;
+use crate::relay::expander::DramPolicy;
+use crate::util::cli::Args;
+
+/// Fig. 14a: ranking latency vs candidate-set size (paper: rank-on-cache
+/// below ~10 ms even at 2048 items; baseline carries the long prefix).
+pub fn fig14a(args: &Args) -> Result<()> {
+    let (dur, _) = common::durations(args);
+    let len = args.get_usize("len", 3072)?;
+    let qps = args.get_f64("qps", 60.0)?;
+    let mut t = Table::new(
+        "fig14a",
+        "long-request rank-stage latency (ms) vs candidate-set size",
+        &["items", "baseline_p50", "baseline_p99", "relaygr_p50", "relaygr_p99"],
+    );
+    for items in [128usize, 256, 512, 1024, 2048] {
+        let mut cells = vec![items.to_string()];
+        for mode in [Mode::Baseline, Mode::RelayGr { dram: DramPolicy::Disabled }] {
+            let mut cfg = SimConfig::standard(mode);
+            cfg.spec.num_items = items;
+            let m = common::sim("fig14a", cfg, &common::fixed_len_workload(len, qps, dur, 60))?;
+            cells.push(common::ms(m.rank_stage_long.p50()));
+            cells.push(common::ms(m.rank_stage_long.p99()));
+        }
+        t.row(cells);
+    }
+    t.emit(args)
+}
+
+/// Fig. 14b: NPU (cube) utilization vs concurrency — RelayGR with 0% DRAM
+/// hit adds pre-inference work (higher util); DRAM hits remove it.
+pub fn fig14b(args: &Args) -> Result<()> {
+    let (dur, _) = common::durations(args);
+    let len = args.get_usize("len", 3072)?;
+    let mut t = Table::new(
+        "fig14b",
+        "special/mean NPU utilization vs offered QPS",
+        &["qps", "variant", "special_util", "mean_util", "p99_ms"],
+    );
+    for qps in [50.0, 100.0, 200.0, 400.0] {
+        for mode in common::standard_modes() {
+            let cfg = SimConfig::standard(mode);
+            let m = common::sim("fig14b", cfg, &common::fixed_len_workload(len, qps, dur, 61))?;
+            let special = if m.special_instances.is_empty() {
+                m.mean_util(None)
+            } else {
+                m.special_util()
+            };
+            t.row(vec![
+                common::qps(qps),
+                mode.label(),
+                common::pct(special),
+                common::pct(m.mean_util(None)),
+                common::ms(m.p99_e2e()),
+            ]);
+        }
+    }
+    t.emit(args)
+}
+
+/// Fig. 14c: throughput vs embedding dimension (paper: at 1024-dim the
+/// baseline drops below 50 QPS; RelayGR ≥ 2×, ~3× with full DRAM reuse).
+pub fn fig14c(args: &Args) -> Result<()> {
+    let (_, dur) = common::durations(args);
+    let len = args.get_usize("len", 2048)?;
+    let mut t = Table::new(
+        "fig14c",
+        "SLO-compliant QPS vs embedding dimension",
+        &["dim", "baseline", "relaygr", "relaygr+dram500g"],
+    );
+    for dim in [128usize, 256, 512, 768, 1024] {
+        let mut cells = vec![dim.to_string()];
+        for mode in [
+            Mode::Baseline,
+            Mode::RelayGr { dram: DramPolicy::Disabled },
+            Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) },
+        ] {
+            let mut cfg = SimConfig::standard(mode);
+            cfg.spec.dim = dim;
+            cfg.spec.heads = (dim / 64).max(1);
+            cfg.spec.layers = 4; // width sweep at moderate depth
+            cfg.long_threshold = 1024; // 2K-token class is relay-eligible
+            let search = slo::max_qps(
+                |q| {
+                    let wl = common::fixed_len_workload_thresh(len, 1024, q, dur, 62);
+                    common::sim("fig14c", cfg.clone(), &wl).expect("sim")
+                },
+                2.0,
+                3000.0,
+                cfg.pipeline.required_success,
+                0.05,
+            );
+            cells.push(common::qps(search.value));
+        }
+        t.row(cells);
+    }
+    t.emit(args)
+}
+
+/// Fig. 14d: throughput vs model depth (paper: 16 layers → RelayGR ≥ 4×
+/// baseline; with 100% hit, doubling layers costs only ~14%).
+pub fn fig14d(args: &Args) -> Result<()> {
+    let (_, dur) = common::durations(args);
+    let len = args.get_usize("len", 2048)?;
+    let mut t = Table::new(
+        "fig14d",
+        "SLO-compliant QPS vs model depth",
+        &["layers", "baseline", "relaygr", "relaygr+dram500g"],
+    );
+    for layers in [4usize, 8, 16, 24] {
+        let mut cells = vec![layers.to_string()];
+        for mode in [
+            Mode::Baseline,
+            Mode::RelayGr { dram: DramPolicy::Disabled },
+            Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) },
+        ] {
+            let mut cfg = SimConfig::standard(mode);
+            cfg.spec.layers = layers;
+            cfg.long_threshold = 1024; // 2K-token class is relay-eligible
+            let search = slo::max_qps(
+                |q| {
+                    let wl = common::fixed_len_workload_thresh(len, 1024, q, dur, 63);
+                    common::sim("fig14d", cfg.clone(), &wl).expect("sim")
+                },
+                2.0,
+                3000.0,
+                cfg.pipeline.required_success,
+                0.05,
+            );
+            cells.push(common::qps(search.value));
+        }
+        t.row(cells);
+    }
+    t.emit(args)
+}

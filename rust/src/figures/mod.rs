@@ -1,0 +1,63 @@
+//! Figure runners: one per table/figure in the paper's evaluation
+//! (§4, Figs. 1–15 + Table 1).  `relaygr figure <id>` regenerates the
+//! rows/series the paper reports; `relaygr figure all` runs everything.
+//! Results are printed and persisted under `results/`.
+
+pub mod common;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod motivation;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+/// All figure ids in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig3", "fig11a", "fig11b", "fig11c", "fig11d", "fig12", "fig13a", "fig13b",
+    "fig13c", "fig13d", "fig14a", "fig14b", "fig14c", "fig14d", "fig15a", "fig15b", "table1",
+];
+
+pub fn run_one(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1" => motivation::fig1(args),
+        "fig3" => motivation::fig3(args),
+        "fig11a" => fig11::fig11a(args),
+        "fig11b" => fig11::fig11b(args),
+        "fig11c" => fig11::fig11c(args),
+        "fig11d" => fig11::fig11d(args),
+        "fig12" => fig12::fig12(args),
+        "fig13a" => fig13::fig13a(args),
+        "fig13b" => fig13::fig13b(args),
+        "fig13c" => fig13::fig13c(args),
+        "fig13d" => fig13::fig13d(args),
+        "fig14a" => fig14::fig14a(args),
+        "fig14b" => fig14::fig14b(args),
+        "fig14c" => fig14::fig14c(args),
+        "fig14d" => fig14::fig14d(args),
+        "fig15a" => fig15::fig15a(args),
+        "fig15b" => fig15::fig15b(args),
+        "table1" => fig15::table1(args),
+        other => bail!("unknown figure '{other}' (available: {} all)", ALL.join(" ")),
+    }
+}
+
+/// `relaygr figure <id>|all [--quick] [--results dir] [...]`.
+pub fn run(args: &Args) -> Result<()> {
+    let Some(id) = args.positionals.get(1) else {
+        bail!("usage: relaygr figure <{}|all>", ALL.join("|"));
+    };
+    if id == "all" {
+        for id in ALL {
+            let t0 = std::time::Instant::now();
+            run_one(id, args)?;
+            log::info!("{id} done in {:.1?}", t0.elapsed());
+        }
+        Ok(())
+    } else {
+        run_one(id, args)
+    }
+}

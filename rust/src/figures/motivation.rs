@@ -1,0 +1,71 @@
+//! Fig. 1 and Fig. 3 — the motivation experiments: ranking-stage P99
+//! restricts sequence length and throughput (baseline only).
+
+use anyhow::Result;
+
+use crate::cluster::SimConfig;
+use crate::figures::common::{self, Table};
+use crate::metrics::slo;
+use crate::relay::baseline::Mode;
+use crate::util::cli::Args;
+
+/// Fig. 1a/1b: with full inference inline, (a) P99 blows past the SLO as
+/// sequence length grows at fixed load, and (b) the SLO-compliant QPS
+/// collapses with length.
+pub fn fig1(args: &Args) -> Result<()> {
+    let (dur, search_dur) = common::durations(args);
+    let qps_fixed = args.get_f64("qps", 80.0)?;
+    let mut t = Table::new(
+        "fig1",
+        "ranking-stage P99 restricts sequence length and throughput (baseline)",
+        &["seq_len", "rank_p99_ms", "e2e_p99_ms", "success", "slo_ok", "max_qps"],
+    );
+    for len in [1024usize, 2048, 3072, 4096, 6144, 8192] {
+        let cfg = SimConfig::standard(Mode::Baseline);
+        let wl = common::fixed_len_workload(len, qps_fixed, dur, 42);
+        let m = common::sim("fig1", cfg.clone(), &wl)?;
+        let search = slo::max_qps(
+            |q| {
+                let wl = common::fixed_len_workload(len, q, search_dur, 43);
+                common::sim("fig1", cfg.clone(), &wl).expect("sim")
+            },
+            5.0,
+            2000.0,
+            cfg.pipeline.required_success,
+            0.05,
+        );
+        t.row(vec![
+            len.to_string(),
+            common::ms(m.rank_stage_long.p99()),
+            common::ms(m.e2e_long.p99()),
+            format!("{:.4}", m.success_rate()),
+            m.slo_compliant(cfg.pipeline.required_success).to_string(),
+            common::qps(search.value),
+        ]);
+    }
+    t.emit(args)
+}
+
+/// Fig. 3: the budget forces capping either length or dimension — rank
+/// latency vs length for several embedding dims, against the 50 ms line.
+pub fn fig3(args: &Args) -> Result<()> {
+    let (dur, _) = common::durations(args);
+    let mut t = Table::new(
+        "fig3",
+        "limited sequences: rank-stage P99 (ms) vs length × dim, 50 ms budget",
+        &["seq_len", "dim128", "dim256", "dim512", "dim1024"],
+    );
+    for len in [512usize, 1024, 2048, 4096] {
+        let mut cells = vec![len.to_string()];
+        for dim in [128usize, 256, 512, 1024] {
+            let mut cfg = SimConfig::standard(Mode::Baseline);
+            cfg.spec.dim = dim;
+            cfg.spec.heads = (dim / 64).max(1);
+            let wl = common::fixed_len_workload(len, 30.0, dur, 44);
+            let m = common::sim("fig3", cfg, &wl)?;
+            cells.push(common::ms(m.rank_stage_long.p99()));
+        }
+        t.row(cells);
+    }
+    t.emit(args)
+}

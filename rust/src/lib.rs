@@ -1,0 +1,33 @@
+//! # RelayGR — cross-stage relay-race inference for generative recommendation
+//!
+//! Reproduction of *"RelayGR: Scaling Long-Sequence Generative
+//! Recommendation via Cross-Stage Relay-Race Inference"* (CS.DC 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — HSTU pointwise-attention Pallas kernels (`python/compile/kernels/`),
+//! * **L2** — the GR backbone + task tower lowered AOT to HLO text
+//!   (`python/compile/model.py` → `artifacts/`),
+//! * **L3** — this crate: the serving coordinator implementing the paper's
+//!   contribution (sequence-aware trigger, affinity-aware router,
+//!   memory-aware expander, HBM lifecycle cache) over a PJRT runtime, a
+//!   live threaded serving engine, and a calibrated discrete-event cluster
+//!   simulator that regenerates every figure/table in the paper's
+//!   evaluation.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! model once and the rust binary is self-contained afterwards.
+
+pub mod util;
+
+pub mod config;
+pub mod model;
+pub mod runtime;
+
+pub mod cluster;
+pub mod relay;
+pub mod workload;
+
+pub mod metrics;
+pub mod serve;
+
+pub mod figures;

@@ -1,0 +1,161 @@
+//! `relaygr` CLI — leader entrypoint for the RelayGR reproduction.
+//!
+//! Subcommands (see `relaygr help`):
+//!   selftest   — load artifacts, run prefix→rank vs full, check ε-bound
+//!   inspect    — list artifact variants and ψ footprints
+//!   serve      — live threaded serving demo on real PJRT executables
+//!   calibrate  — measure live costs and write calibration JSON
+//!   figure     — regenerate a paper figure/table (fig1..fig15b, table1)
+//!   plan       — admission-control capacity planning (Eqs. 1–3)
+
+use anyhow::{bail, Result};
+
+use relaygr::util::cli::Args;
+use relaygr::util::logging;
+
+fn main() {
+    logging::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("selftest") => selftest(args),
+        Some("inspect") => inspect(args),
+        Some("serve") => relaygr::serve::cli::run(args),
+        Some("calibrate") => relaygr::serve::calibrate::run(args),
+        Some("figure") => relaygr::figures::run(args),
+        Some("plan") => relaygr::relay::trigger::plan_cli(args),
+        Some("help") | None => {
+            print!("{}", help());
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try `relaygr help`)"),
+    }
+}
+
+fn help() -> String {
+    "relaygr — cross-stage relay-race inference for generative recommendation\n\
+     \n\
+     USAGE:\n  relaygr <subcommand> [options]\n\
+     \n\
+     SUBCOMMANDS:\n\
+     \x20 selftest   load artifacts, check ε-equivalence of cached vs full inference\n\
+     \x20 inspect    list artifact variants and ψ footprints (Table 1)\n\
+     \x20 serve      live threaded serving demo (real PJRT executables)\n\
+     \x20 calibrate  measure live execution costs, write calibration JSON\n\
+     \x20 figure     regenerate a paper figure/table: fig1 fig3 fig11a..d fig12\n\
+     \x20            fig13a..d fig14a..d fig15a fig15b table1 all\n\
+     \x20 plan       admission-control capacity planning (Eqs. 1–3)\n\
+     \n\
+     COMMON OPTIONS:\n\
+     \x20 --artifacts <dir>   artifact directory (default: artifacts)\n\
+     \x20 --seed <n>          base RNG seed (default: 42)\n"
+        .to_string()
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+/// Validate the python→rust bridge and the paper's ε-bound end to end:
+/// run `full` inference, then `prefix`→ψ→`rank`, and compare scores.
+fn selftest(args: &Args) -> Result<()> {
+    use relaygr::runtime::{synth_embedding, Engine, FnKind};
+
+    let engine = Engine::load(artifacts_dir(args))?;
+    println!("platform: {}", engine.platform());
+    let variants = engine.manifest.variants();
+    if variants.is_empty() {
+        bail!("no artifacts found — run `make artifacts`");
+    }
+    let mut worst: f64 = 0.0;
+    for spec in &variants {
+        let (Some(_), Some(_), Some(_)) = (
+            engine.manifest.find(FnKind::Prefix, spec),
+            engine.manifest.find(FnKind::Rank, spec),
+            engine.manifest.find(FnKind::Full, spec),
+        ) else {
+            continue;
+        };
+        let prefix_m = engine.model(FnKind::Prefix, spec)?;
+        let rank_m = engine.model(FnKind::Rank, spec)?;
+        let full_m = engine.model(FnKind::Full, spec)?;
+
+        let seed = args.get_u64("seed", 42)?;
+        let prefix = synth_embedding(seed ^ 1, spec.prefix_len, spec.dim, 0.5);
+        let incr = synth_embedding(seed ^ 2, spec.incr_len, spec.dim, 0.5);
+        let items = synth_embedding(seed ^ 3, spec.num_items, spec.dim, 0.5);
+
+        let t0 = std::time::Instant::now();
+        let full = full_m.execute_host(&[&prefix, &incr, &items])?;
+        let t_full = t0.elapsed();
+
+        let t1 = std::time::Instant::now();
+        let kv = prefix_m.execute_to_device(&[&prefix])?;
+        let t_pre = t1.elapsed();
+        let t2 = std::time::Instant::now();
+        let cached = rank_m.execute_with_kv(&kv, &[&incr, &items])?;
+        let t_rank = t2.elapsed();
+
+        let eps = full
+            .iter()
+            .zip(&cached)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0_f64, f64::max);
+        worst = worst.max(eps);
+        println!(
+            "{:40} ε={eps:.3e}  full={:7.1?}  pre={:7.1?}  rank={:7.1?}  ψ={:.2} MB",
+            spec.name(),
+            t_full,
+            t_pre,
+            t_rank,
+            kv.bytes as f64 / 1e6,
+        );
+        if eps > 1e-3 {
+            bail!("ε-bound violated for {}: {eps}", spec.name());
+        }
+    }
+    println!("selftest OK (worst ε = {worst:.3e})");
+    Ok(())
+}
+
+/// Print the artifact inventory with ψ footprints (Table 1 arithmetic).
+fn inspect(args: &Args) -> Result<()> {
+    use relaygr::runtime::Manifest;
+
+    let manifest = Manifest::load(artifacts_dir(args))?;
+    println!("jax {}, {} artifacts", manifest.jax_version, manifest.artifacts.len());
+    println!(
+        "{:<6} {:<36} {:>6} {:>5} {:>6} {:>7} {:>6} {:>9}",
+        "fn", "variant", "layers", "dim", "heads", "prefix", "items", "ψ bytes"
+    );
+    for a in &manifest.artifacts {
+        println!(
+            "{:<6} {:<36} {:>6} {:>5} {:>6} {:>7} {:>6} {:>9}",
+            a.fn_kind.as_str(),
+            a.spec.name(),
+            a.spec.layers,
+            a.spec.dim,
+            a.spec.heads,
+            a.spec.prefix_len,
+            a.spec.num_items,
+            a.spec.kv_bytes(),
+        );
+    }
+    Ok(())
+}

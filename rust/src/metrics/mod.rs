@@ -1,0 +1,280 @@
+//! Run-level metrics: per-request lifecycle aggregation, SLO compliance,
+//! and the capacity searches the paper's headline metrics are defined by
+//! (§4.1: *maximum supported sequence length* = largest length meeting
+//! P99 ≤ SLO with success ≥ 99.9%; *SLO-compliant throughput* = max QPS
+//! under the same constraints).
+
+pub mod slo;
+
+use crate::relay::expander::ExpanderStats;
+use crate::relay::hbm::HbmStats;
+use crate::relay::pipeline::{CacheOutcome, Lifecycle};
+use crate::relay::trigger::TriggerStats;
+use crate::util::stats::{Histogram, Summary};
+
+/// Aggregated results of one simulated or live run.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    /// End-to-end pipeline latency.
+    pub e2e: Histogram,
+    /// Ranking-stage latency (the binding budget).
+    pub rank_stage: Histogram,
+    /// Component latencies (Fig. 11c / 13b breakdown).
+    pub pre: Histogram,
+    pub load: Histogram,
+    pub rank_exec: Histogram,
+    pub rank_exec_long: Histogram,
+    pub wait: Histogram,
+    /// Same but only for long-sequence (special-service) requests.
+    pub e2e_long: Histogram,
+    pub rank_stage_long: Histogram,
+
+    pub completed: u64,
+    pub outcome_counts: [u64; 5],
+    pub admitted: u64,
+
+    pub hbm: HbmStats,
+    pub expander: ExpanderStats,
+    pub trigger: TriggerStats,
+
+    /// Busy-time utilization per instance (0..1), and the special subset.
+    pub util: Vec<f64>,
+    pub special_instances: Vec<usize>,
+
+    pub sim_duration_us: u64,
+    pub offered_qps: f64,
+    pub pipeline_slo_us: f64,
+}
+
+fn outcome_index(o: CacheOutcome) -> usize {
+    match o {
+        CacheOutcome::FullInference => 0,
+        CacheOutcome::HbmHit => 1,
+        CacheOutcome::DramHit => 2,
+        CacheOutcome::JoinedReload => 3,
+        CacheOutcome::Fallback => 4,
+    }
+}
+
+pub const OUTCOME_NAMES: [&str; 5] = ["full", "hbm", "dram", "join", "fallback"];
+
+impl RunMetrics {
+    pub fn new(pipeline_slo_us: f64) -> RunMetrics {
+        RunMetrics {
+            e2e: Histogram::new(),
+            rank_stage: Histogram::new(),
+            pre: Histogram::new(),
+            load: Histogram::new(),
+            rank_exec: Histogram::new(),
+            rank_exec_long: Histogram::new(),
+            wait: Histogram::new(),
+            e2e_long: Histogram::new(),
+            rank_stage_long: Histogram::new(),
+            completed: 0,
+            outcome_counts: [0; 5],
+            admitted: 0,
+            hbm: HbmStats::default(),
+            expander: ExpanderStats::default(),
+            trigger: TriggerStats::default(),
+            util: Vec::new(),
+            special_instances: Vec::new(),
+            sim_duration_us: 0,
+            offered_qps: 0.0,
+            pipeline_slo_us,
+        }
+    }
+
+    /// Fold one finished request in.
+    pub fn record(&mut self, lc: &Lifecycle, is_long: bool) {
+        self.completed += 1;
+        self.e2e.record(lc.e2e_us());
+        self.rank_stage.record(lc.rank_stage_us());
+        if lc.pre_us > 0.0 {
+            self.pre.record(lc.pre_us);
+        }
+        if lc.load_us > 0.0 {
+            self.load.record(lc.load_us);
+        }
+        self.rank_exec.record(lc.rank_us);
+        if lc.wait_us > 0.0 {
+            self.wait.record(lc.wait_us);
+        }
+        if is_long {
+            self.e2e_long.record(lc.e2e_us());
+            self.rank_stage_long.record(lc.rank_stage_us());
+            self.rank_exec_long.record(lc.rank_us);
+        }
+        self.outcome_counts[outcome_index(lc.outcome)] += 1;
+        if lc.admitted {
+            self.admitted += 1;
+        }
+    }
+
+    /// Fraction of requests meeting the pipeline SLO (the paper's success
+    /// rate; timeouts are requests beyond the deadline).
+    pub fn success_rate(&self) -> f64 {
+        self.e2e.fraction_le(self.pipeline_slo_us)
+    }
+
+    pub fn success_rate_long(&self) -> f64 {
+        if self.e2e_long.count() == 0 {
+            1.0
+        } else {
+            self.e2e_long.fraction_le(self.pipeline_slo_us)
+        }
+    }
+
+    pub fn p99_e2e(&self) -> f64 {
+        self.e2e.p99()
+    }
+
+    /// Completed-request throughput, queries/s.
+    pub fn goodput_qps(&self) -> f64 {
+        if self.sim_duration_us == 0 {
+            0.0
+        } else {
+            self.completed as f64 / (self.sim_duration_us as f64 / 1e6)
+        }
+    }
+
+    /// Does the run meet the paper's compliance definition (P99 ≤ SLO and
+    /// success ≥ 99.9%)?  At simulation sample sizes the rate criterion is
+    /// applied with a one-failure allowance so a single outlier among a
+    /// few hundred requests does not dominate (the paper's runs have
+    /// millions of queries; ⌈0.1%·n⌉ there is ≫ 1).
+    pub fn slo_compliant(&self, required_success: f64) -> bool {
+        let ok = |h: &Histogram| {
+            let n = h.count();
+            if n == 0 {
+                return true;
+            }
+            let fails = (n as f64 * (1.0 - h.fraction_le(self.pipeline_slo_us))).round() as u64;
+            fails <= std::cmp::max(1, ((1.0 - required_success) * n as f64).floor() as u64)
+        };
+        self.p99_e2e() <= self.pipeline_slo_us && ok(&self.e2e) && ok(&self.e2e_long)
+    }
+
+    /// DRAM hit rate among relay-served long requests (the paper's "+x%").
+    pub fn dram_hit_rate(&self) -> f64 {
+        let hits = self.outcome_counts[2] + self.outcome_counts[3];
+        let relayed = hits + self.outcome_counts[1];
+        if relayed == 0 {
+            0.0
+        } else {
+            hits as f64 / relayed as f64
+        }
+    }
+
+    pub fn mean_util(&self, only: Option<&[usize]>) -> f64 {
+        let vals: Vec<f64> = match only {
+            Some(idx) => idx.iter().map(|&i| self.util[i]).collect(),
+            None => self.util.clone(),
+        };
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    pub fn special_util(&self) -> f64 {
+        self.mean_util(Some(&self.special_instances.clone()))
+    }
+
+    /// One-line human summary.
+    pub fn brief(&self) -> String {
+        format!(
+            "n={} qps={:.1} p99={:.1}ms success={:.4} outcomes[{}]",
+            self.completed,
+            self.goodput_qps(),
+            self.p99_e2e() / 1e3,
+            self.success_rate(),
+            self.outcome_counts
+                .iter()
+                .zip(OUTCOME_NAMES)
+                .map(|(c, n)| format!("{n}:{c}"))
+                .collect::<Vec<_>>()
+                .join(" "),
+        )
+    }
+
+    pub fn e2e_summary(&self) -> Summary {
+        self.e2e.summary()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::pipeline::CacheOutcome;
+
+    fn lc(e2e_ms: f64, outcome: CacheOutcome) -> Lifecycle {
+        Lifecycle {
+            request: 0,
+            user: 0,
+            prefix_len: 4096,
+            arrival_us: 0,
+            retrieval_done_us: 10,
+            preproc_done_us: 20,
+            rank_start_us: 20,
+            done_us: (e2e_ms * 1e3) as u64,
+            pre_us: 1000.0,
+            load_us: 0.0,
+            rank_us: 500.0,
+            wait_us: 0.0,
+            outcome,
+            admitted: outcome != CacheOutcome::FullInference,
+            instance: 0,
+        }
+    }
+
+    #[test]
+    fn success_rate_and_compliance() {
+        let mut m = RunMetrics::new(135_000.0);
+        m.sim_duration_us = 1_000_000;
+        for _ in 0..998 {
+            m.record(&lc(100.0, CacheOutcome::HbmHit), true);
+        }
+        m.record(&lc(200.0, CacheOutcome::Fallback), true);
+        m.record(&lc(200.0, CacheOutcome::Fallback), true);
+        assert!((m.success_rate() - 0.998).abs() < 1e-6);
+        // 2 failures in 1000: allowed at 99.8%+1-grace, not at 99.99%.
+        assert!(m.slo_compliant(0.998));
+        assert!(!m.slo_compliant(0.9999));
+        assert_eq!(m.completed, 1000);
+        assert!((m.goodput_qps() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p99_drives_compliance() {
+        let mut m = RunMetrics::new(135_000.0);
+        m.sim_duration_us = 1_000_000;
+        // 2% of traffic above SLO → p99 > SLO → non-compliant.
+        for _ in 0..98 {
+            m.record(&lc(50.0, CacheOutcome::HbmHit), false);
+        }
+        for _ in 0..2 {
+            m.record(&lc(500.0, CacheOutcome::FullInference), false);
+        }
+        assert!(!m.slo_compliant(0.9));
+    }
+
+    #[test]
+    fn dram_hit_rate_counts_joins() {
+        let mut m = RunMetrics::new(135_000.0);
+        m.record(&lc(50.0, CacheOutcome::HbmHit), true);
+        m.record(&lc(50.0, CacheOutcome::DramHit), true);
+        m.record(&lc(50.0, CacheOutcome::JoinedReload), true);
+        m.record(&lc(50.0, CacheOutcome::FullInference), false);
+        assert!((m.dram_hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn util_means() {
+        let mut m = RunMetrics::new(1.0);
+        m.util = vec![0.2, 0.4, 0.9];
+        m.special_instances = vec![2];
+        assert!((m.mean_util(None) - 0.5).abs() < 1e-9);
+        assert!((m.special_util() - 0.9).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,164 @@
+//! Capacity searches defining the paper's headline metrics.
+//!
+//! * [`max_qps`] — SLO-compliant throughput: the largest offered QPS for
+//!   which the run stays compliant (P99 ≤ SLO and success ≥ 99.9%),
+//!   found by exponential probing + binary search.
+//! * [`max_supported_len`] — maximum supported sequence length: the
+//!   largest length bucket whose run is compliant at the given QPS.
+
+use crate::metrics::RunMetrics;
+
+/// Compliance predicate shared by both searches.
+pub fn compliant(m: &RunMetrics, required_success: f64) -> bool {
+    m.slo_compliant(required_success)
+}
+
+/// Compliance on the ranking stage only (Figs. 13a/13d: the binding
+/// constraint is the ranking-stage budget).  Applies the same
+/// one-failure small-sample allowance as [`RunMetrics::slo_compliant`].
+pub fn compliant_rank_stage(m: &RunMetrics, budget_us: f64, required_success: f64) -> bool {
+    let ok = |h: &crate::util::stats::Histogram| {
+        let n = h.count();
+        if n == 0 {
+            return true;
+        }
+        let fails = (n as f64 * (1.0 - h.fraction_le(budget_us))).round() as u64;
+        fails <= std::cmp::max(1, ((1.0 - required_success) * n as f64).floor() as u64)
+    };
+    m.rank_stage.p99() <= budget_us && ok(&m.rank_stage) && ok(&m.rank_stage_long)
+}
+
+/// Binary-search the largest QPS in `[lo, hi]` (within relative `tol`)
+/// satisfying an arbitrary compliance predicate.
+pub fn max_qps_where(
+    mut run: impl FnMut(f64) -> RunMetrics,
+    lo: f64,
+    hi: f64,
+    tol: f64,
+    ok: impl Fn(&RunMetrics) -> bool,
+) -> SearchResult {
+    let mut evals = 0u32;
+    let mut check = |q: f64, evals: &mut u32| {
+        *evals += 1;
+        ok(&run(q))
+    };
+    // If even `lo` fails, report zero capacity.
+    if !check(lo, &mut evals) {
+        return SearchResult { value: 0.0, evals };
+    }
+    let (mut good, mut bad) = (lo, hi);
+    if check(hi, &mut evals) {
+        return SearchResult { value: hi, evals };
+    }
+    while (bad - good) / good.max(1e-9) > tol {
+        let mid = (good + bad) / 2.0;
+        if check(mid, &mut evals) {
+            good = mid;
+        } else {
+            bad = mid;
+        }
+    }
+    SearchResult { value: good, evals }
+}
+
+/// SLO-compliant throughput under the paper's standard definition.
+pub fn max_qps(
+    run: impl FnMut(f64) -> RunMetrics,
+    lo: f64,
+    hi: f64,
+    required_success: f64,
+    tol: f64,
+) -> SearchResult {
+    max_qps_where(run, lo, hi, tol, |m| compliant(m, required_success))
+}
+
+/// Largest length bucket (from the ascending list) whose run is compliant.
+pub fn max_supported_len(
+    mut run: impl FnMut(usize) -> RunMetrics,
+    lens: &[usize],
+    required_success: f64,
+) -> SearchResult {
+    let mut best = 0usize;
+    let mut evals = 0u32;
+    for &len in lens {
+        evals += 1;
+        if compliant(&run(len), required_success) {
+            best = len;
+        } else {
+            break; // latency is monotone in length; stop at first failure
+        }
+    }
+    SearchResult { value: best as f64, evals }
+}
+
+/// Search outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchResult {
+    pub value: f64,
+    pub evals: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::pipeline::{CacheOutcome, Lifecycle};
+
+    /// Synthetic run: latency grows with qps; compliant iff qps <= cap.
+    fn fake_run(qps: f64, cap: f64) -> RunMetrics {
+        let mut m = RunMetrics::new(135_000.0);
+        m.sim_duration_us = 1_000_000;
+        let lat_ms = if qps <= cap { 100.0 } else { 200.0 };
+        for _ in 0..1000 {
+            m.record(
+                &Lifecycle {
+                    request: 0,
+                    user: 0,
+                    prefix_len: 0,
+                    arrival_us: 0,
+                    retrieval_done_us: 0,
+                    preproc_done_us: 0,
+                    rank_start_us: 0,
+                    done_us: (lat_ms * 1e3) as u64,
+                    pre_us: 0.0,
+                    load_us: 0.0,
+                    rank_us: 1.0,
+                    wait_us: 0.0,
+                    outcome: CacheOutcome::FullInference,
+                    admitted: false,
+                    instance: 0,
+                },
+                false,
+            );
+        }
+        m
+    }
+
+    #[test]
+    fn binary_search_converges_to_capacity() {
+        let r = max_qps(|q| fake_run(q, 330.0), 1.0, 1000.0, 0.999, 0.02);
+        assert!((r.value - 330.0).abs() / 330.0 < 0.03, "found {}", r.value);
+        assert!(r.evals < 20);
+    }
+
+    #[test]
+    fn zero_capacity_when_lo_fails() {
+        let r = max_qps(|q| fake_run(q, 0.5), 1.0, 1000.0, 0.999, 0.02);
+        assert_eq!(r.value, 0.0);
+    }
+
+    #[test]
+    fn full_capacity_when_hi_passes() {
+        let r = max_qps(|q| fake_run(q, 1e9), 1.0, 1000.0, 0.999, 0.02);
+        assert_eq!(r.value, 1000.0);
+    }
+
+    #[test]
+    fn len_search_stops_at_first_failure() {
+        let lens = [1024, 2048, 4096, 8192];
+        let r = max_supported_len(|l| fake_run(l as f64, 4096.0), &lens, 0.999);
+        assert_eq!(r.value, 4096.0);
+        assert_eq!(r.evals, 4); // probed 8192, failed, stopped
+        let r0 = max_supported_len(|l| fake_run(l as f64, 100.0), &lens, 0.999);
+        assert_eq!(r0.value, 0.0);
+    }
+}

@@ -1,0 +1,224 @@
+//! Analytic hardware cost model used by the discrete-event simulator.
+//!
+//! The paper's testbed (Ascend 910C / 310 NPUs, PCIe hosts, tenant-
+//! isolated network) is not available here, so simulated-time execution
+//! costs come from this model.  Constants are chosen so the *paper's own
+//! reported component latencies* are reproduced at the default setting
+//! (§3.2 sanity check and §4: pre-inference ≈ 35 ms at 2K/8L/256d on
+//! 910C, load < 20 ms at 15K tokens, rank < 10 ms, remote fetch ~100×
+//! local access), and the CPU profile is *calibrated* from live PJRT
+//! runs (`relaygr calibrate`) so live measurements and simulation agree
+//! on the small grid.
+//!
+//! All returned durations are in microseconds of simulated time.
+
+use crate::model::spec::ModelSpec;
+
+/// Hardware profile: effective rates, not peak (serving-shape batches).
+#[derive(Debug, Clone)]
+pub struct HardwareProfile {
+    pub name: String,
+    /// Effective sustained compute, FLOPs per microsecond (1 TFLOP/s = 1e6).
+    pub eff_flops_per_us: f64,
+    /// Pre-inference efficiency multiplier: the prefix pass is one large
+    /// dense batch (S_l × S_l attention + S_l-row projections) that keeps
+    /// the cube/MXU far busier than latency-bound incremental scoring, so
+    /// its sustained FLOP rate is a multiple of `eff_flops_per_us`.  This
+    /// is what lets pre-inference of multi-K prefixes complete within the
+    /// retrieval+preprocessing slack (Figs. 4, 13b).
+    pub pre_eff_factor: f64,
+    /// Fixed per-launch overhead (graph launch, host sync).
+    pub launch_us: f64,
+    /// Host→device (and device→host) PCIe bandwidth, bytes/µs (1 GB/s = 1e3).
+    pub pcie_bytes_per_us: f64,
+    /// Fixed per-transfer DMA setup cost.
+    pub dma_fixed_us: f64,
+    /// DRAM copy bandwidth for expander spills, bytes/µs.
+    pub dram_bytes_per_us: f64,
+    /// Cross-server fetch: round-trip latency + effective network bandwidth.
+    pub net_rtt_us: f64,
+    pub net_bytes_per_us: f64,
+    /// CPU feature/behaviour processing throughput, tokens/µs per core.
+    pub cpu_tokens_per_us: f64,
+    /// Device HBM capacity in bytes (per instance).
+    pub hbm_bytes: usize,
+}
+
+impl HardwareProfile {
+    /// Ascend 910C-class profile (paper's Type 2 NPU; the primary testbed).
+    ///
+    /// Effective 1.2 TFLOP/s at serving batch shapes reproduces the
+    /// paper's "pre-inference takes 35 ms" example for 2K/8L/256d.
+    pub fn ascend_910c() -> HardwareProfile {
+        HardwareProfile {
+            name: "ascend-910c".into(),
+            eff_flops_per_us: 1.2e6,
+            pre_eff_factor: 2.5,
+            launch_us: 300.0,
+            pcie_bytes_per_us: 32_000.0, // ~32 GB/s effective gen4 x16
+            dma_fixed_us: 150.0,
+            dram_bytes_per_us: 50_000.0,
+            net_rtt_us: 500.0,
+            net_bytes_per_us: 1_250.0, // ~10 GbE effective share
+            cpu_tokens_per_us: 0.4,
+            hbm_bytes: 32 << 30,
+        }
+    }
+
+    /// Ascend 310-class profile (paper's Type 1 NPU): ~4-5× less compute,
+    /// narrower PCIe, smaller HBM.
+    pub fn ascend_310() -> HardwareProfile {
+        HardwareProfile {
+            name: "ascend-310".into(),
+            eff_flops_per_us: 0.28e6,
+            pre_eff_factor: 2.5,
+            launch_us: 400.0,
+            pcie_bytes_per_us: 12_000.0,
+            dma_fixed_us: 200.0,
+            dram_bytes_per_us: 40_000.0,
+            net_rtt_us: 500.0,
+            net_bytes_per_us: 1_250.0,
+            cpu_tokens_per_us: 0.4,
+            hbm_bytes: 8 << 30,
+        }
+    }
+
+    /// CPU PJRT profile for cross-checking the simulator against live
+    /// measurements on the small artifact grid.  `eff_flops_per_us` is
+    /// overwritten by `relaygr calibrate` output when present.
+    pub fn cpu_live() -> HardwareProfile {
+        HardwareProfile {
+            name: "cpu-pjrt".into(),
+            eff_flops_per_us: 7_450.0, // fitted by `relaygr calibrate` on this host
+            pre_eff_factor: 1.0,        // CPU: no batch-efficiency cliff
+            launch_us: 200.0,
+            pcie_bytes_per_us: 8_000.0, // memcpy-class
+            dma_fixed_us: 20.0,
+            dram_bytes_per_us: 8_000.0,
+            net_rtt_us: 500.0,
+            net_bytes_per_us: 1_250.0,
+            cpu_tokens_per_us: 2.0,
+            hbm_bytes: 4 << 30,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<HardwareProfile> {
+        match name {
+            "ascend-910c" | "910c" => Some(Self::ascend_910c()),
+            "ascend-310" | "310" => Some(Self::ascend_310()),
+            "cpu-pjrt" | "cpu" => Some(Self::cpu_live()),
+            _ => None,
+        }
+    }
+
+    // ----- execution-cost queries (all µs) ---------------------------------
+
+    /// Pre-inference of the long-term prefix (the relay-race side path).
+    pub fn pre_infer_us(&self, spec: &ModelSpec, prefix_len: usize) -> f64 {
+        self.launch_us
+            + spec.prefix_flops(prefix_len) / (self.eff_flops_per_us * self.pre_eff_factor)
+    }
+
+    /// Ranking-on-cache: incremental tokens + candidates over cached ψ.
+    pub fn rank_cached_us(&self, spec: &ModelSpec, prefix_len: usize) -> f64 {
+        self.launch_us + spec.rank_cached_flops(prefix_len) / self.eff_flops_per_us
+    }
+
+    /// Baseline full inline inference.
+    pub fn rank_full_us(&self, spec: &ModelSpec, prefix_len: usize) -> f64 {
+        self.launch_us + spec.full_flops(prefix_len) / self.eff_flops_per_us
+    }
+
+    /// DRAM → HBM reload of a spilled ψ (H2D over PCIe).
+    pub fn load_us(&self, kv_bytes: usize) -> f64 {
+        self.dma_fixed_us + kv_bytes as f64 / self.pcie_bytes_per_us
+    }
+
+    /// HBM → DRAM spill (D2H); same link, issued off the critical path.
+    pub fn spill_us(&self, kv_bytes: usize) -> f64 {
+        self.dma_fixed_us + kv_bytes as f64 / self.pcie_bytes_per_us
+    }
+
+    /// Remote fetch of ψ from another server's pool (the Fig. 12 strawman).
+    pub fn remote_fetch_us(&self, kv_bytes: usize) -> f64 {
+        self.net_rtt_us + kv_bytes as f64 / self.net_bytes_per_us
+    }
+
+    /// CPU-side behaviour/feature processing for `tokens` input tokens.
+    pub fn feature_proc_us(&self, tokens: usize) -> f64 {
+        tokens as f64 / self.cpu_tokens_per_us
+    }
+
+    /// H2D transfer of per-request embeddings.
+    pub fn h2d_embed_us(&self, bytes: usize) -> f64 {
+        self.dma_fixed_us + bytes as f64 / self.pcie_bytes_per_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::ModelSpec;
+
+    #[test]
+    fn paper_sanity_pre_inference_tens_of_ms() {
+        // §3.2 uses "if pre-inference takes 35 ms" as the worked example;
+        // the model lands in the same regime (tens of ms, and fitting the
+        // retrieval+preproc slack at the default 2K setting).
+        let hw = HardwareProfile::ascend_910c();
+        let spec = ModelSpec::paper_default();
+        let pre_ms = hw.pre_infer_us(&spec, 2048) / 1e3;
+        assert!((5.0..50.0).contains(&pre_ms), "pre-infer {pre_ms:.1} ms");
+        // Pre-inference of a 4K prefix still fits the ~70 ms slack.
+        assert!(hw.pre_infer_us(&spec, 4096) / 1e3 < 70.0);
+    }
+
+    #[test]
+    fn paper_sanity_rank_under_ranking_budget() {
+        // §4.3: rank-on-cache below ~10 ms, well under the 50 ms budget.
+        let hw = HardwareProfile::ascend_910c();
+        let spec = ModelSpec::paper_default();
+        let rank_ms = hw.rank_cached_us(&spec, 2048) / 1e3;
+        assert!(rank_ms < 20.0, "rank {rank_ms:.1} ms");
+        // Baseline full inference at 2K can exceed the ranking budget (§4.4).
+        let full_ms = hw.rank_full_us(&spec, 2048) / 1e3;
+        assert!(full_ms > rank_ms * 2.0, "full {full_ms:.1} vs rank {rank_ms:.1}");
+    }
+
+    #[test]
+    fn paper_sanity_load_under_20ms_at_15k() {
+        // §4.3: sequences up to ~15K with load below 20 ms (no concurrency).
+        let hw = HardwareProfile::ascend_910c();
+        let spec = ModelSpec::paper_default();
+        let load_ms = hw.load_us(spec.kv_bytes_for(15 * 1024)) / 1e3;
+        assert!(load_ms < 20.0, "load {load_ms:.2} ms");
+    }
+
+    #[test]
+    fn remote_fetch_is_orders_of_magnitude_slower() {
+        // Fig. 12: remote fetch can be ~100× local-cache access.
+        let hw = HardwareProfile::ascend_910c();
+        let kv = ModelSpec::paper_default().kv_bytes();
+        let remote = hw.remote_fetch_us(kv);
+        // "local access" = in-HBM pointer handoff, modeled as ~launch cost.
+        let local = hw.launch_us;
+        assert!(remote / local > 50.0, "remote/local = {}", remote / local);
+    }
+
+    #[test]
+    fn profiles_ordered_by_capability() {
+        let a910 = HardwareProfile::ascend_910c();
+        let a310 = HardwareProfile::ascend_310();
+        assert!(a910.eff_flops_per_us > 3.0 * a310.eff_flops_per_us);
+        let spec = ModelSpec::paper_default();
+        assert!(a310.rank_full_us(&spec, 2048) > a910.rank_full_us(&spec, 2048));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["ascend-910c", "ascend-310", "cpu-pjrt"] {
+            assert_eq!(HardwareProfile::by_name(n).unwrap().name, n);
+        }
+        assert!(HardwareProfile::by_name("h100").is_none());
+    }
+}

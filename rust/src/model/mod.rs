@@ -1,0 +1,7 @@
+//! Model variant descriptors and the analytic hardware cost model.
+
+pub mod cost;
+pub mod spec;
+
+pub use cost::HardwareProfile;
+pub use spec::{Dtype, ModelSpec, ModelType};

@@ -1,0 +1,235 @@
+//! Model-variant descriptors mirroring `python/compile/configs.py`.
+//!
+//! A [`ModelSpec`] fully determines the static-shape bucket of one GR
+//! backbone variant: tensor shapes, ψ footprint (Table 1), and FLOP
+//! counts for each of the three entry points (prefix / rank / full).
+
+/// GR model family, matching the paper's Fig. 15a.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelType {
+    /// Type 1 — HSTU (SiLU pointwise attention).
+    Hstu,
+    /// Type 2 — revised HSTU: differs only in the attention computation.
+    HstuRev,
+    /// Type 3 — LONGER-style cached backbone + RankMixer-style DLRM tower.
+    LongerRankMixer,
+}
+
+impl ModelType {
+    pub fn from_index(i: usize) -> Option<ModelType> {
+        match i {
+            1 => Some(ModelType::Hstu),
+            2 => Some(ModelType::HstuRev),
+            3 => Some(ModelType::LongerRankMixer),
+            _ => None,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            ModelType::Hstu => 1,
+            ModelType::HstuRev => 2,
+            ModelType::LongerRankMixer => 3,
+        }
+    }
+}
+
+/// Numeric format of activations / ψ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    F16,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F16 => 2,
+        }
+    }
+}
+
+/// One static-shape GR backbone variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModelSpec {
+    pub model_type: ModelType,
+    pub layers: usize,
+    pub dim: usize,
+    pub heads: usize,
+    /// S_l — long-term behaviour prefix tokens (the cached part).
+    pub prefix_len: usize,
+    /// S̃_l — short-term behaviours + cross features.
+    pub incr_len: usize,
+    /// |I| — candidate items scored per request.
+    pub num_items: usize,
+    pub dtype: Dtype,
+}
+
+impl ModelSpec {
+    /// The paper's default setting (Table 1): 8 layers, dim 256, fp32,
+    /// 2K prefix — ψ = 32 MiB.
+    pub fn paper_default() -> ModelSpec {
+        ModelSpec {
+            model_type: ModelType::Hstu,
+            layers: 8,
+            dim: 256,
+            heads: 4,
+            prefix_len: 2048,
+            incr_len: 64,
+            num_items: 512,
+            dtype: Dtype::F32,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.prefix_len + self.incr_len + self.num_items
+    }
+
+    pub fn items_start(&self) -> usize {
+        self.prefix_len + self.incr_len
+    }
+
+    /// ψ footprint in bytes: per-layer K and V over the prefix.
+    ///
+    /// Table 1: 8 × 2 × 2048 × 256 × 4 B = 32 MiB.
+    pub fn kv_bytes(&self) -> usize {
+        self.layers * 2 * self.prefix_len * self.dim * self.dtype.bytes()
+    }
+
+    /// ψ footprint for an arbitrary prefix length (requests shorter than
+    /// the bucket still produce bucket-shaped caches in live mode, but the
+    /// simulator accounts true lengths).
+    pub fn kv_bytes_for(&self, prefix_len: usize) -> usize {
+        self.layers * 2 * prefix_len * self.dim * self.dtype.bytes()
+    }
+
+    /// Per-request host→device embedding payload: every input token is a
+    /// dim-wide row fetched from the embedding service (tens of MB per
+    /// request at production dims, per §2.4(3)).
+    pub fn embed_bytes(&self, tokens: usize) -> usize {
+        tokens * self.dim * self.dtype.bytes()
+    }
+
+    // ----- FLOP accounting -------------------------------------------------
+    //
+    // Per HSTU layer computing `s_new` rows against `s_kv` keys:
+    //   projections (Q,K,V,U):   4 · 2 · s_new · D²
+    //   attention  (QKᵀ + AV):   2 · 2 · s_new · s_kv · D
+    //   output proj:                 2 · s_new · D²
+    // ⇒ 10·s_new·D² + 4·s_new·s_kv·D  per layer.
+
+    fn layer_flops(&self, s_new: usize, s_kv: usize) -> f64 {
+        let d = self.dim as f64;
+        let sn = s_new as f64;
+        let sk = s_kv as f64;
+        10.0 * sn * d * d + 4.0 * sn * sk * d
+    }
+
+    fn tower_flops(&self) -> f64 {
+        let d = self.dim as f64;
+        let n = self.num_items as f64;
+        match self.model_type {
+            // RankMixer-style: mixing layer + [D→4D→4D→1] MLP.
+            ModelType::LongerRankMixer => n * (2.0 * d * d + 2.0 * d * 4.0 * d + 2.0 * 16.0 * d * d / 4.0 + 8.0 * d),
+            // [D→2D→1] MLP.
+            _ => n * (2.0 * d * 2.0 * d + 4.0 * d),
+        }
+    }
+
+    /// FLOPs of pre-inference over a `prefix_len`-token prefix.
+    pub fn prefix_flops(&self, prefix_len: usize) -> f64 {
+        self.layers as f64 * self.layer_flops(prefix_len, prefix_len)
+    }
+
+    /// FLOPs of ranking-on-cache: incremental + item rows over the full span.
+    pub fn rank_cached_flops(&self, prefix_len: usize) -> f64 {
+        let s_new = self.incr_len + self.num_items;
+        let s_kv = prefix_len + s_new;
+        self.layers as f64 * self.layer_flops(s_new, s_kv) + self.tower_flops()
+    }
+
+    /// FLOPs of baseline full inline inference.
+    pub fn full_flops(&self, prefix_len: usize) -> f64 {
+        let s_tot = prefix_len + self.incr_len + self.num_items;
+        self.layers as f64 * self.layer_flops(s_tot, s_tot) + self.tower_flops()
+    }
+
+    /// Artifact base name, matching `configs.ModelConfig.name`.
+    pub fn name(&self) -> String {
+        format!(
+            "t{}_L{}_D{}_H{}_S{}_I{}_N{}",
+            self.model_type.index(),
+            self.layers,
+            self.dim,
+            self.heads,
+            self.prefix_len,
+            self.incr_len,
+            self.num_items
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_kv_footprint_is_32mb() {
+        let spec = ModelSpec::paper_default();
+        assert_eq!(spec.kv_bytes(), 32 * 1024 * 1024, "Table 1: ψ = 32 MB");
+    }
+
+    #[test]
+    fn kv_scales_linearly_in_len_layers_dim() {
+        let base = ModelSpec::paper_default();
+        let mut twice_len = base;
+        twice_len.prefix_len *= 2;
+        assert_eq!(twice_len.kv_bytes(), base.kv_bytes() * 2);
+        let mut twice_layers = base;
+        twice_layers.layers *= 2;
+        assert_eq!(twice_layers.kv_bytes(), base.kv_bytes() * 2);
+        let mut fp16 = base;
+        fp16.dtype = Dtype::F16;
+        assert_eq!(fp16.kv_bytes(), base.kv_bytes() / 2);
+    }
+
+    #[test]
+    fn flops_decomposition_consistent() {
+        let spec = ModelSpec::paper_default();
+        let s = spec.prefix_len;
+        // full > prefix + cached-rank contributions must cover overlap:
+        // prefix rows in full attend the same columns, so
+        // full ≈ prefix-part (but over wider kv) + rank-part.
+        assert!(spec.full_flops(s) > spec.prefix_flops(s));
+        assert!(spec.full_flops(s) > spec.rank_cached_flops(s));
+        // Removing the prefix from the critical path saves the dominant part.
+        let saved = spec.full_flops(s) - spec.rank_cached_flops(s);
+        assert!(saved / spec.full_flops(s) > 0.5, "prefix dominates compute");
+    }
+
+    #[test]
+    fn attention_grows_superlinearly_load_linearly() {
+        let spec = ModelSpec::paper_default();
+        let f1 = spec.prefix_flops(2048);
+        let f2 = spec.prefix_flops(4096);
+        assert!(f2 / f1 > 2.5, "attention quadratic term should dominate");
+        assert_eq!(spec.kv_bytes_for(4096), spec.kv_bytes_for(2048) * 2);
+    }
+
+    #[test]
+    fn name_matches_python_convention() {
+        let mut spec = ModelSpec::paper_default();
+        spec.layers = 2;
+        spec.dim = 64;
+        spec.heads = 2;
+        spec.prefix_len = 512;
+        spec.incr_len = 64;
+        spec.num_items = 128;
+        assert_eq!(spec.name(), "t1_L2_D64_H2_S512_I64_N128");
+    }
+}

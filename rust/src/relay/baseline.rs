@@ -1,0 +1,89 @@
+//! Serving modes and the Fig.-12 strawman: a distributed KV pool without
+//! affinity, where ranking may need cross-server cache fetches.
+
+use crate::model::HardwareProfile;
+use crate::relay::expander::DramPolicy;
+
+/// Which serving policy a run evaluates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    /// Production baseline: full GR inference inline at ranking.
+    Baseline,
+    /// RelayGR in-HBM relay race; DRAM tier per policy (Disabled = the
+    /// paper's plain "RelayGR", Capacity = "RelayGR +x%").
+    RelayGr { dram: DramPolicy },
+    /// Strawman for Fig. 12: prefix caches live in a distributed pool
+    /// without affinity; a ranking instance holding the cache locally is
+    /// a matter of luck (1/N), otherwise it fetches remotely.
+    RemotePool,
+}
+
+impl Mode {
+    pub fn label(&self) -> String {
+        match self {
+            Mode::Baseline => "baseline".into(),
+            Mode::RelayGr { dram: DramPolicy::Disabled } => "relaygr".into(),
+            Mode::RelayGr { dram: DramPolicy::Capacity(b) } => {
+                format!("relaygr+dram{}g", b >> 30)
+            }
+            Mode::RemotePool => "remote-pool".into(),
+        }
+    }
+
+    pub fn is_relay(&self) -> bool {
+        matches!(self, Mode::RelayGr { .. })
+    }
+}
+
+/// Distributed-pool access model (Fig. 12): local hits are HBM pointer
+/// handoffs; misses pay RTT + transfer over the shared network.
+#[derive(Debug, Clone)]
+pub struct RemotePool {
+    pub n_servers: usize,
+}
+
+impl RemotePool {
+    /// Probability the pool shard holding ψ is the local server.
+    pub fn local_probability(&self) -> f64 {
+        1.0 / self.n_servers.max(1) as f64
+    }
+
+    /// Latency of fetching ψ when it is remote.
+    pub fn remote_fetch_us(&self, hw: &HardwareProfile, kv_bytes: usize) -> f64 {
+        hw.remote_fetch_us(kv_bytes)
+    }
+
+    /// Latency of a local pool access (in-HBM handoff).
+    pub fn local_access_us(&self, hw: &HardwareProfile) -> f64 {
+        hw.launch_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+
+    #[test]
+    fn labels_distinguish_variants() {
+        assert_eq!(Mode::Baseline.label(), "baseline");
+        assert_eq!(Mode::RelayGr { dram: DramPolicy::Disabled }.label(), "relaygr");
+        assert_eq!(
+            Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) }.label(),
+            "relaygr+dram500g"
+        );
+        assert!(Mode::RelayGr { dram: DramPolicy::Disabled }.is_relay());
+        assert!(!Mode::Baseline.is_relay());
+    }
+
+    #[test]
+    fn remote_fetch_dwarfs_local_access() {
+        // Fig. 12: remote fetch is orders of magnitude above local access.
+        let hw = HardwareProfile::ascend_910c();
+        let pool = RemotePool { n_servers: 25 };
+        let kv = ModelSpec::paper_default().kv_bytes();
+        let ratio = pool.remote_fetch_us(&hw, kv) / pool.local_access_us(&hw);
+        assert!(ratio > 50.0, "ratio {ratio:.0}");
+        assert!((pool.local_probability() - 0.04).abs() < 1e-12);
+    }
+}

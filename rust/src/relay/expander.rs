@@ -1,0 +1,512 @@
+//! Memory-aware expander (§3.4): server-local DRAM as a controlled
+//! compensation tier extending ψ reuse across repeated requests from the
+//! same user (rapid refresh), without violating the no-remote-fetch
+//! invariant (I1).
+//!
+//! Mechanisms reproduced from the paper:
+//!
+//! * **Two-level lookup** — HBM first, DRAM on miss; a DRAM hit triggers
+//!   one rate-limited DRAM→HBM reload (H2D).
+//! * **Per-user single-flight** — at most one cache-affecting action per
+//!   user in flight; concurrent requests join the in-flight reload.
+//! * **Pseudo-pre-inference** — every ranking request is fronted by an
+//!   idempotent pseudo step performing the same checks as real
+//!   pre-inference, so out-of-order arrivals (pre-infer delayed behind
+//!   ranking) cause at most one reload per user per burst.
+//! * **Bounded reload concurrency** — reloads above the cap queue rather
+//!   than flooding PCIe.
+//!
+//! Like [`HbmCache`], the expander is payload-generic and clock-agnostic
+//! (callers pass `now_us` and perform the actual H2D), so the simulator
+//! and the live engine share it.
+
+use std::collections::VecDeque;
+
+use crate::util::fxhash::FxHashMap;
+
+use crate::relay::hbm::{EntryState, HbmCache, Micros};
+
+/// DRAM spill-tier policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DramPolicy {
+    /// No DRAM tier (plain RelayGR, 0% DRAM hit).
+    Disabled,
+    /// True capacity-bounded LRU tier (bytes).
+    Capacity(usize),
+}
+
+/// What the pseudo-pre-infer step decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PseudoAction {
+    /// ψ is in HBM (Ready or Consumed-but-resident): proceed directly.
+    HbmHit,
+    /// ψ is still being produced in HBM: wait for production to finish.
+    WaitProducing,
+    /// DRAM hit; this caller starts the one reload (caller performs the
+    /// H2D and calls [`Expander::complete_reload`] when done).
+    StartReload { bytes: usize },
+    /// DRAM hit but a reload for this user is already in flight (or
+    /// queued): join it, do not issue another transfer.
+    JoinReload,
+    /// DRAM hit but the reload-concurrency cap is reached: the reload is
+    /// queued; caller waits for [`Expander::pop_queued_reload`] turn.
+    QueuedReload,
+    /// Not cached anywhere: fall back (full inference or real pre-infer).
+    Miss,
+}
+
+/// Counters exported to metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExpanderStats {
+    pub lookups: u64,
+    pub hbm_hits: u64,
+    pub dram_hits: u64,
+    pub misses: u64,
+    pub reloads_started: u64,
+    pub reloads_joined: u64,
+    pub reloads_queued: u64,
+    pub spills: u64,
+    pub spill_rejected: u64,
+    pub dram_evictions: u64,
+}
+
+#[derive(Debug)]
+struct DramEntry<T> {
+    bytes: usize,
+    payload: T,
+    last_used: u64,
+}
+
+/// Server-local DRAM tier with LRU eviction.
+#[derive(Debug)]
+pub struct DramTier<T> {
+    capacity: usize,
+    used: usize,
+    entries: FxHashMap<u64, DramEntry<T>>,
+    tick: u64,
+    evictions: u64,
+}
+
+impl<T> DramTier<T> {
+    pub fn new(capacity: usize) -> Self {
+        DramTier { capacity, used: 0, entries: FxHashMap::default(), tick: 0, evictions: 0 }
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, user: u64) -> bool {
+        self.entries.contains_key(&user)
+    }
+
+    fn touch(&mut self, user: u64) {
+        self.tick += 1;
+        let t = self.tick;
+        if let Some(e) = self.entries.get_mut(&user) {
+            e.last_used = t;
+        }
+    }
+
+    /// Insert (replacing any previous entry), LRU-evicting to fit.
+    /// Returns false if the object cannot fit at all.
+    fn insert(&mut self, user: u64, bytes: usize, payload: T) -> bool {
+        if bytes > self.capacity {
+            return false;
+        }
+        if let Some(old) = self.entries.remove(&user) {
+            self.used -= old.bytes;
+        }
+        while self.used + bytes > self.capacity {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&u, _)| u)
+                .expect("used>0 implies entries");
+            let e = self.entries.remove(&lru).unwrap();
+            self.used -= e.bytes;
+            self.evictions += 1;
+        }
+        self.tick += 1;
+        self.entries.insert(user, DramEntry { bytes, payload, last_used: self.tick });
+        self.used += bytes;
+        true
+    }
+
+    fn remove(&mut self, user: u64) -> Option<(usize, T)> {
+        self.entries.remove(&user).map(|e| {
+            self.used -= e.bytes;
+            (e.bytes, e.payload)
+        })
+    }
+}
+
+impl<T: Clone> DramTier<T> {
+    fn get(&mut self, user: u64) -> Option<(usize, T)> {
+        self.touch(user);
+        self.entries.get(&user).map(|e| (e.bytes, e.payload.clone()))
+    }
+}
+
+/// The memory-aware expander.
+#[derive(Debug)]
+pub struct Expander<T> {
+    dram: Option<DramTier<T>>,
+    /// Users with a reload in flight (single-flight) and join counts.
+    inflight: FxHashMap<u64, u32>,
+    /// Reloads waiting for a concurrency slot, FIFO.
+    queued: VecDeque<u64>,
+    active_reloads: usize,
+    max_reload_concurrency: usize,
+    stats: ExpanderStats,
+}
+
+impl<T: Clone> Expander<T> {
+    pub fn new(policy: DramPolicy, max_reload_concurrency: usize) -> Self {
+        let dram = match policy {
+            DramPolicy::Disabled => None,
+            DramPolicy::Capacity(bytes) => Some(DramTier::new(bytes)),
+        };
+        Expander {
+            dram,
+            inflight: FxHashMap::default(),
+            queued: VecDeque::new(),
+            active_reloads: 0,
+            max_reload_concurrency: max_reload_concurrency.max(1),
+            stats: ExpanderStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> ExpanderStats {
+        self.stats
+    }
+
+    pub fn dram_used_bytes(&self) -> usize {
+        self.dram.as_ref().map(|d| d.used_bytes()).unwrap_or(0)
+    }
+
+    pub fn dram_len(&self) -> usize {
+        self.dram.as_ref().map(|d| d.len()).unwrap_or(0)
+    }
+
+    pub fn active_reloads(&self) -> usize {
+        self.active_reloads
+    }
+
+    pub fn inflight_for(&self, user: u64) -> bool {
+        self.inflight.contains_key(&user)
+    }
+
+    /// The pseudo-pre-infer step fronting every ranking request (and also
+    /// used by real pre-infer signals to skip redundant recomputation).
+    pub fn pseudo_pre_infer(
+        &mut self,
+        user: u64,
+        hbm: &mut HbmCache<T>,
+        now: Micros,
+    ) -> PseudoAction {
+        self.stats.lookups += 1;
+        match hbm.probe(user, now) {
+            Some(EntryState::Ready) | Some(EntryState::Consumed) => {
+                self.stats.hbm_hits += 1;
+                return PseudoAction::HbmHit;
+            }
+            Some(EntryState::Producing) => {
+                self.stats.hbm_hits += 1;
+                return PseudoAction::WaitProducing;
+            }
+            None => {}
+        }
+        // Single-flight: join any in-flight/queued reload for this user.
+        if let Some(joiners) = self.inflight.get_mut(&user) {
+            *joiners += 1;
+            self.stats.reloads_joined += 1;
+            return PseudoAction::JoinReload;
+        }
+        let Some(dram) = self.dram.as_mut() else {
+            self.stats.misses += 1;
+            return PseudoAction::Miss;
+        };
+        let Some((bytes, _payload)) = dram.get(user) else {
+            self.stats.misses += 1;
+            return PseudoAction::Miss;
+        };
+        self.stats.dram_hits += 1;
+        self.inflight.insert(user, 0);
+        if self.active_reloads < self.max_reload_concurrency {
+            self.active_reloads += 1;
+            self.stats.reloads_started += 1;
+            PseudoAction::StartReload { bytes }
+        } else {
+            self.queued.push_back(user);
+            self.stats.reloads_queued += 1;
+            PseudoAction::QueuedReload
+        }
+    }
+
+    /// Read the payload for a user whose reload is starting (the caller
+    /// performs the H2D from this host copy).
+    pub fn dram_payload(&mut self, user: u64) -> Option<(usize, T)> {
+        self.dram.as_mut().and_then(|d| d.get(user))
+    }
+
+    /// The H2D finished: install ψ into HBM as Ready, release the
+    /// single-flight guard, and return (a) how many waiters were joined to
+    /// this reload and (b) the next queued user now allowed to start (the
+    /// caller begins its transfer).
+    pub fn complete_reload(
+        &mut self,
+        user: u64,
+        payload: T,
+        bytes: usize,
+        now: Micros,
+        t_life_us: Micros,
+        hbm: &mut HbmCache<T>,
+    ) -> ReloadDone {
+        let (joiners, next) = self.finish_reload(user);
+        let installed = hbm.insert_ready(user, bytes, payload, now, t_life_us).is_ok();
+        ReloadDone { joiners, installed, next }
+    }
+
+    /// Release single-flight/concurrency bookkeeping for a finished reload
+    /// *without* touching HBM — used by the live engine, whose HBM cache
+    /// holds device buffers while the DRAM tier holds host copies.
+    pub fn finish_reload(&mut self, user: u64) -> (u32, Option<u64>) {
+        let joiners = self.inflight.remove(&user).unwrap_or(0);
+        self.active_reloads = self.active_reloads.saturating_sub(1);
+        (joiners, self.pop_queued_reload())
+    }
+
+    /// Pull the next queued reload if a concurrency slot is free.
+    /// Returns the user whose transfer should start now.
+    pub fn pop_queued_reload(&mut self) -> Option<u64> {
+        if self.active_reloads >= self.max_reload_concurrency {
+            return None;
+        }
+        let user = self.queued.pop_front()?;
+        self.active_reloads += 1;
+        self.stats.reloads_started += 1;
+        Some(user)
+    }
+
+    /// A reload failed (e.g. payload evicted from DRAM mid-flight):
+    /// release guards so waiters can fall back.
+    pub fn abort_reload(&mut self, user: u64) -> Option<u64> {
+        self.inflight.remove(&user);
+        self.active_reloads = self.active_reloads.saturating_sub(1);
+        self.pop_queued_reload()
+    }
+
+    /// After ranking consumed ψ, spill it to DRAM for short-term reuse.
+    pub fn spill(&mut self, user: u64, bytes: usize, payload: T) -> bool {
+        let Some(dram) = self.dram.as_mut() else {
+            self.stats.spill_rejected += 1;
+            return false;
+        };
+        let before = dram.evictions;
+        let ok = dram.insert(user, bytes, payload);
+        self.stats.dram_evictions += dram.evictions - before;
+        if ok {
+            self.stats.spills += 1;
+        } else {
+            self.stats.spill_rejected += 1;
+        }
+        ok
+    }
+
+    /// Drop a user's DRAM entry (e.g. behaviours were refreshed upstream
+    /// and the cached prefix is stale).
+    pub fn invalidate(&mut self, user: u64) -> bool {
+        self.dram.as_mut().and_then(|d| d.remove(user)).is_some()
+    }
+}
+
+/// Result of [`Expander::complete_reload`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReloadDone {
+    /// Ranking requests that joined this reload instead of re-transferring.
+    pub joiners: u32,
+    /// Whether ψ was installed into HBM (false ⇒ HBM pressure; fall back).
+    pub installed: bool,
+    /// Next queued reload now permitted to start, if any.
+    pub next: Option<u64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: usize = 1 << 20;
+
+    fn setup(dram_mb: usize) -> (Expander<u32>, HbmCache<u32>) {
+        (Expander::new(DramPolicy::Capacity(dram_mb * MB), 2), HbmCache::new(64 * MB))
+    }
+
+    #[test]
+    fn two_level_lookup_order() {
+        let (mut ex, mut hbm) = setup(512);
+        // Nothing anywhere → Miss.
+        assert_eq!(ex.pseudo_pre_infer(1, &mut hbm, 0), PseudoAction::Miss);
+        // In HBM → HbmHit (DRAM not consulted).
+        hbm.insert_ready(1, MB, 7, 0, 300_000).unwrap();
+        assert_eq!(ex.pseudo_pre_infer(1, &mut hbm, 0), PseudoAction::HbmHit);
+        // Only in DRAM → StartReload.
+        ex.spill(2, MB, 9);
+        assert_eq!(ex.pseudo_pre_infer(2, &mut hbm, 0), PseudoAction::StartReload { bytes: MB });
+        let s = ex.stats();
+        assert_eq!((s.misses, s.hbm_hits, s.dram_hits), (1, 1, 1));
+    }
+
+    #[test]
+    fn wait_for_producing_entry() {
+        let (mut ex, mut hbm) = setup(512);
+        hbm.begin_produce(1, MB, 0, 300_000).unwrap();
+        assert_eq!(ex.pseudo_pre_infer(1, &mut hbm, 0), PseudoAction::WaitProducing);
+    }
+
+    #[test]
+    fn single_flight_joins_burst() {
+        // Out-of-order burst: three ranking requests for the same user
+        // arrive before the (delayed) real pre-infer. Exactly one reload.
+        let (mut ex, mut hbm) = setup(512);
+        ex.spill(5, 2 * MB, 42);
+        assert_eq!(ex.pseudo_pre_infer(5, &mut hbm, 0), PseudoAction::StartReload { bytes: 2 * MB });
+        assert_eq!(ex.pseudo_pre_infer(5, &mut hbm, 0), PseudoAction::JoinReload);
+        assert_eq!(ex.pseudo_pre_infer(5, &mut hbm, 0), PseudoAction::JoinReload);
+        let done = ex.complete_reload(5, 42, 2 * MB, 10, 300_000, &mut hbm);
+        assert_eq!(done.joiners, 2);
+        assert!(done.installed);
+        assert_eq!(done.next, None);
+        // Everyone now hits HBM; at-most-once reload per burst.
+        assert_eq!(ex.pseudo_pre_infer(5, &mut hbm, 0), PseudoAction::HbmHit);
+        assert_eq!(ex.stats().reloads_started, 1);
+    }
+
+    #[test]
+    fn reload_concurrency_bounded_and_fifo() {
+        let (mut ex, mut hbm) = setup(512);
+        for u in 1..=4u64 {
+            ex.spill(u, MB, u as u32);
+        }
+        assert!(matches!(ex.pseudo_pre_infer(1, &mut hbm, 0), PseudoAction::StartReload { .. }));
+        assert!(matches!(ex.pseudo_pre_infer(2, &mut hbm, 0), PseudoAction::StartReload { .. }));
+        // Cap = 2: further reloads queue.
+        assert_eq!(ex.pseudo_pre_infer(3, &mut hbm, 0), PseudoAction::QueuedReload);
+        assert_eq!(ex.pseudo_pre_infer(4, &mut hbm, 0), PseudoAction::QueuedReload);
+        assert_eq!(ex.active_reloads(), 2);
+        // Completing one grants the slot to user 3 (FIFO).
+        let done = ex.complete_reload(1, 1, MB, 5, 300_000, &mut hbm);
+        assert_eq!(done.next, Some(3));
+        assert_eq!(ex.active_reloads(), 2);
+        let done = ex.complete_reload(2, 2, MB, 6, 300_000, &mut hbm);
+        assert_eq!(done.next, Some(4));
+    }
+
+    #[test]
+    fn spill_lru_eviction() {
+        let mut ex: Expander<u32> = Expander::new(DramPolicy::Capacity(3 * MB), 1);
+        let mut hbm: HbmCache<u32> = HbmCache::new(64 * MB);
+        ex.spill(1, MB, 1);
+        ex.spill(2, MB, 2);
+        ex.spill(3, MB, 3);
+        // Touch 1 so 2 becomes LRU, then overflow.
+        assert!(matches!(ex.pseudo_pre_infer(1, &mut hbm, 0), PseudoAction::StartReload { .. }));
+        ex.complete_reload(1, 1, MB, 0, 300_000, &mut hbm);
+        ex.spill(4, MB, 4);
+        assert_eq!(ex.dram_len(), 3);
+        assert_eq!(ex.stats().dram_evictions, 1);
+        // 2 was evicted; 3 and 4 remain.
+        assert!(ex.dram_payload(2).is_none());
+        assert!(ex.dram_payload(3).is_some());
+        assert!(ex.dram_payload(4).is_some());
+    }
+
+    #[test]
+    fn disabled_dram_always_misses_and_rejects_spills() {
+        let mut ex: Expander<u32> = Expander::new(DramPolicy::Disabled, 4);
+        let mut hbm: HbmCache<u32> = HbmCache::new(64 * MB);
+        assert!(!ex.spill(1, MB, 1));
+        assert_eq!(ex.pseudo_pre_infer(1, &mut hbm, 0), PseudoAction::Miss);
+        assert_eq!(ex.stats().spill_rejected, 1);
+    }
+
+    #[test]
+    fn abort_releases_slot() {
+        let (mut ex, mut hbm) = setup(512);
+        ex.spill(1, MB, 1);
+        ex.spill(2, MB, 2);
+        let mut ex2 = Expander::new(DramPolicy::Capacity(512 * MB), 1);
+        ex2.spill(1, MB, 1u32);
+        ex2.spill(2, MB, 2u32);
+        assert!(matches!(ex2.pseudo_pre_infer(1, &mut hbm, 0), PseudoAction::StartReload { .. }));
+        assert_eq!(ex2.pseudo_pre_infer(2, &mut hbm, 0), PseudoAction::QueuedReload);
+        assert_eq!(ex2.abort_reload(1), Some(2));
+        assert_eq!(ex2.active_reloads(), 1);
+        let _ = ex; // silence unused in this scenario
+    }
+
+    #[test]
+    fn invalidate_removes_stale_prefix() {
+        let (mut ex, mut hbm) = setup(512);
+        ex.spill(9, MB, 1);
+        assert!(ex.invalidate(9));
+        assert_eq!(ex.pseudo_pre_infer(9, &mut hbm, 0), PseudoAction::Miss);
+        assert!(!ex.invalidate(9));
+    }
+
+    /// Property: random interleavings never issue concurrent reloads for
+    /// one user, never exceed the concurrency cap, and each burst causes
+    /// at most one transfer.
+    #[test]
+    fn prop_single_flight_and_bounded_concurrency() {
+        crate::util::prop::check("expander-single-flight", 150, |rng| {
+            let cap = 1 + rng.range(0, 3);
+            let mut ex: Expander<u32> = Expander::new(DramPolicy::Capacity(1 << 30), cap);
+            let mut hbm: HbmCache<u32> = HbmCache::new(1 << 30);
+            let users: Vec<u64> = (0..6).collect();
+            for &u in &users {
+                ex.spill(u, MB, u as u32);
+            }
+            let mut inflight: Vec<u64> = Vec::new();
+            for step in 0..300 {
+                let u = *rng.choice(&users);
+                if rng.bernoulli(0.6) {
+                    match ex.pseudo_pre_infer(u, &mut hbm, 0) {
+                        PseudoAction::StartReload { .. } => {
+                            if inflight.contains(&u) {
+                                return Err(format!("step {step}: duplicate reload for {u}"));
+                            }
+                            inflight.push(u);
+                        }
+                        PseudoAction::QueuedReload => {}
+                        _ => {}
+                    }
+                } else if let Some(pos) = (!inflight.is_empty())
+                    .then(|| rng.range(0, inflight.len()))
+                {
+                    let u = inflight.remove(pos);
+                    let done = ex.complete_reload(u, 0, MB, step as u64, 1 << 40, &mut hbm);
+                    if let Some(next) = done.next {
+                        if inflight.contains(&next) {
+                            return Err("queued duplicate".into());
+                        }
+                        inflight.push(next);
+                    }
+                }
+                if ex.active_reloads() > cap {
+                    return Err(format!("active {} > cap {cap}", ex.active_reloads()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,492 @@
+//! HBM sliding-window lifecycle cache (Fig. 10).
+//!
+//! Per-user prefix caches ψ are *inserted* by pre-inference, *consumed*
+//! by ranking, and *evicted* as new admitted users arrive.  Admission
+//! control (the sequence-aware trigger) bounds the live footprint so the
+//! window always covers one request lifecycle T_life; this module
+//! enforces the capacity invariant locally and reports violations (a
+//! cache evicted before consumption counts as `lost` — it forces the
+//! consumer to fall back, never to fetch remotely: invariant I1).
+//!
+//! The cache is generic over the payload so the discrete-event simulator
+//! (`T = ()`) and the live engine (`T = Arc<KvBuffer>`) share one
+//! implementation and one test suite.
+
+use std::collections::VecDeque;
+
+use crate::util::fxhash::FxHashMap;
+
+pub type Micros = u64;
+
+/// Lifecycle state of one per-user entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryState {
+    /// Pre-inference running; space reserved, payload not yet available.
+    Producing,
+    /// ψ resident and consumable.
+    Ready,
+    /// Consumed by ranking; evictable (and spillable to DRAM).
+    Consumed,
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    bytes: usize,
+    state: EntryState,
+    /// Entries older than this are expired (lifecycle over).
+    deadline_us: Micros,
+    /// Insertion sequence number; pairs entries with their `order` slot
+    /// so removal can tombstone instead of scanning (perf: the O(n)
+    /// `VecDeque::retain` dominated churn at production window sizes).
+    seq: u64,
+    payload: Option<T>,
+}
+
+/// Why an insert was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InsertError {
+    /// Live (unexpired, unconsumed) caches fill the reserved footprint —
+    /// the admission controller is overcommitting if this fires.
+    CapacityExhausted,
+    /// Entry larger than the whole reserved footprint.
+    TooLarge,
+}
+
+/// Counters exported to metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HbmStats {
+    pub inserts: u64,
+    pub ready_hits: u64,
+    pub producing_hits: u64,
+    pub misses: u64,
+    pub consumed: u64,
+    pub evicted_consumed: u64,
+    pub evicted_expired: u64,
+    /// Unconsumed live entries evicted under pressure (should be ~0 when
+    /// admission control is correctly configured).
+    pub lost: u64,
+    pub rejected: u64,
+}
+
+/// Sliding-window HBM cache with a byte-capacity bound.
+#[derive(Debug)]
+pub struct HbmCache<T> {
+    capacity_bytes: usize,
+    used_bytes: usize,
+    entries: FxHashMap<u64, Entry<T>>,
+    /// Insertion order as (seq, user); stale pairs (whose seq no longer
+    /// matches the live entry) are tombstones skipped during eviction.
+    order: VecDeque<(u64, u64)>,
+    next_seq: u64,
+    stats: HbmStats,
+}
+
+impl<T> HbmCache<T> {
+    /// `capacity_bytes` is the r1·HBM slice reserved for live caches (Eq. 2).
+    pub fn new(capacity_bytes: usize) -> Self {
+        HbmCache {
+            capacity_bytes,
+            used_bytes: 0,
+            entries: FxHashMap::default(),
+            order: VecDeque::new(),
+            next_seq: 0,
+            stats: HbmStats::default(),
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> HbmStats {
+        self.stats
+    }
+
+    /// Number of live (Producing|Ready) entries — the paper's L (Eq. 1).
+    pub fn live(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|e| matches!(e.state, EntryState::Producing | EntryState::Ready))
+            .count()
+    }
+
+    fn remove_user(&mut self, user: u64) -> Option<Entry<T>> {
+        if let Some(e) = self.entries.remove(&user) {
+            self.used_bytes -= e.bytes;
+            // The order slot becomes a tombstone (seq mismatch) and is
+            // skipped lazily during eviction — O(1) removal.
+            Some(e)
+        } else {
+            None
+        }
+    }
+
+    /// Is the front order slot a tombstone? Pop it if so.
+    fn pop_stale_front(&mut self) -> bool {
+        if let Some(&(seq, user)) = self.order.front() {
+            let stale = self.entries.get(&user).map(|e| e.seq) != Some(seq);
+            if stale {
+                self.order.pop_front();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Evict until `need` bytes are free.  Order: consumed (oldest first),
+    /// then expired, then — only if `allow_lost` — live unexpired entries.
+    fn make_room(&mut self, need: usize, now: Micros, allow_lost: bool) -> bool {
+        if need > self.capacity_bytes {
+            return false;
+        }
+        // The window slides oldest-first: walk from the front, reclaiming
+        // consumed/expired entries (lifecycle order means they cluster at
+        // the front); stop at the first live, unexpired entry.
+        while self.capacity_bytes - self.used_bytes < need {
+            if self.pop_stale_front() {
+                continue;
+            }
+            let Some(&(_, user)) = self.order.front() else { break };
+            let e = &self.entries[&user];
+            if e.state == EntryState::Consumed {
+                self.remove_user(user);
+                self.order.pop_front();
+                self.stats.evicted_consumed += 1;
+            } else if e.deadline_us <= now {
+                // Expired — including a Producing entry whose pre-inference
+                // overran its lifecycle (complete_produce then reports the
+                // lost work).
+                self.remove_user(user);
+                self.order.pop_front();
+                self.stats.evicted_expired += 1;
+            } else if allow_lost {
+                self.remove_user(user);
+                self.order.pop_front();
+                self.stats.lost += 1;
+            } else {
+                break;
+            }
+        }
+        self.capacity_bytes - self.used_bytes >= need
+    }
+
+    /// Reserve space for a pre-inference about to run (trigger admitted).
+    pub fn begin_produce(
+        &mut self,
+        user: u64,
+        bytes: usize,
+        now: Micros,
+        t_life_us: Micros,
+    ) -> Result<(), InsertError> {
+        if bytes > self.capacity_bytes {
+            self.stats.rejected += 1;
+            return Err(InsertError::TooLarge);
+        }
+        // Re-admitting the same user replaces the previous entry.
+        self.remove_user(user);
+        if !self.make_room(bytes, now, false) {
+            self.stats.rejected += 1;
+            return Err(InsertError::CapacityExhausted);
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.entries.insert(
+            user,
+            Entry {
+                bytes,
+                state: EntryState::Producing,
+                deadline_us: now + t_life_us,
+                seq,
+                payload: None,
+            },
+        );
+        self.order.push_back((seq, user));
+        self.used_bytes += bytes;
+        self.stats.inserts += 1;
+        Ok(())
+    }
+
+    /// Pre-inference finished: attach ψ and mark Ready.
+    /// Returns false if the entry was evicted meanwhile (lost).
+    pub fn complete_produce(&mut self, user: u64, payload: T) -> bool {
+        match self.entries.get_mut(&user) {
+            Some(e) if e.state == EntryState::Producing => {
+                e.payload = Some(payload);
+                e.state = EntryState::Ready;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Insert an already-materialised ψ (DRAM→HBM reload path).
+    pub fn insert_ready(
+        &mut self,
+        user: u64,
+        bytes: usize,
+        payload: T,
+        now: Micros,
+        t_life_us: Micros,
+    ) -> Result<(), InsertError> {
+        self.begin_produce(user, bytes, now, t_life_us)?;
+        let ok = self.complete_produce(user, payload);
+        debug_assert!(ok);
+        Ok(())
+    }
+
+    /// Non-consuming probe (the pseudo-pre-infer check).
+    ///
+    /// HBM guarantees availability only *within one lifecycle* (§3.3): a
+    /// Ready/Consumed entry older than its T_life deadline is treated as
+    /// a miss and reclaimed — the sliding window has moved past it.
+    /// In-flight `Producing` entries are never expired by the probe.
+    pub fn probe(&mut self, user: u64, now: Micros) -> Option<EntryState> {
+        if let Some(e) = self.entries.get(&user) {
+            if e.state != EntryState::Producing && e.deadline_us <= now {
+                self.remove_user(user);
+                self.stats.evicted_expired += 1;
+                self.stats.misses += 1;
+                return None;
+            }
+        }
+        let state = self.entries.get(&user).map(|e| e.state);
+        match state {
+            Some(EntryState::Ready) => self.stats.ready_hits += 1,
+            Some(EntryState::Producing) => self.stats.producing_hits += 1,
+            Some(EntryState::Consumed) => self.stats.ready_hits += 1,
+            None => self.stats.misses += 1,
+        }
+        state
+    }
+
+    /// State without touching counters.
+    pub fn state_of(&self, user: u64) -> Option<EntryState> {
+        self.entries.get(&user).map(|e| e.state)
+    }
+
+    /// Re-arm an entry's lifecycle window: an admitted pre-infer signal
+    /// that finds ψ already resident keeps it alive for the *new*
+    /// request's lifecycle instead of recomputing it (§3.4 pseudo
+    /// pre-inference semantics).  Also revives a Consumed entry to Ready.
+    pub fn extend_lease(&mut self, user: u64, deadline_us: Micros) -> bool {
+        match self.entries.get_mut(&user) {
+            Some(e) => {
+                e.deadline_us = e.deadline_us.max(deadline_us);
+                if e.state == EntryState::Consumed {
+                    e.state = EntryState::Ready;
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Explicitly evict an entry (the window slides past a consumed ψ
+    /// right after the expander spills it to DRAM).
+    pub fn evict(&mut self, user: u64) -> bool {
+        let existed = self.remove_user(user).is_some();
+        if existed {
+            self.stats.evicted_consumed += 1;
+        }
+        existed
+    }
+}
+
+impl<T: Clone> HbmCache<T> {
+    /// Ranking consumes ψ: marks Consumed (evictable) and returns the
+    /// payload.  Consumed entries remain readable until evicted so that
+    /// rapid same-user re-ranks within the window still hit.
+    pub fn consume(&mut self, user: u64) -> Option<T> {
+        match self.entries.get_mut(&user) {
+            Some(e) if e.payload.is_some() => {
+                e.state = EntryState::Consumed;
+                self.stats.consumed += 1;
+                e.payload.clone()
+            }
+            _ => None,
+        }
+    }
+
+    /// Read a Ready/Consumed payload without state change.
+    pub fn peek(&self, user: u64) -> Option<T> {
+        self.entries.get(&user).and_then(|e| e.payload.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: usize = 1 << 20;
+
+    fn cache(cap_mb: usize) -> HbmCache<u32> {
+        HbmCache::new(cap_mb * MB)
+    }
+
+    #[test]
+    fn produce_consume_lifecycle() {
+        let mut c = cache(64);
+        c.begin_produce(1, 32 * MB, 0, 300_000).unwrap();
+        assert_eq!(c.state_of(1), Some(EntryState::Producing));
+        assert_eq!(c.consume(1), None, "cannot consume before ready");
+        assert!(c.complete_produce(1, 7));
+        assert_eq!(c.state_of(1), Some(EntryState::Ready));
+        assert_eq!(c.consume(1), Some(7));
+        assert_eq!(c.state_of(1), Some(EntryState::Consumed));
+        assert_eq!(c.live(), 0);
+        assert_eq!(c.stats().consumed, 1);
+    }
+
+    #[test]
+    fn sliding_window_evicts_consumed_first() {
+        let mut c = cache(64);
+        for u in 0..2u64 {
+            c.begin_produce(u, 32 * MB, 0, 300_000).unwrap();
+            c.complete_produce(u, u as u32);
+        }
+        c.consume(0);
+        // Cache full: a third producer must evict the consumed entry 0,
+        // not the live entry 1.
+        c.begin_produce(2, 32 * MB, 10, 300_000).unwrap();
+        assert_eq!(c.state_of(0), None);
+        assert_eq!(c.state_of(1), Some(EntryState::Ready));
+        assert_eq!(c.stats().evicted_consumed, 1);
+        assert_eq!(c.stats().lost, 0);
+    }
+
+    #[test]
+    fn live_entries_protected_until_expiry() {
+        let mut c = cache(64);
+        c.begin_produce(1, 32 * MB, 0, 300_000).unwrap();
+        c.begin_produce(2, 32 * MB, 0, 300_000).unwrap();
+        // Both live & unexpired → insert must be refused, not steal.
+        assert_eq!(
+            c.begin_produce(3, 32 * MB, 100, 300_000),
+            Err(InsertError::CapacityExhausted)
+        );
+        assert_eq!(c.stats().rejected, 1);
+        // After T_life, expired live entries are reclaimable.
+        assert!(c.begin_produce(3, 32 * MB, 300_001, 300_000).is_ok());
+        assert_eq!(c.stats().evicted_expired, 1);
+    }
+
+    #[test]
+    fn too_large_rejected() {
+        let mut c = cache(16);
+        assert_eq!(c.begin_produce(1, 17 * MB, 0, 1), Err(InsertError::TooLarge));
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn readmission_replaces() {
+        let mut c = cache(64);
+        c.begin_produce(1, 8 * MB, 0, 300_000).unwrap();
+        c.complete_produce(1, 1);
+        c.begin_produce(1, 16 * MB, 5, 300_000).unwrap();
+        assert_eq!(c.used_bytes(), 16 * MB);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.state_of(1), Some(EntryState::Producing));
+    }
+
+    #[test]
+    fn probe_counts_hits_and_misses() {
+        let mut c = cache(64);
+        assert_eq!(c.probe(9, 0), None);
+        c.begin_produce(9, MB, 0, 1000).unwrap();
+        assert_eq!(c.probe(9, 0), Some(EntryState::Producing));
+        c.complete_produce(9, 0);
+        assert_eq!(c.probe(9, 0), Some(EntryState::Ready));
+        let s = c.stats();
+        assert_eq!((s.misses, s.producing_hits, s.ready_hits), (1, 1, 1));
+    }
+
+    #[test]
+    fn extend_lease_rearms_and_revives() {
+        let mut c = cache(64);
+        c.begin_produce(1, MB, 0, 100).unwrap();
+        c.complete_produce(1, 5);
+        c.consume(1);
+        // Re-arm past expiry and revive Consumed → Ready.
+        assert!(c.extend_lease(1, 10_000));
+        assert_eq!(c.probe(1, 5_000), Some(EntryState::Ready));
+        assert_eq!(c.consume(1), Some(5));
+        // Expired without a lease extension would have been reclaimed.
+        let mut d = cache(64);
+        d.begin_produce(2, MB, 0, 100).unwrap();
+        d.complete_produce(2, 9);
+        assert_eq!(d.probe(2, 5_000), None, "expired entries are misses");
+        assert!(!d.extend_lease(2, 10_000), "gone after reclamation");
+    }
+
+    #[test]
+    fn complete_after_eviction_reports_lost_handle() {
+        let mut c = cache(32);
+        c.begin_produce(1, 32 * MB, 0, 100).unwrap();
+        // Entry 1 expires; a new producer reclaims the space.
+        c.begin_produce(2, 32 * MB, 200, 100).unwrap();
+        assert!(!c.complete_produce(1, 9), "completing an evicted entry fails");
+    }
+
+    #[test]
+    fn byte_accounting_is_exact() {
+        let mut c = cache(100);
+        c.begin_produce(1, 10 * MB, 0, 1000).unwrap();
+        c.begin_produce(2, 20 * MB, 0, 1000).unwrap();
+        assert_eq!(c.used_bytes(), 30 * MB);
+        c.complete_produce(1, 0);
+        c.consume(1);
+        c.begin_produce(3, 80 * MB, 1, 1000).unwrap(); // evicts 1
+        assert_eq!(c.used_bytes(), 100 * MB);
+        assert_eq!(c.live(), 2);
+    }
+
+    // Property: under arbitrary operation sequences the capacity bound and
+    // live-count accounting always hold.
+    #[test]
+    fn prop_capacity_invariant() {
+        crate::util::prop::check("hbm-capacity-invariant", 200, |rng| {
+            let cap = (1 + rng.range(0, 64)) * MB;
+            let mut c: HbmCache<u32> = HbmCache::new(cap);
+            let mut now: Micros = 0;
+            for _ in 0..200 {
+                now += rng.range(0, 50_000) as u64;
+                let user = rng.range_u64(8);
+                match rng.range(0, 4) {
+                    0 => {
+                        let bytes = (1 + rng.range(0, 40)) * MB / 2;
+                        let _ = c.begin_produce(user, bytes, now, 300_000);
+                    }
+                    1 => {
+                        c.complete_produce(user, 1);
+                    }
+                    2 => {
+                        c.consume(user);
+                    }
+                    _ => {
+                        c.probe(user, 0);
+                    }
+                }
+                if c.used_bytes() > cap {
+                    return Err(format!("used {} > cap {}", c.used_bytes(), cap));
+                }
+                let live = c.live();
+                if live > c.len() {
+                    return Err("live > len".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

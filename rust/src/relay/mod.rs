@@ -1,0 +1,30 @@
+//! The paper's system contribution: *lifecycle caching under late-binding
+//! placement*, decomposed exactly as §3.1 does —
+//!
+//! * **admission** — [`trigger`]: the sequence-aware trigger (Eqs. 1–3),
+//! * **placement** — [`router`]: the affinity-aware consistent-hash router,
+//! * **local capacity extension** — [`expander`]: the memory-aware DRAM
+//!   tier with per-user single-flight and pseudo-pre-inference,
+//!
+//! over the [`hbm`] sliding-window lifecycle cache, with the [`pipeline`]
+//! cascade model and the [`baseline`] modes (inline full inference and the
+//! no-affinity remote-pool strawman).
+//!
+//! All modules are clock-agnostic state machines (callers pass `now_us`),
+//! shared verbatim by the discrete-event simulator and the live engine.
+
+pub mod baseline;
+pub mod expander;
+pub mod hbm;
+pub mod pipeline;
+pub mod router;
+pub mod trigger;
+
+pub use baseline::{Mode, RemotePool};
+pub use expander::{DramPolicy, Expander, ExpanderStats, PseudoAction};
+pub use hbm::{EntryState, HbmCache, HbmStats, InsertError, Micros};
+pub use pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
+pub use router::{BalancePolicy, HashRing, Route, Router, RouterConfig, RouterStats};
+pub use trigger::{
+    AdmissionLimits, BehaviorMeta, Decision, Trigger, TriggerConfig, TriggerStats,
+};

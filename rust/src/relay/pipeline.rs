@@ -1,0 +1,187 @@
+//! Pipeline cascade model (§2.1, Fig. 2): retrieval → pre-processing →
+//! fine-grained ranking under per-stage tail budgets, plus the per-request
+//! lifecycle record the metrics layer aggregates.
+
+use crate::util::rng::Rng;
+
+/// Per-stage latency budgets of the production-mirror pipeline (§4.1):
+/// pipeline P99 ≤ 135 ms, ranking ≈ 50 ms budget, stages of tens of ms.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Mean / P99 of the retrieval stage (candidate generation).
+    pub retrieval_mean_us: f64,
+    pub retrieval_p99_us: f64,
+    /// Mean / P99 of pre-processing (coarse ranking + feature transform).
+    pub preproc_mean_us: f64,
+    pub preproc_p99_us: f64,
+    /// Ranking-stage P99 budget (the binding constraint).
+    pub rank_budget_us: f64,
+    /// End-to-end pipeline SLO (P99).
+    pub pipeline_slo_us: f64,
+    /// Required SLO success rate (paper: ≥ 99.9%).
+    pub required_success: f64,
+    /// Lifecycle window T_life for cache survivability.
+    pub t_life_us: u64,
+    /// Latency of the trigger's metadata fetch + risk test (side path).
+    pub trigger_us: f64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            retrieval_mean_us: 25_000.0,
+            retrieval_p99_us: 40_000.0,
+            preproc_mean_us: 25_000.0,
+            preproc_p99_us: 45_000.0,
+            rank_budget_us: 50_000.0,
+            pipeline_slo_us: 135_000.0,
+            required_success: 0.999,
+            t_life_us: 300_000,
+            trigger_us: 1_000.0,
+        }
+    }
+}
+
+/// Log-normal stage-latency sampler matched to (mean, P99).
+///
+/// For LN(μ, σ): mean = exp(μ + σ²/2), P99 = exp(μ + 2.326σ); solving the
+/// pair gives σ from `ln(p99/mean) = 2.326σ − σ²/2` (positive root).
+#[derive(Debug, Clone, Copy)]
+pub struct StageSampler {
+    mu: f64,
+    sigma: f64,
+}
+
+impl StageSampler {
+    pub fn from_mean_p99(mean_us: f64, p99_us: f64) -> StageSampler {
+        assert!(mean_us > 0.0 && p99_us > mean_us, "need p99 > mean > 0");
+        let z = 2.3263478740408408; // Φ⁻¹(0.99)
+        let r = (p99_us / mean_us).ln();
+        // σ² /2 − zσ + r = 0  →  σ = z − sqrt(z² − 2r)  (small root).
+        let disc = z * z - 2.0 * r;
+        let sigma = if disc > 0.0 { z - disc.sqrt() } else { z };
+        let mu = mean_us.ln() - sigma * sigma / 2.0;
+        StageSampler { mu, sigma }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal(self.mu, self.sigma)
+    }
+
+    pub fn mean(&self) -> f64 {
+        (self.mu + self.sigma * self.sigma / 2.0).exp()
+    }
+
+    pub fn p99(&self) -> f64 {
+        (self.mu + 2.3263478740408408 * self.sigma).exp()
+    }
+}
+
+/// How the ranking stage obtained ψ (or didn't).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Baseline / not admitted: full inline inference.
+    FullInference,
+    /// ψ consumed straight from HBM (relay race worked end-to-end).
+    HbmHit,
+    /// ψ reloaded from server-local DRAM (expander hit).
+    DramHit,
+    /// Joined an in-flight reload started by an earlier request.
+    JoinedReload,
+    /// Admitted but the cache was unavailable at ranking time (evicted,
+    /// affinity break, production too slow) — safe fallback to full.
+    Fallback,
+}
+
+/// Per-request lifecycle record (timestamps in µs since sim start).
+#[derive(Debug, Clone)]
+pub struct Lifecycle {
+    pub request: u64,
+    pub user: u64,
+    pub prefix_len: usize,
+    pub arrival_us: u64,
+    pub retrieval_done_us: u64,
+    pub preproc_done_us: u64,
+    pub rank_start_us: u64,
+    pub done_us: u64,
+    /// Component latencies the paper's Fig. 11c/13b break down.
+    pub pre_us: f64,
+    pub load_us: f64,
+    pub rank_us: f64,
+    /// Wait on the ranking path for ψ production / reload.
+    pub wait_us: f64,
+    pub outcome: CacheOutcome,
+    pub admitted: bool,
+    pub instance: usize,
+}
+
+impl Lifecycle {
+    pub fn e2e_us(&self) -> f64 {
+        (self.done_us - self.arrival_us) as f64
+    }
+
+    /// Ranking-stage latency (what the tens-of-ms budget constrains).
+    pub fn rank_stage_us(&self) -> f64 {
+        (self.done_us - self.preproc_done_us) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_matches_targets() {
+        let s = StageSampler::from_mean_p99(25_000.0, 40_000.0);
+        assert!((s.mean() - 25_000.0).abs() < 1.0);
+        assert!((s.p99() - 40_000.0).abs() < 1.0);
+        // Empirical check.
+        let mut rng = Rng::new(11);
+        let mut h = crate::util::stats::Histogram::new();
+        for _ in 0..100_000 {
+            h.record(s.sample(&mut rng));
+        }
+        assert!((h.mean() - 25_000.0).abs() / 25_000.0 < 0.03, "mean {}", h.mean());
+        assert!((h.p99() - 40_000.0).abs() / 40_000.0 < 0.08, "p99 {}", h.p99());
+    }
+
+    #[test]
+    fn sampler_extreme_tail_ratio() {
+        let s = StageSampler::from_mean_p99(10_000.0, 80_000.0);
+        assert!(s.p99() / s.mean() > 4.0);
+        let mut rng = Rng::new(12);
+        for _ in 0..1000 {
+            assert!(s.sample(&mut rng) > 0.0);
+        }
+    }
+
+    #[test]
+    fn default_budgets_partition_slo() {
+        let c = PipelineConfig::default();
+        assert!(c.retrieval_p99_us + c.preproc_p99_us + c.rank_budget_us <= c.pipeline_slo_us);
+        assert!(c.t_life_us as f64 >= c.pipeline_slo_us * 2.0, "T_life covers pipeline tail");
+    }
+
+    #[test]
+    fn lifecycle_latency_accessors() {
+        let lc = Lifecycle {
+            request: 1,
+            user: 2,
+            prefix_len: 2048,
+            arrival_us: 100,
+            retrieval_done_us: 30_100,
+            preproc_done_us: 55_100,
+            rank_start_us: 55_100,
+            done_us: 75_100,
+            pre_us: 35_000.0,
+            load_us: 0.0,
+            rank_us: 8_000.0,
+            wait_us: 0.0,
+            outcome: CacheOutcome::HbmHit,
+            admitted: true,
+            instance: 3,
+        };
+        assert_eq!(lc.e2e_us(), 75_000.0);
+        assert_eq!(lc.rank_stage_us(), 20_000.0);
+    }
+}

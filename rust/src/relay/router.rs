@@ -1,0 +1,422 @@
+//! Affinity-aware router (§3.3): convert late-binding placement into an
+//! early-binding contract via consistent hashing on a user-keyed header.
+//!
+//! Both the auxiliary pre-infer signal and the later ranking request for
+//! the same user carry `consistency-hash-key: userID`; the load balancer
+//! picks the gateway and the gateway picks the final instance by
+//! consistent hashing on that key, so producer and consumer rendezvous at
+//! the same *special* instance without coordination.  Normal (short-
+//! sequence) requests use standard policies (round-robin /
+//! least-connections).  Special-instance density per server is capped to
+//! bound CPU/PCIe interference (Fig. 8).
+
+use anyhow::{bail, Result};
+
+/// 64-bit hash of the consistency-hash-key (userID) — splitmix64 finaliser.
+#[inline]
+pub fn hash_key(key: u64, salt: u64) -> u64 {
+    let mut z = key ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Consistent-hash ring with virtual nodes.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// Sorted (point, node) pairs.
+    points: Vec<(u64, usize)>,
+    vnodes: usize,
+}
+
+impl HashRing {
+    pub fn new(nodes: &[usize], vnodes: usize) -> HashRing {
+        let mut ring = HashRing { points: Vec::new(), vnodes };
+        for &n in nodes {
+            ring.add(n);
+        }
+        ring
+    }
+
+    pub fn add(&mut self, node: usize) {
+        for v in 0..self.vnodes {
+            let point = hash_key(node as u64, 0xA5A5_0000 ^ v as u64);
+            self.points.push((point, node));
+        }
+        self.points.sort_unstable();
+    }
+
+    pub fn remove(&mut self, node: usize) {
+        self.points.retain(|&(_, n)| n != node);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn nodes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.points.iter().map(|&(_, n)| n).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Route a key to its node (first ring point clockwise of the hash).
+    pub fn route(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = hash_key(key, 0);
+        let idx = self.points.partition_point(|&(p, _)| p < h);
+        let (_, node) = self.points[idx % self.points.len()];
+        Some(node)
+    }
+}
+
+/// Policy for uncoupled (normal) requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BalancePolicy {
+    RoundRobin,
+    LeastConnections,
+}
+
+/// Router deployment shape.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub n_instances: usize,
+    pub servers: usize,
+    /// r2 — fraction of instances designated special.
+    pub r2: f64,
+    /// Interference cap: max special instances per server (Fig. 8).
+    pub max_special_per_server: usize,
+    pub gateways: usize,
+    pub vnodes: usize,
+    pub normal_policy: BalancePolicy,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            n_instances: 100,
+            servers: 25,
+            r2: 0.1,
+            max_special_per_server: 1,
+            gateways: 4,
+            vnodes: 64,
+            normal_policy: BalancePolicy::LeastConnections,
+        }
+    }
+}
+
+/// A routed destination: which gateway carried it and the final instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    pub gateway: usize,
+    pub instance: usize,
+}
+
+/// Counters exported to metrics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterStats {
+    pub special_routed: u64,
+    pub normal_routed: u64,
+    pub affinity_breaks: u64,
+}
+
+/// The affinity-aware router over a special/normal instance split.
+#[derive(Debug)]
+pub struct Router {
+    cfg: RouterConfig,
+    /// instance id → server id.
+    placement: Vec<usize>,
+    special: Vec<usize>,
+    normal: Vec<usize>,
+    gw_ring: HashRing,
+    special_ring: HashRing,
+    /// Open connections per instance (least-connections policy).
+    conns: Vec<u32>,
+    rr_next: usize,
+    stats: RouterStats,
+}
+
+impl Router {
+    /// Place instances round-robin across servers, then designate ⌈r2·N⌉
+    /// special instances subject to the per-server density cap.
+    pub fn new(cfg: RouterConfig) -> Result<Router> {
+        if cfg.n_instances == 0 || cfg.servers == 0 || cfg.gateways == 0 {
+            bail!("router: instances/servers/gateways must be positive");
+        }
+        let want_special = ((cfg.r2 * cfg.n_instances as f64).ceil() as usize)
+            .clamp(1, cfg.n_instances);
+        if want_special > cfg.servers * cfg.max_special_per_server {
+            bail!(
+                "router: r2*N = {want_special} special instances cannot respect \
+                 density cap {} on {} servers",
+                cfg.max_special_per_server,
+                cfg.servers
+            );
+        }
+        let placement: Vec<usize> = (0..cfg.n_instances).map(|i| i % cfg.servers).collect();
+        let mut special = Vec::new();
+        let mut per_server = vec![0usize; cfg.servers];
+        // Spread specials across servers: walk instances, take the first on
+        // each server until the quota is met.
+        for i in 0..cfg.n_instances {
+            if special.len() == want_special {
+                break;
+            }
+            let s = placement[i];
+            if per_server[s] < cfg.max_special_per_server {
+                per_server[s] += 1;
+                special.push(i);
+            }
+        }
+        if special.len() < want_special {
+            bail!("router: could not place {want_special} special instances");
+        }
+        let normal: Vec<usize> =
+            (0..cfg.n_instances).filter(|i| !special.contains(i)).collect();
+        let gw_ring = HashRing::new(&(0..cfg.gateways).collect::<Vec<_>>(), cfg.vnodes);
+        let special_ring = HashRing::new(&special, cfg.vnodes);
+        Ok(Router {
+            conns: vec![0; cfg.n_instances],
+            placement,
+            special,
+            normal,
+            gw_ring,
+            special_ring,
+            rr_next: 0,
+            stats: RouterStats::default(),
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &RouterConfig {
+        &self.cfg
+    }
+
+    pub fn special_instances(&self) -> &[usize] {
+        &self.special
+    }
+
+    pub fn normal_instances(&self) -> &[usize] {
+        &self.normal
+    }
+
+    pub fn server_of(&self, instance: usize) -> usize {
+        self.placement[instance]
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        self.stats
+    }
+
+    /// Route a user-keyed request (pre-infer signal *or* long-sequence
+    /// ranking request): consistent hashing at both hops, so coupled
+    /// requests rendezvous deterministically.
+    pub fn route_special(&mut self, user: u64) -> Route {
+        self.stats.special_routed += 1;
+        let gateway = self.gw_ring.route(user).expect("no gateways");
+        let instance = self.special_ring.route(user).expect("no special instances");
+        self.conns[instance] += 1;
+        Route { gateway, instance }
+    }
+
+    /// Route an un-keyed normal request with the configured policy.
+    pub fn route_normal(&mut self, user: u64) -> Route {
+        self.stats.normal_routed += 1;
+        let gateway = self.gw_ring.route(user).expect("no gateways");
+        let instance = match self.cfg.normal_policy {
+            BalancePolicy::RoundRobin => {
+                let i = self.normal[self.rr_next % self.normal.len()];
+                self.rr_next += 1;
+                i
+            }
+            BalancePolicy::LeastConnections => *self
+                .normal
+                .iter()
+                .min_by_key(|&&i| self.conns[i])
+                .expect("no normal instances"),
+        };
+        self.conns[instance] += 1;
+        Route { gateway, instance }
+    }
+
+    /// A request finished: release its connection slot.
+    pub fn on_complete(&mut self, instance: usize) {
+        self.conns[instance] = self.conns[instance].saturating_sub(1);
+    }
+
+    /// Deployment churn: a special instance leaves; keys remap.  Ranking
+    /// requests routed before the change will miss the cache and fall
+    /// back (correctness preserved, optimization lost).
+    pub fn remove_special(&mut self, instance: usize) {
+        self.special_ring.remove(instance);
+        self.special.retain(|&i| i != instance);
+        self.stats.affinity_breaks += 1;
+    }
+
+    pub fn add_special(&mut self, instance: usize) {
+        if !self.special.contains(&instance) {
+            self.special.push(instance);
+            self.special_ring.add(instance);
+        }
+    }
+
+    pub fn open_connections(&self, instance: usize) -> u32 {
+        self.conns[instance]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn router() -> Router {
+        Router::new(RouterConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn coupled_requests_rendezvous() {
+        let mut r = router();
+        for user in 0..500u64 {
+            let pre = r.route_special(user);
+            let rank = r.route_special(user);
+            assert_eq!(pre.instance, rank.instance, "user {user} split across instances");
+            assert_eq!(pre.gateway, rank.gateway);
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic_across_router_instances() {
+        let mut a = router();
+        let mut b = router();
+        for user in 0..100u64 {
+            assert_eq!(a.route_special(user).instance, b.route_special(user).instance);
+        }
+    }
+
+    #[test]
+    fn special_pool_size_and_density_cap() {
+        let r = router();
+        assert_eq!(r.special_instances().len(), 10); // r2=0.1, N=100
+        let mut per_server: HashMap<usize, usize> = HashMap::new();
+        for &i in r.special_instances() {
+            *per_server.entry(r.server_of(i)).or_default() += 1;
+        }
+        assert!(per_server.values().all(|&c| c <= 1), "density cap violated");
+    }
+
+    #[test]
+    fn density_cap_infeasible_is_rejected() {
+        let cfg = RouterConfig {
+            n_instances: 100,
+            servers: 4,
+            r2: 0.1,
+            max_special_per_server: 1,
+            ..Default::default()
+        };
+        assert!(Router::new(cfg).is_err());
+    }
+
+    #[test]
+    fn special_load_is_balanced() {
+        let mut r = router();
+        let mut counts: HashMap<usize, u64> = HashMap::new();
+        for user in 0..20_000u64 {
+            *counts.entry(r.route_special(user).instance).or_default() += 1;
+        }
+        let expect = 20_000.0 / r.special_instances().len() as f64;
+        for (&inst, &c) in &counts {
+            assert!(
+                (c as f64) > expect * 0.5 && (c as f64) < expect * 1.6,
+                "instance {inst} got {c} (expect ~{expect:.0})"
+            );
+        }
+    }
+
+    #[test]
+    fn least_connections_prefers_idle() {
+        let mut r = Router::new(RouterConfig {
+            normal_policy: BalancePolicy::LeastConnections,
+            ..Default::default()
+        })
+        .unwrap();
+        let a = r.route_normal(1).instance;
+        let b = r.route_normal(2).instance;
+        assert_ne!(a, b, "second request should avoid the busy instance");
+        r.on_complete(a);
+        r.on_complete(b);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RouterConfig {
+            normal_policy: BalancePolicy::RoundRobin,
+            ..Default::default()
+        })
+        .unwrap();
+        let n = r.normal_instances().len();
+        let first = r.route_normal(0).instance;
+        for _ in 1..n {
+            r.route_normal(0);
+        }
+        assert_eq!(r.route_normal(0).instance, first, "wraps after a full cycle");
+    }
+
+    #[test]
+    fn churn_remaps_bounded_fraction() {
+        let mut r = router();
+        let users: Vec<u64> = (0..5_000).collect();
+        let before: Vec<usize> = users.iter().map(|&u| r.route_special(u).instance).collect();
+        let victim = r.special_instances()[0];
+        r.remove_special(victim);
+        let after: Vec<usize> = users.iter().map(|&u| r.route_special(u).instance).collect();
+        let moved = before
+            .iter()
+            .zip(&after)
+            .filter(|(b, a)| b != a)
+            .count();
+        // Consistent hashing: only the victim's ~1/10 of keys remap.
+        let frac = moved as f64 / users.len() as f64;
+        assert!(frac < 0.2, "churn moved {:.0}% of keys", frac * 100.0);
+        // Keys that moved must all have pointed at the removed instance.
+        for ((&u, &b), &a) in users.iter().zip(&before).zip(&after) {
+            if b != a {
+                assert_eq!(b, victim, "user {u} moved from non-victim {b}");
+            }
+        }
+        assert_eq!(r.stats().affinity_breaks, 1);
+    }
+
+    #[test]
+    fn prop_affinity_holds_under_random_traffic() {
+        crate::util::prop::check("router-affinity", 50, |rng| {
+            let cfg = RouterConfig {
+                n_instances: 10 + rng.range(0, 90),
+                servers: 10 + rng.range(0, 20),
+                r2: rng.uniform(0.05, 0.3),
+                max_special_per_server: 1 + rng.range(0, 2),
+                gateways: 1 + rng.range(0, 8),
+                vnodes: 16 + rng.range(0, 64),
+                normal_policy: BalancePolicy::RoundRobin,
+            };
+            let Ok(mut r) = Router::new(cfg) else {
+                return Ok(()); // infeasible density caps are allowed to error
+            };
+            for _ in 0..200 {
+                let u = rng.next_u64() % 1000;
+                let first = r.route_special(u);
+                let again = r.route_special(u);
+                if first.instance != again.instance {
+                    return Err(format!("user {u} lost affinity"));
+                }
+                if !r.special_instances().contains(&first.instance) {
+                    return Err("routed to non-special instance".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,375 @@
+//! Sequence-aware trigger (§3.2): admit only *at-risk* requests for
+//! prefix pre-inference, under bounded HBM footprint and bounded
+//! pre-inference load.
+//!
+//! The trigger runs beside retrieval on lightweight behaviour metadata
+//! (prefix length / feature dimension) — never the full sequence.  Its
+//! admission budget implements the paper's Eqs. 1–3:
+//!
+//! ```text
+//! (1)  L        = Q_admit · T_life              live caches per instance
+//! (2)  L · kv_p99 ≤ r1 · HBM                    survivability
+//! (3)  Q_admit ≤ Q_m · M ,  Q_max ≤ Q_m·M·r2·N  load bounds
+//! ```
+//!
+//! Rate limiting uses a token bucket per special instance; the live-cache
+//! footprint is tracked through feedback from the HBM cache (`release`).
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+
+/// Lightweight per-request behaviour metadata the trigger inspects.
+#[derive(Debug, Clone, Copy)]
+pub struct BehaviorMeta {
+    pub user: u64,
+    /// Long-term behaviour prefix length in tokens.
+    pub prefix_len: usize,
+    /// Feature/embedding dimension.
+    pub dim: usize,
+}
+
+/// Static admission-control parameters (the paper's symbols).
+#[derive(Debug, Clone)]
+pub struct TriggerConfig {
+    /// Ranking-stage P99 budget (≈50 ms in the paper's pipeline).
+    pub rank_p99_budget_us: f64,
+    /// Risk margin: at-risk iff estimated full inference > headroom·budget.
+    pub headroom: f64,
+    /// T_life — request lifecycle window (retrieval+preproc+ranking tail).
+    pub t_life_us: u64,
+    /// kv_p99 — P99 per-user ψ footprint in bytes.
+    pub kv_p99_bytes: usize,
+    /// Device HBM capacity in bytes.
+    pub hbm_bytes: usize,
+    /// r1 — HBM fraction reserved for live caches.
+    pub r1: f64,
+    /// Q_m — sustainable pre-infer throughput per model slot (queries/s).
+    pub q_m: f64,
+    /// M — concurrent model slots per special instance.
+    pub m_slots: usize,
+    /// r2 — fraction of ranking instances designated special.
+    pub r2: f64,
+    /// N — total ranking instances.
+    pub n_instances: usize,
+}
+
+impl TriggerConfig {
+    /// The paper's §3.2 sanity-check configuration.
+    pub fn paper_example() -> TriggerConfig {
+        TriggerConfig {
+            rank_p99_budget_us: 50_000.0,
+            headroom: 0.8,
+            t_life_us: 300_000,
+            kv_p99_bytes: 100 * 1000 * 1000, // ~0.1 GB
+            hbm_bytes: 32_000_000_000,
+            r1: 0.5,
+            q_m: 30.0,
+            m_slots: 5,
+            r2: 0.1,
+            n_instances: 100,
+        }
+    }
+
+    /// Derived admission limits (Eqs. 1–3).
+    pub fn limits(&self) -> AdmissionLimits {
+        let l_max = ((self.r1 * self.hbm_bytes as f64) / self.kv_p99_bytes as f64).floor() as usize;
+        let q_life = l_max as f64 / (self.t_life_us as f64 / 1e6); // Eq. 1 inverted
+        let q_compute = self.q_m * self.m_slots as f64; // Eq. 3, per instance
+        let q_admit_max = q_life.min(q_compute);
+        let specials = (self.r2 * self.n_instances as f64).round().max(1.0);
+        AdmissionLimits { l_max, q_admit_max, q_max_system: q_compute * specials, specials: specials as usize }
+    }
+}
+
+/// The derived bounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionLimits {
+    /// Max simultaneously-live caches per special instance (Eq. 2).
+    pub l_max: usize,
+    /// Max admitted pre-infer rate per special instance, queries/s.
+    pub q_admit_max: f64,
+    /// System-wide admitted long-sequence traffic bound, queries/s (Eq. 3).
+    pub q_max_system: f64,
+    /// Number of special instances (r2·N).
+    pub specials: usize,
+}
+
+/// Trigger decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Full inference comfortably fits the ranking budget — no side path.
+    NotAtRisk,
+    /// Admitted for prefix pre-inference.
+    Admit,
+    /// At risk, but the per-instance admitted rate is exhausted.
+    RateLimited,
+    /// At risk, but live caches would outgrow the r1·HBM slice.
+    FootprintLimited,
+}
+
+/// Token bucket (rate per second over microsecond timestamps).
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    rate_per_us: f64,
+    burst: f64,
+    tokens: f64,
+    last_us: u64,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_s: f64, burst: f64) -> TokenBucket {
+        TokenBucket { rate_per_us: rate_per_s / 1e6, burst, tokens: burst, last_us: 0 }
+    }
+
+    pub fn try_take(&mut self, now_us: u64) -> bool {
+        let dt = now_us.saturating_sub(self.last_us) as f64;
+        self.last_us = self.last_us.max(now_us);
+        self.tokens = (self.tokens + dt * self.rate_per_us).min(self.burst);
+        // Grant with a tiny epsilon so repeated fractional refills (e.g.
+        // 10 × 0.1) are not lost to fp rounding just below 1.0.
+        if self.tokens >= 1.0 - 1e-9 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Latency estimator used by the metadata risk test.  Deliberately a
+/// boxed fn so the simulator wires in the hardware cost model and tests
+/// wire in synthetic estimators.
+pub type Estimator = Box<dyn Fn(&BehaviorMeta) -> f64 + Send>;
+
+/// Per-special-instance trigger state.
+pub struct Trigger {
+    cfg: TriggerConfig,
+    limits: AdmissionLimits,
+    bucket: TokenBucket,
+    /// Live caches currently attributed to this instance (feedback).
+    live: usize,
+    estimator: Estimator,
+    stats: TriggerStats,
+}
+
+/// Counters exported to metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TriggerStats {
+    pub assessed: u64,
+    pub not_at_risk: u64,
+    pub admitted: u64,
+    pub rate_limited: u64,
+    pub footprint_limited: u64,
+}
+
+impl Trigger {
+    pub fn new(cfg: TriggerConfig, estimator: Estimator) -> Trigger {
+        let limits = cfg.limits();
+        // Burst sized to the slot count: a short spike can fill the slots,
+        // sustained rate is capped at q_admit_max.
+        let burst = cfg.m_slots.max(1) as f64;
+        Trigger {
+            bucket: TokenBucket::new(limits.q_admit_max, burst),
+            limits,
+            cfg,
+            live: 0,
+            estimator,
+            stats: TriggerStats::default(),
+        }
+    }
+
+    pub fn limits(&self) -> AdmissionLimits {
+        self.limits
+    }
+
+    pub fn config(&self) -> &TriggerConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> TriggerStats {
+        self.stats
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Metadata risk test + admission control.
+    pub fn decide(&mut self, now_us: u64, meta: &BehaviorMeta) -> Decision {
+        self.stats.assessed += 1;
+        let est_full_us = (self.estimator)(meta);
+        if est_full_us <= self.cfg.headroom * self.cfg.rank_p99_budget_us {
+            self.stats.not_at_risk += 1;
+            return Decision::NotAtRisk;
+        }
+        if self.live >= self.limits.l_max {
+            self.stats.footprint_limited += 1;
+            return Decision::FootprintLimited;
+        }
+        if !self.bucket.try_take(now_us) {
+            self.stats.rate_limited += 1;
+            return Decision::RateLimited;
+        }
+        self.live += 1;
+        self.stats.admitted += 1;
+        Decision::Admit
+    }
+
+    /// Feedback: a cache left the live set (consumed, expired or lost).
+    pub fn release(&mut self) {
+        self.live = self.live.saturating_sub(1);
+    }
+
+    /// Whether a request with this metadata is at risk (no admission).
+    pub fn at_risk(&self, meta: &BehaviorMeta) -> bool {
+        (self.estimator)(meta) > self.cfg.headroom * self.cfg.rank_p99_budget_us
+    }
+}
+
+/// `relaygr plan` — print the derived Eqs. 1–3 limits, defaulting to the
+/// paper's §3.2 sanity-check numbers.
+pub fn plan_cli(args: &Args) -> Result<()> {
+    let d = TriggerConfig::paper_example();
+    let cfg = TriggerConfig {
+        rank_p99_budget_us: args.get_f64("budget-ms", d.rank_p99_budget_us / 1e3)? * 1e3,
+        headroom: args.get_f64("headroom", d.headroom)?,
+        t_life_us: (args.get_f64("t-life-ms", d.t_life_us as f64 / 1e3)? * 1e3) as u64,
+        kv_p99_bytes: (args.get_f64("kv-gb", d.kv_p99_bytes as f64 / 1e9)? * 1e9) as usize,
+        hbm_bytes: (args.get_f64("hbm-gb", d.hbm_bytes as f64 / 1e9)? * 1e9) as usize,
+        r1: args.get_f64("r1", d.r1)?,
+        q_m: args.get_f64("qm", d.q_m)?,
+        m_slots: args.get_usize("slots", d.m_slots)?,
+        r2: args.get_f64("r2", d.r2)?,
+        n_instances: args.get_usize("instances", d.n_instances)?,
+    };
+    let lim = cfg.limits();
+    println!("sequence-aware trigger: admission plan (Eqs. 1-3)");
+    println!("  HBM reserved for live caches (r1*HBM) : {:>10.1} GB", cfg.r1 * cfg.hbm_bytes as f64 / 1e9);
+    println!("  kv_p99 per admitted user              : {:>10.3} GB", cfg.kv_p99_bytes as f64 / 1e9);
+    println!("  L_max live caches / special instance  : {:>10}", lim.l_max);
+    println!("  T_life lifecycle window               : {:>10.0} ms", cfg.t_life_us as f64 / 1e3);
+    println!("  Q_admit cap (survivability, Eq.1-2)   : {:>10.1} q/s", lim.l_max as f64 / (cfg.t_life_us as f64 / 1e6));
+    println!("  Q_admit cap (compute, Eq.3)           : {:>10.1} q/s", cfg.q_m * cfg.m_slots as f64);
+    println!("  Q_admit effective per special instance: {:>10.1} q/s", lim.q_admit_max);
+    println!("  special instances (r2*N)              : {:>10}", lim.specials);
+    println!("  Q_max system-wide admitted traffic    : {:>10.1} q/s", lim.q_max_system);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(prefix_len: usize) -> BehaviorMeta {
+        BehaviorMeta { user: 1, prefix_len, dim: 256 }
+    }
+
+    /// Estimator: 20 µs per token (2K tokens → 41 ms, at risk vs 40 ms line).
+    fn linear_estimator() -> Estimator {
+        Box::new(|m: &BehaviorMeta| m.prefix_len as f64 * 20.0)
+    }
+
+    #[test]
+    fn paper_sanity_check_numbers() {
+        // §3.2: kv=0.1GB, HBM=32GB, r1=0.5 → L ≤ 160; Qm=30, M=5 → 150 QPS;
+        // N=100, r2=0.1 → pool cap 1500 QPS.
+        let lim = TriggerConfig::paper_example().limits();
+        assert_eq!(lim.l_max, 160);
+        assert!((lim.q_admit_max - 150.0).abs() < 1e-9, "{}", lim.q_admit_max);
+        assert_eq!(lim.specials, 10);
+        assert!((lim.q_max_system - 1500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn survivability_binds_when_t_life_large() {
+        // With a 2 s lifecycle, Eq. 1 gives 160/2 = 80 QPS < 150 QPS compute.
+        let mut cfg = TriggerConfig::paper_example();
+        cfg.t_life_us = 2_000_000;
+        let lim = cfg.limits();
+        assert!((lim.q_admit_max - 80.0).abs() < 1e-9, "{}", lim.q_admit_max);
+    }
+
+    #[test]
+    fn short_sequences_not_at_risk() {
+        let mut t = Trigger::new(TriggerConfig::paper_example(), linear_estimator());
+        assert_eq!(t.decide(0, &meta(512)), Decision::NotAtRisk);
+        assert_eq!(t.decide(0, &meta(4096)), Decision::Admit);
+        let s = t.stats();
+        assert_eq!((s.not_at_risk, s.admitted), (1, 1));
+    }
+
+    #[test]
+    fn rate_limit_enforced_and_refills() {
+        let mut cfg = TriggerConfig::paper_example();
+        cfg.m_slots = 2; // burst 2, compute cap 60 q/s
+        let mut t = Trigger::new(cfg, linear_estimator());
+        assert_eq!(t.decide(0, &meta(4096)), Decision::Admit);
+        assert_eq!(t.decide(0, &meta(4096)), Decision::Admit);
+        t.release();
+        t.release(); // footprint freed; rate still empty
+        assert_eq!(t.decide(0, &meta(4096)), Decision::RateLimited);
+        // 60 q/s → one token every ~16.7 ms.
+        assert_eq!(t.decide(20_000, &meta(4096)), Decision::Admit);
+    }
+
+    #[test]
+    fn footprint_limit_uses_feedback() {
+        let mut cfg = TriggerConfig::paper_example();
+        cfg.kv_p99_bytes = 8_000_000_000; // 8 GB → L_max = 2
+        cfg.q_m = 1e9; // rate never binds
+        let mut t = Trigger::new(cfg, linear_estimator());
+        assert_eq!(t.limits().l_max, 2);
+        assert_eq!(t.decide(0, &meta(4096)), Decision::Admit);
+        assert_eq!(t.decide(0, &meta(4096)), Decision::Admit);
+        assert_eq!(t.decide(0, &meta(4096)), Decision::FootprintLimited);
+        t.release();
+        assert_eq!(t.decide(1_000_000, &meta(4096)), Decision::Admit);
+        assert_eq!(t.live(), 2);
+    }
+
+    #[test]
+    fn token_bucket_sustained_rate() {
+        let mut b = TokenBucket::new(100.0, 1.0); // 100/s, burst 1
+        let mut granted = 0;
+        for ms in 0..1000u64 {
+            if b.try_take(ms * 1000) {
+                granted += 1;
+            }
+        }
+        assert!((95..=106).contains(&granted), "granted {granted}");
+    }
+
+    #[test]
+    fn prop_admitted_never_exceeds_limits() {
+        crate::util::prop::check("trigger-bounds", 100, |rng| {
+            let mut cfg = TriggerConfig::paper_example();
+            cfg.kv_p99_bytes = (1 + rng.range(0, 20)) * 1_000_000_000;
+            cfg.q_m = rng.uniform(1.0, 50.0);
+            cfg.m_slots = 1 + rng.range(0, 8);
+            let limits = cfg.limits();
+            let mut t = Trigger::new(cfg, Box::new(|_| 1e9)); // always at risk
+            let mut now = 0u64;
+            let mut admitted_in_window = 0u64;
+            for _ in 0..300 {
+                now += rng.range(0, 20_000) as u64;
+                match t.decide(now, &meta(4096)) {
+                    Decision::Admit => admitted_in_window += 1,
+                    _ => {}
+                }
+                if t.live() > limits.l_max {
+                    return Err(format!("live {} > L_max {}", t.live(), limits.l_max));
+                }
+                if rng.bernoulli(0.3) {
+                    t.release();
+                }
+            }
+            // Sustained admission ≤ q_admit_max * elapsed + burst slack.
+            let cap = limits.q_admit_max * (now as f64 / 1e6) + t.config().m_slots as f64 + 1.0;
+            if (admitted_in_window as f64) > cap {
+                return Err(format!("admitted {admitted_in_window} > cap {cap:.1}"));
+            }
+            Ok(())
+        });
+    }
+}

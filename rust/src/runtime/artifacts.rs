@@ -1,0 +1,232 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json` + `*.hlo.txt`) and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::{Dtype, ModelSpec, ModelType};
+use crate::util::json::Json;
+
+/// Which of the three AOT entry points an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FnKind {
+    /// Pre-inference: behaviour prefix → ψ.
+    Prefix,
+    /// Ranking-on-cache: ψ + incremental + items → scores.
+    Rank,
+    /// Baseline full inline inference.
+    Full,
+}
+
+impl FnKind {
+    pub fn parse(s: &str) -> Result<FnKind> {
+        match s {
+            "prefix" => Ok(FnKind::Prefix),
+            "rank" => Ok(FnKind::Rank),
+            "full" => Ok(FnKind::Full),
+            other => bail!("unknown fn kind '{other}'"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FnKind::Prefix => "prefix",
+            FnKind::Rank => "rank",
+            FnKind::Full => "full",
+        }
+    }
+}
+
+/// Tensor shape+dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled model entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactRecord {
+    pub name: String,
+    pub fn_kind: FnKind,
+    /// File name within the artifact directory.
+    pub file: String,
+    pub sha256: String,
+    pub spec: ModelSpec,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub jax_version: String,
+    pub artifacts: Vec<ArtifactRecord>,
+}
+
+fn parse_spec(cfg: &Json) -> Result<ModelSpec> {
+    let model_type = ModelType::from_index(cfg.req_usize("model_type")?)
+        .ok_or_else(|| anyhow!("bad model_type"))?;
+    let dtype = match cfg.req_str("dtype")? {
+        "float32" => Dtype::F32,
+        "float16" | "bfloat16" => Dtype::F16,
+        other => bail!("unsupported dtype '{other}'"),
+    };
+    Ok(ModelSpec {
+        model_type,
+        layers: cfg.req_usize("layers")?,
+        dim: cfg.req_usize("dim")?,
+        heads: cfg.req_usize("heads")?,
+        prefix_len: cfg.req_usize("prefix_len")?,
+        incr_len: cfg.req_usize("incr_len")?,
+        num_items: cfg.req_usize("num_items")?,
+        dtype,
+    })
+}
+
+fn parse_tensors(arr: &[Json]) -> Result<Vec<TensorSpec>> {
+    arr.iter()
+        .map(|t| {
+            let shape = t
+                .req_array("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { shape, dtype: t.req_str("dtype")?.to_string() })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let jax_version = root.get("jax_version").and_then(Json::as_str).unwrap_or("?").to_string();
+        let mut artifacts = Vec::new();
+        for a in root.req_array("artifacts")? {
+            let cfg = a.get("config").ok_or_else(|| anyhow!("artifact missing config"))?;
+            artifacts.push(ArtifactRecord {
+                name: a.req_str("name")?.to_string(),
+                fn_kind: FnKind::parse(a.req_str("fn")?)?,
+                file: a.req_str("path")?.to_string(),
+                sha256: a.get("sha256").and_then(Json::as_str).unwrap_or("").to_string(),
+                spec: parse_spec(cfg)?,
+                inputs: parse_tensors(a.req_array("inputs")?)?,
+                outputs: parse_tensors(a.req_array("outputs")?)?,
+            });
+        }
+        Ok(Manifest { dir, jax_version, artifacts })
+    }
+
+    /// All distinct model variants (by spec name), stable order.
+    pub fn variants(&self) -> Vec<ModelSpec> {
+        let mut seen = Vec::new();
+        for a in &self.artifacts {
+            if !seen.contains(&a.spec) {
+                seen.push(a.spec);
+            }
+        }
+        seen
+    }
+
+    /// Find the artifact implementing `kind` for the given variant.
+    pub fn find(&self, kind: FnKind, spec: &ModelSpec) -> Option<&ArtifactRecord> {
+        self.artifacts.iter().find(|a| a.fn_kind == kind && &a.spec == spec)
+    }
+
+    pub fn find_by_name(&self, name: &str) -> Option<&ArtifactRecord> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Path of an artifact's HLO text on disk.
+    pub fn hlo_path(&self, a: &ArtifactRecord) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// The variant with the largest prefix bucket (for demos) or a named one.
+    pub fn default_variant(&self) -> Option<ModelSpec> {
+        self.variants().into_iter().max_by_key(|s| (s.model_type.index() == 1) as usize * s.prefix_len)
+    }
+
+    /// A variant sized for *live* CPU-PJRT serving (closest to a 512-token
+    /// prefix): interpret-mode attention on multi-K prefixes costs
+    /// hundreds of ms per call, far past the pipeline budgets.
+    pub fn live_variant(&self) -> Option<ModelSpec> {
+        self.variants()
+            .into_iter()
+            .min_by_key(|s| (s.prefix_len as i64 - 512).unsigned_abs() + s.dim as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "jax_version": "0.9",
+      "artifacts": [
+        {"name": "prefix_t1_L2_D32_H2_S128_I64_N64", "fn": "prefix",
+         "path": "prefix_t1_L2_D32_H2_S128_I64_N64.hlo.txt", "sha256": "ab",
+         "config": {"model_type": 1, "layers": 2, "dim": 32, "heads": 2,
+                    "prefix_len": 128, "incr_len": 64, "num_items": 64,
+                    "dtype": "float32", "seed": 0, "head_dim": 16,
+                    "kv_bytes": 65536, "name": "t1_L2_D32_H2_S128_I64_N64"},
+         "inputs": [{"shape": [128, 32], "dtype": "float32"}],
+         "outputs": [{"shape": [2, 2, 2, 128, 16], "dtype": "float32"}]},
+        {"name": "rank_t1_L2_D32_H2_S128_I64_N64", "fn": "rank",
+         "path": "rank_t1_L2_D32_H2_S128_I64_N64.hlo.txt", "sha256": "cd",
+         "config": {"model_type": 1, "layers": 2, "dim": 32, "heads": 2,
+                    "prefix_len": 128, "incr_len": 64, "num_items": 64,
+                    "dtype": "float32", "seed": 0, "head_dim": 16,
+                    "kv_bytes": 65536, "name": "t1_L2_D32_H2_S128_I64_N64"},
+         "inputs": [{"shape": [2, 2, 2, 128, 16], "dtype": "float32"},
+                     {"shape": [64, 32], "dtype": "float32"},
+                     {"shape": [64, 32], "dtype": "float32"}],
+         "outputs": [{"shape": [64], "dtype": "float32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.variants().len(), 1);
+        let spec = m.variants()[0];
+        assert_eq!(spec.prefix_len, 128);
+        assert_eq!(spec.kv_bytes(), 2 * 2 * 128 * 32 * 4);
+        let a = m.find(FnKind::Rank, &spec).unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].elements(), 2 * 2 * 2 * 128 * 16);
+        assert!(m.find(FnKind::Full, &spec).is_none());
+    }
+
+    #[test]
+    fn fn_kind_roundtrip() {
+        for k in [FnKind::Prefix, FnKind::Rank, FnKind::Full] {
+            assert_eq!(FnKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(FnKind::parse("decode").is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+    }
+}

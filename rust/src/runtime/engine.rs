@@ -1,0 +1,243 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! and executes them from the serving hot path.
+//!
+//! The ψ handoff is the load-bearing part: `execute_prefix_to_device`
+//! leaves the per-layer KV cache as an **on-device buffer** (`KvBuffer`)
+//! and `execute_rank_cached` feeds it straight back into the rank
+//! executable via `execute_b` — the in-HBM residency of the paper's
+//! relay race, with no host round-trip on the ranking critical path.
+//! Spilling to the expander's DRAM tier is an explicit `to_host` /
+//! `from_host` pair, mirroring the D2H/H2D cost the paper accounts for.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::ModelSpec;
+use crate::runtime::artifacts::{ArtifactRecord, FnKind, Manifest};
+
+/// Wrapper making the PJRT types shareable across worker threads.
+///
+/// SAFETY: the PJRT CPU client and loaded executables are internally
+/// thread-safe (XLA's CPU client serializes compilation and supports
+/// concurrent `Execute`); the `xla` crate just never declared the auto
+/// traits because of the raw pointers it holds.
+struct SendExe(xla::PjRtLoadedExecutable);
+unsafe impl Send for SendExe {}
+unsafe impl Sync for SendExe {}
+
+struct SendClient(xla::PjRtClient);
+unsafe impl Send for SendClient {}
+unsafe impl Sync for SendClient {}
+
+/// Device-resident ψ (or any single-array output) handle.
+pub struct KvBuffer {
+    buf: xla::PjRtBuffer,
+    /// Logical element count (f32).
+    pub elements: usize,
+    /// Logical footprint in bytes, used for HBM accounting.
+    pub bytes: usize,
+}
+unsafe impl Send for KvBuffer {}
+unsafe impl Sync for KvBuffer {}
+
+impl KvBuffer {
+    /// D2H: copy ψ to host memory (expander spill).
+    pub fn to_host(&self) -> Result<Vec<f32>> {
+        let lit = self.buf.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+}
+
+/// One compiled model entry point.
+pub struct LoadedModel {
+    pub artifact: ArtifactRecord,
+    exe: SendExe,
+    client: SendClient,
+}
+
+impl LoadedModel {
+    fn literal_from(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("input has {} elements, shape {:?} needs {n}", data.len(), shape);
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    fn check_arity(&self, got: usize) -> Result<()> {
+        if got != self.artifact.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {got}",
+                self.artifact.name,
+                self.artifact.inputs.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute entirely through host literals; returns the flat f32 output.
+    pub fn execute_host(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        self.check_arity(inputs.len())?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.artifact.inputs)
+            .map(|(data, spec)| Self::literal_from(data, &spec.shape))
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.exe.0.execute::<xla::Literal>(&literals)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Execute and keep the (single-array) output on device — used for
+    /// `prefix` so ψ never leaves HBM.
+    pub fn execute_to_device(&self, inputs: &[&[f32]]) -> Result<KvBuffer> {
+        self.check_arity(inputs.len())?;
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .zip(&self.artifact.inputs)
+            .map(|(data, spec)| {
+                self.client
+                    .0
+                    .buffer_from_host_buffer::<f32>(data, &spec.shape, None)
+                    .map_err(|e| anyhow!("h2d: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut out = self.exe.0.execute_b(&bufs)?;
+        let buf = out.remove(0).remove(0);
+        let elements = self.artifact.outputs[0].elements();
+        Ok(KvBuffer { buf, elements, bytes: elements * 4 })
+    }
+
+    /// Execute `rank` with a device-resident ψ as input 0 and host data for
+    /// the remaining inputs (incremental tokens, candidate items).
+    pub fn execute_with_kv(&self, kv: &KvBuffer, rest: &[&[f32]]) -> Result<Vec<f32>> {
+        self.check_arity(1 + rest.len())?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + rest.len());
+        let host_bufs: Vec<xla::PjRtBuffer> = rest
+            .iter()
+            .zip(&self.artifact.inputs[1..])
+            .map(|(data, spec)| {
+                self.client
+                    .0
+                    .buffer_from_host_buffer::<f32>(data, &spec.shape, None)
+                    .map_err(|e| anyhow!("h2d: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        bufs.push(&kv.buf);
+        bufs.extend(host_bufs.iter());
+        let out = self.exe.0.execute_b(&bufs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// H2D: re-materialise a spilled ψ on device (expander reload).
+    pub fn kv_from_host(&self, data: &[f32]) -> Result<KvBuffer> {
+        let spec = &self.artifact.inputs[0];
+        if data.len() != spec.elements() {
+            bail!("kv reload: {} elements, expected {}", data.len(), spec.elements());
+        }
+        let buf = self
+            .client
+            .0
+            .buffer_from_host_buffer::<f32>(data, &spec.shape, None)
+            .map_err(|e| anyhow!("h2d: {e:?}"))?;
+        Ok(KvBuffer { buf, elements: data.len(), bytes: data.len() * 4 })
+    }
+}
+
+/// Compile-once executable pool over an artifact directory.
+pub struct Engine {
+    client: SendClient,
+    pub manifest: Manifest,
+    models: Mutex<HashMap<String, Arc<LoadedModel>>>,
+}
+
+impl Engine {
+    /// Create a PJRT CPU client and index the artifact directory.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client: SendClient(client), manifest, models: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.0.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for `kind` × `spec`.
+    pub fn model(&self, kind: FnKind, spec: &ModelSpec) -> Result<Arc<LoadedModel>> {
+        let artifact = self
+            .manifest
+            .find(kind, spec)
+            .ok_or_else(|| {
+                anyhow!("no artifact for {} {} — regenerate with `make artifacts`", kind.as_str(), spec.name())
+            })?
+            .clone();
+        self.model_for(artifact)
+    }
+
+    pub fn model_by_name(&self, name: &str) -> Result<Arc<LoadedModel>> {
+        let artifact = self
+            .manifest
+            .find_by_name(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?
+            .clone();
+        self.model_for(artifact)
+    }
+
+    fn model_for(&self, artifact: ArtifactRecord) -> Result<Arc<LoadedModel>> {
+        if let Some(m) = self.models.lock().unwrap().get(&artifact.name) {
+            return Ok(m.clone());
+        }
+        // Compile outside the lock: compilation can take seconds and other
+        // variants should not block on it.
+        let path = self.manifest.hlo_path(&artifact);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", artifact.name))?;
+        let model = Arc::new(LoadedModel {
+            artifact,
+            exe: SendExe(exe),
+            client: SendClient(self.client.0.clone()),
+        });
+        let mut map = self.models.lock().unwrap();
+        let entry = map.entry(model.artifact.name.clone()).or_insert_with(|| model.clone());
+        Ok(entry.clone())
+    }
+
+    /// Eagerly compile all three entry points of a variant (warm-up).
+    pub fn warm(&self, spec: &ModelSpec) -> Result<()> {
+        for kind in [FnKind::Prefix, FnKind::Rank, FnKind::Full] {
+            if self.manifest.find(kind, spec).is_some() {
+                self.model(kind, spec)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.models.lock().unwrap().len()
+    }
+}
+
+/// Deterministic synthetic embedding generator standing in for the
+/// production embedding service: user/item ids hash to stable vectors.
+pub fn synth_embedding(seed: u64, rows: usize, dim: usize, scale: f32) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x5eed_e18e_dd1e_5eed);
+    rng.normal_vec_f32(rows * dim, scale)
+}

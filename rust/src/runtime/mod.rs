@@ -1,0 +1,11 @@
+//! PJRT runtime: artifact manifest + compile-once execution engine.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py` and
+//! executes them on the PJRT CPU client. ψ stays on device between the
+//! prefix and rank executions ([`engine::KvBuffer`]).
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactRecord, FnKind, Manifest, TensorSpec};
+pub use engine::{synth_embedding, Engine, KvBuffer, LoadedModel};

@@ -1,0 +1,97 @@
+//! `relaygr calibrate` — measure live PJRT execution costs over the
+//! artifact grid and fit the simulator's CPU hardware profile, writing
+//! `results/calibration.json`.  This closes the loop between live
+//! measurements and the discrete-event cost model (DESIGN.md
+//! §Substitutions).
+
+use anyhow::Result;
+
+use crate::model::HardwareProfile;
+use crate::runtime::{synth_embedding, Engine, FnKind};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::stats::Online;
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let reps = args.get_usize("reps", 5)?;
+    let engine = Engine::load(dir)?;
+    let mut rows = Vec::new();
+    let mut eff = Online::default();
+    println!(
+        "{:<40} {:>12} {:>12} {:>12} {:>14}",
+        "variant", "pre_ms", "rank_ms", "full_ms", "eff_gflops"
+    );
+    for spec in engine.manifest.variants() {
+        let (Ok(prefix_m), Ok(rank_m), Ok(full_m)) = (
+            engine.model(FnKind::Prefix, &spec),
+            engine.model(FnKind::Rank, &spec),
+            engine.model(FnKind::Full, &spec),
+        ) else {
+            continue;
+        };
+        let prefix = synth_embedding(1, spec.prefix_len, spec.dim, 0.5);
+        let incr = synth_embedding(2, spec.incr_len, spec.dim, 0.5);
+        let items = synth_embedding(3, spec.num_items, spec.dim, 0.5);
+        // Warm up once (first execution includes lazy initialisation).
+        let kv = prefix_m.execute_to_device(&[&prefix])?;
+        let _ = rank_m.execute_with_kv(&kv, &[&incr, &items])?;
+        let _ = full_m.execute_host(&[&prefix, &incr, &items])?;
+
+        let mut pre_t = Online::default();
+        let mut rank_t = Online::default();
+        let mut full_t = Online::default();
+        for _ in 0..reps {
+            let t = std::time::Instant::now();
+            let kv = prefix_m.execute_to_device(&[&prefix])?;
+            pre_t.push(t.elapsed().as_secs_f64() * 1e6);
+            let t = std::time::Instant::now();
+            let _ = rank_m.execute_with_kv(&kv, &[&incr, &items])?;
+            rank_t.push(t.elapsed().as_secs_f64() * 1e6);
+            let t = std::time::Instant::now();
+            let _ = full_m.execute_host(&[&prefix, &incr, &items])?;
+            full_t.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+        // Effective FLOP rate from the full pass (the sturdiest estimate).
+        let flops = spec.full_flops(spec.prefix_len);
+        let gflops = flops / full_t.mean() / 1e3;
+        eff.push(flops / full_t.mean());
+        println!(
+            "{:<40} {:>12.2} {:>12.2} {:>12.2} {:>14.2}",
+            spec.name(),
+            pre_t.mean() / 1e3,
+            rank_t.mean() / 1e3,
+            full_t.mean() / 1e3,
+            gflops
+        );
+        let mut row = Json::obj();
+        row.set("variant", spec.name().as_str().into())
+            .set("pre_us", pre_t.mean().into())
+            .set("rank_us", rank_t.mean().into())
+            .set("full_us", full_t.mean().into())
+            .set("flops_full", flops.into())
+            .set("eff_flops_per_us", (flops / full_t.mean()).into());
+        rows.push(row);
+    }
+    anyhow::ensure!(!rows.is_empty(), "no complete variants found in {dir}");
+
+    let fitted = eff.mean();
+    let profile = HardwareProfile::cpu_live();
+    println!(
+        "\nfitted cpu eff_flops_per_us = {fitted:.0} (profile default {:.0}); \
+         simulator cross-check: rank_full({}) model {:.1} ms",
+        profile.eff_flops_per_us,
+        engine.manifest.variants()[0].name(),
+        profile.rank_full_us(&engine.manifest.variants()[0], engine.manifest.variants()[0].prefix_len) / 1e3,
+    );
+    let out_dir = args.get_or("results", "results");
+    std::fs::create_dir_all(out_dir)?;
+    let mut j = Json::obj();
+    j.set("fitted_eff_flops_per_us", fitted.into())
+        .set("platform", engine.platform().as_str().into())
+        .set("rows", Json::Arr(rows));
+    let path = format!("{out_dir}/calibration.json");
+    std::fs::write(&path, j.to_string_pretty())?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! `relaygr serve` — live serving demo: real PJRT executables behind the
+//! relay-race coordinator, driven by a synthetic trace, reporting
+//! wall-clock latency/throughput and cache behaviour.
+
+use anyhow::{anyhow, Result};
+
+use crate::config;
+use crate::metrics::OUTCOME_NAMES;
+use crate::runtime::Manifest;
+use crate::serve::engine::{LiveCluster, LiveConfig};
+use crate::util::cli::Args;
+use crate::workload::WorkloadConfig;
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts").to_string();
+    let mode = config::parse_mode(args.get_or("mode", "relaygr+dram8g"))?;
+    let manifest = Manifest::load(&dir)?;
+    let spec = match args.get("variant") {
+        Some(name) => manifest
+            .artifacts
+            .iter()
+            .find(|a| a.spec.name() == name)
+            .map(|a| a.spec)
+            .ok_or_else(|| anyhow!("no variant '{name}' (see `relaygr inspect`)"))?,
+        None => manifest.live_variant().ok_or_else(|| anyhow!("no artifacts"))?,
+    };
+    let mut cfg = LiveConfig::new(&dir, spec, mode);
+    cfg.n_instances = args.get_usize("instances", cfg.n_instances)?;
+    cfg.m_slots = args.get_usize("slots", cfg.m_slots)?;
+    cfg.stage_scale = args.get_f64("stage-scale", cfg.stage_scale)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+
+    let wl = WorkloadConfig {
+        qps: args.get_f64("qps", 20.0)?,
+        duration_us: (args.get_f64("duration-s", 10.0)? * 1e6) as u64,
+        num_users: args.get_u64("users", 500)?,
+        long_frac: args.get_f64("long-frac", 0.5)?,
+        long_threshold: cfg.long_threshold,
+        min_prefix: 64,
+        max_prefix: spec.prefix_len,
+        fixed_long_len: Some(spec.prefix_len),
+        refresh_prob: args.get_f64("refresh-prob", 0.4)?,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+
+    println!(
+        "serving {} on {} instance(s) × {} slot(s), mode {}, qps {}, {}s",
+        spec.name(),
+        cfg.n_instances,
+        cfg.m_slots,
+        mode.label(),
+        wl.qps,
+        wl.duration_us / 1_000_000
+    );
+    let cluster = LiveCluster::start(cfg)?;
+    // Warm-up: compile + first-execution costs out of the measurement.
+    let mut rng = crate::util::rng::Rng::new(1);
+    let warm = crate::workload::generate(&WorkloadConfig {
+        qps: 10.0,
+        duration_us: 400_000,
+        ..wl.clone()
+    });
+    for req in warm.into_iter().take(4) {
+        let _ = cluster.drive_request(req, &mut rng);
+    }
+
+    let m = cluster.run_trace(&wl)?;
+    println!("\n{}", m.brief());
+    println!("  e2e        {}", m.e2e.summary().fmt_ms());
+    println!("  rank stage {}", m.rank_stage.summary().fmt_ms());
+    println!("  rank exec  {}", m.rank_exec.summary().fmt_ms());
+    if m.load.count() > 0 {
+        println!("  dram load  {}", m.load.summary().fmt_ms());
+    }
+    if m.wait.count() > 0 {
+        println!("  ψ wait     {}", m.wait.summary().fmt_ms());
+    }
+    println!(
+        "  outcomes   {}",
+        m.outcome_counts
+            .iter()
+            .zip(OUTCOME_NAMES)
+            .map(|(c, n)| format!("{n}={c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    println!(
+        "  success    {:.4} (SLO {} ms)   util {:.0}%",
+        m.success_rate(),
+        m.pipeline_slo_us / 1e3,
+        m.mean_util(None) * 100.0
+    );
+    cluster.shutdown();
+    Ok(())
+}

@@ -1,0 +1,612 @@
+//! Live serving engine: the relay-race coordinator running for real —
+//! worker threads per instance, real PJRT executions (the AOT artifacts),
+//! device-resident ψ buffers in an HBM window, host-memory DRAM tier,
+//! wall-clock metrics.
+//!
+//! This is the same control logic as the simulator (identical `relay::*`
+//! state machines) driving actual compute, used by the examples, by
+//! `relaygr serve`, and by `relaygr calibrate` to fit the simulator's CPU
+//! cost profile.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::RunMetrics;
+use crate::model::ModelSpec;
+use crate::relay::baseline::Mode;
+use crate::relay::expander::{DramPolicy, Expander, PseudoAction};
+use crate::relay::hbm::HbmCache;
+use crate::relay::pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
+use crate::relay::router::{Router, RouterConfig};
+use crate::relay::trigger::{BehaviorMeta, Decision, Trigger, TriggerConfig};
+use crate::runtime::{synth_embedding, Engine, FnKind, KvBuffer, LoadedModel};
+use crate::util::rng::Rng;
+use crate::workload::{GenRequest, WorkloadConfig};
+
+/// Cache payload: device-resident in HBM, host copy in the DRAM tier.
+#[derive(Clone)]
+pub enum Payload {
+    Device(Arc<KvBuffer>),
+    Host(Arc<Vec<f32>>),
+}
+
+/// Live-engine configuration.
+#[derive(Clone)]
+pub struct LiveConfig {
+    pub artifacts_dir: String,
+    pub spec: ModelSpec,
+    pub mode: Mode,
+    pub n_instances: usize,
+    pub m_slots: usize,
+    /// HBM window per instance (bytes of ψ).
+    pub hbm_bytes: usize,
+    pub max_reload_concurrency: usize,
+    pub long_threshold: usize,
+    pub pipeline: PipelineConfig,
+    /// Scale factor on retrieval/preproc sleeps (1.0 = production-mirror).
+    pub stage_scale: f64,
+    /// Wait budget for ψ production before falling back (µs).
+    pub wait_budget_us: u64,
+    pub seed: u64,
+}
+
+impl LiveConfig {
+    pub fn new(artifacts_dir: &str, spec: ModelSpec, mode: Mode) -> LiveConfig {
+        LiveConfig {
+            artifacts_dir: artifacts_dir.to_string(),
+            spec,
+            mode,
+            n_instances: 2,
+            m_slots: 2,
+            hbm_bytes: 256 << 20,
+            max_reload_concurrency: 2,
+            long_threshold: spec.prefix_len.saturating_sub(1),
+            pipeline: PipelineConfig::default(),
+            stage_scale: 1.0,
+            wait_budget_us: 200_000,
+            seed: 42,
+        }
+    }
+}
+
+enum Work {
+    PreInfer { user: u64 },
+    Rank { req: GenRequest, issued: Instant, resp: Sender<RankDone> },
+    Stop,
+}
+
+struct RankDone {
+    outcome: CacheOutcome,
+    rank_us: f64,
+    load_us: f64,
+    wait_us: f64,
+    scores: Vec<f32>,
+}
+
+struct InstanceState {
+    hbm: HbmCache<Payload>,
+    expander: Expander<Payload>,
+    /// Users whose ψ production failed (evicted/lost) since last check.
+    produce_failed: HashMap<u64, u64>,
+    pre_done: u64,
+}
+
+/// One live ranking instance: m_slots worker threads over a shared queue.
+pub struct LiveInstance {
+    pub id: usize,
+    tx: Sender<Work>,
+    state: Arc<(Mutex<InstanceState>, Condvar)>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    busy_us: Arc<AtomicU64>,
+}
+
+struct Models {
+    prefix: Arc<LoadedModel>,
+    rank: Arc<LoadedModel>,
+    full: Arc<LoadedModel>,
+}
+
+impl LiveInstance {
+    fn spawn(id: usize, cfg: &LiveConfig, models: Arc<Models>) -> LiveInstance {
+        let dram = match cfg.mode {
+            Mode::RelayGr { dram } => dram,
+            _ => DramPolicy::Disabled,
+        };
+        let state = Arc::new((
+            Mutex::new(InstanceState {
+                hbm: HbmCache::new(cfg.hbm_bytes),
+                expander: Expander::new(dram, cfg.max_reload_concurrency),
+                produce_failed: HashMap::new(),
+                pre_done: 0,
+            }),
+            Condvar::new(),
+        ));
+        let (tx, rx) = channel::<Work>();
+        let rx = Arc::new(Mutex::new(rx));
+        let busy_us = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.m_slots {
+            let rx = rx.clone();
+            let state = state.clone();
+            let models = models.clone();
+            let cfg = cfg.clone();
+            let busy = busy_us.clone();
+            workers.push(std::thread::spawn(move || loop {
+                let work = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match work {
+                    Ok(Work::PreInfer { user }) => {
+                        Self::do_pre_infer(user, &cfg, &models, &state, &busy);
+                    }
+                    Ok(Work::Rank { req, issued, resp }) => {
+                        let done = Self::do_rank(&req, issued, &cfg, &models, &state, &busy);
+                        let _ = resp.send(done);
+                    }
+                    Ok(Work::Stop) | Err(_) => break,
+                }
+            }));
+        }
+        LiveInstance { id, tx, state, workers, busy_us }
+    }
+
+    /// The pre-infer signal handler (§3.2): pseudo-check, then compute ψ
+    /// and keep it device-resident.
+    fn do_pre_infer(
+        user: u64,
+        cfg: &LiveConfig,
+        models: &Models,
+        state: &Arc<(Mutex<InstanceState>, Condvar)>,
+        busy: &Arc<AtomicU64>,
+    ) {
+        let (lock, cv) = &**state;
+        let kv_bytes = cfg.spec.kv_bytes();
+        // Pseudo-pre-infer: skip when already resident / reloadable.
+        let action = {
+            let mut guard = lock.lock().unwrap();
+            let st = &mut *guard;
+            let a = st.expander.pseudo_pre_infer(user, &mut st.hbm, now_us());
+            if matches!(a, PseudoAction::Miss) {
+                if st.hbm.begin_produce(user, kv_bytes, now_us(), cfg.pipeline.t_life_us).is_err()
+                {
+                    st.produce_failed.insert(user, now_us());
+                    cv.notify_all();
+                    return;
+                }
+            }
+            a
+        };
+        match action {
+            PseudoAction::Miss => {
+                // Behaviour fetch + embedding + the prefix pass on device.
+                let prefix = synth_embedding(user ^ 1, cfg.spec.prefix_len, cfg.spec.dim, 0.5);
+                let t0 = Instant::now();
+                let result = models.prefix.execute_to_device(&[&prefix]);
+                busy.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                let mut st = lock.lock().unwrap();
+                match result {
+                    Ok(kv) => {
+                        st.hbm.complete_produce(user, Payload::Device(Arc::new(kv)));
+                    }
+                    Err(e) => {
+                        log::warn!("pre-infer failed for user {user}: {e:#}");
+                        st.produce_failed.insert(user, now_us());
+                    }
+                }
+                st.pre_done += 1;
+                cv.notify_all();
+            }
+            PseudoAction::StartReload { .. } => {
+                Self::do_reload(user, cfg, models, state);
+            }
+            _ => {
+                // Already resident / in flight: re-arm the lifecycle for
+                // this request (§3.4 pseudo pre-inference semantics).
+                let mut st = lock.lock().unwrap();
+                st.hbm.extend_lease(user, now_us() + cfg.pipeline.t_life_us);
+            }
+        }
+    }
+
+    /// Perform one DRAM→HBM reload (real H2D) and wake waiters.
+    fn do_reload(
+        user: u64,
+        cfg: &LiveConfig,
+        models: &Models,
+        state: &Arc<(Mutex<InstanceState>, Condvar)>,
+    ) {
+        let (lock, cv) = &**state;
+        let host = {
+            let mut st = lock.lock().unwrap();
+            st.expander.dram_payload(user)
+        };
+        let installed = match host {
+            Some((bytes, Payload::Host(data))) => match models.rank.kv_from_host(&data) {
+                Ok(kv) => {
+                    let mut st = lock.lock().unwrap();
+                    let (_joiners, next) = st.expander.finish_reload(user);
+                    let ok = st
+                        .hbm
+                        .insert_ready(
+                            user,
+                            bytes,
+                            Payload::Device(Arc::new(kv)),
+                            now_us(),
+                            cfg.pipeline.t_life_us,
+                        )
+                        .is_ok();
+                    if !ok {
+                        st.produce_failed.insert(user, now_us());
+                    }
+                    cv.notify_all();
+                    if let Some(nu) = next {
+                        drop(st);
+                        Self::do_reload(nu, cfg, models, state);
+                    }
+                    ok
+                }
+                Err(e) => {
+                    log::warn!("reload H2D failed for {user}: {e:#}");
+                    false
+                }
+            },
+            _ => false,
+        };
+        if !installed {
+            let mut st = lock.lock().unwrap();
+            let (_, next) = st.expander.finish_reload(user);
+            st.produce_failed.insert(user, now_us());
+            cv.notify_all();
+            if let Some(nu) = next {
+                drop(st);
+                Self::do_reload(nu, cfg, models, state);
+            }
+        }
+    }
+
+    fn do_rank(
+        req: &GenRequest,
+        issued: Instant,
+        cfg: &LiveConfig,
+        models: &Models,
+        state: &Arc<(Mutex<InstanceState>, Condvar)>,
+        busy: &Arc<AtomicU64>,
+    ) -> RankDone {
+        let (lock, cv) = &**state;
+        let user = req.user;
+        let is_long = cfg.mode.is_relay() && req.prefix_len > cfg.long_threshold;
+        let incr = synth_embedding(user ^ 2, cfg.spec.incr_len, cfg.spec.dim, 0.5);
+        let items =
+            synth_embedding(req.id ^ 3, cfg.spec.num_items, cfg.spec.dim, 0.5);
+        let mut load_us = 0.0;
+        let mut wait_us = 0.0;
+        let mut outcome = CacheOutcome::FullInference;
+        let mut kv: Option<Payload> = None;
+
+        if is_long {
+            let wait_start = Instant::now();
+            let mut st = lock.lock().unwrap();
+            loop {
+                let stm = &mut *st;
+                match stm.expander.pseudo_pre_infer(user, &mut stm.hbm, now_us()) {
+                    PseudoAction::HbmHit => {
+                        kv = st.hbm.consume(user);
+                        outcome = CacheOutcome::HbmHit;
+                        break;
+                    }
+                    PseudoAction::WaitProducing
+                    | PseudoAction::JoinReload
+                    | PseudoAction::QueuedReload => {
+                        if st.produce_failed.remove(&user).is_some() {
+                            outcome = CacheOutcome::Fallback;
+                            break;
+                        }
+                        let waited = wait_start.elapsed().as_micros() as u64;
+                        if waited > cfg.wait_budget_us {
+                            outcome = CacheOutcome::Fallback;
+                            break;
+                        }
+                        let (g, _t) = cv
+                            .wait_timeout(st, Duration::from_millis(5))
+                            .expect("condvar poisoned");
+                        st = g;
+                    }
+                    PseudoAction::StartReload { .. } => {
+                        // Perform the H2D inline on this worker (it holds a
+                        // reload-concurrency slot).
+                        drop(st);
+                        let t0 = Instant::now();
+                        Self::do_reload(user, cfg, models, state);
+                        load_us = t0.elapsed().as_micros() as f64;
+                        st = lock.lock().unwrap();
+                        if let Some(p) = st.hbm.consume(user) {
+                            kv = Some(p);
+                            outcome = CacheOutcome::DramHit;
+                        } else {
+                            outcome = CacheOutcome::Fallback;
+                        }
+                        break;
+                    }
+                    PseudoAction::Miss => {
+                        outcome = if req.is_refresh {
+                            CacheOutcome::Fallback
+                        } else {
+                            CacheOutcome::FullInference
+                        };
+                        break;
+                    }
+                }
+            }
+            wait_us = wait_start.elapsed().as_micros() as f64 - load_us;
+        }
+
+        // Execute ranking.
+        let t0 = Instant::now();
+        let scores = match (&kv, outcome) {
+            (Some(Payload::Device(buf)), _) => {
+                models.rank.execute_with_kv(buf, &[&incr, &items]).unwrap_or_default()
+            }
+            _ => {
+                let prefix = synth_embedding(user ^ 1, cfg.spec.prefix_len, cfg.spec.dim, 0.5);
+                models.full.execute_host(&[&prefix, &incr, &items]).unwrap_or_default()
+            }
+        };
+        let rank_us = t0.elapsed().as_micros() as f64;
+        busy.fetch_add(rank_us as u64, Ordering::Relaxed);
+
+        // Spill fresh ψ to DRAM (D2H) and slide the HBM window.
+        if let (Some(Payload::Device(buf)), CacheOutcome::HbmHit) = (&kv, outcome) {
+            if cfg.mode.is_relay() {
+                if let Ok(host) = buf.to_host() {
+                    let mut st = lock.lock().unwrap();
+                    st.expander.spill(user, buf.bytes, Payload::Host(Arc::new(host)));
+                    st.hbm.evict(user);
+                }
+            }
+        } else if let (Some(Payload::Device(_)), CacheOutcome::DramHit) = (&kv, outcome) {
+            let mut st = lock.lock().unwrap();
+            st.hbm.evict(user); // still in DRAM; window slides
+        }
+        let _ = issued;
+        RankDone { outcome, rank_us, load_us, wait_us, scores }
+    }
+
+    fn stop(self) {
+        let _ = self.tx.send(Work::Stop);
+        for _ in 1..self.workers.len() {
+            let _ = self.tx.send(Work::Stop);
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn now_us() -> u64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_micros() as u64
+}
+
+/// The live cluster: router + per-special-instance triggers + instances.
+pub struct LiveCluster {
+    pub cfg: LiveConfig,
+    engine: Arc<Engine>,
+    instances: Vec<LiveInstance>,
+    router: Mutex<Router>,
+    triggers: Mutex<HashMap<usize, Trigger>>,
+    start: Instant,
+}
+
+impl LiveCluster {
+    pub fn start(cfg: LiveConfig) -> Result<LiveCluster> {
+        let engine = Arc::new(Engine::load(&cfg.artifacts_dir)?);
+        let models = Arc::new(Models {
+            prefix: engine.model(FnKind::Prefix, &cfg.spec)?,
+            rank: engine.model(FnKind::Rank, &cfg.spec)?,
+            full: engine.model(FnKind::Full, &cfg.spec)?,
+        });
+        let is_baseline = matches!(cfg.mode, Mode::Baseline);
+        let router = Router::new(RouterConfig {
+            n_instances: cfg.n_instances,
+            servers: cfg.n_instances,
+            r2: if is_baseline { 0.0 } else { (1.0 / cfg.n_instances as f64).max(0.45) },
+            max_special_per_server: 1,
+            gateways: 2,
+            vnodes: 32,
+            normal_policy: crate::relay::router::BalancePolicy::LeastConnections,
+        })?;
+        let tcfg = TriggerConfig {
+            rank_p99_budget_us: cfg.pipeline.rank_budget_us,
+            headroom: 0.8,
+            t_life_us: cfg.pipeline.t_life_us,
+            kv_p99_bytes: cfg.spec.kv_bytes(),
+            hbm_bytes: cfg.hbm_bytes,
+            r1: 1.0,
+            q_m: 1000.0,
+            m_slots: cfg.m_slots,
+            r2: 0.5,
+            n_instances: cfg.n_instances,
+        };
+        let threshold = cfg.long_threshold;
+        let mut triggers = HashMap::new();
+        for &i in router.special_instances() {
+            let est: crate::relay::trigger::Estimator = Box::new(move |m: &BehaviorMeta| {
+                // Live risk test: long prefixes are at risk by construction.
+                if m.prefix_len > threshold {
+                    1e9
+                } else {
+                    0.0
+                }
+            });
+            triggers.insert(i, Trigger::new(tcfg.clone(), est));
+        }
+        let instances =
+            (0..cfg.n_instances).map(|id| LiveInstance::spawn(id, &cfg, models.clone())).collect();
+        Ok(LiveCluster {
+            cfg,
+            engine,
+            instances,
+            router: Mutex::new(router),
+            triggers: Mutex::new(triggers),
+            start: Instant::now(),
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Drive one request through retrieval → preproc → ranking with real
+    /// sleeps and real execution; returns its lifecycle.
+    pub fn drive_request(&self, req: GenRequest, rng: &mut Rng) -> Result<Lifecycle> {
+        let t0 = Instant::now();
+        let is_long = self.cfg.mode.is_relay() && req.prefix_len > self.cfg.long_threshold;
+        let mut admitted = false;
+        if is_long {
+            // Trigger side path (metadata only).
+            let inst = {
+                let mut r = self.router.lock().unwrap();
+                let route = r.route_special(req.user);
+                r.on_complete(route.instance);
+                route.instance
+            };
+            let meta = BehaviorMeta {
+                user: req.user,
+                prefix_len: req.prefix_len,
+                dim: self.cfg.spec.dim,
+            };
+            let decision = self
+                .triggers
+                .lock()
+                .unwrap()
+                .get_mut(&inst)
+                .map(|t| t.decide(now_us(), &meta))
+                .unwrap_or(Decision::NotAtRisk);
+            if decision == Decision::Admit {
+                admitted = true;
+                let _ = self.instances[inst].tx.send(Work::PreInfer { user: req.user });
+            }
+        }
+        let retrieval = StageSampler::from_mean_p99(
+            self.cfg.pipeline.retrieval_mean_us,
+            self.cfg.pipeline.retrieval_p99_us,
+        );
+        let preproc = StageSampler::from_mean_p99(
+            self.cfg.pipeline.preproc_mean_us,
+            self.cfg.pipeline.preproc_p99_us,
+        );
+        sleep_us(retrieval.sample(rng) * self.cfg.stage_scale);
+        let retrieval_done = t0.elapsed().as_micros() as u64;
+        sleep_us(preproc.sample(rng) * self.cfg.stage_scale);
+        let preproc_done = t0.elapsed().as_micros() as u64;
+
+        let inst = {
+            let mut r = self.router.lock().unwrap();
+            let route = if is_long { r.route_special(req.user) } else { r.route_normal(req.user) };
+            route.instance
+        };
+        let (tx, rx): (Sender<RankDone>, Receiver<RankDone>) = channel();
+        self.instances[inst]
+            .tx
+            .send(Work::Rank { req, issued: Instant::now(), resp: tx })
+            .map_err(|_| anyhow!("instance {inst} stopped"))?;
+        let done = rx.recv().map_err(|_| anyhow!("rank worker dropped response"))?;
+        {
+            let mut r = self.router.lock().unwrap();
+            r.on_complete(inst);
+        }
+        if admitted {
+            if let Some(t) = self.triggers.lock().unwrap().values_mut().next() {
+                t.release();
+            }
+        }
+        let done_us = t0.elapsed().as_micros() as u64;
+        anyhow::ensure!(!done.scores.is_empty(), "empty scores from rank execution");
+        Ok(Lifecycle {
+            request: req.id,
+            user: req.user,
+            prefix_len: req.prefix_len,
+            arrival_us: 0,
+            retrieval_done_us: retrieval_done,
+            preproc_done_us: preproc_done,
+            rank_start_us: preproc_done,
+            done_us,
+            pre_us: 0.0,
+            load_us: done.load_us,
+            rank_us: done.rank_us,
+            wait_us: done.wait_us,
+            outcome: done.outcome,
+            admitted,
+            instance: inst,
+        })
+    }
+
+    /// Run a whole trace open-loop; returns aggregated metrics.
+    pub fn run_trace(&self, wl: &WorkloadConfig) -> Result<RunMetrics> {
+        let trace = crate::workload::generate(wl);
+        let metrics = Mutex::new(RunMetrics::new(self.cfg.pipeline.pipeline_slo_us));
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for req in trace {
+                // Open loop: wait until the request's arrival time.
+                let due = Duration::from_micros(req.arrival_us);
+                if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(wait);
+                }
+                let metrics = &metrics;
+                let threshold = self.cfg.long_threshold;
+                let seed = self.cfg.seed ^ req.id;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(seed);
+                    match self.drive_request(req, &mut rng) {
+                        Ok(lc) => {
+                            let mut m = metrics.lock().unwrap();
+                            m.record(&lc, req.prefix_len > threshold);
+                        }
+                        Err(e) => log::warn!("request {} failed: {e:#}", req.id),
+                    }
+                });
+            }
+        });
+        let mut m = metrics.into_inner().unwrap();
+        m.sim_duration_us = t0.elapsed().as_micros() as u64;
+        let elapsed = m.sim_duration_us.max(1) as f64;
+        m.util = self
+            .instances
+            .iter()
+            .map(|i| {
+                (i.busy_us.load(Ordering::Relaxed) as f64
+                    / (elapsed * self.cfg.m_slots as f64))
+                    .min(1.0)
+            })
+            .collect();
+        m.special_instances = self.router.lock().unwrap().special_instances().to_vec();
+        for inst in &self.instances {
+            let st = inst.state.0.lock().unwrap();
+            let _ = st.pre_done;
+        }
+        Ok(m)
+    }
+
+    pub fn shutdown(self) {
+        for inst in self.instances {
+            inst.stop();
+        }
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+fn sleep_us(us: f64) {
+    if us > 0.0 {
+        std::thread::sleep(Duration::from_micros(us as u64));
+    }
+}

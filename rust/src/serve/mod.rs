@@ -1,0 +1,9 @@
+//! Live serving engine: the relay-race coordinator over real PJRT
+//! executions (threads + condvars instead of the simulator's virtual
+//! clock), plus the `serve` and `calibrate` CLI entry points.
+
+pub mod calibrate;
+pub mod cli;
+pub mod engine;
+
+pub use engine::{LiveCluster, LiveConfig, Payload};

@@ -1,0 +1,209 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Grammar: `prog <subcommand> [positionals...] [--key value | --key=value | --flag]`.
+//! Unknown keys are collected and can be rejected by the caller for
+//! strictness.  Typed getters parse on demand with contextual errors.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub program: String,
+    pub positionals: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0] handled here).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut it = argv.into_iter();
+        let program = it.next().unwrap_or_else(|| "relaygr".into());
+        let mut args = Args { program, ..Default::default() };
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err(CliError("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.kv.insert(k.to_string(), v.to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    args.kv.insert(stripped.to_string(), rest[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args())
+    }
+
+    /// First positional = subcommand.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positionals.first().map(String::as_str)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected number, got '{v}'"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated list of numbers, e.g. `--lens 1024,2048,4096`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{key}: bad element '{p}'")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Keys the caller never consumed (for strict validation).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.kv.keys().map(String::as_str).chain(self.flags.iter().map(String::as_str))
+    }
+}
+
+/// Help text builder shared by the binary's subcommands.
+pub struct Help {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub usage: &'static str,
+    pub options: Vec<(&'static str, &'static str)>,
+}
+
+impl Help {
+    pub fn render(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}\n", self.name, self.about, self.usage);
+        if !self.options.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for (opt, desc) in &self.options {
+                s.push_str(&format!("  {opt:<28} {desc}\n"));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(std::iter::once("prog".to_string()).chain(v.iter().map(|s| s.to_string())))
+            .unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["figure", "fig11a"]);
+        assert_eq!(a.subcommand(), Some("figure"));
+        assert_eq!(a.positionals, vec!["figure", "fig11a"]);
+    }
+
+    #[test]
+    fn kv_both_syntaxes() {
+        let a = parse(&["serve", "--qps", "100", "--seed=7"]);
+        assert_eq!(a.get("qps"), Some("100"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.get_f64("qps", 0.0).unwrap(), 100.0);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse(&["serve", "--verbose", "--qps", "5"]);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+        assert_eq!(a.get("qps"), Some("5"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.has_flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse(&["x", "--lens", "1,2, 3"]);
+        assert_eq!(a.get_usize_list("lens", &[9]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.get_usize_list("other", &[9]).unwrap(), vec![9]);
+        assert_eq!(a.get_or("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_usize("n", 0).is_err());
+        assert!(a.get_f64("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--delta -5" : '-5' doesn't start with '--' so it's a value.
+        let a = parse(&["x", "--delta", "-5"]);
+        assert_eq!(a.get_f64("delta", 0.0).unwrap(), -5.0);
+    }
+}

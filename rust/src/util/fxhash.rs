@@ -1,0 +1,85 @@
+//! Fast non-cryptographic hasher for the coordinator's u64-keyed hot
+//! maps (request ids, user ids).  std's default SipHash is DoS-resistant
+//! but ~3-4× slower; keys here are internal identifiers, not
+//! attacker-controlled strings, so a multiply-xor finalizer (the same
+//! construction as rustc's FxHash/splitmix) is appropriate.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-xor hasher specialised for integer keys.
+#[derive(Default, Clone, Copy)]
+pub struct FxHasher {
+    state: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u8(b);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.write_u64(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.write_u64(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        let mut z = self.state.rotate_left(5) ^ n;
+        z = z.wrapping_mul(SEED);
+        z ^= z >> 32;
+        self.state = z;
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.write_u64(n as u64);
+    }
+}
+
+/// `HashMap` with the fast hasher.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distributes_sequential_keys() {
+        // Sequential ids must not collide in low bits (bucket index).
+        let mut buckets = [0u32; 64];
+        for k in 0..64_000u64 {
+            let mut h = FxHasher::default();
+            h.write_u64(k);
+            buckets[(h.finish() & 63) as usize] += 1;
+        }
+        let (min, max) = (buckets.iter().min().unwrap(), buckets.iter().max().unwrap());
+        assert!(*min > 700 && *max < 1300, "skewed buckets: {min}..{max}");
+    }
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FxHashMap<u64, u64> = FxHashMap::default();
+        for k in 0..10_000u64 {
+            m.insert(k, k * 3);
+        }
+        for k in 0..10_000u64 {
+            assert_eq!(m[&k], k * 3);
+        }
+        assert_eq!(m.len(), 10_000);
+    }
+}

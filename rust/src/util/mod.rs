@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! JSON, PRNG + distributions, histograms/stats, CLI parsing, logging and
+//! a property-test driver (standing in for serde/rand/hdrhistogram/clap/
+//! proptest, none of which are in the vendored crate set).
+
+pub mod cli;
+pub mod fxhash;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,327 @@
+//! Synthetic production-mirror workload (§4.1).
+//!
+//! The paper evaluates with real queries whose key statistics it reports:
+//! *"most users have short histories and fewer than 6% have long
+//! sequences exceeding 2K tokens"*, request lifecycles of a few hundred
+//! milliseconds, rapid-refresh bursts from the same user (the DRAM-reuse
+//! opportunity), and hundreds of QPS per instance.  This module generates
+//! open-loop Poisson traffic matching those statistics, deterministically
+//! from a seed.
+//!
+//! Per-user sequence length is a *stable function of the user id* (a
+//! user's behaviour history does not change between their requests within
+//! a run), drawn from a truncated log-normal fitted so that
+//! `P(len > long_threshold) ≈ long_frac`.
+
+use crate::relay::trigger::BehaviorMeta;
+use crate::util::rng::Rng;
+
+/// Workload shape parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Offered load, queries/s (open loop).
+    pub qps: f64,
+    /// Trace duration in µs of simulated time.
+    pub duration_us: u64,
+    /// User population size.
+    pub num_users: u64,
+    /// Zipf exponent for user popularity (natural same-user repeats).
+    pub zipf_s: f64,
+    /// Target fraction of users with prefix > `long_threshold` (~0.06).
+    pub long_frac: f64,
+    /// The "over-long sequence" service threshold (paper: e.g. 2K/4K).
+    pub long_threshold: usize,
+    /// Length clamps (tokens).
+    pub min_prefix: usize,
+    pub max_prefix: usize,
+    /// Probability a (long-sequence) request is followed by a rapid-refresh
+    /// burst, and the burst shape.
+    pub refresh_prob: f64,
+    pub refresh_burst_max: usize,
+    pub refresh_gap_us: (u64, u64),
+    /// If set, every long user's prefix is exactly this length — the
+    /// controlled-length microbench setup of the paper's sweeps
+    /// (Figs. 11a, 13, 14).
+    pub fixed_long_len: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            qps: 300.0,
+            duration_us: 30_000_000,
+            num_users: 200_000,
+            zipf_s: 1.05,
+            long_frac: 0.06,
+            long_threshold: 2048,
+            min_prefix: 64,
+            max_prefix: 8192,
+            refresh_prob: 0.3,
+            refresh_burst_max: 3,
+            refresh_gap_us: (400_000, 3_000_000),
+            fixed_long_len: None,
+            seed: 42,
+        }
+    }
+}
+
+/// One generated request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GenRequest {
+    pub id: u64,
+    pub arrival_us: u64,
+    pub user: u64,
+    /// Long-term behaviour prefix length for this user (tokens).
+    pub prefix_len: usize,
+    /// True for rapid-refresh follow-ups of an earlier request.
+    pub is_refresh: bool,
+}
+
+impl GenRequest {
+    pub fn meta(&self, dim: usize) -> BehaviorMeta {
+        BehaviorMeta { user: self.user, prefix_len: self.prefix_len, dim }
+    }
+}
+
+/// Fit LN(μ, σ) so that P(len > threshold) = long_frac with median well
+/// below the threshold (short-history mass).
+fn lognormal_params(cfg: &WorkloadConfig) -> (f64, f64) {
+    // Median at threshold/4 → μ = ln(threshold/4).
+    let mu = (cfg.long_threshold as f64 / 4.0).ln();
+    // P(X > T) = 1 - Φ((lnT - μ)/σ) = long_frac → (lnT - μ)/σ = z(1-frac).
+    let z = inv_phi(1.0 - cfg.long_frac);
+    let sigma = ((cfg.long_threshold as f64).ln() - mu) / z;
+    (mu, sigma)
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation).
+fn inv_phi(p: f64) -> f64 {
+    debug_assert!((0.0..1.0).contains(&p));
+    const A: [f64; 6] = [
+        -39.69683028665376,
+        220.9460984245205,
+        -275.9285104469687,
+        138.3577518672690,
+        -30.66479806614716,
+        2.506628277459239,
+    ];
+    const B: [f64; 5] = [
+        -54.47609879822406,
+        161.5858368580409,
+        -155.6989798598866,
+        66.80131188771972,
+        -13.28068155288572,
+    ];
+    const C: [f64; 6] = [
+        -0.007784894002430293,
+        -0.3223964580411365,
+        -2.400758277161838,
+        -2.549732539343734,
+        4.374664141464968,
+        2.938163982698783,
+    ];
+    const D: [f64; 4] = [
+        0.007784695709041462,
+        0.3224671290700398,
+        2.445134137142996,
+        3.754408661907416,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// Deterministic per-user prefix length.
+pub fn user_prefix_len(cfg: &WorkloadConfig, user: u64) -> usize {
+    let (mu, sigma) = lognormal_params(cfg);
+    let mut rng = Rng::new(cfg.seed ^ user.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x1e57);
+    let len = rng.lognormal(mu, sigma);
+    let len = (len as usize).clamp(cfg.min_prefix, cfg.max_prefix);
+    match cfg.fixed_long_len {
+        Some(fixed) if len > cfg.long_threshold => fixed,
+        _ => len,
+    }
+}
+
+/// Generate the full arrival trace, sorted by arrival time.
+pub fn generate(cfg: &WorkloadConfig) -> Vec<GenRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Vec::new();
+    let mut t = 0.0_f64;
+    let rate_per_us = cfg.qps / 1e6;
+    let mut id = 0u64;
+    while (t as u64) < cfg.duration_us {
+        t += rng.exponential(rate_per_us);
+        let arrival = t as u64;
+        if arrival >= cfg.duration_us {
+            break;
+        }
+        let user = rng.zipf(cfg.num_users, cfg.zipf_s) - 1;
+        let prefix_len = user_prefix_len(cfg, user);
+        out.push(GenRequest { id, arrival_us: arrival, user, prefix_len, is_refresh: false });
+        id += 1;
+        // Rapid-refresh bursts: same user again shortly after — the
+        // short-term cross-request reuse the expander targets.
+        if prefix_len > cfg.long_threshold && rng.bernoulli(cfg.refresh_prob) {
+            let burst = 1 + rng.range(0, cfg.refresh_burst_max);
+            let mut rt = arrival;
+            for _ in 0..burst {
+                rt += rng.range(cfg.refresh_gap_us.0 as usize, cfg.refresh_gap_us.1 as usize)
+                    as u64;
+                if rt >= cfg.duration_us {
+                    break;
+                }
+                out.push(GenRequest {
+                    id,
+                    arrival_us: rt,
+                    user,
+                    prefix_len,
+                    is_refresh: true,
+                });
+                id += 1;
+            }
+        }
+    }
+    out.sort_by_key(|r| (r.arrival_us, r.id));
+    out
+}
+
+/// Trace statistics (sanity + tests + EXPERIMENTS.md reporting).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceStats {
+    pub requests: usize,
+    pub distinct_users: usize,
+    pub long_user_frac: f64,
+    pub long_request_frac: f64,
+    pub refresh_frac: f64,
+    pub mean_prefix: f64,
+    pub effective_qps: f64,
+}
+
+pub fn stats(cfg: &WorkloadConfig, trace: &[GenRequest]) -> TraceStats {
+    use std::collections::HashSet;
+    let mut users: HashSet<u64> = HashSet::new();
+    let mut long_users: HashSet<u64> = HashSet::new();
+    let (mut long_req, mut refresh, mut sum_prefix) = (0usize, 0usize, 0f64);
+    for r in trace {
+        users.insert(r.user);
+        if r.prefix_len > cfg.long_threshold {
+            long_users.insert(r.user);
+            long_req += 1;
+        }
+        if r.is_refresh {
+            refresh += 1;
+        }
+        sum_prefix += r.prefix_len as f64;
+    }
+    let n = trace.len().max(1);
+    TraceStats {
+        requests: trace.len(),
+        distinct_users: users.len(),
+        long_user_frac: long_users.len() as f64 / users.len().max(1) as f64,
+        long_request_frac: long_req as f64 / n as f64,
+        refresh_frac: refresh as f64 / n as f64,
+        mean_prefix: sum_prefix / n as f64,
+        effective_qps: trace.len() as f64 / (cfg.duration_us as f64 / 1e6),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inv_phi_known_values() {
+        assert!((inv_phi(0.5)).abs() < 1e-6);
+        assert!((inv_phi(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inv_phi(0.94) - 1.554774).abs() < 1e-4);
+        assert!((inv_phi(0.01) + 2.326348).abs() < 1e-4);
+    }
+
+    #[test]
+    fn user_lengths_deterministic_and_clamped() {
+        let cfg = WorkloadConfig::default();
+        for u in 0..200u64 {
+            let a = user_prefix_len(&cfg, u);
+            let b = user_prefix_len(&cfg, u);
+            assert_eq!(a, b);
+            assert!((cfg.min_prefix..=cfg.max_prefix).contains(&a));
+        }
+    }
+
+    #[test]
+    fn long_user_fraction_near_target() {
+        let cfg = WorkloadConfig::default();
+        let long = (0..50_000u64)
+            .filter(|&u| user_prefix_len(&cfg, u) > cfg.long_threshold)
+            .count();
+        let frac = long as f64 / 50_000.0;
+        assert!(
+            (frac - cfg.long_frac).abs() < 0.015,
+            "long-user fraction {frac:.3} vs target {}",
+            cfg.long_frac
+        );
+    }
+
+    #[test]
+    fn trace_rate_and_ordering() {
+        let cfg = WorkloadConfig { duration_us: 20_000_000, qps: 500.0, ..Default::default() };
+        let trace = generate(&cfg);
+        let s = stats(&cfg, &trace);
+        // Refreshes add on top of the base Poisson rate.
+        assert!(s.effective_qps > 450.0 && s.effective_qps < 700.0, "{s:?}");
+        assert!(trace.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+        // ids unique
+        let mut ids: Vec<u64> = trace.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len());
+    }
+
+    #[test]
+    fn refreshes_keep_user_and_length() {
+        let cfg = WorkloadConfig { refresh_prob: 1.0, ..Default::default() };
+        let trace = generate(&cfg);
+        use std::collections::HashMap;
+        let base: HashMap<u64, usize> =
+            trace.iter().filter(|r| !r.is_refresh).map(|r| (r.user, r.prefix_len)).collect();
+        for r in trace.iter().filter(|r| r.is_refresh) {
+            assert_eq!(base.get(&r.user), Some(&r.prefix_len));
+            assert!(r.prefix_len > cfg.long_threshold, "only long users burst");
+        }
+        let s = stats(&cfg, &trace);
+        assert!(s.refresh_frac > 0.02, "refresh traffic present: {s:?}");
+    }
+
+    #[test]
+    fn determinism_per_seed() {
+        let cfg = WorkloadConfig { duration_us: 5_000_000, ..Default::default() };
+        assert_eq!(generate(&cfg), generate(&cfg));
+        let cfg2 = WorkloadConfig { seed: 43, ..cfg };
+        assert_ne!(generate(&cfg), generate(&cfg2));
+    }
+
+    #[test]
+    fn zipf_popularity_causes_repeats() {
+        let cfg = WorkloadConfig { duration_us: 10_000_000, ..Default::default() };
+        let trace = generate(&cfg);
+        let s = stats(&cfg, &trace);
+        assert!(
+            (s.distinct_users as f64) < trace.len() as f64 * 0.9,
+            "expected user repeats: {s:?}"
+        );
+    }
+}

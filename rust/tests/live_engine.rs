@@ -1,0 +1,152 @@
+//! Integration: the live threaded serving engine over real artifacts —
+//! relay-race correctness under concurrency, fallback safety, DRAM reuse.
+
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::expander::DramPolicy;
+use relaygr::runtime::Manifest;
+use relaygr::serve::{LiveCluster, LiveConfig};
+use relaygr::util::rng::Rng;
+use relaygr::workload::WorkloadConfig;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("RELAYGR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&dir).join("manifest.json").exists().then_some(dir)
+}
+
+fn smallest_variant(dir: &str) -> relaygr::model::ModelSpec {
+    let manifest = Manifest::load(dir).unwrap();
+    manifest
+        .variants()
+        .into_iter()
+        .min_by_key(|s| s.prefix_len * s.dim * s.layers)
+        .unwrap()
+}
+
+fn fast_config(dir: &str, mode: Mode) -> LiveConfig {
+    let mut cfg = LiveConfig::new(dir, smallest_variant(dir), mode);
+    // Compress the pipeline stages so the test runs in seconds.
+    cfg.stage_scale = 0.1;
+    cfg
+}
+
+fn workload(cfg: &LiveConfig, qps: f64, secs: f64) -> WorkloadConfig {
+    WorkloadConfig {
+        qps,
+        duration_us: (secs * 1e6) as u64,
+        num_users: 50,
+        long_frac: 0.6,
+        long_threshold: cfg.long_threshold,
+        min_prefix: 64,
+        max_prefix: cfg.spec.prefix_len,
+        fixed_long_len: Some(cfg.spec.prefix_len),
+        refresh_prob: 0.6,
+        refresh_gap_us: (50_000, 200_000),
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn relay_trace_completes_with_cache_hits() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let cfg = fast_config(&dir, Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) });
+    let wl = workload(&cfg, 25.0, 4.0);
+    let cluster = LiveCluster::start(cfg).unwrap();
+    let m = cluster.run_trace(&wl).unwrap();
+    assert!(m.completed > 40, "{}", m.brief());
+    let hits = m.outcome_counts[1] + m.outcome_counts[2] + m.outcome_counts[3];
+    assert!(hits > 0, "expected cache hits: {}", m.brief());
+    // Every request produced scores (drive_request enforces non-empty).
+    assert!(m.rank_exec.count() == m.completed);
+    cluster.shutdown();
+}
+
+#[test]
+fn baseline_trace_never_touches_caches() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let cfg = fast_config(&dir, Mode::Baseline);
+    let wl = workload(&cfg, 15.0, 3.0);
+    let cluster = LiveCluster::start(cfg).unwrap();
+    let m = cluster.run_trace(&wl).unwrap();
+    assert!(m.completed > 20, "{}", m.brief());
+    assert_eq!(m.outcome_counts[1] + m.outcome_counts[2] + m.outcome_counts[3], 0);
+    assert_eq!(m.admitted, 0);
+    cluster.shutdown();
+}
+
+#[test]
+fn relay_rank_stage_beats_baseline() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let run = |mode| {
+        let cfg = fast_config(&dir, mode);
+        let wl = workload(&cfg, 20.0, 4.0);
+        let cluster = LiveCluster::start(cfg).unwrap();
+        // Warm-up so compile costs don't pollute the comparison.
+        let mut rng = Rng::new(3);
+        for req in relaygr::workload::generate(&WorkloadConfig {
+            qps: 10.0,
+            duration_us: 300_000,
+            ..wl.clone()
+        })
+        .into_iter()
+        .take(3)
+        {
+            let _ = cluster.drive_request(req, &mut rng);
+        }
+        let m = cluster.run_trace(&wl).unwrap();
+        cluster.shutdown();
+        m
+    };
+    let base = run(Mode::Baseline);
+    let relay = run(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) });
+    // The relay's ranking critical path must be clearly faster at p50
+    // (full inference leaves the critical path for cache hits).
+    assert!(
+        relay.rank_exec.p50() < base.rank_exec.p50(),
+        "relay rank p50 {:.1}µs !< baseline {:.1}µs",
+        relay.rank_exec.p50(),
+        base.rank_exec.p50()
+    );
+}
+
+#[test]
+fn concurrent_same_user_requests_are_safe() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // Hammer one user from many threads: single-flight + pseudo-pre-infer
+    // must keep everything consistent (no panics, valid scores).
+    let cfg = fast_config(&dir, Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) });
+    let threshold = cfg.long_threshold;
+    let prefix_len = cfg.spec.prefix_len;
+    let cluster = LiveCluster::start(cfg).unwrap();
+    std::thread::scope(|s| {
+        for i in 0..8u64 {
+            let cluster = &cluster;
+            s.spawn(move || {
+                let mut rng = Rng::new(i);
+                let req = relaygr::workload::GenRequest {
+                    id: i,
+                    arrival_us: 0,
+                    user: 777,
+                    prefix_len,
+                    is_refresh: i > 0,
+                };
+                let lc = cluster.drive_request(req, &mut rng).unwrap();
+                assert!(lc.rank_us > 0.0);
+                let _ = threshold;
+            });
+        }
+    });
+    cluster.shutdown();
+}

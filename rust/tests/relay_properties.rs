@@ -1,0 +1,244 @@
+//! Cross-module property and failure-injection tests: the relay state
+//! machines composed the way the simulator composes them, under random
+//! interleavings, churn and adversarial timing.
+
+use relaygr::cluster::{run_sim, SimConfig};
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::expander::{DramPolicy, Expander, PseudoAction};
+use relaygr::relay::hbm::{EntryState, HbmCache};
+use relaygr::relay::router::{Router, RouterConfig};
+use relaygr::relay::trigger::{BehaviorMeta, Decision, Trigger, TriggerConfig};
+use relaygr::util::prop;
+use relaygr::util::rng::Rng;
+use relaygr::workload::WorkloadConfig;
+
+const MB: usize = 1 << 20;
+
+/// The full admission→produce→route→consume→spill→reload cycle under
+/// random interleavings never double-reloads, never overcommits HBM, and
+/// always leaves the trigger's live count consistent.
+#[test]
+fn prop_full_relay_cycle_consistent() {
+    prop::check("relay-full-cycle", 60, |rng: &mut Rng| {
+        let mut cfg = TriggerConfig::paper_example();
+        cfg.kv_p99_bytes = 32 * MB;
+        cfg.q_m = 1e9;
+        let mut trigger = Trigger::new(cfg, Box::new(|_: &BehaviorMeta| 1e9));
+        let mut hbm: HbmCache<u32> = HbmCache::new(512 * MB);
+        let mut ex: Expander<u32> = Expander::new(DramPolicy::Capacity(1 << 30), 2);
+        let mut router = Router::new(RouterConfig::default()).unwrap();
+        let mut now = 0u64;
+        let mut producing: Vec<u64> = Vec::new();
+        let mut reloading: Vec<u64> = Vec::new();
+        for step in 0..400 {
+            now += rng.range(0, 30_000) as u64;
+            let user = rng.range_u64(12);
+            match rng.range(0, 5) {
+                // Admission + signal-side pseudo pre-infer.
+                0 => {
+                    let meta = BehaviorMeta { user, prefix_len: 4096, dim: 256 };
+                    if trigger.decide(now, &meta) == Decision::Admit {
+                        let r1 = router.route_special(user);
+                        let r2 = router.route_special(user);
+                        router.on_complete(r1.instance);
+                        router.on_complete(r2.instance);
+                        if r1.instance != r2.instance {
+                            return Err(format!("step {step}: affinity broken"));
+                        }
+                        match ex.pseudo_pre_infer(user, &mut hbm, now) {
+                            PseudoAction::Miss => {
+                                if hbm.begin_produce(user, 32 * MB, now, 300_000).is_ok() {
+                                    producing.push(user);
+                                } else {
+                                    trigger.release();
+                                }
+                            }
+                            PseudoAction::StartReload { .. } => reloading.push(user),
+                            _ => trigger.release(),
+                        }
+                    }
+                }
+                // Pre-inference completes.
+                1 => {
+                    if let Some(i) = (!producing.is_empty()).then(|| rng.range(0, producing.len()))
+                    {
+                        let u = producing.remove(i);
+                        if !hbm.complete_produce(u, 1) {
+                            trigger.release(); // lost work
+                        }
+                    }
+                }
+                // Reload completes.
+                2 => {
+                    if let Some(i) = (!reloading.is_empty()).then(|| rng.range(0, reloading.len()))
+                    {
+                        let u = reloading.remove(i);
+                        let done = ex.complete_reload(u, 1, 32 * MB, now, 300_000, &mut hbm);
+                        if let Some(next) = done.next {
+                            reloading.push(next);
+                        }
+                    }
+                }
+                // Ranking consumes + spills.
+                3 => {
+                    if hbm.state_of(user) == Some(EntryState::Ready) {
+                        hbm.consume(user).ok_or("ready entry must consume")?;
+                        trigger.release();
+                        if ex.spill(user, 32 * MB, 1) {
+                            hbm.evict(user);
+                        }
+                    }
+                }
+                // Rank-side pseudo check (may start a reload).
+                _ => match ex.pseudo_pre_infer(user, &mut hbm, now) {
+                    PseudoAction::StartReload { .. } => reloading.push(user),
+                    _ => {}
+                },
+            }
+            if hbm.used_bytes() > hbm.capacity_bytes() {
+                return Err("HBM overcommitted".into());
+            }
+            if ex.active_reloads() > 2 {
+                return Err("reload concurrency cap violated".into());
+            }
+            let mut sorted = reloading.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != reloading.len() {
+                return Err("duplicate in-flight reload for one user".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Simulator results are a pure function of (config, workload seed):
+/// different seeds differ, same seeds agree bit-for-bit, and outcome
+/// totals always equal completed requests.
+#[test]
+fn prop_sim_determinism_and_accounting() {
+    prop::check("sim-determinism", 10, |rng: &mut Rng| {
+        let seed = rng.next_u64() % 1000;
+        let wl = WorkloadConfig {
+            qps: 60.0 + (seed % 5) as f64 * 20.0,
+            duration_us: 4_000_000,
+            num_users: 10_000,
+            fixed_long_len: Some(3072),
+            max_prefix: 3072,
+            seed,
+            ..Default::default()
+        };
+        let mode = Mode::RelayGr { dram: DramPolicy::Capacity(64 << 30) };
+        let a = run_sim(SimConfig::standard(mode), &wl).map_err(|e| e.to_string())?;
+        let b = run_sim(SimConfig::standard(mode), &wl).map_err(|e| e.to_string())?;
+        if a.completed != b.completed || a.outcome_counts != b.outcome_counts {
+            return Err("nondeterministic run".into());
+        }
+        if a.p99_e2e() != b.p99_e2e() {
+            return Err("nondeterministic latency".into());
+        }
+        let total: u64 = a.outcome_counts.iter().sum();
+        if total != a.completed {
+            return Err(format!("outcome leak: {} vs {}", total, a.completed));
+        }
+        Ok(())
+    });
+}
+
+/// Affinity churn injection: removing special instances mid-run must only
+/// remap the victims' keys and never route to a dead instance.
+#[test]
+fn prop_router_churn_safety() {
+    prop::check("router-churn", 40, |rng: &mut Rng| {
+        let mut router = Router::new(RouterConfig::default()).unwrap();
+        let users: Vec<u64> = (0..300).map(|_| rng.next_u64() % 5000).collect();
+        for round in 0..4 {
+            let specials = router.special_instances().to_vec();
+            if specials.len() > 1 && rng.bernoulli(0.5) {
+                let victim = *rng.choice(&specials);
+                router.remove_special(victim);
+                for &u in &users {
+                    let r = router.route_special(u);
+                    router.on_complete(r.instance);
+                    if r.instance == victim {
+                        return Err(format!("round {round}: routed to removed {victim}"));
+                    }
+                }
+            }
+            // Re-adding restores it as a valid target.
+            if rng.bernoulli(0.3) {
+                if let Some(&inst) = specials.first() {
+                    router.add_special(inst);
+                }
+            }
+            for &u in &users {
+                let a = router.route_special(u).instance;
+                let b = router.route_special(u).instance;
+                router.on_complete(a);
+                router.on_complete(b);
+                if a != b {
+                    return Err("affinity violated after churn".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Failure injection: a workload far beyond Q_max must be shed by the
+/// trigger without ever losing a live cache, and the system must still
+/// serve every request (fallback, never drop).
+#[test]
+fn overload_sheds_but_serves_everything() {
+    let wl = WorkloadConfig {
+        qps: 2500.0,
+        duration_us: 5_000_000,
+        num_users: 50_000,
+        fixed_long_len: Some(4096),
+        max_prefix: 4096,
+        seed: 3,
+        ..Default::default()
+    };
+    let trace_len = relaygr::workload::generate(&wl).len();
+    let m = run_sim(
+        SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled }),
+        &wl,
+    )
+    .unwrap();
+    assert_eq!(m.completed as usize, trace_len, "no request may be dropped");
+    assert!(m.trigger.rate_limited + m.trigger.footprint_limited > 0);
+    assert_eq!(m.hbm.lost, 0);
+    assert_eq!(m.hbm.rejected, 0);
+}
+
+/// DRAM capacity ablation: smaller tiers must evict more and never hit
+/// more than bigger tiers under the same workload.
+#[test]
+fn dram_capacity_monotonicity() {
+    let run = |gb: usize| {
+        let wl = WorkloadConfig {
+            qps: 120.0,
+            duration_us: 8_000_000,
+            num_users: 30_000,
+            fixed_long_len: Some(3072),
+            max_prefix: 3072,
+            refresh_prob: 0.8,
+            seed: 11,
+            ..Default::default()
+        };
+        run_sim(
+            SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(gb << 30) }),
+            &wl,
+        )
+        .unwrap()
+    };
+    let small = run(1);
+    let big = run(512);
+    assert!(
+        big.dram_hit_rate() >= small.dram_hit_rate(),
+        "bigger DRAM must not hit less: {:.3} vs {:.3}",
+        big.dram_hit_rate(),
+        small.dram_hit_rate()
+    );
+    assert!(small.expander.dram_evictions >= big.expander.dram_evictions);
+}

@@ -1,0 +1,151 @@
+//! Integration: the python-AOT → rust-PJRT bridge over the real artifact
+//! grid — ε-equivalence (cached vs full), ψ residency, spill/reload
+//! numerics, and manifest consistency.
+//!
+//! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+
+use relaygr::model::ModelType;
+use relaygr::runtime::{synth_embedding, Engine, FnKind};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("RELAYGR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&dir).join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn epsilon_bound_holds_for_every_variant() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let mut checked = 0;
+    for spec in engine.manifest.variants() {
+        if engine.manifest.find(FnKind::Full, &spec).is_none() {
+            continue;
+        }
+        let prefix_m = engine.model(FnKind::Prefix, &spec).unwrap();
+        let rank_m = engine.model(FnKind::Rank, &spec).unwrap();
+        let full_m = engine.model(FnKind::Full, &spec).unwrap();
+        let prefix = synth_embedding(11, spec.prefix_len, spec.dim, 0.5);
+        let incr = synth_embedding(12, spec.incr_len, spec.dim, 0.5);
+        let items = synth_embedding(13, spec.num_items, spec.dim, 0.5);
+
+        let full = full_m.execute_host(&[&prefix, &incr, &items]).unwrap();
+        let kv = prefix_m.execute_to_device(&[&prefix]).unwrap();
+        let cached = rank_m.execute_with_kv(&kv, &[&incr, &items]).unwrap();
+
+        assert_eq!(full.len(), spec.num_items);
+        let eps = full
+            .iter()
+            .zip(&cached)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(eps <= 1e-3, "{}: ε = {eps}", spec.name());
+        // Guard against the zeroed-constants failure mode.
+        let mag = full.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        assert!(mag > 1e-3, "{}: all-zero scores (elided constants?)", spec.name());
+        checked += 1;
+    }
+    assert!(checked >= 5, "expected a real grid, checked {checked}");
+}
+
+#[test]
+fn kv_buffer_survives_spill_and_reload_exactly() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let spec = engine.manifest.default_variant().unwrap();
+    let prefix_m = engine.model(FnKind::Prefix, &spec).unwrap();
+    let rank_m = engine.model(FnKind::Rank, &spec).unwrap();
+    let prefix = synth_embedding(21, spec.prefix_len, spec.dim, 0.5);
+    let incr = synth_embedding(22, spec.incr_len, spec.dim, 0.5);
+    let items = synth_embedding(23, spec.num_items, spec.dim, 0.5);
+
+    let kv = prefix_m.execute_to_device(&[&prefix]).unwrap();
+    let direct = rank_m.execute_with_kv(&kv, &[&incr, &items]).unwrap();
+    // D2H spill → H2D reload (the expander's DRAM round trip).
+    let host = kv.to_host().unwrap();
+    assert_eq!(host.len(), kv.elements);
+    let kv2 = rank_m.kv_from_host(&host).unwrap();
+    let reloaded = rank_m.execute_with_kv(&kv2, &[&incr, &items]).unwrap();
+    assert_eq!(direct, reloaded, "spill/reload must preserve ψ bit-for-bit");
+}
+
+#[test]
+fn candidate_independence_one_psi_many_item_sets() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let spec = engine.manifest.default_variant().unwrap();
+    let prefix_m = engine.model(FnKind::Prefix, &spec).unwrap();
+    let rank_m = engine.model(FnKind::Rank, &spec).unwrap();
+    let full_m = engine.model(FnKind::Full, &spec).unwrap();
+    let prefix = synth_embedding(31, spec.prefix_len, spec.dim, 0.5);
+    let incr = synth_embedding(32, spec.incr_len, spec.dim, 0.5);
+    let kv = prefix_m.execute_to_device(&[&prefix]).unwrap();
+    // ψ produced once must serve arbitrarily many candidate sets.
+    for seed in [100u64, 200, 300] {
+        let items = synth_embedding(seed, spec.num_items, spec.dim, 0.5);
+        let cached = rank_m.execute_with_kv(&kv, &[&incr, &items]).unwrap();
+        let full = full_m.execute_host(&[&prefix, &incr, &items]).unwrap();
+        let eps = full
+            .iter()
+            .zip(&cached)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(eps <= 1e-3, "item set {seed}: ε = {eps}");
+    }
+}
+
+#[test]
+fn manifest_variants_cover_all_model_types() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let variants = engine.manifest.variants();
+    let types: std::collections::HashSet<ModelType> =
+        variants.iter().map(|s| s.model_type).collect();
+    assert!(types.contains(&ModelType::Hstu));
+    assert!(types.contains(&ModelType::HstuRev));
+    assert!(types.contains(&ModelType::LongerRankMixer));
+    // ψ footprint arithmetic must agree with the python manifest.
+    for a in &engine.manifest.artifacts {
+        if a.fn_kind == FnKind::Prefix {
+            let out_elems: usize = a.outputs[0].shape.iter().product();
+            assert_eq!(out_elems * 4, a.spec.kv_bytes(), "{}", a.name);
+        }
+    }
+}
+
+#[test]
+fn executable_pool_compiles_once() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let spec = engine.manifest.default_variant().unwrap();
+    let a = engine.model(FnKind::Rank, &spec).unwrap();
+    let before = engine.pooled();
+    let b = engine.model(FnKind::Rank, &spec).unwrap();
+    assert_eq!(engine.pooled(), before, "second lookup must hit the pool");
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn wrong_arity_and_shape_are_rejected() {
+    let dir = require_artifacts!();
+    let engine = Engine::load(&dir).unwrap();
+    let spec = engine.manifest.default_variant().unwrap();
+    let full_m = engine.model(FnKind::Full, &spec).unwrap();
+    let too_few = synth_embedding(1, spec.prefix_len, spec.dim, 0.5);
+    assert!(full_m.execute_host(&[&too_few]).is_err());
+    let wrong_len = vec![0.0f32; 7];
+    let incr = synth_embedding(2, spec.incr_len, spec.dim, 0.5);
+    let items = synth_embedding(3, spec.num_items, spec.dim, 0.5);
+    assert!(full_m.execute_host(&[&wrong_len, &incr, &items]).is_err());
+}
