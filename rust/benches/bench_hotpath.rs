@@ -92,6 +92,51 @@ fn main() {
         }
     }));
 
+    // --- coordinator: pure decision flow (no compute) ------------------------
+    // The full per-request relay-race cycle through the shared
+    // RelayCoordinator with an instantly-completing host: admission →
+    // signal pseudo-pre-infer → routing → rank classification → consume →
+    // completion + spill.  Regression baseline for future policy changes.
+    {
+        use relaygr::relay::coordinator::{RankAction, RelayCoordinator, SignalAction, Stage};
+        let sim_cfg = relaygr::cluster::SimConfig::standard(
+            relaygr::relay::baseline::Mode::RelayGr { dram: DramPolicy::Capacity(64 << 30) },
+        );
+        let mut coord: RelayCoordinator<()> =
+            RelayCoordinator::new(sim_cfg.coordinator_config(), |_| sim_cfg.estimator())
+                .expect("coordinator builds");
+        let kv = 32usize << 20;
+        let mut id = 0u64;
+        let mut now = 0u64;
+        results.push(bench("coordinator/full_decision_flow", 50, 20_000, || {
+            id += 1;
+            now += 700;
+            let user = id % 1024;
+            if coord.on_arrival(now, id, user, 4096) {
+                match coord.on_trigger_check(now, id) {
+                    SignalAction::Produce { instance, user, .. } => {
+                        coord.on_psi_ready(now, instance, user, Some(()));
+                    }
+                    SignalAction::Reload { instance, user, bytes } => {
+                        coord.on_reload_done(now, instance, user, Some(()), bytes);
+                    }
+                    SignalAction::None => {}
+                }
+            }
+            let inst = coord
+                .on_stage_done(now, id, Stage::Preproc)
+                .expect("rank instance routed");
+            if let RankAction::StartReload { bytes } = coord.on_rank_start(now, id) {
+                coord.on_reload_done(now, inst, user, Some(()), bytes);
+            }
+            let _ = coord.rank_compute(now, id);
+            let done = coord.on_rank_done(now, id, kv);
+            if let Some(bytes) = done.spill {
+                coord.complete_spill(done.instance, done.user, bytes, ());
+            }
+        }));
+    }
+
     // --- metrics -----------------------------------------------------------
     let mut h = Histogram::new();
     let mut x = 1.0f64;

@@ -5,9 +5,13 @@
 //! a CPU core pool — the shared-resource contention of §2.4(3)), the
 //! load-balancer/gateway fabric, the behaviour/embedding services
 //! (latency only), and the three-stage cascade.  Execution costs come
-//! from the calibrated [`HardwareProfile`] cost model; queuing, affinity,
-//! admission and cache lifecycle are simulated exactly through the same
-//! `relay::*` state machines the live engine uses.
+//! from the calibrated [`HardwareProfile`] cost model.
+//!
+//! All queuing, affinity, admission and cache-lifecycle *decisions* are
+//! made by the shared [`RelayCoordinator`] — the same state machine the
+//! live engine drives.  This module is a pure time adapter: it turns
+//! coordinator actions into simulated durations on contended resources
+//! and reports completions back through the coordinator's event API.
 //!
 //! Resource discipline: every resource (NPU slot set, PCIe link, CPU
 //! pool) is a k-server FIFO — work is assigned to the earliest-free
@@ -15,18 +19,20 @@
 //! tail amplification under load without modelling preemption.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
 use crate::util::fxhash::FxHashMap;
 
 use crate::metrics::RunMetrics;
 use crate::model::{HardwareProfile, ModelSpec};
 use crate::relay::baseline::Mode;
-use crate::relay::expander::{DramPolicy, Expander, PseudoAction};
-use crate::relay::hbm::HbmCache;
-use crate::relay::pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
-use crate::relay::router::{Router, RouterConfig};
-use crate::relay::trigger::{BehaviorMeta, Decision, Trigger, TriggerConfig};
+use crate::relay::coordinator::{
+    CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, SignalAction, Stage,
+};
+use crate::relay::expander::DramPolicy;
+use crate::relay::pipeline::{Lifecycle, PipelineConfig, StageSampler};
+use crate::relay::router::RouterConfig;
+use crate::relay::trigger::{BehaviorMeta, TriggerConfig};
 use crate::util::rng::Rng;
 use crate::workload::{GenRequest, WorkloadConfig};
 
@@ -54,6 +60,10 @@ pub struct SimConfig {
     pub long_threshold: usize,
     /// P99 prefix length used for kv_p99 in admission control.
     pub kv_p99_prefix: usize,
+    /// Record the per-request `(id, CacheOutcome)` log in [`RunMetrics`]
+    /// (cross-engine equivalence tests; off by default — it grows with
+    /// the trace).
+    pub log_outcomes: bool,
     pub seed: u64,
 }
 
@@ -83,6 +93,7 @@ impl SimConfig {
             hop_us: 150.0,
             long_threshold: 2048,
             kv_p99_prefix: 8192,
+            log_outcomes: false,
             seed: 7,
         }
     }
@@ -108,6 +119,35 @@ impl SimConfig {
             _ => DramPolicy::Disabled,
         }
     }
+
+    /// The coordinator configuration this cluster shape induces.
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        let spec = self.spec;
+        CoordinatorConfig {
+            mode: self.mode,
+            router: self.router.clone(),
+            trigger: self.trigger_config(),
+            dram: self.dram_policy(),
+            long_threshold: self.long_threshold,
+            t_life_us: self.pipeline.t_life_us,
+            max_reload_concurrency: self.max_reload_concurrency,
+            hbm_bytes: (self.r1 * self.hw.hbm_bytes as f64) as usize,
+            dim: self.spec.dim,
+            kv_bytes: Box::new(move |prefix_len| spec.kv_bytes_for(prefix_len)),
+        }
+    }
+
+    /// The cost-model latency estimator wired into each special
+    /// instance's trigger.
+    pub fn estimator(&self) -> crate::relay::trigger::Estimator {
+        let hw = self.hw.clone();
+        let spec = self.spec;
+        Box::new(move |m: &BehaviorMeta| {
+            let mut s = spec;
+            s.dim = m.dim;
+            hw.rank_full_us(&s, m.prefix_len)
+        })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -132,40 +172,17 @@ enum Ev {
     RankExecDone(u64),
 }
 
+/// Per-request timing record (decision state lives in the coordinator).
 #[derive(Debug, Clone)]
 struct ReqState {
     gen: GenRequest,
-    is_long: bool,
-    admitted: bool,
-    pre_instance: Option<usize>,
     rank_instance: usize,
-    pre_issue_us: u64,
     pre_us: f64,
     load_us: f64,
     rank_us: f64,
-    wait_us: f64,
-    wait_since: u64,
     retrieval_done: u64,
     preproc_done: u64,
     rank_start: u64,
-    outcome: CacheOutcome,
-    /// Whether this request will run ranking-on-cache.
-    cached: bool,
-}
-
-struct Instance {
-    slots: Vec<u64>,
-    hbm: HbmCache<()>,
-    expander: Expander<()>,
-    busy_us: f64,
-    /// Rank requests waiting for ψ production to finish, per user.
-    waiting_produce: FxHashMap<u64, Vec<u64>>,
-    /// Rank requests joined to an in-flight/queued reload, per user.
-    waiting_reload: FxHashMap<u64, Vec<u64>>,
-    /// Where the currently-resident ψ came from (fresh pre-inference →
-    /// `HbmHit`, DRAM reload → `DramHit`): drives the paper's hit-rate
-    /// attribution even when a signal-initiated reload pre-warmed HBM.
-    origin: FxHashMap<u64, CacheOutcome>,
 }
 
 struct Server {
@@ -200,9 +217,10 @@ struct PreJob {
 pub struct Sim {
     cfg: SimConfig,
     trace: Vec<GenRequest>,
-    router: Router,
-    triggers: HashMap<usize, Trigger>,
-    instances: Vec<Instance>,
+    coord: RelayCoordinator<()>,
+    /// Per-instance NPU model-slot FIFOs and busy time.
+    slots: Vec<Vec<u64>>,
+    busy_us: Vec<f64>,
     servers: Vec<Server>,
     states: FxHashMap<u64, ReqState>,
     pre_jobs: FxHashMap<u64, PreJob>,
@@ -221,33 +239,9 @@ pub struct Sim {
 impl Sim {
     pub fn new(cfg: SimConfig, workload: &WorkloadConfig) -> anyhow::Result<Sim> {
         let trace = crate::workload::generate(workload);
-        let router = Router::new(cfg.router.clone())?;
-        let tcfg = cfg.trigger_config();
-        let hw = cfg.hw.clone();
-        let spec = cfg.spec;
-        let mut triggers = HashMap::new();
-        for &i in router.special_instances() {
-            let hw_c = hw.clone();
-            let estimator: crate::relay::trigger::Estimator = Box::new(move |m: &BehaviorMeta| {
-                let mut s = spec;
-                s.dim = m.dim;
-                hw_c.rank_full_us(&s, m.prefix_len)
-            });
-            triggers.insert(i, Trigger::new(tcfg.clone(), estimator));
-        }
-        let hbm_slice = (cfg.r1 * cfg.hw.hbm_bytes as f64) as usize;
-        let dram = cfg.dram_policy();
-        let instances = (0..cfg.router.n_instances)
-            .map(|_| Instance {
-                slots: vec![0; cfg.m_slots],
-                hbm: HbmCache::new(hbm_slice),
-                expander: Expander::new(dram, cfg.max_reload_concurrency),
-                busy_us: 0.0,
-                waiting_produce: FxHashMap::default(),
-                waiting_reload: FxHashMap::default(),
-                origin: FxHashMap::default(),
-            })
-            .collect();
+        let coord = RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator())?;
+        let slots = (0..cfg.router.n_instances).map(|_| vec![0u64; cfg.m_slots]).collect();
+        let busy_us = vec![0.0; cfg.router.n_instances];
         let servers = (0..cfg.router.servers)
             .map(|_| Server { pcie: [0], cpu: vec![0; cfg.cpu_cores] })
             .collect();
@@ -257,15 +251,17 @@ impl Sim {
         );
         let preproc =
             StageSampler::from_mean_p99(cfg.pipeline.preproc_mean_us, cfg.pipeline.preproc_p99_us);
-        let metrics = RunMetrics::new(cfg.pipeline.pipeline_slo_us);
+        let mut metrics = RunMetrics::new(cfg.pipeline.pipeline_slo_us);
+        metrics.scenario = workload.scenario.label().to_string();
+        metrics.log_outcomes = cfg.log_outcomes;
         let end_us = workload.duration_us;
         Ok(Sim {
             rng: Rng::new(cfg.seed),
             cfg,
             trace,
-            router,
-            triggers,
-            instances,
+            coord,
+            slots,
+            busy_us,
             servers,
             states: FxHashMap::default(),
             pre_jobs: FxHashMap::default(),
@@ -284,7 +280,7 @@ impl Sim {
     }
 
     fn server_of(&self, inst: usize) -> usize {
-        self.router.server_of(inst)
+        self.coord.server_of(inst)
     }
 
     /// Run to completion and return the metrics.
@@ -298,18 +294,14 @@ impl Sim {
         // Finalize utilization (busy over elapsed × slots).
         let elapsed = self.end_us.max(1) as f64;
         self.metrics.util = self
-            .instances
+            .busy_us
             .iter()
-            .map(|i| (i.busy_us / (elapsed * self.cfg.m_slots as f64)).min(1.0))
+            .map(|&b| (b / (elapsed * self.cfg.m_slots as f64)).min(1.0))
             .collect();
-        self.metrics.special_instances = self.router.special_instances().to_vec();
-        for inst in &self.instances {
-            merge_hbm(&mut self.metrics.hbm, inst.hbm.stats());
-            merge_expander(&mut self.metrics.expander, inst.expander.stats());
-        }
-        for tr in self.triggers.values() {
-            merge_trigger(&mut self.metrics.trigger, tr.stats());
-        }
+        self.metrics.special_instances = self.coord.special_instances().to_vec();
+        self.metrics.hbm = self.coord.hbm_stats();
+        self.metrics.expander = self.coord.expander_stats();
+        self.metrics.trigger = self.coord.trigger_stats();
         self.metrics.sim_duration_us = self.end_us;
         self.metrics
     }
@@ -339,99 +331,46 @@ impl Sim {
             self.push(t, Ev::Arrive(idx + 1));
         }
         let gen = self.trace[idx];
-        let is_long = gen.prefix_len > self.cfg.long_threshold;
-        let st = ReqState {
-            gen,
-            is_long,
-            admitted: false,
-            pre_instance: None,
-            rank_instance: usize::MAX,
-            pre_issue_us: 0,
-            pre_us: 0.0,
-            load_us: 0.0,
-            rank_us: 0.0,
-            wait_us: 0.0,
-            wait_since: 0,
-            retrieval_done: 0,
-            preproc_done: 0,
-            rank_start: 0,
-            outcome: CacheOutcome::FullInference,
-            cached: false,
-        };
-        self.states.insert(gen.id, st);
+        self.states.insert(
+            gen.id,
+            ReqState {
+                gen,
+                rank_instance: usize::MAX,
+                pre_us: 0.0,
+                load_us: 0.0,
+                rank_us: 0.0,
+                retrieval_done: 0,
+                preproc_done: 0,
+                rank_start: 0,
+            },
+        );
+        let wants_trigger = self.coord.on_arrival(now, gen.id, gen.user, gen.prefix_len);
         let dur = self.retrieval.sample(&mut self.rng);
         self.push(now + dur as u64, Ev::RetrievalDone(gen.id));
-        if self.cfg.mode.is_relay() && is_long {
+        if wants_trigger {
             let t = now + self.cfg.pipeline.trigger_us as u64;
             self.push(t, Ev::TriggerCheck(gen.id));
         }
     }
 
     fn on_trigger_check(&mut self, now: u64, req: u64) {
-        let (user, prefix_len, dim) = {
-            let st = &self.states[&req];
-            (st.gen.user, st.gen.prefix_len, self.cfg.spec.dim)
-        };
-        let route = self.router.route_special(user);
-        self.router.on_complete(route.instance); // signal, not a held connection
-        let inst = route.instance;
-        let meta = BehaviorMeta { user, prefix_len, dim };
-        let decision =
-            self.triggers.get_mut(&inst).map(|t| t.decide(now, &meta)).unwrap_or(Decision::NotAtRisk);
-        if decision != Decision::Admit {
-            return;
-        }
-        let st = self.states.get_mut(&req).unwrap();
-        st.admitted = true;
-        st.pre_instance = Some(inst);
-        st.pre_issue_us = now;
-        self.pre_jobs.insert(req, PreJob { inst, user, prefix_len, issue_us: now });
-        // The pre-infer signal itself performs the pseudo-pre-infer checks,
-        // skipping redundant recomputation when ψ is already local (§3.4).
-        let kv = self.cfg.spec.kv_bytes_for(prefix_len);
-        let action = {
-            let instance = &mut self.instances[inst];
-            instance.expander.pseudo_pre_infer(user, &mut instance.hbm, now)
-        };
-        match action {
-            PseudoAction::HbmHit | PseudoAction::WaitProducing => {
-                // Cache already present / being produced: re-arm its
-                // lifecycle for this request instead of recomputing.
-                self.instances[inst]
-                    .hbm
-                    .extend_lease(user, now + self.cfg.pipeline.t_life_us);
-                if let Some(t) = self.triggers.get_mut(&inst) {
-                    t.release(); // no new live cache created by this admit
-                }
+        match self.coord.on_trigger_check(now, req) {
+            SignalAction::None => {}
+            SignalAction::Produce { instance, user, prefix_len } => {
+                // Behaviour fetch + CPU feature processing, then H2D, then
+                // the prefix pass on an NPU slot.
+                self.pre_jobs
+                    .insert(req, PreJob { inst: instance, user, prefix_len, issue_us: now });
+                let server = self.server_of(instance);
+                let cpu_dur = self.cfg.hw.feature_proc_us(prefix_len);
+                let (_, end) = alloc(&mut self.servers[server].cpu, now, cpu_dur);
+                self.push(end, Ev::PreCpuDone(req));
             }
-            PseudoAction::StartReload { bytes } => {
-                let server = self.server_of(inst);
+            SignalAction::Reload { instance, user, bytes } => {
+                let server = self.server_of(instance);
                 let dur = self.cfg.hw.load_us(bytes);
                 let (_, end) = alloc(&mut self.servers[server].pcie, now, dur);
-                self.push(end, Ev::ReloadDone { user, inst, bytes });
-            }
-            PseudoAction::JoinReload | PseudoAction::QueuedReload => {
-                // A reload is already pending; the signal needs no follow-up.
-            }
-            PseudoAction::Miss => {
-                let instance = &mut self.instances[inst];
-                match instance.hbm.begin_produce(user, kv, now, self.cfg.pipeline.t_life_us) {
-                    Ok(()) => {
-                        // Behaviour fetch + CPU feature processing.
-                        let server = self.server_of(inst);
-                        let cpu_dur = self.cfg.hw.feature_proc_us(prefix_len);
-                        let (_, end) = alloc(&mut self.servers[server].cpu, now, cpu_dur);
-                        self.push(end, Ev::PreCpuDone(req));
-                    }
-                    Err(_) => {
-                        // Admission overcommitted (shouldn't happen when Eqs.
-                        // 1-3 hold); treat as not admitted.
-                        if let Some(t) = self.triggers.get_mut(&inst) {
-                            t.release();
-                        }
-                        self.states.get_mut(&req).unwrap().admitted = false;
-                    }
-                }
+                self.push(end, Ev::ReloadDone { user, inst: instance, bytes });
             }
         }
     }
@@ -448,67 +387,42 @@ impl Sim {
     fn on_pre_xfer_done(&mut self, now: u64, req: u64) {
         let PreJob { inst, prefix_len, .. } = self.pre_jobs[&req];
         let dur = self.cfg.hw.pre_infer_us(&self.cfg.spec, prefix_len);
-        let (_, end) = alloc(&mut self.instances[inst].slots, now, dur);
-        self.instances[inst].busy_us += dur;
+        let (_, end) = alloc(&mut self.slots[inst], now, dur);
+        self.busy_us[inst] += dur;
         self.push(end, Ev::PreInferDone(req));
     }
 
     fn on_pre_infer_done(&mut self, now: u64, req: u64) {
         let PreJob { inst, user, issue_us: issue, .. } =
             self.pre_jobs.remove(&req).expect("pre job exists");
-        let ok = self.instances[inst].hbm.complete_produce(user, ());
-        if ok {
-            self.instances[inst].origin.insert(user, CacheOutcome::HbmHit);
-        }
         if let Some(st) = self.states.get_mut(&req) {
             st.pre_us = (now - issue) as f64;
         }
-        if !ok {
-            // Entry evicted while producing (lost work).
-            if let Some(t) = self.triggers.get_mut(&inst) {
-                t.release();
-            }
-        }
-        // Wake rank requests waiting for this ψ.
-        let waiters = self.instances[inst].waiting_produce.remove(&user).unwrap_or_default();
-        for w in waiters {
-            let wait_since = self.states[&w].wait_since;
-            {
-                let st = self.states.get_mut(&w).unwrap();
-                st.wait_us += (now - wait_since) as f64;
-                if ok {
-                    st.outcome = CacheOutcome::HbmHit;
-                    st.cached = true;
-                } else {
-                    st.outcome = CacheOutcome::Fallback;
-                    st.cached = false;
-                }
-            }
+        // ψ ready: the coordinator classifies and wakes waiting ranks.
+        let woken = self.coord.on_psi_ready(now, inst, user, Some(()));
+        for w in woken {
             self.start_rank_processing(now, w);
         }
     }
 
     fn on_retrieval_done(&mut self, now: u64, req: u64) {
         self.states.get_mut(&req).unwrap().retrieval_done = now;
+        self.coord.on_stage_done(now, req, Stage::Retrieval);
         let dur = self.preproc.sample(&mut self.rng);
         self.push(now + dur as u64, Ev::PreprocDone(req));
     }
 
     fn on_preproc_done(&mut self, now: u64, req: u64) {
-        let (user, is_long) = {
-            let st = self.states.get_mut(&req).unwrap();
-            st.preproc_done = now;
-            (st.gen.user, st.is_long)
-        };
-        // Late binding resolved here: long-sequence requests carry the
-        // consistency-hash-key and go to the special service; short ones
-        // follow standard balancing.
-        let route = if self.cfg.mode.is_relay() && is_long {
-            self.router.route_special(user)
-        } else {
-            self.router.route_normal(user)
-        };
-        self.states.get_mut(&req).unwrap().rank_instance = route.instance;
+        // Late binding resolved here: the coordinator routes long-sequence
+        // requests (consistency-hash-key) to the special service and short
+        // ones by standard balancing.
+        let inst = self
+            .coord
+            .on_stage_done(now, req, Stage::Preproc)
+            .expect("preproc resolves the ranking instance");
+        let st = self.states.get_mut(&req).unwrap();
+        st.preproc_done = now;
+        st.rank_instance = inst;
         let t = now + (2.0 * self.cfg.hop_us) as u64; // LB hop + gateway hop
         self.push(t, Ev::RankArrive(req));
     }
@@ -516,117 +430,53 @@ impl Sim {
     // ---- ranking at the instance ---------------------------------------------
 
     fn on_rank_arrive(&mut self, now: u64, req: u64) {
-        let (inst, user, is_long, admitted) = {
-            let st = self.states.get_mut(&req).unwrap();
-            st.rank_start = now;
-            (st.rank_instance, st.gen.user, st.is_long, st.admitted)
-        };
-        if !(self.cfg.mode.is_relay() && is_long) {
-            // Baseline mode or short-sequence request: full inline inference.
-            self.start_rank_processing(now, req);
-            return;
-        }
-        // Pseudo-pre-infer fronting the ranking request (§3.4).
-        let action = {
-            let instance = &mut self.instances[inst];
-            instance.expander.pseudo_pre_infer(user, &mut instance.hbm, now)
-        };
-        match action {
-            PseudoAction::HbmHit => {
-                let origin = self.instances[inst]
-                    .origin
-                    .get(&user)
-                    .copied()
-                    .unwrap_or(CacheOutcome::HbmHit);
-                let st = self.states.get_mut(&req).unwrap();
-                st.outcome = origin;
-                st.cached = true;
-                self.start_rank_processing(now, req);
-            }
-            PseudoAction::WaitProducing => {
-                self.states.get_mut(&req).unwrap().wait_since = now;
-                self.instances[inst].waiting_produce.entry(user).or_default().push(req);
-            }
-            PseudoAction::StartReload { bytes } => {
-                {
-                    let st = self.states.get_mut(&req).unwrap();
-                    st.outcome = CacheOutcome::DramHit;
-                    st.cached = true;
-                    st.wait_since = now;
-                }
+        self.states.get_mut(&req).unwrap().rank_start = now;
+        match self.coord.on_rank_start(now, req) {
+            RankAction::Proceed { .. } => self.start_rank_processing(now, req),
+            // Waiting for ψ production or an in-flight reload: the
+            // coordinator wakes the request from `on_psi_ready` /
+            // `on_reload_done`.
+            RankAction::Wait | RankAction::WaitReload => {}
+            RankAction::StartReload { bytes } => {
+                let (inst, user) = {
+                    let st = &self.states[&req];
+                    (st.rank_instance, st.gen.user)
+                };
                 let server = self.server_of(inst);
                 let dur = self.cfg.hw.load_us(bytes);
                 let (_, end) = alloc(&mut self.servers[server].pcie, now, dur);
-                self.instances[inst].waiting_reload.entry(user).or_default().push(req);
                 self.push(end, Ev::ReloadDone { user, inst, bytes });
-            }
-            PseudoAction::JoinReload | PseudoAction::QueuedReload => {
-                let st = self.states.get_mut(&req).unwrap();
-                st.outcome = CacheOutcome::JoinedReload;
-                st.cached = true;
-                st.wait_since = now;
-                self.instances[inst].waiting_reload.entry(user).or_default().push(req);
-            }
-            PseudoAction::Miss => {
-                let st = self.states.get_mut(&req).unwrap();
-                st.outcome =
-                    if admitted { CacheOutcome::Fallback } else { CacheOutcome::FullInference };
-                st.cached = false;
-                self.start_rank_processing(now, req);
             }
         }
     }
 
     fn on_reload_done(&mut self, now: u64, user: u64, inst: usize, bytes: usize) {
-        let done = {
-            let instance = &mut self.instances[inst];
-            let t_life = self.cfg.pipeline.t_life_us;
-            instance.expander.complete_reload(user, (), bytes, now, t_life, &mut instance.hbm)
-        };
-        if done.installed {
-            self.instances[inst].origin.insert(user, CacheOutcome::DramHit);
-        }
+        let res = self.coord.on_reload_done(now, inst, user, Some(()), bytes);
         let load = self.cfg.hw.load_us(bytes);
         // Wake all requests joined to this reload (≤ 1 H2D per burst).
-        let waiters = self.instances[inst].waiting_reload.remove(&user).unwrap_or_default();
-        for w in waiters {
-            let wait_since = self.states[&w].wait_since;
-            {
-                let st = self.states.get_mut(&w).unwrap();
-                st.wait_us += (now - wait_since) as f64;
+        for w in res.woken {
+            if let Some(st) = self.states.get_mut(&w) {
                 st.load_us = load;
-                if !done.installed {
-                    st.outcome = CacheOutcome::Fallback;
-                    st.cached = false;
-                }
             }
             self.start_rank_processing(now, w);
         }
         // Grant the next queued reload its PCIe transfer.
-        if let Some(next_user) = done.next {
+        if let Some(next_user) = res.next {
             self.start_queued_reload(now, inst, next_user);
         }
     }
 
     fn start_queued_reload(&mut self, now: u64, inst: usize, user: u64) {
-        match self.instances[inst].expander.dram_payload(user) {
-            Some((bytes, ())) => {
+        match self.coord.begin_queued_reload(now, inst, user) {
+            QueuedReload::Start { bytes } => {
                 let server = self.server_of(inst);
                 let dur = self.cfg.hw.load_us(bytes);
                 let (_, end) = alloc(&mut self.servers[server].pcie, now, dur);
                 self.push(end, Ev::ReloadDone { user, inst, bytes });
             }
-            None => {
-                // Evicted from DRAM while queued: abort and fall back.
-                let next = self.instances[inst].expander.abort_reload(user);
-                let waiters =
-                    self.instances[inst].waiting_reload.remove(&user).unwrap_or_default();
-                for w in waiters {
-                    let wait_since = self.states[&w].wait_since;
-                    let st = self.states.get_mut(&w).unwrap();
-                    st.wait_us += (now - wait_since) as f64;
-                    st.outcome = CacheOutcome::Fallback;
-                    st.cached = false;
+            QueuedReload::Aborted { woken, next } => {
+                // Evicted from DRAM while queued: waiters fall back.
+                for w in woken {
                     self.start_rank_processing(now, w);
                 }
                 if let Some(nu) = next {
@@ -638,94 +488,63 @@ impl Sim {
 
     /// CPU feature processing → H2D → NPU execution for the rank request.
     fn start_rank_processing(&mut self, now: u64, req: u64) {
-        let (inst, cached, prefix_len) = {
-            let st = &self.states[&req];
-            (st.rank_instance, st.cached, st.gen.prefix_len)
-        };
-        let spec = &self.cfg.spec;
-        // Cached path processes only incremental tokens + items; fallback /
-        // baseline must process the whole sequence on the critical path.
-        let tokens = if cached {
-            spec.incr_len + spec.num_items
-        } else {
-            prefix_len + spec.incr_len + spec.num_items
-        };
+        let inst = self.states[&req].rank_instance;
+        let tokens = self.rank_tokens(req);
         let server = self.server_of(inst);
         let dur = self.cfg.hw.feature_proc_us(tokens);
         let (_, end) = alloc(&mut self.servers[server].cpu, now, dur);
         self.push(end, Ev::RankCpuDone(req));
     }
 
-    fn on_rank_cpu_done(&mut self, now: u64, req: u64) {
-        let (inst, cached, prefix_len) = {
-            let st = &self.states[&req];
-            (st.rank_instance, st.cached, st.gen.prefix_len)
-        };
+    /// Cached path processes only incremental tokens + items; fallback /
+    /// baseline must process the whole sequence on the critical path.
+    fn rank_tokens(&self, req: u64) -> usize {
         let spec = &self.cfg.spec;
-        let tokens = if cached {
+        if self.coord.is_cached(req) {
             spec.incr_len + spec.num_items
         } else {
-            prefix_len + spec.incr_len + spec.num_items
-        };
+            self.states[&req].gen.prefix_len + spec.incr_len + spec.num_items
+        }
+    }
+
+    fn on_rank_cpu_done(&mut self, now: u64, req: u64) {
+        let inst = self.states[&req].rank_instance;
+        let tokens = self.rank_tokens(req);
         let server = self.server_of(inst);
-        let dur = self.cfg.hw.h2d_embed_us(spec.embed_bytes(tokens));
+        let dur = self.cfg.hw.h2d_embed_us(self.cfg.spec.embed_bytes(tokens));
         let (_, end) = alloc(&mut self.servers[server].pcie, now, dur);
         self.push(end, Ev::RankXferDone(req));
     }
 
     fn on_rank_xfer_done(&mut self, now: u64, req: u64) {
-        let (inst, cached, prefix_len, user) = {
+        let (inst, prefix_len) = {
             let st = &self.states[&req];
-            (st.rank_instance, st.cached, st.gen.prefix_len, st.gen.user)
+            (st.rank_instance, st.gen.prefix_len)
         };
-        let dur = if cached {
-            // Consume ψ at execution start.
-            self.instances[inst].hbm.consume(user);
+        // Consume ψ at execution start.
+        let rc = self.coord.rank_compute(now, req);
+        let dur = if rc.cached {
             self.cfg.hw.rank_cached_us(&self.cfg.spec, prefix_len)
         } else {
             self.cfg.hw.rank_full_us(&self.cfg.spec, prefix_len)
         };
-        let (_, end) = alloc(&mut self.instances[inst].slots, now, dur);
-        self.instances[inst].busy_us += dur;
+        let (_, end) = alloc(&mut self.slots[inst], now, dur);
+        self.busy_us[inst] += dur;
         self.states.get_mut(&req).unwrap().rank_us = dur;
         self.push(end, Ev::RankExecDone(req));
     }
 
     fn on_rank_exec_done(&mut self, now: u64, req: u64) {
         let st = self.states.remove(&req).unwrap();
-        let inst = st.rank_instance;
-        self.router.on_complete(inst);
-        // Release the admitted live-cache slot.
-        if st.admitted {
-            if let Some(pre_inst) = st.pre_instance {
-                if let Some(t) = self.triggers.get_mut(&pre_inst) {
-                    t.release();
-                }
-            }
-        }
-        // The sliding window moves past a consumed ψ: spill freshly
-        // produced caches to DRAM for short-term reuse (off the critical
-        // path; occupies the PCIe link), then evict from HBM.
-        if st.cached {
-            let kv = self.cfg.spec.kv_bytes_for(st.gen.prefix_len);
-            let user = st.gen.user;
-            let fresh = self.instances[inst].origin.get(&user) == Some(&CacheOutcome::HbmHit);
-            let mut in_dram = !fresh; // reloaded ψ is still resident in DRAM
-            if fresh && self.instances[inst].expander.spill(user, kv, ()) {
-                let server = self.server_of(inst);
-                let dur = self.cfg.hw.spill_us(kv);
+        let kv = self.cfg.spec.kv_bytes_for(st.gen.prefix_len);
+        let done = self.coord.on_rank_done(now, req, kv);
+        // Spill freshly produced caches to DRAM for short-term reuse (off
+        // the critical path; occupies the PCIe link).
+        if let Some(bytes) = done.spill {
+            if self.coord.complete_spill(done.instance, done.user, bytes, ()) {
+                let server = self.server_of(done.instance);
+                let dur = self.cfg.hw.spill_us(bytes);
                 let _ = alloc(&mut self.servers[server].pcie, now, dur);
-                in_dram = true;
-            }
-            // Slide the window past the consumed entry only once the ψ is
-            // safe in DRAM; without a DRAM tier it stays Consumed until
-            // its lifecycle expires (probe-time reclamation).
-            if in_dram
-                && self.instances[inst].hbm.state_of(user)
-                    == Some(crate::relay::hbm::EntryState::Consumed)
-            {
-                self.instances[inst].hbm.evict(user);
-                self.instances[inst].origin.remove(&user);
             }
         }
         let lc = Lifecycle {
@@ -740,51 +559,18 @@ impl Sim {
             pre_us: st.pre_us,
             load_us: st.load_us,
             rank_us: st.rank_us,
-            wait_us: st.wait_us,
-            outcome: st.outcome,
-            admitted: st.admitted,
-            instance: inst,
+            wait_us: done.wait_us,
+            outcome: done.outcome,
+            admitted: done.admitted,
+            instance: done.instance,
         };
-        self.metrics.record(&lc, st.is_long);
+        self.metrics.record(&lc, done.is_long);
         self.metrics.offered_qps = self.cfg_offered_qps();
     }
 
     fn cfg_offered_qps(&self) -> f64 {
         self.trace.len() as f64 / (self.end_us as f64 / 1e6)
     }
-}
-
-fn merge_hbm(a: &mut crate::relay::hbm::HbmStats, b: crate::relay::hbm::HbmStats) {
-    a.inserts += b.inserts;
-    a.ready_hits += b.ready_hits;
-    a.producing_hits += b.producing_hits;
-    a.misses += b.misses;
-    a.consumed += b.consumed;
-    a.evicted_consumed += b.evicted_consumed;
-    a.evicted_expired += b.evicted_expired;
-    a.lost += b.lost;
-    a.rejected += b.rejected;
-}
-
-fn merge_expander(a: &mut crate::relay::expander::ExpanderStats, b: crate::relay::expander::ExpanderStats) {
-    a.lookups += b.lookups;
-    a.hbm_hits += b.hbm_hits;
-    a.dram_hits += b.dram_hits;
-    a.misses += b.misses;
-    a.reloads_started += b.reloads_started;
-    a.reloads_joined += b.reloads_joined;
-    a.reloads_queued += b.reloads_queued;
-    a.spills += b.spills;
-    a.spill_rejected += b.spill_rejected;
-    a.dram_evictions += b.dram_evictions;
-}
-
-fn merge_trigger(a: &mut crate::relay::trigger::TriggerStats, b: crate::relay::trigger::TriggerStats) {
-    a.assessed += b.assessed;
-    a.not_at_risk += b.not_at_risk;
-    a.admitted += b.admitted;
-    a.rate_limited += b.rate_limited;
-    a.footprint_limited += b.footprint_limited;
 }
 
 /// Convenience: run one simulation.

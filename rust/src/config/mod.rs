@@ -11,7 +11,7 @@ use crate::relay::baseline::Mode;
 use crate::relay::expander::DramPolicy;
 use crate::util::cli::Args;
 use crate::util::json::Json;
-use crate::workload::WorkloadConfig;
+use crate::workload::{ScenarioKind, WorkloadConfig};
 
 /// Parse a `Mode` string: `baseline`, `relaygr`, `relaygr+dram<N>g`.
 pub fn parse_mode(s: &str) -> Result<Mode> {
@@ -123,6 +123,9 @@ pub fn workload_config(args: &Args) -> Result<WorkloadConfig> {
     wl.long_threshold = args.get_usize("long-threshold", wl.long_threshold)?;
     wl.max_prefix = args.get_usize("max-prefix", wl.max_prefix)?;
     wl.refresh_prob = args.get_f64("refresh-prob", wl.refresh_prob)?;
+    if let Some(s) = args.get("scenario") {
+        wl.scenario = ScenarioKind::parse(s).map_err(|e| anyhow!(e))?;
+    }
     wl.seed = args.get_u64("seed", wl.seed)?;
     Ok(wl)
 }
@@ -139,6 +142,7 @@ pub fn sim_config_json(cfg: &SimConfig, wl: &WorkloadConfig) -> Json {
         .set("m_slots", cfg.m_slots.into())
         .set("qps", wl.qps.into())
         .set("duration_s", (wl.duration_us as f64 / 1e6).into())
+        .set("scenario", wl.scenario.label().into())
         .set("seed", cfg.seed.into());
     j
 }
@@ -194,6 +198,18 @@ mod tests {
         assert_eq!(cfg.spec.dim, 256);
         assert_eq!(cfg.hw.name, "ascend-310");
         assert!((cfg.router.r2 - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scenario_flag_selects_workload_shape() {
+        let a = args(&["figure", "--scenario", "burst"]);
+        let wl = workload_config(&a).unwrap();
+        assert_eq!(wl.scenario.label(), "burst");
+        let bad = args(&["figure", "--scenario", "lunar"]);
+        assert!(workload_config(&bad).is_err());
+        // Default stays steady — the seed workload.
+        let none = args(&["figure"]);
+        assert_eq!(workload_config(&none).unwrap().scenario, ScenarioKind::Steady);
     }
 
     #[test]

@@ -10,15 +10,18 @@ pub mod fig13;
 pub mod fig14;
 pub mod fig15;
 pub mod motivation;
+pub mod scenarios;
 
 use anyhow::{bail, Result};
 
 use crate::util::cli::Args;
 
-/// All figure ids in paper order.
+/// All figure ids: the paper's figures in paper order, then the repo's
+/// standing reports (scenario sweep).
 pub const ALL: &[&str] = &[
     "fig1", "fig3", "fig11a", "fig11b", "fig11c", "fig11d", "fig12", "fig13a", "fig13b",
     "fig13c", "fig13d", "fig14a", "fig14b", "fig14c", "fig14d", "fig15a", "fig15b", "table1",
+    "scenarios",
 ];
 
 pub fn run_one(id: &str, args: &Args) -> Result<()> {
@@ -41,6 +44,7 @@ pub fn run_one(id: &str, args: &Args) -> Result<()> {
         "fig15a" => fig15::fig15a(args),
         "fig15b" => fig15::fig15b(args),
         "table1" => fig15::table1(args),
+        "scenarios" => scenarios::scenarios(args),
         other => bail!("unknown figure '{other}' (available: {} all)", ALL.join(" ")),
     }
 }

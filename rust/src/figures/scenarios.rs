@@ -1,0 +1,78 @@
+//! Scenario sweep: the four named workload scenarios (`steady`,
+//! `diurnal`, `burst`, `coldstart`) through the simulator under baseline
+//! vs RelayGR+DRAM, reporting per-scenario latency/SLO/cache behaviour.
+//! Not a paper figure — the scenario engine's standing report
+//! (`relaygr figure scenarios`).
+
+use anyhow::Result;
+
+use crate::cluster::SimConfig;
+use crate::figures::common::{ms, pct, sim, Table};
+use crate::metrics::RunMetrics;
+use crate::relay::baseline::Mode;
+use crate::relay::expander::DramPolicy;
+use crate::util::cli::Args;
+use crate::workload::{ScenarioKind, WorkloadConfig};
+
+fn hit_rate(m: &RunMetrics) -> f64 {
+    let hits = m.outcome_counts[1] + m.outcome_counts[2] + m.outcome_counts[3];
+    let long = hits + m.outcome_counts[4];
+    if long == 0 {
+        0.0
+    } else {
+        hits as f64 / long as f64
+    }
+}
+
+/// `relaygr figure scenarios [--qps N] [--quick] [--scenario name]`.
+pub fn scenarios(args: &Args) -> Result<()> {
+    let duration_us = if args.has_flag("quick") { 6_000_000 } else { 15_000_000 };
+    let qps = args.get_f64("qps", 150.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let kinds: Vec<ScenarioKind> = match args.get("scenario") {
+        Some(s) => vec![ScenarioKind::parse(s).map_err(anyhow::Error::msg)?],
+        None => ScenarioKind::NAMES
+            .iter()
+            .map(|n| ScenarioKind::parse(n).expect("built-in scenario"))
+            .collect(),
+    };
+    let modes =
+        [Mode::Baseline, Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) }];
+    let mut t = Table::new(
+        "scenarios",
+        "workload scenarios × serving modes (simulator)",
+        &[
+            "scenario", "mode", "n", "goodput", "p99 ms", "success", "relay hit", "dram hit",
+            "shed",
+        ],
+    );
+    for kind in &kinds {
+        let wl = WorkloadConfig {
+            qps,
+            duration_us,
+            num_users: 30_000,
+            fixed_long_len: Some(3072),
+            max_prefix: 3072,
+            refresh_prob: 0.5,
+            scenario: *kind,
+            seed,
+            ..Default::default()
+        };
+        for mode in modes.iter().copied() {
+            let m = sim("scenarios", SimConfig::standard(mode), &wl)?;
+            let shed = m.trigger.rate_limited + m.trigger.footprint_limited;
+            t.row(vec![
+                kind.label().to_string(),
+                mode.label(),
+                m.completed.to_string(),
+                format!("{:.0}", m.goodput_qps()),
+                ms(m.p99_e2e()),
+                format!("{:.4}", m.success_rate()),
+                pct(hit_rate(&m)),
+                pct(m.dram_hit_rate()),
+                shed.to_string(),
+            ]);
+        }
+    }
+    t.emit(args)
+}

@@ -14,6 +14,21 @@
 //!   simulator that regenerates every figure/table in the paper's
 //!   evaluation.
 //!
+//! The L3 control plane is organised around two shared abstractions:
+//!
+//! * [`relay::RelayCoordinator`] — one clock-agnostic state machine
+//!   owning the whole per-request relay-race decision flow (admission →
+//!   placement → ψ lookup/production → wait-budget fallback →
+//!   outcome classification → spill lifecycle).  The simulator
+//!   ([`cluster`]) and the live engine ([`serve`]) are thin time/compute
+//!   adapters over its event API, so a policy change lands in both
+//!   engines at once — `tests/cross_engine.rs` asserts their per-request
+//!   outcomes stay identical.
+//! * [`workload::Scenario`] — named traffic shapes (`steady`, `diurnal`,
+//!   `burst`, `coldstart`) behind one generator trait, selectable with
+//!   `--scenario` in both engines and compared by `relaygr figure
+//!   scenarios`.
+//!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! model once and the rust binary is self-contained afterwards.
 

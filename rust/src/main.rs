@@ -64,7 +64,9 @@ fn help() -> String {
      \n\
      COMMON OPTIONS:\n\
      \x20 --artifacts <dir>   artifact directory (default: artifacts)\n\
-     \x20 --seed <n>          base RNG seed (default: 42)\n"
+     \x20 --seed <n>          base RNG seed (default: 42)\n\
+     \x20 --scenario <name>   workload scenario: steady (default) | diurnal\n\
+     \x20                     | burst | coldstart (serve + figure)\n"
         .to_string()
 }
 

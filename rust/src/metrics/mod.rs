@@ -44,6 +44,15 @@ pub struct RunMetrics {
     pub sim_duration_us: u64,
     pub offered_qps: f64,
     pub pipeline_slo_us: f64,
+
+    /// Workload scenario label this run served (empty when unknown).
+    pub scenario: String,
+    /// When set, [`RunMetrics::record`] appends `(request, outcome)` to
+    /// [`RunMetrics::outcome_log`] — the cross-engine equivalence tests
+    /// compare these per-request sequences.  Off by default (it grows
+    /// with the trace).
+    pub log_outcomes: bool,
+    pub outcome_log: Vec<(u64, CacheOutcome)>,
 }
 
 fn outcome_index(o: CacheOutcome) -> usize {
@@ -81,6 +90,9 @@ impl RunMetrics {
             sim_duration_us: 0,
             offered_qps: 0.0,
             pipeline_slo_us,
+            scenario: String::new(),
+            log_outcomes: false,
+            outcome_log: Vec::new(),
         }
     }
 
@@ -107,6 +119,9 @@ impl RunMetrics {
         self.outcome_counts[outcome_index(lc.outcome)] += 1;
         if lc.admitted {
             self.admitted += 1;
+        }
+        if self.log_outcomes {
+            self.outcome_log.push((lc.request, lc.outcome));
         }
     }
 
@@ -183,8 +198,13 @@ impl RunMetrics {
 
     /// One-line human summary.
     pub fn brief(&self) -> String {
+        let scen = if self.scenario.is_empty() {
+            String::new()
+        } else {
+            format!("scenario={} ", self.scenario)
+        };
         format!(
-            "n={} qps={:.1} p99={:.1}ms success={:.4} outcomes[{}]",
+            "{scen}n={} qps={:.1} p99={:.1}ms success={:.4} outcomes[{}]",
             self.completed,
             self.goodput_qps(),
             self.p99_e2e() / 1e3,

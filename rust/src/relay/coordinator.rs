@@ -1,0 +1,891 @@
+//! The shared relay-race coordinator: one clock-agnostic state machine
+//! owning the full per-request decision flow of §3 — admission
+//! ([`Trigger`]), placement ([`Router`]), ψ lookup/production across
+//! [`HbmCache`] + [`Expander`], wait-budget fallback, and
+//! [`CacheOutcome`] classification — driven through a small event-style
+//! API by *both* execution engines:
+//!
+//! * the discrete-event simulator (`cluster::sim`) advances a virtual
+//!   clock and models compute/transfer durations with the cost model,
+//! * the live threaded engine (`serve::engine`) uses wall-clock time and
+//!   real PJRT executions.
+//!
+//! Neither engine makes a caching/placement/admission decision itself:
+//! they translate coordinator *actions* into time (simulated or real) and
+//! report completions back.  The event API:
+//!
+//! | event                | meaning                                        |
+//! |----------------------|------------------------------------------------|
+//! | [`on_arrival`]       | request entered the pipeline                   |
+//! | [`on_trigger_check`] | the trigger side path runs (admission + signal)|
+//! | [`on_stage_done`]    | a cascade stage finished (routes at preproc)   |
+//! | [`on_rank_start`]    | ranking request reached its instance           |
+//! | [`on_psi_ready`]     | ψ production finished (or failed)              |
+//! | [`on_reload_done`]   | a DRAM→HBM transfer finished (or failed)       |
+//! | [`rank_compute`]     | ranking execution starts: consume ψ            |
+//! | [`on_rank_done`]     | ranking finished: release + spill lifecycle    |
+//!
+//! [`on_arrival`]: RelayCoordinator::on_arrival
+//! [`on_trigger_check`]: RelayCoordinator::on_trigger_check
+//! [`on_stage_done`]: RelayCoordinator::on_stage_done
+//! [`on_rank_start`]: RelayCoordinator::on_rank_start
+//! [`on_psi_ready`]: RelayCoordinator::on_psi_ready
+//! [`on_reload_done`]: RelayCoordinator::on_reload_done
+//! [`rank_compute`]: RelayCoordinator::rank_compute
+//! [`on_rank_done`]: RelayCoordinator::on_rank_done
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::relay::baseline::Mode;
+use crate::relay::expander::{DramPolicy, Expander, ExpanderStats, PseudoAction, ReloadDone};
+use crate::relay::hbm::{EntryState, HbmCache, HbmStats};
+use crate::relay::pipeline::CacheOutcome;
+use crate::relay::router::{Router, RouterConfig};
+use crate::relay::trigger::{
+    BehaviorMeta, Decision, Estimator, Trigger, TriggerConfig, TriggerStats,
+};
+use crate::util::fxhash::FxHashMap;
+
+/// ψ footprint (bytes) as a function of prefix length.  Boxed so the
+/// simulator wires in the analytic model (`kv_bytes_for`) and the live
+/// engine the compiled artifact's fixed footprint.
+pub type KvSizer = Box<dyn Fn(usize) -> usize + Send>;
+
+/// Static coordinator parameters shared by both engines.
+pub struct CoordinatorConfig {
+    pub mode: Mode,
+    pub router: RouterConfig,
+    pub trigger: TriggerConfig,
+    pub dram: DramPolicy,
+    /// Requests with prefix above this use the special (relay) service.
+    pub long_threshold: usize,
+    /// Lifecycle window T_life for cache survivability.
+    pub t_life_us: u64,
+    pub max_reload_concurrency: usize,
+    /// Per-instance HBM slice reserved for live ψ caches (r1·HBM).
+    pub hbm_bytes: usize,
+    /// Feature dimension reported in [`BehaviorMeta`].
+    pub dim: usize,
+    pub kv_bytes: KvSizer,
+}
+
+/// Cascade stages the coordinator is told about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Retrieval,
+    Preproc,
+}
+
+/// What the admitted pre-infer signal must do next (the host performs the
+/// compute/transfer and reports back).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SignalAction {
+    /// No side path: not admitted, or ψ already resident / in flight.
+    None,
+    /// Compute ψ (behaviour fetch + feature proc + H2D + prefix pass) on
+    /// `instance`, then call [`RelayCoordinator::on_psi_ready`].
+    Produce { instance: usize, user: u64, prefix_len: usize },
+    /// Perform one DRAM→HBM reload of `bytes` for `user` on `instance`,
+    /// then call [`RelayCoordinator::on_reload_done`].
+    Reload { instance: usize, user: u64, bytes: usize },
+}
+
+/// What the ranking request must do when it reaches its instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankAction {
+    /// Run ranking now; `cached` selects incremental vs full compute.
+    Proceed { cached: bool, outcome: CacheOutcome },
+    /// ψ is being produced: wait; resolved by
+    /// [`RelayCoordinator::on_psi_ready`] (or a wait-budget timeout).
+    Wait,
+    /// This request starts the DRAM→HBM reload (performs the transfer,
+    /// then calls [`RelayCoordinator::on_reload_done`], which resolves it
+    /// and any joiners).
+    StartReload { bytes: usize },
+    /// Joined an in-flight or queued reload; resolved by
+    /// [`RelayCoordinator::on_reload_done`].
+    WaitReload,
+}
+
+/// Resolution of a finished DRAM→HBM reload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReloadResolution {
+    /// Whether ψ was installed into HBM (false ⇒ waiters fell back).
+    pub installed: bool,
+    /// Ranking requests resolved by this reload (resume their processing).
+    pub woken: Vec<u64>,
+    /// Next queued reload now permitted to start
+    /// (drive it via [`RelayCoordinator::begin_queued_reload`]).
+    pub next: Option<u64>,
+}
+
+/// Outcome of granting a queued reload its turn.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueuedReload {
+    /// The payload is still in DRAM: perform the transfer, then call
+    /// [`RelayCoordinator::on_reload_done`].
+    Start { bytes: usize },
+    /// Evicted from DRAM while queued: aborted; `woken` requests fell
+    /// back, `next` queued reload may start.
+    Aborted { woken: Vec<u64>, next: Option<u64> },
+}
+
+/// ψ handed to the ranking execution.
+pub struct RankCompute<T> {
+    /// Whether ranking runs on the cached prefix (incremental tokens
+    /// only) or must process the whole sequence.
+    pub cached: bool,
+    /// The consumed payload when cached (device buffer in the live
+    /// engine, `()` in the simulator).
+    pub payload: Option<T>,
+}
+
+/// Everything the host needs to close out a finished request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub user: u64,
+    pub prefix_len: usize,
+    pub is_long: bool,
+    pub instance: usize,
+    pub admitted: bool,
+    pub cached: bool,
+    pub outcome: CacheOutcome,
+    /// Accumulated ranking-path wait for ψ production / reload (µs).
+    pub wait_us: f64,
+    /// `Some(bytes)`: freshly produced ψ is eligible for a DRAM spill —
+    /// materialise a host copy and call
+    /// [`RelayCoordinator::complete_spill`] (off the critical path).
+    pub spill: Option<usize>,
+}
+
+/// Per-instance cache-plane state.
+struct InstanceCtl<T> {
+    hbm: HbmCache<T>,
+    expander: Expander<T>,
+    /// Rank requests waiting for ψ production to finish, per user.
+    waiting_produce: FxHashMap<u64, Vec<u64>>,
+    /// Rank requests joined to an in-flight/queued reload, per user.
+    waiting_reload: FxHashMap<u64, Vec<u64>>,
+    /// Where the currently-resident ψ came from (fresh pre-inference →
+    /// `HbmHit`, DRAM reload → `DramHit`): drives the paper's hit-rate
+    /// attribution even when a signal-initiated reload pre-warmed HBM.
+    origin: FxHashMap<u64, CacheOutcome>,
+}
+
+/// Per-request decision state.
+#[derive(Debug, Clone, Copy)]
+struct ReqCtl {
+    user: u64,
+    prefix_len: usize,
+    is_long: bool,
+    admitted: bool,
+    pre_instance: Option<usize>,
+    rank_instance: usize,
+    outcome: CacheOutcome,
+    cached: bool,
+    wait_since: u64,
+    wait_us: f64,
+    /// Rank-side wait resolved (production/reload finished or timed out).
+    resolved: bool,
+}
+
+/// The shared relay-race coordinator.
+pub struct RelayCoordinator<T> {
+    cfg: CoordinatorConfig,
+    router: Router,
+    triggers: HashMap<usize, Trigger>,
+    instances: Vec<InstanceCtl<T>>,
+    requests: FxHashMap<u64, ReqCtl>,
+}
+
+impl<T: Clone> RelayCoordinator<T> {
+    /// Build the coordinator; `mk_estimator` supplies the latency
+    /// estimator for each special instance's trigger.
+    pub fn new(
+        cfg: CoordinatorConfig,
+        mut mk_estimator: impl FnMut(usize) -> Estimator,
+    ) -> Result<RelayCoordinator<T>> {
+        let router = Router::new(cfg.router.clone())?;
+        let mut triggers = HashMap::new();
+        for &i in router.special_instances() {
+            triggers.insert(i, Trigger::new(cfg.trigger.clone(), mk_estimator(i)));
+        }
+        let instances = (0..cfg.router.n_instances)
+            .map(|_| InstanceCtl {
+                hbm: HbmCache::new(cfg.hbm_bytes),
+                expander: Expander::new(cfg.dram, cfg.max_reload_concurrency),
+                waiting_produce: FxHashMap::default(),
+                waiting_reload: FxHashMap::default(),
+                origin: FxHashMap::default(),
+            })
+            .collect();
+        Ok(RelayCoordinator { cfg, router, triggers, instances, requests: FxHashMap::default() })
+    }
+
+    // ---- introspection -----------------------------------------------------
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    pub fn special_instances(&self) -> &[usize] {
+        self.router.special_instances()
+    }
+
+    pub fn server_of(&self, instance: usize) -> usize {
+        self.router.server_of(instance)
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    /// Whether the request will run ranking-on-cache (valid once its
+    /// rank-side classification is settled).
+    pub fn is_cached(&self, req: u64) -> bool {
+        self.requests.get(&req).map(|r| r.cached).unwrap_or(false)
+    }
+
+    /// Whether a waiting rank request has been resolved (woken or timed
+    /// out) — the live engine polls this under its condvar.
+    pub fn wait_resolved(&self, req: u64) -> bool {
+        self.requests.get(&req).map(|r| r.resolved).unwrap_or(true)
+    }
+
+    /// Merged cache/admission counters across instances.
+    pub fn hbm_stats(&self) -> HbmStats {
+        let mut acc = HbmStats::default();
+        for i in &self.instances {
+            acc.merge(i.hbm.stats());
+        }
+        acc
+    }
+
+    pub fn expander_stats(&self) -> ExpanderStats {
+        let mut acc = ExpanderStats::default();
+        for i in &self.instances {
+            acc.merge(i.expander.stats());
+        }
+        acc
+    }
+
+    pub fn trigger_stats(&self) -> TriggerStats {
+        let mut acc = TriggerStats::default();
+        for t in self.triggers.values() {
+            acc.merge(t.stats());
+        }
+        acc
+    }
+
+    /// Live-cache slots currently held across special instances (the
+    /// paper's Σ L admission feedback).  Every `Decision::Admit` holds
+    /// one slot until its request completes (`on_rank_done`) or the
+    /// admit is cancelled at signal time (HBM overcommit).
+    pub fn trigger_live(&self) -> usize {
+        self.triggers.values().map(|t| t.live()).sum()
+    }
+
+    /// Host copy backing a reload the caller is about to perform.
+    pub fn dram_payload(&mut self, instance: usize, user: u64) -> Option<(usize, T)> {
+        self.instances[instance].expander.dram_payload(user)
+    }
+
+    // ---- event API ---------------------------------------------------------
+
+    /// A request entered the pipeline.  Returns whether the trigger side
+    /// path should run (relay mode, long sequence).
+    pub fn on_arrival(&mut self, _now: u64, req: u64, user: u64, prefix_len: usize) -> bool {
+        let is_long = prefix_len > self.cfg.long_threshold;
+        self.requests.insert(
+            req,
+            ReqCtl {
+                user,
+                prefix_len,
+                is_long,
+                admitted: false,
+                pre_instance: None,
+                rank_instance: usize::MAX,
+                outcome: CacheOutcome::FullInference,
+                cached: false,
+                wait_since: 0,
+                wait_us: 0.0,
+                resolved: false,
+            },
+        );
+        self.cfg.mode.is_relay() && is_long
+    }
+
+    /// The trigger side path: metadata risk test, admission control, and
+    /// the signal-side pseudo-pre-infer (§3.2/§3.4).
+    pub fn on_trigger_check(&mut self, now: u64, req: u64) -> SignalAction {
+        let (user, prefix_len) = {
+            let st = &self.requests[&req];
+            (st.user, st.prefix_len)
+        };
+        let route = self.router.route_special(user);
+        self.router.on_complete(route.instance); // signal, not a held connection
+        let inst = route.instance;
+        let meta = BehaviorMeta { user, prefix_len, dim: self.cfg.dim };
+        let decision = self
+            .triggers
+            .get_mut(&inst)
+            .map(|t| t.decide(now, &meta))
+            .unwrap_or(Decision::NotAtRisk);
+        if decision != Decision::Admit {
+            return SignalAction::None;
+        }
+        {
+            let st = self.requests.get_mut(&req).unwrap();
+            st.admitted = true;
+            st.pre_instance = Some(inst);
+        }
+        // The pre-infer signal itself performs the pseudo-pre-infer checks,
+        // skipping redundant recomputation when ψ is already local (§3.4).
+        let kv = (self.cfg.kv_bytes)(prefix_len);
+        let action = {
+            let instance = &mut self.instances[inst];
+            instance.expander.pseudo_pre_infer(user, &mut instance.hbm, now)
+        };
+        match action {
+            PseudoAction::HbmHit | PseudoAction::WaitProducing => {
+                // Cache already present / being produced: re-arm its
+                // lifecycle for this request instead of recomputing.  The
+                // admitted slot stays held until the request completes
+                // (Eq. 1: L = Q_admit · T_life) and is released exactly
+                // once, in `on_rank_done`.
+                self.instances[inst].hbm.extend_lease(user, now + self.cfg.t_life_us);
+                SignalAction::None
+            }
+            PseudoAction::StartReload { bytes } => SignalAction::Reload { instance: inst, user, bytes },
+            PseudoAction::JoinReload | PseudoAction::QueuedReload => {
+                // A reload is already pending; the signal needs no follow-up.
+                SignalAction::None
+            }
+            PseudoAction::Miss => {
+                let instance = &mut self.instances[inst];
+                match instance.hbm.begin_produce(user, kv, now, self.cfg.t_life_us) {
+                    Ok(()) => SignalAction::Produce { instance: inst, user, prefix_len },
+                    Err(_) => {
+                        // Admission overcommitted (shouldn't happen when Eqs.
+                        // 1-3 hold); treat as not admitted.
+                        if let Some(t) = self.triggers.get_mut(&inst) {
+                            t.release();
+                        }
+                        let st = self.requests.get_mut(&req).unwrap();
+                        st.admitted = false;
+                        st.pre_instance = None;
+                        SignalAction::None
+                    }
+                }
+            }
+        }
+    }
+
+    /// A cascade stage finished.  At pre-processing the late binding is
+    /// resolved: long-sequence requests carry the consistency-hash-key
+    /// and go to the special service; short ones follow standard
+    /// balancing.  Returns the ranking instance at `Stage::Preproc`.
+    pub fn on_stage_done(&mut self, _now: u64, req: u64, stage: Stage) -> Option<usize> {
+        if stage != Stage::Preproc {
+            return None;
+        }
+        let (user, is_long) = {
+            let st = &self.requests[&req];
+            (st.user, st.is_long)
+        };
+        let route = if self.cfg.mode.is_relay() && is_long {
+            self.router.route_special(user)
+        } else {
+            self.router.route_normal(user)
+        };
+        self.requests.get_mut(&req).unwrap().rank_instance = route.instance;
+        Some(route.instance)
+    }
+
+    /// The ranking request reached its instance: run the pseudo-pre-infer
+    /// fronting every ranking request (§3.4) and classify.
+    pub fn on_rank_start(&mut self, now: u64, req: u64) -> RankAction {
+        let (inst, user, is_long, admitted) = {
+            let st = &self.requests[&req];
+            (st.rank_instance, st.user, st.is_long, st.admitted)
+        };
+        if !(self.cfg.mode.is_relay() && is_long) {
+            // Baseline mode or short-sequence request: full inline inference.
+            self.requests.get_mut(&req).unwrap().resolved = true;
+            return RankAction::Proceed { cached: false, outcome: CacheOutcome::FullInference };
+        }
+        let action = {
+            let instance = &mut self.instances[inst];
+            instance.expander.pseudo_pre_infer(user, &mut instance.hbm, now)
+        };
+        match action {
+            PseudoAction::HbmHit => {
+                let origin = self.instances[inst]
+                    .origin
+                    .get(&user)
+                    .copied()
+                    .unwrap_or(CacheOutcome::HbmHit);
+                let st = self.requests.get_mut(&req).unwrap();
+                st.outcome = origin;
+                st.cached = true;
+                st.resolved = true;
+                RankAction::Proceed { cached: true, outcome: origin }
+            }
+            PseudoAction::WaitProducing => {
+                self.requests.get_mut(&req).unwrap().wait_since = now;
+                self.instances[inst].waiting_produce.entry(user).or_default().push(req);
+                RankAction::Wait
+            }
+            PseudoAction::StartReload { bytes } => {
+                {
+                    let st = self.requests.get_mut(&req).unwrap();
+                    st.outcome = CacheOutcome::DramHit;
+                    st.cached = true;
+                    st.wait_since = now;
+                }
+                self.instances[inst].waiting_reload.entry(user).or_default().push(req);
+                RankAction::StartReload { bytes }
+            }
+            PseudoAction::JoinReload | PseudoAction::QueuedReload => {
+                {
+                    let st = self.requests.get_mut(&req).unwrap();
+                    st.outcome = CacheOutcome::JoinedReload;
+                    st.cached = true;
+                    st.wait_since = now;
+                }
+                self.instances[inst].waiting_reload.entry(user).or_default().push(req);
+                RankAction::WaitReload
+            }
+            PseudoAction::Miss => {
+                let st = self.requests.get_mut(&req).unwrap();
+                st.outcome =
+                    if admitted { CacheOutcome::Fallback } else { CacheOutcome::FullInference };
+                st.cached = false;
+                st.resolved = true;
+                RankAction::Proceed { cached: false, outcome: st.outcome }
+            }
+        }
+    }
+
+    /// ψ production finished on `instance` (`payload = None` ⇒ it failed).
+    /// Returns the rank requests resolved by it; the host resumes their
+    /// processing.
+    pub fn on_psi_ready(
+        &mut self,
+        now: u64,
+        instance: usize,
+        user: u64,
+        payload: Option<T>,
+    ) -> Vec<u64> {
+        let ok = match payload {
+            Some(p) => self.instances[instance].hbm.complete_produce(user, p),
+            None => {
+                // Production failed (live-engine execution error): drop the
+                // reservation so later requests miss cleanly.
+                self.instances[instance].hbm.evict(user);
+                false
+            }
+        };
+        if ok {
+            self.instances[instance].origin.insert(user, CacheOutcome::HbmHit);
+        }
+        // On failure (entry evicted while producing — lost work) the
+        // admitted slot is still released exactly once, by the owning
+        // request's `on_rank_done`.
+        let waiters =
+            self.instances[instance].waiting_produce.remove(&user).unwrap_or_default();
+        for &w in &waiters {
+            if let Some(st) = self.requests.get_mut(&w) {
+                st.wait_us += now.saturating_sub(st.wait_since) as f64;
+                if ok {
+                    st.outcome = CacheOutcome::HbmHit;
+                    st.cached = true;
+                } else {
+                    st.outcome = CacheOutcome::Fallback;
+                    st.cached = false;
+                }
+                st.resolved = true;
+            }
+        }
+        waiters
+    }
+
+    /// A DRAM→HBM transfer finished (`payload = None` ⇒ the H2D failed).
+    pub fn on_reload_done(
+        &mut self,
+        now: u64,
+        instance: usize,
+        user: u64,
+        payload: Option<T>,
+        bytes: usize,
+    ) -> ReloadResolution {
+        let t_life = self.cfg.t_life_us;
+        let done = {
+            let inst = &mut self.instances[instance];
+            match payload {
+                Some(p) => inst.expander.complete_reload(user, p, bytes, now, t_life, &mut inst.hbm),
+                None => {
+                    let (joiners, next) = inst.expander.finish_reload(user);
+                    ReloadDone { joiners, installed: false, next }
+                }
+            }
+        };
+        if done.installed {
+            self.instances[instance].origin.insert(user, CacheOutcome::DramHit);
+        }
+        let woken = self.instances[instance].waiting_reload.remove(&user).unwrap_or_default();
+        for &w in &woken {
+            if let Some(st) = self.requests.get_mut(&w) {
+                st.wait_us += now.saturating_sub(st.wait_since) as f64;
+                if !done.installed {
+                    st.outcome = CacheOutcome::Fallback;
+                    st.cached = false;
+                }
+                st.resolved = true;
+            }
+        }
+        ReloadResolution { installed: done.installed, woken, next: done.next }
+    }
+
+    /// A queued reload was granted its concurrency slot.  If the payload
+    /// was evicted from DRAM while queued, the reload aborts and its
+    /// waiters fall back.
+    pub fn begin_queued_reload(&mut self, now: u64, instance: usize, user: u64) -> QueuedReload {
+        match self.instances[instance].expander.dram_payload(user) {
+            Some((bytes, _)) => QueuedReload::Start { bytes },
+            None => {
+                let next = self.instances[instance].expander.abort_reload(user);
+                let woken =
+                    self.instances[instance].waiting_reload.remove(&user).unwrap_or_default();
+                for &w in &woken {
+                    if let Some(st) = self.requests.get_mut(&w) {
+                        st.wait_us += now.saturating_sub(st.wait_since) as f64;
+                        st.outcome = CacheOutcome::Fallback;
+                        st.cached = false;
+                        st.resolved = true;
+                    }
+                }
+                QueuedReload::Aborted { woken, next }
+            }
+        }
+    }
+
+    /// Wait-budget fallback: a rank request waited too long for ψ.  The
+    /// request leaves its waiting list and falls back to full inference.
+    pub fn on_wait_timeout(&mut self, now: u64, req: u64) {
+        let Some(st) = self.requests.get_mut(&req) else { return };
+        st.wait_us += now.saturating_sub(st.wait_since) as f64;
+        st.outcome = CacheOutcome::Fallback;
+        st.cached = false;
+        st.resolved = true;
+        let (inst, user) = (st.rank_instance, st.user);
+        if inst < self.instances.len() {
+            let ctl = &mut self.instances[inst];
+            for map in [&mut ctl.waiting_produce, &mut ctl.waiting_reload] {
+                if let Some(v) = map.get_mut(&user) {
+                    v.retain(|&r| r != req);
+                    if v.is_empty() {
+                        map.remove(&user);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Ranking execution starts: consume ψ when cached.
+    pub fn rank_compute(&mut self, _now: u64, req: u64) -> RankCompute<T> {
+        let (inst, user, cached) = {
+            let st = &self.requests[&req];
+            (st.rank_instance, st.user, st.cached)
+        };
+        let payload = if cached { self.instances[inst].hbm.consume(user) } else { None };
+        RankCompute { cached, payload }
+    }
+
+    /// The classified ψ was unusable at execution time (live engine only:
+    /// e.g. the device buffer failed to materialise) — demote to a safe
+    /// fallback so metrics reflect what actually ran.
+    pub fn force_fallback(&mut self, req: u64) {
+        if let Some(st) = self.requests.get_mut(&req) {
+            st.outcome = CacheOutcome::Fallback;
+            st.cached = false;
+        }
+    }
+
+    /// Ranking finished: release the connection and the admitted
+    /// live-cache slot, classify the spill lifecycle, and retire the
+    /// request.  `kv_bytes` is this request's ψ footprint.
+    pub fn on_rank_done(&mut self, _now: u64, req: u64, kv_bytes: usize) -> Completion {
+        let st = self.requests.remove(&req).expect("completion for unknown request");
+        let inst = st.rank_instance;
+        self.router.on_complete(inst);
+        // Release the admitted live-cache slot.
+        if st.admitted {
+            if let Some(pre_inst) = st.pre_instance {
+                if let Some(t) = self.triggers.get_mut(&pre_inst) {
+                    t.release();
+                }
+            }
+        }
+        // The sliding window moves past a consumed ψ: freshly produced
+        // caches are eligible for a DRAM spill (short-term reuse, off the
+        // critical path); reloaded ψ is still resident in DRAM, so the
+        // window slides immediately.
+        let mut spill = None;
+        if st.cached {
+            let ctl = &mut self.instances[inst];
+            let fresh = ctl.origin.get(&st.user) == Some(&CacheOutcome::HbmHit);
+            if fresh {
+                spill = Some(kv_bytes);
+            } else if ctl.hbm.state_of(st.user) == Some(EntryState::Consumed) {
+                ctl.hbm.evict(st.user);
+                ctl.origin.remove(&st.user);
+            }
+        }
+        Completion {
+            user: st.user,
+            prefix_len: st.prefix_len,
+            is_long: st.is_long,
+            instance: inst,
+            admitted: st.admitted,
+            cached: st.cached,
+            outcome: st.outcome,
+            wait_us: st.wait_us,
+            spill,
+        }
+    }
+
+    /// Spill a freshly produced ψ to DRAM (host supplies the host-memory
+    /// copy).  Returns whether the spill was accepted — only then does
+    /// the HBM window slide past the consumed entry; otherwise it stays
+    /// `Consumed` until its lifecycle expires (probe-time reclamation).
+    pub fn complete_spill(
+        &mut self,
+        instance: usize,
+        user: u64,
+        bytes: usize,
+        payload: T,
+    ) -> bool {
+        let ctl = &mut self.instances[instance];
+        if !ctl.expander.spill(user, bytes, payload) {
+            return false;
+        }
+        if ctl.hbm.state_of(user) == Some(EntryState::Consumed) {
+            ctl.hbm.evict(user);
+            ctl.origin.remove(&user);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::router::BalancePolicy;
+
+    fn config(mode: Mode) -> CoordinatorConfig {
+        CoordinatorConfig {
+            mode,
+            router: RouterConfig {
+                n_instances: 4,
+                servers: 2,
+                r2: 0.5,
+                max_special_per_server: 1,
+                gateways: 2,
+                vnodes: 16,
+                normal_policy: BalancePolicy::LeastConnections,
+            },
+            trigger: TriggerConfig::paper_example(),
+            dram: DramPolicy::Capacity(1 << 30),
+            long_threshold: 2048,
+            t_life_us: 300_000,
+            max_reload_concurrency: 2,
+            hbm_bytes: 1 << 30,
+            dim: 256,
+            kv_bytes: Box::new(|_| 32 << 20),
+        }
+    }
+
+    fn coord(mode: Mode) -> RelayCoordinator<u32> {
+        RelayCoordinator::new(config(mode), |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap()
+    }
+
+    /// Drive one request end to end with an instantly-completing host.
+    fn drive(c: &mut RelayCoordinator<u32>, now: u64, id: u64, user: u64, prefix: usize) -> Completion {
+        if c.on_arrival(now, id, user, prefix) {
+            match c.on_trigger_check(now, id) {
+                SignalAction::Produce { instance, user, .. } => {
+                    let woken = c.on_psi_ready(now, instance, user, Some(7));
+                    assert!(woken.is_empty(), "no rank request is waiting yet");
+                }
+                SignalAction::Reload { instance, user, bytes } => {
+                    let res = c.on_reload_done(now, instance, user, Some(7), bytes);
+                    assert!(res.installed);
+                }
+                SignalAction::None => {}
+            }
+        }
+        c.on_stage_done(now, id, Stage::Retrieval);
+        c.on_stage_done(now, id, Stage::Preproc).expect("rank instance routed");
+        match c.on_rank_start(now, id) {
+            RankAction::Proceed { .. } => {}
+            RankAction::StartReload { bytes } => {
+                let st = c.requests[&id];
+                c.on_reload_done(now, st.rank_instance, st.user, Some(7), bytes);
+            }
+            RankAction::Wait | RankAction::WaitReload => {
+                assert!(c.wait_resolved(id), "instant host should have resolved the wait");
+            }
+        }
+        let rc = c.rank_compute(now, id);
+        let done = c.on_rank_done(now, id, 32 << 20);
+        if rc.cached {
+            assert!(rc.payload.is_some());
+        }
+        if let Some(bytes) = done.spill {
+            c.complete_spill(done.instance, done.user, bytes, 7);
+        }
+        done
+    }
+
+    #[test]
+    fn baseline_mode_never_triggers_or_caches() {
+        let mut c = coord(Mode::Baseline);
+        for id in 0..20 {
+            let done = drive(&mut c, id * 1000, id, id % 3, 4096);
+            assert_eq!(done.outcome, CacheOutcome::FullInference);
+            assert!(!done.admitted && !done.cached);
+        }
+        assert_eq!(c.trigger_stats().assessed, 0);
+    }
+
+    #[test]
+    fn relay_long_request_relays_and_spills() {
+        let mut c = coord(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) });
+        let done = drive(&mut c, 0, 1, 42, 4096);
+        assert_eq!(done.outcome, CacheOutcome::HbmHit);
+        assert!(done.admitted && done.cached && done.spill.is_some());
+        // The spill landed in DRAM: a follow-up request reloads from it.
+        let done2 = drive(&mut c, 500_000, 2, 42, 4096);
+        assert_eq!(done2.outcome, CacheOutcome::DramHit, "refresh must hit the DRAM tier");
+        // Short request stays on the normal path.
+        let done3 = drive(&mut c, 600_000, 3, 99, 128);
+        assert_eq!(done3.outcome, CacheOutcome::FullInference);
+        assert!(!done3.admitted);
+    }
+
+    #[test]
+    fn rank_waits_for_production_then_hits() {
+        let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
+        assert!(c.on_arrival(0, 1, 7, 4096));
+        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
+            panic!("expected production");
+        };
+        c.on_stage_done(0, 1, Stage::Preproc).unwrap();
+        assert_eq!(c.on_rank_start(10, 1), RankAction::Wait);
+        assert!(!c.wait_resolved(1));
+        let woken = c.on_psi_ready(5_000, instance, user, Some(3));
+        assert_eq!(woken, vec![1]);
+        assert!(c.wait_resolved(1) && c.is_cached(1));
+        let rc = c.rank_compute(5_000, 1);
+        assert_eq!(rc.payload, Some(3));
+        let done = c.on_rank_done(5_000, 1, 1 << 20);
+        assert_eq!(done.outcome, CacheOutcome::HbmHit);
+        assert!((done.wait_us - 4_990.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failed_production_falls_back() {
+        let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
+        assert!(c.on_arrival(0, 1, 7, 4096));
+        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
+            panic!("expected production");
+        };
+        c.on_stage_done(0, 1, Stage::Preproc).unwrap();
+        assert_eq!(c.on_rank_start(10, 1), RankAction::Wait);
+        let woken = c.on_psi_ready(2_000, instance, user, None);
+        assert_eq!(woken, vec![1]);
+        let rc = c.rank_compute(2_000, 1);
+        assert!(!rc.cached && rc.payload.is_none());
+        let done = c.on_rank_done(2_000, 1, 1 << 20);
+        assert_eq!(done.outcome, CacheOutcome::Fallback);
+        assert!(done.admitted, "fallback still counts as admitted");
+    }
+
+    #[test]
+    fn wait_timeout_resolves_to_fallback_and_detaches() {
+        let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
+        assert!(c.on_arrival(0, 1, 7, 4096));
+        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
+            panic!("expected production");
+        };
+        c.on_stage_done(0, 1, Stage::Preproc).unwrap();
+        assert_eq!(c.on_rank_start(10, 1), RankAction::Wait);
+        c.on_wait_timeout(200_010, 1);
+        assert!(c.wait_resolved(1));
+        // Late production must not resurrect the timed-out request.
+        let woken = c.on_psi_ready(300_000, instance, user, Some(3));
+        assert!(woken.is_empty());
+        let done = c.on_rank_done(300_000, 1, 1 << 20);
+        assert_eq!(done.outcome, CacheOutcome::Fallback);
+        assert!((done.wait_us - 200_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admitted_slot_released_exactly_once() {
+        let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
+        // Same user repeatedly: later admits find ψ resident (no new
+        // cache produced) but every admit's slot must be held for the
+        // request lifecycle and freed exactly once at completion —
+        // otherwise the Eq. 2 footprint bound stops binding.
+        for id in 0..6u64 {
+            let now = id * 10_000;
+            assert!(c.on_arrival(now, id, 7, 4096));
+            match c.on_trigger_check(now, id) {
+                SignalAction::Produce { instance, user, .. } => {
+                    c.on_psi_ready(now, instance, user, Some(1));
+                }
+                SignalAction::None => {}
+                other => panic!("unexpected signal action {other:?}"),
+            }
+            assert_eq!(c.trigger_live(), 1, "admit {id} holds one slot in flight");
+            c.on_stage_done(now, id, Stage::Preproc).unwrap();
+            let _ = c.on_rank_start(now, id);
+            let _ = c.rank_compute(now, id);
+            let done = c.on_rank_done(now, id, 32 << 20);
+            assert!(done.admitted);
+            assert_eq!(c.trigger_live(), 0, "admit {id} freed exactly once at completion");
+        }
+    }
+
+    #[test]
+    fn joined_reload_classification() {
+        let mut c = coord(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) });
+        // Seed DRAM for user 5 on its special instance via a full cycle.
+        let first = drive(&mut c, 0, 1, 5, 4096);
+        assert!(first.spill.is_some());
+        // Two refresh requests race: the first starts the reload, the
+        // second joins it.
+        assert!(c.on_arrival(400_000, 2, 5, 4096));
+        assert!(c.on_arrival(400_000, 3, 5, 4096));
+        // Skip admission (signal may be delayed): rank requests front
+        // the reload themselves (out-of-order arrival, §3.4).
+        c.on_stage_done(400_000, 2, Stage::Preproc).unwrap();
+        c.on_stage_done(400_000, 3, Stage::Preproc).unwrap();
+        let a = c.on_rank_start(400_000, 2);
+        let RankAction::StartReload { bytes } = a else { panic!("expected StartReload, got {a:?}") };
+        assert_eq!(c.on_rank_start(400_001, 3), RankAction::WaitReload);
+        let st2 = c.requests[&2];
+        let res = c.on_reload_done(400_500, st2.rank_instance, 5, Some(9), bytes);
+        assert!(res.installed);
+        let mut woken = res.woken;
+        woken.sort_unstable();
+        assert_eq!(woken, vec![2, 3]);
+        let d2 = c.on_rank_done(400_500, 2, bytes);
+        let d3 = c.on_rank_done(400_500, 3, bytes);
+        assert_eq!(d2.outcome, CacheOutcome::DramHit);
+        assert_eq!(d3.outcome, CacheOutcome::JoinedReload);
+    }
+}

@@ -70,6 +70,22 @@ pub struct ExpanderStats {
     pub dram_evictions: u64,
 }
 
+impl ExpanderStats {
+    /// Accumulate another instance's counters (cluster-wide reporting).
+    pub fn merge(&mut self, b: ExpanderStats) {
+        self.lookups += b.lookups;
+        self.hbm_hits += b.hbm_hits;
+        self.dram_hits += b.dram_hits;
+        self.misses += b.misses;
+        self.reloads_started += b.reloads_started;
+        self.reloads_joined += b.reloads_joined;
+        self.reloads_queued += b.reloads_queued;
+        self.spills += b.spills;
+        self.spill_rejected += b.spill_rejected;
+        self.dram_evictions += b.dram_evictions;
+    }
+}
+
 #[derive(Debug)]
 struct DramEntry<T> {
     bytes: usize,

@@ -68,6 +68,21 @@ pub struct HbmStats {
     pub rejected: u64,
 }
 
+impl HbmStats {
+    /// Accumulate another instance's counters (cluster-wide reporting).
+    pub fn merge(&mut self, b: HbmStats) {
+        self.inserts += b.inserts;
+        self.ready_hits += b.ready_hits;
+        self.producing_hits += b.producing_hits;
+        self.misses += b.misses;
+        self.consumed += b.consumed;
+        self.evicted_consumed += b.evicted_consumed;
+        self.evicted_expired += b.evicted_expired;
+        self.lost += b.lost;
+        self.rejected += b.rejected;
+    }
+}
+
 /// Sliding-window HBM cache with a byte-capacity bound.
 #[derive(Debug)]
 pub struct HbmCache<T> {

@@ -10,10 +10,23 @@
 //! cascade model and the [`baseline`] modes (inline full inference and the
 //! no-affinity remote-pool strawman).
 //!
-//! All modules are clock-agnostic state machines (callers pass `now_us`),
-//! shared verbatim by the discrete-event simulator and the live engine.
+//! All modules are clock-agnostic state machines (callers pass `now_us`).
+//! The [`coordinator`] composes them into the single per-request
+//! relay-race decision flow — admission → placement → ψ
+//! lookup/production → wait-budget fallback → [`CacheOutcome`]
+//! classification → spill lifecycle — behind an event-style API
+//! (`on_arrival`, `on_trigger_check`, `on_stage_done`, `on_rank_start`,
+//! `on_psi_ready`, `on_reload_done`, `rank_compute`, `on_rank_done`).
+//! The discrete-event simulator (`cluster::sim`) and the live threaded
+//! engine (`serve::engine`) are thin time/compute adapters over it: they
+//! translate coordinator actions into simulated or real durations and
+//! never make a caching/placement/admission decision themselves.  A new
+//! policy (richer cache tiers, alternative admission rules) is
+//! implemented once in the coordinator and both engines pick it up for
+//! free.
 
 pub mod baseline;
+pub mod coordinator;
 pub mod expander;
 pub mod hbm;
 pub mod pipeline;
@@ -21,6 +34,10 @@ pub mod router;
 pub mod trigger;
 
 pub use baseline::{Mode, RemotePool};
+pub use coordinator::{
+    Completion, CoordinatorConfig, QueuedReload, RankAction, RankCompute, RelayCoordinator,
+    ReloadResolution, SignalAction, Stage,
+};
 pub use expander::{DramPolicy, Expander, ExpanderStats, PseudoAction};
 pub use hbm::{EntryState, HbmCache, HbmStats, InsertError, Micros};
 pub use pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};

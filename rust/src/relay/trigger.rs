@@ -163,6 +163,17 @@ pub struct TriggerStats {
     pub footprint_limited: u64,
 }
 
+impl TriggerStats {
+    /// Accumulate another instance's counters (cluster-wide reporting).
+    pub fn merge(&mut self, b: TriggerStats) {
+        self.assessed += b.assessed;
+        self.not_at_risk += b.not_at_risk;
+        self.admitted += b.admitted;
+        self.rate_limited += b.rate_limited;
+        self.footprint_limited += b.footprint_limited;
+    }
+}
+
 impl Trigger {
     pub fn new(cfg: TriggerConfig, estimator: Estimator) -> Trigger {
         let limits = cfg.limits();

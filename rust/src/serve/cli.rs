@@ -9,7 +9,7 @@ use crate::metrics::OUTCOME_NAMES;
 use crate::runtime::Manifest;
 use crate::serve::engine::{LiveCluster, LiveConfig};
 use crate::util::cli::Args;
-use crate::workload::WorkloadConfig;
+use crate::workload::{ScenarioKind, WorkloadConfig};
 
 pub fn run(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts").to_string();
@@ -30,6 +30,10 @@ pub fn run(args: &Args) -> Result<()> {
     cfg.stage_scale = args.get_f64("stage-scale", cfg.stage_scale)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
 
+    let scenario = match args.get("scenario") {
+        Some(s) => ScenarioKind::parse(s).map_err(|e| anyhow!(e))?,
+        None => ScenarioKind::Steady,
+    };
     let wl = WorkloadConfig {
         qps: args.get_f64("qps", 20.0)?,
         duration_us: (args.get_f64("duration-s", 10.0)? * 1e6) as u64,
@@ -40,16 +44,18 @@ pub fn run(args: &Args) -> Result<()> {
         max_prefix: spec.prefix_len,
         fixed_long_len: Some(spec.prefix_len),
         refresh_prob: args.get_f64("refresh-prob", 0.4)?,
+        scenario,
         seed: cfg.seed,
         ..Default::default()
     };
 
     println!(
-        "serving {} on {} instance(s) × {} slot(s), mode {}, qps {}, {}s",
+        "serving {} on {} instance(s) × {} slot(s), mode {}, scenario {}, qps {}, {}s",
         spec.name(),
         cfg.n_instances,
         cfg.m_slots,
         mode.label(),
+        wl.scenario.label(),
         wl.qps,
         wl.duration_us / 1_000_000
     );

@@ -3,12 +3,14 @@
 //! device-resident ψ buffers in an HBM window, host-memory DRAM tier,
 //! wall-clock metrics.
 //!
-//! This is the same control logic as the simulator (identical `relay::*`
-//! state machines) driving actual compute, used by the examples, by
-//! `relaygr serve`, and by `relaygr calibrate` to fit the simulator's CPU
-//! cost profile.
+//! Every caching/placement/admission decision is made by the shared
+//! [`RelayCoordinator`] — the same state machine the discrete-event
+//! simulator drives.  This module is a compute adapter: it translates
+//! coordinator actions into real PJRT executions, H2D/D2H transfers and
+//! condvar waits, and reports completions back through the coordinator's
+//! event API.  Used by the examples, by `relaygr serve`, and by
+//! `relaygr calibrate` to fit the simulator's CPU cost profile.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -19,11 +21,13 @@ use anyhow::{anyhow, Result};
 use crate::metrics::RunMetrics;
 use crate::model::ModelSpec;
 use crate::relay::baseline::Mode;
-use crate::relay::expander::{DramPolicy, Expander, PseudoAction};
-use crate::relay::hbm::HbmCache;
+use crate::relay::coordinator::{
+    CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, SignalAction, Stage,
+};
+use crate::relay::expander::DramPolicy;
 use crate::relay::pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
-use crate::relay::router::{Router, RouterConfig};
-use crate::relay::trigger::{BehaviorMeta, Decision, Trigger, TriggerConfig};
+use crate::relay::router::RouterConfig;
+use crate::relay::trigger::{BehaviorMeta, TriggerConfig};
 use crate::runtime::{synth_embedding, Engine, FnKind, KvBuffer, LoadedModel};
 use crate::util::rng::Rng;
 use crate::workload::{GenRequest, WorkloadConfig};
@@ -72,35 +76,81 @@ impl LiveConfig {
             seed: 42,
         }
     }
+
+    /// The coordinator configuration this deployment shape induces.
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        let is_baseline = matches!(self.mode, Mode::Baseline);
+        let dram = match self.mode {
+            Mode::RelayGr { dram } => dram,
+            _ => DramPolicy::Disabled,
+        };
+        let spec = self.spec;
+        CoordinatorConfig {
+            mode: self.mode,
+            router: RouterConfig {
+                n_instances: self.n_instances,
+                servers: self.n_instances,
+                r2: if is_baseline {
+                    0.0
+                } else {
+                    (1.0 / self.n_instances as f64).max(0.45)
+                },
+                max_special_per_server: 1,
+                gateways: 2,
+                vnodes: 32,
+                normal_policy: crate::relay::router::BalancePolicy::LeastConnections,
+            },
+            trigger: TriggerConfig {
+                rank_p99_budget_us: self.pipeline.rank_budget_us,
+                headroom: 0.8,
+                t_life_us: self.pipeline.t_life_us,
+                kv_p99_bytes: self.spec.kv_bytes(),
+                hbm_bytes: self.hbm_bytes,
+                r1: 1.0,
+                q_m: 1000.0,
+                m_slots: self.m_slots,
+                r2: 0.5,
+                n_instances: self.n_instances,
+            },
+            dram,
+            long_threshold: self.long_threshold,
+            t_life_us: self.pipeline.t_life_us,
+            max_reload_concurrency: self.max_reload_concurrency,
+            hbm_bytes: self.hbm_bytes,
+            dim: self.spec.dim,
+            kv_bytes: Box::new(move |_| spec.kv_bytes()),
+        }
+    }
+}
+
+/// The coordinator shared by the request driver and every worker thread.
+struct Shared {
+    coord: Mutex<RelayCoordinator<Payload>>,
+    cv: Condvar,
 }
 
 enum Work {
+    /// Compute ψ for `user` and report `on_psi_ready`.
     PreInfer { user: u64 },
-    Rank { req: GenRequest, issued: Instant, resp: Sender<RankDone> },
+    /// Signal-initiated DRAM→HBM reload for `user`.
+    Reload { user: u64 },
+    Rank { req: GenRequest, resp: Sender<RankDone> },
     Stop,
 }
 
 struct RankDone {
     outcome: CacheOutcome,
+    admitted: bool,
     rank_us: f64,
     load_us: f64,
     wait_us: f64,
     scores: Vec<f32>,
 }
 
-struct InstanceState {
-    hbm: HbmCache<Payload>,
-    expander: Expander<Payload>,
-    /// Users whose ψ production failed (evicted/lost) since last check.
-    produce_failed: HashMap<u64, u64>,
-    pre_done: u64,
-}
-
 /// One live ranking instance: m_slots worker threads over a shared queue.
 pub struct LiveInstance {
     pub id: usize,
     tx: Sender<Work>,
-    state: Arc<(Mutex<InstanceState>, Condvar)>,
     workers: Vec<std::thread::JoinHandle<()>>,
     busy_us: Arc<AtomicU64>,
 }
@@ -112,27 +162,14 @@ struct Models {
 }
 
 impl LiveInstance {
-    fn spawn(id: usize, cfg: &LiveConfig, models: Arc<Models>) -> LiveInstance {
-        let dram = match cfg.mode {
-            Mode::RelayGr { dram } => dram,
-            _ => DramPolicy::Disabled,
-        };
-        let state = Arc::new((
-            Mutex::new(InstanceState {
-                hbm: HbmCache::new(cfg.hbm_bytes),
-                expander: Expander::new(dram, cfg.max_reload_concurrency),
-                produce_failed: HashMap::new(),
-                pre_done: 0,
-            }),
-            Condvar::new(),
-        ));
+    fn spawn(id: usize, cfg: &LiveConfig, models: Arc<Models>, shared: Arc<Shared>) -> LiveInstance {
         let (tx, rx) = channel::<Work>();
         let rx = Arc::new(Mutex::new(rx));
         let busy_us = Arc::new(AtomicU64::new(0));
         let mut workers = Vec::new();
         for _ in 0..cfg.m_slots {
             let rx = rx.clone();
-            let state = state.clone();
+            let shared = shared.clone();
             let models = models.clone();
             let cfg = cfg.clone();
             let busy = busy_us.clone();
@@ -143,213 +180,154 @@ impl LiveInstance {
                 };
                 match work {
                     Ok(Work::PreInfer { user }) => {
-                        Self::do_pre_infer(user, &cfg, &models, &state, &busy);
+                        Self::do_pre_infer(user, id, &cfg, &models, &shared, &busy);
                     }
-                    Ok(Work::Rank { req, issued, resp }) => {
-                        let done = Self::do_rank(&req, issued, &cfg, &models, &state, &busy);
+                    Ok(Work::Reload { user }) => {
+                        Self::perform_reload(user, id, &models, &shared);
+                    }
+                    Ok(Work::Rank { req, resp }) => {
+                        let done = Self::do_rank(&req, id, &cfg, &models, &shared, &busy);
                         let _ = resp.send(done);
                     }
                     Ok(Work::Stop) | Err(_) => break,
                 }
             }));
         }
-        LiveInstance { id, tx, state, workers, busy_us }
+        LiveInstance { id, tx, workers, busy_us }
     }
 
-    /// The pre-infer signal handler (§3.2): pseudo-check, then compute ψ
-    /// and keep it device-resident.
+    /// The admitted pre-infer side path (§3.2): behaviour fetch +
+    /// embedding + the prefix pass on device, then `on_psi_ready`.
+    /// (The pseudo-pre-infer checks already ran in `on_trigger_check`.)
     fn do_pre_infer(
         user: u64,
+        instance: usize,
         cfg: &LiveConfig,
         models: &Models,
-        state: &Arc<(Mutex<InstanceState>, Condvar)>,
+        shared: &Shared,
         busy: &Arc<AtomicU64>,
     ) {
-        let (lock, cv) = &**state;
-        let kv_bytes = cfg.spec.kv_bytes();
-        // Pseudo-pre-infer: skip when already resident / reloadable.
-        let action = {
-            let mut guard = lock.lock().unwrap();
-            let st = &mut *guard;
-            let a = st.expander.pseudo_pre_infer(user, &mut st.hbm, now_us());
-            if matches!(a, PseudoAction::Miss) {
-                if st.hbm.begin_produce(user, kv_bytes, now_us(), cfg.pipeline.t_life_us).is_err()
-                {
-                    st.produce_failed.insert(user, now_us());
-                    cv.notify_all();
-                    return;
-                }
+        let prefix = synth_embedding(user ^ 1, cfg.spec.prefix_len, cfg.spec.dim, 0.5);
+        let t0 = Instant::now();
+        let result = models.prefix.execute_to_device(&[&prefix]);
+        busy.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        let payload = match result {
+            Ok(kv) => Some(Payload::Device(Arc::new(kv))),
+            Err(e) => {
+                log::warn!("pre-infer failed for user {user}: {e:#}");
+                None
             }
-            a
         };
-        match action {
-            PseudoAction::Miss => {
-                // Behaviour fetch + embedding + the prefix pass on device.
-                let prefix = synth_embedding(user ^ 1, cfg.spec.prefix_len, cfg.spec.dim, 0.5);
-                let t0 = Instant::now();
-                let result = models.prefix.execute_to_device(&[&prefix]);
-                busy.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-                let mut st = lock.lock().unwrap();
-                match result {
-                    Ok(kv) => {
-                        st.hbm.complete_produce(user, Payload::Device(Arc::new(kv)));
-                    }
-                    Err(e) => {
-                        log::warn!("pre-infer failed for user {user}: {e:#}");
-                        st.produce_failed.insert(user, now_us());
-                    }
-                }
-                st.pre_done += 1;
-                cv.notify_all();
-            }
-            PseudoAction::StartReload { .. } => {
-                Self::do_reload(user, cfg, models, state);
-            }
-            _ => {
-                // Already resident / in flight: re-arm the lifecycle for
-                // this request (§3.4 pseudo pre-inference semantics).
-                let mut st = lock.lock().unwrap();
-                st.hbm.extend_lease(user, now_us() + cfg.pipeline.t_life_us);
-            }
-        }
+        let mut coord = shared.coord.lock().unwrap();
+        coord.on_psi_ready(now_us(), instance, user, payload);
+        shared.cv.notify_all();
     }
 
-    /// Perform one DRAM→HBM reload (real H2D) and wake waiters.
-    fn do_reload(
-        user: u64,
-        cfg: &LiveConfig,
-        models: &Models,
-        state: &Arc<(Mutex<InstanceState>, Condvar)>,
-    ) {
-        let (lock, cv) = &**state;
-        let host = {
-            let mut st = lock.lock().unwrap();
-            st.expander.dram_payload(user)
-        };
-        let installed = match host {
-            Some((bytes, Payload::Host(data))) => match models.rank.kv_from_host(&data) {
-                Ok(kv) => {
-                    let mut st = lock.lock().unwrap();
-                    let (_joiners, next) = st.expander.finish_reload(user);
-                    let ok = st
-                        .hbm
-                        .insert_ready(
-                            user,
-                            bytes,
-                            Payload::Device(Arc::new(kv)),
-                            now_us(),
-                            cfg.pipeline.t_life_us,
-                        )
-                        .is_ok();
-                    if !ok {
-                        st.produce_failed.insert(user, now_us());
-                    }
-                    cv.notify_all();
-                    if let Some(nu) = next {
-                        drop(st);
-                        Self::do_reload(nu, cfg, models, state);
-                    }
-                    ok
+    /// Perform one DRAM→HBM reload (real H2D), report it, and drain any
+    /// queued reloads this completion unblocks.
+    fn perform_reload(user: u64, instance: usize, models: &Models, shared: &Shared) {
+        let mut current = Some(user);
+        while let Some(u) = current.take() {
+            let host = {
+                let mut coord = shared.coord.lock().unwrap();
+                coord.dram_payload(instance, u)
+            };
+            let (payload, bytes) = match host {
+                Some((bytes, Payload::Host(data))) => {
+                    let device = match models.rank.kv_from_host(&data) {
+                        Ok(kv) => Some(Payload::Device(Arc::new(kv))),
+                        Err(e) => {
+                            log::warn!("reload H2D failed for {u}: {e:#}");
+                            None
+                        }
+                    };
+                    (device, bytes)
                 }
-                Err(e) => {
-                    log::warn!("reload H2D failed for {user}: {e:#}");
-                    false
+                _ => (None, 0),
+            };
+            let mut coord = shared.coord.lock().unwrap();
+            let res = coord.on_reload_done(now_us(), instance, u, payload, bytes);
+            shared.cv.notify_all();
+            let mut next = res.next;
+            // Grant queued reloads their turn; aborted ones release their
+            // waiters and pass the slot on.
+            while let Some(nu) = next {
+                match coord.begin_queued_reload(now_us(), instance, nu) {
+                    QueuedReload::Start { .. } => {
+                        drop(coord);
+                        current = Some(nu);
+                        break;
+                    }
+                    QueuedReload::Aborted { next: n2, .. } => {
+                        shared.cv.notify_all();
+                        next = n2;
+                    }
                 }
-            },
-            _ => false,
-        };
-        if !installed {
-            let mut st = lock.lock().unwrap();
-            let (_, next) = st.expander.finish_reload(user);
-            st.produce_failed.insert(user, now_us());
-            cv.notify_all();
-            if let Some(nu) = next {
-                drop(st);
-                Self::do_reload(nu, cfg, models, state);
             }
+            if current.is_some() {
+                continue;
+            }
+            break;
         }
     }
 
     fn do_rank(
         req: &GenRequest,
-        issued: Instant,
+        instance: usize,
         cfg: &LiveConfig,
         models: &Models,
-        state: &Arc<(Mutex<InstanceState>, Condvar)>,
+        shared: &Shared,
         busy: &Arc<AtomicU64>,
     ) -> RankDone {
-        let (lock, cv) = &**state;
         let user = req.user;
-        let is_long = cfg.mode.is_relay() && req.prefix_len > cfg.long_threshold;
         let incr = synth_embedding(user ^ 2, cfg.spec.incr_len, cfg.spec.dim, 0.5);
-        let items =
-            synth_embedding(req.id ^ 3, cfg.spec.num_items, cfg.spec.dim, 0.5);
+        let items = synth_embedding(req.id ^ 3, cfg.spec.num_items, cfg.spec.dim, 0.5);
         let mut load_us = 0.0;
-        let mut wait_us = 0.0;
-        let mut outcome = CacheOutcome::FullInference;
-        let mut kv: Option<Payload> = None;
+        let wait_start = Instant::now();
 
-        if is_long {
-            let wait_start = Instant::now();
-            let mut st = lock.lock().unwrap();
-            loop {
-                let stm = &mut *st;
-                match stm.expander.pseudo_pre_infer(user, &mut stm.hbm, now_us()) {
-                    PseudoAction::HbmHit => {
-                        kv = st.hbm.consume(user);
-                        outcome = CacheOutcome::HbmHit;
-                        break;
-                    }
-                    PseudoAction::WaitProducing
-                    | PseudoAction::JoinReload
-                    | PseudoAction::QueuedReload => {
-                        if st.produce_failed.remove(&user).is_some() {
-                            outcome = CacheOutcome::Fallback;
-                            break;
-                        }
-                        let waited = wait_start.elapsed().as_micros() as u64;
-                        if waited > cfg.wait_budget_us {
-                            outcome = CacheOutcome::Fallback;
-                            break;
-                        }
-                        let (g, _t) = cv
-                            .wait_timeout(st, Duration::from_millis(5))
-                            .expect("condvar poisoned");
-                        st = g;
-                    }
-                    PseudoAction::StartReload { .. } => {
-                        // Perform the H2D inline on this worker (it holds a
-                        // reload-concurrency slot).
-                        drop(st);
-                        let t0 = Instant::now();
-                        Self::do_reload(user, cfg, models, state);
-                        load_us = t0.elapsed().as_micros() as f64;
-                        st = lock.lock().unwrap();
-                        if let Some(p) = st.hbm.consume(user) {
-                            kv = Some(p);
-                            outcome = CacheOutcome::DramHit;
-                        } else {
-                            outcome = CacheOutcome::Fallback;
-                        }
-                        break;
-                    }
-                    PseudoAction::Miss => {
-                        outcome = if req.is_refresh {
-                            CacheOutcome::Fallback
-                        } else {
-                            CacheOutcome::FullInference
-                        };
-                        break;
-                    }
-                }
+        let mut coord = shared.coord.lock().unwrap();
+        match coord.on_rank_start(now_us(), req.id) {
+            RankAction::Proceed { .. } => {}
+            RankAction::StartReload { .. } => {
+                // Perform the H2D inline on this worker (it holds a
+                // reload-concurrency slot); `on_reload_done` resolves us.
+                drop(coord);
+                let t0 = Instant::now();
+                Self::perform_reload(user, instance, models, shared);
+                load_us = t0.elapsed().as_micros() as f64;
+                coord = shared.coord.lock().unwrap();
             }
-            wait_us = wait_start.elapsed().as_micros() as f64 - load_us;
+            RankAction::Wait | RankAction::WaitReload => loop {
+                if coord.wait_resolved(req.id) {
+                    break;
+                }
+                if wait_start.elapsed().as_micros() as u64 > cfg.wait_budget_us {
+                    // Wait-budget fallback: classify and stop waiting.
+                    coord.on_wait_timeout(now_us(), req.id);
+                    break;
+                }
+                let (g, _t) = shared
+                    .cv
+                    .wait_timeout(coord, Duration::from_millis(5))
+                    .expect("condvar poisoned");
+                coord = g;
+            },
         }
+        // Consume ψ at execution start.
+        let rc = coord.rank_compute(now_us(), req.id);
+        let mut kv: Option<Payload> = rc.payload;
+        if rc.cached && !matches!(kv, Some(Payload::Device(_))) {
+            // Classified cached but no device buffer materialised: run the
+            // safe fallback and make the metrics reflect it.
+            coord.force_fallback(req.id);
+            kv = None;
+        }
+        drop(coord);
 
         // Execute ranking.
         let t0 = Instant::now();
-        let scores = match (&kv, outcome) {
-            (Some(Payload::Device(buf)), _) => {
+        let scores = match &kv {
+            Some(Payload::Device(buf)) => {
                 models.rank.execute_with_kv(buf, &[&incr, &items]).unwrap_or_default()
             }
             _ => {
@@ -360,21 +338,42 @@ impl LiveInstance {
         let rank_us = t0.elapsed().as_micros() as f64;
         busy.fetch_add(rank_us as u64, Ordering::Relaxed);
 
-        // Spill fresh ψ to DRAM (D2H) and slide the HBM window.
-        if let (Some(Payload::Device(buf)), CacheOutcome::HbmHit) = (&kv, outcome) {
-            if cfg.mode.is_relay() {
-                if let Ok(host) = buf.to_host() {
-                    let mut st = lock.lock().unwrap();
-                    st.expander.spill(user, buf.bytes, Payload::Host(Arc::new(host)));
-                    st.hbm.evict(user);
+        // Close out: release the connection + admitted slot and classify
+        // the spill lifecycle.
+        let kv_bytes = match &kv {
+            Some(Payload::Device(buf)) => buf.bytes,
+            _ => cfg.spec.kv_bytes(),
+        };
+        let mut coord = shared.coord.lock().unwrap();
+        let done = coord.on_rank_done(now_us(), req.id, kv_bytes);
+        drop(coord);
+        if done.spill.is_some() {
+            // Spill fresh ψ to DRAM (D2H, off the critical path) and slide
+            // the HBM window.
+            if let Some(Payload::Device(buf)) = &kv {
+                match buf.to_host() {
+                    Ok(host) => {
+                        let mut coord = shared.coord.lock().unwrap();
+                        coord.complete_spill(
+                            done.instance,
+                            user,
+                            buf.bytes,
+                            Payload::Host(Arc::new(host)),
+                        );
+                    }
+                    Err(e) => log::warn!("spill D2H failed for {user}: {e:#}"),
                 }
             }
-        } else if let (Some(Payload::Device(_)), CacheOutcome::DramHit) = (&kv, outcome) {
-            let mut st = lock.lock().unwrap();
-            st.hbm.evict(user); // still in DRAM; window slides
         }
-        let _ = issued;
-        RankDone { outcome, rank_us, load_us, wait_us, scores }
+        let wait_us = (done.wait_us - load_us).max(0.0);
+        RankDone {
+            outcome: done.outcome,
+            admitted: done.admitted,
+            rank_us,
+            load_us,
+            wait_us,
+            scores,
+        }
     }
 
     fn stop(self) {
@@ -393,13 +392,12 @@ fn now_us() -> u64 {
     SystemTime::now().duration_since(UNIX_EPOCH).unwrap().as_micros() as u64
 }
 
-/// The live cluster: router + per-special-instance triggers + instances.
+/// The live cluster: the shared coordinator + per-instance worker pools.
 pub struct LiveCluster {
     pub cfg: LiveConfig,
     engine: Arc<Engine>,
     instances: Vec<LiveInstance>,
-    router: Mutex<Router>,
-    triggers: Mutex<HashMap<usize, Trigger>>,
+    shared: Arc<Shared>,
     start: Instant,
 }
 
@@ -411,51 +409,22 @@ impl LiveCluster {
             rank: engine.model(FnKind::Rank, &cfg.spec)?,
             full: engine.model(FnKind::Full, &cfg.spec)?,
         });
-        let is_baseline = matches!(cfg.mode, Mode::Baseline);
-        let router = Router::new(RouterConfig {
-            n_instances: cfg.n_instances,
-            servers: cfg.n_instances,
-            r2: if is_baseline { 0.0 } else { (1.0 / cfg.n_instances as f64).max(0.45) },
-            max_special_per_server: 1,
-            gateways: 2,
-            vnodes: 32,
-            normal_policy: crate::relay::router::BalancePolicy::LeastConnections,
-        })?;
-        let tcfg = TriggerConfig {
-            rank_p99_budget_us: cfg.pipeline.rank_budget_us,
-            headroom: 0.8,
-            t_life_us: cfg.pipeline.t_life_us,
-            kv_p99_bytes: cfg.spec.kv_bytes(),
-            hbm_bytes: cfg.hbm_bytes,
-            r1: 1.0,
-            q_m: 1000.0,
-            m_slots: cfg.m_slots,
-            r2: 0.5,
-            n_instances: cfg.n_instances,
-        };
         let threshold = cfg.long_threshold;
-        let mut triggers = HashMap::new();
-        for &i in router.special_instances() {
-            let est: crate::relay::trigger::Estimator = Box::new(move |m: &BehaviorMeta| {
+        let coord = RelayCoordinator::new(cfg.coordinator_config(), |_| {
+            Box::new(move |m: &BehaviorMeta| {
                 // Live risk test: long prefixes are at risk by construction.
                 if m.prefix_len > threshold {
                     1e9
                 } else {
                     0.0
                 }
-            });
-            triggers.insert(i, Trigger::new(tcfg.clone(), est));
-        }
-        let instances =
-            (0..cfg.n_instances).map(|id| LiveInstance::spawn(id, &cfg, models.clone())).collect();
-        Ok(LiveCluster {
-            cfg,
-            engine,
-            instances,
-            router: Mutex::new(router),
-            triggers: Mutex::new(triggers),
-            start: Instant::now(),
-        })
+            })
+        })?;
+        let shared = Arc::new(Shared { coord: Mutex::new(coord), cv: Condvar::new() });
+        let instances = (0..cfg.n_instances)
+            .map(|id| LiveInstance::spawn(id, &cfg, models.clone(), shared.clone()))
+            .collect();
+        Ok(LiveCluster { cfg, engine, instances, shared, start: Instant::now() })
     }
 
     pub fn engine(&self) -> &Engine {
@@ -466,31 +435,25 @@ impl LiveCluster {
     /// sleeps and real execution; returns its lifecycle.
     pub fn drive_request(&self, req: GenRequest, rng: &mut Rng) -> Result<Lifecycle> {
         let t0 = Instant::now();
-        let is_long = self.cfg.mode.is_relay() && req.prefix_len > self.cfg.long_threshold;
-        let mut admitted = false;
-        if is_long {
-            // Trigger side path (metadata only).
-            let inst = {
-                let mut r = self.router.lock().unwrap();
-                let route = r.route_special(req.user);
-                r.on_complete(route.instance);
-                route.instance
+        let wants_trigger = {
+            let mut coord = self.shared.coord.lock().unwrap();
+            coord.on_arrival(now_us(), req.id, req.user, req.prefix_len)
+        };
+        if wants_trigger {
+            // Trigger side path (metadata only); admitted work is handed
+            // to the chosen instance's worker pool.
+            let action = {
+                let mut coord = self.shared.coord.lock().unwrap();
+                coord.on_trigger_check(now_us(), req.id)
             };
-            let meta = BehaviorMeta {
-                user: req.user,
-                prefix_len: req.prefix_len,
-                dim: self.cfg.spec.dim,
-            };
-            let decision = self
-                .triggers
-                .lock()
-                .unwrap()
-                .get_mut(&inst)
-                .map(|t| t.decide(now_us(), &meta))
-                .unwrap_or(Decision::NotAtRisk);
-            if decision == Decision::Admit {
-                admitted = true;
-                let _ = self.instances[inst].tx.send(Work::PreInfer { user: req.user });
+            match action {
+                SignalAction::Produce { instance, user, .. } => {
+                    let _ = self.instances[instance].tx.send(Work::PreInfer { user });
+                }
+                SignalAction::Reload { instance, user, .. } => {
+                    let _ = self.instances[instance].tx.send(Work::Reload { user });
+                }
+                SignalAction::None => {}
             }
         }
         let retrieval = StageSampler::from_mean_p99(
@@ -503,29 +466,26 @@ impl LiveCluster {
         );
         sleep_us(retrieval.sample(rng) * self.cfg.stage_scale);
         let retrieval_done = t0.elapsed().as_micros() as u64;
+        {
+            let mut coord = self.shared.coord.lock().unwrap();
+            coord.on_stage_done(now_us(), req.id, Stage::Retrieval);
+        }
         sleep_us(preproc.sample(rng) * self.cfg.stage_scale);
         let preproc_done = t0.elapsed().as_micros() as u64;
 
+        // Late binding: the coordinator resolves the ranking instance.
         let inst = {
-            let mut r = self.router.lock().unwrap();
-            let route = if is_long { r.route_special(req.user) } else { r.route_normal(req.user) };
-            route.instance
+            let mut coord = self.shared.coord.lock().unwrap();
+            coord
+                .on_stage_done(now_us(), req.id, Stage::Preproc)
+                .expect("preproc resolves the ranking instance")
         };
         let (tx, rx): (Sender<RankDone>, Receiver<RankDone>) = channel();
         self.instances[inst]
             .tx
-            .send(Work::Rank { req, issued: Instant::now(), resp: tx })
+            .send(Work::Rank { req, resp: tx })
             .map_err(|_| anyhow!("instance {inst} stopped"))?;
         let done = rx.recv().map_err(|_| anyhow!("rank worker dropped response"))?;
-        {
-            let mut r = self.router.lock().unwrap();
-            r.on_complete(inst);
-        }
-        if admitted {
-            if let Some(t) = self.triggers.lock().unwrap().values_mut().next() {
-                t.release();
-            }
-        }
         let done_us = t0.elapsed().as_micros() as u64;
         anyhow::ensure!(!done.scores.is_empty(), "empty scores from rank execution");
         Ok(Lifecycle {
@@ -542,7 +502,7 @@ impl LiveCluster {
             rank_us: done.rank_us,
             wait_us: done.wait_us,
             outcome: done.outcome,
-            admitted,
+            admitted: done.admitted,
             instance: inst,
         })
     }
@@ -550,7 +510,9 @@ impl LiveCluster {
     /// Run a whole trace open-loop; returns aggregated metrics.
     pub fn run_trace(&self, wl: &WorkloadConfig) -> Result<RunMetrics> {
         let trace = crate::workload::generate(wl);
-        let metrics = Mutex::new(RunMetrics::new(self.cfg.pipeline.pipeline_slo_us));
+        let mut metrics = RunMetrics::new(self.cfg.pipeline.pipeline_slo_us);
+        metrics.scenario = wl.scenario.label().to_string();
+        let metrics = Mutex::new(metrics);
         let t0 = Instant::now();
         std::thread::scope(|scope| {
             for req in trace {
@@ -586,10 +548,12 @@ impl LiveCluster {
                     .min(1.0)
             })
             .collect();
-        m.special_instances = self.router.lock().unwrap().special_instances().to_vec();
-        for inst in &self.instances {
-            let st = inst.state.0.lock().unwrap();
-            let _ = st.pre_done;
+        {
+            let coord = self.shared.coord.lock().unwrap();
+            m.special_instances = coord.special_instances().to_vec();
+            m.hbm = coord.hbm_stats();
+            m.expander = coord.expander_stats();
+            m.trigger = coord.trigger_stats();
         }
         Ok(m)
     }

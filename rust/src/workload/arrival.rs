@@ -1,0 +1,115 @@
+//! Arrival-time processes for the workload scenarios.
+//!
+//! Open-loop traffic is a Poisson process; non-steady scenarios modulate
+//! the instantaneous rate λ(t) and sample by *thinning* (Lewis &
+//! Shedler): candidates arrive at the peak rate λ_max and are accepted
+//! with probability λ(t)/λ_max, which is exact for any bounded rate
+//! function.  Everything is deterministic given the caller's [`Rng`].
+
+use crate::util::rng::Rng;
+
+/// Homogeneous Poisson arrivals at a fixed rate (queries/s).
+#[derive(Debug, Clone, Copy)]
+pub struct Poisson {
+    t_us: f64,
+    rate_per_us: f64,
+}
+
+impl Poisson {
+    pub fn new(qps: f64) -> Poisson {
+        Poisson { t_us: 0.0, rate_per_us: qps / 1e6 }
+    }
+
+    /// Current process time (µs).
+    pub fn time_us(&self) -> u64 {
+        self.t_us as u64
+    }
+
+    /// Advance to the next arrival and return its time (µs).
+    pub fn next(&mut self, rng: &mut Rng) -> u64 {
+        self.t_us += rng.exponential(self.rate_per_us);
+        self.t_us as u64
+    }
+}
+
+/// Non-homogeneous Poisson arrivals with instantaneous rate `rate_at(t_us)`
+/// (queries/s), bounded by `peak_qps`, sampled by thinning.
+pub struct ModulatedPoisson<F: Fn(f64) -> f64> {
+    t_us: f64,
+    peak_qps: f64,
+    rate_at: F,
+}
+
+impl<F: Fn(f64) -> f64> ModulatedPoisson<F> {
+    /// `rate_at` takes the time in µs and returns the rate in queries/s;
+    /// it must never exceed `peak_qps`.
+    pub fn new(peak_qps: f64, rate_at: F) -> ModulatedPoisson<F> {
+        assert!(peak_qps > 0.0, "peak rate must be positive");
+        ModulatedPoisson { t_us: 0.0, peak_qps, rate_at }
+    }
+
+    /// Next accepted arrival before `duration_us`, or `None` when the
+    /// process has run past the horizon.
+    pub fn next(&mut self, rng: &mut Rng, duration_us: u64) -> Option<u64> {
+        loop {
+            self.t_us += rng.exponential(self.peak_qps / 1e6);
+            if self.t_us as u64 >= duration_us {
+                return None;
+            }
+            let rate = (self.rate_at)(self.t_us).clamp(0.0, self.peak_qps);
+            if rng.f64() < rate / self.peak_qps {
+                return Some(self.t_us as u64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let mut rng = Rng::new(1);
+        let mut p = Poisson::new(500.0);
+        let mut n = 0u64;
+        while p.next(&mut rng) < 10_000_000 {
+            n += 1;
+        }
+        // 500 q/s over 10 s → 5000 ± ~5σ.
+        assert!((4650..=5350).contains(&n), "n = {n}");
+    }
+
+    #[test]
+    fn thinning_recovers_constant_rate() {
+        // A "modulated" process with a constant rate must match Poisson
+        // statistics even when accepted at 1/3 of the candidate rate.
+        let mut rng = Rng::new(2);
+        let mut p = ModulatedPoisson::new(300.0, |_| 100.0);
+        let mut n = 0u64;
+        while p.next(&mut rng, 20_000_000).is_some() {
+            n += 1;
+        }
+        assert!((1750..=2250).contains(&n), "n = {n}");
+    }
+
+    #[test]
+    fn thinning_tracks_modulation() {
+        // Rate 0 in the first half, 200 q/s in the second: all arrivals
+        // must land in the second half.
+        let mut rng = Rng::new(3);
+        let mut p =
+            ModulatedPoisson::new(200.0, |t| if t < 5_000_000.0 { 0.0 } else { 200.0 });
+        let mut first = 0u64;
+        let mut second = 0u64;
+        while let Some(t) = p.next(&mut rng, 10_000_000) {
+            if t < 5_000_000 {
+                first += 1;
+            } else {
+                second += 1;
+            }
+        }
+        assert_eq!(first, 0);
+        assert!((800..=1200).contains(&second), "second = {second}");
+    }
+}

@@ -1,17 +1,27 @@
-//! Synthetic production-mirror workload (§4.1).
+//! Synthetic production-mirror workload (§4.1), organised as a scenario
+//! engine.
 //!
 //! The paper evaluates with real queries whose key statistics it reports:
 //! *"most users have short histories and fewer than 6% have long
 //! sequences exceeding 2K tokens"*, request lifecycles of a few hundred
 //! milliseconds, rapid-refresh bursts from the same user (the DRAM-reuse
-//! opportunity), and hundreds of QPS per instance.  This module generates
-//! open-loop Poisson traffic matching those statistics, deterministically
-//! from a seed.
+//! opportunity), and hundreds of QPS per instance.  The [`scenario`]
+//! module turns those statistics into *named traffic shapes* behind one
+//! [`Scenario`] trait — `steady` (the paper's workload, bit-identical to
+//! the original generator for a fixed seed), `diurnal`, `burst` and
+//! `coldstart` — over the [`arrival`] processes, all deterministic from
+//! a seed and selectable via [`WorkloadConfig::scenario`] (`--scenario`
+//! in the CLIs).
 //!
 //! Per-user sequence length is a *stable function of the user id* (a
 //! user's behaviour history does not change between their requests within
 //! a run), drawn from a truncated log-normal fitted so that
 //! `P(len > long_threshold) ≈ long_frac`.
+
+pub mod arrival;
+pub mod scenario;
+
+pub use scenario::{Burst, Coldstart, Diurnal, Scenario, ScenarioKind, Steady};
 
 use crate::relay::trigger::BehaviorMeta;
 use crate::util::rng::Rng;
@@ -43,6 +53,8 @@ pub struct WorkloadConfig {
     /// controlled-length microbench setup of the paper's sweeps
     /// (Figs. 11a, 13, 14).
     pub fixed_long_len: Option<usize>,
+    /// Traffic shape (`--scenario steady|diurnal|burst|coldstart`).
+    pub scenario: ScenarioKind,
     pub seed: u64,
 }
 
@@ -61,6 +73,7 @@ impl Default for WorkloadConfig {
             refresh_burst_max: 3,
             refresh_gap_us: (400_000, 3_000_000),
             fixed_long_len: None,
+            scenario: ScenarioKind::Steady,
             seed: 42,
         }
     }
@@ -156,47 +169,11 @@ pub fn user_prefix_len(cfg: &WorkloadConfig, user: u64) -> usize {
     }
 }
 
-/// Generate the full arrival trace, sorted by arrival time.
+/// Generate the configured scenario's arrival trace, sorted by arrival
+/// time.  `ScenarioKind::Steady` reproduces the pre-scenario generator
+/// bit-for-bit for a fixed seed.
 pub fn generate(cfg: &WorkloadConfig) -> Vec<GenRequest> {
-    let mut rng = Rng::new(cfg.seed);
-    let mut out = Vec::new();
-    let mut t = 0.0_f64;
-    let rate_per_us = cfg.qps / 1e6;
-    let mut id = 0u64;
-    while (t as u64) < cfg.duration_us {
-        t += rng.exponential(rate_per_us);
-        let arrival = t as u64;
-        if arrival >= cfg.duration_us {
-            break;
-        }
-        let user = rng.zipf(cfg.num_users, cfg.zipf_s) - 1;
-        let prefix_len = user_prefix_len(cfg, user);
-        out.push(GenRequest { id, arrival_us: arrival, user, prefix_len, is_refresh: false });
-        id += 1;
-        // Rapid-refresh bursts: same user again shortly after — the
-        // short-term cross-request reuse the expander targets.
-        if prefix_len > cfg.long_threshold && rng.bernoulli(cfg.refresh_prob) {
-            let burst = 1 + rng.range(0, cfg.refresh_burst_max);
-            let mut rt = arrival;
-            for _ in 0..burst {
-                rt += rng.range(cfg.refresh_gap_us.0 as usize, cfg.refresh_gap_us.1 as usize)
-                    as u64;
-                if rt >= cfg.duration_us {
-                    break;
-                }
-                out.push(GenRequest {
-                    id,
-                    arrival_us: rt,
-                    user,
-                    prefix_len,
-                    is_refresh: true,
-                });
-                id += 1;
-            }
-        }
-    }
-    out.sort_by_key(|r| (r.arrival_us, r.id));
-    out
+    cfg.scenario.as_scenario().generate(cfg)
 }
 
 /// Trace statistics (sanity + tests + EXPERIMENTS.md reporting).

@@ -1,0 +1,375 @@
+//! Named workload scenarios: one [`Scenario`] implementation per traffic
+//! shape, all deterministic in `(WorkloadConfig, seed)`.
+//!
+//! * [`Steady`] — the paper's evaluation workload: homogeneous Poisson
+//!   arrivals, Zipf user popularity, rapid-refresh bursts.  Bit-identical
+//!   to the pre-scenario generator for a fixed seed.
+//! * [`Diurnal`] — sinusoidally modulated QPS (day/night cycle): peaks
+//!   stress admission control, troughs let lifecycles expire.
+//! * [`Burst`] — a flash-crowd spike: during a window the offered rate
+//!   multiplies and traffic concentrates on a hot-user subset, the
+//!   worst case for affinity hot-spotting and reload concurrency.
+//! * [`Coldstart`] — a high fraction of first-seen users (deploy/failover
+//!   traffic): no short-term reuse to exploit, every admit is a fresh
+//!   production.
+//!
+//! To add a fifth scenario: implement [`Scenario`], add a
+//! [`ScenarioKind`] variant with its parameters, extend
+//! [`ScenarioKind::parse`]/[`ScenarioKind::label`]/`as_scenario`, and it
+//! is immediately selectable from `--scenario` in both engines (the
+//! generators run before any engine state exists, so nothing else
+//! changes).
+
+use crate::util::rng::Rng;
+use crate::workload::arrival::{ModulatedPoisson, Poisson};
+use crate::workload::{user_prefix_len, GenRequest, WorkloadConfig};
+
+/// A workload scenario: turns a [`WorkloadConfig`] into an arrival trace.
+pub trait Scenario {
+    fn name(&self) -> &'static str;
+    /// Generate the full arrival trace, sorted by `(arrival_us, id)`.
+    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest>;
+}
+
+/// Scenario selector carried in [`WorkloadConfig`] (CLI: `--scenario`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScenarioKind {
+    Steady,
+    Diurnal { amplitude: f64, period_us: u64 },
+    Burst { start_frac: f64, dur_frac: f64, magnitude: f64, hot_users: u64 },
+    Coldstart { cold_frac: f64 },
+}
+
+impl Default for ScenarioKind {
+    fn default() -> Self {
+        ScenarioKind::Steady
+    }
+}
+
+impl ScenarioKind {
+    /// The four named scenarios with their default parameters.
+    pub const NAMES: [&'static str; 4] = ["steady", "diurnal", "burst", "coldstart"];
+
+    pub fn parse(s: &str) -> Result<ScenarioKind, String> {
+        match s {
+            "steady" => Ok(ScenarioKind::Steady),
+            "diurnal" => Ok(ScenarioKind::Diurnal { amplitude: 0.6, period_us: 10_000_000 }),
+            "burst" => Ok(ScenarioKind::Burst {
+                start_frac: 0.4,
+                dur_frac: 0.1,
+                magnitude: 5.0,
+                hot_users: 64,
+            }),
+            "coldstart" => Ok(ScenarioKind::Coldstart { cold_frac: 0.6 }),
+            other => Err(format!(
+                "unknown scenario '{other}' (available: {})",
+                Self::NAMES.join(", ")
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScenarioKind::Steady => "steady",
+            ScenarioKind::Diurnal { .. } => "diurnal",
+            ScenarioKind::Burst { .. } => "burst",
+            ScenarioKind::Coldstart { .. } => "coldstart",
+        }
+    }
+
+    pub fn as_scenario(&self) -> Box<dyn Scenario> {
+        match *self {
+            ScenarioKind::Steady => Box::new(Steady),
+            ScenarioKind::Diurnal { amplitude, period_us } => {
+                Box::new(Diurnal { amplitude, period_us })
+            }
+            ScenarioKind::Burst { start_frac, dur_frac, magnitude, hot_users } => {
+                Box::new(Burst { start_frac, dur_frac, magnitude, hot_users })
+            }
+            ScenarioKind::Coldstart { cold_frac } => Box::new(Coldstart { cold_frac }),
+        }
+    }
+
+    /// Expected number of base (non-refresh) requests this scenario
+    /// offers — the rate-conservation contract the property tests check.
+    /// Parameters are clamped exactly as the generators clamp them.
+    pub fn expected_base_requests(&self, cfg: &WorkloadConfig) -> f64 {
+        let dur_s = cfg.duration_us as f64 / 1e6;
+        match *self {
+            ScenarioKind::Steady | ScenarioKind::Coldstart { .. } => cfg.qps * dur_s,
+            ScenarioKind::Diurnal { amplitude, period_us } => {
+                // ∫ qps·(1 + a·sin(2πt/T)) dt = qps·dur + qps·a·T/2π·(1 - cos(2π·dur/T)).
+                let a = amplitude.clamp(0.0, 1.0);
+                let w = 2.0 * std::f64::consts::PI / period_us.max(1) as f64;
+                let residual = cfg.qps * a / w * (1.0 - (w * cfg.duration_us as f64).cos());
+                cfg.qps * dur_s + residual / 1e6
+            }
+            ScenarioKind::Burst { start_frac, dur_frac, magnitude, .. } => {
+                // The window is truncated at the end of the trace.
+                let start = start_frac.clamp(0.0, 1.0);
+                let window = dur_frac.clamp(0.0, 1.0).min(1.0 - start);
+                cfg.qps * dur_s * (1.0 + (magnitude.max(1.0) - 1.0) * window)
+            }
+        }
+    }
+}
+
+/// Emit one base request plus its rapid-refresh burst (exactly the
+/// legacy generator's per-arrival body, so `steady` stays bit-identical).
+fn push_with_refreshes(
+    cfg: &WorkloadConfig,
+    rng: &mut Rng,
+    id: &mut u64,
+    arrival: u64,
+    user: u64,
+    out: &mut Vec<GenRequest>,
+) {
+    let prefix_len = user_prefix_len(cfg, user);
+    out.push(GenRequest { id: *id, arrival_us: arrival, user, prefix_len, is_refresh: false });
+    *id += 1;
+    // Rapid-refresh bursts: same user again shortly after — the
+    // short-term cross-request reuse the expander targets.
+    if prefix_len > cfg.long_threshold && rng.bernoulli(cfg.refresh_prob) {
+        let burst = 1 + rng.range(0, cfg.refresh_burst_max);
+        let mut rt = arrival;
+        for _ in 0..burst {
+            rt += rng.range(cfg.refresh_gap_us.0 as usize, cfg.refresh_gap_us.1 as usize) as u64;
+            if rt >= cfg.duration_us {
+                break;
+            }
+            out.push(GenRequest { id: *id, arrival_us: rt, user, prefix_len, is_refresh: true });
+            *id += 1;
+        }
+    }
+}
+
+fn finish(mut out: Vec<GenRequest>) -> Vec<GenRequest> {
+    out.sort_by_key(|r| (r.arrival_us, r.id));
+    out
+}
+
+/// Today's behaviour: homogeneous Poisson + Zipf popularity.
+pub struct Steady;
+
+impl Scenario for Steady {
+    fn name(&self) -> &'static str {
+        "steady"
+    }
+
+    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest> {
+        let mut rng = Rng::new(cfg.seed);
+        let mut out = Vec::new();
+        let mut arrivals = Poisson::new(cfg.qps);
+        let mut id = 0u64;
+        while arrivals.time_us() < cfg.duration_us {
+            let arrival = arrivals.next(&mut rng);
+            if arrival >= cfg.duration_us {
+                break;
+            }
+            let user = rng.zipf(cfg.num_users, cfg.zipf_s) - 1;
+            push_with_refreshes(cfg, &mut rng, &mut id, arrival, user, &mut out);
+        }
+        finish(out)
+    }
+}
+
+/// Sinusoidal QPS: λ(t) = qps·(1 + a·sin(2πt/T)).
+pub struct Diurnal {
+    pub amplitude: f64,
+    pub period_us: u64,
+}
+
+impl Scenario for Diurnal {
+    fn name(&self) -> &'static str {
+        "diurnal"
+    }
+
+    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest> {
+        let amp = self.amplitude.clamp(0.0, 1.0);
+        let period = self.period_us.max(1) as f64;
+        let qps = cfg.qps;
+        let mut rng = Rng::new(cfg.seed);
+        let mut out = Vec::new();
+        let mut arrivals = ModulatedPoisson::new(qps * (1.0 + amp), move |t_us| {
+            qps * (1.0 + amp * (2.0 * std::f64::consts::PI * t_us / period).sin())
+        });
+        let mut id = 0u64;
+        while let Some(arrival) = arrivals.next(&mut rng, cfg.duration_us) {
+            let user = rng.zipf(cfg.num_users, cfg.zipf_s) - 1;
+            push_with_refreshes(cfg, &mut rng, &mut id, arrival, user, &mut out);
+        }
+        finish(out)
+    }
+}
+
+/// Flash crowd: inside `[start, start+dur)` the rate multiplies by
+/// `magnitude` and users concentrate on the `hot_users` most popular ids.
+pub struct Burst {
+    pub start_frac: f64,
+    pub dur_frac: f64,
+    pub magnitude: f64,
+    pub hot_users: u64,
+}
+
+impl Scenario for Burst {
+    fn name(&self) -> &'static str {
+        "burst"
+    }
+
+    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest> {
+        let start = (cfg.duration_us as f64 * self.start_frac.clamp(0.0, 1.0)) as u64;
+        let end = start + (cfg.duration_us as f64 * self.dur_frac.clamp(0.0, 1.0)) as u64;
+        let magnitude = self.magnitude.max(1.0);
+        let qps = cfg.qps;
+        let mut rng = Rng::new(cfg.seed);
+        let mut out = Vec::new();
+        let mut arrivals = ModulatedPoisson::new(qps * magnitude, move |t_us| {
+            let t = t_us as u64;
+            if t >= start && t < end {
+                qps * magnitude
+            } else {
+                qps
+            }
+        });
+        let hot = self.hot_users.clamp(1, cfg.num_users);
+        let mut id = 0u64;
+        while let Some(arrival) = arrivals.next(&mut rng, cfg.duration_us) {
+            let user = if arrival >= start && arrival < end {
+                rng.zipf(hot, cfg.zipf_s) - 1
+            } else {
+                rng.zipf(cfg.num_users, cfg.zipf_s) - 1
+            };
+            push_with_refreshes(cfg, &mut rng, &mut id, arrival, user, &mut out);
+        }
+        finish(out)
+    }
+}
+
+/// Deploy/failover traffic: with probability `cold_frac` a request comes
+/// from a never-before-seen user (ids beyond the warm population), so
+/// caches cannot help until their first lifecycle completes.
+pub struct Coldstart {
+    pub cold_frac: f64,
+}
+
+impl Scenario for Coldstart {
+    fn name(&self) -> &'static str {
+        "coldstart"
+    }
+
+    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest> {
+        let cold_frac = self.cold_frac.clamp(0.0, 1.0);
+        let mut rng = Rng::new(cfg.seed);
+        let mut out = Vec::new();
+        let mut arrivals = Poisson::new(cfg.qps);
+        let mut id = 0u64;
+        let mut cold_next = cfg.num_users; // fresh ids, disjoint from warm
+        while arrivals.time_us() < cfg.duration_us {
+            let arrival = arrivals.next(&mut rng);
+            if arrival >= cfg.duration_us {
+                break;
+            }
+            let user = if rng.bernoulli(cold_frac) {
+                let u = cold_next;
+                cold_next += 1;
+                u
+            } else {
+                rng.zipf(cfg.num_users, cfg.zipf_s) - 1
+            };
+            push_with_refreshes(cfg, &mut rng, &mut id, arrival, user, &mut out);
+        }
+        finish(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::stats;
+
+    fn cfg(kind: ScenarioKind) -> WorkloadConfig {
+        WorkloadConfig {
+            qps: 250.0,
+            duration_us: 20_000_000,
+            num_users: 20_000,
+            scenario: kind,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_labels() {
+        for name in ScenarioKind::NAMES {
+            let kind = ScenarioKind::parse(name).unwrap();
+            assert_eq!(kind.label(), name);
+            assert_eq!(kind.as_scenario().name(), name);
+        }
+        assert!(ScenarioKind::parse("lunar").is_err());
+    }
+
+    #[test]
+    fn burst_concentrates_on_hot_users() {
+        let kind = ScenarioKind::parse("burst").unwrap();
+        let c = cfg(kind);
+        let trace = kind.as_scenario().generate(&c);
+        let ScenarioKind::Burst { start_frac, dur_frac, hot_users, .. } = kind else {
+            unreachable!()
+        };
+        let start = (c.duration_us as f64 * start_frac) as u64;
+        let end = start + (c.duration_us as f64 * dur_frac) as u64;
+        let in_window: Vec<_> = trace
+            .iter()
+            .filter(|r| !r.is_refresh && r.arrival_us >= start && r.arrival_us < end)
+            .collect();
+        assert!(!in_window.is_empty());
+        assert!(in_window.iter().all(|r| r.user < hot_users), "window hits hot subset only");
+        // The window rate clearly exceeds the background rate.
+        let out_count = trace
+            .iter()
+            .filter(|r| !r.is_refresh && (r.arrival_us < start || r.arrival_us >= end))
+            .count();
+        let window_frac = (end - start) as f64 / c.duration_us as f64;
+        let in_rate = in_window.len() as f64 / window_frac;
+        let out_rate = out_count as f64 / (1.0 - window_frac);
+        assert!(in_rate > 2.5 * out_rate, "in {in_rate:.0} vs out {out_rate:.0}");
+    }
+
+    #[test]
+    fn coldstart_floods_first_seen_users() {
+        let kind = ScenarioKind::parse("coldstart").unwrap();
+        let c = cfg(kind);
+        let trace = kind.as_scenario().generate(&c);
+        let cold =
+            trace.iter().filter(|r| !r.is_refresh && r.user >= c.num_users).count();
+        let base = trace.iter().filter(|r| !r.is_refresh).count();
+        let frac = cold as f64 / base as f64;
+        assert!((frac - 0.6).abs() < 0.05, "cold fraction {frac:.2}");
+        // Cold ids are unique — genuinely first-seen.
+        let mut cold_ids: Vec<u64> = trace
+            .iter()
+            .filter(|r| !r.is_refresh && r.user >= c.num_users)
+            .map(|r| r.user)
+            .collect();
+        let n = cold_ids.len();
+        cold_ids.sort_unstable();
+        cold_ids.dedup();
+        assert_eq!(cold_ids.len(), n);
+    }
+
+    #[test]
+    fn diurnal_modulates_rate_over_phases() {
+        let kind = ScenarioKind::Diurnal { amplitude: 0.8, period_us: 20_000_000 };
+        let c = cfg(kind);
+        let trace = kind.as_scenario().generate(&c);
+        // One full period over the trace: first half (sin ≥ 0) must carry
+        // clearly more traffic than the second half.
+        let half = c.duration_us / 2;
+        let first =
+            trace.iter().filter(|r| !r.is_refresh && r.arrival_us < half).count() as f64;
+        let second =
+            trace.iter().filter(|r| !r.is_refresh && r.arrival_us >= half).count() as f64;
+        assert!(first > 1.5 * second, "first {first} vs second {second}");
+        let s = stats(&c, &trace);
+        assert!(s.requests > 0 && s.mean_prefix > 0.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Cross-engine equivalence: the discrete-event simulator, the live
+//! threaded engine and a minimal serialized reference driver all drive
+//! the *same* [`RelayCoordinator`] event API — so for a seeded trace the
+//! per-request [`CacheOutcome`] sequences must be identical across
+//! engines.  A divergence means an engine made (or skipped) a decision
+//! the coordinator did not make — exactly the policy drift this
+//! refactor exists to prevent.
+
+use relaygr::cluster::{run_sim, SimConfig};
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::coordinator::{RankAction, RelayCoordinator, SignalAction, Stage};
+use relaygr::relay::expander::DramPolicy;
+use relaygr::relay::pipeline::CacheOutcome;
+use relaygr::workload::{generate, GenRequest, WorkloadConfig};
+
+/// Serialized reference driver: each request runs start-to-finish with an
+/// instantly-completing host (production, reloads and spills take zero
+/// time), using the request's arrival time as the clock.  All decisions
+/// still flow through the shared coordinator.
+fn drive_serial(
+    mut coord: RelayCoordinator<()>,
+    trace: &[GenRequest],
+    kv_bytes: impl Fn(usize) -> usize,
+) -> Vec<(u64, CacheOutcome)> {
+    let mut out = Vec::new();
+    for req in trace {
+        let now = req.arrival_us;
+        if coord.on_arrival(now, req.id, req.user, req.prefix_len) {
+            match coord.on_trigger_check(now, req.id) {
+                SignalAction::Produce { instance, user, .. } => {
+                    coord.on_psi_ready(now, instance, user, Some(()));
+                }
+                SignalAction::Reload { instance, user, bytes } => {
+                    let res = coord.on_reload_done(now, instance, user, Some(()), bytes);
+                    assert!(res.installed, "instant reload must install");
+                }
+                SignalAction::None => {}
+            }
+        }
+        coord.on_stage_done(now, req.id, Stage::Retrieval);
+        let inst = coord
+            .on_stage_done(now, req.id, Stage::Preproc)
+            .expect("preproc resolves the ranking instance");
+        match coord.on_rank_start(now, req.id) {
+            RankAction::Proceed { .. } => {}
+            RankAction::StartReload { bytes } => {
+                coord.on_reload_done(now, inst, req.user, Some(()), bytes);
+            }
+            RankAction::Wait | RankAction::WaitReload => {
+                panic!("serialized driver has no in-flight work to wait on (req {})", req.id)
+            }
+        }
+        let _ = coord.rank_compute(now, req.id);
+        let done = coord.on_rank_done(now, req.id, kv_bytes(req.prefix_len));
+        if let Some(bytes) = done.spill {
+            coord.complete_spill(done.instance, done.user, bytes, ());
+        }
+        out.push((req.id, done.outcome));
+    }
+    out.sort_by_key(|&(id, _)| id);
+    out
+}
+
+fn workload(dram: bool) -> WorkloadConfig {
+    WorkloadConfig {
+        qps: 40.0,
+        duration_us: 6_000_000,
+        num_users: 5_000,
+        fixed_long_len: Some(4096),
+        max_prefix: 4096,
+        refresh_prob: if dram { 0.6 } else { 0.0 },
+        seed: 1234,
+        ..Default::default()
+    }
+}
+
+fn sim_outcomes(cfg: &SimConfig, wl: &WorkloadConfig) -> Vec<(u64, CacheOutcome)> {
+    let mut cfg = cfg.clone();
+    cfg.log_outcomes = true;
+    let m = run_sim(cfg, wl).expect("simulation runs");
+    let mut log = m.outcome_log;
+    log.sort_by_key(|&(id, _)| id);
+    log
+}
+
+/// Strict equivalence (no DRAM tier, no refresh bursts): the simulator
+/// and the serialized reference must classify every request identically.
+#[test]
+fn sim_and_serial_driver_agree_exactly() {
+    let wl = workload(false);
+    let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+    // The two drivers evaluate lease expiry at slightly different clock
+    // points (arrival vs pipeline time); a T_life longer than the trace
+    // removes that boundary so any remaining divergence is a genuine
+    // policy difference, not a timing artifact.
+    cfg.pipeline.t_life_us = 2 * wl.duration_us;
+    let sim_log = sim_outcomes(&cfg, &wl);
+    let coord: RelayCoordinator<()> =
+        RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator()).unwrap();
+    let spec = cfg.spec;
+    let serial = drive_serial(coord, &generate(&wl), |p| spec.kv_bytes_for(p));
+    assert_eq!(sim_log.len(), serial.len(), "both engines serve the whole trace");
+    for (a, b) in sim_log.iter().zip(&serial) {
+        assert_eq!(a, b, "request {} classified differently across engines", a.0);
+    }
+    // Sanity: the trace actually exercised the relay path.
+    assert!(sim_log.iter().any(|&(_, o)| o == CacheOutcome::HbmHit), "no relay traffic");
+    assert!(sim_log.iter().any(|&(_, o)| o == CacheOutcome::FullInference), "no normal traffic");
+}
+
+/// With the DRAM tier and refresh bursts, cache-path timing may differ
+/// across engines for overlapping same-user requests (started vs joined
+/// a reload; HBM-resident vs respilled-to-DRAM) — all of those are
+/// cache-served.  The serve *class* (cache-served vs full inference vs
+/// fallback) must still match per request.
+#[test]
+fn sim_and_serial_driver_agree_on_service_class() {
+    fn class(o: CacheOutcome) -> &'static str {
+        match o {
+            CacheOutcome::FullInference => "full",
+            CacheOutcome::HbmHit | CacheOutcome::DramHit | CacheOutcome::JoinedReload => {
+                "cached"
+            }
+            CacheOutcome::Fallback => "fallback",
+        }
+    }
+    let wl = workload(true);
+    let cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) });
+    let sim_log = sim_outcomes(&cfg, &wl);
+    let coord: RelayCoordinator<()> =
+        RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator()).unwrap();
+    let spec = cfg.spec;
+    let serial = drive_serial(coord, &generate(&wl), |p| spec.kv_bytes_for(p));
+    assert_eq!(sim_log.len(), serial.len());
+    for (&(id, a), &(_, b)) in sim_log.iter().zip(&serial) {
+        assert_eq!(
+            class(a),
+            class(b),
+            "request {id}: sim {a:?} vs serial {b:?} — different service class"
+        );
+    }
+    assert!(sim_log.iter().any(|&(_, o)| matches!(o, CacheOutcome::DramHit | CacheOutcome::JoinedReload)),
+        "refresh traffic must exercise the DRAM tier");
+}
+
+/// The real thing, when artifacts exist: a 1-instance, 1-slot live engine
+/// (stage sleeps scaled to ~0, generous wait budget) serves a seeded
+/// all-long trace; its per-request outcomes must equal the serialized
+/// reference under the *live* coordinator configuration.
+#[test]
+fn live_engine_matches_serial_reference() {
+    use relaygr::runtime::Manifest;
+    use relaygr::serve::{LiveCluster, LiveConfig};
+    use relaygr::util::rng::Rng;
+
+    let dir = std::env::var("RELAYGR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest
+        .variants()
+        .into_iter()
+        .min_by_key(|s| s.prefix_len * s.dim * s.layers)
+        .unwrap();
+    let mut cfg = LiveConfig::new(&dir, spec, Mode::RelayGr { dram: DramPolicy::Disabled });
+    cfg.n_instances = 1;
+    cfg.m_slots = 1; // FIFO worker: production always precedes ranking
+    cfg.hbm_bytes = 4 << 30; // ample footprint: admission never binds
+    cfg.stage_scale = 0.02;
+    cfg.wait_budget_us = 5_000_000;
+    let wl = WorkloadConfig {
+        qps: 10.0,
+        duration_us: 2_500_000,
+        num_users: 12,
+        long_threshold: cfg.long_threshold,
+        min_prefix: spec.prefix_len, // every request long → special path
+        max_prefix: spec.prefix_len,
+        fixed_long_len: Some(spec.prefix_len),
+        refresh_prob: 0.0,
+        seed: 77,
+        ..Default::default()
+    };
+    let trace = generate(&wl);
+    assert!(!trace.is_empty());
+
+    let cluster = LiveCluster::start(cfg.clone()).unwrap();
+    let mut rng = Rng::new(9);
+    let mut live: Vec<(u64, CacheOutcome)> = Vec::new();
+    for req in &trace {
+        let lc = cluster.drive_request(*req, &mut rng).unwrap();
+        live.push((req.id, lc.outcome));
+    }
+    cluster.shutdown();
+    live.sort_by_key(|&(id, _)| id);
+
+    let threshold = cfg.long_threshold;
+    let coord: RelayCoordinator<()> = RelayCoordinator::new(cfg.coordinator_config(), |_| {
+        Box::new(move |m: &relaygr::relay::trigger::BehaviorMeta| {
+            if m.prefix_len > threshold {
+                1e9
+            } else {
+                0.0
+            }
+        })
+    })
+    .unwrap();
+    let serial = drive_serial(coord, &trace, |_| spec.kv_bytes());
+    assert_eq!(live, serial, "live engine diverged from the shared coordinator's decisions");
+    assert!(live.iter().all(|&(_, o)| o == CacheOutcome::HbmHit),
+        "all-long serialized trace must relay every request: {live:?}");
+}

@@ -10,7 +10,7 @@ use relaygr::relay::router::{Router, RouterConfig};
 use relaygr::relay::trigger::{BehaviorMeta, Decision, Trigger, TriggerConfig};
 use relaygr::util::prop;
 use relaygr::util::rng::Rng;
-use relaygr::workload::WorkloadConfig;
+use relaygr::workload::{generate, user_prefix_len, GenRequest, ScenarioKind, WorkloadConfig};
 
 const MB: usize = 1 << 20;
 
@@ -209,6 +209,150 @@ fn overload_sheds_but_serves_everything() {
     assert!(m.trigger.rate_limited + m.trigger.footprint_limited > 0);
     assert_eq!(m.hbm.lost, 0);
     assert_eq!(m.hbm.rejected, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Scenario-generator properties
+// ---------------------------------------------------------------------------
+
+/// The pre-scenario workload generator, copied verbatim: the `steady`
+/// scenario must reproduce it bit-for-bit (same RNG stream, same ids).
+fn legacy_generate(cfg: &WorkloadConfig) -> Vec<GenRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Vec::new();
+    let mut t = 0.0_f64;
+    let rate_per_us = cfg.qps / 1e6;
+    let mut id = 0u64;
+    while (t as u64) < cfg.duration_us {
+        t += rng.exponential(rate_per_us);
+        let arrival = t as u64;
+        if arrival >= cfg.duration_us {
+            break;
+        }
+        let user = rng.zipf(cfg.num_users, cfg.zipf_s) - 1;
+        let prefix_len = user_prefix_len(cfg, user);
+        out.push(GenRequest { id, arrival_us: arrival, user, prefix_len, is_refresh: false });
+        id += 1;
+        if prefix_len > cfg.long_threshold && rng.bernoulli(cfg.refresh_prob) {
+            let burst = 1 + rng.range(0, cfg.refresh_burst_max);
+            let mut rt = arrival;
+            for _ in 0..burst {
+                rt += rng.range(cfg.refresh_gap_us.0 as usize, cfg.refresh_gap_us.1 as usize)
+                    as u64;
+                if rt >= cfg.duration_us {
+                    break;
+                }
+                out.push(GenRequest { id, arrival_us: rt, user, prefix_len, is_refresh: true });
+                id += 1;
+            }
+        }
+    }
+    out.sort_by_key(|r| (r.arrival_us, r.id));
+    out
+}
+
+#[test]
+fn steady_matches_legacy_generator_bit_for_bit() {
+    for seed in [1u64, 42, 99, 12345] {
+        let cfg = WorkloadConfig {
+            qps: 400.0,
+            duration_us: 10_000_000,
+            num_users: 30_000,
+            refresh_prob: 0.4,
+            scenario: ScenarioKind::Steady,
+            seed,
+            ..Default::default()
+        };
+        assert_eq!(generate(&cfg), legacy_generate(&cfg), "seed {seed} trace diverged");
+    }
+}
+
+/// Rate conservation: every scenario's base (non-refresh) request count
+/// matches its declared expected rate within Poisson noise.
+#[test]
+fn prop_scenario_rate_conservation() {
+    prop::check("scenario-rate", 10, |rng: &mut Rng| {
+        let qps = rng.uniform(100.0, 400.0);
+        let seed = rng.next_u64();
+        for name in ScenarioKind::NAMES {
+            let kind = ScenarioKind::parse(name).unwrap();
+            let cfg = WorkloadConfig {
+                qps,
+                duration_us: 20_000_000,
+                num_users: 20_000,
+                refresh_prob: 0.0,
+                scenario: kind,
+                seed,
+                ..Default::default()
+            };
+            let base = generate(&cfg).iter().filter(|r| !r.is_refresh).count() as f64;
+            let expect = kind.expected_base_requests(&cfg);
+            let tolerance = 6.0 * expect.sqrt() + 0.01 * expect;
+            if (base - expect).abs() > tolerance {
+                return Err(format!(
+                    "{name}: {base} requests vs expected {expect:.0} (qps {qps:.0})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every scenario is a pure function of its seed, and different seeds
+/// give different traces.
+#[test]
+fn prop_scenario_determinism_per_seed() {
+    prop::check("scenario-determinism", 8, |rng: &mut Rng| {
+        let seed = rng.next_u64();
+        for name in ScenarioKind::NAMES {
+            let kind = ScenarioKind::parse(name).unwrap();
+            let cfg = WorkloadConfig {
+                qps: 200.0,
+                duration_us: 8_000_000,
+                num_users: 10_000,
+                scenario: kind,
+                seed,
+                ..Default::default()
+            };
+            if generate(&cfg) != generate(&cfg) {
+                return Err(format!("{name}: same seed produced different traces"));
+            }
+            let other = WorkloadConfig { seed: seed ^ 0xdead_beef, ..cfg.clone() };
+            if generate(&cfg) == generate(&other) {
+                return Err(format!("{name}: different seeds produced identical traces"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Scenario traces are valid inputs to the simulator: every request is
+/// served (never dropped) and outcome accounting stays exact, across
+/// all four scenarios.
+#[test]
+fn scenarios_run_end_to_end_in_simulator() {
+    for name in ScenarioKind::NAMES {
+        let kind = ScenarioKind::parse(name).unwrap();
+        let wl = WorkloadConfig {
+            qps: 80.0,
+            duration_us: 4_000_000,
+            num_users: 5_000,
+            fixed_long_len: Some(3072),
+            max_prefix: 3072,
+            scenario: kind,
+            seed: 5,
+            ..Default::default()
+        };
+        let n = generate(&wl).len() as u64;
+        let m = run_sim(
+            SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(64 << 30) }),
+            &wl,
+        )
+        .unwrap();
+        assert_eq!(m.completed, n, "{name}: dropped requests");
+        assert_eq!(m.outcome_counts.iter().sum::<u64>(), m.completed, "{name}: outcome leak");
+        assert_eq!(m.scenario, name, "{name}: scenario label missing from metrics");
+    }
 }
 
 /// DRAM capacity ablation: smaller tiers must evict more and never hit
