@@ -8,7 +8,7 @@
 
 use relaygr::cluster::SimConfig;
 use relaygr::relay::baseline::Mode;
-use relaygr::relay::expander::DramPolicy;
+use relaygr::relay::tier::DramPolicy;
 use relaygr::relay::trigger::TriggerConfig;
 use relaygr::workload::WorkloadConfig;
 

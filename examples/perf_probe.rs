@@ -4,7 +4,7 @@ fn main() {
     // (a) simulator wall-clock per simulated second at high load
     for qps in [300.0, 2000.0] {
         let cfg = relaygr::cluster::SimConfig::standard(relaygr::relay::baseline::Mode::RelayGr {
-            dram: relaygr::relay::expander::DramPolicy::Capacity(500 << 30),
+            dram: relaygr::relay::tier::DramPolicy::Capacity(500 << 30),
         });
         let wl = relaygr::workload::WorkloadConfig {
             qps, duration_us: 10_000_000, num_users: 100_000, ..Default::default()

@@ -1,6 +1,6 @@
-//! Rapid-refresh demo: the memory-aware expander under out-of-order
+//! Rapid-refresh demo: the tiered cache hierarchy under out-of-order
 //! arrivals and same-user bursts — per-user single-flight, pseudo
-//! pre-inference, and at-most-once DRAM→HBM reload per burst (§3.4),
+//! pre-inference, and at-most-once DRAM→HBM promotion per burst (§3.4),
 //! demonstrated against real device buffers.
 //!
 //! ```bash
@@ -11,8 +11,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use relaygr::relay::expander::{DramPolicy, Expander, PseudoAction};
-use relaygr::relay::hbm::HbmCache;
+use relaygr::relay::hierarchy::{CacheHierarchy, PseudoAction};
+use relaygr::relay::tier::{EvictPolicy, TierConfig};
 use relaygr::runtime::{synth_embedding, Engine, FnKind};
 use relaygr::serve::Payload;
 
@@ -24,8 +24,11 @@ fn main() -> Result<()> {
     let prefix_m = engine.model(FnKind::Prefix, &spec)?;
     let rank_m = engine.model(FnKind::Rank, &spec)?;
 
-    let mut hbm: HbmCache<Payload> = HbmCache::new(64 << 20);
-    let mut ex: Expander<Payload> = Expander::new(DramPolicy::Capacity(1 << 30), 2);
+    let mut cache: CacheHierarchy<Payload> = CacheHierarchy::new(
+        64 << 20,
+        &[TierConfig::new(1 << 30, EvictPolicy::Lru)],
+        2,
+    );
     let user = 99u64;
     let kv_bytes = spec.kv_bytes();
     let t_life = 300_000;
@@ -35,44 +38,44 @@ fn main() -> Result<()> {
     let prefix = synth_embedding(user ^ 1, spec.prefix_len, spec.dim, 0.5);
     let incr = synth_embedding(user ^ 2, spec.incr_len, spec.dim, 0.5);
     let items = synth_embedding(user ^ 3, spec.num_items, spec.dim, 0.5);
-    hbm.begin_produce(user, kv_bytes, 0, t_life).unwrap();
+    cache.hbm_mut().begin_produce(user, kv_bytes, 0, t_life).unwrap();
     let kv = Arc::new(prefix_m.execute_to_device(&[&prefix])?);
-    hbm.complete_produce(user, Payload::Device(kv.clone()));
-    assert_eq!(ex.pseudo_pre_infer(user, &mut hbm, 0), PseudoAction::HbmHit);
+    cache.hbm_mut().complete_produce(user, Payload::Device(kv.clone()));
+    assert_eq!(cache.pseudo_pre_infer(user, 0), PseudoAction::HbmHit);
     let scores1 = rank_m.execute_with_kv(&kv, &[&incr, &items])?;
-    // Consume → spill host copy to DRAM → window slides past the entry.
-    hbm.consume(user);
+    // Consume → demote a host copy into the DRAM tier → window slides.
+    cache.hbm_mut().consume(user);
     let host = Arc::new(kv.to_host()?);
-    ex.spill(user, kv_bytes, Payload::Host(host));
-    hbm.evict(user);
-    println!("  ψ spilled to DRAM ({:.2} MB), HBM window slid", kv_bytes as f64 / 1e6);
+    cache.spill(user, kv_bytes, Payload::Host(host));
+    cache.hbm_mut().evict(user);
+    println!("  ψ demoted to DRAM ({:.2} MB), HBM window slid", kv_bytes as f64 / 1e6);
 
     // --- rapid refresh burst: 3 out-of-order ranking requests --------------
     println!("\nrapid refresh burst: 3 ranking requests arrive before any pre-infer");
-    let a1 = ex.pseudo_pre_infer(user, &mut hbm, 0);
-    let a2 = ex.pseudo_pre_infer(user, &mut hbm, 0);
-    let a3 = ex.pseudo_pre_infer(user, &mut hbm, 0);
+    let a1 = cache.pseudo_pre_infer(user, 0);
+    let a2 = cache.pseudo_pre_infer(user, 0);
+    let a3 = cache.pseudo_pre_infer(user, 0);
     println!("  pseudo-pre-infer: {a1:?}, {a2:?}, {a3:?}");
-    assert!(matches!(a1, PseudoAction::StartReload { .. }), "first starts the reload");
+    assert!(matches!(a1, PseudoAction::StartReload { .. }), "first starts the promotion");
     assert_eq!(a2, PseudoAction::JoinReload, "second joins");
     assert_eq!(a3, PseudoAction::JoinReload, "third joins");
 
-    // The single reload performs the only H2D of the burst.
+    // The single promotion performs the only H2D of the burst.
     let t0 = std::time::Instant::now();
-    let Some((bytes, Payload::Host(data))) = ex.dram_payload(user) else {
+    let Some((bytes, Payload::Host(data))) = cache.payload_below(user) else {
         anyhow::bail!("payload vanished")
     };
     let kv2 = Arc::new(rank_m.kv_from_host(&data)?);
     let h2d = t0.elapsed();
-    let done = ex.complete_reload(user, Payload::Device(kv2.clone()), bytes, 10, t_life, &mut hbm);
+    let done = cache.complete_reload(user, Payload::Device(kv2.clone()), bytes, 10, t_life);
     println!(
-        "  one H2D reload ({h2d:.2?}) served {} joined waiters; installed={}",
+        "  one H2D promotion ({h2d:.2?}) served {} joined waiters; installed={}",
         done.joiners, done.installed
     );
     assert_eq!(done.joiners, 2);
-    assert_eq!(ex.stats().reloads_started, 1, "at most one reload per burst");
+    assert_eq!(cache.stats().reloads_started, 1, "at most one promotion per burst");
 
-    // All three rank on the reloaded ψ — scores must match request #1
+    // All three rank on the promoted ψ — scores must match request #1
     // bit-for-bit (same prefix ⇒ same ψ ⇒ same scores).
     for i in 0..3 {
         let scores = rank_m.execute_with_kv(&kv2, &[&incr, &items])?;
@@ -82,12 +85,12 @@ fn main() -> Result<()> {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         println!("  refresh rank #{i}: ε vs request #1 = {eps:.3e}");
-        assert!(eps <= 1e-5, "spill/reload must preserve ψ exactly");
+        assert!(eps <= 1e-5, "spill/promotion must preserve ψ exactly");
     }
 
-    let s = ex.stats();
+    let s = cache.stats();
     println!(
-        "\nexpander stats: dram_hits={} joins={} reloads={} spills={}",
+        "\nhierarchy stats: dram_hits={} joins={} promotions={} demotions={}",
         s.dram_hits, s.reloads_joined, s.reloads_started, s.spills
     );
     println!("rapid_refresh OK");

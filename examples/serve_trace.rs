@@ -14,7 +14,7 @@ use anyhow::{anyhow, Result};
 use relaygr::config;
 use relaygr::metrics::OUTCOME_NAMES;
 use relaygr::relay::baseline::Mode;
-use relaygr::relay::expander::DramPolicy;
+use relaygr::relay::tier::DramPolicy;
 use relaygr::runtime::Manifest;
 use relaygr::serve::{LiveCluster, LiveConfig};
 use relaygr::util::cli::Args;

@@ -1,6 +1,6 @@
 //! Ablation benches for the design choices DESIGN.md calls out: the
 //! trigger's admission knobs (M, r2, headroom), the router's virtual-node
-//! count, and the expander's reload-concurrency cap.  Each prints a
+//! count, and the hierarchy's promotion-concurrency cap.  Each prints a
 //! table of the end-to-end effect through the simulator.
 
 #[path = "harness.rs"]
@@ -8,8 +8,8 @@ mod harness;
 
 use relaygr::cluster::{run_sim, SimConfig};
 use relaygr::relay::baseline::Mode;
-use relaygr::relay::expander::DramPolicy;
 use relaygr::relay::router::{HashRing, Router, RouterConfig};
+use relaygr::relay::tier::DramPolicy;
 use relaygr::workload::WorkloadConfig;
 
 fn wl(qps: f64) -> WorkloadConfig {
@@ -74,7 +74,7 @@ fn main() {
         );
     }
 
-    println!("\n=== ablation: expander reload concurrency cap ===");
+    println!("\n=== ablation: hierarchy reload concurrency cap ===");
     println!("{:>4} {:>9} {:>9} {:>9} {:>10}", "cap", "reloads", "queued", "joined", "load_p99");
     for cap in [1usize, 2, 4, 8] {
         let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) });
@@ -85,9 +85,9 @@ fn main() {
         println!(
             "{:>4} {:>9} {:>9} {:>9} {:>10.2}",
             cap,
-            m.expander.reloads_started,
-            m.expander.reloads_queued,
-            m.expander.reloads_joined,
+            m.hierarchy.reloads_started,
+            m.hierarchy.reloads_queued,
+            m.hierarchy.reloads_joined,
             m.load.p99() / 1e3
         );
     }

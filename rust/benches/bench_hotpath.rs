@@ -1,5 +1,5 @@
 //! L3 hot-path microbenchmarks: the per-request coordinator operations
-//! (routing, admission, cache lookups, expander bookkeeping, histogram
+//! (routing, admission, cache lookups, hierarchy bookkeeping, histogram
 //! recording) plus live PJRT execution benches when artifacts exist.
 //!
 //! The coordinator budget is microseconds — it must never show up next
@@ -9,9 +9,10 @@
 mod harness;
 
 use harness::{bench, write_results};
-use relaygr::relay::expander::{DramPolicy, Expander};
 use relaygr::relay::hbm::HbmCache;
+use relaygr::relay::hierarchy::CacheHierarchy;
 use relaygr::relay::router::{Router, RouterConfig};
+use relaygr::relay::tier::{DramPolicy, EvictPolicy, PolicyTier, TierConfig};
 use relaygr::relay::trigger::{BehaviorMeta, Trigger, TriggerConfig};
 use relaygr::util::rng::Rng;
 use relaygr::util::stats::Histogram;
@@ -68,29 +69,51 @@ fn main() {
         hbm.evict(user);
     }));
 
-    // --- expander ----------------------------------------------------------
-    let mut ex: Expander<u32> = Expander::new(DramPolicy::Capacity(64 << 30), 4);
-    let mut hbm2: HbmCache<u32> = HbmCache::new(16 << 30);
+    // --- tier hierarchy -----------------------------------------------------
+    let mut h: CacheHierarchy<u32> =
+        CacheHierarchy::new(16 << 30, &[TierConfig::new(64 << 30, EvictPolicy::Lru)], 4);
     for user in 0..512u64 {
-        ex.spill(user, 32 << 20, user as u32);
+        h.spill(user, 32 << 20, user as u32);
     }
     let mut u = 0u64;
-    results.push(bench("expander/pseudo+reload_cycle", 100, 20_000, || {
+    results.push(bench("hierarchy/pseudo+reload_cycle", 100, 20_000, || {
         u += 1;
         let user = u % 512;
-        match ex.pseudo_pre_infer(user, &mut hbm2, u) {
-            relaygr::relay::expander::PseudoAction::StartReload { bytes } => {
-                let done = ex.complete_reload(user, 0, bytes, u, 1 << 40, &mut hbm2);
+        match h.pseudo_pre_infer(user, u) {
+            relaygr::relay::hierarchy::PseudoAction::StartReload { bytes } => {
+                let done = h.complete_reload(user, 0, bytes, u, 1 << 40);
                 let _ = done;
-                hbm2.consume(user);
-                hbm2.evict(user);
+                h.hbm_mut().consume(user);
+                h.hbm_mut().evict(user);
             }
             _ => {
-                hbm2.consume(user);
-                hbm2.evict(user);
+                h.hbm_mut().consume(user);
+                h.hbm_mut().evict(user);
             }
         }
     }));
+
+    // --- tier eviction under churn ------------------------------------------
+    // A deliberately tiny tier so every insert evicts: the O(log n)
+    // victim index is what keeps this flat as resident count grows (the
+    // old DRAM tier scanned all entries per eviction).
+    for policy in [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::CostAware] {
+        let mut t: PolicyTier<u32> = PolicyTier::new(20_000 << 20, policy);
+        for user in 0..20_000u64 {
+            let _ = t.insert_evicting(user, 1 << 20, 0, false);
+        }
+        let mut u = 20_000u64;
+        results.push(bench(
+            &format!("tier/evict_churn_20k[{}]", policy.label()),
+            100,
+            20_000,
+            || {
+                u += 1;
+                let _ = t.insert_evicting(u, 1 << 20, 0, false);
+                t.get(u ^ 1);
+            },
+        ));
+    }
 
     // --- coordinator: pure decision flow (no compute) ------------------------
     // The full per-request relay-race cycle through the shared

@@ -46,7 +46,10 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Bench
     r
 }
 
-/// Persist a suite of results as JSON.
+/// Persist a suite of results as JSON: the archive copy under
+/// `results/bench/` plus a `BENCH_<suite>.json` snapshot in the working
+/// directory, so the perf trajectory is recorded run over run by tooling
+/// that only looks for `BENCH_*` files.
 pub fn write_results(file: &str, results: &[BenchResult]) {
     use relaygr::util::json::Json;
     let rows: Vec<Json> = results
@@ -65,8 +68,10 @@ pub fn write_results(file: &str, results: &[BenchResult]) {
     let _ = std::fs::create_dir_all("results/bench");
     let mut j = Json::obj();
     j.set("suite", file.into()).set("results", Json::Arr(rows));
-    let path = format!("results/bench/{file}.json");
-    if std::fs::write(&path, j.to_string_pretty()).is_ok() {
-        println!("wrote {path}");
+    let text = j.to_string_pretty();
+    for path in [format!("results/bench/{file}.json"), format!("BENCH_{file}.json")] {
+        if std::fs::write(&path, &text).is_ok() {
+            println!("wrote {path}");
+        }
     }
 }

@@ -13,7 +13,7 @@ mod tests {
     use super::*;
     use crate::metrics::RunMetrics;
     use crate::relay::baseline::Mode;
-    use crate::relay::expander::DramPolicy;
+    use crate::relay::tier::DramPolicy;
     use crate::workload::WorkloadConfig;
 
     fn small_workload(qps: f64) -> WorkloadConfig {
@@ -73,7 +73,7 @@ mod tests {
             "expected DRAM hits: {}",
             m.brief()
         );
-        assert!(m.expander.spills > 0);
+        assert!(m.hierarchy.spills > 0);
         assert!(m.dram_hit_rate() > 0.0);
     }
 

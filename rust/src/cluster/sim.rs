@@ -29,9 +29,9 @@ use crate::relay::baseline::Mode;
 use crate::relay::coordinator::{
     CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, SignalAction, Stage,
 };
-use crate::relay::expander::DramPolicy;
 use crate::relay::pipeline::{Lifecycle, PipelineConfig, StageSampler};
 use crate::relay::router::RouterConfig;
+use crate::relay::tier::{EvictPolicy, TierConfig};
 use crate::relay::trigger::{BehaviorMeta, TriggerConfig};
 use crate::util::rng::Rng;
 use crate::workload::{GenRequest, WorkloadConfig};
@@ -52,7 +52,7 @@ pub struct SimConfig {
     pub cpu_cores: usize,
     /// r1 — HBM fraction reserved for live ψ caches.
     pub r1: f64,
-    /// Expander reload concurrency cap.
+    /// Hierarchy promotion (reload) concurrency cap.
     pub max_reload_concurrency: usize,
     /// Per network hop (LB → gateway → instance).
     pub hop_us: f64,
@@ -60,6 +60,11 @@ pub struct SimConfig {
     pub long_threshold: usize,
     /// P99 prefix length used for kv_p99 in admission control.
     pub kv_p99_prefix: usize,
+    /// Eviction policy for the mode-selected DRAM tier (`--dram-policy`).
+    pub dram_policy: EvictPolicy,
+    /// Explicit lower-tier stack override (`--tier`); `None` derives a
+    /// single tier from the serving mode's DRAM capacity.
+    pub tiers: Option<Vec<TierConfig>>,
     /// Record the per-request `(id, CacheOutcome)` log in [`RunMetrics`]
     /// (cross-engine equivalence tests; off by default — it grows with
     /// the trace).
@@ -93,6 +98,8 @@ impl SimConfig {
             hop_us: 150.0,
             long_threshold: 2048,
             kv_p99_prefix: 8192,
+            dram_policy: EvictPolicy::Lru,
+            tiers: None,
             log_outcomes: false,
             seed: 7,
         }
@@ -113,11 +120,10 @@ impl SimConfig {
         }
     }
 
-    fn dram_policy(&self) -> DramPolicy {
-        match self.mode {
-            Mode::RelayGr { dram } => dram,
-            _ => DramPolicy::Disabled,
-        }
+    /// The lower-tier stack this configuration induces (see
+    /// [`Mode::tier_stack`] for the precedence rule).
+    pub fn tier_stack(&self) -> Vec<TierConfig> {
+        self.mode.tier_stack(self.dram_policy, self.tiers.as_deref())
     }
 
     /// The coordinator configuration this cluster shape induces.
@@ -127,7 +133,7 @@ impl SimConfig {
             mode: self.mode,
             router: self.router.clone(),
             trigger: self.trigger_config(),
-            dram: self.dram_policy(),
+            tiers: self.tier_stack(),
             long_threshold: self.long_threshold,
             t_life_us: self.pipeline.t_life_us,
             max_reload_concurrency: self.max_reload_concurrency,
@@ -300,7 +306,7 @@ impl Sim {
             .collect();
         self.metrics.special_instances = self.coord.special_instances().to_vec();
         self.metrics.hbm = self.coord.hbm_stats();
-        self.metrics.expander = self.coord.expander_stats();
+        self.metrics.hierarchy = self.coord.hierarchy_stats();
         self.metrics.trigger = self.coord.trigger_stats();
         self.metrics.sim_duration_us = self.end_us;
         self.metrics

@@ -8,7 +8,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::cluster::SimConfig;
 use crate::model::{Dtype, HardwareProfile, ModelSpec, ModelType};
 use crate::relay::baseline::Mode;
-use crate::relay::expander::DramPolicy;
+use crate::relay::tier::{DramPolicy, EvictPolicy, TierConfig};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::workload::{ScenarioKind, WorkloadConfig};
@@ -30,6 +30,37 @@ pub fn parse_mode(s: &str) -> Result<Mode> {
         return Ok(Mode::RelayGr { dram: DramPolicy::Capacity(gb << 30) });
     }
     bail!("unknown mode '{s}' (baseline | relaygr | relaygr+dram<N>g)")
+}
+
+/// Parse an eviction policy: `lifecycle | lru | lfu | cost`.
+pub fn parse_policy(s: &str) -> Result<EvictPolicy> {
+    EvictPolicy::parse(s).map_err(|e| anyhow!(e))
+}
+
+/// Parse a lower-tier stack, top-down: comma-separated
+/// `<size><g|m|b>[:<policy>]` items, e.g. `--tier 8g:lru,500g:cost`.
+/// The policy defaults to `lru`.
+pub fn parse_tiers(s: &str) -> Result<Vec<TierConfig>> {
+    let mut tiers = Vec::new();
+    for item in s.split(',') {
+        let item = item.trim();
+        let (size, policy) = match item.split_once(':') {
+            Some((size, policy)) => (size, parse_policy(policy)?),
+            None => (item, EvictPolicy::Lru),
+        };
+        let (num, shift) = match size.as_bytes().last().copied() {
+            Some(b'g' | b'G') => (&size[..size.len() - 1], 30),
+            Some(b'm' | b'M') => (&size[..size.len() - 1], 20),
+            Some(b'b' | b'B') => (&size[..size.len() - 1], 0),
+            _ => bail!("tier '{item}': expected <size><g|m|b>[:<policy>]"),
+        };
+        let n: usize = num.parse().with_context(|| format!("tier '{item}'"))?;
+        if n == 0 {
+            bail!("tier '{item}': capacity must be > 0");
+        }
+        tiers.push(TierConfig::new(n << shift, policy));
+    }
+    Ok(tiers)
 }
 
 /// Apply a JSON object onto a [`ModelSpec`].
@@ -92,6 +123,12 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
         if let Some(v) = j.get("seed").and_then(Json::as_usize) {
             cfg.seed = v as u64;
         }
+        if let Some(v) = j.get("dram_policy").and_then(Json::as_str) {
+            cfg.dram_policy = parse_policy(v)?;
+        }
+        if let Some(v) = j.get("tiers").and_then(Json::as_str) {
+            cfg.tiers = Some(parse_tiers(v)?);
+        }
     }
     // CLI overrides.
     if let Some(hw) = args.get("hw") {
@@ -105,6 +142,12 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
     cfg.spec.dim = args.get_usize("dim", cfg.spec.dim)?;
     cfg.spec.num_items = args.get_usize("items", cfg.spec.num_items)?;
     cfg.long_threshold = args.get_usize("long-threshold", cfg.long_threshold)?;
+    if let Some(p) = args.get("dram-policy") {
+        cfg.dram_policy = parse_policy(p)?;
+    }
+    if let Some(t) = args.get("tier") {
+        cfg.tiers = Some(parse_tiers(t)?);
+    }
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     if cfg.spec.dim % cfg.spec.heads != 0 {
         // Keep heads consistent when dim is overridden.
@@ -143,6 +186,16 @@ pub fn sim_config_json(cfg: &SimConfig, wl: &WorkloadConfig) -> Json {
         .set("qps", wl.qps.into())
         .set("duration_s", (wl.duration_us as f64 / 1e6).into())
         .set("scenario", wl.scenario.label().into())
+        .set(
+            "tiers",
+            cfg.tier_stack()
+                .iter()
+                .map(TierConfig::label)
+                .collect::<Vec<_>>()
+                .join(",")
+                .as_str()
+                .into(),
+        )
         .set("seed", cfg.seed.into());
     j
 }
@@ -198,6 +251,53 @@ mod tests {
         assert_eq!(cfg.spec.dim, 256);
         assert_eq!(cfg.hw.name, "ascend-310");
         assert!((cfg.router.r2 - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tier_stack_parsing() {
+        assert_eq!(
+            parse_tiers("8g:lru,500g:cost").unwrap(),
+            vec![
+                TierConfig::new(8 << 30, EvictPolicy::Lru),
+                TierConfig::new(500 << 30, EvictPolicy::CostAware),
+            ]
+        );
+        // Policy defaults to lru; m suffix scales by MiB.
+        assert_eq!(
+            parse_tiers("64m").unwrap(),
+            vec![TierConfig::new(64 << 20, EvictPolicy::Lru)]
+        );
+        assert!(parse_tiers("8").is_err(), "missing unit suffix");
+        assert!(parse_tiers("8g:mru").is_err(), "unknown policy");
+        assert!(parse_tiers("0g").is_err(), "zero capacity");
+        // Labels round-trip through the parser, including sub-GiB and
+        // sub-MiB tiers.
+        for stack in ["8g:lru,500g:cost", "64m:lfu", "1536m:lifecycle", "4097b:cost"] {
+            let tiers = parse_tiers(stack).unwrap();
+            let label =
+                tiers.iter().map(TierConfig::label).collect::<Vec<_>>().join(",");
+            assert_eq!(parse_tiers(&label).unwrap(), tiers, "label '{label}'");
+        }
+    }
+
+    #[test]
+    fn dram_policy_and_tier_flags_apply() {
+        let mode = Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) };
+        // Default: the mode's DRAM capacity under LRU.
+        let plain = sim_config(&args(&["figure"]), mode).unwrap();
+        assert_eq!(
+            plain.tier_stack(),
+            vec![TierConfig::new(500 << 30, EvictPolicy::Lru)]
+        );
+        // --dram-policy switches the derived tier's eviction policy.
+        let cost = sim_config(&args(&["figure", "--dram-policy", "cost"]), mode).unwrap();
+        assert_eq!(cost.tier_stack()[0].policy, EvictPolicy::CostAware);
+        // --tier replaces the whole stack.
+        let stack =
+            sim_config(&args(&["figure", "--tier", "4g:lfu,64g:cost"]), mode).unwrap();
+        assert_eq!(stack.tier_stack().len(), 2);
+        assert_eq!(stack.tier_stack()[1].policy, EvictPolicy::CostAware);
+        assert!(sim_config(&args(&["figure", "--dram-policy", "mru"]), mode).is_err());
     }
 
     #[test]

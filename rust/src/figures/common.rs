@@ -7,7 +7,7 @@ use anyhow::{Context, Result};
 use crate::cluster::{run_sim, SimConfig};
 use crate::metrics::RunMetrics;
 use crate::relay::baseline::Mode;
-use crate::relay::expander::DramPolicy;
+use crate::relay::tier::DramPolicy;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::workload::WorkloadConfig;

@@ -28,7 +28,7 @@ pub fn fig11a(args: &Args) -> Result<()> {
         .collect();
     variants.push((
         crate::relay::baseline::Mode::RelayGr {
-            dram: crate::relay::expander::DramPolicy::Capacity(4096 << 30),
+            dram: crate::relay::tier::DramPolicy::Capacity(4096 << 30),
         },
         0.95,
         " (high reuse)",
@@ -94,7 +94,7 @@ pub fn fig11b(args: &Args) -> Result<()> {
 pub fn fig11c(args: &Args) -> Result<()> {
     let (dur, _) = common::durations(args);
     let mode = crate::relay::baseline::Mode::RelayGr {
-        dram: crate::relay::expander::DramPolicy::Capacity(500 << 30),
+        dram: crate::relay::tier::DramPolicy::Capacity(500 << 30),
     };
     let mut t = Table::new(
         "fig11c",

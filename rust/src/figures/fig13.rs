@@ -8,7 +8,7 @@ use crate::cluster::SimConfig;
 use crate::figures::common::{self, Table};
 use crate::metrics::slo;
 use crate::relay::baseline::Mode;
-use crate::relay::expander::DramPolicy;
+use crate::relay::tier::DramPolicy;
 use crate::util::cli::Args;
 
 /// Fig. 13a: SLO-compliant QPS vs sequence length per variant (paper:

@@ -7,7 +7,7 @@ use crate::cluster::SimConfig;
 use crate::figures::common::{self, Table};
 use crate::metrics::slo;
 use crate::relay::baseline::Mode;
-use crate::relay::expander::DramPolicy;
+use crate::relay::tier::DramPolicy;
 use crate::util::cli::Args;
 
 /// Fig. 14a: ranking latency vs candidate-set size (paper: rank-on-cache

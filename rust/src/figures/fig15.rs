@@ -9,7 +9,7 @@ use crate::figures::common::{self, Table};
 use crate::metrics::slo;
 use crate::model::{Dtype, HardwareProfile, ModelSpec, ModelType};
 use crate::relay::baseline::Mode;
-use crate::relay::expander::DramPolicy;
+use crate::relay::tier::DramPolicy;
 use crate::util::cli::Args;
 
 fn model_variants() -> Vec<(&'static str, ModelSpec)> {

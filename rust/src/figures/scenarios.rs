@@ -8,21 +8,10 @@ use anyhow::Result;
 
 use crate::cluster::SimConfig;
 use crate::figures::common::{ms, pct, sim, Table};
-use crate::metrics::RunMetrics;
 use crate::relay::baseline::Mode;
-use crate::relay::expander::DramPolicy;
+use crate::relay::tier::DramPolicy;
 use crate::util::cli::Args;
 use crate::workload::{ScenarioKind, WorkloadConfig};
-
-fn hit_rate(m: &RunMetrics) -> f64 {
-    let hits = m.outcome_counts[1] + m.outcome_counts[2] + m.outcome_counts[3];
-    let long = hits + m.outcome_counts[4];
-    if long == 0 {
-        0.0
-    } else {
-        hits as f64 / long as f64
-    }
-}
 
 /// `relaygr figure scenarios [--qps N] [--quick] [--scenario name]`.
 pub fn scenarios(args: &Args) -> Result<()> {
@@ -68,7 +57,7 @@ pub fn scenarios(args: &Args) -> Result<()> {
                 format!("{:.0}", m.goodput_qps()),
                 ms(m.p99_e2e()),
                 format!("{:.4}", m.success_rate()),
-                pct(hit_rate(&m)),
+                pct(m.relay_hit_rate()),
                 pct(m.dram_hit_rate()),
                 shed.to_string(),
             ]);

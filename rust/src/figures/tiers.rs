@@ -1,0 +1,169 @@
+//! `relaygr figure tiers` — the tier-hierarchy standing report: every
+//! eviction policy of the DRAM tier (`lru`, `lfu`, `cost`, `lifecycle`)
+//! across all four workload scenarios, in both decision engines — the
+//! discrete-event simulator and the serialized reference driver (the
+//! same instantly-completing-host engine `tests/cross_engine.rs` checks
+//! the live engine against).  Both drive the identical
+//! [`RelayCoordinator`], so per-policy hit/promotion/demotion behaviour
+//! must agree; the simulator rows additionally carry latency.
+//!
+//! The DRAM tier is deliberately small (default 2 GB) so the eviction
+//! policy actually binds — with a ~500 GB tier every policy is a no-op.
+
+use anyhow::Result;
+
+use crate::cluster::SimConfig;
+use crate::figures::common::{ms, pct, sim, Table};
+use crate::metrics::{dram_hit_rate, relay_hit_rate, RunMetrics};
+use crate::relay::baseline::Mode;
+use crate::relay::coordinator::{RankAction, RelayCoordinator, SignalAction, Stage};
+use crate::relay::hbm::HbmStats;
+use crate::relay::hierarchy::HierarchyStats;
+use crate::relay::pipeline::CacheOutcome;
+use crate::relay::tier::{DramPolicy, EvictPolicy};
+use crate::util::cli::Args;
+use crate::workload::{generate, ScenarioKind, WorkloadConfig};
+
+fn outcome_index(o: CacheOutcome) -> usize {
+    match o {
+        CacheOutcome::FullInference => 0,
+        CacheOutcome::HbmHit => 1,
+        CacheOutcome::DramHit => 2,
+        CacheOutcome::JoinedReload => 3,
+        CacheOutcome::Fallback => 4,
+    }
+}
+
+/// The serialized reference engine: every request runs start-to-finish
+/// against the shared coordinator with an instantly-completing host.
+fn run_serial(
+    cfg: &SimConfig,
+    wl: &WorkloadConfig,
+) -> Result<([u64; 5], HierarchyStats, HbmStats)> {
+    let mut coord: RelayCoordinator<()> =
+        RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator())?;
+    let spec = cfg.spec;
+    let mut counts = [0u64; 5];
+    for req in generate(wl) {
+        let now = req.arrival_us;
+        if coord.on_arrival(now, req.id, req.user, req.prefix_len) {
+            match coord.on_trigger_check(now, req.id) {
+                SignalAction::Produce { instance, user, .. } => {
+                    coord.on_psi_ready(now, instance, user, Some(()));
+                }
+                SignalAction::Reload { instance, user, bytes } => {
+                    coord.on_reload_done(now, instance, user, Some(()), bytes);
+                }
+                SignalAction::None => {}
+            }
+        }
+        coord.on_stage_done(now, req.id, Stage::Retrieval);
+        let inst = coord
+            .on_stage_done(now, req.id, Stage::Preproc)
+            .expect("preproc resolves the ranking instance");
+        match coord.on_rank_start(now, req.id) {
+            RankAction::Proceed { .. } => {}
+            RankAction::StartReload { bytes } => {
+                coord.on_reload_done(now, inst, req.user, Some(()), bytes);
+            }
+            // With an instantly-completing host nothing can be pending;
+            // a wait here means a coordinator invariant broke — fail the
+            // figure rather than publish rows from an unresolved request.
+            other => anyhow::bail!("serialized driver saw {other:?} for request {}", req.id),
+        }
+        let _ = coord.rank_compute(now, req.id);
+        let done = coord.on_rank_done(now, req.id, spec.kv_bytes_for(req.prefix_len));
+        if let Some(bytes) = done.spill {
+            coord.complete_spill(done.instance, done.user, bytes, ());
+        }
+        counts[outcome_index(done.outcome)] += 1;
+    }
+    Ok((counts, coord.hierarchy_stats(), coord.hbm_stats()))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn table_row(
+    t: &mut Table,
+    scenario: &str,
+    policy: EvictPolicy,
+    engine: &str,
+    n: u64,
+    p99: Option<f64>,
+    counts: &[u64; 5],
+    h: &HierarchyStats,
+    hbm: &HbmStats,
+) {
+    t.row(vec![
+        scenario.to_string(),
+        policy.label().to_string(),
+        engine.to_string(),
+        n.to_string(),
+        p99.map(ms).unwrap_or_else(|| "-".into()),
+        pct(relay_hit_rate(counts)),
+        pct(dram_hit_rate(counts)),
+        // First-consume vs rapid-re-rank HBM probes, split.
+        format!("{}/{}", hbm.ready_hits, hbm.consumed_hits),
+        h.reloads_started.to_string(),
+        h.spills.to_string(),
+        h.dram_evictions.to_string(),
+    ]);
+}
+
+/// `relaygr figure tiers [--qps N] [--dram-gb N] [--quick] [--scenario s]`.
+pub fn tiers(args: &Args) -> Result<()> {
+    let duration_us = if args.has_flag("quick") { 4_000_000 } else { 10_000_000 };
+    let qps = args.get_f64("qps", 120.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let dram_gb = args.get_usize("dram-gb", 2)?;
+    let kinds: Vec<ScenarioKind> = match args.get("scenario") {
+        Some(s) => vec![ScenarioKind::parse(s).map_err(anyhow::Error::msg)?],
+        None => ScenarioKind::NAMES
+            .iter()
+            .map(|n| ScenarioKind::parse(n).expect("built-in scenario"))
+            .collect(),
+    };
+    let policies =
+        [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::CostAware, EvictPolicy::Lifecycle];
+    let mut t = Table::new(
+        "tiers",
+        "DRAM eviction policies × scenarios (simulator + serialized reference)",
+        &[
+            "scenario", "policy", "engine", "n", "p99 ms", "relay hit", "dram hit",
+            "hbm 1st/re-rank", "promoted", "demoted", "evicted",
+        ],
+    );
+    for kind in &kinds {
+        let wl = WorkloadConfig {
+            qps,
+            duration_us,
+            num_users: 30_000,
+            fixed_long_len: Some(3072),
+            max_prefix: 3072,
+            refresh_prob: 0.6,
+            scenario: *kind,
+            seed,
+            ..Default::default()
+        };
+        for policy in policies {
+            let mut cfg =
+                SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(dram_gb << 30) });
+            cfg.dram_policy = policy;
+            let m: RunMetrics = sim("tiers", cfg.clone(), &wl)?;
+            table_row(
+                &mut t,
+                kind.label(),
+                policy,
+                "sim",
+                m.completed,
+                Some(m.p99_e2e()),
+                &m.outcome_counts,
+                &m.hierarchy,
+                &m.hbm,
+            );
+            let (counts, h, hbm) = run_serial(&cfg, &wl)?;
+            let n = counts.iter().sum();
+            table_row(&mut t, kind.label(), policy, "serial", n, None, &counts, &h, &hbm);
+        }
+    }
+    t.emit(args)
+}

@@ -8,8 +8,8 @@
 //! * **L2** — the GR backbone + task tower lowered AOT to HLO text
 //!   (`python/compile/model.py` → `artifacts/`),
 //! * **L3** — this crate: the serving coordinator implementing the paper's
-//!   contribution (sequence-aware trigger, affinity-aware router,
-//!   memory-aware expander, HBM lifecycle cache) over a PJRT runtime, a
+//!   contribution (sequence-aware trigger, affinity-aware router, tiered
+//!   ψ cache hierarchy over the HBM lifecycle window) over a PJRT runtime, a
 //!   live threaded serving engine, and a calibrated discrete-event cluster
 //!   simulator that regenerates every figure/table in the paper's
 //!   evaluation.

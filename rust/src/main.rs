@@ -59,14 +59,18 @@ fn help() -> String {
      \x20 serve      live threaded serving demo (real PJRT executables)\n\
      \x20 calibrate  measure live execution costs, write calibration JSON\n\
      \x20 figure     regenerate a paper figure/table: fig1 fig3 fig11a..d fig12\n\
-     \x20            fig13a..d fig14a..d fig15a fig15b table1 all\n\
+     \x20            fig13a..d fig14a..d fig15a fig15b table1 scenarios tiers all\n\
      \x20 plan       admission-control capacity planning (Eqs. 1–3)\n\
      \n\
      COMMON OPTIONS:\n\
-     \x20 --artifacts <dir>   artifact directory (default: artifacts)\n\
-     \x20 --seed <n>          base RNG seed (default: 42)\n\
-     \x20 --scenario <name>   workload scenario: steady (default) | diurnal\n\
-     \x20                     | burst | coldstart (serve + figure)\n"
+     \x20 --artifacts <dir>     artifact directory (default: artifacts)\n\
+     \x20 --seed <n>            base RNG seed (default: 42)\n\
+     \x20 --scenario <name>     workload scenario: steady (default) | diurnal\n\
+     \x20                       | burst | coldstart (serve + figure)\n\
+     \x20 --dram-policy <name>  DRAM-tier eviction: lru (default) | lfu\n\
+     \x20                       | cost | lifecycle (serve + figure/sim)\n\
+     \x20 --tier <stack>        explicit lower-tier stack, top-down, e.g.\n\
+     \x20                       8g:lru,500g:cost (serve + figure/sim)\n"
         .to_string()
 }
 

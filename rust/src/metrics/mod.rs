@@ -6,8 +6,8 @@
 
 pub mod slo;
 
-use crate::relay::expander::ExpanderStats;
 use crate::relay::hbm::HbmStats;
+use crate::relay::hierarchy::HierarchyStats;
 use crate::relay::pipeline::{CacheOutcome, Lifecycle};
 use crate::relay::trigger::TriggerStats;
 use crate::util::stats::{Histogram, Summary};
@@ -34,7 +34,8 @@ pub struct RunMetrics {
     pub admitted: u64,
 
     pub hbm: HbmStats,
-    pub expander: ExpanderStats,
+    /// Tiered-cache flow + per-tier counters (promotion/demotion).
+    pub hierarchy: HierarchyStats,
     pub trigger: TriggerStats,
 
     /// Busy-time utilization per instance (0..1), and the special subset.
@@ -67,6 +68,31 @@ fn outcome_index(o: CacheOutcome) -> usize {
 
 pub const OUTCOME_NAMES: [&str; 5] = ["full", "hbm", "dram", "join", "fallback"];
 
+/// Cache-hit rate among relay-routed long requests: any cache-served
+/// outcome (HBM, DRAM, joined reload) over cache-served + fallback.
+/// `counts` is indexed like [`RunMetrics::outcome_counts`].
+pub fn relay_hit_rate(counts: &[u64; 5]) -> f64 {
+    let hits = counts[1] + counts[2] + counts[3];
+    let relayed = hits + counts[4];
+    if relayed == 0 {
+        0.0
+    } else {
+        hits as f64 / relayed as f64
+    }
+}
+
+/// DRAM hit rate among cache-served requests (the paper's "+x%"):
+/// DRAM-origin outcomes (reload + join) over all cache-served outcomes.
+pub fn dram_hit_rate(counts: &[u64; 5]) -> f64 {
+    let hits = counts[2] + counts[3];
+    let served = hits + counts[1];
+    if served == 0 {
+        0.0
+    } else {
+        hits as f64 / served as f64
+    }
+}
+
 impl RunMetrics {
     pub fn new(pipeline_slo_us: f64) -> RunMetrics {
         RunMetrics {
@@ -83,7 +109,7 @@ impl RunMetrics {
             outcome_counts: [0; 5],
             admitted: 0,
             hbm: HbmStats::default(),
-            expander: ExpanderStats::default(),
+            hierarchy: HierarchyStats::default(),
             trigger: TriggerStats::default(),
             util: Vec::new(),
             special_instances: Vec::new(),
@@ -171,13 +197,12 @@ impl RunMetrics {
 
     /// DRAM hit rate among relay-served long requests (the paper's "+x%").
     pub fn dram_hit_rate(&self) -> f64 {
-        let hits = self.outcome_counts[2] + self.outcome_counts[3];
-        let relayed = hits + self.outcome_counts[1];
-        if relayed == 0 {
-            0.0
-        } else {
-            hits as f64 / relayed as f64
-        }
+        dram_hit_rate(&self.outcome_counts)
+    }
+
+    /// Cache-hit rate among relay-routed long requests.
+    pub fn relay_hit_rate(&self) -> f64 {
+        relay_hit_rate(&self.outcome_counts)
     }
 
     pub fn mean_util(&self, only: Option<&[usize]>) -> f64 {
@@ -220,6 +245,35 @@ impl RunMetrics {
 
     pub fn e2e_summary(&self) -> Summary {
         self.e2e.summary()
+    }
+
+    /// One line per cache tier — level 0 is the HBM window (with
+    /// first-consume vs rapid-re-rank hits split), then every lower tier
+    /// with its policy-driven hit/promotion/demotion/eviction counters.
+    pub fn tier_report(&self) -> Vec<String> {
+        let h = self.hbm;
+        let mut out = vec![format!(
+            "L0 hbm[lifecycle]   ready={} re-rank={} producing={} miss={} evicted={} lost={}",
+            h.ready_hits,
+            h.consumed_hits,
+            h.producing_hits,
+            h.misses,
+            h.evicted_consumed + h.evicted_expired,
+            h.lost,
+        )];
+        for (i, t) in self.hierarchy.tiers.iter().enumerate() {
+            out.push(format!(
+                "L{} tier            hits={} miss={} promoted={} demoted-in={} evicted={} rejected={}",
+                i + 1,
+                t.hits,
+                t.misses,
+                t.promotions,
+                t.demotions_in,
+                t.evictions,
+                t.rejected,
+            ));
+        }
+        out
     }
 }
 
@@ -287,6 +341,23 @@ mod tests {
         m.record(&lc(50.0, CacheOutcome::JoinedReload), true);
         m.record(&lc(50.0, CacheOutcome::FullInference), false);
         assert!((m.dram_hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tier_report_lists_every_level() {
+        use crate::relay::tier::TierStats;
+        let mut m = RunMetrics::new(1.0);
+        m.hbm.ready_hits = 5;
+        m.hbm.consumed_hits = 2;
+        m.hierarchy.tiers = vec![
+            TierStats { hits: 3, promotions: 3, ..Default::default() },
+            TierStats { demotions_in: 1, ..Default::default() },
+        ];
+        let report = m.tier_report();
+        assert_eq!(report.len(), 3, "L0 + two lower tiers");
+        assert!(report[0].contains("ready=5") && report[0].contains("re-rank=2"));
+        assert!(report[1].contains("promoted=3"));
+        assert!(report[2].contains("demoted-in=1"));
     }
 
     #[test]

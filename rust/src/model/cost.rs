@@ -33,7 +33,7 @@ pub struct HardwareProfile {
     pub pcie_bytes_per_us: f64,
     /// Fixed per-transfer DMA setup cost.
     pub dma_fixed_us: f64,
-    /// DRAM copy bandwidth for expander spills, bytes/µs.
+    /// DRAM copy bandwidth for tier spills, bytes/µs.
     pub dram_bytes_per_us: f64,
     /// Cross-server fetch: round-trip latency + effective network bandwidth.
     pub net_rtt_us: f64,

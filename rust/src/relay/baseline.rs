@@ -2,7 +2,7 @@
 //! affinity, where ranking may need cross-server cache fetches.
 
 use crate::model::HardwareProfile;
-use crate::relay::expander::DramPolicy;
+use crate::relay::tier::{DramPolicy, EvictPolicy, TierConfig};
 
 /// Which serving policy a run evaluates.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -32,6 +32,24 @@ impl Mode {
 
     pub fn is_relay(&self) -> bool {
         matches!(self, Mode::RelayGr { .. })
+    }
+
+    /// The lower-tier stack a config induces: an explicit override
+    /// (`--tier`) wins; otherwise relay mode's DRAM capacity becomes one
+    /// tier under `policy` (`--dram-policy`, default LRU).  Shared by
+    /// both engine configs so their precedence rules cannot drift.
+    pub fn tier_stack(
+        &self,
+        policy: EvictPolicy,
+        override_: Option<&[TierConfig]>,
+    ) -> Vec<TierConfig> {
+        if let Some(tiers) = override_ {
+            return tiers.to_vec();
+        }
+        match *self {
+            Mode::RelayGr { dram } => dram.tier_stack(policy),
+            _ => Vec::new(),
+        }
     }
 }
 

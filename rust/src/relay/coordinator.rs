@@ -1,7 +1,7 @@
 //! The shared relay-race coordinator: one clock-agnostic state machine
 //! owning the full per-request decision flow of §3 — admission
-//! ([`Trigger`]), placement ([`Router`]), ψ lookup/production across
-//! [`HbmCache`] + [`Expander`], wait-budget fallback, and
+//! ([`Trigger`]), placement ([`Router`]), ψ lookup/production across the
+//! tiered [`CacheHierarchy`], wait-budget fallback, and
 //! [`CacheOutcome`] classification — driven through a small event-style
 //! API by *both* execution engines:
 //!
@@ -39,10 +39,11 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::relay::baseline::Mode;
-use crate::relay::expander::{DramPolicy, Expander, ExpanderStats, PseudoAction, ReloadDone};
-use crate::relay::hbm::{EntryState, HbmCache, HbmStats};
+use crate::relay::hbm::{EntryState, HbmStats};
+use crate::relay::hierarchy::{CacheHierarchy, HierarchyStats, PseudoAction, ReloadDone};
 use crate::relay::pipeline::CacheOutcome;
 use crate::relay::router::{Router, RouterConfig};
+use crate::relay::tier::TierConfig;
 use crate::relay::trigger::{
     BehaviorMeta, Decision, Estimator, Trigger, TriggerConfig, TriggerStats,
 };
@@ -58,7 +59,9 @@ pub struct CoordinatorConfig {
     pub mode: Mode,
     pub router: RouterConfig,
     pub trigger: TriggerConfig,
-    pub dram: DramPolicy,
+    /// Cache levels below the HBM window, top-down (empty = plain
+    /// RelayGR; one LRU entry = the paper's DRAM expander).
+    pub tiers: Vec<TierConfig>,
     /// Requests with prefix above this use the special (relay) service.
     pub long_threshold: usize,
     /// Lifecycle window T_life for cache survivability.
@@ -162,8 +165,8 @@ pub struct Completion {
 
 /// Per-instance cache-plane state.
 struct InstanceCtl<T> {
-    hbm: HbmCache<T>,
-    expander: Expander<T>,
+    /// The tiered ψ cache: HBM window + lower tiers + promotion flow.
+    cache: CacheHierarchy<T>,
     /// Rank requests waiting for ψ production to finish, per user.
     waiting_produce: FxHashMap<u64, Vec<u64>>,
     /// Rank requests joined to an in-flight/queued reload, per user.
@@ -214,8 +217,7 @@ impl<T: Clone> RelayCoordinator<T> {
         }
         let instances = (0..cfg.router.n_instances)
             .map(|_| InstanceCtl {
-                hbm: HbmCache::new(cfg.hbm_bytes),
-                expander: Expander::new(cfg.dram, cfg.max_reload_concurrency),
+                cache: CacheHierarchy::new(cfg.hbm_bytes, &cfg.tiers, cfg.max_reload_concurrency),
                 waiting_produce: FxHashMap::default(),
                 waiting_reload: FxHashMap::default(),
                 origin: FxHashMap::default(),
@@ -258,15 +260,16 @@ impl<T: Clone> RelayCoordinator<T> {
     pub fn hbm_stats(&self) -> HbmStats {
         let mut acc = HbmStats::default();
         for i in &self.instances {
-            acc.merge(i.hbm.stats());
+            acc.merge(i.cache.hbm().stats());
         }
         acc
     }
 
-    pub fn expander_stats(&self) -> ExpanderStats {
-        let mut acc = ExpanderStats::default();
+    /// Merged hierarchy flow + per-tier counters across instances.
+    pub fn hierarchy_stats(&self) -> HierarchyStats {
+        let mut acc = HierarchyStats::default();
         for i in &self.instances {
-            acc.merge(i.expander.stats());
+            acc.merge(i.cache.stats());
         }
         acc
     }
@@ -287,9 +290,17 @@ impl<T: Clone> RelayCoordinator<T> {
         self.triggers.values().map(|t| t.live()).sum()
     }
 
-    /// Host copy backing a reload the caller is about to perform.
+    /// Host copy backing a reload the caller is about to perform
+    /// (searched top-down through the lower tiers).
     pub fn dram_payload(&mut self, instance: usize, user: u64) -> Option<(usize, T)> {
-        self.instances[instance].expander.dram_payload(user)
+        self.instances[instance].cache.payload_below(user)
+    }
+
+    /// Drop a user's lower-tier entries (behaviours refreshed upstream:
+    /// the cached prefix is stale).  An in-flight promotion for the user
+    /// aborts when it is granted its slot and finds the payload gone.
+    pub fn invalidate_user(&mut self, instance: usize, user: u64) -> bool {
+        self.instances[instance].cache.invalidate(user)
     }
 
     // ---- event API ---------------------------------------------------------
@@ -344,10 +355,7 @@ impl<T: Clone> RelayCoordinator<T> {
         // The pre-infer signal itself performs the pseudo-pre-infer checks,
         // skipping redundant recomputation when ψ is already local (§3.4).
         let kv = (self.cfg.kv_bytes)(prefix_len);
-        let action = {
-            let instance = &mut self.instances[inst];
-            instance.expander.pseudo_pre_infer(user, &mut instance.hbm, now)
-        };
+        let action = self.instances[inst].cache.pseudo_pre_infer(user, now);
         match action {
             PseudoAction::HbmHit | PseudoAction::WaitProducing => {
                 // Cache already present / being produced: re-arm its
@@ -355,7 +363,7 @@ impl<T: Clone> RelayCoordinator<T> {
                 // admitted slot stays held until the request completes
                 // (Eq. 1: L = Q_admit · T_life) and is released exactly
                 // once, in `on_rank_done`.
-                self.instances[inst].hbm.extend_lease(user, now + self.cfg.t_life_us);
+                self.instances[inst].cache.hbm_mut().extend_lease(user, now + self.cfg.t_life_us);
                 SignalAction::None
             }
             PseudoAction::StartReload { bytes } => SignalAction::Reload { instance: inst, user, bytes },
@@ -365,7 +373,7 @@ impl<T: Clone> RelayCoordinator<T> {
             }
             PseudoAction::Miss => {
                 let instance = &mut self.instances[inst];
-                match instance.hbm.begin_produce(user, kv, now, self.cfg.t_life_us) {
+                match instance.cache.hbm_mut().begin_produce(user, kv, now, self.cfg.t_life_us) {
                     Ok(()) => SignalAction::Produce { instance: inst, user, prefix_len },
                     Err(_) => {
                         // Admission overcommitted (shouldn't happen when Eqs.
@@ -416,10 +424,7 @@ impl<T: Clone> RelayCoordinator<T> {
             self.requests.get_mut(&req).unwrap().resolved = true;
             return RankAction::Proceed { cached: false, outcome: CacheOutcome::FullInference };
         }
-        let action = {
-            let instance = &mut self.instances[inst];
-            instance.expander.pseudo_pre_infer(user, &mut instance.hbm, now)
-        };
+        let action = self.instances[inst].cache.pseudo_pre_infer(user, now);
         match action {
             PseudoAction::HbmHit => {
                 let origin = self.instances[inst]
@@ -480,11 +485,11 @@ impl<T: Clone> RelayCoordinator<T> {
         payload: Option<T>,
     ) -> Vec<u64> {
         let ok = match payload {
-            Some(p) => self.instances[instance].hbm.complete_produce(user, p),
+            Some(p) => self.instances[instance].cache.hbm_mut().complete_produce(user, p),
             None => {
                 // Production failed (live-engine execution error): drop the
                 // reservation so later requests miss cleanly.
-                self.instances[instance].hbm.evict(user);
+                self.instances[instance].cache.hbm_mut().evict(user);
                 false
             }
         };
@@ -525,9 +530,9 @@ impl<T: Clone> RelayCoordinator<T> {
         let done = {
             let inst = &mut self.instances[instance];
             match payload {
-                Some(p) => inst.expander.complete_reload(user, p, bytes, now, t_life, &mut inst.hbm),
+                Some(p) => inst.cache.complete_reload(user, p, bytes, now, t_life),
                 None => {
-                    let (joiners, next) = inst.expander.finish_reload(user);
+                    let (joiners, next) = inst.cache.finish_reload(user);
                     ReloadDone { joiners, installed: false, next }
                 }
             }
@@ -553,10 +558,10 @@ impl<T: Clone> RelayCoordinator<T> {
     /// was evicted from DRAM while queued, the reload aborts and its
     /// waiters fall back.
     pub fn begin_queued_reload(&mut self, now: u64, instance: usize, user: u64) -> QueuedReload {
-        match self.instances[instance].expander.dram_payload(user) {
+        match self.instances[instance].cache.payload_below(user) {
             Some((bytes, _)) => QueuedReload::Start { bytes },
             None => {
-                let next = self.instances[instance].expander.abort_reload(user);
+                let next = self.instances[instance].cache.abort_reload(user);
                 let woken =
                     self.instances[instance].waiting_reload.remove(&user).unwrap_or_default();
                 for &w in &woken {
@@ -600,7 +605,8 @@ impl<T: Clone> RelayCoordinator<T> {
             let st = &self.requests[&req];
             (st.rank_instance, st.user, st.cached)
         };
-        let payload = if cached { self.instances[inst].hbm.consume(user) } else { None };
+        let payload =
+            if cached { self.instances[inst].cache.hbm_mut().consume(user) } else { None };
         RankCompute { cached, payload }
     }
 
@@ -639,8 +645,8 @@ impl<T: Clone> RelayCoordinator<T> {
             let fresh = ctl.origin.get(&st.user) == Some(&CacheOutcome::HbmHit);
             if fresh {
                 spill = Some(kv_bytes);
-            } else if ctl.hbm.state_of(st.user) == Some(EntryState::Consumed) {
-                ctl.hbm.evict(st.user);
+            } else if ctl.cache.hbm().state_of(st.user) == Some(EntryState::Consumed) {
+                ctl.cache.hbm_mut().evict(st.user);
                 ctl.origin.remove(&st.user);
             }
         }
@@ -669,11 +675,11 @@ impl<T: Clone> RelayCoordinator<T> {
         payload: T,
     ) -> bool {
         let ctl = &mut self.instances[instance];
-        if !ctl.expander.spill(user, bytes, payload) {
+        if !ctl.cache.spill(user, bytes, payload) {
             return false;
         }
-        if ctl.hbm.state_of(user) == Some(EntryState::Consumed) {
-            ctl.hbm.evict(user);
+        if ctl.cache.hbm().state_of(user) == Some(EntryState::Consumed) {
+            ctl.cache.hbm_mut().evict(user);
             ctl.origin.remove(&user);
         }
         true
@@ -684,6 +690,7 @@ impl<T: Clone> RelayCoordinator<T> {
 mod tests {
     use super::*;
     use crate::relay::router::BalancePolicy;
+    use crate::relay::tier::{DramPolicy, EvictPolicy};
 
     fn config(mode: Mode) -> CoordinatorConfig {
         CoordinatorConfig {
@@ -698,7 +705,7 @@ mod tests {
                 normal_policy: BalancePolicy::LeastConnections,
             },
             trigger: TriggerConfig::paper_example(),
-            dram: DramPolicy::Capacity(1 << 30),
+            tiers: vec![TierConfig::new(1 << 30, EvictPolicy::Lru)],
             long_threshold: 2048,
             t_life_us: 300_000,
             max_reload_concurrency: 2,

@@ -16,6 +16,8 @@ use std::collections::VecDeque;
 
 use crate::util::fxhash::FxHashMap;
 
+use crate::relay::tier::{CacheTier, EvictPolicy, TierStats};
+
 pub type Micros = u64;
 
 /// Lifecycle state of one per-user entry.
@@ -56,7 +58,13 @@ pub enum InsertError {
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct HbmStats {
     pub inserts: u64,
+    /// Probes that found a Ready (not-yet-consumed) ψ — first-consume
+    /// hits on the relay fast path.
     pub ready_hits: u64,
+    /// Probes that found an already-Consumed ψ still inside its window —
+    /// rapid same-user re-ranks (reported separately so figure output
+    /// can split first-consume from re-rank traffic).
+    pub consumed_hits: u64,
     pub producing_hits: u64,
     pub misses: u64,
     pub consumed: u64,
@@ -73,6 +81,7 @@ impl HbmStats {
     pub fn merge(&mut self, b: HbmStats) {
         self.inserts += b.inserts;
         self.ready_hits += b.ready_hits;
+        self.consumed_hits += b.consumed_hits;
         self.producing_hits += b.producing_hits;
         self.misses += b.misses;
         self.consumed += b.consumed;
@@ -280,7 +289,7 @@ impl<T> HbmCache<T> {
         match state {
             Some(EntryState::Ready) => self.stats.ready_hits += 1,
             Some(EntryState::Producing) => self.stats.producing_hits += 1,
-            Some(EntryState::Consumed) => self.stats.ready_hits += 1,
+            Some(EntryState::Consumed) => self.stats.consumed_hits += 1,
             None => self.stats.misses += 1,
         }
         state
@@ -309,7 +318,7 @@ impl<T> HbmCache<T> {
     }
 
     /// Explicitly evict an entry (the window slides past a consumed ψ
-    /// right after the expander spills it to DRAM).
+    /// right after the hierarchy demotes it to DRAM).
     pub fn evict(&mut self, user: u64) -> bool {
         let existed = self.remove_user(user).is_some();
         if existed {
@@ -334,9 +343,80 @@ impl<T: Clone> HbmCache<T> {
         }
     }
 
-    /// Read a Ready/Consumed payload without state change.
-    pub fn peek(&self, user: u64) -> Option<T> {
-        self.entries.get(&user).and_then(|e| e.payload.clone())
+    /// Read a Ready/Consumed payload without state change.  Expired ψ
+    /// (past its `deadline_us`) is never readable — the sliding window
+    /// has moved past it, exactly as `probe` reports; `peek` merely skips
+    /// the reclamation (it takes `&self`).
+    pub fn peek(&self, user: u64, now: Micros) -> Option<T> {
+        let e = self.entries.get(&user)?;
+        if e.state != EntryState::Producing && e.deadline_us <= now {
+            return None;
+        }
+        e.payload.clone()
+    }
+}
+
+/// The HBM window as a [`CacheTier`]: the level-0 lifecycle tier of a
+/// [`CacheHierarchy`](crate::relay::hierarchy::CacheHierarchy).  The
+/// richer produce/consume lifecycle stays on the inherent API; the trait
+/// view exposes the shared capacity/lookup/insert/evict/stats shape.
+impl<T: Clone> CacheTier<T> for HbmCache<T> {
+    fn policy(&self) -> EvictPolicy {
+        EvictPolicy::Lifecycle
+    }
+
+    fn capacity_bytes(&self) -> usize {
+        HbmCache::capacity_bytes(self)
+    }
+
+    fn used_bytes(&self) -> usize {
+        HbmCache::used_bytes(self)
+    }
+
+    fn len(&self) -> usize {
+        HbmCache::len(self)
+    }
+
+    fn contains(&self, user: u64) -> bool {
+        self.state_of(user).is_some()
+    }
+
+    fn lookup(&mut self, user: u64, now: Micros) -> Option<(usize, T)> {
+        match self.probe(user, now) {
+            Some(EntryState::Ready) | Some(EntryState::Consumed) => {
+                let e = &self.entries[&user];
+                e.payload.clone().map(|p| (e.bytes, p))
+            }
+            _ => None,
+        }
+    }
+
+    fn insert(
+        &mut self,
+        user: u64,
+        bytes: usize,
+        payload: T,
+        now: Micros,
+        t_life_us: Micros,
+    ) -> bool {
+        self.insert_ready(user, bytes, payload, now, t_life_us).is_ok()
+    }
+
+    fn evict(&mut self, user: u64) -> bool {
+        HbmCache::evict(self, user)
+    }
+
+    fn tier_stats(&self) -> TierStats {
+        let s = self.stats;
+        TierStats {
+            inserts: s.inserts,
+            hits: s.ready_hits + s.consumed_hits + s.producing_hits,
+            misses: s.misses,
+            evictions: s.evicted_consumed + s.evicted_expired + s.lost,
+            rejected: s.rejected,
+            promotions: 0,
+            demotions_in: 0,
+        }
     }
 }
 
@@ -425,6 +505,40 @@ mod tests {
         assert_eq!(c.probe(9, 0), Some(EntryState::Ready));
         let s = c.stats();
         assert_eq!((s.misses, s.producing_hits, s.ready_hits), (1, 1, 1));
+    }
+
+    #[test]
+    fn probe_splits_ready_and_consumed_hits() {
+        let mut c = cache(64);
+        c.begin_produce(1, MB, 0, 10_000).unwrap();
+        c.complete_produce(1, 5);
+        assert_eq!(c.probe(1, 0), Some(EntryState::Ready));
+        c.consume(1);
+        // Rapid re-ranks probe the already-consumed entry.
+        assert_eq!(c.probe(1, 10), Some(EntryState::Consumed));
+        assert_eq!(c.probe(1, 20), Some(EntryState::Consumed));
+        let s = c.stats();
+        assert_eq!((s.ready_hits, s.consumed_hits), (1, 2));
+    }
+
+    #[test]
+    fn peek_respects_lifecycle_deadline() {
+        let mut c = cache(64);
+        c.begin_produce(1, MB, 0, 1_000).unwrap();
+        assert_eq!(c.peek(1, 0), None, "producing entries have no payload");
+        c.complete_produce(1, 9);
+        assert_eq!(c.peek(1, 500), Some(9));
+        // Past the deadline the window has moved on: expired ψ must never
+        // be readable, exactly as probe reports.
+        assert_eq!(c.peek(1, 1_000), None);
+        assert_eq!(c.probe(1, 1_000), None);
+        // Consumed entries expire the same way.
+        let mut d = cache(64);
+        d.begin_produce(2, MB, 0, 1_000).unwrap();
+        d.complete_produce(2, 7);
+        d.consume(2);
+        assert_eq!(d.peek(2, 500), Some(7));
+        assert_eq!(d.peek(2, 2_000), None);
     }
 
     #[test]

@@ -1,0 +1,716 @@
+//! The tiered ψ cache hierarchy (§3.4 generalised): the HBM lifecycle
+//! window (level 0) over any number of capacity-bounded lower tiers
+//! (level 1 = server-local DRAM, deeper levels free to add), composed
+//! into the flow the memory-aware expander hand-rolled for exactly two
+//! levels:
+//!
+//! * **N-level lookup** — HBM first, then lower tiers top-down; a
+//!   lower-tier hit triggers one rate-limited promotion (reload) into
+//!   HBM.
+//! * **Per-user single-flight** — at most one cache-affecting action per
+//!   user in flight; concurrent requests join the in-flight promotion.
+//! * **Pseudo-pre-inference** — every ranking request is fronted by an
+//!   idempotent pseudo step performing the same checks as real
+//!   pre-inference, so out-of-order arrivals (pre-infer delayed behind
+//!   ranking) cause at most one reload per user per burst.
+//! * **Bounded promotion concurrency** — reloads above the cap queue
+//!   rather than flooding PCIe.
+//! * **Demotion (spill)** — a consumed ψ demotes into level 1; entries a
+//!   tier evicts cascade one level down, and only entries evicted from
+//!   the last tier leave the hierarchy.
+//!
+//! Eviction inside each lower tier is policy-driven
+//! ([`EvictPolicy`](crate::relay::tier::EvictPolicy)); the no-remote-fetch
+//! invariant (I1) is preserved because every tier is server-local.
+//!
+//! Like [`HbmCache`], the hierarchy is payload-generic and clock-agnostic
+//! (callers pass `now_us` and perform the actual H2D/D2H), so the
+//! simulator and the live engine share it.
+
+use std::collections::VecDeque;
+
+use crate::util::fxhash::FxHashMap;
+
+use crate::relay::hbm::{EntryState, HbmCache, Micros};
+use crate::relay::tier::{PolicyTier, TierConfig, TierStats};
+
+/// What the pseudo-pre-infer step decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PseudoAction {
+    /// ψ is in HBM (Ready or Consumed-but-resident): proceed directly.
+    HbmHit,
+    /// ψ is still being produced in HBM: wait for production to finish.
+    WaitProducing,
+    /// Lower-tier hit; this caller starts the one promotion (caller
+    /// performs the H2D and calls [`CacheHierarchy::complete_reload`]).
+    StartReload { bytes: usize },
+    /// Lower-tier hit but a promotion for this user is already in flight
+    /// (or queued): join it, do not issue another transfer.
+    JoinReload,
+    /// Lower-tier hit but the promotion-concurrency cap is reached: the
+    /// reload is queued; the caller waits for its
+    /// [`CacheHierarchy::pop_queued_reload`] turn.
+    QueuedReload,
+    /// Not cached anywhere: fall back (full inference or real pre-infer).
+    Miss,
+}
+
+/// Flow + per-tier counters exported to metrics.  The flow counters keep
+/// the historical names (`reloads_*`, `spills`, `dram_*`) — a reload is
+/// a promotion into HBM, a spill is a demotion out of it, and
+/// `dram_evictions` counts entries evicted out of the *last* tier, i.e.
+/// out of the hierarchy entirely.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HierarchyStats {
+    pub lookups: u64,
+    pub hbm_hits: u64,
+    /// Hits in any lower tier (historically: the DRAM tier).
+    pub dram_hits: u64,
+    pub misses: u64,
+    pub reloads_started: u64,
+    pub reloads_joined: u64,
+    pub reloads_queued: u64,
+    pub spills: u64,
+    pub spill_rejected: u64,
+    /// Entries evicted out of the last tier (left the hierarchy).
+    pub dram_evictions: u64,
+    /// Cascade moves from one lower tier into the next.
+    pub demotions: u64,
+    /// Per-lower-tier counters, top-down (level 1 first).
+    pub tiers: Vec<TierStats>,
+}
+
+impl HierarchyStats {
+    /// Accumulate another instance's counters (cluster-wide reporting);
+    /// tier vectors merge index-wise.
+    pub fn merge(&mut self, b: HierarchyStats) {
+        self.lookups += b.lookups;
+        self.hbm_hits += b.hbm_hits;
+        self.dram_hits += b.dram_hits;
+        self.misses += b.misses;
+        self.reloads_started += b.reloads_started;
+        self.reloads_joined += b.reloads_joined;
+        self.reloads_queued += b.reloads_queued;
+        self.spills += b.spills;
+        self.spill_rejected += b.spill_rejected;
+        self.dram_evictions += b.dram_evictions;
+        self.demotions += b.demotions;
+        if self.tiers.len() < b.tiers.len() {
+            self.tiers.resize(b.tiers.len(), TierStats::default());
+        }
+        for (a, t) in self.tiers.iter_mut().zip(b.tiers) {
+            a.merge(t);
+        }
+    }
+}
+
+/// Result of [`CacheHierarchy::complete_reload`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReloadDone {
+    /// Ranking requests that joined this reload instead of re-transferring.
+    pub joiners: u32,
+    /// Whether ψ was installed into HBM (false ⇒ HBM pressure; fall back).
+    pub installed: bool,
+    /// Next queued reload now permitted to start, if any.
+    pub next: Option<u64>,
+}
+
+/// The tiered cache hierarchy: one HBM lifecycle window over N policy
+/// tiers, plus the promotion/demotion flow state.
+#[derive(Debug)]
+pub struct CacheHierarchy<T> {
+    hbm: HbmCache<T>,
+    /// Lower tiers, top-down (level 1 = DRAM first).
+    lower: Vec<PolicyTier<T>>,
+    /// Users with a promotion in flight (single-flight) and join counts.
+    inflight: FxHashMap<u64, u32>,
+    /// Promotions waiting for a concurrency slot, FIFO.
+    queued: VecDeque<u64>,
+    active_reloads: usize,
+    max_reload_concurrency: usize,
+    stats: HierarchyStats,
+}
+
+impl<T: Clone> CacheHierarchy<T> {
+    /// `hbm_bytes` is the r1·HBM slice (Eq. 2); `tiers` the lower levels
+    /// top-down (empty = plain RelayGR without a compensation tier).
+    pub fn new(hbm_bytes: usize, tiers: &[TierConfig], max_reload_concurrency: usize) -> Self {
+        CacheHierarchy {
+            hbm: HbmCache::new(hbm_bytes),
+            lower: tiers.iter().map(|&c| PolicyTier::from_config(c)).collect(),
+            inflight: FxHashMap::default(),
+            queued: VecDeque::new(),
+            active_reloads: 0,
+            max_reload_concurrency: max_reload_concurrency.max(1),
+            stats: HierarchyStats::default(),
+        }
+    }
+
+    // ---- introspection -----------------------------------------------------
+
+    /// The level-0 lifecycle window (raw produce/consume lifecycle ops).
+    pub fn hbm(&self) -> &HbmCache<T> {
+        &self.hbm
+    }
+
+    pub fn hbm_mut(&mut self) -> &mut HbmCache<T> {
+        &mut self.hbm
+    }
+
+    /// Number of levels including HBM.
+    pub fn levels(&self) -> usize {
+        1 + self.lower.len()
+    }
+
+    /// Flow counters plus a per-lower-tier stats snapshot.
+    pub fn stats(&self) -> HierarchyStats {
+        let mut s = self.stats.clone();
+        s.tiers = self.lower.iter().map(|t| t.stats()).collect();
+        s
+    }
+
+    /// Bytes resident across all lower tiers.
+    pub fn dram_used_bytes(&self) -> usize {
+        self.lower.iter().map(|t| t.used_bytes()).sum()
+    }
+
+    /// Entries resident across all lower tiers.
+    pub fn dram_len(&self) -> usize {
+        self.lower.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn active_reloads(&self) -> usize {
+        self.active_reloads
+    }
+
+    pub fn inflight_for(&self, user: u64) -> bool {
+        self.inflight.contains_key(&user)
+    }
+
+    // ---- N-level lookup ----------------------------------------------------
+
+    /// The pseudo-pre-infer step fronting every ranking request (and also
+    /// used by real pre-infer signals to skip redundant recomputation).
+    pub fn pseudo_pre_infer(&mut self, user: u64, now: Micros) -> PseudoAction {
+        self.stats.lookups += 1;
+        match self.hbm.probe(user, now) {
+            Some(EntryState::Ready) | Some(EntryState::Consumed) => {
+                self.stats.hbm_hits += 1;
+                return PseudoAction::HbmHit;
+            }
+            Some(EntryState::Producing) => {
+                self.stats.hbm_hits += 1;
+                return PseudoAction::WaitProducing;
+            }
+            None => {}
+        }
+        // Single-flight: join any in-flight/queued promotion for this user.
+        if let Some(joiners) = self.inflight.get_mut(&user) {
+            *joiners += 1;
+            self.stats.reloads_joined += 1;
+            return PseudoAction::JoinReload;
+        }
+        // Lower tiers, top-down; the first hit promotes.
+        let mut found = None;
+        for tier in &mut self.lower {
+            if let Some((bytes, _)) = tier.get(user) {
+                tier.record_promotion();
+                found = Some(bytes);
+                break;
+            }
+        }
+        let Some(bytes) = found else {
+            self.stats.misses += 1;
+            return PseudoAction::Miss;
+        };
+        self.stats.dram_hits += 1;
+        self.inflight.insert(user, 0);
+        if self.active_reloads < self.max_reload_concurrency {
+            self.active_reloads += 1;
+            self.stats.reloads_started += 1;
+            PseudoAction::StartReload { bytes }
+        } else {
+            self.queued.push_back(user);
+            self.stats.reloads_queued += 1;
+            PseudoAction::QueuedReload
+        }
+    }
+
+    /// Read the payload backing a promotion the caller is about to
+    /// perform (the H2D reads this host copy).  Searches tiers top-down
+    /// *without* touching recency/frequency: the decision lookup already
+    /// happened in [`CacheHierarchy::pseudo_pre_infer`], and only the
+    /// live engine reads payloads — a mutating read here would make the
+    /// engines' eviction state diverge.
+    pub fn payload_below(&mut self, user: u64) -> Option<(usize, T)> {
+        self.lower.iter().find_map(|t| t.peek(user))
+    }
+
+    // ---- promotion (reload) ------------------------------------------------
+
+    /// The H2D finished: install ψ into HBM as Ready, release the
+    /// single-flight guard, and return (a) how many waiters were joined to
+    /// this reload and (b) the next queued user now allowed to start (the
+    /// caller begins its transfer).  The lower-tier copy stays resident
+    /// (promotion copies; the HBM window slides independently).
+    pub fn complete_reload(
+        &mut self,
+        user: u64,
+        payload: T,
+        bytes: usize,
+        now: Micros,
+        t_life_us: Micros,
+    ) -> ReloadDone {
+        let (joiners, next) = self.finish_reload(user);
+        let installed = self.hbm.insert_ready(user, bytes, payload, now, t_life_us).is_ok();
+        ReloadDone { joiners, installed, next }
+    }
+
+    /// Release single-flight/concurrency bookkeeping for a finished
+    /// promotion *without* touching HBM — used by the live engine, whose
+    /// HBM window holds device buffers while lower tiers hold host copies.
+    pub fn finish_reload(&mut self, user: u64) -> (u32, Option<u64>) {
+        let joiners = self.inflight.remove(&user).unwrap_or(0);
+        self.active_reloads = self.active_reloads.saturating_sub(1);
+        (joiners, self.pop_queued_reload())
+    }
+
+    /// Pull the next queued promotion if a concurrency slot is free.
+    /// Returns the user whose transfer should start now.
+    pub fn pop_queued_reload(&mut self) -> Option<u64> {
+        if self.active_reloads >= self.max_reload_concurrency {
+            return None;
+        }
+        let user = self.queued.pop_front()?;
+        self.active_reloads += 1;
+        self.stats.reloads_started += 1;
+        Some(user)
+    }
+
+    /// A promotion failed (e.g. the payload was evicted from its tier
+    /// mid-flight): release guards so waiters can fall back.
+    pub fn abort_reload(&mut self, user: u64) -> Option<u64> {
+        self.inflight.remove(&user);
+        self.active_reloads = self.active_reloads.saturating_sub(1);
+        self.pop_queued_reload()
+    }
+
+    // ---- demotion (spill) --------------------------------------------------
+
+    /// After ranking consumed ψ, demote it into level 1 for short-term
+    /// reuse.  Victims a tier evicts to make room cascade one level down;
+    /// entries evicted from the last tier leave the hierarchy.
+    pub fn spill(&mut self, user: u64, bytes: usize, payload: T) -> bool {
+        if self.lower.is_empty() {
+            self.stats.spill_rejected += 1;
+            return false;
+        }
+        // One copy per user below HBM: a stale copy left in a deeper
+        // tier by an earlier cascade would shadow capacity there.
+        for tier in &mut self.lower[1..] {
+            tier.remove_entry(user);
+        }
+        match self.lower[0].insert_evicting(user, bytes, payload, false) {
+            None => {
+                self.stats.spill_rejected += 1;
+                false
+            }
+            Some(evicted) => {
+                self.stats.spills += 1;
+                self.cascade(0, evicted);
+                true
+            }
+        }
+    }
+
+    /// Push a tier's eviction victims one level down (recursively).
+    fn cascade(&mut self, from: usize, evicted: Vec<(u64, usize, T)>) {
+        for (user, bytes, payload) in evicted {
+            let next = from + 1;
+            if next >= self.lower.len() {
+                self.stats.dram_evictions += 1;
+                continue;
+            }
+            match self.lower[next].insert_evicting(user, bytes, payload, true) {
+                Some(more) => {
+                    self.stats.demotions += 1;
+                    self.cascade(next, more);
+                }
+                // Too large for the deeper tier: it leaves the hierarchy.
+                None => self.stats.dram_evictions += 1,
+            }
+        }
+    }
+
+    /// Drop a user's lower-tier entries (e.g. behaviours were refreshed
+    /// upstream and the cached prefix is stale).
+    pub fn invalidate(&mut self, user: u64) -> bool {
+        let mut removed = false;
+        for tier in &mut self.lower {
+            removed |= tier.remove_entry(user).is_some();
+        }
+        removed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::tier::EvictPolicy;
+
+    const MB: usize = 1 << 20;
+
+    fn tier(cap_mb: usize, policy: EvictPolicy) -> TierConfig {
+        TierConfig::new(cap_mb * MB, policy)
+    }
+
+    fn setup(dram_mb: usize) -> CacheHierarchy<u32> {
+        CacheHierarchy::new(64 * MB, &[tier(dram_mb, EvictPolicy::Lru)], 2)
+    }
+
+    #[test]
+    fn two_level_lookup_order() {
+        let mut h = setup(512);
+        // Nothing anywhere → Miss.
+        assert_eq!(h.pseudo_pre_infer(1, 0), PseudoAction::Miss);
+        // In HBM → HbmHit (lower tiers not consulted).
+        h.hbm_mut().insert_ready(1, MB, 7, 0, 300_000).unwrap();
+        assert_eq!(h.pseudo_pre_infer(1, 0), PseudoAction::HbmHit);
+        // Only in DRAM → StartReload.
+        h.spill(2, MB, 9);
+        assert_eq!(h.pseudo_pre_infer(2, 0), PseudoAction::StartReload { bytes: MB });
+        let s = h.stats();
+        assert_eq!((s.misses, s.hbm_hits, s.dram_hits), (1, 1, 1));
+        assert_eq!(s.tiers.len(), 1);
+        assert_eq!(s.tiers[0].promotions, 1);
+    }
+
+    #[test]
+    fn wait_for_producing_entry() {
+        let mut h = setup(512);
+        h.hbm_mut().begin_produce(1, MB, 0, 300_000).unwrap();
+        assert_eq!(h.pseudo_pre_infer(1, 0), PseudoAction::WaitProducing);
+    }
+
+    #[test]
+    fn single_flight_joins_burst() {
+        // Out-of-order burst: three ranking requests for the same user
+        // arrive before the (delayed) real pre-infer. Exactly one reload.
+        let mut h = setup(512);
+        h.spill(5, 2 * MB, 42);
+        assert_eq!(h.pseudo_pre_infer(5, 0), PseudoAction::StartReload { bytes: 2 * MB });
+        assert_eq!(h.pseudo_pre_infer(5, 0), PseudoAction::JoinReload);
+        assert_eq!(h.pseudo_pre_infer(5, 0), PseudoAction::JoinReload);
+        let done = h.complete_reload(5, 42, 2 * MB, 10, 300_000);
+        assert_eq!(done.joiners, 2);
+        assert!(done.installed);
+        assert_eq!(done.next, None);
+        // Everyone now hits HBM; at-most-once reload per burst.
+        assert_eq!(h.pseudo_pre_infer(5, 0), PseudoAction::HbmHit);
+        assert_eq!(h.stats().reloads_started, 1);
+    }
+
+    #[test]
+    fn reload_concurrency_bounded_and_fifo() {
+        let mut h = setup(512);
+        for u in 1..=4u64 {
+            h.spill(u, MB, u as u32);
+        }
+        assert!(matches!(h.pseudo_pre_infer(1, 0), PseudoAction::StartReload { .. }));
+        assert!(matches!(h.pseudo_pre_infer(2, 0), PseudoAction::StartReload { .. }));
+        // Cap = 2: further reloads queue.
+        assert_eq!(h.pseudo_pre_infer(3, 0), PseudoAction::QueuedReload);
+        assert_eq!(h.pseudo_pre_infer(4, 0), PseudoAction::QueuedReload);
+        assert_eq!(h.active_reloads(), 2);
+        // Completing one grants the slot to user 3 (FIFO).
+        let done = h.complete_reload(1, 1, MB, 5, 300_000);
+        assert_eq!(done.next, Some(3));
+        assert_eq!(h.active_reloads(), 2);
+        let done = h.complete_reload(2, 2, MB, 6, 300_000);
+        assert_eq!(done.next, Some(4));
+    }
+
+    #[test]
+    fn spill_lru_eviction() {
+        let mut h: CacheHierarchy<u32> =
+            CacheHierarchy::new(64 * MB, &[tier(3, EvictPolicy::Lru)], 1);
+        h.spill(1, MB, 1);
+        h.spill(2, MB, 2);
+        h.spill(3, MB, 3);
+        // Touch 1 so 2 becomes LRU, then overflow.
+        assert!(matches!(h.pseudo_pre_infer(1, 0), PseudoAction::StartReload { .. }));
+        h.complete_reload(1, 1, MB, 0, 300_000);
+        h.spill(4, MB, 4);
+        assert_eq!(h.dram_len(), 3);
+        assert_eq!(h.stats().dram_evictions, 1);
+        // 2 was evicted; 3 and 4 remain.
+        assert!(h.payload_below(2).is_none());
+        assert!(h.payload_below(3).is_some());
+        assert!(h.payload_below(4).is_some());
+    }
+
+    #[test]
+    fn no_lower_tiers_always_misses_and_rejects_spills() {
+        let mut h: CacheHierarchy<u32> = CacheHierarchy::new(64 * MB, &[], 4);
+        assert_eq!(h.levels(), 1);
+        assert!(!h.spill(1, MB, 1));
+        assert_eq!(h.pseudo_pre_infer(1, 0), PseudoAction::Miss);
+        assert_eq!(h.stats().spill_rejected, 1);
+    }
+
+    #[test]
+    fn abort_releases_slot() {
+        let mut h: CacheHierarchy<u32> =
+            CacheHierarchy::new(64 * MB, &[tier(512, EvictPolicy::Lru)], 1);
+        h.spill(1, MB, 1);
+        h.spill(2, MB, 2);
+        assert!(matches!(h.pseudo_pre_infer(1, 0), PseudoAction::StartReload { .. }));
+        assert_eq!(h.pseudo_pre_infer(2, 0), PseudoAction::QueuedReload);
+        assert_eq!(h.abort_reload(1), Some(2));
+        assert_eq!(h.active_reloads(), 1);
+    }
+
+    #[test]
+    fn invalidate_removes_stale_prefix_from_every_tier() {
+        let mut h: CacheHierarchy<u32> = CacheHierarchy::new(
+            64 * MB,
+            &[tier(4, EvictPolicy::Lru), tier(512, EvictPolicy::Lru)],
+            2,
+        );
+        h.spill(9, MB, 1);
+        assert!(h.invalidate(9));
+        assert_eq!(h.pseudo_pre_infer(9, 0), PseudoAction::Miss);
+        assert!(!h.invalidate(9));
+    }
+
+    #[test]
+    fn eviction_cascades_down_the_stack() {
+        // Level 1 holds 2 MB, level 2 holds 8 MB: spilling a third entry
+        // demotes the level-1 victim down instead of dropping it.
+        let mut h: CacheHierarchy<u32> = CacheHierarchy::new(
+            64 * MB,
+            &[tier(2, EvictPolicy::Lru), tier(8, EvictPolicy::Lru)],
+            2,
+        );
+        h.spill(1, MB, 1);
+        h.spill(2, MB, 2);
+        h.spill(3, MB, 3); // evicts 1 from level 1 → demoted to level 2
+        let s = h.stats();
+        assert_eq!(s.demotions, 1);
+        assert_eq!(s.dram_evictions, 0);
+        assert_eq!(s.tiers[1].demotions_in, 1);
+        // The demoted entry is still promotable (found top-down).
+        assert_eq!(h.pseudo_pre_infer(1, 0), PseudoAction::StartReload { bytes: MB });
+        assert_eq!(s.tiers[0].evictions, 1);
+    }
+
+    #[test]
+    fn respill_removes_stale_deeper_copies() {
+        // A cascaded-down entry that is later re-spilled must hold
+        // exactly one copy below HBM — the deeper stale copy goes.
+        let mut h: CacheHierarchy<u32> = CacheHierarchy::new(
+            64 * MB,
+            &[tier(2, EvictPolicy::Lru), tier(8, EvictPolicy::Lru)],
+            2,
+        );
+        h.spill(1, MB, 1);
+        h.spill(2, MB, 2);
+        h.spill(3, MB, 3); // user 1 cascades to level 2
+        assert_eq!(h.dram_len(), 3);
+        // User 1 comes back (promotion copies; the tier-2 copy stays),
+        // is consumed, and re-spills into level 1.
+        assert!(matches!(h.pseudo_pre_infer(1, 0), PseudoAction::StartReload { .. }));
+        h.complete_reload(1, 1, MB, 0, 300_000);
+        h.hbm_mut().consume(1);
+        h.spill(1, MB, 1);
+        // Exactly one copy each of users 1, 2, 3 remains below HBM: 1
+        // re-entered level 1 (its stale level-2 copy was dropped), and
+        // the level-1 victim it displaced cascaded down.
+        assert_eq!(h.dram_len(), 3, "no shadowed duplicate below HBM");
+        assert_eq!(h.dram_used_bytes(), 3 * MB);
+        let s = h.stats();
+        assert_eq!(s.dram_evictions, 0, "nothing left the hierarchy");
+    }
+
+    #[test]
+    fn payload_reads_do_not_perturb_eviction_order() {
+        // payload_below backs the live engine's H2D reads; it must not
+        // refresh recency, or the engines' eviction decisions diverge.
+        let mut h: CacheHierarchy<u32> =
+            CacheHierarchy::new(64 * MB, &[tier(3, EvictPolicy::Lru)], 2);
+        h.spill(1, MB, 1);
+        h.spill(2, MB, 2);
+        h.spill(3, MB, 3);
+        // Repeated payload reads of the LRU entry...
+        for _ in 0..5 {
+            assert!(h.payload_below(1).is_some());
+        }
+        // ...must leave it the victim.
+        h.spill(4, MB, 4);
+        assert!(h.payload_below(1).is_none(), "peek must not have saved the LRU entry");
+        assert!(h.payload_below(2).is_some());
+    }
+
+    #[test]
+    fn last_tier_eviction_leaves_the_hierarchy() {
+        let mut h: CacheHierarchy<u32> = CacheHierarchy::new(
+            64 * MB,
+            &[tier(2, EvictPolicy::Lru), tier(2, EvictPolicy::Lru)],
+            2,
+        );
+        for u in 1..=5u64 {
+            h.spill(u, MB, u as u32);
+        }
+        // 5 spills through a 2+2 MB stack: one entry must have dropped out.
+        let s = h.stats();
+        assert_eq!(h.dram_len(), 4);
+        assert!(s.dram_evictions >= 1, "stack overflow must leave the hierarchy");
+        assert_eq!(s.spills, 5);
+    }
+
+    #[test]
+    fn cost_aware_tier_protects_expensive_entries() {
+        let mut h: CacheHierarchy<u32> =
+            CacheHierarchy::new(64 * MB, &[tier(8, EvictPolicy::CostAware)], 2);
+        h.spill(1, 4 * MB, 1);
+        // Reuse 1 twice: its retention weight is freq 3 × 4 MB = 12.
+        assert!(matches!(h.pseudo_pre_infer(1, 0), PseudoAction::StartReload { .. }));
+        h.complete_reload(1, 1, 4 * MB, 0, 300_000);
+        h.hbm_mut().consume(1);
+        h.hbm_mut().evict(1);
+        assert!(matches!(h.pseudo_pre_infer(1, 0), PseudoAction::StartReload { .. }));
+        h.complete_reload(1, 1, 4 * MB, 1, 300_000);
+        // Cold small entry: weight 1 × 1 MB = 1 → evicts first.
+        h.spill(2, MB, 2);
+        h.spill(3, 4 * MB, 3);
+        assert!(h.payload_below(1).is_some(), "hot expensive ψ survives");
+        assert!(h.payload_below(2).is_none(), "cold cheap ψ evicted first");
+    }
+
+    /// Property: random interleavings never issue concurrent reloads for
+    /// one user, never exceed the concurrency cap, and each burst causes
+    /// at most one transfer — with any eviction policy on the DRAM tier.
+    #[test]
+    fn prop_single_flight_and_bounded_concurrency() {
+        crate::util::prop::check("hierarchy-single-flight", 150, |rng| {
+            let cap = 1 + rng.range(0, 3);
+            let policy = *rng.choice(&[
+                EvictPolicy::Lru,
+                EvictPolicy::Lfu,
+                EvictPolicy::CostAware,
+                EvictPolicy::Lifecycle,
+            ]);
+            let mut h: CacheHierarchy<u32> =
+                CacheHierarchy::new(1 << 30, &[TierConfig::new(1 << 30, policy)], cap);
+            let users: Vec<u64> = (0..6).collect();
+            for &u in &users {
+                h.spill(u, MB, u as u32);
+            }
+            let mut inflight: Vec<u64> = Vec::new();
+            for step in 0..300 {
+                let u = *rng.choice(&users);
+                if rng.bernoulli(0.6) {
+                    match h.pseudo_pre_infer(u, 0) {
+                        PseudoAction::StartReload { .. } => {
+                            if inflight.contains(&u) {
+                                return Err(format!("step {step}: duplicate reload for {u}"));
+                            }
+                            inflight.push(u);
+                        }
+                        PseudoAction::QueuedReload => {}
+                        _ => {}
+                    }
+                } else if let Some(pos) =
+                    (!inflight.is_empty()).then(|| rng.range(0, inflight.len()))
+                {
+                    let u = inflight.remove(pos);
+                    let done = h.complete_reload(u, 0, MB, step as u64, 1 << 40);
+                    if let Some(next) = done.next {
+                        if inflight.contains(&next) {
+                            return Err("queued duplicate".into());
+                        }
+                        inflight.push(next);
+                    }
+                }
+                if h.active_reloads() > cap {
+                    return Err(format!("active {} > cap {cap}", h.active_reloads()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: whatever interleaving of lookups, spills, invalidations
+    /// and completions/aborts occurs, the promotion machinery never
+    /// wedges — every inflight user can always be resolved, aborting a
+    /// user whose backing entry vanished releases its slot to the queue,
+    /// and the queue drains to empty.
+    #[test]
+    fn prop_reload_abort_releases_waiters() {
+        crate::util::prop::check("hierarchy-abort-drains", 120, |rng| {
+            let cap = 1 + rng.range(0, 2);
+            let mut h: CacheHierarchy<u32> =
+                CacheHierarchy::new(1 << 30, &[TierConfig::new(64 * MB, EvictPolicy::Lru)], cap);
+            let users: Vec<u64> = (0..8).collect();
+            let mut inflight: Vec<u64> = Vec::new();
+            for step in 0..400 {
+                let u = *rng.choice(&users);
+                match rng.range(0, 5) {
+                    0 => {
+                        h.spill(u, MB, u as u32);
+                    }
+                    1 => {
+                        if let PseudoAction::StartReload { .. } = h.pseudo_pre_infer(u, 0) {
+                            inflight.push(u);
+                        }
+                    }
+                    // The backing entry vanishes mid-flight (stale
+                    // prefix / cascade eviction).
+                    2 => {
+                        h.invalidate(u);
+                    }
+                    // Driver grants a reload its turn: payload gone ⇒
+                    // abort, which must pass the slot on.
+                    _ => {
+                        if let Some(pos) =
+                            (!inflight.is_empty()).then(|| rng.range(0, inflight.len()))
+                        {
+                            let u = inflight.remove(pos);
+                            let next = if h.payload_below(u).is_some() {
+                                let done = h.complete_reload(u, 0, MB, step as u64, 1 << 40);
+                                done.next
+                            } else {
+                                h.abort_reload(u)
+                            };
+                            if h.inflight_for(u) {
+                                return Err(format!("step {step}: {u} stuck inflight"));
+                            }
+                            if let Some(n) = next {
+                                inflight.push(n);
+                            }
+                        }
+                    }
+                }
+                if h.active_reloads() > cap {
+                    return Err(format!("step {step}: cap exceeded"));
+                }
+            }
+            // Drain: resolving every remaining inflight/queued user must
+            // leave no guards behind.
+            while let Some(u) = inflight.pop() {
+                let next = if h.payload_below(u).is_some() {
+                    h.complete_reload(u, 0, MB, 0, 1 << 40).next
+                } else {
+                    h.abort_reload(u)
+                };
+                if let Some(n) = next {
+                    inflight.push(n);
+                }
+            }
+            if h.active_reloads() != 0 {
+                return Err("drain left active reloads".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -3,12 +3,38 @@
 //!
 //! * **admission** — [`trigger`]: the sequence-aware trigger (Eqs. 1–3),
 //! * **placement** — [`router`]: the affinity-aware consistent-hash router,
-//! * **local capacity extension** — [`expander`]: the memory-aware DRAM
-//!   tier with per-user single-flight and pseudo-pre-inference,
+//! * **memory** — [`tier`] + [`hierarchy`]: the tiered ψ cache hierarchy
+//!   generalising §3.4's memory-aware expander,
 //!
-//! over the [`hbm`] sliding-window lifecycle cache, with the [`pipeline`]
-//! cascade model and the [`baseline`] modes (inline full inference and the
-//! no-affinity remote-pool strawman).
+//! with the [`pipeline`] cascade model and the [`baseline`] modes (inline
+//! full inference and the no-affinity remote-pool strawman).
+//!
+//! ## The tier / hierarchy API
+//!
+//! Every level of the ψ memory hierarchy implements
+//! [`tier::CacheTier`] — capacity, lookup, insert, evict and a shared
+//! [`tier::TierStats`] counter block:
+//!
+//! * level 0 is the [`hbm::HbmCache`] sliding lifecycle window
+//!   ([`tier::EvictPolicy::Lifecycle`]),
+//! * every lower level is a [`tier::PolicyTier`] — a capacity-bounded
+//!   tier with pluggable eviction (`Lru` | `Lfu` | `CostAware` | FIFO
+//!   `Lifecycle`) behind an O(log n) ordered victim index.
+//!
+//! [`hierarchy::CacheHierarchy`] composes N levels into the flow that
+//! used to be hand-rolled for exactly two: N-level lookup
+//! (`pseudo_pre_infer`), per-user single-flight, bounded promotion
+//! (DRAM→HBM reload), and demotion (spill) with cascade — a tier's
+//! eviction victims drop one level down, and only last-tier victims
+//! leave the hierarchy.
+//!
+//! **Adding a level**: push another [`tier::TierConfig`] onto the stack
+//! (`--tier 8g:lru,500g:cost` on the CLIs, or `CoordinatorConfig::tiers`
+//! programmatically) — lookup, promotion, demotion, metrics and both
+//! engines pick it up with no other change.  **Adding a policy**: add an
+//! [`tier::EvictPolicy`] variant and its `order_key` arm in
+//! [`tier::PolicyTier`]; it becomes selectable everywhere via
+//! `--dram-policy` and comparable via `relaygr figure tiers`.
 //!
 //! All modules are clock-agnostic state machines (callers pass `now_us`).
 //! The [`coordinator`] composes them into the single per-request
@@ -21,16 +47,16 @@
 //! engine (`serve::engine`) are thin time/compute adapters over it: they
 //! translate coordinator actions into simulated or real durations and
 //! never make a caching/placement/admission decision themselves.  A new
-//! policy (richer cache tiers, alternative admission rules) is
-//! implemented once in the coordinator and both engines pick it up for
-//! free.
+//! policy (cache tiers, admission rules) is implemented once in the
+//! coordinator and both engines pick it up for free.
 
 pub mod baseline;
 pub mod coordinator;
-pub mod expander;
 pub mod hbm;
+pub mod hierarchy;
 pub mod pipeline;
 pub mod router;
+pub mod tier;
 pub mod trigger;
 
 pub use baseline::{Mode, RemotePool};
@@ -38,10 +64,11 @@ pub use coordinator::{
     Completion, CoordinatorConfig, QueuedReload, RankAction, RankCompute, RelayCoordinator,
     ReloadResolution, SignalAction, Stage,
 };
-pub use expander::{DramPolicy, Expander, ExpanderStats, PseudoAction};
 pub use hbm::{EntryState, HbmCache, HbmStats, InsertError, Micros};
+pub use hierarchy::{CacheHierarchy, HierarchyStats, PseudoAction, ReloadDone};
 pub use pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
 pub use router::{BalancePolicy, HashRing, Route, Router, RouterConfig, RouterStats};
+pub use tier::{CacheTier, DramPolicy, EvictPolicy, PolicyTier, TierConfig, TierStats};
 pub use trigger::{
     AdmissionLimits, BehaviorMeta, Decision, Trigger, TriggerConfig, TriggerStats,
 };

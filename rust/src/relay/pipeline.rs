@@ -84,7 +84,7 @@ pub enum CacheOutcome {
     FullInference,
     /// ψ consumed straight from HBM (relay race worked end-to-end).
     HbmHit,
-    /// ψ reloaded from server-local DRAM (expander hit).
+    /// ψ promoted from a lower cache tier (DRAM hit).
     DramHit,
     /// Joined an in-flight reload started by an earlier request.
     JoinedReload,

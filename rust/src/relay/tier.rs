@@ -1,0 +1,644 @@
+//! Generic cache-tier abstraction: every level of the ψ memory hierarchy
+//! (HBM sliding window, server-local DRAM, and any future level — CXL,
+//! SSD, a remote host pool behind a strict latency bound) presents the
+//! same shape: a byte-bounded map from user → ψ with a pluggable
+//! eviction policy and a shared [`TierStats`] counter block.
+//!
+//! Two implementations live in the crate today:
+//!
+//! * [`HbmCache`](crate::relay::hbm::HbmCache) — the level-0 lifecycle
+//!   tier ([`EvictPolicy::Lifecycle`]): entries live for one request
+//!   lifecycle T_life and the window slides past consumed/expired ones.
+//! * [`PolicyTier`] — the capacity-bounded lower tier used for DRAM (and
+//!   any deeper level), with LRU / LFU / cost-aware / FIFO eviction
+//!   behind an O(log n) ordered victim index — the previous DRAM tier
+//!   scanned all entries per eviction (O(n)), which melts the hot path
+//!   once the tier holds tens of thousands of ψ.
+//!
+//! [`CacheHierarchy`](crate::relay::hierarchy::CacheHierarchy) composes
+//! N tiers into the lookup → single-flight → bounded promotion →
+//! demotion flow.  To add a new *policy*, add an [`EvictPolicy`] variant
+//! and its arm in [`PolicyTier::order_key`]; to add a new *level*, push
+//! another [`TierConfig`] onto the stack — no other code changes.
+
+use std::collections::BTreeSet;
+
+use crate::util::fxhash::FxHashMap;
+
+pub use crate::relay::hbm::Micros;
+
+/// Per-tier eviction policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Sliding lifecycle window (HBM semantics): oldest-inserted first;
+    /// in a [`PolicyTier`] this degenerates to FIFO insertion order.
+    Lifecycle,
+    /// Least-recently-used.
+    Lru,
+    /// Least-frequently-used (ties broken by recency).
+    Lfu,
+    /// MTServe-style cost-aware: retention weight = reload cost (∝ ψ
+    /// bytes, the H2D transfer this tier saves) × reuse probability
+    /// (estimated by access frequency).  Small, rarely-reused entries
+    /// evict first; large hot ψ — the expensive ones to lose — stay.
+    CostAware,
+}
+
+impl EvictPolicy {
+    pub const NAMES: [&'static str; 4] = ["lifecycle", "lru", "lfu", "cost"];
+
+    pub fn parse(s: &str) -> Result<EvictPolicy, String> {
+        match s {
+            "lifecycle" | "fifo" => Ok(EvictPolicy::Lifecycle),
+            "lru" => Ok(EvictPolicy::Lru),
+            "lfu" => Ok(EvictPolicy::Lfu),
+            "cost" | "cost-aware" | "costaware" => Ok(EvictPolicy::CostAware),
+            other => Err(format!(
+                "unknown eviction policy '{other}' (available: {})",
+                EvictPolicy::NAMES.join(" | ")
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictPolicy::Lifecycle => "lifecycle",
+            EvictPolicy::Lru => "lru",
+            EvictPolicy::Lfu => "lfu",
+            EvictPolicy::CostAware => "cost",
+        }
+    }
+}
+
+/// Static description of one tier in a hierarchy stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierConfig {
+    pub capacity_bytes: usize,
+    pub policy: EvictPolicy,
+}
+
+impl TierConfig {
+    pub fn new(capacity_bytes: usize, policy: EvictPolicy) -> TierConfig {
+        TierConfig { capacity_bytes, policy }
+    }
+
+    /// `<size><g|m|b>:<policy>` in the `--tier` grammar — the largest
+    /// unit that divides the capacity exactly — so emitted configs
+    /// round-trip through the parser for every expressible size.
+    pub fn label(&self) -> String {
+        let (gib, mib) = (1usize << 30, 1usize << 20);
+        if self.capacity_bytes >= gib && self.capacity_bytes % gib == 0 {
+            format!("{}g:{}", self.capacity_bytes >> 30, self.policy.label())
+        } else if self.capacity_bytes >= mib && self.capacity_bytes % mib == 0 {
+            format!("{}m:{}", self.capacity_bytes >> 20, self.policy.label())
+        } else {
+            format!("{}b:{}", self.capacity_bytes, self.policy.label())
+        }
+    }
+}
+
+/// Capacity policy for the (single) DRAM tier as selected by the serving
+/// mode string (`relaygr` vs `relaygr+dram<N>g`).  Richer stacks are
+/// configured with explicit [`TierConfig`] lists (`--tier`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DramPolicy {
+    /// No DRAM tier (plain RelayGR, 0% DRAM hit).
+    Disabled,
+    /// Capacity-bounded tier (bytes); eviction policy is configured
+    /// separately (`--dram-policy`, default LRU).
+    Capacity(usize),
+}
+
+impl DramPolicy {
+    /// The tier stack this mode-level policy induces.
+    pub fn tier_stack(&self, policy: EvictPolicy) -> Vec<TierConfig> {
+        match *self {
+            DramPolicy::Disabled => Vec::new(),
+            DramPolicy::Capacity(bytes) => vec![TierConfig::new(bytes, policy)],
+        }
+    }
+}
+
+/// The counter block every tier exports, whatever its policy.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    pub inserts: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub rejected: u64,
+    /// Lookups that fed a promotion (reload) into the tier above.
+    pub promotions: u64,
+    /// Entries demoted into this tier from the tier above (cascade).
+    pub demotions_in: u64,
+}
+
+impl TierStats {
+    /// Accumulate another instance's counters (cluster-wide reporting).
+    pub fn merge(&mut self, b: TierStats) {
+        self.inserts += b.inserts;
+        self.hits += b.hits;
+        self.misses += b.misses;
+        self.evictions += b.evictions;
+        self.rejected += b.rejected;
+        self.promotions += b.promotions;
+        self.demotions_in += b.demotions_in;
+    }
+}
+
+/// What every level of the ψ hierarchy can do.  `t_life_us` is the
+/// lifecycle hint: the level-0 window enforces it as the entry deadline;
+/// capacity tiers (which are not lifecycle-bounded) ignore it.
+pub trait CacheTier<T> {
+    fn policy(&self) -> EvictPolicy;
+    fn capacity_bytes(&self) -> usize;
+    fn used_bytes(&self) -> usize;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn contains(&self, user: u64) -> bool;
+    /// Non-destructive lookup: refreshes recency/frequency and counts a
+    /// hit or miss.  Returns the entry size and a payload clone.
+    fn lookup(&mut self, user: u64, now: Micros) -> Option<(usize, T)>;
+    /// Insert (replacing any previous entry), evicting per policy to
+    /// fit.  Returns false if the entry cannot fit at all.
+    fn insert(&mut self, user: u64, bytes: usize, payload: T, now: Micros, t_life_us: Micros)
+        -> bool;
+    /// Explicitly evict one entry; true if it existed.
+    fn evict(&mut self, user: u64) -> bool;
+    fn tier_stats(&self) -> TierStats;
+}
+
+/// Victim-ordering key: (retention weight, recency tick, user).  The
+/// BTreeSet's smallest element is always the next victim, so eviction is
+/// O(log n) instead of a full scan.  Ticks are unique per tier, making
+/// victim selection deterministic across runs and engines.
+type OrdKey = (u64, u64, u64);
+
+#[derive(Debug)]
+struct TierEntry<T> {
+    bytes: usize,
+    payload: T,
+    /// Tick at insertion (FIFO order for [`EvictPolicy::Lifecycle`]).
+    inserted: u64,
+    /// Tick of the last touch (LRU order).
+    last_used: u64,
+    /// Access count since insertion (LFU / cost-aware reuse estimate).
+    freq: u64,
+    /// Current position in the victim index (must be removed before any
+    /// field it derives from changes).
+    key: OrdKey,
+}
+
+/// A capacity-bounded cache tier with pluggable eviction, used for every
+/// level below the HBM window.
+#[derive(Debug)]
+pub struct PolicyTier<T> {
+    policy: EvictPolicy,
+    capacity: usize,
+    used: usize,
+    entries: FxHashMap<u64, TierEntry<T>>,
+    /// Ordered victim index; smallest key evicts first.
+    index: BTreeSet<OrdKey>,
+    tick: u64,
+    stats: TierStats,
+}
+
+impl<T> PolicyTier<T> {
+    pub fn new(capacity_bytes: usize, policy: EvictPolicy) -> Self {
+        PolicyTier {
+            policy,
+            capacity: capacity_bytes,
+            used: 0,
+            entries: FxHashMap::default(),
+            index: BTreeSet::new(),
+            tick: 0,
+            stats: TierStats::default(),
+        }
+    }
+
+    pub fn from_config(cfg: TierConfig) -> Self {
+        PolicyTier::new(cfg.capacity_bytes, cfg.policy)
+    }
+
+    pub fn policy(&self) -> EvictPolicy {
+        self.policy
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, user: u64) -> bool {
+        self.entries.contains_key(&user)
+    }
+
+    pub fn stats(&self) -> TierStats {
+        self.stats
+    }
+
+    /// The hierarchy notes that a hit in this tier started a promotion.
+    pub(crate) fn record_promotion(&mut self) {
+        self.stats.promotions += 1;
+    }
+
+    fn order_key(policy: EvictPolicy, e: &TierEntry<T>, user: u64) -> OrdKey {
+        match policy {
+            EvictPolicy::Lifecycle => (0, e.inserted, user),
+            EvictPolicy::Lru => (0, e.last_used, user),
+            EvictPolicy::Lfu => (e.freq, e.last_used, user),
+            // Retention weight = reload cost (ψ MB) × reuse estimate
+            // (access count); integer arithmetic keeps victim order
+            // exactly reproducible across engines.
+            EvictPolicy::CostAware => {
+                (e.freq.saturating_mul(((e.bytes >> 20) as u64).max(1)), e.last_used, user)
+            }
+        }
+    }
+
+    fn reindex(&mut self, user: u64) {
+        // Entry fields changed: refresh its victim-index position.
+        let policy = self.policy;
+        if let Some(e) = self.entries.get_mut(&user) {
+            self.index.remove(&e.key);
+            e.key = Self::order_key(policy, e, user);
+            self.index.insert(e.key);
+        }
+    }
+
+    /// Remove one entry, returning its size and payload.
+    pub fn remove_entry(&mut self, user: u64) -> Option<(usize, T)> {
+        let e = self.entries.remove(&user)?;
+        self.index.remove(&e.key);
+        self.used -= e.bytes;
+        Some((e.bytes, e.payload))
+    }
+
+    /// Insert (replacing any previous entry), evicting per policy to fit.
+    /// Returns the evicted victims — `(user, bytes, payload)` — so the
+    /// hierarchy can demote them one level down, or `None` when the
+    /// entry is larger than the whole tier (rejected).  `demoted` marks
+    /// inserts that are themselves cascade demotions from the tier above.
+    pub fn insert_evicting(
+        &mut self,
+        user: u64,
+        bytes: usize,
+        payload: T,
+        demoted: bool,
+    ) -> Option<Vec<(u64, usize, T)>> {
+        if bytes > self.capacity {
+            self.stats.rejected += 1;
+            return None;
+        }
+        self.remove_entry(user);
+        let mut evicted = Vec::new();
+        while self.used + bytes > self.capacity {
+            let &victim_key = self.index.first().expect("used > 0 implies a victim");
+            let victim = victim_key.2;
+            let (vbytes, vpayload) = self.remove_entry(victim).expect("indexed entry exists");
+            self.stats.evictions += 1;
+            evicted.push((victim, vbytes, vpayload));
+        }
+        self.tick += 1;
+        let mut e = TierEntry {
+            bytes,
+            payload,
+            inserted: self.tick,
+            last_used: self.tick,
+            freq: 1,
+            key: (0, 0, 0),
+        };
+        e.key = Self::order_key(self.policy, &e, user);
+        self.index.insert(e.key);
+        self.entries.insert(user, e);
+        self.used += bytes;
+        self.stats.inserts += 1;
+        if demoted {
+            self.stats.demotions_in += 1;
+        }
+        Some(evicted)
+    }
+
+    /// Read an entry without touching recency/frequency or counters —
+    /// for payload reads backing an already-decided promotion.  Decision
+    /// lookups go through [`PolicyTier::get`] so both engines perturb
+    /// eviction state identically.
+    pub fn peek(&self, user: u64) -> Option<(usize, T)>
+    where
+        T: Clone,
+    {
+        self.entries.get(&user).map(|e| (e.bytes, e.payload.clone()))
+    }
+
+    /// Lookup with recency/frequency refresh and hit/miss accounting.
+    pub fn get(&mut self, user: u64) -> Option<(usize, T)>
+    where
+        T: Clone,
+    {
+        self.tick += 1;
+        let t = self.tick;
+        if !self.entries.contains_key(&user) {
+            self.stats.misses += 1;
+            return None;
+        }
+        {
+            let e = self.entries.get_mut(&user).expect("present");
+            e.last_used = t;
+            e.freq += 1;
+        }
+        self.reindex(user);
+        self.stats.hits += 1;
+        let e = &self.entries[&user];
+        Some((e.bytes, e.payload.clone()))
+    }
+}
+
+impl<T: Clone> CacheTier<T> for PolicyTier<T> {
+    fn policy(&self) -> EvictPolicy {
+        PolicyTier::policy(self)
+    }
+
+    fn capacity_bytes(&self) -> usize {
+        PolicyTier::capacity_bytes(self)
+    }
+
+    fn used_bytes(&self) -> usize {
+        PolicyTier::used_bytes(self)
+    }
+
+    fn len(&self) -> usize {
+        PolicyTier::len(self)
+    }
+
+    fn contains(&self, user: u64) -> bool {
+        PolicyTier::contains(self, user)
+    }
+
+    fn lookup(&mut self, user: u64, _now: Micros) -> Option<(usize, T)> {
+        self.get(user)
+    }
+
+    fn insert(
+        &mut self,
+        user: u64,
+        bytes: usize,
+        payload: T,
+        _now: Micros,
+        _t_life_us: Micros,
+    ) -> bool {
+        self.insert_evicting(user, bytes, payload, false).is_some()
+    }
+
+    fn evict(&mut self, user: u64) -> bool {
+        self.remove_entry(user).is_some()
+    }
+
+    fn tier_stats(&self) -> TierStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::hbm::HbmCache;
+
+    const MB: usize = 1 << 20;
+
+    fn tier(cap_mb: usize, policy: EvictPolicy) -> PolicyTier<u32> {
+        PolicyTier::new(cap_mb * MB, policy)
+    }
+
+    #[test]
+    fn policy_parsing_round_trips() {
+        for name in EvictPolicy::NAMES {
+            assert_eq!(EvictPolicy::parse(name).unwrap().label(), name);
+        }
+        assert_eq!(EvictPolicy::parse("cost-aware").unwrap(), EvictPolicy::CostAware);
+        assert_eq!(EvictPolicy::parse("fifo").unwrap(), EvictPolicy::Lifecycle);
+        assert!(EvictPolicy::parse("mru").is_err());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut t = tier(3, EvictPolicy::Lru);
+        for u in 1..=3u64 {
+            t.insert_evicting(u, MB, u as u32, false).unwrap();
+        }
+        t.get(1); // 2 is now LRU
+        let evicted = t.insert_evicting(4, MB, 4, false).unwrap();
+        assert_eq!(evicted.iter().map(|&(u, _, _)| u).collect::<Vec<_>>(), vec![2]);
+        assert!(t.contains(1) && t.contains(3) && t.contains(4));
+        assert_eq!(t.stats().evictions, 1);
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequently_used() {
+        let mut t = tier(3, EvictPolicy::Lfu);
+        for u in 1..=3u64 {
+            t.insert_evicting(u, MB, u as u32, false).unwrap();
+        }
+        // 1 and 3 get extra touches; 2 stays at freq 1 (insert only).
+        t.get(1);
+        t.get(1);
+        t.get(3);
+        let evicted = t.insert_evicting(4, MB, 4, false).unwrap();
+        assert_eq!(evicted.iter().map(|&(u, _, _)| u).collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn lifecycle_is_fifo_regardless_of_touches() {
+        let mut t = tier(3, EvictPolicy::Lifecycle);
+        for u in 1..=3u64 {
+            t.insert_evicting(u, MB, u as u32, false).unwrap();
+        }
+        t.get(1); // recency must NOT save the oldest insert
+        let evicted = t.insert_evicting(4, MB, 4, false).unwrap();
+        assert_eq!(evicted.iter().map(|&(u, _, _)| u).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn cost_aware_keeps_expensive_hot_entries() {
+        let mut t = tier(8, EvictPolicy::CostAware);
+        // Big, frequently reused ψ (expensive reload × likely reuse).
+        t.insert_evicting(1, 4 * MB, 1, false).unwrap();
+        t.get(1);
+        t.get(1);
+        // Small cold ψ: cheap to reload, never reused after insert.
+        t.insert_evicting(2, MB, 2, false).unwrap();
+        // Medium entry, one reuse.
+        t.insert_evicting(3, 2 * MB, 3, false).unwrap();
+        t.get(3);
+        // Overflow: weight(1)=3*4=12, weight(2)=1*1=1, weight(3)=2*2=4.
+        let evicted = t.insert_evicting(4, 3 * MB, 4, false).unwrap();
+        assert_eq!(evicted.iter().map(|&(u, _, _)| u).collect::<Vec<_>>(), vec![2]);
+        assert!(t.contains(1) && t.contains(3) && t.contains(4));
+    }
+
+    #[test]
+    fn oversized_insert_rejected() {
+        let mut t = tier(2, EvictPolicy::Lru);
+        assert!(t.insert_evicting(1, 3 * MB, 1, false).is_none());
+        assert_eq!(t.stats().rejected, 1);
+        assert_eq!(t.used_bytes(), 0);
+    }
+
+    #[test]
+    fn replacement_updates_byte_accounting() {
+        let mut t = tier(8, EvictPolicy::Lru);
+        t.insert_evicting(1, 2 * MB, 1, false).unwrap();
+        t.insert_evicting(1, 5 * MB, 2, false).unwrap();
+        assert_eq!(t.used_bytes(), 5 * MB);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(1).unwrap().1, 2);
+    }
+
+    #[test]
+    fn demoted_inserts_counted() {
+        let mut t = tier(4, EvictPolicy::Lru);
+        t.insert_evicting(1, MB, 1, true).unwrap();
+        t.insert_evicting(2, MB, 2, false).unwrap();
+        let s = t.stats();
+        assert_eq!((s.inserts, s.demotions_in), (2, 1));
+    }
+
+    /// Both tier implementations behave identically through the trait:
+    /// insert → contains → lookup hit → evict → lookup miss.
+    fn exercise_tier<C: CacheTier<u32>>(t: &mut C) {
+        assert!(t.insert(7, MB, 42, 0, 1_000_000));
+        assert!(t.contains(7));
+        assert_eq!(t.lookup(7, 0), Some((MB, 42)));
+        assert!(t.evict(7));
+        assert!(!t.contains(7));
+        assert_eq!(t.lookup(7, 0), None);
+        let s = t.tier_stats();
+        assert!(s.inserts >= 1 && s.hits >= 1 && s.misses >= 1);
+    }
+
+    #[test]
+    fn trait_unifies_hbm_and_policy_tiers() {
+        let mut hbm: HbmCache<u32> = HbmCache::new(64 * MB);
+        exercise_tier(&mut hbm);
+        assert_eq!(CacheTier::<u32>::policy(&hbm), EvictPolicy::Lifecycle);
+        for p in [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::CostAware] {
+            let mut t = tier(64, p);
+            exercise_tier(&mut t);
+            assert_eq!(CacheTier::<u32>::policy(&t), p);
+        }
+    }
+
+    /// Property: the ordered-index tier agrees with a naive min-scan
+    /// reference model on every eviction decision, for every policy,
+    /// under random operation sequences — the O(log n) index is a pure
+    /// perf change.
+    #[test]
+    fn prop_index_matches_min_scan_reference() {
+        #[derive(Clone)]
+        struct RefEntry {
+            bytes: usize,
+            inserted: u64,
+            last_used: u64,
+            freq: u64,
+        }
+        crate::util::prop::check("tier-index-vs-scan", 120, |rng| {
+            let policy = *rng.choice(&[
+                EvictPolicy::Lifecycle,
+                EvictPolicy::Lru,
+                EvictPolicy::Lfu,
+                EvictPolicy::CostAware,
+            ]);
+            let cap = (2 + rng.range(0, 14)) * MB;
+            let mut t: PolicyTier<u32> = PolicyTier::new(cap, policy);
+            let mut model: std::collections::BTreeMap<u64, RefEntry> =
+                std::collections::BTreeMap::new();
+            let mut used = 0usize;
+            let mut tick = 0u64;
+            let key = |e: &RefEntry, u: u64| match policy {
+                EvictPolicy::Lifecycle => (0, e.inserted, u),
+                EvictPolicy::Lru => (0, e.last_used, u),
+                EvictPolicy::Lfu => (e.freq, e.last_used, u),
+                EvictPolicy::CostAware => {
+                    (e.freq.saturating_mul(((e.bytes >> 20) as u64).max(1)), e.last_used, u)
+                }
+            };
+            for step in 0..300 {
+                let user = rng.range_u64(10);
+                if rng.bernoulli(0.5) {
+                    let bytes = (1 + rng.range(0, 4)) * MB;
+                    let real = t.insert_evicting(user, bytes, 0, false);
+                    if bytes > cap {
+                        if real.is_some() {
+                            return Err(format!("step {step}: oversized insert accepted"));
+                        }
+                        continue;
+                    }
+                    // Mirror in the model: replace, then evict min-key.
+                    if let Some(old) = model.remove(&user) {
+                        used -= old.bytes;
+                    }
+                    let mut evicted_model = Vec::new();
+                    while used + bytes > cap {
+                        let victim = model
+                            .iter()
+                            .min_by_key(|(&u, e)| key(e, u))
+                            .map(|(&u, _)| u)
+                            .expect("model victim");
+                        used -= model.remove(&victim).unwrap().bytes;
+                        evicted_model.push(victim);
+                    }
+                    tick += 1;
+                    model.insert(
+                        user,
+                        RefEntry { bytes, inserted: tick, last_used: tick, freq: 1 },
+                    );
+                    used += bytes;
+                    let evicted_real: Vec<u64> =
+                        real.unwrap().iter().map(|&(u, _, _)| u).collect();
+                    if evicted_real != evicted_model {
+                        return Err(format!(
+                            "step {step} ({policy:?}): victims {evicted_real:?} vs model {evicted_model:?}"
+                        ));
+                    }
+                } else {
+                    let real = t.get(user).is_some();
+                    tick += 1;
+                    let modeled = if let Some(e) = model.get_mut(&user) {
+                        e.last_used = tick;
+                        e.freq += 1;
+                        true
+                    } else {
+                        false
+                    };
+                    if real != modeled {
+                        return Err(format!("step {step}: hit mismatch for {user}"));
+                    }
+                }
+                if t.used_bytes() != used || t.len() != model.len() {
+                    return Err(format!(
+                        "step {step}: accounting drift ({} vs {used} bytes, {} vs {} entries)",
+                        t.used_bytes(),
+                        t.len(),
+                        model.len()
+                    ));
+                }
+                if t.used_bytes() > cap {
+                    return Err("capacity exceeded".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -6,7 +6,7 @@
 //! and `execute_rank_cached` feeds it straight back into the rank
 //! executable via `execute_b` — the in-HBM residency of the paper's
 //! relay race, with no host round-trip on the ranking critical path.
-//! Spilling to the expander's DRAM tier is an explicit `to_host` /
+//! Spilling to the hierarchy's DRAM tier is an explicit `to_host` /
 //! `from_host` pair, mirroring the D2H/H2D cost the paper accounts for.
 //!
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥0.5
@@ -47,7 +47,7 @@ unsafe impl Send for KvBuffer {}
 unsafe impl Sync for KvBuffer {}
 
 impl KvBuffer {
-    /// D2H: copy ψ to host memory (expander spill).
+    /// D2H: copy ψ to host memory (hierarchy spill).
     pub fn to_host(&self) -> Result<Vec<f32>> {
         let lit = self.buf.to_literal_sync()?;
         Ok(lit.to_vec::<f32>()?)
@@ -137,7 +137,7 @@ impl LoadedModel {
         Ok(lit.to_vec::<f32>()?)
     }
 
-    /// H2D: re-materialise a spilled ψ on device (expander reload).
+    /// H2D: re-materialise a spilled ψ on device (hierarchy reload).
     pub fn kv_from_host(&self, data: &[f32]) -> Result<KvBuffer> {
         let spec = &self.artifact.inputs[0];
         if data.len() != spec.elements() {

@@ -6,6 +6,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config;
 use crate::metrics::OUTCOME_NAMES;
+use crate::relay::tier::TierConfig;
 use crate::runtime::Manifest;
 use crate::serve::engine::{LiveCluster, LiveConfig};
 use crate::util::cli::Args;
@@ -29,6 +30,12 @@ pub fn run(args: &Args) -> Result<()> {
     cfg.m_slots = args.get_usize("slots", cfg.m_slots)?;
     cfg.stage_scale = args.get_f64("stage-scale", cfg.stage_scale)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if let Some(p) = args.get("dram-policy") {
+        cfg.dram_policy = config::parse_policy(p)?;
+    }
+    if let Some(t) = args.get("tier") {
+        cfg.tiers = Some(config::parse_tiers(t)?);
+    }
 
     let scenario = match args.get("scenario") {
         Some(s) => ScenarioKind::parse(s).map_err(|e| anyhow!(e))?,
@@ -49,12 +56,19 @@ pub fn run(args: &Args) -> Result<()> {
         ..Default::default()
     };
 
+    let tier_desc = cfg
+        .tier_stack()
+        .iter()
+        .map(TierConfig::label)
+        .collect::<Vec<_>>()
+        .join(",");
     println!(
-        "serving {} on {} instance(s) × {} slot(s), mode {}, scenario {}, qps {}, {}s",
+        "serving {} on {} instance(s) × {} slot(s), mode {}, tiers [{}], scenario {}, qps {}, {}s",
         spec.name(),
         cfg.n_instances,
         cfg.m_slots,
         mode.label(),
+        if tier_desc.is_empty() { "hbm-only" } else { &tier_desc },
         wl.scenario.label(),
         wl.qps,
         wl.duration_us / 1_000_000
@@ -97,6 +111,9 @@ pub fn run(args: &Args) -> Result<()> {
         m.pipeline_slo_us / 1e3,
         m.mean_util(None) * 100.0
     );
+    for line in m.tier_report() {
+        println!("  {line}");
+    }
     cluster.shutdown();
     Ok(())
 }

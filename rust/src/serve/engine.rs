@@ -24,9 +24,9 @@ use crate::relay::baseline::Mode;
 use crate::relay::coordinator::{
     CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, SignalAction, Stage,
 };
-use crate::relay::expander::DramPolicy;
 use crate::relay::pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
 use crate::relay::router::RouterConfig;
+use crate::relay::tier::{EvictPolicy, TierConfig};
 use crate::relay::trigger::{BehaviorMeta, TriggerConfig};
 use crate::runtime::{synth_embedding, Engine, FnKind, KvBuffer, LoadedModel};
 use crate::util::rng::Rng;
@@ -56,6 +56,11 @@ pub struct LiveConfig {
     pub stage_scale: f64,
     /// Wait budget for ψ production before falling back (µs).
     pub wait_budget_us: u64,
+    /// Eviction policy for the mode-selected DRAM tier (`--dram-policy`).
+    pub dram_policy: EvictPolicy,
+    /// Explicit lower-tier stack override (`--tier`); `None` derives a
+    /// single tier from the serving mode's DRAM capacity.
+    pub tiers: Option<Vec<TierConfig>>,
     pub seed: u64,
 }
 
@@ -73,17 +78,21 @@ impl LiveConfig {
             pipeline: PipelineConfig::default(),
             stage_scale: 1.0,
             wait_budget_us: 200_000,
+            dram_policy: EvictPolicy::Lru,
+            tiers: None,
             seed: 42,
         }
+    }
+
+    /// The lower-tier stack this deployment induces (see
+    /// [`Mode::tier_stack`] for the precedence rule).
+    pub fn tier_stack(&self) -> Vec<TierConfig> {
+        self.mode.tier_stack(self.dram_policy, self.tiers.as_deref())
     }
 
     /// The coordinator configuration this deployment shape induces.
     pub fn coordinator_config(&self) -> CoordinatorConfig {
         let is_baseline = matches!(self.mode, Mode::Baseline);
-        let dram = match self.mode {
-            Mode::RelayGr { dram } => dram,
-            _ => DramPolicy::Disabled,
-        };
         let spec = self.spec;
         CoordinatorConfig {
             mode: self.mode,
@@ -112,7 +121,7 @@ impl LiveConfig {
                 r2: 0.5,
                 n_instances: self.n_instances,
             },
-            dram,
+            tiers: self.tier_stack(),
             long_threshold: self.long_threshold,
             t_life_us: self.pipeline.t_life_us,
             max_reload_concurrency: self.max_reload_concurrency,
@@ -552,7 +561,7 @@ impl LiveCluster {
             let coord = self.shared.coord.lock().unwrap();
             m.special_instances = coord.special_instances().to_vec();
             m.hbm = coord.hbm_stats();
-            m.expander = coord.expander_stats();
+            m.hierarchy = coord.hierarchy_stats();
             m.trigger = coord.trigger_stats();
         }
         Ok(m)

@@ -128,7 +128,7 @@ fn push_with_refreshes(
     out.push(GenRequest { id: *id, arrival_us: arrival, user, prefix_len, is_refresh: false });
     *id += 1;
     // Rapid-refresh bursts: same user again shortly after — the
-    // short-term cross-request reuse the expander targets.
+    // short-term cross-request reuse the DRAM tier targets.
     if prefix_len > cfg.long_threshold && rng.bernoulli(cfg.refresh_prob) {
         let burst = 1 + rng.range(0, cfg.refresh_burst_max);
         let mut rt = arrival;

@@ -8,9 +8,11 @@
 
 use relaygr::cluster::{run_sim, SimConfig};
 use relaygr::relay::baseline::Mode;
-use relaygr::relay::coordinator::{RankAction, RelayCoordinator, SignalAction, Stage};
-use relaygr::relay::expander::DramPolicy;
+use relaygr::relay::coordinator::{
+    QueuedReload, RankAction, RelayCoordinator, SignalAction, Stage,
+};
 use relaygr::relay::pipeline::CacheOutcome;
+use relaygr::relay::tier::{DramPolicy, EvictPolicy, TierConfig};
 use relaygr::workload::{generate, GenRequest, WorkloadConfig};
 
 /// Serialized reference driver: each request runs start-to-finish with an
@@ -143,6 +145,167 @@ fn sim_and_serial_driver_agree_on_service_class() {
         "refresh traffic must exercise the DRAM tier");
 }
 
+/// Non-default eviction policies flow through the same coordinator: for
+/// every policy the simulator and the serialized reference must agree on
+/// the per-request service class, and the DRAM tier must actually bind
+/// (small capacity ⇒ evictions occur, so the policy's victim choices are
+/// on the decision path of both engines).
+#[test]
+fn engines_agree_under_nondefault_eviction_policies() {
+    fn class(o: CacheOutcome) -> &'static str {
+        match o {
+            CacheOutcome::FullInference => "full",
+            CacheOutcome::HbmHit | CacheOutcome::DramHit | CacheOutcome::JoinedReload => {
+                "cached"
+            }
+            CacheOutcome::Fallback => "fallback",
+        }
+    }
+    let wl = workload(true);
+    for policy in [EvictPolicy::Lfu, EvictPolicy::CostAware, EvictPolicy::Lifecycle] {
+        // 2 GB over ~32 MB ψ entries: the tier holds ~64 users, far
+        // fewer than the trace touches — eviction decisions matter.
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(2 << 30) });
+        cfg.dram_policy = policy;
+        let sim_log = sim_outcomes(&cfg, &wl);
+        let coord: RelayCoordinator<()> =
+            RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator()).unwrap();
+        let spec = cfg.spec;
+        let serial = drive_serial(coord, &generate(&wl), |p| spec.kv_bytes_for(p));
+        assert_eq!(sim_log.len(), serial.len(), "{policy:?}: trace length");
+        for (&(id, a), &(_, b)) in sim_log.iter().zip(&serial) {
+            assert_eq!(
+                class(a),
+                class(b),
+                "policy {policy:?}, request {id}: sim {a:?} vs serial {b:?}"
+            );
+        }
+        assert!(
+            sim_log
+                .iter()
+                .any(|&(_, o)| matches!(o, CacheOutcome::DramHit | CacheOutcome::JoinedReload)),
+            "{policy:?}: DRAM tier unused"
+        );
+    }
+}
+
+/// Satellite: the coordinator's reload-abort path, driven event by event
+/// — a queued promotion whose DRAM entry is evicted mid-flight must
+/// abort via `begin_queued_reload`, its joined waiters must fall back,
+/// and the freed slot must pass on.  Exact per-request outcomes are
+/// asserted (the host completes instantly, so there is no timing slack).
+#[test]
+fn coordinator_reload_abort_falls_back_joined_waiters() {
+    let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 40) });
+    cfg.max_reload_concurrency = 1; // force the second reload to queue
+    let mut coord: RelayCoordinator<()> =
+        RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator()).unwrap();
+    let kv = |p: usize| cfg.spec.kv_bytes_for(p);
+
+    // Seed DRAM for a set of users via full relay cycles, keeping the two
+    // that landed on the same special instance (affinity-hashed).
+    let mut seeded: Vec<(u64, usize)> = Vec::new();
+    for user in 0..32u64 {
+        let req = user + 1;
+        let t = user * 50_000; // spaced so admission rate limits never bind
+        assert!(coord.on_arrival(t, req, user, 4096));
+        if let SignalAction::Produce { instance, user, .. } = coord.on_trigger_check(t, req) {
+            coord.on_psi_ready(t, instance, user, Some(()));
+        }
+        coord.on_stage_done(t, req, Stage::Preproc).unwrap();
+        let _ = coord.on_rank_start(t, req);
+        let _ = coord.rank_compute(t, req);
+        let done = coord.on_rank_done(t, req, kv(4096));
+        if let Some(bytes) = done.spill {
+            if coord.complete_spill(done.instance, done.user, bytes, ()) {
+                seeded.push((user, done.instance));
+            }
+        }
+    }
+    let (inst, (a, b)) = seeded
+        .iter()
+        .find_map(|&(a, ia)| {
+            seeded.iter().find(|&&(b, ib)| b != a && ib == ia).map(|&(b, _)| (ia, (a, b)))
+        })
+        .expect("two seeded users share a special instance");
+
+    // Two racing rank requests (pre-infer delayed, §3.4 out-of-order):
+    // A starts the only reload slot, B queues behind it.
+    let (ra, rb) = (1000u64, 1001u64);
+    let now = 2_000_000;
+    assert!(coord.on_arrival(now, ra, a, 4096));
+    assert!(coord.on_arrival(now, rb, b, 4096));
+    assert_eq!(coord.on_stage_done(now, ra, Stage::Preproc), Some(inst));
+    assert_eq!(coord.on_stage_done(now, rb, Stage::Preproc), Some(inst));
+    let RankAction::StartReload { bytes } = coord.on_rank_start(now, ra) else {
+        panic!("A must start the reload");
+    };
+    assert_eq!(coord.on_rank_start(now, rb), RankAction::WaitReload, "B queues behind A");
+
+    // B's DRAM entry is evicted mid-flight (stale prefix).
+    assert!(coord.invalidate_user(inst, b));
+
+    // A's H2D completes: A wakes, and the freed slot grants B its turn —
+    // whose payload is gone, so the reload aborts and B falls back.
+    let res = coord.on_reload_done(now + 1_000, inst, a, Some(()), bytes);
+    assert!(res.installed);
+    assert_eq!(res.woken, vec![ra]);
+    assert_eq!(res.next, Some(b));
+    match coord.begin_queued_reload(now + 1_000, inst, b) {
+        QueuedReload::Aborted { woken, next } => {
+            assert_eq!(woken, vec![rb], "joined waiter must be released");
+            assert_eq!(next, None);
+        }
+        other => panic!("expected abort for evicted payload, got {other:?}"),
+    }
+    assert!(coord.wait_resolved(ra) && coord.wait_resolved(rb));
+
+    let _ = coord.rank_compute(now + 2_000, ra);
+    let _ = coord.rank_compute(now + 2_000, rb);
+    let da = coord.on_rank_done(now + 2_000, ra, kv(4096));
+    let db = coord.on_rank_done(now + 2_000, rb, kv(4096));
+    assert_eq!(da.outcome, CacheOutcome::DramHit, "A's promotion succeeded");
+    assert_eq!(db.outcome, CacheOutcome::Fallback, "B must fall back, never fetch remotely");
+    assert!(!db.cached);
+    assert!((db.wait_us - 1_000.0).abs() < 1e-9, "B waited from rank start to the abort");
+}
+
+/// The same abort path when the H2D itself fails (`payload = None`):
+/// waiters fall back instead of wedging.
+#[test]
+fn coordinator_failed_reload_payload_falls_back() {
+    let cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 40) });
+    let mut coord: RelayCoordinator<()> =
+        RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator()).unwrap();
+    let kv = cfg.spec.kv_bytes_for(4096);
+
+    // Seed one user's DRAM entry.
+    assert!(coord.on_arrival(0, 1, 7, 4096));
+    if let SignalAction::Produce { instance, user, .. } = coord.on_trigger_check(0, 1) {
+        coord.on_psi_ready(0, instance, user, Some(()));
+    }
+    coord.on_stage_done(0, 1, Stage::Preproc).unwrap();
+    let _ = coord.on_rank_start(0, 1);
+    let _ = coord.rank_compute(0, 1);
+    let done = coord.on_rank_done(0, 1, kv);
+    let inst = done.instance;
+    assert!(coord.complete_spill(inst, 7, done.spill.expect("fresh ψ spills"), ()));
+
+    // A refresh rank request starts the reload; the transfer fails.
+    assert!(coord.on_arrival(400_000, 2, 7, 4096));
+    coord.on_stage_done(400_000, 2, Stage::Preproc).unwrap();
+    let RankAction::StartReload { bytes } = coord.on_rank_start(400_000, 2) else {
+        panic!("expected reload");
+    };
+    let res = coord.on_reload_done(400_500, inst, 7, None, bytes);
+    assert!(!res.installed);
+    assert_eq!(res.woken, vec![2]);
+    let rc = coord.rank_compute(400_500, 2);
+    assert!(!rc.cached && rc.payload.is_none());
+    let d = coord.on_rank_done(400_500, 2, kv);
+    assert_eq!(d.outcome, CacheOutcome::Fallback);
+}
+
 /// The real thing, when artifacts exist: a 1-instance, 1-slot live engine
 /// (stage sleeps scaled to ~0, generous wait budget) serves a seeded
 /// all-long trace; its per-request outcomes must equal the serialized
@@ -165,6 +328,12 @@ fn live_engine_matches_serial_reference() {
         .min_by_key(|s| s.prefix_len * s.dim * s.layers)
         .unwrap();
     let mut cfg = LiveConfig::new(&dir, spec, Mode::RelayGr { dram: DramPolicy::Disabled });
+    // Non-default policy on the tier stack: a cost-aware tier too small
+    // to accept any ψ, so every spill is rejected deterministically in
+    // both engines (wall-clock reload races would otherwise make exact
+    // per-request equality timing-dependent) while the hierarchy + policy
+    // code path stays on the live decision flow.
+    cfg.tiers = Some(vec![TierConfig::new(1, EvictPolicy::CostAware)]);
     cfg.n_instances = 1;
     cfg.m_slots = 1; // FIFO worker: production always precedes ranking
     cfg.hbm_bytes = 4 << 30; // ample footprint: admission never binds

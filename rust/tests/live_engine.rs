@@ -2,7 +2,7 @@
 //! relay-race correctness under concurrency, fallback safety, DRAM reuse.
 
 use relaygr::relay::baseline::Mode;
-use relaygr::relay::expander::DramPolicy;
+use relaygr::relay::tier::DramPolicy;
 use relaygr::runtime::Manifest;
 use relaygr::serve::{LiveCluster, LiveConfig};
 use relaygr::util::rng::Rng;

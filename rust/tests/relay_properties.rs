@@ -4,9 +4,10 @@
 
 use relaygr::cluster::{run_sim, SimConfig};
 use relaygr::relay::baseline::Mode;
-use relaygr::relay::expander::{DramPolicy, Expander, PseudoAction};
-use relaygr::relay::hbm::{EntryState, HbmCache};
+use relaygr::relay::hbm::EntryState;
+use relaygr::relay::hierarchy::{CacheHierarchy, PseudoAction};
 use relaygr::relay::router::{Router, RouterConfig};
+use relaygr::relay::tier::{DramPolicy, EvictPolicy, TierConfig};
 use relaygr::relay::trigger::{BehaviorMeta, Decision, Trigger, TriggerConfig};
 use relaygr::util::prop;
 use relaygr::util::rng::Rng;
@@ -14,9 +15,11 @@ use relaygr::workload::{generate, user_prefix_len, GenRequest, ScenarioKind, Wor
 
 const MB: usize = 1 << 20;
 
-/// The full admission→produce→route→consume→spill→reload cycle under
-/// random interleavings never double-reloads, never overcommits HBM, and
-/// always leaves the trigger's live count consistent.
+/// The full admission→produce→route→consume→spill→reload cycle — with
+/// mid-flight invalidations forcing the reload-abort path — under random
+/// interleavings never double-reloads, never overcommits HBM, never
+/// exceeds the promotion cap, and never leaves an aborted user's
+/// single-flight guard behind.
 #[test]
 fn prop_full_relay_cycle_consistent() {
     prop::check("relay-full-cycle", 60, |rng: &mut Rng| {
@@ -24,8 +27,9 @@ fn prop_full_relay_cycle_consistent() {
         cfg.kv_p99_bytes = 32 * MB;
         cfg.q_m = 1e9;
         let mut trigger = Trigger::new(cfg, Box::new(|_: &BehaviorMeta| 1e9));
-        let mut hbm: HbmCache<u32> = HbmCache::new(512 * MB);
-        let mut ex: Expander<u32> = Expander::new(DramPolicy::Capacity(1 << 30), 2);
+        let policy = *rng.choice(&[EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::CostAware]);
+        let mut cache: CacheHierarchy<u32> =
+            CacheHierarchy::new(512 * MB, &[TierConfig::new(1 << 30, policy)], 2);
         let mut router = Router::new(RouterConfig::default()).unwrap();
         let mut now = 0u64;
         let mut producing: Vec<u64> = Vec::new();
@@ -33,7 +37,7 @@ fn prop_full_relay_cycle_consistent() {
         for step in 0..400 {
             now += rng.range(0, 30_000) as u64;
             let user = rng.range_u64(12);
-            match rng.range(0, 5) {
+            match rng.range(0, 6) {
                 // Admission + signal-side pseudo pre-infer.
                 0 => {
                     let meta = BehaviorMeta { user, prefix_len: 4096, dim: 256 };
@@ -45,9 +49,13 @@ fn prop_full_relay_cycle_consistent() {
                         if r1.instance != r2.instance {
                             return Err(format!("step {step}: affinity broken"));
                         }
-                        match ex.pseudo_pre_infer(user, &mut hbm, now) {
+                        match cache.pseudo_pre_infer(user, now) {
                             PseudoAction::Miss => {
-                                if hbm.begin_produce(user, 32 * MB, now, 300_000).is_ok() {
+                                if cache
+                                    .hbm_mut()
+                                    .begin_produce(user, 32 * MB, now, 300_000)
+                                    .is_ok()
+                                {
                                     producing.push(user);
                                 } else {
                                     trigger.release();
@@ -63,42 +71,56 @@ fn prop_full_relay_cycle_consistent() {
                     if let Some(i) = (!producing.is_empty()).then(|| rng.range(0, producing.len()))
                     {
                         let u = producing.remove(i);
-                        if !hbm.complete_produce(u, 1) {
+                        if !cache.hbm_mut().complete_produce(u, 1) {
                             trigger.release(); // lost work
                         }
                     }
                 }
-                // Reload completes.
+                // Reload resolves: complete when the backing copy is
+                // still there, abort when it was invalidated mid-flight
+                // (the engine's `begin_queued_reload` abort path).
                 2 => {
                     if let Some(i) = (!reloading.is_empty()).then(|| rng.range(0, reloading.len()))
                     {
                         let u = reloading.remove(i);
-                        let done = ex.complete_reload(u, 1, 32 * MB, now, 300_000, &mut hbm);
-                        if let Some(next) = done.next {
+                        let next = if cache.payload_below(u).is_some() {
+                            cache.complete_reload(u, 1, 32 * MB, now, 300_000).next
+                        } else {
+                            cache.abort_reload(u)
+                        };
+                        if cache.inflight_for(u) {
+                            return Err(format!("step {step}: {u} kept its guard"));
+                        }
+                        if let Some(next) = next {
                             reloading.push(next);
                         }
                     }
                 }
                 // Ranking consumes + spills.
                 3 => {
-                    if hbm.state_of(user) == Some(EntryState::Ready) {
-                        hbm.consume(user).ok_or("ready entry must consume")?;
+                    if cache.hbm().state_of(user) == Some(EntryState::Ready) {
+                        cache.hbm_mut().consume(user).ok_or("ready entry must consume")?;
                         trigger.release();
-                        if ex.spill(user, 32 * MB, 1) {
-                            hbm.evict(user);
+                        if cache.spill(user, 32 * MB, 1) {
+                            cache.hbm_mut().evict(user);
                         }
                     }
                 }
+                // Behaviours refreshed upstream: lower-tier entry dropped
+                // even while a reload for it may be in flight.
+                4 => {
+                    cache.invalidate(user);
+                }
                 // Rank-side pseudo check (may start a reload).
-                _ => match ex.pseudo_pre_infer(user, &mut hbm, now) {
+                _ => match cache.pseudo_pre_infer(user, now) {
                     PseudoAction::StartReload { .. } => reloading.push(user),
                     _ => {}
                 },
             }
-            if hbm.used_bytes() > hbm.capacity_bytes() {
+            if cache.hbm().used_bytes() > cache.hbm().capacity_bytes() {
                 return Err("HBM overcommitted".into());
             }
-            if ex.active_reloads() > 2 {
+            if cache.active_reloads() > 2 {
                 return Err("reload concurrency cap violated".into());
             }
             let mut sorted = reloading.clone();
@@ -107,6 +129,20 @@ fn prop_full_relay_cycle_consistent() {
             if sorted.len() != reloading.len() {
                 return Err("duplicate in-flight reload for one user".into());
             }
+        }
+        // Drain every pending reload: the guards and slots must all clear.
+        while let Some(u) = reloading.pop() {
+            let next = if cache.payload_below(u).is_some() {
+                cache.complete_reload(u, 1, 32 * MB, now, 300_000).next
+            } else {
+                cache.abort_reload(u)
+            };
+            if let Some(n) = next {
+                reloading.push(n);
+            }
+        }
+        if cache.active_reloads() != 0 {
+            return Err("drain left promotion slots held".into());
         }
         Ok(())
     });
@@ -384,5 +420,5 @@ fn dram_capacity_monotonicity() {
         big.dram_hit_rate(),
         small.dram_hit_rate()
     );
-    assert!(small.expander.dram_evictions >= big.expander.dram_evictions);
+    assert!(small.hierarchy.dram_evictions >= big.hierarchy.dram_evictions);
 }

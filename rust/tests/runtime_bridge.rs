@@ -72,7 +72,7 @@ fn kv_buffer_survives_spill_and_reload_exactly() {
 
     let kv = prefix_m.execute_to_device(&[&prefix]).unwrap();
     let direct = rank_m.execute_with_kv(&kv, &[&incr, &items]).unwrap();
-    // D2H spill → H2D reload (the expander's DRAM round trip).
+    // D2H spill → H2D reload (the hierarchy's DRAM round trip).
     let host = kv.to_host().unwrap();
     assert_eq!(host.len(), kv.elements);
     let kv2 = rank_m.kv_from_host(&host).unwrap();

@@ -4,7 +4,7 @@
 use relaygr::cluster::{run_sim, SimConfig};
 use relaygr::metrics::slo;
 use relaygr::relay::baseline::Mode;
-use relaygr::relay::expander::DramPolicy;
+use relaygr::relay::tier::DramPolicy;
 use relaygr::workload::WorkloadConfig;
 
 fn wl(len: usize, qps: f64) -> WorkloadConfig {
