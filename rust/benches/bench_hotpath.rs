@@ -135,7 +135,7 @@ fn main() {
             id += 1;
             now += 700;
             let user = id % 1024;
-            if coord.on_arrival(now, id, user, 4096) {
+            if coord.on_arrival(now, id, user, 4096, &[]) {
                 match coord.on_trigger_check(now, id) {
                     SignalAction::Produce { instance, user, .. } => {
                         coord.on_psi_ready(now, instance, user, Some(()));

@@ -1,0 +1,113 @@
+//! Candidate-segment cache hot-path microbenchmarks: the per-candidate
+//! acquire/release cycle (the coordinator runs it once per candidate per
+//! rank pass, so its budget is sub-microsecond), churn under capacity
+//! pressure, Zipf-mixed traffic, and the full coordinator decision flow
+//! with segment planning enabled.  Emits `BENCH_segments.json` so the
+//! segment hot path joins the recorded perf trajectory.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_results};
+use relaygr::relay::segment::{SegmentAction, SegmentKey, SegmentStore};
+use relaygr::relay::tier::DramPolicy;
+use relaygr::util::rng::Rng;
+
+fn main() {
+    let mut results = Vec::new();
+    let mut rng = Rng::new(11);
+    const SEG: usize = 16 << 10;
+
+    // --- steady-state reuse: everything resident --------------------------
+    let mut hot: SegmentStore<u32> = SegmentStore::new(1 << 30, &[], 1 << 40, SEG);
+    for item in 0..512u64 {
+        let k = SegmentKey::new(item, 0).packed();
+        let SegmentAction::Produce { ticket } = hot.acquire(k, 0) else {
+            panic!("fresh store must produce");
+        };
+        hot.complete(k, ticket, 0);
+        hot.release(k);
+    }
+    let mut i = 0u64;
+    results.push(bench("segment/acquire_release_hit", 100, 50_000, || {
+        i += 1;
+        let k = SegmentKey::new(i % 512, 0).packed();
+        hot.acquire(k, i);
+        hot.release(k);
+    }));
+
+    // --- churn: small partition, rotating keys, constant eviction ---------
+    let mut churn: SegmentStore<u32> = SegmentStore::new(256 * SEG, &[], 1 << 40, SEG);
+    let mut u = 0u64;
+    results.push(bench("segment/produce_churn_evicting", 100, 50_000, || {
+        u += 1;
+        let k = SegmentKey::new(u, 0).packed();
+        if let SegmentAction::Produce { ticket } = churn.acquire(k, u) {
+            churn.complete(k, ticket, 0);
+        }
+        churn.release(k);
+    }));
+
+    // --- zipf mix: hot reuse + cold production (the serving shape) --------
+    let mut mix: SegmentStore<u32> = SegmentStore::new(1 << 28, &[], 1 << 40, SEG);
+    let items: Vec<u64> = (0..4096).map(|_| rng.zipf(100_000, 1.1) - 1).collect();
+    let mut t = 0u64;
+    let mut j = 0usize;
+    results.push(bench("segment/zipf_mix_acquire", 100, 50_000, || {
+        t += 1;
+        j = (j + 1) & 4095;
+        let k = SegmentKey::new(items[j], 0).packed();
+        if let SegmentAction::Produce { ticket } = mix.acquire(k, t) {
+            mix.complete(k, ticket, 0);
+        }
+        mix.release(k);
+    }));
+
+    // --- coordinator decision flow with segment planning enabled ----------
+    {
+        use relaygr::relay::coordinator::{RankAction, RelayCoordinator, SignalAction, Stage};
+        let mut sim_cfg = relaygr::cluster::SimConfig::standard(
+            relaygr::relay::baseline::Mode::RelayGr { dram: DramPolicy::Capacity(64 << 30) },
+        );
+        sim_cfg.segment_frac = 0.25;
+        let mut coord: RelayCoordinator<()> =
+            RelayCoordinator::new(sim_cfg.coordinator_config(), |_| sim_cfg.estimator())
+                .expect("coordinator builds");
+        // 64 candidates per request, Zipf-skewed like the workload engine.
+        let cands: Vec<Vec<u64>> = (0..256)
+            .map(|_| (0..64).map(|_| rng.zipf(100_000, 1.1) - 1).collect())
+            .collect();
+        let kv = 32usize << 20;
+        let mut id = 0u64;
+        let mut now = 0u64;
+        results.push(bench("coordinator/decision_flow_with_segments", 50, 20_000, || {
+            id += 1;
+            now += 700;
+            let user = id % 1024;
+            if coord.on_arrival(now, id, user, 4096, &cands[(id & 255) as usize]) {
+                match coord.on_trigger_check(now, id) {
+                    SignalAction::Produce { instance, user, .. } => {
+                        coord.on_psi_ready(now, instance, user, Some(()));
+                    }
+                    SignalAction::Reload { instance, user, bytes } => {
+                        coord.on_reload_done(now, instance, user, Some(()), bytes);
+                    }
+                    SignalAction::None => {}
+                }
+            }
+            let inst = coord
+                .on_stage_done(now, id, Stage::Preproc)
+                .expect("rank instance routed");
+            if let RankAction::StartReload { bytes } = coord.on_rank_start(now, id) {
+                coord.on_reload_done(now, inst, user, Some(()), bytes);
+            }
+            let _ = coord.rank_compute(now, id);
+            let done = coord.on_rank_done(now, id, kv);
+            if let Some(bytes) = done.spill {
+                coord.complete_spill(done.instance, done.user, bytes, ());
+            }
+        }));
+    }
+
+    write_results("segments", &results);
+}

@@ -2,10 +2,14 @@
 //! standing in for the paper's Ascend testbed (see DESIGN.md
 //! §Substitutions).  Queueing, affinity, admission and cache lifecycle
 //! run through the exact `relay::*` state machines; only raw execution
-//! durations come from the calibrated cost model.
+//! durations come from the calibrated cost model.  [`reference`] is the
+//! timing-free serialized engine the simulator (and live engine) are
+//! pinned against.
 
+pub mod reference;
 pub mod sim;
 
+pub use reference::{drive_reference, run_reference, ReferenceRun};
 pub use sim::{run_sim, Sim, SimConfig};
 
 #[cfg(test)]

@@ -1,0 +1,120 @@
+//! The serialized reference engine: every request runs start-to-finish
+//! against the shared [`RelayCoordinator`] with an instantly-completing
+//! host (productions, reloads and spills take zero time), using the
+//! request's arrival time as the clock.
+//!
+//! This is the third decision engine next to the discrete-event
+//! simulator and the live threaded engine — the one with *no* timing at
+//! all, so any divergence from it is a genuine policy difference.  It is
+//! shared by `relaygr figure tiers`/`figure segments` and by
+//! `tests/cross_engine.rs`, which pin the simulator (and, with
+//! artifacts, the live engine) against it.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::SimConfig;
+use crate::metrics::outcome_index;
+use crate::relay::coordinator::{RankAction, RelayCoordinator, SignalAction, Stage};
+use crate::relay::hbm::HbmStats;
+use crate::relay::hierarchy::HierarchyStats;
+use crate::relay::pipeline::CacheOutcome;
+use crate::relay::segment::SegmentStats;
+use crate::workload::{candidate_set, generate, GenRequest, WorkloadConfig};
+
+/// One serialized run: per-request outcomes (sorted by request id), the
+/// analytic rank-compute cost summed over the coordinator's decisions
+/// (the reference engine has no clock, so its "rank time" is the cost
+/// model evaluated on what the coordinator decided), and the cache-plane
+/// counters.
+pub struct ReferenceRun {
+    pub outcomes: Vec<(u64, CacheOutcome)>,
+    pub outcome_counts: [u64; 5],
+    pub mean_rank_us: f64,
+    pub segments: SegmentStats,
+    pub hierarchy: HierarchyStats,
+    pub hbm: HbmStats,
+}
+
+/// Drive `trace` through `coord` serially.  `rank_cost` receives
+/// `(cached, prefix_len, segments_skipped)` per request; candidate sets
+/// come from the same workload derivation the other engines share.
+pub fn drive_reference(
+    mut coord: RelayCoordinator<()>,
+    trace: &[GenRequest],
+    wl: &WorkloadConfig,
+    kv_bytes: impl Fn(usize) -> usize,
+    rank_cost: impl Fn(bool, usize, usize) -> f64,
+) -> Result<ReferenceRun> {
+    let mut outcomes = Vec::with_capacity(trace.len());
+    let mut outcome_counts = [0u64; 5];
+    let mut rank_us_sum = 0.0;
+    for req in trace {
+        let now = req.arrival_us;
+        let cands = if coord.segments_enabled() { candidate_set(wl, req) } else { Vec::new() };
+        if coord.on_arrival(now, req.id, req.user, req.prefix_len, &cands) {
+            match coord.on_trigger_check(now, req.id) {
+                SignalAction::Produce { instance, user, .. } => {
+                    coord.on_psi_ready(now, instance, user, Some(()));
+                }
+                SignalAction::Reload { instance, user, bytes } => {
+                    coord.on_reload_done(now, instance, user, Some(()), bytes);
+                }
+                SignalAction::None => {}
+            }
+        }
+        coord.on_stage_done(now, req.id, Stage::Retrieval);
+        let inst = coord
+            .on_stage_done(now, req.id, Stage::Preproc)
+            .expect("preproc resolves the ranking instance");
+        match coord.on_rank_start(now, req.id) {
+            RankAction::Proceed { .. } => {}
+            RankAction::StartReload { bytes } => {
+                coord.on_reload_done(now, inst, req.user, Some(()), bytes);
+            }
+            // With an instantly-completing host nothing can be pending; a
+            // wait here means a coordinator invariant broke — fail rather
+            // than report decisions from an unresolved request.
+            other => bail!("serialized driver saw {other:?} for request {}", req.id),
+        }
+        let rc = coord.rank_compute(now, req.id);
+        let skipped = rc.segments.map(|p| p.skipped()).unwrap_or(0);
+        rank_us_sum += rank_cost(rc.cached, req.prefix_len, skipped);
+        let done = coord.on_rank_done(now, req.id, kv_bytes(req.prefix_len));
+        if let Some(bytes) = done.spill {
+            coord.complete_spill(done.instance, done.user, bytes, ());
+        }
+        outcome_counts[outcome_index(done.outcome)] += 1;
+        outcomes.push((req.id, done.outcome));
+    }
+    outcomes.sort_by_key(|&(id, _)| id);
+    Ok(ReferenceRun {
+        mean_rank_us: rank_us_sum / trace.len().max(1) as f64,
+        segments: coord.segment_stats(),
+        hierarchy: coord.hierarchy_stats(),
+        hbm: coord.hbm_stats(),
+        outcomes,
+        outcome_counts,
+    })
+}
+
+/// Convenience: serialized run of `cfg`'s coordinator over `wl`'s trace,
+/// pricing rank compute with `cfg`'s hardware cost model.
+pub fn run_reference(cfg: &SimConfig, wl: &WorkloadConfig) -> Result<ReferenceRun> {
+    let coord: RelayCoordinator<()> =
+        RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator())?;
+    let spec = cfg.spec;
+    let hw = cfg.hw.clone();
+    drive_reference(
+        coord,
+        &generate(wl),
+        wl,
+        |p| spec.kv_bytes_for(p),
+        move |cached, p, skipped| {
+            if cached {
+                hw.rank_cached_reuse_us(&spec, p, skipped)
+            } else {
+                hw.rank_full_reuse_us(&spec, p, skipped)
+            }
+        },
+    )
+}

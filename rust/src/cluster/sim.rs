@@ -31,6 +31,7 @@ use crate::relay::coordinator::{
 };
 use crate::relay::pipeline::{Lifecycle, PipelineConfig, StageSampler};
 use crate::relay::router::RouterConfig;
+use crate::relay::segment::SegmentConfig;
 use crate::relay::tier::{EvictPolicy, TierConfig};
 use crate::relay::trigger::{BehaviorMeta, TriggerConfig};
 use crate::util::rng::Rng;
@@ -65,6 +66,11 @@ pub struct SimConfig {
     /// Explicit lower-tier stack override (`--tier`); `None` derives a
     /// single tier from the serving mode's DRAM capacity.
     pub tiers: Option<Vec<TierConfig>>,
+    /// Fraction of the r1·HBM slice carved out for the candidate-segment
+    /// cache (`--segment-cache`; 0 = disabled, PR 2-identical).
+    pub segment_frac: f64,
+    /// Staleness bound for cached candidate segments.
+    pub seg_ttl_us: u64,
     /// Record the per-request `(id, CacheOutcome)` log in [`RunMetrics`]
     /// (cross-engine equivalence tests; off by default — it grows with
     /// the trace).
@@ -100,12 +106,20 @@ impl SimConfig {
             kv_p99_prefix: 8192,
             dram_policy: EvictPolicy::Lru,
             tiers: None,
+            segment_frac: 0.0,
+            seg_ttl_us: 3_000_000,
             log_outcomes: false,
             seed: 7,
         }
     }
 
     fn trigger_config(&self) -> TriggerConfig {
+        // Admission keeps planning against the full r1 slice even when a
+        // segment partition is carved out of it: the ψ window enforces
+        // its (smaller) budget locally, so overcommit under pressure
+        // degrades to the handled fallback path instead of silently
+        // changing admission behaviour between reuse-on and reuse-off
+        // runs — the segment plane must never perturb ψ decisions.
         TriggerConfig {
             rank_p99_budget_us: self.pipeline.rank_budget_us,
             headroom: 0.8,
@@ -140,6 +154,13 @@ impl SimConfig {
             hbm_bytes: (self.r1 * self.hw.hbm_bytes as f64) as usize,
             dim: self.spec.dim,
             kv_bytes: Box::new(move |prefix_len| spec.kv_bytes_for(prefix_len)),
+            segment: SegmentConfig {
+                frac: self.segment_frac,
+                ttl_us: self.seg_ttl_us,
+                seg_bytes: self.spec.segment_bytes(),
+                version: 0,
+                tiers: Vec::new(),
+            },
         }
     }
 
@@ -222,6 +243,8 @@ struct PreJob {
 /// The simulator.
 pub struct Sim {
     cfg: SimConfig,
+    /// Workload shape kept for lazy per-request candidate derivation.
+    workload: WorkloadConfig,
     trace: Vec<GenRequest>,
     coord: RelayCoordinator<()>,
     /// Per-instance NPU model-slot FIFOs and busy time.
@@ -264,6 +287,7 @@ impl Sim {
         Ok(Sim {
             rng: Rng::new(cfg.seed),
             cfg,
+            workload: workload.clone(),
             trace,
             coord,
             slots,
@@ -308,6 +332,7 @@ impl Sim {
         self.metrics.hbm = self.coord.hbm_stats();
         self.metrics.hierarchy = self.coord.hierarchy_stats();
         self.metrics.trigger = self.coord.trigger_stats();
+        self.metrics.segments = self.coord.segment_stats();
         self.metrics.sim_duration_us = self.end_us;
         self.metrics
     }
@@ -350,7 +375,14 @@ impl Sim {
                 rank_start: 0,
             },
         );
-        let wants_trigger = self.coord.on_arrival(now, gen.id, gen.user, gen.prefix_len);
+        // Candidate sets are only materialised when segment reuse is on
+        // (request-keyed RNG stream: never perturbs the arrival trace).
+        let cands = if self.coord.segments_enabled() {
+            crate::workload::candidate_set(&self.workload, &gen)
+        } else {
+            Vec::new()
+        };
+        let wants_trigger = self.coord.on_arrival(now, gen.id, gen.user, gen.prefix_len, &cands);
         let dur = self.retrieval.sample(&mut self.rng);
         self.push(now + dur as u64, Ev::RetrievalDone(gen.id));
         if wants_trigger {
@@ -527,12 +559,16 @@ impl Sim {
             let st = &self.states[&req];
             (st.rank_instance, st.gen.prefix_len)
         };
-        // Consume ψ at execution start.
+        // Consume ψ at execution start; segments the plan reuses (or
+        // joins — the producer's execution pays) trim the rank compute.
+        // With reuse off `skipped` is 0 and the costs are bit-identical
+        // to the unsplit model.
         let rc = self.coord.rank_compute(now, req);
+        let skipped = rc.segments.map(|p| p.skipped()).unwrap_or(0);
         let dur = if rc.cached {
-            self.cfg.hw.rank_cached_us(&self.cfg.spec, prefix_len)
+            self.cfg.hw.rank_cached_reuse_us(&self.cfg.spec, prefix_len, skipped)
         } else {
-            self.cfg.hw.rank_full_us(&self.cfg.spec, prefix_len)
+            self.cfg.hw.rank_full_reuse_us(&self.cfg.spec, prefix_len, skipped)
         };
         let (_, end) = alloc(&mut self.slots[inst], now, dur);
         self.busy_us[inst] += dur;

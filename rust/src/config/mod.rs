@@ -63,6 +63,30 @@ pub fn parse_tiers(s: &str) -> Result<Vec<TierConfig>> {
     Ok(tiers)
 }
 
+/// Parse + validate the `--segment-cache` fraction — shared by the sim,
+/// serve and figure CLIs so they agree on the accepted range (the
+/// coordinator clamps defensively, but a silently clamped experiment
+/// parameter is a mislabeled experiment).
+pub fn parse_segment_frac(args: &Args, default: f64) -> Result<f64> {
+    let frac = args.get_f64("segment-cache", default)?;
+    if !(0.0..=0.9).contains(&frac) {
+        bail!("--segment-cache must be in [0, 0.9], got {frac}");
+    }
+    Ok(frac)
+}
+
+/// Apply the candidate-set flags (`--zipf`, `--cands`, `--catalog`) with
+/// validation — shared by every CLI that builds a workload.
+pub fn apply_candidate_flags(args: &Args, wl: &mut WorkloadConfig) -> Result<()> {
+    wl.cand_zipf_s = args.get_f64("zipf", wl.cand_zipf_s)?;
+    if wl.cand_zipf_s <= 0.0 {
+        bail!("--zipf must be > 0, got {}", wl.cand_zipf_s);
+    }
+    wl.cand_per_request = args.get_usize("cands", wl.cand_per_request)?;
+    wl.cand_catalog = args.get_u64("catalog", wl.cand_catalog)?;
+    Ok(())
+}
+
 /// Apply a JSON object onto a [`ModelSpec`].
 fn spec_from_json(mut spec: ModelSpec, j: &Json) -> Result<ModelSpec> {
     if let Some(v) = j.get("model_type").and_then(Json::as_usize) {
@@ -129,6 +153,9 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
         if let Some(v) = j.get("tiers").and_then(Json::as_str) {
             cfg.tiers = Some(parse_tiers(v)?);
         }
+        if let Some(v) = j.get("segment_cache").and_then(Json::as_f64) {
+            cfg.segment_frac = v;
+        }
     }
     // CLI overrides.
     if let Some(hw) = args.get("hw") {
@@ -148,6 +175,7 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
     if let Some(t) = args.get("tier") {
         cfg.tiers = Some(parse_tiers(t)?);
     }
+    cfg.segment_frac = parse_segment_frac(args, cfg.segment_frac)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     if cfg.spec.dim % cfg.spec.heads != 0 {
         // Keep heads consistent when dim is overridden.
@@ -156,9 +184,23 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
     Ok(cfg)
 }
 
-/// Build a [`WorkloadConfig`] from CLI overrides.
+/// Build a [`WorkloadConfig`] from an optional config file + CLI
+/// overrides (same precedence as [`sim_config`]).
 pub fn workload_config(args: &Args) -> Result<WorkloadConfig> {
     let mut wl = WorkloadConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        if let Some(v) = j.get("zipf").and_then(Json::as_f64) {
+            wl.cand_zipf_s = v;
+        }
+        if let Some(v) = j.get("cands").and_then(Json::as_usize) {
+            wl.cand_per_request = v;
+        }
+        if let Some(v) = j.get("catalog").and_then(Json::as_usize) {
+            wl.cand_catalog = v as u64;
+        }
+    }
     wl.qps = args.get_f64("qps", wl.qps)?;
     wl.duration_us = (args.get_f64("duration-s", wl.duration_us as f64 / 1e6)? * 1e6) as u64;
     wl.num_users = args.get_u64("users", wl.num_users)?;
@@ -169,6 +211,7 @@ pub fn workload_config(args: &Args) -> Result<WorkloadConfig> {
     if let Some(s) = args.get("scenario") {
         wl.scenario = ScenarioKind::parse(s).map_err(|e| anyhow!(e))?;
     }
+    apply_candidate_flags(args, &mut wl)?;
     wl.seed = args.get_u64("seed", wl.seed)?;
     Ok(wl)
 }
@@ -196,6 +239,8 @@ pub fn sim_config_json(cfg: &SimConfig, wl: &WorkloadConfig) -> Json {
                 .as_str()
                 .into(),
         )
+        .set("segment_cache", cfg.segment_frac.into())
+        .set("zipf", wl.cand_zipf_s.into())
         .set("seed", cfg.seed.into());
     j
 }
@@ -310,6 +355,36 @@ mod tests {
         // Default stays steady — the seed workload.
         let none = args(&["figure"]);
         assert_eq!(workload_config(&none).unwrap().scenario, ScenarioKind::Steady);
+    }
+
+    #[test]
+    fn segment_cache_and_zipf_flags_apply() {
+        // Defaults: segment reuse off, candidate Zipf at the workload
+        // default — the PR 2-identical configuration.
+        let none = args(&["figure"]);
+        assert_eq!(sim_config(&none, Mode::Baseline).unwrap().segment_frac, 0.0);
+        let wl = workload_config(&none).unwrap();
+        assert!((wl.cand_zipf_s - 1.1).abs() < 1e-12);
+        // CLI flags.
+        let a = args(&["figure", "--segment-cache", "0.25", "--zipf", "1.3", "--cands", "32"]);
+        let cfg = sim_config(&a, Mode::Baseline).unwrap();
+        assert!((cfg.segment_frac - 0.25).abs() < 1e-12);
+        let wl = workload_config(&a).unwrap();
+        assert!((wl.cand_zipf_s - 1.3).abs() < 1e-12);
+        assert_eq!(wl.cand_per_request, 32);
+        // Out-of-range values rejected.
+        assert!(sim_config(&args(&["figure", "--segment-cache", "1.5"]), Mode::Baseline).is_err());
+        assert!(workload_config(&args(&["figure", "--zipf", "-1"])).is_err());
+        // File keys layer under CLI.
+        let dir = std::env::temp_dir().join("relaygr_seg_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"segment_cache": 0.4, "zipf": 1.6}"#).unwrap();
+        let f = args(&["x", "--config", path.to_str().unwrap()]);
+        assert!((sim_config(&f, Mode::Baseline).unwrap().segment_frac - 0.4).abs() < 1e-12);
+        assert!((workload_config(&f).unwrap().cand_zipf_s - 1.6).abs() < 1e-12);
+        let over = args(&["x", "--config", path.to_str().unwrap(), "--segment-cache", "0.1"]);
+        assert!((sim_config(&over, Mode::Baseline).unwrap().segment_frac - 0.1).abs() < 1e-12);
     }
 
     #[test]

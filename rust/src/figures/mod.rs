@@ -11,6 +11,7 @@ pub mod fig14;
 pub mod fig15;
 pub mod motivation;
 pub mod scenarios;
+pub mod segments;
 pub mod tiers;
 
 use anyhow::{bail, Result};
@@ -18,11 +19,12 @@ use anyhow::{bail, Result};
 use crate::util::cli::Args;
 
 /// All figure ids: the paper's figures in paper order, then the repo's
-/// standing reports (scenario sweep, tier-policy sweep).
+/// standing reports (scenario sweep, tier-policy sweep, segment-reuse
+/// sweep).
 pub const ALL: &[&str] = &[
     "fig1", "fig3", "fig11a", "fig11b", "fig11c", "fig11d", "fig12", "fig13a", "fig13b",
     "fig13c", "fig13d", "fig14a", "fig14b", "fig14c", "fig14d", "fig15a", "fig15b", "table1",
-    "scenarios", "tiers",
+    "scenarios", "tiers", "segments",
 ];
 
 pub fn run_one(id: &str, args: &Args) -> Result<()> {
@@ -47,6 +49,7 @@ pub fn run_one(id: &str, args: &Args) -> Result<()> {
         "table1" => fig15::table1(args),
         "scenarios" => scenarios::scenarios(args),
         "tiers" => tiers::tiers(args),
+        "segments" => segments::segments(args),
         other => bail!("unknown figure '{other}' (available: {} all)", ALL.join(" ")),
     }
 }

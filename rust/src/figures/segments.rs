@@ -1,0 +1,122 @@
+//! `relaygr figure segments` — the candidate-segment reuse standing
+//! report: segment cache on vs off across all four workload scenarios,
+//! in both decision engines — the discrete-event simulator and the
+//! serialized reference driver ([`run_reference`]).  Both drive the
+//! identical [`RelayCoordinator`](crate::relay::RelayCoordinator), so —
+//! as long as the ψ working set fits the carved-down ψ window (true at
+//! this figure's loads; under real window pressure the partition *is*
+//! contention and ψ outcomes legitimately shift) — enabling the segment
+//! cache leaves every per-request
+//! [`CacheOutcome`](crate::relay::CacheOutcome) unchanged while strictly
+//! lowering mean rank-compute time wherever candidate sets overlap; the
+//! figure *asserts* the sim-vs-reference outcome equality per row rather
+//! than publishing rows from diverged engines.
+//!
+//! The run shape mirrors the strict cross-engine test: no DRAM tier, no
+//! refresh bursts, T_life beyond the trace — so the ψ decisions are
+//! timing-insensitive and any sim-vs-reference difference would be a
+//! genuine policy divergence.
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::{run_reference, SimConfig};
+use crate::config::{apply_candidate_flags, parse_segment_frac};
+use crate::figures::common::{ms, pct, sim, Table};
+use crate::metrics::RunMetrics;
+use crate::relay::baseline::Mode;
+use crate::relay::segment::SegmentStats;
+use crate::relay::tier::DramPolicy;
+use crate::util::cli::Args;
+use crate::workload::{ScenarioKind, WorkloadConfig};
+
+fn seg_cells(s: &SegmentStats) -> [String; 4] {
+    [
+        pct(s.hit_ratio()),
+        s.joined.to_string(),
+        s.produced.to_string(),
+        format!("{:.1}", s.bytes_saved as f64 / 1e6),
+    ]
+}
+
+/// `relaygr figure segments [--qps N] [--quick] [--scenario s]
+/// [--segment-cache f] [--zipf s]`.
+pub fn segments(args: &Args) -> Result<()> {
+    let duration_us = if args.has_flag("quick") { 4_000_000 } else { 8_000_000 };
+    let qps = args.get_f64("qps", 60.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let frac = parse_segment_frac(args, 0.25)?;
+    ensure!(frac > 0.0, "figure segments compares reuse on vs off; --segment-cache must be > 0");
+    let kinds: Vec<ScenarioKind> = match args.get("scenario") {
+        Some(s) => vec![ScenarioKind::parse(s).map_err(anyhow::Error::msg)?],
+        None => ScenarioKind::NAMES
+            .iter()
+            .map(|n| ScenarioKind::parse(n).expect("built-in scenario"))
+            .collect(),
+    };
+    let mut t = Table::new(
+        "segments",
+        "candidate-segment reuse on/off × scenarios (simulator + serialized reference)",
+        &[
+            "scenario", "segcache", "engine", "n", "mean rank ms", "seg hit", "joined",
+            "produced", "saved MB", "outcomes",
+        ],
+    );
+    for kind in &kinds {
+        let mut wl = WorkloadConfig {
+            qps,
+            duration_us,
+            num_users: 30_000,
+            fixed_long_len: Some(3072),
+            max_prefix: 3072,
+            refresh_prob: 0.0,
+            scenario: *kind,
+            seed,
+            ..Default::default()
+        };
+        apply_candidate_flags(args, &mut wl)?;
+        for &f in &[0.0, frac] {
+            let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+            cfg.pipeline.t_life_us = 2 * wl.duration_us;
+            cfg.segment_frac = f;
+            cfg.log_outcomes = true;
+            let m: RunMetrics = sim("segments", cfg.clone(), &wl)?;
+            let serial = run_reference(&cfg, &wl)?;
+            let mut sim_log = m.outcome_log.clone();
+            sim_log.sort_by_key(|&(id, _)| id);
+            ensure!(
+                sim_log == serial.outcomes,
+                "segments: engines diverged on per-request outcomes \
+                 (scenario {}, segment-cache {f})",
+                kind.label()
+            );
+            let label = if f > 0.0 { format!("{f:.2}") } else { "off".into() };
+            let sim_seg = seg_cells(&m.segments);
+            t.row(vec![
+                kind.label().to_string(),
+                label.clone(),
+                "sim".into(),
+                m.completed.to_string(),
+                ms(m.rank_exec.mean()),
+                sim_seg[0].clone(),
+                sim_seg[1].clone(),
+                sim_seg[2].clone(),
+                sim_seg[3].clone(),
+                "ok".into(),
+            ]);
+            let ser_seg = seg_cells(&serial.segments);
+            t.row(vec![
+                kind.label().to_string(),
+                label,
+                "serial".into(),
+                serial.outcomes.len().to_string(),
+                ms(serial.mean_rank_us),
+                ser_seg[0].clone(),
+                ser_seg[1].clone(),
+                ser_seg[2].clone(),
+                ser_seg[3].clone(),
+                "ok".into(),
+            ]);
+        }
+    }
+    t.emit(args)
+}

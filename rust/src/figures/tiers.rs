@@ -12,74 +12,15 @@
 
 use anyhow::Result;
 
-use crate::cluster::SimConfig;
+use crate::cluster::{run_reference, SimConfig};
 use crate::figures::common::{ms, pct, sim, Table};
 use crate::metrics::{dram_hit_rate, relay_hit_rate, RunMetrics};
 use crate::relay::baseline::Mode;
-use crate::relay::coordinator::{RankAction, RelayCoordinator, SignalAction, Stage};
 use crate::relay::hbm::HbmStats;
 use crate::relay::hierarchy::HierarchyStats;
-use crate::relay::pipeline::CacheOutcome;
 use crate::relay::tier::{DramPolicy, EvictPolicy};
 use crate::util::cli::Args;
-use crate::workload::{generate, ScenarioKind, WorkloadConfig};
-
-fn outcome_index(o: CacheOutcome) -> usize {
-    match o {
-        CacheOutcome::FullInference => 0,
-        CacheOutcome::HbmHit => 1,
-        CacheOutcome::DramHit => 2,
-        CacheOutcome::JoinedReload => 3,
-        CacheOutcome::Fallback => 4,
-    }
-}
-
-/// The serialized reference engine: every request runs start-to-finish
-/// against the shared coordinator with an instantly-completing host.
-fn run_serial(
-    cfg: &SimConfig,
-    wl: &WorkloadConfig,
-) -> Result<([u64; 5], HierarchyStats, HbmStats)> {
-    let mut coord: RelayCoordinator<()> =
-        RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator())?;
-    let spec = cfg.spec;
-    let mut counts = [0u64; 5];
-    for req in generate(wl) {
-        let now = req.arrival_us;
-        if coord.on_arrival(now, req.id, req.user, req.prefix_len) {
-            match coord.on_trigger_check(now, req.id) {
-                SignalAction::Produce { instance, user, .. } => {
-                    coord.on_psi_ready(now, instance, user, Some(()));
-                }
-                SignalAction::Reload { instance, user, bytes } => {
-                    coord.on_reload_done(now, instance, user, Some(()), bytes);
-                }
-                SignalAction::None => {}
-            }
-        }
-        coord.on_stage_done(now, req.id, Stage::Retrieval);
-        let inst = coord
-            .on_stage_done(now, req.id, Stage::Preproc)
-            .expect("preproc resolves the ranking instance");
-        match coord.on_rank_start(now, req.id) {
-            RankAction::Proceed { .. } => {}
-            RankAction::StartReload { bytes } => {
-                coord.on_reload_done(now, inst, req.user, Some(()), bytes);
-            }
-            // With an instantly-completing host nothing can be pending;
-            // a wait here means a coordinator invariant broke — fail the
-            // figure rather than publish rows from an unresolved request.
-            other => anyhow::bail!("serialized driver saw {other:?} for request {}", req.id),
-        }
-        let _ = coord.rank_compute(now, req.id);
-        let done = coord.on_rank_done(now, req.id, spec.kv_bytes_for(req.prefix_len));
-        if let Some(bytes) = done.spill {
-            coord.complete_spill(done.instance, done.user, bytes, ());
-        }
-        counts[outcome_index(done.outcome)] += 1;
-    }
-    Ok((counts, coord.hierarchy_stats(), coord.hbm_stats()))
-}
+use crate::workload::{ScenarioKind, WorkloadConfig};
 
 #[allow(clippy::too_many_arguments)]
 fn table_row(
@@ -160,9 +101,19 @@ pub fn tiers(args: &Args) -> Result<()> {
                 &m.hierarchy,
                 &m.hbm,
             );
-            let (counts, h, hbm) = run_serial(&cfg, &wl)?;
-            let n = counts.iter().sum();
-            table_row(&mut t, kind.label(), policy, "serial", n, None, &counts, &h, &hbm);
+            let r = run_reference(&cfg, &wl)?;
+            let n = r.outcome_counts.iter().sum();
+            table_row(
+                &mut t,
+                kind.label(),
+                policy,
+                "serial",
+                n,
+                None,
+                &r.outcome_counts,
+                &r.hierarchy,
+                &r.hbm,
+            );
         }
     }
     t.emit(args)

@@ -59,7 +59,8 @@ fn help() -> String {
      \x20 serve      live threaded serving demo (real PJRT executables)\n\
      \x20 calibrate  measure live execution costs, write calibration JSON\n\
      \x20 figure     regenerate a paper figure/table: fig1 fig3 fig11a..d fig12\n\
-     \x20            fig13a..d fig14a..d fig15a fig15b table1 scenarios tiers all\n\
+     \x20            fig13a..d fig14a..d fig15a fig15b table1 scenarios tiers\n\
+     \x20            segments all\n\
      \x20 plan       admission-control capacity planning (Eqs. 1–3)\n\
      \n\
      COMMON OPTIONS:\n\
@@ -70,7 +71,10 @@ fn help() -> String {
      \x20 --dram-policy <name>  DRAM-tier eviction: lru (default) | lfu\n\
      \x20                       | cost | lifecycle (serve + figure/sim)\n\
      \x20 --tier <stack>        explicit lower-tier stack, top-down, e.g.\n\
-     \x20                       8g:lru,500g:cost (serve + figure/sim)\n"
+     \x20                       8g:lru,500g:cost (serve + figure/sim)\n\
+     \x20 --segment-cache <f>   fraction of the r1 HBM slice carved out for\n\
+     \x20                       the candidate-segment cache (0 = off, default)\n\
+     \x20 --zipf <s>            candidate-item popularity skew (default 1.1)\n"
         .to_string()
 }
 

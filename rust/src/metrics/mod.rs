@@ -9,6 +9,7 @@ pub mod slo;
 use crate::relay::hbm::HbmStats;
 use crate::relay::hierarchy::HierarchyStats;
 use crate::relay::pipeline::{CacheOutcome, Lifecycle};
+use crate::relay::segment::SegmentStats;
 use crate::relay::trigger::TriggerStats;
 use crate::util::stats::{Histogram, Summary};
 
@@ -36,6 +37,8 @@ pub struct RunMetrics {
     pub hbm: HbmStats,
     /// Tiered-cache flow + per-tier counters (promotion/demotion).
     pub hierarchy: HierarchyStats,
+    /// Candidate-segment cache counters (beyond-prefix reuse).
+    pub segments: SegmentStats,
     pub trigger: TriggerStats,
 
     /// Busy-time utilization per instance (0..1), and the special subset.
@@ -56,7 +59,9 @@ pub struct RunMetrics {
     pub outcome_log: Vec<(u64, CacheOutcome)>,
 }
 
-fn outcome_index(o: CacheOutcome) -> usize {
+/// Index of an outcome in [`RunMetrics::outcome_counts`] /
+/// [`OUTCOME_NAMES`] (shared by the serialized reference engine).
+pub fn outcome_index(o: CacheOutcome) -> usize {
     match o {
         CacheOutcome::FullInference => 0,
         CacheOutcome::HbmHit => 1,
@@ -110,6 +115,7 @@ impl RunMetrics {
             admitted: 0,
             hbm: HbmStats::default(),
             hierarchy: HierarchyStats::default(),
+            segments: SegmentStats::default(),
             trigger: TriggerStats::default(),
             util: Vec::new(),
             special_instances: Vec::new(),
@@ -273,6 +279,19 @@ impl RunMetrics {
                 t.rejected,
             ));
         }
+        if self.segments.lookups > 0 {
+            let s = self.segments;
+            out.push(format!(
+                "SEG candidate-cache hit={:.0}% reused={} joined={} produced={} bypassed={} aborted={} saved={:.1}MB",
+                s.hit_ratio() * 100.0,
+                s.reused + s.promoted,
+                s.joined,
+                s.produced,
+                s.bypassed,
+                s.aborted,
+                s.bytes_saved as f64 / 1e6,
+            ));
+        }
         out
     }
 }
@@ -358,6 +377,19 @@ mod tests {
         assert!(report[0].contains("ready=5") && report[0].contains("re-rank=2"));
         assert!(report[1].contains("promoted=3"));
         assert!(report[2].contains("demoted-in=1"));
+        // The segment line appears only once the segment cache saw traffic.
+        m.segments = SegmentStats {
+            lookups: 10,
+            reused: 6,
+            joined: 1,
+            produced: 3,
+            bytes_saved: 7 << 20,
+            ..Default::default()
+        };
+        let report = m.tier_report();
+        assert_eq!(report.len(), 4);
+        assert!(report[3].contains("hit=70%"), "{}", report[3]);
+        assert!(report[3].contains("saved=7.3MB"), "{}", report[3]);
     }
 
     #[test]

@@ -129,6 +129,35 @@ impl HardwareProfile {
         self.launch_us + spec.full_flops(prefix_len) / self.eff_flops_per_us
     }
 
+    /// Compute saved per candidate segment served from the shared
+    /// segment cache (beyond-prefix reuse): the item-token K/V
+    /// projections skipped when the segment KV is cache-resident.
+    pub fn seg_save_us(&self, spec: &ModelSpec) -> f64 {
+        spec.segment_flops() / self.eff_flops_per_us
+    }
+
+    /// Ranking-on-cache with `reused` candidate segments served from the
+    /// segment cache.  `reused = 0` reproduces [`Self::rank_cached_us`]
+    /// bit-for-bit, so segment-off runs stay decision-identical.
+    pub fn rank_cached_reuse_us(&self, spec: &ModelSpec, prefix_len: usize, reused: usize) -> f64 {
+        let base = self.rank_cached_us(spec, prefix_len);
+        if reused == 0 {
+            return base;
+        }
+        (base - reused as f64 * self.seg_save_us(spec)).max(self.launch_us)
+    }
+
+    /// Full inline inference with `reused` candidate segments served
+    /// from the segment cache (the candidate tokens' KV is recomputed by
+    /// the full pass too; reuse trims exactly that share).
+    pub fn rank_full_reuse_us(&self, spec: &ModelSpec, prefix_len: usize, reused: usize) -> f64 {
+        let base = self.rank_full_us(spec, prefix_len);
+        if reused == 0 {
+            return base;
+        }
+        (base - reused as f64 * self.seg_save_us(spec)).max(self.launch_us)
+    }
+
     /// DRAM → HBM reload of a spilled ψ (H2D over PCIe).
     pub fn load_us(&self, kv_bytes: usize) -> f64 {
         self.dma_fixed_us + kv_bytes as f64 / self.pcie_bytes_per_us
@@ -192,6 +221,31 @@ mod tests {
         let spec = ModelSpec::paper_default();
         let load_ms = hw.load_us(spec.kv_bytes_for(15 * 1024)) / 1e3;
         assert!(load_ms < 20.0, "load {load_ms:.2} ms");
+    }
+
+    #[test]
+    fn segment_reuse_trims_rank_monotonically() {
+        let hw = HardwareProfile::ascend_910c();
+        let spec = ModelSpec::paper_default();
+        let p = 2048;
+        // reused = 0 is bit-identical to the unsplit cost — the segment-
+        // off configuration must stay decision-for-decision unchanged.
+        assert_eq!(hw.rank_cached_reuse_us(&spec, p, 0).to_bits(), hw.rank_cached_us(&spec, p).to_bits());
+        assert_eq!(hw.rank_full_reuse_us(&spec, p, 0).to_bits(), hw.rank_full_us(&spec, p).to_bits());
+        // Strictly decreasing in the reuse count, bounded below by the
+        // launch overhead, on both the cached and full paths.
+        let mut last = hw.rank_cached_reuse_us(&spec, p, 0);
+        for reused in [1, 16, 128, spec.num_items] {
+            let t = hw.rank_cached_reuse_us(&spec, p, reused);
+            assert!(t < last, "reused={reused}: {t} !< {last}");
+            assert!(t >= hw.launch_us);
+            last = t;
+        }
+        assert!(hw.rank_full_reuse_us(&spec, p, spec.num_items) < hw.rank_full_us(&spec, p));
+        // Even full reuse leaves the attention + tower majority in place.
+        assert!(
+            hw.rank_cached_reuse_us(&spec, p, spec.num_items) > 0.5 * hw.rank_cached_us(&spec, p)
+        );
     }
 
     #[test]

@@ -159,6 +159,33 @@ impl ModelSpec {
         self.layers as f64 * self.layer_flops(s_tot, s_tot) + self.tower_flops()
     }
 
+    // ----- candidate-segment accounting ------------------------------------
+    //
+    // Beyond-prefix reuse: the KV of a candidate-item token is position-
+    // independent, so a segment cached by one request's ranking pass is
+    // reusable by every other request ranking the same (item, model
+    // version) — what the segment cache exploits.  Reuse skips the
+    // item's K/V *projections*; its Q row, attention and the task tower
+    // still run (the score is always computed fresh).
+
+    /// Tokens per candidate-item segment under the current item
+    /// tokenization (one scoring token per candidate).
+    pub const SEGMENT_TOKENS: usize = 1;
+
+    /// FLOPs skipped when a candidate item's segment KV is served from
+    /// the segment cache instead of recomputed: the K and V projections
+    /// of its token(s) across layers (2 projections × 2·s·D² each).
+    pub fn segment_flops(&self) -> f64 {
+        let d = self.dim as f64;
+        self.layers as f64 * 4.0 * Self::SEGMENT_TOKENS as f64 * d * d
+    }
+
+    /// ψ footprint of one candidate-item segment in bytes (per-layer K
+    /// and V over the item's token(s) — KiB, vs MiB for a user prefix).
+    pub fn segment_bytes(&self) -> usize {
+        self.kv_bytes_for(Self::SEGMENT_TOKENS)
+    }
+
     /// Artifact base name, matching `configs.ModelConfig.name`.
     pub fn name(&self) -> String {
         format!(
@@ -219,6 +246,23 @@ mod tests {
         let f2 = spec.prefix_flops(4096);
         assert!(f2 / f1 > 2.5, "attention quadratic term should dominate");
         assert_eq!(spec.kv_bytes_for(4096), spec.kv_bytes_for(2048) * 2);
+    }
+
+    #[test]
+    fn segment_accounting_is_a_strict_slice_of_rank_compute() {
+        let spec = ModelSpec::paper_default();
+        // Table 1 arithmetic at one token: 8 × 2 × 1 × 256 × 4 B = 16 KiB.
+        assert_eq!(spec.segment_bytes(), 16 * 1024);
+        // The savable segment share must be a strict minority of the rank
+        // pass even when every candidate hits (attention + tower remain).
+        let all_items = spec.segment_flops() * spec.num_items as f64;
+        assert!(all_items > 0.0);
+        assert!(
+            all_items < 0.5 * spec.rank_cached_flops(spec.prefix_len),
+            "segment share {all_items:.3e} vs rank {:.3e}",
+            spec.rank_cached_flops(spec.prefix_len)
+        );
+        assert!(all_items < 0.5 * spec.full_flops(spec.prefix_len));
     }
 
     #[test]

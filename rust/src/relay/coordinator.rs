@@ -22,7 +22,7 @@
 //! | [`on_rank_start`]    | ranking request reached its instance           |
 //! | [`on_psi_ready`]     | ψ production finished (or failed)              |
 //! | [`on_reload_done`]   | a DRAM→HBM transfer finished (or failed)       |
-//! | [`rank_compute`]     | ranking execution starts: consume ψ            |
+//! | [`rank_compute`]     | ranking starts: consume ψ + plan segments      |
 //! | [`on_rank_done`]     | ranking finished: release + spill lifecycle    |
 //!
 //! [`on_arrival`]: RelayCoordinator::on_arrival
@@ -43,6 +43,9 @@ use crate::relay::hbm::{EntryState, HbmStats};
 use crate::relay::hierarchy::{CacheHierarchy, HierarchyStats, PseudoAction, ReloadDone};
 use crate::relay::pipeline::CacheOutcome;
 use crate::relay::router::{Router, RouterConfig};
+use crate::relay::segment::{
+    SegmentAction, SegmentConfig, SegmentKey, SegmentPlan, SegmentStats, SegmentStore,
+};
 use crate::relay::tier::TierConfig;
 use crate::relay::trigger::{
     BehaviorMeta, Decision, Estimator, Trigger, TriggerConfig, TriggerStats,
@@ -72,6 +75,11 @@ pub struct CoordinatorConfig {
     /// Feature dimension reported in [`BehaviorMeta`].
     pub dim: usize,
     pub kv_bytes: KvSizer,
+    /// Candidate-segment reuse (beyond-prefix): `frac > 0` carves a
+    /// segment-cache partition out of the `hbm_bytes` slice, so prefix ψ
+    /// caches and segment caches contend explicitly.  `frac = 0` keeps
+    /// behaviour decision-for-decision identical to the ψ-only system.
+    pub segment: SegmentConfig,
 }
 
 /// Cascade stages the coordinator is told about.
@@ -143,6 +151,9 @@ pub struct RankCompute<T> {
     /// The consumed payload when cached (device buffer in the live
     /// engine, `()` in the simulator).
     pub payload: Option<T>,
+    /// Candidate-segment plan for this rank pass (None when segment
+    /// reuse is disabled or the request carried no candidate set).
+    pub segments: Option<SegmentPlan>,
 }
 
 /// Everything the host needs to close out a finished request.
@@ -167,6 +178,9 @@ pub struct Completion {
 struct InstanceCtl<T> {
     /// The tiered ψ cache: HBM window + lower tiers + promotion flow.
     cache: CacheHierarchy<T>,
+    /// The shared candidate-segment cache (cross-user, deduplicated) —
+    /// present only when segment reuse is enabled.
+    segments: Option<SegmentStore<T>>,
     /// Rank requests waiting for ψ production to finish, per user.
     waiting_produce: FxHashMap<u64, Vec<u64>>,
     /// Rank requests joined to an in-flight/queued reload, per user.
@@ -194,6 +208,13 @@ struct ReqCtl {
     resolved: bool,
 }
 
+/// Segment keys held by one in-flight rank pass.  `produced` carries the
+/// production tickets (its keys are a subset of `pinned`).
+struct SegRefs {
+    pinned: Vec<u64>,
+    produced: Vec<(u64, u64)>,
+}
+
 /// The shared relay-race coordinator.
 pub struct RelayCoordinator<T> {
     cfg: CoordinatorConfig,
@@ -201,9 +222,15 @@ pub struct RelayCoordinator<T> {
     triggers: HashMap<usize, Trigger>,
     instances: Vec<InstanceCtl<T>>,
     requests: FxHashMap<u64, ReqCtl>,
+    /// Per-request candidate item ids awaiting segment planning
+    /// (consumed by [`RelayCoordinator::rank_compute`]).
+    cands: FxHashMap<u64, Vec<u64>>,
+    /// Segment pins/productions held per in-flight rank pass (released
+    /// and installed by [`RelayCoordinator::on_rank_done`]).
+    seg_refs: FxHashMap<u64, SegRefs>,
 }
 
-impl<T: Clone> RelayCoordinator<T> {
+impl<T: Clone + Default> RelayCoordinator<T> {
     /// Build the coordinator; `mk_estimator` supplies the latency
     /// estimator for each special instance's trigger.
     pub fn new(
@@ -215,15 +242,33 @@ impl<T: Clone> RelayCoordinator<T> {
         for &i in router.special_instances() {
             triggers.insert(i, Trigger::new(cfg.trigger.clone(), mk_estimator(i)));
         }
+        // The segment cache takes its partition out of the r1 slice, so
+        // ψ windows and segment caches contend for the same budget.
+        let seg_on = cfg.mode.is_relay() && cfg.segment.enabled();
+        let seg_budget = if seg_on {
+            (cfg.segment.frac.clamp(0.0, 0.9) * cfg.hbm_bytes as f64) as usize
+        } else {
+            0
+        };
+        let psi_budget = cfg.hbm_bytes - seg_budget;
         let instances = (0..cfg.router.n_instances)
             .map(|_| InstanceCtl {
-                cache: CacheHierarchy::new(cfg.hbm_bytes, &cfg.tiers, cfg.max_reload_concurrency),
+                cache: CacheHierarchy::new(psi_budget, &cfg.tiers, cfg.max_reload_concurrency),
+                segments: seg_on.then(|| SegmentStore::from_config(seg_budget, &cfg.segment)),
                 waiting_produce: FxHashMap::default(),
                 waiting_reload: FxHashMap::default(),
                 origin: FxHashMap::default(),
             })
             .collect();
-        Ok(RelayCoordinator { cfg, router, triggers, instances, requests: FxHashMap::default() })
+        Ok(RelayCoordinator {
+            cfg,
+            router,
+            triggers,
+            instances,
+            requests: FxHashMap::default(),
+            cands: FxHashMap::default(),
+            seg_refs: FxHashMap::default(),
+        })
     }
 
     // ---- introspection -----------------------------------------------------
@@ -282,6 +327,31 @@ impl<T: Clone> RelayCoordinator<T> {
         acc
     }
 
+    /// Whether candidate-segment reuse is active (relay mode with a
+    /// non-zero `--segment-cache` partition).  Hosts use this to decide
+    /// whether to materialise candidate sets at all.
+    pub fn segments_enabled(&self) -> bool {
+        self.cfg.mode.is_relay() && self.cfg.segment.enabled()
+    }
+
+    /// Merged candidate-segment counters across instances.
+    pub fn segment_stats(&self) -> SegmentStats {
+        let mut acc = SegmentStats::default();
+        for i in &self.instances {
+            if let Some(s) = &i.segments {
+                acc.merge(s.stats());
+            }
+        }
+        acc
+    }
+
+    /// Rotate the segment key space to a new model version (model push):
+    /// segments keyed under the old version stop matching from the next
+    /// rank pass on and age out of the cache via their TTL.
+    pub fn set_model_version(&mut self, version: u16) {
+        self.cfg.segment.version = version;
+    }
+
     /// Live-cache slots currently held across special instances (the
     /// paper's Σ L admission feedback).  Every `Decision::Admit` holds
     /// one slot until its request completes (`on_rank_done`) or the
@@ -305,9 +375,23 @@ impl<T: Clone> RelayCoordinator<T> {
 
     // ---- event API ---------------------------------------------------------
 
-    /// A request entered the pipeline.  Returns whether the trigger side
-    /// path should run (relay mode, long sequence).
-    pub fn on_arrival(&mut self, _now: u64, req: u64, user: u64, prefix_len: usize) -> bool {
+    /// A request entered the pipeline.  `candidates` is the ranking-side
+    /// candidate item set (used for segment planning at `rank_compute`;
+    /// pass `&[]` when segment reuse is off — hosts should consult
+    /// [`RelayCoordinator::segments_enabled`] before materialising it).
+    /// Returns whether the trigger side path should run (relay mode,
+    /// long sequence).
+    pub fn on_arrival(
+        &mut self,
+        _now: u64,
+        req: u64,
+        user: u64,
+        prefix_len: usize,
+        candidates: &[u64],
+    ) -> bool {
+        if self.segments_enabled() && !candidates.is_empty() {
+            self.cands.insert(req, candidates.to_vec());
+        }
         let is_long = prefix_len > self.cfg.long_threshold;
         self.requests.insert(
             req,
@@ -599,15 +683,53 @@ impl<T: Clone> RelayCoordinator<T> {
         }
     }
 
-    /// Ranking execution starts: consume ψ when cached.
-    pub fn rank_compute(&mut self, _now: u64, req: u64) -> RankCompute<T> {
+    /// Ranking execution starts: consume ψ when cached, and plan the
+    /// candidate-segment reuse for this pass — per candidate, reuse a
+    /// resident segment, join an in-flight production, or become the
+    /// producer (cross-request single-flight, implemented once here so
+    /// both engines inherit identical dedup decisions).
+    pub fn rank_compute(&mut self, now: u64, req: u64) -> RankCompute<T> {
         let (inst, user, cached) = {
             let st = &self.requests[&req];
             (st.rank_instance, st.user, st.cached)
         };
         let payload =
             if cached { self.instances[inst].cache.hbm_mut().consume(user) } else { None };
-        RankCompute { cached, payload }
+        let segments = self.plan_segments(now, req, inst);
+        RankCompute { cached, payload, segments }
+    }
+
+    /// Per-candidate segment decisions for one rank pass; pins are held
+    /// until [`RelayCoordinator::on_rank_done`] releases them.
+    fn plan_segments(&mut self, now: u64, req: u64, inst: usize) -> Option<SegmentPlan> {
+        let items = self.cands.remove(&req)?;
+        let version = self.cfg.segment.version;
+        let store = self.instances.get_mut(inst)?.segments.as_mut()?;
+        let mut plan = SegmentPlan::default();
+        let mut refs = SegRefs { pinned: Vec::new(), produced: Vec::new() };
+        for item in items {
+            let key = SegmentKey::new(item, version).packed();
+            match store.acquire(key, now) {
+                SegmentAction::Reuse | SegmentAction::Promote => {
+                    plan.reused += 1;
+                    refs.pinned.push(key);
+                }
+                SegmentAction::Join => {
+                    plan.joined += 1;
+                    refs.pinned.push(key);
+                }
+                SegmentAction::Produce { ticket } => {
+                    plan.produced += 1;
+                    refs.pinned.push(key);
+                    refs.produced.push((key, ticket));
+                }
+                SegmentAction::Bypass => plan.bypassed += 1,
+            }
+        }
+        if !refs.pinned.is_empty() {
+            self.seg_refs.insert(req, refs);
+        }
+        Some(plan)
     }
 
     /// The classified ψ was unusable at execution time (live engine only:
@@ -627,6 +749,25 @@ impl<T: Clone> RelayCoordinator<T> {
         let st = self.requests.remove(&req).expect("completion for unknown request");
         let inst = st.rank_instance;
         self.router.on_complete(inst);
+        // Candidate-segment lifecycle: install what this pass produced
+        // (waking up reuse for every request that joined), then release
+        // each pin — at refcount 0 a segment becomes evictable but stays
+        // readable until its TTL or capacity pressure reclaims it.  The
+        // payload placeholder stands in for the segment KV the rank
+        // execution materialised (the live rank kernel does not export
+        // per-item KV slices; the decision plane is engine-shared either
+        // way).
+        self.cands.remove(&req);
+        if let Some(refs) = self.seg_refs.remove(&req) {
+            if let Some(store) = self.instances[inst].segments.as_mut() {
+                for (key, ticket) in refs.produced {
+                    store.complete(key, ticket, T::default());
+                }
+                for key in refs.pinned {
+                    store.release(key);
+                }
+            }
+        }
         // Release the admitted live-cache slot.
         if st.admitted {
             if let Some(pre_inst) = st.pre_instance {
@@ -712,6 +853,7 @@ mod tests {
             hbm_bytes: 1 << 30,
             dim: 256,
             kv_bytes: Box::new(|_| 32 << 20),
+            segment: SegmentConfig::disabled(),
         }
     }
 
@@ -721,7 +863,7 @@ mod tests {
 
     /// Drive one request end to end with an instantly-completing host.
     fn drive(c: &mut RelayCoordinator<u32>, now: u64, id: u64, user: u64, prefix: usize) -> Completion {
-        if c.on_arrival(now, id, user, prefix) {
+        if c.on_arrival(now, id, user, prefix, &[]) {
             match c.on_trigger_check(now, id) {
                 SignalAction::Produce { instance, user, .. } => {
                     let woken = c.on_psi_ready(now, instance, user, Some(7));
@@ -786,7 +928,7 @@ mod tests {
     #[test]
     fn rank_waits_for_production_then_hits() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
-        assert!(c.on_arrival(0, 1, 7, 4096));
+        assert!(c.on_arrival(0, 1, 7, 4096, &[]));
         let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
             panic!("expected production");
         };
@@ -806,7 +948,7 @@ mod tests {
     #[test]
     fn failed_production_falls_back() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
-        assert!(c.on_arrival(0, 1, 7, 4096));
+        assert!(c.on_arrival(0, 1, 7, 4096, &[]));
         let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
             panic!("expected production");
         };
@@ -824,7 +966,7 @@ mod tests {
     #[test]
     fn wait_timeout_resolves_to_fallback_and_detaches() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
-        assert!(c.on_arrival(0, 1, 7, 4096));
+        assert!(c.on_arrival(0, 1, 7, 4096, &[]));
         let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
             panic!("expected production");
         };
@@ -849,7 +991,7 @@ mod tests {
         // otherwise the Eq. 2 footprint bound stops binding.
         for id in 0..6u64 {
             let now = id * 10_000;
-            assert!(c.on_arrival(now, id, 7, 4096));
+            assert!(c.on_arrival(now, id, 7, 4096, &[]));
             match c.on_trigger_check(now, id) {
                 SignalAction::Produce { instance, user, .. } => {
                     c.on_psi_ready(now, instance, user, Some(1));
@@ -875,8 +1017,8 @@ mod tests {
         assert!(first.spill.is_some());
         // Two refresh requests race: the first starts the reload, the
         // second joins it.
-        assert!(c.on_arrival(400_000, 2, 5, 4096));
-        assert!(c.on_arrival(400_000, 3, 5, 4096));
+        assert!(c.on_arrival(400_000, 2, 5, 4096, &[]));
+        assert!(c.on_arrival(400_000, 3, 5, 4096, &[]));
         // Skip admission (signal may be delayed): rank requests front
         // the reload themselves (out-of-order arrival, §3.4).
         c.on_stage_done(400_000, 2, Stage::Preproc).unwrap();
@@ -894,5 +1036,127 @@ mod tests {
         let d3 = c.on_rank_done(400_500, 3, bytes);
         assert_eq!(d2.outcome, CacheOutcome::DramHit);
         assert_eq!(d3.outcome, CacheOutcome::JoinedReload);
+    }
+
+    fn seg_config() -> CoordinatorConfig {
+        let mut cfg = config(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.segment =
+            SegmentConfig { frac: 0.25, ..SegmentConfig::disabled() };
+        cfg
+    }
+
+    /// Drive one request with candidates through the full event flow.
+    fn drive_with_cands(
+        c: &mut RelayCoordinator<u32>,
+        now: u64,
+        id: u64,
+        user: u64,
+        cands: &[u64],
+    ) -> (Completion, Option<SegmentPlan>) {
+        if c.on_arrival(now, id, user, 4096, cands) {
+            if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(now, id) {
+                c.on_psi_ready(now, instance, user, Some(7));
+            }
+        }
+        c.on_stage_done(now, id, Stage::Preproc).unwrap();
+        let _ = c.on_rank_start(now, id);
+        let rc = c.rank_compute(now, id);
+        let done = c.on_rank_done(now, id, 32 << 20);
+        (done, rc.segments)
+    }
+
+    #[test]
+    fn segment_partition_carved_out_of_r1() {
+        let c: RelayCoordinator<u32> =
+            RelayCoordinator::new(seg_config(), |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        assert!(c.segments_enabled());
+        // 25% of the 1 GB slice goes to segments; the ψ window keeps 75%.
+        let inst = &c.instances[0];
+        assert_eq!(inst.cache.hbm().capacity_bytes(), (1usize << 30) - (1usize << 28));
+        assert_eq!(inst.segments.as_ref().unwrap().used_bytes(), 0);
+        // Disabled config: full slice to ψ, no store, no planning.
+        let off = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
+        assert!(!off.segments_enabled());
+        assert_eq!(off.instances[0].cache.hbm().capacity_bytes(), 1 << 30);
+        assert!(off.instances[0].segments.is_none());
+    }
+
+    #[test]
+    fn first_ranker_produces_next_reuses_across_users() {
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(seg_config(), |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        // Different users sharing candidates — but segment reuse is
+        // per-instance, so rendezvous the two requests on one instance
+        // by using the same (affinity-hashed) user id.
+        let (_, p1) = drive_with_cands(&mut c, 0, 1, 42, &[10, 11, 12]);
+        let p1 = p1.expect("segment plan present");
+        assert_eq!((p1.produced, p1.reused, p1.joined), (3, 0, 0));
+        let (_, p2) = drive_with_cands(&mut c, 1_000, 2, 42, &[10, 11, 13]);
+        let p2 = p2.expect("segment plan present");
+        assert_eq!((p2.reused, p2.produced), (2, 1), "overlap reused, novelty produced");
+        let s = c.segment_stats();
+        assert_eq!((s.produced, s.reused), (4, 2));
+        assert_eq!(s.bytes_saved, 2 * c.cfg.segment.seg_bytes as u64);
+        assert!(s.hit_ratio() > 0.3);
+    }
+
+    #[test]
+    fn concurrent_requests_join_inflight_segment_production() {
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(seg_config(), |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        // Two requests overlap in time: both pass rank_compute before
+        // either completes — the second joins the first's production.
+        for id in [1u64, 2] {
+            assert!(c.on_arrival(0, id, 42, 4096, &[77]));
+            if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, id) {
+                c.on_psi_ready(0, instance, user, Some(7));
+            }
+            c.on_stage_done(0, id, Stage::Preproc).unwrap();
+            let _ = c.on_rank_start(0, id);
+        }
+        let r1 = c.rank_compute(0, 1).segments.unwrap();
+        let r2 = c.rank_compute(0, 2).segments.unwrap();
+        assert_eq!(r1.produced, 1);
+        assert_eq!(r2.joined, 1, "dedup: one compute for both requests");
+        c.on_rank_done(10, 1, 32 << 20);
+        c.on_rank_done(10, 2, 32 << 20);
+        // The installed segment now serves later requests directly.
+        let (_, p3) = drive_with_cands(&mut c, 1_000, 3, 42, &[77]);
+        assert_eq!(p3.unwrap().reused, 1);
+        assert_eq!(c.segment_stats().joined, 1);
+    }
+
+    #[test]
+    fn model_version_bump_rotates_segment_keys() {
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(seg_config(), |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        let (_, p1) = drive_with_cands(&mut c, 0, 1, 42, &[5]);
+        assert_eq!(p1.unwrap().produced, 1);
+        let (_, p2) = drive_with_cands(&mut c, 100, 2, 42, &[5]);
+        assert_eq!(p2.unwrap().reused, 1);
+        // Model push: the same item must be re-produced under the new key.
+        c.set_model_version(1);
+        let (_, p3) = drive_with_cands(&mut c, 200, 3, 42, &[5]);
+        assert_eq!(p3.unwrap().produced, 1, "stale-version segment must not match");
+    }
+
+    #[test]
+    fn segments_ignored_without_candidates_or_in_baseline() {
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(seg_config(), |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        let (_, plan) = drive_with_cands(&mut c, 0, 1, 42, &[]);
+        assert!(plan.is_none(), "no candidates ⇒ no plan");
+        assert_eq!(c.segment_stats().lookups, 0);
+        // Baseline mode never builds a store even with frac set.
+        let mut cfg = config(Mode::Baseline);
+        cfg.segment = SegmentConfig { frac: 0.25, ..SegmentConfig::disabled() };
+        let mut b: RelayCoordinator<u32> =
+            RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        assert!(!b.segments_enabled());
+        b.on_arrival(0, 1, 7, 4096, &[1, 2]);
+        b.on_stage_done(0, 1, Stage::Preproc).unwrap();
+        let _ = b.on_rank_start(0, 1);
+        assert!(b.rank_compute(0, 1).segments.is_none());
+        b.on_rank_done(0, 1, 1 << 20);
     }
 }

@@ -7,7 +7,10 @@
 //!   generalising §3.4's memory-aware expander,
 //!
 //! with the [`pipeline`] cascade model and the [`baseline`] modes (inline
-//! full inference and the no-affinity remote-pool strawman).
+//! full inference and the no-affinity remote-pool strawman).  Beyond the
+//! paper, [`segment`] adds cross-user candidate-segment KV reuse — a
+//! ref-counted, deduplicated segment cache for ranking-side tokens,
+//! layered on the same generic hierarchy (its second instantiation).
 //!
 //! ## The tier / hierarchy API
 //!
@@ -56,6 +59,7 @@ pub mod hbm;
 pub mod hierarchy;
 pub mod pipeline;
 pub mod router;
+pub mod segment;
 pub mod tier;
 pub mod trigger;
 
@@ -68,6 +72,9 @@ pub use hbm::{EntryState, HbmCache, HbmStats, InsertError, Micros};
 pub use hierarchy::{CacheHierarchy, HierarchyStats, PseudoAction, ReloadDone};
 pub use pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
 pub use router::{BalancePolicy, HashRing, Route, Router, RouterConfig, RouterStats};
+pub use segment::{
+    SegmentAction, SegmentConfig, SegmentKey, SegmentPlan, SegmentStats, SegmentStore,
+};
 pub use tier::{CacheTier, DramPolicy, EvictPolicy, PolicyTier, TierConfig, TierStats};
 pub use trigger::{
     AdmissionLimits, BehaviorMeta, Decision, Trigger, TriggerConfig, TriggerStats,

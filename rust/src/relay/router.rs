@@ -10,6 +10,8 @@
 //! least-connections).  Special-instance density per server is capped to
 //! bound CPU/PCIe interference (Fig. 8).
 
+use std::collections::{BTreeSet, HashSet};
+
 use anyhow::{bail, Result};
 
 /// 64-bit hash of the consistency-hash-key (userID) — splitmix64 finaliser.
@@ -131,10 +133,17 @@ pub struct Router {
     placement: Vec<usize>,
     special: Vec<usize>,
     normal: Vec<usize>,
+    /// instance id → member of the normal pool (tracks the `lc_index`).
+    is_normal: Vec<bool>,
     gw_ring: HashRing,
     special_ring: HashRing,
     /// Open connections per instance (least-connections policy).
     conns: Vec<u32>,
+    /// Ordered least-connections index over the normal pool:
+    /// `first()` is `(min conns, smallest instance id)` — exactly the
+    /// instance the old O(n) `min_by_key` scan picked (the normal list
+    /// is ascending, so first-minimum = smallest id), at O(log n).
+    lc_index: BTreeSet<(u32, usize)>,
     rr_next: usize,
     stats: RouterStats,
 }
@@ -174,8 +183,16 @@ impl Router {
         if special.len() < want_special {
             bail!("router: could not place {want_special} special instances");
         }
+        // Indexed membership: the old `special.contains` filter scanned
+        // the special list once per instance (O(N²) at fleet sizes).
+        let special_set: HashSet<usize> = special.iter().copied().collect();
         let normal: Vec<usize> =
-            (0..cfg.n_instances).filter(|i| !special.contains(i)).collect();
+            (0..cfg.n_instances).filter(|i| !special_set.contains(i)).collect();
+        let mut is_normal = vec![false; cfg.n_instances];
+        for &i in &normal {
+            is_normal[i] = true;
+        }
+        let lc_index: BTreeSet<(u32, usize)> = normal.iter().map(|&i| (0, i)).collect();
         let gw_ring = HashRing::new(&(0..cfg.gateways).collect::<Vec<_>>(), cfg.vnodes);
         let special_ring = HashRing::new(&special, cfg.vnodes);
         Ok(Router {
@@ -183,6 +200,8 @@ impl Router {
             placement,
             special,
             normal,
+            is_normal,
+            lc_index,
             gw_ring,
             special_ring,
             rr_next: 0,
@@ -218,7 +237,7 @@ impl Router {
         self.stats.special_routed += 1;
         let gateway = self.gw_ring.route(user).expect("no gateways");
         let instance = self.special_ring.route(user).expect("no special instances");
-        self.conns[instance] += 1;
+        self.bump_conns(instance, 1);
         Route { gateway, instance }
     }
 
@@ -232,19 +251,38 @@ impl Router {
                 self.rr_next += 1;
                 i
             }
-            BalancePolicy::LeastConnections => *self
-                .normal
-                .iter()
-                .min_by_key(|&&i| self.conns[i])
-                .expect("no normal instances"),
+            // O(log n) via the ordered index (decision bit-identical to
+            // the old first-minimum scan of the ascending normal list).
+            BalancePolicy::LeastConnections => {
+                self.lc_index.first().expect("no normal instances").1
+            }
         };
-        self.conns[instance] += 1;
+        self.bump_conns(instance, 1);
         Route { gateway, instance }
+    }
+
+    /// Adjust an instance's open-connection count, keeping the
+    /// least-connections index in sync for normal-pool members.
+    fn bump_conns(&mut self, instance: usize, delta: i32) {
+        let before = self.conns[instance];
+        let after = if delta >= 0 {
+            before + delta as u32
+        } else {
+            before.saturating_sub((-delta) as u32)
+        };
+        if before == after {
+            return;
+        }
+        self.conns[instance] = after;
+        if self.is_normal[instance] {
+            self.lc_index.remove(&(before, instance));
+            self.lc_index.insert((after, instance));
+        }
     }
 
     /// A request finished: release its connection slot.
     pub fn on_complete(&mut self, instance: usize) {
-        self.conns[instance] = self.conns[instance].saturating_sub(1);
+        self.bump_conns(instance, -1);
     }
 
     /// Deployment churn: a special instance leaves; keys remap.  Ranking
@@ -253,6 +291,16 @@ impl Router {
     pub fn remove_special(&mut self, instance: usize) {
         self.special_ring.remove(instance);
         self.special.retain(|&i| i != instance);
+        // The departed instance's open connections die with it: reset so
+        // a later re-add does not inherit stale counts and skew
+        // least-connections balancing.  (In-flight completions for the
+        // old incarnation then saturate harmlessly at zero.)
+        let before = self.conns[instance];
+        self.conns[instance] = 0;
+        if self.is_normal[instance] && before != 0 {
+            self.lc_index.remove(&(before, instance));
+            self.lc_index.insert((0, instance));
+        }
         self.stats.affinity_breaks += 1;
     }
 
@@ -388,6 +436,80 @@ mod tests {
             }
         }
         assert_eq!(r.stats().affinity_breaks, 1);
+    }
+
+    #[test]
+    fn removed_special_rejoins_with_clean_conns() {
+        let mut r = router();
+        let victim = r.special_instances()[0];
+        // Pump open connections onto the victim via affinity routing.
+        let mut routed = 0;
+        for user in 0..5_000u64 {
+            if r.route_special(user).instance == victim {
+                routed += 1;
+            }
+        }
+        assert!(routed > 0 && r.open_connections(victim) == routed);
+        // Churn: the instance leaves and later re-registers.  It must
+        // come back with a clean slate, not the stale count.
+        r.remove_special(victim);
+        assert_eq!(r.open_connections(victim), 0, "departed instance keeps no conns");
+        r.add_special(victim);
+        assert_eq!(r.open_connections(victim), 0);
+        // Late completions for the old incarnation saturate at zero.
+        r.on_complete(victim);
+        assert_eq!(r.open_connections(victim), 0);
+    }
+
+    /// The O(log n) least-connections index must agree with the naive
+    /// first-minimum scan on every routing decision, under random
+    /// route/complete interleavings — the index is a pure perf change.
+    #[test]
+    fn prop_lc_index_matches_min_scan_reference() {
+        crate::util::prop::check("router-lc-index-vs-scan", 80, |rng| {
+            let cfg = RouterConfig {
+                n_instances: 10 + rng.range(0, 60),
+                servers: 10 + rng.range(0, 10),
+                r2: rng.uniform(0.05, 0.3),
+                max_special_per_server: 1 + rng.range(0, 2),
+                gateways: 1 + rng.range(0, 4),
+                vnodes: 16,
+                normal_policy: BalancePolicy::LeastConnections,
+            };
+            let Ok(mut r) = Router::new(cfg) else {
+                return Ok(()); // infeasible density caps may error
+            };
+            let mut model: Vec<u32> = vec![0; r.config().n_instances];
+            let mut open: Vec<usize> = Vec::new();
+            for step in 0..400 {
+                if rng.bernoulli(0.65) || open.is_empty() {
+                    let user = rng.next_u64() % 500;
+                    // Reference decision: first normal instance with the
+                    // minimum open-connection count (ascending ids).
+                    let want = *r
+                        .normal_instances()
+                        .iter()
+                        .min_by_key(|&&i| model[i])
+                        .expect("normal pool non-empty");
+                    let got = r.route_normal(user).instance;
+                    if got != want {
+                        return Err(format!("step {step}: routed {got}, scan says {want}"));
+                    }
+                    model[got] += 1;
+                    open.push(got);
+                } else {
+                    let i = open.swap_remove(rng.range(0, open.len()));
+                    r.on_complete(i);
+                    model[i] -= 1;
+                }
+                for (i, &m) in model.iter().enumerate() {
+                    if r.open_connections(i) != m {
+                        return Err(format!("step {step}: conns drift on {i}"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,770 @@
+//! Beyond-prefix candidate-segment KV reuse: a shared, deduplicated
+//! segment cache for ranking-side tokens.
+//!
+//! The relay race pre-infers only the candidate-*independent* user prefix
+//! ψ; every ranking pass still recomputes the KV of the candidate-item
+//! tokens — even though high-QPS traffic ranks heavily overlapping
+//! candidate sets (a hot item appears in thousands of concurrent
+//! requests).  Position-independent beyond-prefix caching (RcLLM) makes
+//! those segments reusable across requests *and across users*: the first
+//! ranker of `(item, model_version)` computes the segment once, everyone
+//! else reuses or joins.
+//!
+//! This module is the cache plane of that subsystem:
+//!
+//! * [`SegmentKey`] — the cache key `(item_id, model_version)`.  Bumping
+//!   the version (model push) rotates the key space; stale segments stop
+//!   matching and age out via their TTL.
+//! * [`SegmentStore`] — a ref-counted, single-flight store layered on the
+//!   generic [`CacheHierarchy`] (its second instantiation, after the
+//!   per-user ψ hierarchy), holding its own HBM budget partition carved
+//!   out of the r1 slice so prefix ψ caches and segment caches contend
+//!   explicitly.  Lower segment tiers are one [`TierConfig`] away; a
+//!   lower-tier hit promotes synchronously (segment promotion is
+//!   bookkeeping, not a bulk H2D — segments are KiB, ψ is MiB).
+//! * [`SegmentPlan`] / [`SegmentAction`] — what one rank pass decided per
+//!   candidate, produced by the coordinator's `rank_compute` so both
+//!   engines inherit identical decisions.
+//!
+//! Lifecycle mapping onto the level-0 lifecycle window:
+//!
+//! | store concept          | window state                              |
+//! |------------------------|-------------------------------------------|
+//! | in production          | `Producing` (single-flight reservation)    |
+//! | pinned by ≥1 rank pass | `Ready` (protected, lease re-armed)        |
+//! | refcount 0             | `Consumed` (evictable, still readable)     |
+//! | stale (TTL passed)     | expired — reclaimed on next probe/pressure |
+//!
+//! Ref-counting is therefore capacity-safe by construction: the window
+//! never evicts unexpired `Ready`/`Producing` entries, so a pinned
+//! segment can only vanish if a production outlives its TTL — in which
+//! case [`SegmentStore::complete`] reports a clean abort and every
+//! release degrades to a no-op (the refcount never underflows).
+
+use crate::relay::hierarchy::{CacheHierarchy, HierarchyStats, PseudoAction};
+use crate::relay::tier::TierConfig;
+use crate::util::fxhash::FxHashMap;
+
+/// Item ids occupy the low 48 bits of a packed key; the model version
+/// the high 16.
+pub const ITEM_MASK: u64 = (1 << 48) - 1;
+
+/// Cache key of one candidate-item segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SegmentKey {
+    pub item: u64,
+    pub version: u16,
+}
+
+impl SegmentKey {
+    pub fn new(item: u64, version: u16) -> SegmentKey {
+        SegmentKey { item: item & ITEM_MASK, version }
+    }
+
+    /// Pack into the `u64` key space the cache hierarchy indexes by.
+    pub fn packed(self) -> u64 {
+        ((self.version as u64) << 48) | self.item
+    }
+
+    pub fn unpack(packed: u64) -> SegmentKey {
+        SegmentKey { item: packed & ITEM_MASK, version: (packed >> 48) as u16 }
+    }
+}
+
+/// Static segment-subsystem parameters (`CoordinatorConfig::segment`).
+#[derive(Debug, Clone)]
+pub struct SegmentConfig {
+    /// Fraction of the r1·HBM slice carved out for the segment cache
+    /// (`--segment-cache`; 0 disables the subsystem entirely).
+    pub frac: f64,
+    /// Segment staleness bound: entries older than this are treated as
+    /// misses and reclaimed (item features refresh on this horizon).
+    pub ttl_us: u64,
+    /// ψ footprint of one candidate segment
+    /// ([`ModelSpec::segment_bytes`](crate::model::ModelSpec::segment_bytes)).
+    pub seg_bytes: usize,
+    /// Model version — the second key dimension; bump on model push.
+    pub version: u16,
+    /// Optional lower segment tiers (none by default; segments are small
+    /// enough that the HBM partition usually suffices).
+    pub tiers: Vec<TierConfig>,
+}
+
+impl SegmentConfig {
+    /// Segment reuse off — the ψ-only system, decision-identical.
+    pub fn disabled() -> SegmentConfig {
+        SegmentConfig {
+            frac: 0.0,
+            ttl_us: 3_000_000,
+            seg_bytes: 16 << 10,
+            version: 0,
+            tiers: Vec::new(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.frac > 0.0
+    }
+}
+
+/// What one candidate's segment lookup decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentAction {
+    /// Resident in the HBM partition: KV reused, recompute skipped.
+    Reuse,
+    /// Resident in a lower segment tier: promoted synchronously, reused.
+    Promote,
+    /// First ranker of this `(item, version)`: this request computes the
+    /// segment and installs it at completion
+    /// ([`SegmentStore::complete`], passing back the `ticket` so a
+    /// producer whose reservation was evicted and re-produced by a later
+    /// pass cannot install into the successor's production).
+    Produce { ticket: u64 },
+    /// Another in-flight request is producing it: deduped — the producer
+    /// pays the compute, this pass reuses the result.
+    Join,
+    /// Cache full of pinned/in-flight segments: compute inline, uncached.
+    Bypass,
+}
+
+/// Counters exported to metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SegmentStats {
+    pub lookups: u64,
+    /// Served straight from the HBM partition.
+    pub reused: u64,
+    /// Served after a synchronous promotion from a lower segment tier.
+    pub promoted: u64,
+    /// Deduped onto an in-flight production (cross-request single-flight).
+    pub joined: u64,
+    /// Computed and installed by the first ranker.
+    pub produced: u64,
+    /// Computed inline without caching (capacity pressure).
+    pub bypassed: u64,
+    /// Productions whose entry was evicted mid-flight (clean abort).
+    pub aborted: u64,
+    /// Segment KV bytes *not* recomputed (reused + promoted + joined).
+    pub bytes_saved: u64,
+}
+
+impl SegmentStats {
+    /// Accumulate another instance's counters (cluster-wide reporting).
+    pub fn merge(&mut self, b: SegmentStats) {
+        self.lookups += b.lookups;
+        self.reused += b.reused;
+        self.promoted += b.promoted;
+        self.joined += b.joined;
+        self.produced += b.produced;
+        self.bypassed += b.bypassed;
+        self.aborted += b.aborted;
+        self.bytes_saved += b.bytes_saved;
+    }
+
+    /// Fraction of candidate lookups that skipped recomputation.
+    pub fn hit_ratio(&self) -> f64 {
+        let hits = self.reused + self.promoted + self.joined;
+        if self.lookups == 0 {
+            0.0
+        } else {
+            hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+/// What the coordinator's segment planning decided for one rank pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SegmentPlan {
+    /// Segments served from the cache (HBM hit or lower-tier promotion).
+    pub reused: u32,
+    /// Segments deduped onto another request's in-flight production.
+    pub joined: u32,
+    /// Segments this request computes and installs.
+    pub produced: u32,
+    /// Segments computed inline without caching (capacity pressure).
+    pub bypassed: u32,
+}
+
+impl SegmentPlan {
+    /// Candidate recomputations skipped on this rank pass.
+    pub fn skipped(&self) -> usize {
+        (self.reused + self.joined) as usize
+    }
+
+    pub fn total(&self) -> usize {
+        (self.reused + self.joined + self.produced + self.bypassed) as usize
+    }
+}
+
+/// The ref-counted, single-flight candidate-segment store: one per
+/// instance, keyed by [`SegmentKey::packed`], layered on a second
+/// [`CacheHierarchy`] instantiation with its own HBM budget partition.
+#[derive(Debug)]
+pub struct SegmentStore<T> {
+    hier: CacheHierarchy<T>,
+    /// In-flight rank passes holding each segment (pin ⇒ `Ready`
+    /// state ⇒ protected from capacity eviction until the TTL passes).
+    pins: FxHashMap<u64, u32>,
+    /// Current production ownership: key → ticket of the pass allowed to
+    /// install it.  A reservation evicted mid-flight and re-produced by
+    /// a later pass displaces the old ticket, so the stale producer's
+    /// [`SegmentStore::complete`] aborts instead of installing into the
+    /// successor's production.
+    producing: FxHashMap<u64, u64>,
+    next_ticket: u64,
+    ttl_us: u64,
+    seg_bytes: usize,
+    stats: SegmentStats,
+}
+
+impl<T: Clone> SegmentStore<T> {
+    /// `hbm_bytes` is the segment partition (frac · r1 · HBM); `tiers`
+    /// the optional lower segment tiers, top-down.
+    pub fn new(hbm_bytes: usize, tiers: &[TierConfig], ttl_us: u64, seg_bytes: usize) -> Self {
+        // Segment promotions complete synchronously inside `acquire`, so
+        // the hierarchy's promotion-concurrency cap must never queue one.
+        SegmentStore {
+            hier: CacheHierarchy::new(hbm_bytes, tiers, usize::MAX),
+            pins: FxHashMap::default(),
+            producing: FxHashMap::default(),
+            next_ticket: 0,
+            ttl_us,
+            seg_bytes,
+            stats: SegmentStats::default(),
+        }
+    }
+
+    pub fn from_config(hbm_bytes: usize, cfg: &SegmentConfig) -> Self {
+        SegmentStore::new(hbm_bytes, &cfg.tiers, cfg.ttl_us, cfg.seg_bytes)
+    }
+
+    // ---- introspection -----------------------------------------------------
+
+    pub fn stats(&self) -> SegmentStats {
+        self.stats
+    }
+
+    /// Flow counters of the underlying hierarchy (lower segment tiers).
+    pub fn hierarchy_stats(&self) -> HierarchyStats {
+        self.hier.stats()
+    }
+
+    /// Segments resident in the HBM partition.
+    pub fn len(&self) -> usize {
+        self.hier.hbm().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.hier.hbm().used_bytes()
+    }
+
+    /// Current refcount of one segment (0 = unpinned).
+    pub fn pinned(&self, key: u64) -> u32 {
+        self.pins.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Read a resident segment's payload (None while producing/absent).
+    pub fn payload(&self, key: u64, now: u64) -> Option<T> {
+        self.hier.hbm().peek(key, now)
+    }
+
+    // ---- the per-candidate decision ---------------------------------------
+
+    /// Classify one candidate lookup and pin the segment for the calling
+    /// rank pass.  Every non-`Bypass` action takes one pin that the
+    /// caller must [`release`](SegmentStore::release) at completion;
+    /// `Produce` additionally obliges the caller to
+    /// [`complete`](SegmentStore::complete) before releasing.
+    pub fn acquire(&mut self, key: u64, now: u64) -> SegmentAction {
+        self.stats.lookups += 1;
+        match self.hier.pseudo_pre_infer(key, now) {
+            PseudoAction::HbmHit => {
+                // Re-arm the staleness lease and revive Consumed → Ready.
+                self.hier.hbm_mut().extend_lease(key, now + self.ttl_us);
+                self.pin(key);
+                self.stats.reused += 1;
+                self.stats.bytes_saved += self.seg_bytes as u64;
+                SegmentAction::Reuse
+            }
+            PseudoAction::WaitProducing => {
+                self.pin(key);
+                self.stats.joined += 1;
+                self.stats.bytes_saved += self.seg_bytes as u64;
+                SegmentAction::Join
+            }
+            PseudoAction::StartReload { .. } => match self.hier.payload_below(key) {
+                Some((bytes, payload)) => {
+                    let done = self.hier.complete_reload(key, payload, bytes, now, self.ttl_us);
+                    if done.installed {
+                        self.pin(key);
+                        self.stats.promoted += 1;
+                        self.stats.bytes_saved += self.seg_bytes as u64;
+                        SegmentAction::Promote
+                    } else {
+                        // HBM partition is pinned-full: use the lower-tier
+                        // copy inline without promoting.
+                        self.stats.bypassed += 1;
+                        SegmentAction::Bypass
+                    }
+                }
+                None => {
+                    self.hier.abort_reload(key);
+                    self.produce_or_bypass(key, now)
+                }
+            },
+            // Unreachable with synchronous promotions (the single-flight
+            // guard is released before `acquire` returns), but a join is
+            // the safe degradation: release tolerates an absent entry.
+            PseudoAction::JoinReload | PseudoAction::QueuedReload => {
+                self.pin(key);
+                self.stats.joined += 1;
+                self.stats.bytes_saved += self.seg_bytes as u64;
+                SegmentAction::Join
+            }
+            PseudoAction::Miss => self.produce_or_bypass(key, now),
+        }
+    }
+
+    fn produce_or_bypass(&mut self, key: u64, now: u64) -> SegmentAction {
+        match self.hier.hbm_mut().begin_produce(key, self.seg_bytes, now, self.ttl_us) {
+            Ok(()) => {
+                self.pin(key);
+                self.stats.produced += 1;
+                let ticket = self.next_ticket;
+                self.next_ticket += 1;
+                // Displaces any stale owner whose reservation was evicted.
+                self.producing.insert(key, ticket);
+                SegmentAction::Produce { ticket }
+            }
+            Err(_) => {
+                self.stats.bypassed += 1;
+                SegmentAction::Bypass
+            }
+        }
+    }
+
+    /// The producing rank pass finished computing `key`'s segment KV.
+    /// Returns false on a clean abort: either the reservation was
+    /// evicted mid-flight (its TTL passed under capacity pressure) or —
+    /// if a later pass already re-produced the key — this producer's
+    /// `ticket` is stale, so it must not install into the successor's
+    /// in-flight production.  Joiners' releases degrade to no-ops and
+    /// the current/next ranker still installs its own segment.
+    pub fn complete(&mut self, key: u64, ticket: u64, payload: T) -> bool {
+        if self.producing.get(&key) == Some(&ticket) {
+            self.producing.remove(&key);
+            if self.hier.hbm_mut().complete_produce(key, payload) {
+                return true;
+            }
+        }
+        self.stats.aborted += 1;
+        false
+    }
+
+    /// A rank pass that pinned `key` completed.  At refcount 0 the
+    /// segment becomes evictable (`Consumed`) but stays readable — the
+    /// next lookup within the TTL revives it.  Releasing an unpinned or
+    /// vanished key is a no-op: the refcount never underflows.
+    pub fn release(&mut self, key: u64) {
+        let Some(n) = self.pins.get_mut(&key) else { return };
+        *n -= 1;
+        if *n == 0 {
+            self.pins.remove(&key);
+            let _ = self.hier.hbm_mut().consume(key);
+        }
+    }
+
+    fn pin(&mut self, key: u64) {
+        *self.pins.entry(key).or_insert(0) += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::tier::EvictPolicy;
+
+    const KB: usize = 1 << 10;
+    const TTL: u64 = 1_000_000;
+
+    fn store(budget_kb: usize) -> SegmentStore<u32> {
+        SegmentStore::new(budget_kb * KB, &[], TTL, 16 * KB)
+    }
+
+    /// Acquire expecting `Produce`; returns the production ticket.
+    fn produce(s: &mut SegmentStore<u32>, key: u64, now: u64) -> u64 {
+        match s.acquire(key, now) {
+            SegmentAction::Produce { ticket } => ticket,
+            other => panic!("expected Produce for {key}, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn key_packing_round_trips() {
+        for (item, version) in [(0u64, 0u16), (7, 3), (ITEM_MASK, u16::MAX), (123_456_789, 42)] {
+            let k = SegmentKey::new(item, version);
+            assert_eq!(SegmentKey::unpack(k.packed()), k);
+        }
+        // Same item under different versions must not collide.
+        assert_ne!(SegmentKey::new(5, 0).packed(), SegmentKey::new(5, 1).packed());
+        // Items beyond 48 bits are masked, never bleed into the version.
+        let k = SegmentKey::new(u64::MAX, 0);
+        assert_eq!(k.packed() >> 48, 0);
+    }
+
+    #[test]
+    fn produce_release_then_reuse() {
+        let mut s = store(256);
+        let k = SegmentKey::new(1, 0).packed();
+        let t = produce(&mut s, k, 0);
+        assert!(s.complete(k, t, 7));
+        s.release(k);
+        // Refcount 0: evictable but still readable within the TTL.
+        assert_eq!(s.acquire(k, 10), SegmentAction::Reuse);
+        assert_eq!(s.payload(k, 10), Some(7));
+        s.release(k);
+        let st = s.stats();
+        assert_eq!((st.produced, st.reused, st.joined), (1, 1, 0));
+        assert_eq!(st.bytes_saved, 16 * KB as u64);
+    }
+
+    #[test]
+    fn concurrent_rankers_dedup_onto_one_producer() {
+        let mut s = store(256);
+        let k = SegmentKey::new(9, 0).packed();
+        let t = produce(&mut s, k, 0);
+        // Two concurrent requests sharing the hot item join, not produce.
+        assert_eq!(s.acquire(k, 1), SegmentAction::Join);
+        assert_eq!(s.acquire(k, 2), SegmentAction::Join);
+        assert_eq!(s.pinned(k), 3);
+        assert!(s.complete(k, t, 42));
+        // All joiners observe the producer's segment.
+        assert_eq!(s.payload(k, 3), Some(42));
+        s.release(k);
+        s.release(k);
+        assert_eq!(s.pinned(k), 1, "producer still holds its pin");
+        s.release(k);
+        assert_eq!(s.pinned(k), 0);
+        assert_eq!(s.acquire(k, 4), SegmentAction::Reuse);
+        assert_eq!(s.stats().joined, 2);
+    }
+
+    #[test]
+    fn ttl_expiry_forces_reproduction() {
+        let mut s = store(256);
+        let k = SegmentKey::new(3, 0).packed();
+        let t = produce(&mut s, k, 0);
+        assert!(s.complete(k, t, 1));
+        s.release(k);
+        // Within TTL: reuse (and the lease re-arms from `now`).
+        assert_eq!(s.acquire(k, TTL - 1), SegmentAction::Reuse);
+        s.release(k);
+        // Past the re-armed lease: stale, reproduced.
+        let t = produce(&mut s, k, 3 * TTL);
+        assert!(s.complete(k, t, 2));
+        s.release(k);
+        assert_eq!(s.payload(k, 3 * TTL + 1), Some(2));
+    }
+
+    #[test]
+    fn bypass_when_partition_pinned_full() {
+        // Budget for exactly two 16 KB segments, both in production.
+        let mut s = store(32);
+        let (a, b, c) = (1u64, 2u64, 3u64);
+        let ta = produce(&mut s, a, 0);
+        let _tb = produce(&mut s, b, 0);
+        assert_eq!(s.acquire(c, 0), SegmentAction::Bypass);
+        assert_eq!(s.stats().bypassed, 1);
+        // Completing and releasing one frees its slot for the next miss.
+        assert!(s.complete(a, ta, 0));
+        s.release(a);
+        produce(&mut s, c, 1);
+    }
+
+    #[test]
+    fn inflight_eviction_aborts_cleanly() {
+        let mut s = store(32);
+        let (a, b, c) = (1u64, 2u64, 3u64);
+        let ta = produce(&mut s, a, 0);
+        // Past a's TTL, capacity pressure reclaims the expired
+        // reservation to fit new producers.
+        let late = TTL + 1;
+        let tb = produce(&mut s, b, late);
+        let tc = produce(&mut s, c, late);
+        // a's production completes into a reclaimed slot: clean abort.
+        assert!(!s.complete(a, ta, 9));
+        assert_eq!(s.stats().aborted, 1);
+        // Releasing the aborted producer's pin must not underflow or
+        // wedge the store.
+        s.release(a);
+        assert_eq!(s.pinned(a), 0);
+        assert!(s.complete(b, tb, 1) && s.complete(c, tc, 2));
+        s.release(b);
+        s.release(c);
+        assert_eq!(s.acquire(b, late + 1), SegmentAction::Reuse);
+    }
+
+    #[test]
+    fn stale_producer_cannot_install_into_successor_production() {
+        // A's reservation expires and is evicted under pressure; B
+        // re-produces the same key.  A's (stale-ticket) completion must
+        // abort cleanly instead of installing A's payload into B's
+        // in-flight production.
+        let mut s = store(32); // two 16 KB slots
+        let (k, x, y) = (1u64, 2u64, 3u64);
+        let ta = produce(&mut s, k, 0);
+        let tx = produce(&mut s, x, 0); // partition now full
+        let late = TTL + 1;
+        assert!(s.complete(x, tx, 0));
+        s.release(x); // x Consumed: evictable, but k is older (front)
+        // y's production needs a slot: the expired reservation k is the
+        // window's first reclaim.
+        let _ty = produce(&mut s, y, late);
+        // B re-produces k (evicting the consumed x for room) while A is
+        // still running.
+        let tb = produce(&mut s, k, late);
+        assert!(!s.complete(k, ta, 111), "stale producer must abort");
+        assert_eq!(s.stats().aborted, 1);
+        s.release(k); // A's pin
+        // B still owns the production and installs its own segment.
+        assert!(s.complete(k, tb, 222));
+        s.release(k);
+        assert_eq!(s.payload(k, late + 1), Some(222), "successor's segment survives");
+    }
+
+    #[test]
+    fn release_of_unpinned_key_is_noop() {
+        let mut s = store(64);
+        s.release(123); // never acquired
+        let k = SegmentKey::new(1, 0).packed();
+        let t = produce(&mut s, k, 0);
+        assert!(s.complete(k, t, 1));
+        s.release(k);
+        s.release(k); // double release
+        s.release(k);
+        assert_eq!(s.pinned(k), 0);
+        assert_eq!(s.acquire(k, 1), SegmentAction::Reuse);
+    }
+
+    #[test]
+    fn version_bump_rotates_key_space() {
+        let mut s = store(256);
+        let old = SegmentKey::new(7, 0).packed();
+        let new = SegmentKey::new(7, 1).packed();
+        let t = produce(&mut s, old, 0);
+        assert!(s.complete(old, t, 1));
+        s.release(old);
+        // Same item under the new model version misses and re-produces.
+        let t = produce(&mut s, new, 1);
+        assert!(s.complete(new, t, 2));
+        s.release(new);
+        assert_eq!(s.payload(old, 2), Some(1));
+        assert_eq!(s.payload(new, 2), Some(2));
+    }
+
+    #[test]
+    fn lower_tier_hit_promotes_synchronously() {
+        let mut s: SegmentStore<u32> =
+            SegmentStore::new(256 * KB, &[TierConfig::new(1 << 20, EvictPolicy::Lru)], TTL, 16 * KB);
+        let k = SegmentKey::new(4, 0).packed();
+        // Seed the lower tier directly (as a demoted segment would be).
+        assert!(s.hier.spill(k, 16 * KB, 77));
+        assert_eq!(s.acquire(k, 0), SegmentAction::Promote);
+        assert_eq!(s.payload(k, 1), Some(77));
+        s.release(k);
+        let st = s.stats();
+        assert_eq!((st.promoted, st.produced), (1, 0));
+    }
+
+    /// Property: under random interleavings of acquire / complete /
+    /// release across concurrent rank passes, the pin refcount exactly
+    /// tracks outstanding acquires, never underflows, and the store
+    /// never wedges (every key stays acquirable).
+    #[test]
+    fn prop_refcount_tracks_acquires_and_never_underflows() {
+        crate::util::prop::check("segment-refcount", 120, |rng| {
+            let mut s: SegmentStore<u32> = SegmentStore::new(1 << 20, &[], 1 << 40, 16 * KB);
+            let keys: Vec<u64> = (0..6).map(|i| SegmentKey::new(i, 0).packed()).collect();
+            let mut model: FxHashMap<u64, u32> = FxHashMap::default();
+            let mut producing: Vec<(u64, u64)> = Vec::new();
+            for step in 0..400 {
+                let k = *rng.choice(&keys);
+                match rng.range(0, 4) {
+                    0 | 1 => {
+                        let action = s.acquire(k, step as u64);
+                        match action {
+                            SegmentAction::Produce { ticket } => {
+                                if producing.iter().any(|&(p, _)| p == k) {
+                                    return Err(format!("step {step}: duplicate producer for {k}"));
+                                }
+                                producing.push((k, ticket));
+                                *model.entry(k).or_insert(0) += 1;
+                            }
+                            SegmentAction::Reuse | SegmentAction::Join | SegmentAction::Promote => {
+                                *model.entry(k).or_insert(0) += 1;
+                            }
+                            SegmentAction::Bypass => {}
+                        }
+                    }
+                    2 => {
+                        if let Some(pos) = producing.iter().position(|&(p, _)| p == k) {
+                            let (_, ticket) = producing.remove(pos);
+                            if !s.complete(k, ticket, step as u32) {
+                                return Err(format!("step {step}: unexpired production aborted"));
+                            }
+                        }
+                    }
+                    _ => {
+                        // Release — sometimes of keys never pinned.
+                        s.release(k);
+                        if let Some(n) = model.get_mut(&k) {
+                            *n -= 1;
+                            if *n == 0 {
+                                model.remove(&k);
+                            }
+                        }
+                    }
+                }
+                for &key in &keys {
+                    let want = model.get(&key).copied().unwrap_or(0);
+                    if s.pinned(key) != want {
+                        return Err(format!(
+                            "step {step}: pin count {} vs model {want} for {key}",
+                            s.pinned(key)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: per key there is at most one producer at a time, every
+    /// concurrent ranker joins it, and once it completes all of them
+    /// observe the producer's payload — the dedup contract.
+    #[test]
+    fn prop_dedup_joiners_observe_producer_segment() {
+        crate::util::prop::check("segment-dedup", 120, |rng| {
+            let mut s: SegmentStore<u32> = SegmentStore::new(1 << 22, &[], 1 << 40, 16 * KB);
+            let keys: Vec<u64> = (0..5).map(|i| SegmentKey::new(i, 0).packed()).collect();
+            let mut producer: FxHashMap<u64, (u64, u32)> = FxHashMap::default();
+            let mut installed: FxHashMap<u64, u32> = FxHashMap::default();
+            for step in 0..300u32 {
+                let k = *rng.choice(&keys);
+                if rng.bernoulli(0.6) {
+                    match s.acquire(k, step as u64) {
+                        SegmentAction::Produce { ticket } => {
+                            if producer.contains_key(&k) {
+                                return Err(format!("step {step}: two producers for {k}"));
+                            }
+                            producer.insert(k, (ticket, step));
+                        }
+                        SegmentAction::Join => {
+                            if !producer.contains_key(&k) {
+                                return Err(format!("step {step}: join with no producer for {k}"));
+                            }
+                        }
+                        SegmentAction::Reuse => {
+                            let Some(&v) = installed.get(&k) else {
+                                return Err(format!("step {step}: reuse of never-installed {k}"));
+                            };
+                            if s.payload(k, step as u64) != Some(v) {
+                                return Err(format!("step {step}: joiner saw a different segment"));
+                            }
+                        }
+                        SegmentAction::Promote | SegmentAction::Bypass => {}
+                    }
+                } else {
+                    let next = producer.iter().next().map(|(&k, &t)| (k, t));
+                    if let Some((k, (ticket, tag))) = next {
+                        producer.remove(&k);
+                        if !s.complete(k, ticket, tag) {
+                            return Err(format!("step {step}: unexpired production aborted"));
+                        }
+                        installed.insert(k, tag);
+                        if s.payload(k, step as u64) != Some(tag) {
+                            return Err(format!("step {step}: installed payload lost"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: with a tiny partition and short TTL, expired in-flight
+    /// productions evicted under pressure always abort cleanly — the
+    /// store keeps serving, pins drain to zero, and no key gets stuck.
+    #[test]
+    fn prop_inflight_eviction_always_aborts_cleanly() {
+        crate::util::prop::check("segment-abort", 120, |rng| {
+            let ttl = 50;
+            let mut s: SegmentStore<u32> = SegmentStore::new(64 * KB, &[], ttl, 16 * KB);
+            let keys: Vec<u64> = (0..8).map(|i| SegmentKey::new(i, 0).packed()).collect();
+            let mut producing: Vec<(u64, u64)> = Vec::new();
+            let mut pinned: Vec<u64> = Vec::new();
+            let mut now = 0u64;
+            for step in 0..300 {
+                now += rng.range(0, 40) as u64;
+                let k = *rng.choice(&keys);
+                match rng.range(0, 3) {
+                    0 => match s.acquire(k, now) {
+                        SegmentAction::Produce { ticket } => {
+                            producing.push((k, ticket));
+                            pinned.push(k);
+                        }
+                        SegmentAction::Reuse | SegmentAction::Join | SegmentAction::Promote => {
+                            pinned.push(k)
+                        }
+                        SegmentAction::Bypass => {}
+                    },
+                    1 => {
+                        if let Some(pos) =
+                            (!producing.is_empty()).then(|| rng.range(0, producing.len()))
+                        {
+                            let (key, ticket) = producing.remove(pos);
+                            // Aborts are allowed (TTL pressure); either way
+                            // the store must keep functioning.
+                            let _ = s.complete(key, ticket, step as u32);
+                        }
+                    }
+                    _ => {
+                        if let Some(pos) = (!pinned.is_empty()).then(|| rng.range(0, pinned.len()))
+                        {
+                            let key = pinned.remove(pos);
+                            s.release(key);
+                        }
+                    }
+                }
+            }
+            // Drain: complete leftover productions, release every pin.
+            while let Some((k, ticket)) = producing.pop() {
+                let _ = s.complete(k, ticket, 0);
+            }
+            while let Some(k) = pinned.pop() {
+                s.release(k);
+            }
+            for &k in &keys {
+                if s.pinned(k) != 0 {
+                    return Err(format!("key {k} left pinned after drain"));
+                }
+            }
+            // Every key is still acquirable (no wedged single-flight guard).
+            now += 10 * ttl;
+            for &k in &keys {
+                match s.acquire(k, now) {
+                    SegmentAction::Produce { ticket } => {
+                        let _ = s.complete(k, ticket, 1);
+                        s.release(k);
+                    }
+                    SegmentAction::Reuse => s.release(k),
+                    other => return Err(format!("key {k} wedged: {other:?}")),
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -36,12 +36,13 @@ pub fn run(args: &Args) -> Result<()> {
     if let Some(t) = args.get("tier") {
         cfg.tiers = Some(config::parse_tiers(t)?);
     }
+    cfg.segment_frac = config::parse_segment_frac(args, cfg.segment_frac)?;
 
     let scenario = match args.get("scenario") {
         Some(s) => ScenarioKind::parse(s).map_err(|e| anyhow!(e))?,
         None => ScenarioKind::Steady,
     };
-    let wl = WorkloadConfig {
+    let mut wl = WorkloadConfig {
         qps: args.get_f64("qps", 20.0)?,
         duration_us: (args.get_f64("duration-s", 10.0)? * 1e6) as u64,
         num_users: args.get_u64("users", 500)?,
@@ -55,6 +56,7 @@ pub fn run(args: &Args) -> Result<()> {
         seed: cfg.seed,
         ..Default::default()
     };
+    config::apply_candidate_flags(args, &mut wl)?;
 
     let tier_desc = cfg
         .tier_stack()

@@ -26,6 +26,7 @@ use crate::relay::coordinator::{
 };
 use crate::relay::pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
 use crate::relay::router::RouterConfig;
+use crate::relay::segment::SegmentConfig;
 use crate::relay::tier::{EvictPolicy, TierConfig};
 use crate::relay::trigger::{BehaviorMeta, TriggerConfig};
 use crate::runtime::{synth_embedding, Engine, FnKind, KvBuffer, LoadedModel};
@@ -37,6 +38,15 @@ use crate::workload::{GenRequest, WorkloadConfig};
 pub enum Payload {
     Device(Arc<KvBuffer>),
     Host(Arc<Vec<f32>>),
+}
+
+/// The coordinator installs candidate segments with the payload default
+/// (the live rank kernel does not export per-item KV slices, so segment
+/// entries are accounting-level placeholders on this engine).
+impl Default for Payload {
+    fn default() -> Payload {
+        Payload::Host(Arc::new(Vec::new()))
+    }
 }
 
 /// Live-engine configuration.
@@ -61,6 +71,11 @@ pub struct LiveConfig {
     /// Explicit lower-tier stack override (`--tier`); `None` derives a
     /// single tier from the serving mode's DRAM capacity.
     pub tiers: Option<Vec<TierConfig>>,
+    /// Fraction of the HBM window carved out for the candidate-segment
+    /// cache (`--segment-cache`; 0 = disabled).
+    pub segment_frac: f64,
+    /// Staleness bound for cached candidate segments.
+    pub seg_ttl_us: u64,
     pub seed: u64,
 }
 
@@ -80,6 +95,8 @@ impl LiveConfig {
             wait_budget_us: 200_000,
             dram_policy: EvictPolicy::Lru,
             tiers: None,
+            segment_frac: 0.0,
+            seg_ttl_us: 3_000_000,
             seed: 42,
         }
     }
@@ -115,6 +132,9 @@ impl LiveConfig {
                 t_life_us: self.pipeline.t_life_us,
                 kv_p99_bytes: self.spec.kv_bytes(),
                 hbm_bytes: self.hbm_bytes,
+                // Full slice regardless of the segment partition: the ψ
+                // window enforces its budget locally, and admission must
+                // not shift between reuse-on and reuse-off runs.
                 r1: 1.0,
                 q_m: 1000.0,
                 m_slots: self.m_slots,
@@ -128,6 +148,13 @@ impl LiveConfig {
             hbm_bytes: self.hbm_bytes,
             dim: self.spec.dim,
             kv_bytes: Box::new(move |_| spec.kv_bytes()),
+            segment: SegmentConfig {
+                frac: self.segment_frac,
+                ttl_us: self.seg_ttl_us,
+                seg_bytes: self.spec.segment_bytes(),
+                version: 0,
+                tiers: Vec::new(),
+            },
         }
     }
 }
@@ -443,10 +470,21 @@ impl LiveCluster {
     /// Drive one request through retrieval → preproc → ranking with real
     /// sleeps and real execution; returns its lifecycle.
     pub fn drive_request(&self, req: GenRequest, rng: &mut Rng) -> Result<Lifecycle> {
+        self.drive_request_with(req, &[], rng)
+    }
+
+    /// Like [`LiveCluster::drive_request`], carrying the request's
+    /// candidate item set for segment planning (empty = no reuse).
+    pub fn drive_request_with(
+        &self,
+        req: GenRequest,
+        candidates: &[u64],
+        rng: &mut Rng,
+    ) -> Result<Lifecycle> {
         let t0 = Instant::now();
         let wants_trigger = {
             let mut coord = self.shared.coord.lock().unwrap();
-            coord.on_arrival(now_us(), req.id, req.user, req.prefix_len)
+            coord.on_arrival(now_us(), req.id, req.user, req.prefix_len, candidates)
         };
         if wants_trigger {
             // Trigger side path (metadata only); admitted work is handed
@@ -522,6 +560,7 @@ impl LiveCluster {
         let mut metrics = RunMetrics::new(self.cfg.pipeline.pipeline_slo_us);
         metrics.scenario = wl.scenario.label().to_string();
         let metrics = Mutex::new(metrics);
+        let seg_on = { self.shared.coord.lock().unwrap().segments_enabled() };
         let t0 = Instant::now();
         std::thread::scope(|scope| {
             for req in trace {
@@ -530,12 +569,14 @@ impl LiveCluster {
                 if let Some(wait) = due.checked_sub(t0.elapsed()) {
                     std::thread::sleep(wait);
                 }
+                let cands =
+                    if seg_on { crate::workload::candidate_set(wl, &req) } else { Vec::new() };
                 let metrics = &metrics;
                 let threshold = self.cfg.long_threshold;
                 let seed = self.cfg.seed ^ req.id;
                 scope.spawn(move || {
                     let mut rng = Rng::new(seed);
-                    match self.drive_request(req, &mut rng) {
+                    match self.drive_request_with(req, &cands, &mut rng) {
                         Ok(lc) => {
                             let mut m = metrics.lock().unwrap();
                             m.record(&lc, req.prefix_len > threshold);
@@ -563,6 +604,7 @@ impl LiveCluster {
             m.hbm = coord.hbm_stats();
             m.hierarchy = coord.hierarchy_stats();
             m.trigger = coord.trigger_stats();
+            m.segments = coord.segment_stats();
         }
         Ok(m)
     }

@@ -21,7 +21,7 @@
 pub mod arrival;
 pub mod scenario;
 
-pub use scenario::{Burst, Coldstart, Diurnal, Scenario, ScenarioKind, Steady};
+pub use scenario::{Burst, CandidateProfile, Coldstart, Diurnal, Scenario, ScenarioKind, Steady};
 
 use crate::relay::trigger::BehaviorMeta;
 use crate::util::rng::Rng;
@@ -55,6 +55,15 @@ pub struct WorkloadConfig {
     pub fixed_long_len: Option<usize>,
     /// Traffic shape (`--scenario steady|diurnal|burst|coldstart`).
     pub scenario: ScenarioKind,
+    /// Candidate-set shape for ranking-side segment reuse: per-request
+    /// candidates drawn Zipf(`cand_zipf_s`) from a `cand_catalog`-item
+    /// catalog, overlapped per the scenario's [`CandidateProfile`].
+    /// Derived lazily by [`candidate_set`] from a request-keyed RNG
+    /// stream, so traces and ψ decisions are untouched when unused.
+    pub cand_per_request: usize,
+    pub cand_catalog: u64,
+    /// Zipf exponent of candidate-item popularity (`--zipf`).
+    pub cand_zipf_s: f64,
     pub seed: u64,
 }
 
@@ -74,6 +83,9 @@ impl Default for WorkloadConfig {
             refresh_gap_us: (400_000, 3_000_000),
             fixed_long_len: None,
             scenario: ScenarioKind::Steady,
+            cand_per_request: 64,
+            cand_catalog: 100_000,
+            cand_zipf_s: 1.1,
             seed: 42,
         }
     }
@@ -174,6 +186,36 @@ pub fn user_prefix_len(cfg: &WorkloadConfig, user: u64) -> usize {
 /// bit-for-bit for a fixed seed.
 pub fn generate(cfg: &WorkloadConfig) -> Vec<GenRequest> {
     cfg.scenario.as_scenario().generate(cfg)
+}
+
+/// Deterministic per-request candidate set (order-preserving, deduped):
+/// Zipf-skewed item popularity over the catalog with the scenario's
+/// overlap profile mixed in — hot draws come from the catalog's
+/// most-popular head, so concurrent requests share them.  Drawn from a
+/// request-keyed RNG stream independent of the arrival generator, so
+/// enabling candidates never perturbs the trace itself.
+pub fn candidate_set(cfg: &WorkloadConfig, req: &GenRequest) -> Vec<u64> {
+    use std::collections::HashSet;
+    if cfg.cand_per_request == 0 {
+        return Vec::new();
+    }
+    let profile = cfg.scenario.candidate_profile();
+    let catalog = cfg.cand_catalog.max(1);
+    let hot = profile.hot_items.clamp(1, catalog);
+    let mut rng = Rng::new(cfg.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xCA9D);
+    let mut out = Vec::with_capacity(cfg.cand_per_request);
+    let mut seen = HashSet::with_capacity(cfg.cand_per_request);
+    for _ in 0..cfg.cand_per_request {
+        let item = if rng.bernoulli(profile.hot_frac) {
+            rng.zipf(hot, cfg.cand_zipf_s) - 1
+        } else {
+            rng.zipf(catalog, cfg.cand_zipf_s) - 1
+        };
+        if seen.insert(item) {
+            out.push(item);
+        }
+    }
+    out
 }
 
 /// Trace statistics (sanity + tests + EXPERIMENTS.md reporting).
@@ -289,6 +331,62 @@ mod tests {
         assert_eq!(generate(&cfg), generate(&cfg));
         let cfg2 = WorkloadConfig { seed: 43, ..cfg };
         assert_ne!(generate(&cfg), generate(&cfg2));
+    }
+
+    #[test]
+    fn candidate_sets_deterministic_deduped_and_bounded() {
+        let cfg = WorkloadConfig::default();
+        let req = GenRequest { id: 9, arrival_us: 0, user: 4, prefix_len: 4096, is_refresh: false };
+        let a = candidate_set(&cfg, &req);
+        assert_eq!(a, candidate_set(&cfg, &req), "same request ⇒ same candidates");
+        assert!(!a.is_empty() && a.len() <= cfg.cand_per_request);
+        assert!(a.iter().all(|&i| i < cfg.cand_catalog));
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), a.len(), "candidates are distinct items");
+        // Different requests draw different sets (independent streams).
+        let req2 = GenRequest { id: 10, ..req };
+        assert_ne!(a, candidate_set(&cfg, &req2));
+        // Disabled candidate generation yields nothing.
+        let off = WorkloadConfig { cand_per_request: 0, ..cfg };
+        assert!(candidate_set(&off, &req).is_empty());
+    }
+
+    #[test]
+    fn scenario_overlap_knobs_order_scenarios() {
+        use std::collections::HashSet;
+        // Mean pairwise candidate-set intersection must rank burst
+        // (flash crowd on trending items) above steady above coldstart —
+        // the per-scenario knobs the segment cache's win depends on.
+        let mean_shared = |kind: &str| {
+            let cfg = WorkloadConfig {
+                scenario: ScenarioKind::parse(kind).unwrap(),
+                ..Default::default()
+            };
+            let sets: Vec<HashSet<u64>> = (0..120u64)
+                .map(|id| {
+                    let req = GenRequest {
+                        id,
+                        arrival_us: id,
+                        user: id,
+                        prefix_len: 4096,
+                        is_refresh: false,
+                    };
+                    candidate_set(&cfg, &req).into_iter().collect()
+                })
+                .collect();
+            let shared: usize = sets
+                .windows(2)
+                .map(|w| w[0].intersection(&w[1]).count())
+                .sum();
+            shared as f64 / (sets.len() - 1) as f64
+        };
+        let (burst, steady, cold) =
+            (mean_shared("burst"), mean_shared("steady"), mean_shared("coldstart"));
+        assert!(burst > 1.3 * steady, "burst {burst:.2} !≫ steady {steady:.2}");
+        assert!(steady > cold, "steady {steady:.2} !> coldstart {cold:.2}");
+        assert!(burst > 10.0, "flash crowds must rank shared trending items: {burst:.2}");
     }
 
     #[test]

@@ -24,6 +24,17 @@ use crate::util::rng::Rng;
 use crate::workload::arrival::{ModulatedPoisson, Poisson};
 use crate::workload::{user_prefix_len, GenRequest, WorkloadConfig};
 
+/// Per-scenario candidate-overlap knobs: each candidate draw comes from
+/// the `hot_items` most-popular head of the catalog with probability
+/// `hot_frac`, otherwise from the whole catalog.  Flash crowds rank the
+/// same trending items over and over (the segment cache's best case);
+/// coldstart traffic barely overlaps (its worst case).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CandidateProfile {
+    pub hot_items: u64,
+    pub hot_frac: f64,
+}
+
 /// A workload scenario: turns a [`WorkloadConfig`] into an arrival trace.
 pub trait Scenario {
     fn name(&self) -> &'static str;
@@ -87,6 +98,20 @@ impl ScenarioKind {
                 Box::new(Burst { start_frac, dur_frac, magnitude, hot_users })
             }
             ScenarioKind::Coldstart { cold_frac } => Box::new(Coldstart { cold_frac }),
+        }
+    }
+
+    /// The scenario's candidate-overlap knobs (see [`CandidateProfile`]):
+    /// how strongly concurrent requests' candidate sets overlap, on top
+    /// of the global Zipf item popularity (`--zipf`).
+    pub fn candidate_profile(&self) -> CandidateProfile {
+        match self {
+            ScenarioKind::Steady => CandidateProfile { hot_items: 512, hot_frac: 0.2 },
+            ScenarioKind::Diurnal { .. } => CandidateProfile { hot_items: 512, hot_frac: 0.35 },
+            // Flash crowd: everyone ranks the same trending items.
+            ScenarioKind::Burst { .. } => CandidateProfile { hot_items: 64, hot_frac: 0.8 },
+            // First-seen users bring long-tail candidates.
+            ScenarioKind::Coldstart { .. } => CandidateProfile { hot_items: 4096, hot_frac: 0.05 },
         }
     }
 
