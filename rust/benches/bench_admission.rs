@@ -1,0 +1,112 @@
+//! Admission-control hot-path microbenchmarks: the static Eqs. 1–3
+//! decide path, the closed-loop adaptive decide path (windowed
+//! estimators + footprint window) under hot-user reuse and under
+//! distinct-user churn, and the full coordinator decision flow with
+//! adaptive admission enabled.  The trigger runs once per long request
+//! on the side path, so its budget is a few microseconds; emits
+//! `BENCH_admission.json` so the admission hot path joins the recorded
+//! perf trajectory.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_results};
+use relaygr::relay::trigger::{
+    AdmissionConfig, BehaviorMeta, Decision, Trigger, TriggerConfig,
+};
+
+fn meta(user: u64) -> BehaviorMeta {
+    BehaviorMeta { user, prefix_len: 4096, dim: 256 }
+}
+
+fn main() {
+    let mut results = Vec::new();
+    const KV: usize = 32 << 20;
+
+    // --- static decide: the pre-adaptive Eqs. 1-3 flow --------------------
+    let mut stat = Trigger::new(
+        TriggerConfig::paper_example(),
+        Box::new(|m: &BehaviorMeta| m.prefix_len as f64 * 20.0),
+    );
+    let mut now = 0u64;
+    let mut i = 0u64;
+    results.push(bench("admission/static_decide_release", 100, 50_000, || {
+        now += 500;
+        i += 1;
+        if stat.decide(now, &meta(i & 1023), KV) == Decision::Admit {
+            stat.release();
+        }
+    }));
+
+    // --- adaptive decide, hot users: footprint window mostly re-admits ----
+    let mut cfg = TriggerConfig::paper_example();
+    cfg.admission = AdmissionConfig::adaptive();
+    let mut hot = Trigger::new(cfg, Box::new(|m: &BehaviorMeta| m.prefix_len as f64 * 20.0));
+    let mut now = 0u64;
+    let mut i = 0u64;
+    results.push(bench("admission/adaptive_decide_hot_users", 100, 50_000, || {
+        now += 500;
+        i += 1;
+        if hot.decide(now, &meta(i & 63), KV) == Decision::Admit {
+            hot.release();
+        }
+    }));
+
+    // --- adaptive decide, distinct users: window churn + pruning ----------
+    let mut cfg = TriggerConfig::paper_example();
+    cfg.admission = AdmissionConfig::adaptive();
+    cfg.t_life_us = 200_000; // short horizon: constant prune pressure
+    let mut churn = Trigger::new(cfg, Box::new(|m: &BehaviorMeta| m.prefix_len as f64 * 20.0));
+    let mut now = 0u64;
+    let mut u = 0u64;
+    results.push(bench("admission/adaptive_decide_cold_churn", 100, 50_000, || {
+        now += 500;
+        u += 1;
+        if churn.decide(now, &meta(u), KV) == Decision::Admit {
+            churn.release();
+        }
+    }));
+
+    // --- coordinator decision flow with adaptive admission ----------------
+    {
+        use relaygr::relay::coordinator::{RankAction, RelayCoordinator, SignalAction, Stage};
+        use relaygr::relay::tier::DramPolicy;
+        let mut sim_cfg = relaygr::cluster::SimConfig::standard(
+            relaygr::relay::baseline::Mode::RelayGr { dram: DramPolicy::Capacity(64 << 30) },
+        );
+        sim_cfg.admission = AdmissionConfig::adaptive();
+        let mut coord: RelayCoordinator<()> =
+            RelayCoordinator::new(sim_cfg.coordinator_config(), |_| sim_cfg.estimator())
+                .expect("coordinator builds");
+        let kv = 32usize << 20;
+        let mut id = 0u64;
+        let mut now = 0u64;
+        results.push(bench("coordinator/decision_flow_adaptive", 50, 20_000, || {
+            id += 1;
+            now += 700;
+            let user = id % 1024;
+            if coord.on_arrival(now, id, user, 4096, &[]) {
+                match coord.on_trigger_check(now, id) {
+                    SignalAction::Produce { instance, user, .. } => {
+                        coord.on_psi_ready(now, instance, user, Some(()));
+                    }
+                    SignalAction::Reload { instance, user, bytes } => {
+                        coord.on_reload_done(now, instance, user, Some(()), bytes);
+                    }
+                    SignalAction::None => {}
+                }
+            }
+            let inst = coord.on_stage_done(now, id, Stage::Preproc).expect("rank routed");
+            if let RankAction::StartReload { bytes } = coord.on_rank_start(now, id) {
+                coord.on_reload_done(now, inst, user, Some(()), bytes);
+            }
+            let _ = coord.rank_compute(now, id);
+            let done = coord.on_rank_done(now, id, kv);
+            if let Some(bytes) = done.spill {
+                coord.complete_spill(done.instance, done.user, bytes, ());
+            }
+        }));
+    }
+
+    write_results("admission", &results);
+}

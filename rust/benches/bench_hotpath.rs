@@ -50,7 +50,7 @@ fn main() {
         now += 500;
         let meta = BehaviorMeta { user: users[i & 4095], prefix_len: 4096, dim: 256 };
         i += 1;
-        if trigger.decide(now, &meta) == relaygr::relay::trigger::Decision::Admit {
+        if trigger.decide(now, &meta, 32 << 20) == relaygr::relay::trigger::Decision::Admit {
             trigger.release();
         }
     }));

@@ -19,6 +19,7 @@ use crate::relay::hbm::HbmStats;
 use crate::relay::hierarchy::HierarchyStats;
 use crate::relay::pipeline::CacheOutcome;
 use crate::relay::segment::SegmentStats;
+use crate::relay::trigger::TriggerStats;
 use crate::workload::{candidate_set, generate, GenRequest, WorkloadConfig};
 
 /// One serialized run: per-request outcomes (sorted by request id), the
@@ -33,6 +34,7 @@ pub struct ReferenceRun {
     pub segments: SegmentStats,
     pub hierarchy: HierarchyStats,
     pub hbm: HbmStats,
+    pub trigger: TriggerStats,
 }
 
 /// Drive `trace` through `coord` serially.  `rank_cost` receives
@@ -92,6 +94,7 @@ pub fn drive_reference(
         segments: coord.segment_stats(),
         hierarchy: coord.hierarchy_stats(),
         hbm: coord.hbm_stats(),
+        trigger: coord.trigger_stats(),
         outcomes,
         outcome_counts,
     })
@@ -100,6 +103,11 @@ pub fn drive_reference(
 /// Convenience: serialized run of `cfg`'s coordinator over `wl`'s trace,
 /// pricing rank compute with `cfg`'s hardware cost model.
 pub fn run_reference(cfg: &SimConfig, wl: &WorkloadConfig) -> Result<ReferenceRun> {
+    // Same per-scenario adaptive operating point the simulator seeds —
+    // the engines must start the closed loop from the same state.
+    let mut cfg = cfg.clone();
+    let profile = wl.scenario.admission_profile();
+    cfg.admission.seed_operating_point(profile.headroom_init, profile.rate_mult_init);
     let coord: RelayCoordinator<()> =
         RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator())?;
     let spec = cfg.spec;

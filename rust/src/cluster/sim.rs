@@ -33,7 +33,7 @@ use crate::relay::pipeline::{Lifecycle, PipelineConfig, StageSampler};
 use crate::relay::router::RouterConfig;
 use crate::relay::segment::SegmentConfig;
 use crate::relay::tier::{EvictPolicy, TierConfig};
-use crate::relay::trigger::{BehaviorMeta, TriggerConfig};
+use crate::relay::trigger::{AdmissionConfig, BehaviorMeta, TriggerConfig};
 use crate::util::rng::Rng;
 use crate::workload::{GenRequest, WorkloadConfig};
 
@@ -61,6 +61,10 @@ pub struct SimConfig {
     pub long_threshold: usize,
     /// P99 prefix length used for kv_p99 in admission control.
     pub kv_p99_prefix: usize,
+    /// Admission-control mode + closed-loop knobs (`--admission`).  The
+    /// scenario's initial operating point is seeded at run start
+    /// (`ScenarioKind::admission_profile`) unless set explicitly.
+    pub admission: AdmissionConfig,
     /// Eviction policy for the mode-selected DRAM tier (`--dram-policy`).
     pub dram_policy: EvictPolicy,
     /// Explicit lower-tier stack override (`--tier`); `None` derives a
@@ -104,6 +108,7 @@ impl SimConfig {
             hop_us: 150.0,
             long_threshold: 2048,
             kv_p99_prefix: 8192,
+            admission: AdmissionConfig::default(),
             dram_policy: EvictPolicy::Lru,
             tiers: None,
             segment_frac: 0.0,
@@ -131,6 +136,7 @@ impl SimConfig {
             m_slots: self.m_slots,
             r2: self.router.r2.max(1e-9),
             n_instances: self.router.n_instances,
+            admission: self.admission.clone(),
         }
     }
 
@@ -266,7 +272,11 @@ pub struct Sim {
 }
 
 impl Sim {
-    pub fn new(cfg: SimConfig, workload: &WorkloadConfig) -> anyhow::Result<Sim> {
+    pub fn new(mut cfg: SimConfig, workload: &WorkloadConfig) -> anyhow::Result<Sim> {
+        // Per-scenario initial operating point for the adaptive admission
+        // controller (explicit CLI/config choices win; static ignores it).
+        let profile = workload.scenario.admission_profile();
+        cfg.admission.seed_operating_point(profile.headroom_init, profile.rate_mult_init);
         let trace = crate::workload::generate(workload);
         let coord = RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator())?;
         let slots = (0..cfg.router.n_instances).map(|_| vec![0u64; cfg.m_slots]).collect();

@@ -9,6 +9,7 @@ use crate::cluster::SimConfig;
 use crate::model::{Dtype, HardwareProfile, ModelSpec, ModelType};
 use crate::relay::baseline::Mode;
 use crate::relay::tier::{DramPolicy, EvictPolicy, TierConfig};
+use crate::relay::trigger::{AdmissionConfig, AdmissionMode};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::workload::{ScenarioKind, WorkloadConfig};
@@ -73,6 +74,14 @@ pub fn parse_segment_frac(args: &Args, default: f64) -> Result<f64> {
         bail!("--segment-cache must be in [0, 0.9], got {frac}");
     }
     Ok(frac)
+}
+
+/// Layer `--admission static|adaptive` plus the closed-loop knobs
+/// (`--headroom-min/-max`, `--rate-mult-min/-max`, `--adapt-window`,
+/// `--headroom-init`, `--rate-mult-init`) over `default` — shared by the
+/// serve, sim/figure and `plan` CLIs so they agree on names and ranges.
+pub fn parse_admission(args: &Args, default: &AdmissionConfig) -> Result<AdmissionConfig> {
+    AdmissionConfig::from_args(args, default)
 }
 
 /// Apply the candidate-set flags (`--zipf`, `--cands`, `--catalog`) with
@@ -156,6 +165,15 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
         if let Some(v) = j.get("segment_cache").and_then(Json::as_f64) {
             cfg.segment_frac = v;
         }
+        if let Some(v) = j.get("admission").and_then(Json::as_str) {
+            cfg.admission.mode = AdmissionMode::parse(v).context("config file")?;
+        }
+        if let Some(v) = j.get("headroom_min").and_then(Json::as_f64) {
+            cfg.admission.headroom_min = v;
+        }
+        if let Some(v) = j.get("headroom_max").and_then(Json::as_f64) {
+            cfg.admission.headroom_max = v;
+        }
     }
     // CLI overrides.
     if let Some(hw) = args.get("hw") {
@@ -176,6 +194,7 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
         cfg.tiers = Some(parse_tiers(t)?);
     }
     cfg.segment_frac = parse_segment_frac(args, cfg.segment_frac)?;
+    cfg.admission = parse_admission(args, &cfg.admission)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     if cfg.spec.dim % cfg.spec.heads != 0 {
         // Keep heads consistent when dim is overridden.
@@ -240,6 +259,7 @@ pub fn sim_config_json(cfg: &SimConfig, wl: &WorkloadConfig) -> Json {
                 .into(),
         )
         .set("segment_cache", cfg.segment_frac.into())
+        .set("admission", cfg.admission.label().into())
         .set("zipf", wl.cand_zipf_s.into())
         .set("seed", cfg.seed.into());
     j
@@ -385,6 +405,35 @@ mod tests {
         assert!((workload_config(&f).unwrap().cand_zipf_s - 1.6).abs() < 1e-12);
         let over = args(&["x", "--config", path.to_str().unwrap(), "--segment-cache", "0.1"]);
         assert!((sim_config(&over, Mode::Baseline).unwrap().segment_frac - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn admission_flags_and_file_keys_layer() {
+        // Default: static — the decision-identical pre-adaptive trigger.
+        let none = sim_config(&args(&["figure"]), Mode::Baseline).unwrap();
+        assert_eq!(none.admission.mode, AdmissionMode::Static);
+        // CLI flag flips the mode and knobs.
+        let a = args(&["figure", "--admission", "adaptive", "--headroom-min", "0.55"]);
+        let cfg = sim_config(&a, Mode::Baseline).unwrap();
+        assert!(cfg.admission.is_adaptive());
+        assert!((cfg.admission.headroom_min - 0.55).abs() < 1e-12);
+        assert!(sim_config(&args(&["figure", "--admission", "psychic"]), Mode::Baseline).is_err());
+        // File key layers under the CLI.
+        let dir = std::env::temp_dir().join("relaygr_adm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"admission": "adaptive", "headroom_min": 0.6}"#).unwrap();
+        let f = args(&["x", "--config", path.to_str().unwrap()]);
+        let cfg = sim_config(&f, Mode::Baseline).unwrap();
+        assert!(cfg.admission.is_adaptive());
+        assert!((cfg.admission.headroom_min - 0.6).abs() < 1e-12);
+        let over = args(&["x", "--config", path.to_str().unwrap(), "--admission", "static"]);
+        let over_cfg = sim_config(&over, Mode::Baseline).unwrap();
+        assert_eq!(over_cfg.admission.mode, AdmissionMode::Static);
+        // The run record carries the admission label.
+        let j = sim_config_json(&cfg, &WorkloadConfig::default());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req_str("admission").unwrap(), "adaptive");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! rows/series the paper reports; `relaygr figure all` runs everything.
 //! Results are printed and persisted under `results/`.
 
+pub mod admission;
 pub mod common;
 pub mod fig11;
 pub mod fig12;
@@ -24,7 +25,7 @@ use crate::util::cli::Args;
 pub const ALL: &[&str] = &[
     "fig1", "fig3", "fig11a", "fig11b", "fig11c", "fig11d", "fig12", "fig13a", "fig13b",
     "fig13c", "fig13d", "fig14a", "fig14b", "fig14c", "fig14d", "fig15a", "fig15b", "table1",
-    "scenarios", "tiers", "segments",
+    "scenarios", "tiers", "segments", "admission",
 ];
 
 pub fn run_one(id: &str, args: &Args) -> Result<()> {
@@ -50,6 +51,7 @@ pub fn run_one(id: &str, args: &Args) -> Result<()> {
         "scenarios" => scenarios::scenarios(args),
         "tiers" => tiers::tiers(args),
         "segments" => segments::segments(args),
+        "admission" => admission::admission(args),
         other => bail!("unknown figure '{other}' (available: {} all)", ALL.join(" ")),
     }
 }

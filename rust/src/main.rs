@@ -60,8 +60,10 @@ fn help() -> String {
      \x20 calibrate  measure live execution costs, write calibration JSON\n\
      \x20 figure     regenerate a paper figure/table: fig1 fig3 fig11a..d fig12\n\
      \x20            fig13a..d fig14a..d fig15a fig15b table1 scenarios tiers\n\
-     \x20            segments all\n\
-     \x20 plan       admission-control capacity planning (Eqs. 1–3)\n\
+     \x20            segments admission all\n\
+     \x20 plan       admission-control capacity planning (Eqs. 1–3); with\n\
+     \x20            --admission adaptive also the closed-loop operating\n\
+     \x20            bands and per-scenario initial operating points\n\
      \n\
      COMMON OPTIONS:\n\
      \x20 --artifacts <dir>     artifact directory (default: artifacts)\n\
@@ -74,7 +76,10 @@ fn help() -> String {
      \x20                       8g:lru,500g:cost (serve + figure/sim)\n\
      \x20 --segment-cache <f>   fraction of the r1 HBM slice carved out for\n\
      \x20                       the candidate-segment cache (0 = off, default)\n\
-     \x20 --zipf <s>            candidate-item popularity skew (default 1.1)\n"
+     \x20 --zipf <s>            candidate-item popularity skew (default 1.1)\n\
+     \x20 --admission <m>       admission control: static (default) | adaptive\n\
+     \x20                       (+ --headroom-min/-max, --rate-mult-min/-max,\n\
+     \x20                       --adapt-window; serve + figure/sim + plan)\n"
         .to_string()
 }
 

@@ -73,6 +73,33 @@ pub fn outcome_index(o: CacheOutcome) -> usize {
 
 pub const OUTCOME_NAMES: [&str; 5] = ["full", "hbm", "dram", "join", "fallback"];
 
+/// The small-sample failure allowance shared by every compliance check:
+/// `max(1, ⌊(1−s)·n⌋)`.  The product is nudged by one relative ulp
+/// before flooring so an exactly-integral `(1−s)·n` (e.g. n = 1000 at
+/// s = 0.9 → 100) is not floored to 99 by the representation error of
+/// `1−s` — the counterpart of counting the failures themselves exactly.
+pub fn allowed_failures(n: u64, required_success: f64) -> u64 {
+    let x = (1.0 - required_success) * n as f64;
+    std::cmp::max(1, (x * (1.0 + 1e-12)).floor() as u64)
+}
+
+/// Exact SLO-failure count + allowance check for one latency histogram.
+pub(crate) fn histogram_compliant(
+    h: &Histogram,
+    threshold_us: f64,
+    required_success: f64,
+) -> bool {
+    let n = h.count();
+    if n == 0 {
+        return true;
+    }
+    // Count failures exactly from the integer bucket counts: deriving
+    // them from `n·(1−fraction_le)` flips compliance either way at the
+    // boundary once n is large (double rounding through f64).
+    let fails = n - h.count_le(threshold_us);
+    fails <= allowed_failures(n, required_success)
+}
+
 /// Cache-hit rate among relay-routed long requests: any cache-served
 /// outcome (HBM, DRAM, joined reload) over cache-served + fallback.
 /// `counts` is indexed like [`RunMetrics::outcome_counts`].
@@ -190,15 +217,9 @@ impl RunMetrics {
     /// few hundred requests does not dominate (the paper's runs have
     /// millions of queries; ⌈0.1%·n⌉ there is ≫ 1).
     pub fn slo_compliant(&self, required_success: f64) -> bool {
-        let ok = |h: &Histogram| {
-            let n = h.count();
-            if n == 0 {
-                return true;
-            }
-            let fails = (n as f64 * (1.0 - h.fraction_le(self.pipeline_slo_us))).round() as u64;
-            fails <= std::cmp::max(1, ((1.0 - required_success) * n as f64).floor() as u64)
-        };
-        self.p99_e2e() <= self.pipeline_slo_us && ok(&self.e2e) && ok(&self.e2e_long)
+        self.p99_e2e() <= self.pipeline_slo_us
+            && histogram_compliant(&self.e2e, self.pipeline_slo_us, required_success)
+            && histogram_compliant(&self.e2e_long, self.pipeline_slo_us, required_success)
     }
 
     /// DRAM hit rate among relay-served long requests (the paper's "+x%").
@@ -251,6 +272,27 @@ impl RunMetrics {
 
     pub fn e2e_summary(&self) -> Summary {
         self.e2e.summary()
+    }
+
+    /// One-line admission-adaptation report, present when the closed
+    /// loop made decisions this run: headroom trajectory, the windowed
+    /// footprint estimate vs the provisioned static bound, and the
+    /// occupancy-aware live-cache limit.
+    pub fn admission_brief(&self) -> Option<String> {
+        let t = self.trigger;
+        if t.adapted == 0 {
+            return None;
+        }
+        Some(format!(
+            "ADM adaptive        headroom=[{:.2}..{:.2}] fp-est={:.1}MB static-bound={:.1}MB l_max*={} fp-limited={} rate-limited={}",
+            t.headroom_milli_min as f64 / 1e3,
+            t.headroom_milli_max as f64 / 1e3,
+            t.footprint_est_bytes as f64 / 1e6,
+            t.footprint_static_bytes as f64 / 1e6,
+            t.l_max_effective,
+            t.footprint_limited,
+            t.rate_limited,
+        ))
     }
 
     /// One line per cache tier — level 0 is the HBM window (with
@@ -390,6 +432,20 @@ mod tests {
         assert_eq!(report.len(), 4);
         assert!(report[3].contains("hit=70%"), "{}", report[3]);
         assert!(report[3].contains("saved=7.3MB"), "{}", report[3]);
+    }
+
+    #[test]
+    fn admission_brief_present_only_for_adaptive_runs() {
+        let mut m = RunMetrics::new(1.0);
+        assert!(m.admission_brief().is_none(), "static runs: no adaptation line");
+        m.trigger.adapted = 5;
+        m.trigger.headroom_milli_min = 520;
+        m.trigger.headroom_milli_max = 950;
+        m.trigger.footprint_est_bytes = 192 << 20;
+        m.trigger.l_max_effective = 6;
+        let line = m.admission_brief().unwrap();
+        assert!(line.contains("headroom=[0.52..0.95]"), "{line}");
+        assert!(line.contains("l_max*=6"), "{line}");
     }
 
     #[test]

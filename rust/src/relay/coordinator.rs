@@ -423,10 +423,13 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         self.router.on_complete(route.instance); // signal, not a held connection
         let inst = route.instance;
         let meta = BehaviorMeta { user, prefix_len, dim: self.cfg.dim };
+        // The observed ψ footprint is the adaptive controller's feedback
+        // signal (static admission ignores it).
+        let kv = (self.cfg.kv_bytes)(prefix_len);
         let decision = self
             .triggers
             .get_mut(&inst)
-            .map(|t| t.decide(now, &meta))
+            .map(|t| t.decide(now, &meta, kv))
             .unwrap_or(Decision::NotAtRisk);
         if decision != Decision::Admit {
             return SignalAction::None;
@@ -438,7 +441,6 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         }
         // The pre-infer signal itself performs the pseudo-pre-infer checks,
         // skipping redundant recomputation when ψ is already local (§3.4).
-        let kv = (self.cfg.kv_bytes)(prefix_len);
         let action = self.instances[inst].cache.pseudo_pre_infer(user, now);
         match action {
             PseudoAction::HbmHit | PseudoAction::WaitProducing => {
@@ -461,9 +463,13 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                     Ok(()) => SignalAction::Produce { instance: inst, user, prefix_len },
                     Err(_) => {
                         // Admission overcommitted (shouldn't happen when Eqs.
-                        // 1-3 hold); treat as not admitted.
+                        // 1-3 hold); treat as not admitted.  The cancel frees
+                        // the slot *and* the adaptive footprint reservation;
+                        // clearing `st.admitted` below is what guarantees the
+                        // release is not repeated at `on_rank_done` — the
+                        // only other `release()` site.
                         if let Some(t) = self.triggers.get_mut(&inst) {
-                            t.release();
+                            t.cancel_admit(user);
                         }
                         let st = self.requests.get_mut(&req).unwrap();
                         st.admitted = false;
@@ -768,7 +774,10 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 }
             }
         }
-        // Release the admitted live-cache slot.
+        // Release the admitted live-cache slot — the unique pairing for
+        // this request's admit: a signal-time overcommit already cleared
+        // `st.admitted` (after its own `cancel_admit`), so the two
+        // release sites are mutually exclusive per request.
         if st.admitted {
             if let Some(pre_inst) = st.pre_instance {
                 if let Some(t) = self.triggers.get_mut(&pre_inst) {
@@ -1036,6 +1045,92 @@ mod tests {
         let d3 = c.on_rank_done(400_500, 3, bytes);
         assert_eq!(d2.outcome, CacheOutcome::DramHit);
         assert_eq!(d3.outcome, CacheOutcome::JoinedReload);
+    }
+
+    /// Tentpole: a misprovisioned worst-case `kv_p99` (larger than the
+    /// r1·HBM slice ⇒ static `L_max = 0`) starves the relay path, while
+    /// the adaptive controller admits against observed footprints — same
+    /// coordinator, both engines inherit the policy.
+    #[test]
+    fn adaptive_admission_beats_collapsed_static_bound() {
+        use crate::relay::trigger::AdmissionConfig;
+        let run = |adaptive: bool| {
+            let mut cfg = config(Mode::RelayGr { dram: DramPolicy::Disabled });
+            // Provisioned P99 ψ (32 GB) exceeds the 16 GB r1 slice.
+            cfg.trigger.kv_p99_bytes = 32_000_000_000;
+            assert_eq!(cfg.trigger.limits().l_max, 0);
+            if adaptive {
+                cfg.trigger.admission = AdmissionConfig::adaptive();
+            }
+            let mut c: RelayCoordinator<u32> =
+                RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+            let done = drive(&mut c, 0, 1, 42, 4096);
+            (done, c.trigger_stats())
+        };
+        let (stat_done, stat_s) = run(false);
+        assert_eq!(stat_done.outcome, CacheOutcome::FullInference);
+        assert!(!stat_done.admitted);
+        assert_eq!((stat_s.admitted, stat_s.footprint_limited), (0, 1));
+        let (adapt_done, adapt_s) = run(true);
+        assert_eq!(adapt_done.outcome, CacheOutcome::HbmHit, "observed 32 MB ψ fits");
+        assert!(adapt_done.admitted);
+        assert_eq!((adapt_s.admitted, adapt_s.footprint_limited), (1, 0));
+        assert!(adapt_s.l_max_effective > 0, "occupancy-aware bound reported");
+    }
+
+    /// A signal-time HBM overcommit under adaptive admission cancels the
+    /// admit cleanly: slot and windowed footprint reservation both come
+    /// back, and the release ledger stays balanced (no double release at
+    /// completion, no spurious release).
+    #[test]
+    fn adaptive_overcommit_cancels_slot_and_footprint() {
+        use crate::relay::trigger::AdmissionConfig;
+        let mut cfg = config(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.trigger.admission = AdmissionConfig::adaptive();
+        // The ψ window is half the 1 GB instance slice (segment carve),
+        // while admission plans against the full trigger slice — the
+        // deliberate PR 3 mismatch that exercises the overcommit path.
+        cfg.segment = SegmentConfig { frac: 0.5, ..SegmentConfig::disabled() };
+        cfg.kv_bytes = Box::new(|_| 300 << 20);
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        // Request 1 produces 300 MB into the 512 MB window.
+        assert!(c.on_arrival(0, 1, 7, 4096, &[]));
+        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
+            panic!("first admit produces");
+        };
+        c.on_psi_ready(0, instance, user, Some(1));
+        // Request 2 (another user) also admits at the trigger, which
+        // plans against the full 1 GB slice.  If consistent hashing
+        // lands it on request 1's instance, its `begin_produce` finds
+        // only 212 MB free in the carved-down window and the admit is
+        // cancelled; on the other special instance it produces cleanly.
+        // Both paths must leave the ledger balanced.
+        assert!(c.on_arrival(10, 2, 7 + (1 << 40), 4096, &[]));
+        let act = c.on_trigger_check(10, 2);
+        let st2_admitted = c.requests[&2].admitted;
+        match act {
+            SignalAction::None => {
+                // Overcommit on the rendezvous instance: cancelled admit.
+                assert!(!st2_admitted, "cancelled admit is not admitted");
+            }
+            SignalAction::Produce { instance: i2, user: u2, .. } => {
+                // Landed on a different special instance with a free
+                // window: complete it; the ledger must still balance.
+                c.on_psi_ready(10, i2, u2, Some(2));
+            }
+            other => panic!("unexpected action {other:?}"),
+        }
+        for id in [1u64, 2] {
+            c.on_stage_done(20, id, Stage::Preproc).unwrap();
+            let _ = c.on_rank_start(20, id);
+            let _ = c.rank_compute(20, id);
+            c.on_rank_done(20, id, 300 << 20);
+        }
+        let s = c.trigger_stats();
+        assert_eq!(c.trigger_live(), 0, "all slots returned");
+        assert_eq!(s.spurious_release, 0, "ledger balanced: {s:?}");
+        assert_eq!(s.admitted, s.released, "every admit released exactly once");
     }
 
     fn seg_config() -> CoordinatorConfig {

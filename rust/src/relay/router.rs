@@ -285,30 +285,60 @@ impl Router {
         self.bump_conns(instance, -1);
     }
 
-    /// Deployment churn: a special instance leaves; keys remap.  Ranking
-    /// requests routed before the change will miss the cache and fall
-    /// back (correctness preserved, optimization lost).
-    pub fn remove_special(&mut self, instance: usize) {
+    /// Deployment churn: a special instance leaves the affinity ring and
+    /// keys remap (ranking requests routed before the change miss the
+    /// cache and fall back — correctness preserved, optimization lost).
+    /// The demoted instance *returns to the normal pool* — the symmetric
+    /// inverse of [`Router::add_special`]: its NPU keeps serving, just
+    /// under standard balancing instead of affinity traffic.  Returns
+    /// `false` (no-op) when the instance was not special.
+    pub fn remove_special(&mut self, instance: usize) -> bool {
+        if !self.special.contains(&instance) {
+            return false;
+        }
         self.special_ring.remove(instance);
         self.special.retain(|&i| i != instance);
-        // The departed instance's open connections die with it: reset so
-        // a later re-add does not inherit stale counts and skew
-        // least-connections balancing.  (In-flight completions for the
-        // old incarnation then saturate harmlessly at zero.)
-        let before = self.conns[instance];
-        self.conns[instance] = 0;
-        if self.is_normal[instance] && before != 0 {
-            self.lc_index.remove(&(before, instance));
-            self.lc_index.insert((0, instance));
-        }
+        // The instance did not die — it was demoted.  Its open affinity
+        // connections are still genuinely in flight, so the count is
+        // carried into the normal pool and drains through the ordinary
+        // `on_complete` path (resetting it here would let those late
+        // completions decrement *new* normal connections and make the
+        // least-connections index flood a busy instance).
+        debug_assert!(!self.is_normal[instance], "special was never in the normal pool");
+        self.is_normal[instance] = true;
+        // Keep `normal` ascending: round-robin order and the
+        // least-connections first-minimum tie-break both rely on it.
+        let pos = self.normal.partition_point(|&i| i < instance);
+        self.normal.insert(pos, instance);
+        self.lc_index.insert((self.conns[instance], instance));
         self.stats.affinity_breaks += 1;
+        true
     }
 
-    pub fn add_special(&mut self, instance: usize) {
-        if !self.special.contains(&instance) {
-            self.special.push(instance);
-            self.special_ring.add(instance);
+    /// Promote an instance into the special pool (deployment churn /
+    /// capacity scale-out).  The promotion *removes it from the normal
+    /// pool* — an instance must never take least-connections traffic and
+    /// affinity traffic at once — and respects the per-server density
+    /// cap (Fig. 8 interference bound), exactly as initial placement
+    /// does.  Returns whether the instance is special when the call
+    /// returns (`false` ⇔ the density cap refused it).
+    pub fn add_special(&mut self, instance: usize) -> bool {
+        if self.special.contains(&instance) {
+            return true; // idempotent
         }
+        let server = self.placement[instance];
+        let density = self.special.iter().filter(|&&i| self.placement[i] == server).count();
+        if density >= self.cfg.max_special_per_server {
+            return false;
+        }
+        if self.is_normal[instance] {
+            self.is_normal[instance] = false;
+            self.normal.retain(|&i| i != instance);
+            self.lc_index.remove(&(self.conns[instance], instance));
+        }
+        self.special.push(instance);
+        self.special_ring.add(instance);
+        true
     }
 
     pub fn open_connections(&self, instance: usize) -> u32 {
@@ -439,7 +469,7 @@ mod tests {
     }
 
     #[test]
-    fn removed_special_rejoins_with_clean_conns() {
+    fn demoted_special_carries_open_connections_into_normal_pool() {
         let mut r = router();
         let victim = r.special_instances()[0];
         // Pump open connections onto the victim via affinity routing.
@@ -450,20 +480,103 @@ mod tests {
             }
         }
         assert!(routed > 0 && r.open_connections(victim) == routed);
-        // Churn: the instance leaves and later re-registers.  It must
-        // come back with a clean slate, not the stale count.
-        r.remove_special(victim);
-        assert_eq!(r.open_connections(victim), 0, "departed instance keeps no conns");
-        r.add_special(victim);
+        // Demotion: the instance did not die — its in-flight affinity
+        // connections stay on the ledger…
+        assert!(r.remove_special(victim));
+        assert_eq!(r.open_connections(victim), routed);
+        // …so the busy demoted instance is not the least-connections
+        // pick while every other normal instance is idle…
+        let pick = r.route_normal(1).instance;
+        assert_ne!(pick, victim, "busy demoted instance must not be the LC minimum");
+        r.on_complete(pick);
+        // …and the late completions from its special incarnation drain
+        // the ledger exactly (no saturation, no skew).
+        for _ in 0..routed {
+            r.on_complete(victim);
+        }
         assert_eq!(r.open_connections(victim), 0);
-        // Late completions for the old incarnation saturate at zero.
-        r.on_complete(victim);
+        // Re-promotion takes it back out of the normal pool cleanly.
+        assert!(r.add_special(victim));
         assert_eq!(r.open_connections(victim), 0);
+    }
+
+    /// Satellite regression (fails on the pre-fix router): promoting an
+    /// instance must pull it out of the normal pool — on the old code
+    /// the idle promoted instance stayed the least-connections minimum
+    /// and kept receiving normal traffic on top of affinity traffic.
+    #[test]
+    fn promoted_instance_stops_receiving_normal_traffic() {
+        let mut r = router(); // 100 instances / 25 servers, specials 0..9
+        let victim = r.normal_instances()[0]; // smallest id ⇒ next LC pick
+        assert!(r.add_special(victim), "server has headroom under the cap");
+        assert!(r.special_instances().contains(&victim));
+        assert!(!r.normal_instances().contains(&victim));
+        for user in 0..200u64 {
+            let i = r.route_normal(user).instance;
+            assert_ne!(i, victim, "promoted instance drew normal traffic");
+        }
+        // Promotion is idempotent...
+        assert!(r.add_special(victim));
+        // ...and respects the density cap: the victim's server is taken.
+        let server = r.server_of(victim);
+        let blocked = r
+            .normal_instances()
+            .iter()
+            .copied()
+            .find(|&i| r.server_of(i) == server)
+            .expect("another instance on the same server");
+        assert!(!r.add_special(blocked), "density cap must bind on promotion");
+        assert!(r.normal_instances().contains(&blocked), "refused promotion leaves pools intact");
+    }
+
+    /// Promote/demote cycles keep the pools disjoint and consistent, and
+    /// a demoted special resumes normal service with clean connections.
+    #[test]
+    fn promote_demote_cycle_keeps_pools_consistent() {
+        let mut r = router();
+        let n = r.config().n_instances;
+        for round in 0..5 {
+            let candidate = r.normal_instances()[round * 7 % r.normal_instances().len()];
+            if !r.add_special(candidate) {
+                continue; // density cap — legitimate refusal
+            }
+            // Load the promoted instance with affinity traffic.
+            for user in 0..500u64 {
+                let route = r.route_special(user);
+                r.on_complete(route.instance);
+            }
+            for user in 0..50u64 {
+                assert_ne!(r.route_normal(user).instance, candidate);
+            }
+            assert!(r.remove_special(candidate));
+            assert!(r.normal_instances().contains(&candidate));
+            assert_eq!(r.open_connections(candidate), 0, "no residual connections");
+            assert!(!r.remove_special(candidate), "demoting a non-special is a no-op");
+            // Invariants: disjoint pools covering consistent membership.
+            let specials: std::collections::HashSet<usize> =
+                r.special_instances().iter().copied().collect();
+            for &i in r.normal_instances() {
+                assert!(!specials.contains(&i), "round {round}: instance {i} in both pools");
+            }
+            assert_eq!(
+                specials.len() + r.normal_instances().len(),
+                n,
+                "round {round}: pool membership leaked"
+            );
+            // Drain the open normal connections for the next round.
+            for &i in r.normal_instances().to_vec().iter() {
+                while r.open_connections(i) > 0 {
+                    r.on_complete(i);
+                }
+            }
+        }
     }
 
     /// The O(log n) least-connections index must agree with the naive
     /// first-minimum scan on every routing decision, under random
-    /// route/complete interleavings — the index is a pure perf change.
+    /// route/complete interleavings *and promote/demote churn* — the
+    /// index is a pure perf change, and churn must keep it in sync with
+    /// the normal pool.
     #[test]
     fn prop_lc_index_matches_min_scan_reference() {
         crate::util::prop::check("router-lc-index-vs-scan", 80, |rng| {
@@ -482,25 +595,52 @@ mod tests {
             let mut model: Vec<u32> = vec![0; r.config().n_instances];
             let mut open: Vec<usize> = Vec::new();
             for step in 0..400 {
-                if rng.bernoulli(0.65) || open.is_empty() {
-                    let user = rng.next_u64() % 500;
-                    // Reference decision: first normal instance with the
-                    // minimum open-connection count (ascending ids).
-                    let want = *r
-                        .normal_instances()
-                        .iter()
-                        .min_by_key(|&&i| model[i])
-                        .expect("normal pool non-empty");
-                    let got = r.route_normal(user).instance;
-                    if got != want {
-                        return Err(format!("step {step}: routed {got}, scan says {want}"));
+                match rng.range(0, 20) {
+                    // Promote a random normal instance (may be refused by
+                    // the density cap — pools must be untouched then).
+                    0 if r.normal_instances().len() > 1 => {
+                        let idx = rng.range(0, r.normal_instances().len());
+                        let inst = r.normal_instances()[idx];
+                        let promoted = r.add_special(inst);
+                        if promoted {
+                            // Its open normal connections keep draining via
+                            // on_complete; the model just stops offering it.
+                            if r.normal_instances().contains(&inst) {
+                                return Err(format!("step {step}: {inst} in both pools"));
+                            }
+                        } else if !r.normal_instances().contains(&inst) {
+                            return Err(format!("step {step}: refused promo removed {inst}"));
+                        }
                     }
-                    model[got] += 1;
-                    open.push(got);
-                } else {
-                    let i = open.swap_remove(rng.range(0, open.len()));
-                    r.on_complete(i);
-                    model[i] -= 1;
+                    // Demote a random special: its open connections are
+                    // carried into the normal pool (the model already
+                    // tracks them) and keep draining via on_complete.
+                    1 if r.special_instances().len() > 1 => {
+                        let idx = rng.range(0, r.special_instances().len());
+                        let inst = r.special_instances()[idx];
+                        r.remove_special(inst);
+                    }
+                    _ if rng.bernoulli(0.65) || open.is_empty() => {
+                        let user = rng.next_u64() % 500;
+                        // Reference decision: first normal instance with the
+                        // minimum open-connection count (ascending ids).
+                        let want = *r
+                            .normal_instances()
+                            .iter()
+                            .min_by_key(|&&i| model[i])
+                            .expect("normal pool non-empty");
+                        let got = r.route_normal(user).instance;
+                        if got != want {
+                            return Err(format!("step {step}: routed {got}, scan says {want}"));
+                        }
+                        model[got] += 1;
+                        open.push(got);
+                    }
+                    _ => {
+                        let i = open.swap_remove(rng.range(0, open.len()));
+                        r.on_complete(i);
+                        model[i] -= 1;
+                    }
                 }
                 for (i, &m) in model.iter().enumerate() {
                     if r.open_connections(i) != m {

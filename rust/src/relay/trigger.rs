@@ -14,10 +14,44 @@
 //!
 //! Rate limiting uses a token bucket per special instance; the live-cache
 //! footprint is tracked through feedback from the HBM cache (`release`).
+//!
+//! ## Closed-loop adaptive admission ([`AdmissionMode::Adaptive`])
+//!
+//! The static bounds evaluate Eqs. 1–3 once, from provisioned constants
+//! (`kv_p99_bytes`, a fixed `headroom`).  The adaptive controller closes
+//! the loop on what the cluster actually observes, from signals that are
+//! **decision-synchronous** — derived only from the admission stream
+//! itself (estimator outputs, admitted footprints, arrival clocks), never
+//! from completion timing — so every execution engine driving the same
+//! request sequence reaches bit-identical admission decisions:
+//!
+//! * **Occupancy-aware footprint bound** — instead of `live · kv_p99 ≤
+//!   r1·HBM` with a worst-case constant, the controller tracks the
+//!   *observed* per-user ψ footprint of admissions inside a sliding
+//!   `T_life` window and admits while the summed distinct-user bytes fit
+//!   the `r1·HBM` slice (Eq. 2 applied directly, in bytes).  A hot user
+//!   re-admitted within the window holds one footprint, not one per
+//!   request — exactly the distinct-live-caches `L` of Eq. 1.
+//! * **Adaptive risk margin** — the effective `headroom` moves inside
+//!   `[headroom_min, headroom_max]` driven by a windowed P99 of the
+//!   metadata latency estimates vs the ranking budget: near-SLO traffic
+//!   tightens the margin (more requests classified at-risk and relayed),
+//!   an idle budget relaxes it (fewer side-path productions).
+//! * **Adaptive admitted rate** — the token-bucket rate moves inside
+//!   `[rate_mult_min, rate_mult_max] · Q_m·M` under the same pressure
+//!   signal; survivability no longer needs the Eq. 1 rate proxy because
+//!   the byte-accurate footprint window enforces it directly.
+//!
+//! `AdmissionMode::Static` (the default) preserves the original Eqs. 1–3
+//! flow decision-for-decision — `tests/cross_engine.rs` pins it across
+//! engines and scenarios.
 
-use anyhow::Result;
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
 
 use crate::util::cli::Args;
+use crate::util::fxhash::FxHashMap;
 
 /// Lightweight per-request behaviour metadata the trigger inspects.
 #[derive(Debug, Clone, Copy)]
@@ -27,6 +61,161 @@ pub struct BehaviorMeta {
     pub prefix_len: usize,
     /// Feature/embedding dimension.
     pub dim: usize,
+}
+
+/// How the admission bounds are derived.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Eqs. 1–3 evaluated once from provisioned constants (the default;
+    /// decision-for-decision identical to the pre-adaptive trigger).
+    Static,
+    /// Closed loop: observed footprints replace `kv_p99_bytes`, and the
+    /// risk margin / admitted rate track a windowed load estimate.
+    Adaptive,
+}
+
+impl AdmissionMode {
+    /// The one parse table shared by the CLI flag and the config-file
+    /// key, so the layers cannot drift.
+    pub fn parse(s: &str) -> Result<AdmissionMode> {
+        match s {
+            "static" => Ok(AdmissionMode::Static),
+            "adaptive" => Ok(AdmissionMode::Adaptive),
+            other => bail!("unknown admission mode '{other}' (static | adaptive)"),
+        }
+    }
+}
+
+/// Knobs of the closed-loop admission controller.  All defaults are the
+/// static configuration (`mode = Static`), so constructing a
+/// [`TriggerConfig`] without touching this block changes nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    pub mode: AdmissionMode,
+    /// Initial operating point before the estimator windows warm up.
+    /// `None` falls back to [`TriggerConfig::headroom`] /
+    /// [`AdmissionConfig::rate_mult_max`]; the per-scenario hook
+    /// ([`seed_operating_point`](AdmissionConfig::seed_operating_point))
+    /// fills unset values from `ScenarioKind::admission_profile`.
+    pub headroom_init: Option<f64>,
+    pub rate_mult_init: Option<f64>,
+    /// Adaptation band for the effective risk headroom.
+    pub headroom_min: f64,
+    pub headroom_max: f64,
+    /// Adaptation band for the admitted-rate multiplier over `Q_m·M`.
+    pub rate_mult_min: f64,
+    pub rate_mult_max: f64,
+    /// Windowed-estimator sample count (latency + footprint P99s).
+    pub est_window: usize,
+    /// Footprint-window horizon in µs; `None` ⇒ `T_life` (Eq. 1's own
+    /// horizon: a cache admitted longer ago than one lifecycle no longer
+    /// occupies the live set).  Values below `T_life` are floored to it
+    /// at decision time — a reservation must outlive the cache it
+    /// models, or the byte bound stops binding.
+    pub window_us: Option<u64>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            mode: AdmissionMode::Static,
+            headroom_init: None,
+            rate_mult_init: None,
+            headroom_min: 0.5,
+            headroom_max: 0.95,
+            rate_mult_min: 0.25,
+            rate_mult_max: 1.0,
+            est_window: 64,
+            window_us: None,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    pub fn adaptive() -> AdmissionConfig {
+        AdmissionConfig { mode: AdmissionMode::Adaptive, ..AdmissionConfig::default() }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.mode == AdmissionMode::Adaptive
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self.mode {
+            AdmissionMode::Static => "static",
+            AdmissionMode::Adaptive => "adaptive",
+        }
+    }
+
+    /// Fill the initial operating point from a scenario profile without
+    /// overriding explicit CLI/config choices (`Some` wins).
+    pub fn seed_operating_point(&mut self, headroom_init: f64, rate_mult_init: f64) {
+        self.headroom_init.get_or_insert(headroom_init);
+        self.rate_mult_init.get_or_insert(rate_mult_init);
+    }
+
+    /// Layer `--admission static|adaptive` and the adaptation knobs over
+    /// `default` (shared by the serve, sim/figure and `plan` CLIs, and by
+    /// the config-file layer through `config::parse_admission`).
+    pub fn from_args(args: &Args, default: &AdmissionConfig) -> Result<AdmissionConfig> {
+        let mut cfg = default.clone();
+        if let Some(mode) = args.get("admission") {
+            cfg.mode = AdmissionMode::parse(mode)?;
+        }
+        cfg.headroom_min = args.get_f64("headroom-min", cfg.headroom_min)?;
+        cfg.headroom_max = args.get_f64("headroom-max", cfg.headroom_max)?;
+        cfg.rate_mult_min = args.get_f64("rate-mult-min", cfg.rate_mult_min)?;
+        cfg.rate_mult_max = args.get_f64("rate-mult-max", cfg.rate_mult_max)?;
+        cfg.est_window = args.get_usize("adapt-window", cfg.est_window)?;
+        if args.get("headroom-init").is_some() {
+            cfg.headroom_init = Some(args.get_f64("headroom-init", 0.0)?);
+        }
+        if args.get("rate-mult-init").is_some() {
+            cfg.rate_mult_init = Some(args.get_f64("rate-mult-init", 0.0)?);
+        }
+        let h_ok = 0.0 < cfg.headroom_min
+            && cfg.headroom_min <= cfg.headroom_max
+            && cfg.headroom_max <= 1.0;
+        if !h_ok {
+            bail!(
+                "admission: need 0 < headroom-min <= headroom-max <= 1 (got {} / {})",
+                cfg.headroom_min,
+                cfg.headroom_max
+            );
+        }
+        if !(0.0 < cfg.rate_mult_min && cfg.rate_mult_min <= cfg.rate_mult_max) {
+            bail!(
+                "admission: need 0 < rate-mult-min <= rate-mult-max (got {} / {})",
+                cfg.rate_mult_min,
+                cfg.rate_mult_max
+            );
+        }
+        if cfg.est_window < 2 {
+            bail!("admission: --adapt-window must be at least 2");
+        }
+        // Explicit operating points must sit inside their bands — a
+        // silently clamped flag is a mislabeled experiment.  (Scenario-
+        // seeded values are still clamped defensively at decide time.)
+        if let Some(h) = cfg.headroom_init {
+            if !(cfg.headroom_min..=cfg.headroom_max).contains(&h) {
+                bail!(
+                    "admission: --headroom-init {h} outside [{}, {}]",
+                    cfg.headroom_min,
+                    cfg.headroom_max
+                );
+            }
+        }
+        if let Some(m) = cfg.rate_mult_init {
+            if !(cfg.rate_mult_min..=cfg.rate_mult_max).contains(&m) {
+                bail!(
+                    "admission: --rate-mult-init {m} outside [{}, {}]",
+                    cfg.rate_mult_min,
+                    cfg.rate_mult_max
+                );
+            }
+        }
+        Ok(cfg)
+    }
 }
 
 /// Static admission-control parameters (the paper's symbols).
@@ -52,6 +241,9 @@ pub struct TriggerConfig {
     pub r2: f64,
     /// N — total ranking instances.
     pub n_instances: usize,
+    /// Closed-loop admission knobs; `AdmissionMode::Static` (the
+    /// default) reproduces the original Eqs. 1–3 flow exactly.
+    pub admission: AdmissionConfig,
 }
 
 impl TriggerConfig {
@@ -68,6 +260,7 @@ impl TriggerConfig {
             m_slots: 5,
             r2: 0.1,
             n_instances: 100,
+            admission: AdmissionConfig::default(),
         }
     }
 
@@ -135,12 +328,130 @@ impl TokenBucket {
             false
         }
     }
+
+    /// Retarget the refill rate (adaptive admission).  Time elapsed since
+    /// the last `try_take` accrues at the *new* rate on the next take —
+    /// a pure function of the call sequence, so engines that replay the
+    /// same decision stream stay bit-identical.
+    pub fn set_rate(&mut self, rate_per_s: f64) {
+        self.rate_per_us = rate_per_s / 1e6;
+    }
+
+    pub fn rate_per_s(&self) -> f64 {
+        self.rate_per_us * 1e6
+    }
 }
 
 /// Latency estimator used by the metadata risk test.  Deliberately a
 /// boxed fn so the simulator wires in the hardware cost model and tests
 /// wire in synthetic estimators.
 pub type Estimator = Box<dyn Fn(&BehaviorMeta) -> f64 + Send>;
+
+/// Sliding-window ring with a sorted-copy quantile (the windows are a
+/// few dozen entries; the trigger runs once per long request, off the
+/// rank hot path — `bench_admission.rs` keeps this honest).
+#[derive(Debug, Default)]
+struct QuantileRing {
+    ring: Vec<f64>,
+    next: usize,
+}
+
+impl QuantileRing {
+    fn push(&mut self, cap: usize, v: f64) {
+        let cap = cap.max(2);
+        if self.ring.len() < cap {
+            self.ring.push(v);
+        } else {
+            self.next %= cap;
+            self.ring[self.next] = v;
+            self.next = (self.next + 1) % cap;
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    fn p99(&self) -> Option<f64> {
+        if self.ring.is_empty() {
+            return None;
+        }
+        let mut s = self.ring.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((s.len() as f64 * 0.99).ceil() as usize).clamp(1, s.len()) - 1;
+        Some(s[idx])
+    }
+}
+
+/// Closed-loop controller state: the observed-footprint window (Eq. 2 in
+/// bytes over distinct users) plus the windowed estimators.  All inputs
+/// are decision-synchronous — admission decisions, metadata estimates
+/// and arrival clocks — never completion timing, so replaying the same
+/// request stream reproduces the same state on every engine.
+#[derive(Debug, Default)]
+struct AdaptiveState {
+    /// Windowed metadata latency estimates (µs) of assessed requests.
+    est: QuantileRing,
+    /// Windowed observed ψ footprints (bytes) of admitted requests.
+    fp: QuantileRing,
+    /// user → (last admit µs, footprint bytes) inside the window.
+    window: FxHashMap<u64, (u64, usize)>,
+    /// Admission order for pruning; entries whose `(time, user)` no
+    /// longer matches `window` are tombstones (the user re-admitted).
+    order: VecDeque<(u64, u64)>,
+    /// Σ footprint bytes over `window` (distinct users).
+    window_bytes: usize,
+}
+
+impl AdaptiveState {
+    /// Drop admissions older than one window horizon (an entry admitted
+    /// at `t` lives through `t + window_us`; saturating arithmetic on
+    /// the add side so a `t = 0` admit is not spuriously expired).
+    fn prune(&mut self, now: u64, window_us: u64) {
+        while let Some(&(t, user)) = self.order.front() {
+            if t.saturating_add(window_us) > now {
+                break;
+            }
+            self.order.pop_front();
+            if let Some(&(last, bytes)) = self.window.get(&user) {
+                if last == t {
+                    self.window.remove(&user);
+                    self.window_bytes -= bytes;
+                }
+            }
+        }
+    }
+
+    /// Would admitting `user` at `bytes` keep the distinct-user footprint
+    /// inside `capacity`?  A user already inside the window holds one
+    /// live cache however many in-flight requests it has (Eq. 1's L
+    /// counts caches, not requests), so re-admission only charges the
+    /// *growth* of its footprint — a user whose prefix lengthened since
+    /// the last admit must still pass the byte bound.
+    fn fits(&self, user: u64, bytes: usize, capacity: usize) -> bool {
+        let held = self.window.get(&user).map(|&(_, b)| b).unwrap_or(0);
+        self.window_bytes - held + bytes <= capacity
+    }
+
+    /// Record an admission.
+    fn admit(&mut self, user: u64, now: u64, bytes: usize, est_window: usize) {
+        self.fp.push(est_window, bytes as f64);
+        if let Some(&(_, old)) = self.window.get(&user) {
+            self.window_bytes -= old;
+        }
+        self.window.insert(user, (now, bytes));
+        self.window_bytes += bytes;
+        self.order.push_back((now, user));
+    }
+
+    /// An admit was cancelled before its production started: free the
+    /// user's footprint reservation (its order slot becomes a tombstone).
+    fn cancel(&mut self, user: u64) {
+        if let Some((_, bytes)) = self.window.remove(&user) {
+            self.window_bytes -= bytes;
+        }
+    }
+}
 
 /// Per-special-instance trigger state.
 pub struct Trigger {
@@ -149,30 +460,91 @@ pub struct Trigger {
     bucket: TokenBucket,
     /// Live caches currently attributed to this instance (feedback).
     live: usize,
+    adapt: AdaptiveState,
     estimator: Estimator,
     stats: TriggerStats,
 }
 
-/// Counters exported to metrics.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// Counters exported to metrics.  Adaptation fields snapshot the
+/// controller: the effective-headroom trajectory (milli-units, min/max
+/// over the run), the windowed footprint estimate vs the provisioned
+/// static bound, and the occupancy-aware live-cache limit in effect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TriggerStats {
     pub assessed: u64,
     pub not_at_risk: u64,
     pub admitted: u64,
     pub rate_limited: u64,
     pub footprint_limited: u64,
+    /// `release()` calls (paired with admits by the coordinator).
+    pub released: u64,
+    /// Releases that arrived with no admit outstanding — an accounting
+    /// bug upstream; Eq. 2 would silently over-admit if these were
+    /// absorbed, so they are counted (and debug-asserted) instead.
+    pub spurious_release: u64,
+    /// Decisions served by the adaptive controller.
+    pub adapted: u64,
+    /// Effective risk-headroom trajectory, in milli-units (static mode
+    /// pins both ends to the configured constant).
+    pub headroom_milli_min: u64,
+    pub headroom_milli_max: u64,
+    /// Latest windowed distinct-user footprint estimate (bytes).
+    pub footprint_est_bytes: u64,
+    /// The provisioned static bound it replaces (l_max · kv_p99).
+    pub footprint_static_bytes: u64,
+    /// Occupancy-aware live-cache bound in effect at the last decide.
+    pub l_max_effective: u64,
+}
+
+impl Default for TriggerStats {
+    fn default() -> TriggerStats {
+        TriggerStats {
+            assessed: 0,
+            not_at_risk: 0,
+            admitted: 0,
+            rate_limited: 0,
+            footprint_limited: 0,
+            released: 0,
+            spurious_release: 0,
+            adapted: 0,
+            // Sentinel so merge() can take min across instances.
+            headroom_milli_min: u64::MAX,
+            headroom_milli_max: 0,
+            footprint_est_bytes: 0,
+            footprint_static_bytes: 0,
+            l_max_effective: 0,
+        }
+    }
 }
 
 impl TriggerStats {
     /// Accumulate another instance's counters (cluster-wide reporting).
+    /// Counters sum; the headroom trajectory takes the envelope; the
+    /// footprint/bound snapshots sum (cluster-wide capacity in caches).
     pub fn merge(&mut self, b: TriggerStats) {
         self.assessed += b.assessed;
         self.not_at_risk += b.not_at_risk;
         self.admitted += b.admitted;
         self.rate_limited += b.rate_limited;
         self.footprint_limited += b.footprint_limited;
+        self.released += b.released;
+        self.spurious_release += b.spurious_release;
+        self.adapted += b.adapted;
+        self.headroom_milli_min = self.headroom_milli_min.min(b.headroom_milli_min);
+        self.headroom_milli_max = self.headroom_milli_max.max(b.headroom_milli_max);
+        self.footprint_est_bytes += b.footprint_est_bytes;
+        self.footprint_static_bytes += b.footprint_static_bytes;
+        self.l_max_effective += b.l_max_effective;
     }
 }
+
+/// Samples before the windowed estimators drive the operating point;
+/// until then the (per-scenario) initial operating point holds.
+const ADAPT_WARMUP: usize = 8;
+/// Pressure mapping: estimated rank-stage P99 at `PRESSURE_LO · budget`
+/// is fully relaxed, at `PRESSURE_HI · budget` fully tightened.
+const PRESSURE_LO: f64 = 0.5;
+const PRESSURE_HI: f64 = 1.0;
 
 impl Trigger {
     pub fn new(cfg: TriggerConfig, estimator: Estimator) -> Trigger {
@@ -180,13 +552,19 @@ impl Trigger {
         // Burst sized to the slot count: a short spike can fill the slots,
         // sustained rate is capped at q_admit_max.
         let burst = cfg.m_slots.max(1) as f64;
+        let stats = TriggerStats {
+            footprint_static_bytes: limits.l_max as u64 * cfg.kv_p99_bytes as u64,
+            l_max_effective: limits.l_max as u64,
+            ..TriggerStats::default()
+        };
         Trigger {
             bucket: TokenBucket::new(limits.q_admit_max, burst),
             limits,
             cfg,
             live: 0,
+            adapt: AdaptiveState::default(),
             estimator,
-            stats: TriggerStats::default(),
+            stats,
         }
     }
 
@@ -206,40 +584,165 @@ impl Trigger {
         self.live
     }
 
-    /// Metadata risk test + admission control.
-    pub fn decide(&mut self, now_us: u64, meta: &BehaviorMeta) -> Decision {
+    /// The r1·HBM slice the footprint bound protects (Eq. 2's right-hand
+    /// side) — the same budget the static `l_max` divides by `kv_p99`,
+    /// so segment-cache partitions never shift admission decisions.
+    fn psi_capacity(&self) -> usize {
+        (self.cfg.r1 * self.cfg.hbm_bytes as f64) as usize
+    }
+
+    /// The adaptive operating point `(effective headroom, rate
+    /// multiplier)` — the scenario's initial point until the window warms
+    /// up, then the windowed-pressure control law.
+    fn operating_point(&self) -> (f64, f64) {
+        let adm = &self.cfg.admission;
+        // Small --adapt-window values cap the ring below ADAPT_WARMUP;
+        // clamp so the control law still engages once the window fills.
+        if self.adapt.est.len() < ADAPT_WARMUP.min(adm.est_window) {
+            let h = adm.headroom_init.unwrap_or(self.cfg.headroom);
+            let m = adm.rate_mult_init.unwrap_or(adm.rate_mult_max);
+            return (
+                h.clamp(adm.headroom_min, adm.headroom_max),
+                m.clamp(adm.rate_mult_min, adm.rate_mult_max),
+            );
+        }
+        let p99 = self.adapt.est.p99().expect("warm window");
+        let pressure = p99 / self.cfg.rank_p99_budget_us.max(1.0);
+        let t = ((pressure - PRESSURE_LO) / (PRESSURE_HI - PRESSURE_LO)).clamp(0.0, 1.0);
+        // Near-SLO: tighten the risk margin (more traffic classified
+        // at-risk and relayed) and open the admitted rate toward the
+        // Eq. 3 compute cap; idle budget: relax both.
+        let h = adm.headroom_max - t * (adm.headroom_max - adm.headroom_min);
+        let m = adm.rate_mult_min + t * (adm.rate_mult_max - adm.rate_mult_min);
+        (h, m)
+    }
+
+    /// Occupancy-aware live-cache bound: capacity over the *observed*
+    /// footprint P99 (the provisioned `kv_p99` until admissions exist).
+    pub fn effective_l_max(&self) -> usize {
+        match self.cfg.admission.mode {
+            AdmissionMode::Static => self.limits.l_max,
+            AdmissionMode::Adaptive => {
+                let fp = self.adapt.fp.p99().unwrap_or(self.cfg.kv_p99_bytes as f64);
+                (self.psi_capacity() as f64 / fp.max(1.0)).floor() as usize
+            }
+        }
+    }
+
+    /// The windowed distinct-user footprint estimate (bytes).
+    pub fn footprint_estimate(&self) -> usize {
+        self.adapt.window_bytes
+    }
+
+    fn note_headroom(&mut self, headroom: f64) {
+        let milli = (headroom * 1000.0).round() as u64;
+        self.stats.headroom_milli_min = self.stats.headroom_milli_min.min(milli);
+        self.stats.headroom_milli_max = self.stats.headroom_milli_max.max(milli);
+    }
+
+    /// Metadata risk test + admission control.  `kv_bytes` is the ψ
+    /// footprint this request would produce — the observed-footprint
+    /// feedback the adaptive bound replaces `kv_p99_bytes` with (the
+    /// static path ignores it).
+    pub fn decide(&mut self, now_us: u64, meta: &BehaviorMeta, kv_bytes: usize) -> Decision {
         self.stats.assessed += 1;
         let est_full_us = (self.estimator)(meta);
-        if est_full_us <= self.cfg.headroom * self.cfg.rank_p99_budget_us {
-            self.stats.not_at_risk += 1;
-            return Decision::NotAtRisk;
+        if self.cfg.admission.mode == AdmissionMode::Static {
+            // The original Eqs. 1–3 flow, decision-for-decision.
+            self.note_headroom(self.cfg.headroom);
+            if est_full_us <= self.cfg.headroom * self.cfg.rank_p99_budget_us {
+                self.stats.not_at_risk += 1;
+                return Decision::NotAtRisk;
+            }
+            if self.live >= self.limits.l_max {
+                self.stats.footprint_limited += 1;
+                return Decision::FootprintLimited;
+            }
+            if !self.bucket.try_take(now_us) {
+                self.stats.rate_limited += 1;
+                return Decision::RateLimited;
+            }
+            self.live += 1;
+            self.stats.admitted += 1;
+            return Decision::Admit;
         }
-        if self.live >= self.limits.l_max {
-            self.stats.footprint_limited += 1;
-            return Decision::FootprintLimited;
-        }
-        if !self.bucket.try_take(now_us) {
-            self.stats.rate_limited += 1;
-            return Decision::RateLimited;
-        }
-        self.live += 1;
-        self.stats.admitted += 1;
-        Decision::Admit
+        // Closed loop (all signals decision-synchronous; see module doc).
+        self.stats.adapted += 1;
+        self.adapt.est.push(self.cfg.admission.est_window, est_full_us);
+        let (headroom, rate_mult) = self.operating_point();
+        self.note_headroom(headroom);
+        let decision = 'adapt: {
+            if est_full_us <= headroom * self.cfg.rank_p99_budget_us {
+                self.stats.not_at_risk += 1;
+                break 'adapt Decision::NotAtRisk;
+            }
+            // The window may be lengthened (more conservative) but never
+            // shortened below T_life: a reservation that expired while
+            // its cache was still live would void the Eq. 2 bound.
+            let window_us = self
+                .cfg
+                .admission
+                .window_us
+                .unwrap_or(self.cfg.t_life_us)
+                .max(self.cfg.t_life_us);
+            self.adapt.prune(now_us, window_us);
+            if !self.adapt.fits(meta.user, kv_bytes, self.psi_capacity()) {
+                self.stats.footprint_limited += 1;
+                break 'adapt Decision::FootprintLimited;
+            }
+            self.bucket.set_rate(self.cfg.q_m * self.cfg.m_slots as f64 * rate_mult);
+            if !self.bucket.try_take(now_us) {
+                self.stats.rate_limited += 1;
+                break 'adapt Decision::RateLimited;
+            }
+            self.adapt.admit(meta.user, now_us, kv_bytes, self.cfg.admission.est_window);
+            self.live += 1;
+            self.stats.admitted += 1;
+            Decision::Admit
+        };
+        // One snapshot per decide, after the decision resolved (the
+        // occupancy-aware bound costs a ring sort — hot-path budget is
+        // tracked by bench_admission.rs).
+        self.stats.footprint_est_bytes = self.adapt.window_bytes as u64;
+        self.stats.l_max_effective = self.effective_l_max() as u64;
+        decision
     }
 
     /// Feedback: a cache left the live set (consumed, expired or lost).
+    /// Every release must pair with an admit — a stray release would
+    /// silently under-count `live` and over-admit against Eq. 2, so it
+    /// is counted (and debug-asserted) instead of absorbed.
     pub fn release(&mut self) {
-        self.live = self.live.saturating_sub(1);
+        self.stats.released += 1;
+        if self.live == 0 {
+            self.stats.spurious_release += 1;
+            debug_assert!(false, "trigger: release without a matching admit");
+            return;
+        }
+        self.live -= 1;
+    }
+
+    /// An admit was cancelled before its production started (HBM
+    /// overcommit at signal time): free the slot and, in adaptive mode,
+    /// the user's windowed footprint reservation.
+    pub fn cancel_admit(&mut self, user: u64) {
+        self.adapt.cancel(user);
+        self.release();
     }
 
     /// Whether a request with this metadata is at risk (no admission).
+    /// Uses the static margin; callers wanting the adaptive margin go
+    /// through [`Trigger::decide`], which also feeds the estimators.
     pub fn at_risk(&self, meta: &BehaviorMeta) -> bool {
         (self.estimator)(meta) > self.cfg.headroom * self.cfg.rank_p99_budget_us
     }
 }
 
 /// `relaygr plan` — print the derived Eqs. 1–3 limits, defaulting to the
-/// paper's §3.2 sanity-check numbers.
+/// paper's §3.2 sanity-check numbers.  With `--admission adaptive` the
+/// closed-loop operating bands and the per-scenario initial operating
+/// points are printed too (`--kv-obs-gb` sets the observed per-user ψ
+/// footprint the occupancy-aware bound would see).
 pub fn plan_cli(args: &Args) -> Result<()> {
     let d = TriggerConfig::paper_example();
     let cfg = TriggerConfig {
@@ -253,6 +756,7 @@ pub fn plan_cli(args: &Args) -> Result<()> {
         m_slots: args.get_usize("slots", d.m_slots)?,
         r2: args.get_f64("r2", d.r2)?,
         n_instances: args.get_usize("instances", d.n_instances)?,
+        admission: AdmissionConfig::from_args(args, &d.admission)?,
     };
     let lim = cfg.limits();
     println!("sequence-aware trigger: admission plan (Eqs. 1-3)");
@@ -265,6 +769,40 @@ pub fn plan_cli(args: &Args) -> Result<()> {
     println!("  Q_admit effective per special instance: {:>10.1} q/s", lim.q_admit_max);
     println!("  special instances (r2*N)              : {:>10}", lim.specials);
     println!("  Q_max system-wide admitted traffic    : {:>10.1} q/s", lim.q_max_system);
+    if cfg.admission.is_adaptive() {
+        use crate::workload::ScenarioKind;
+        let adm = &cfg.admission;
+        let capacity = cfg.r1 * cfg.hbm_bytes as f64;
+        let kv_obs =
+            args.get_f64("kv-obs-gb", cfg.kv_p99_bytes as f64 / 1e9)? * 1e9;
+        println!("\nclosed-loop adaptive admission (observed-load operating bands)");
+        println!(
+            "  risk headroom band                    : [{:.2} .. {:.2}] x budget",
+            adm.headroom_min, adm.headroom_max
+        );
+        println!(
+            "  admitted-rate band                    : [{:.2} .. {:.2}] x Qm*M = [{:.1} .. {:.1}] q/s",
+            adm.rate_mult_min,
+            adm.rate_mult_max,
+            adm.rate_mult_min * cfg.q_m * cfg.m_slots as f64,
+            adm.rate_mult_max * cfg.q_m * cfg.m_slots as f64,
+        );
+        println!(
+            "  L_max at observed kv ({:>6.3} GB)      : {:>10} (static bound: {})",
+            kv_obs / 1e9,
+            (capacity / kv_obs.max(1.0)).floor() as usize,
+            lim.l_max,
+        );
+        println!("  per-scenario initial operating points (headroom / rate-mult):");
+        for name in ScenarioKind::NAMES {
+            let kind = ScenarioKind::parse(name).expect("built-in scenario");
+            let p = kind.admission_profile();
+            println!(
+                "    {name:<10} headroom {:.2}   rate-mult {:.2}",
+                p.headroom_init, p.rate_mult_init
+            );
+        }
+    }
     Ok(())
 }
 
@@ -272,8 +810,15 @@ pub fn plan_cli(args: &Args) -> Result<()> {
 mod tests {
     use super::*;
 
+    /// Synthetic ψ footprint used where the test doesn't care.
+    const KV: usize = 32 << 20;
+
     fn meta(prefix_len: usize) -> BehaviorMeta {
         BehaviorMeta { user: 1, prefix_len, dim: 256 }
+    }
+
+    fn user_meta(user: u64) -> BehaviorMeta {
+        BehaviorMeta { user, prefix_len: 4096, dim: 256 }
     }
 
     /// Estimator: 20 µs per token (2K tokens → 41 ms, at risk vs 40 ms line).
@@ -304,8 +849,8 @@ mod tests {
     #[test]
     fn short_sequences_not_at_risk() {
         let mut t = Trigger::new(TriggerConfig::paper_example(), linear_estimator());
-        assert_eq!(t.decide(0, &meta(512)), Decision::NotAtRisk);
-        assert_eq!(t.decide(0, &meta(4096)), Decision::Admit);
+        assert_eq!(t.decide(0, &meta(512), KV), Decision::NotAtRisk);
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::Admit);
         let s = t.stats();
         assert_eq!((s.not_at_risk, s.admitted), (1, 1));
     }
@@ -315,13 +860,13 @@ mod tests {
         let mut cfg = TriggerConfig::paper_example();
         cfg.m_slots = 2; // burst 2, compute cap 60 q/s
         let mut t = Trigger::new(cfg, linear_estimator());
-        assert_eq!(t.decide(0, &meta(4096)), Decision::Admit);
-        assert_eq!(t.decide(0, &meta(4096)), Decision::Admit);
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::Admit);
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::Admit);
         t.release();
         t.release(); // footprint freed; rate still empty
-        assert_eq!(t.decide(0, &meta(4096)), Decision::RateLimited);
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::RateLimited);
         // 60 q/s → one token every ~16.7 ms.
-        assert_eq!(t.decide(20_000, &meta(4096)), Decision::Admit);
+        assert_eq!(t.decide(20_000, &meta(4096), KV), Decision::Admit);
     }
 
     #[test]
@@ -331,11 +876,11 @@ mod tests {
         cfg.q_m = 1e9; // rate never binds
         let mut t = Trigger::new(cfg, linear_estimator());
         assert_eq!(t.limits().l_max, 2);
-        assert_eq!(t.decide(0, &meta(4096)), Decision::Admit);
-        assert_eq!(t.decide(0, &meta(4096)), Decision::Admit);
-        assert_eq!(t.decide(0, &meta(4096)), Decision::FootprintLimited);
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::Admit);
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::Admit);
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::FootprintLimited);
         t.release();
-        assert_eq!(t.decide(1_000_000, &meta(4096)), Decision::Admit);
+        assert_eq!(t.decide(1_000_000, &meta(4096), KV), Decision::Admit);
         assert_eq!(t.live(), 2);
     }
 
@@ -351,6 +896,302 @@ mod tests {
         assert!((95..=106).contains(&granted), "granted {granted}");
     }
 
+    /// Satellite: a late-arriving earlier event must neither refund nor
+    /// double-charge tokens — sim and serve deliver events in different
+    /// orders, so the bucket's high-water clock must be monotone.
+    #[test]
+    fn token_bucket_out_of_order_timestamps() {
+        let mut b = TokenBucket::new(1000.0, 1.0); // 1 token/ms, burst 1
+        assert!(b.try_take(10_000), "burst token");
+        // Earlier timestamp: dt saturates to 0 — no refund...
+        assert!(!b.try_take(2_000));
+        // ...and the high-water mark stays at 10 ms, so the next in-order
+        // events refill from 10 ms, not from 2 ms (no double charge of
+        // the elapsed window either way).
+        assert!(!b.try_take(10_500), "only 0.5 tokens accrued since 10 ms");
+        assert!(b.try_take(11_000), "exactly 1 token accrued since 10 ms");
+        // Out-of-order events while empty keep the clock pinned.
+        assert!(!b.try_take(3_000));
+        assert!(!b.try_take(11_400));
+        assert!(b.try_take(12_000));
+    }
+
+    #[test]
+    fn token_bucket_set_rate_applies_to_next_refill() {
+        let mut b = TokenBucket::new(100.0, 1.0);
+        assert!(b.try_take(0));
+        // 10× the rate: one token now takes 1 ms instead of 10 ms.
+        b.set_rate(1000.0);
+        assert!((b.rate_per_s() - 1000.0).abs() < 1e-9);
+        assert!(!b.try_take(500));
+        assert!(b.try_take(1_000));
+    }
+
+    /// Satellite: releases pair with admits exactly — `live` equals
+    /// `admitted − released` under paired usage, and a stray release is
+    /// surfaced as `spurious_release` instead of silently under-counting
+    /// the Eq. 2 feedback.
+    #[test]
+    fn prop_live_equals_admitted_minus_released() {
+        crate::util::prop::check("trigger-release-accounting", 100, |rng| {
+            let mut cfg = TriggerConfig::paper_example();
+            cfg.q_m = 1e9; // rate never binds: exercise the slot ledger
+            if rng.bernoulli(0.5) {
+                cfg.admission = AdmissionConfig::adaptive();
+            }
+            let mut t = Trigger::new(cfg, Box::new(|_| 1e9));
+            let mut outstanding = 0u64;
+            let mut now = 0u64;
+            for user in 0..200u64 {
+                now += rng.range(0, 20_000) as u64;
+                if rng.bernoulli(0.6) {
+                    if t.decide(now, &user_meta(user), KV) == Decision::Admit {
+                        outstanding += 1;
+                    }
+                } else if outstanding > 0 {
+                    t.release();
+                    outstanding -= 1;
+                }
+                let s = t.stats();
+                if s.spurious_release != 0 {
+                    return Err("paired usage produced a spurious release".into());
+                }
+                if s.admitted - s.released != t.live() as u64 {
+                    return Err(format!(
+                        "live {} != admitted {} - released {}",
+                        t.live(),
+                        s.admitted,
+                        s.released
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spurious_release_is_counted() {
+        let mut t = Trigger::new(TriggerConfig::paper_example(), linear_estimator());
+        // The debug assertion fires in debug builds; the counter must
+        // record the stray release either way.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.release()));
+        assert_eq!(caught.is_err(), cfg!(debug_assertions));
+        let s = t.stats();
+        assert_eq!((s.released, s.spurious_release), (1, 1));
+        assert_eq!(t.live(), 0);
+        // A paired admit/release afterwards is clean.
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::Admit);
+        t.release();
+        assert_eq!(t.stats().spurious_release, 1);
+        assert_eq!(t.live(), 0);
+    }
+
+    fn adaptive_cfg() -> TriggerConfig {
+        let mut cfg = TriggerConfig::paper_example();
+        cfg.admission = AdmissionConfig::adaptive();
+        cfg
+    }
+
+    /// Tentpole: the observed-footprint window replaces the provisioned
+    /// `kv_p99_bytes` — distinct users admit until their *actual* bytes
+    /// fill the r1·HBM slice, and a hot user re-admits for free.
+    #[test]
+    fn adaptive_footprint_tracks_observed_bytes() {
+        let mut cfg = adaptive_cfg();
+        cfg.hbm_bytes = 1 << 30;
+        cfg.r1 = 1.0;
+        // Provisioned worst case says zero caches fit — the collapsed
+        // static bound of a misprovisioned fleet.
+        cfg.kv_p99_bytes = 2 << 30;
+        cfg.q_m = 1e9;
+        assert_eq!(cfg.limits().l_max, 0);
+        let mut t = Trigger::new(cfg, Box::new(|_| 1e9));
+        // Observed ψ is 256 MiB: exactly 4 distinct users fit.
+        let kv = 256 << 20;
+        for user in 0..4u64 {
+            assert_eq!(t.decide(user, &user_meta(user), kv), Decision::Admit, "user {user}");
+        }
+        assert_eq!(t.decide(4, &user_meta(4), kv), Decision::FootprintLimited);
+        // A user already inside the window re-admits without new bytes.
+        assert_eq!(t.decide(5, &user_meta(2), kv), Decision::Admit);
+        assert_eq!(t.footprint_estimate(), 4 * kv);
+        assert_eq!(t.effective_l_max(), 4, "capacity / observed-footprint P99");
+        let s = t.stats();
+        assert_eq!(s.footprint_est_bytes, 4 * kv as u64);
+        assert_eq!(s.footprint_static_bytes, 0, "collapsed static bound");
+        // The window expires with T_life: a new user admits again.
+        let later = t.config().t_life_us * 2;
+        assert_eq!(t.decide(later, &user_meta(9), kv), Decision::Admit);
+    }
+
+    /// The risk margin tightens toward `headroom_min` when the windowed
+    /// latency estimate crowds the budget, and relaxes to `headroom_max`
+    /// when the budget is idle.
+    #[test]
+    fn adaptive_headroom_follows_pressure() {
+        // Budget 50 ms; estimator returns 30 µs/token.
+        let est: Estimator = Box::new(|m: &BehaviorMeta| m.prefix_len as f64 * 30.0);
+        let mut cfg = adaptive_cfg();
+        cfg.q_m = 1e9;
+        let mut t = Trigger::new(cfg, est);
+        // Warm the window with near-budget traffic (1600 tokens → 48 ms,
+        // pressure ≈ 0.96 → margin ≈ headroom_min).
+        for i in 0..16u64 {
+            t.decide(i, &meta(1600), KV);
+        }
+        // 900 tokens → 27 ms: above headroom_min·budget (25 ms) ⇒ still
+        // classified at-risk under the tightened margin.
+        assert_eq!(t.decide(20, &meta(900), KV), Decision::Admit);
+        let tight = t.stats();
+        assert!(tight.headroom_milli_min <= 550, "tightened: {tight:?}");
+        // Fresh trigger warmed with idle traffic (400 tokens → 12 ms,
+        // pressure ≈ 0.24 → margin ≈ headroom_max): the same 27 ms
+        // request is now comfortably inside the relaxed margin.
+        let est2: Estimator = Box::new(|m: &BehaviorMeta| m.prefix_len as f64 * 30.0);
+        let mut relaxed = Trigger::new(adaptive_cfg(), est2);
+        for i in 0..16u64 {
+            relaxed.decide(i, &meta(400), KV);
+        }
+        assert_eq!(relaxed.decide(20, &meta(900), KV), Decision::NotAtRisk);
+        assert!(relaxed.stats().headroom_milli_max >= 900, "{:?}", relaxed.stats());
+    }
+
+    /// Under pressure the admitted rate opens toward the Eq. 3 compute
+    /// cap instead of the (often far smaller) Eq. 1 survivability proxy.
+    #[test]
+    fn adaptive_rate_opens_to_compute_cap_under_pressure() {
+        let mut cfg = adaptive_cfg();
+        // Static rate would be min(l_max/T_life, Qm·M) = 160/0.3s ≈ 533…
+        // shrink T_life's proxy hard: one admit per 10 s.  (The byte
+        // window floors at T_life, but 40 × 32 MB sits far below the
+        // 16 GB slice, so the footprint bound stays slack here.)
+        cfg.t_life_us = 1_600_000_000;
+        cfg.m_slots = 2; // burst 2
+        assert!(cfg.limits().q_admit_max < 1.0);
+        let mut t = Trigger::new(cfg, Box::new(|_| 1e9)); // always at risk
+        // Pressure is maximal (est ≫ budget) ⇒ rate = Qm·M = 60/s.
+        let mut admitted = 0;
+        for i in 0..40u64 {
+            // 40 distinct users over 1 s.
+            if t.decide(i * 25_000, &user_meta(i), KV) == Decision::Admit {
+                admitted += 1;
+            }
+        }
+        // Static would admit ≈ burst (2); the opened bucket sustains
+        // ~60/s → nearly every spaced request.
+        assert!(admitted >= 30, "admitted {admitted} of 40");
+    }
+
+    /// A re-admitting user whose footprint *grew* (longer prefix since
+    /// the last admit) still answers to the byte bound — only unchanged
+    /// footprints re-admit for free.
+    #[test]
+    fn adaptive_readmission_charges_footprint_growth() {
+        let mut cfg = adaptive_cfg();
+        cfg.hbm_bytes = 1 << 30;
+        cfg.r1 = 1.0;
+        cfg.q_m = 1e9;
+        let mut t = Trigger::new(cfg, Box::new(|_| 1e9));
+        assert_eq!(t.decide(0, &user_meta(1), 300 << 20), Decision::Admit);
+        assert_eq!(t.decide(1, &user_meta(2), 600 << 20), Decision::Admit);
+        // User 1 returns with a footprint that would overflow the slice:
+        // 600 (held by 2) + 700 > 1024 MB even after releasing its old
+        // 300 MB reservation.
+        assert_eq!(t.decide(2, &user_meta(1), 700 << 20), Decision::FootprintLimited);
+        // Same-size re-admission stays free.
+        assert_eq!(t.decide(3, &user_meta(1), 300 << 20), Decision::Admit);
+        // Growth that still fits is charged and admitted.
+        assert_eq!(t.decide(4, &user_meta(1), 400 << 20), Decision::Admit);
+        assert_eq!(t.footprint_estimate(), (600 + 400) << 20);
+    }
+
+    /// An `--adapt-window` below the warmup constant must not pin the
+    /// controller at its initial operating point forever — the control
+    /// law engages once the (small) window fills.
+    #[test]
+    fn adaptive_small_window_still_engages_control_law() {
+        let mut cfg = adaptive_cfg();
+        cfg.admission.est_window = 2;
+        cfg.q_m = 1e9;
+        let mut t = Trigger::new(cfg, Box::new(|_| 1e9)); // est ≫ budget
+        for i in 0..4u64 {
+            t.decide(i, &user_meta(1), KV);
+        }
+        let s = t.stats();
+        assert_eq!(
+            s.headroom_milli_min, 500,
+            "pressure must tighten headroom to headroom_min: {s:?}"
+        );
+    }
+
+    #[test]
+    fn adaptive_cancel_frees_footprint_reservation() {
+        let mut cfg = adaptive_cfg();
+        cfg.hbm_bytes = 1 << 30;
+        cfg.r1 = 1.0;
+        cfg.q_m = 1e9;
+        let kv = 512 << 20;
+        let mut t = Trigger::new(cfg, Box::new(|_| 1e9));
+        assert_eq!(t.decide(0, &user_meta(1), kv), Decision::Admit);
+        assert_eq!(t.decide(1, &user_meta(2), kv), Decision::Admit);
+        assert_eq!(t.decide(2, &user_meta(3), kv), Decision::FootprintLimited);
+        // User 2's production was cancelled (HBM overcommit): both the
+        // slot and the windowed bytes come back.
+        t.cancel_admit(2);
+        assert_eq!(t.live(), 1);
+        assert_eq!(t.footprint_estimate(), kv);
+        assert_eq!(t.decide(3, &user_meta(3), kv), Decision::Admit);
+        assert_eq!(t.stats().spurious_release, 0);
+    }
+
+    #[test]
+    fn admission_config_from_args_parses_and_validates() {
+        let args = |v: &[&str]| {
+            Args::parse(std::iter::once("prog".to_string()).chain(v.iter().map(|s| s.to_string())))
+                .unwrap()
+        };
+        let d = AdmissionConfig::default();
+        assert_eq!(AdmissionConfig::from_args(&args(&[]), &d).unwrap(), d);
+        let a = AdmissionConfig::from_args(
+            &args(&[
+                "plan", "--admission", "adaptive", "--headroom-min", "0.6", "--rate-mult-max",
+                "0.9",
+            ]),
+            &d,
+        )
+        .unwrap();
+        assert!(a.is_adaptive());
+        assert!((a.headroom_min - 0.6).abs() < 1e-12);
+        assert!((a.rate_mult_max - 0.9).abs() < 1e-12);
+        let seeded = {
+            let mut c = a.clone();
+            c.seed_operating_point(0.7, 0.5);
+            c
+        };
+        assert_eq!(seeded.headroom_init, Some(0.7));
+        // Explicit inits win over the scenario seed.
+        let explicit = AdmissionConfig::from_args(
+            &args(&["plan", "--admission", "adaptive", "--headroom-init", "0.66"]),
+            &d,
+        )
+        .unwrap();
+        let mut c = explicit;
+        c.seed_operating_point(0.7, 0.5);
+        assert_eq!(c.headroom_init, Some(0.66));
+        // Invalid shapes rejected — including explicit operating points
+        // outside their bands (no silent clamping of explicit flags).
+        for bad in [
+            vec!["p", "--admission", "sometimes"],
+            vec!["p", "--headroom-min", "0.9", "--headroom-max", "0.6"],
+            vec!["p", "--rate-mult-min", "0"],
+            vec!["p", "--adapt-window", "1"],
+            vec!["p", "--headroom-init", "0.3"],
+            vec!["p", "--rate-mult-init", "1.5"],
+        ] {
+            assert!(AdmissionConfig::from_args(&args(&bad), &d).is_err(), "{bad:?}");
+        }
+    }
+
     #[test]
     fn prop_admitted_never_exceeds_limits() {
         crate::util::prop::check("trigger-bounds", 100, |rng| {
@@ -364,7 +1205,7 @@ mod tests {
             let mut admitted_in_window = 0u64;
             for _ in 0..300 {
                 now += rng.range(0, 20_000) as u64;
-                match t.decide(now, &meta(4096)) {
+                match t.decide(now, &meta(4096), KV) {
                     Decision::Admit => admitted_in_window += 1,
                     _ => {}
                 }

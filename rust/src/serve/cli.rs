@@ -37,11 +37,16 @@ pub fn run(args: &Args) -> Result<()> {
         cfg.tiers = Some(config::parse_tiers(t)?);
     }
     cfg.segment_frac = config::parse_segment_frac(args, cfg.segment_frac)?;
+    cfg.admission = config::parse_admission(args, &cfg.admission)?;
 
     let scenario = match args.get("scenario") {
         Some(s) => ScenarioKind::parse(s).map_err(|e| anyhow!(e))?,
         None => ScenarioKind::Steady,
     };
+    // Scenario-shaped initial operating point for the adaptive
+    // controller (explicit --headroom-init / --rate-mult-init win).
+    let profile = scenario.admission_profile();
+    cfg.admission.seed_operating_point(profile.headroom_init, profile.rate_mult_init);
     let mut wl = WorkloadConfig {
         qps: args.get_f64("qps", 20.0)?,
         duration_us: (args.get_f64("duration-s", 10.0)? * 1e6) as u64,
@@ -65,13 +70,15 @@ pub fn run(args: &Args) -> Result<()> {
         .collect::<Vec<_>>()
         .join(",");
     println!(
-        "serving {} on {} instance(s) × {} slot(s), mode {}, tiers [{}], scenario {}, qps {}, {}s",
+        "serving {} on {} instance(s) × {} slot(s), mode {}, tiers [{}], scenario {}, \
+         admission {}, qps {}, {}s",
         spec.name(),
         cfg.n_instances,
         cfg.m_slots,
         mode.label(),
         if tier_desc.is_empty() { "hbm-only" } else { &tier_desc },
         wl.scenario.label(),
+        cfg.admission.label(),
         wl.qps,
         wl.duration_us / 1_000_000
     );
@@ -114,6 +121,9 @@ pub fn run(args: &Args) -> Result<()> {
         m.mean_util(None) * 100.0
     );
     for line in m.tier_report() {
+        println!("  {line}");
+    }
+    if let Some(line) = m.admission_brief() {
         println!("  {line}");
     }
     cluster.shutdown();

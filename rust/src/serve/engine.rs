@@ -28,7 +28,7 @@ use crate::relay::pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampl
 use crate::relay::router::RouterConfig;
 use crate::relay::segment::SegmentConfig;
 use crate::relay::tier::{EvictPolicy, TierConfig};
-use crate::relay::trigger::{BehaviorMeta, TriggerConfig};
+use crate::relay::trigger::{AdmissionConfig, BehaviorMeta, TriggerConfig};
 use crate::runtime::{synth_embedding, Engine, FnKind, KvBuffer, LoadedModel};
 use crate::util::rng::Rng;
 use crate::workload::{GenRequest, WorkloadConfig};
@@ -76,6 +76,8 @@ pub struct LiveConfig {
     pub segment_frac: f64,
     /// Staleness bound for cached candidate segments.
     pub seg_ttl_us: u64,
+    /// Admission-control mode + closed-loop knobs (`--admission`).
+    pub admission: AdmissionConfig,
     pub seed: u64,
 }
 
@@ -97,6 +99,7 @@ impl LiveConfig {
             tiers: None,
             segment_frac: 0.0,
             seg_ttl_us: 3_000_000,
+            admission: AdmissionConfig::default(),
             seed: 42,
         }
     }
@@ -140,6 +143,7 @@ impl LiveConfig {
                 m_slots: self.m_slots,
                 r2: 0.5,
                 n_instances: self.n_instances,
+                admission: self.admission.clone(),
             },
             tiers: self.tier_stack(),
             long_threshold: self.long_threshold,

@@ -139,20 +139,20 @@ impl Histogram {
         self.max = self.max.max(other.max);
     }
 
+    /// Exact number of samples ≤ threshold (integer bucket counts — SLO
+    /// compliance math must count failures exactly; deriving them back
+    /// from [`Histogram::fraction_le`] loses precision at large n).
+    pub fn count_le(&self, threshold: f64) -> u64 {
+        let cutoff = bucket_of(threshold);
+        self.buckets[..=cutoff.min(self.buckets.len() - 1)].iter().sum()
+    }
+
     /// Fraction of samples ≤ threshold (e.g. SLO compliance).
     pub fn fraction_le(&self, threshold: f64) -> f64 {
         if self.count == 0 {
             return 1.0;
         }
-        let cutoff = bucket_of(threshold);
-        let mut acc = 0u64;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            if i > cutoff {
-                break;
-            }
-            acc += c;
-        }
-        acc as f64 / self.count as f64
+        self.count_le(threshold) as f64 / self.count as f64
     }
 
     pub fn summary(&self) -> Summary {
@@ -290,6 +290,21 @@ mod tests {
         assert_eq!(a.count(), all.count());
         assert_eq!(a.p99(), all.p99());
         assert!((a.mean() - all.mean()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn count_le_is_exact_at_float_breaking_scale() {
+        // n = 2^53 + 2 with one failure: the float path (acc/count then
+        // n·(1−fraction)) loses the low bit of acc and reports 2 failed
+        // samples; the integer path must report exactly 1.
+        let n = (1u64 << 53) + 2;
+        let mut h = Histogram::new();
+        h.record_n(10.0, n - 1);
+        h.record_n(1e6, 1);
+        assert_eq!(h.count(), n);
+        assert_eq!(h.count() - h.count_le(1000.0), 1, "exact failure count");
+        let drifted = ((h.count() as f64) * (1.0 - h.fraction_le(1000.0))).round() as u64;
+        assert_ne!(drifted, 1, "float derivation drifts here — the bug this pins");
     }
 
     #[test]

@@ -21,7 +21,9 @@
 pub mod arrival;
 pub mod scenario;
 
-pub use scenario::{Burst, CandidateProfile, Coldstart, Diurnal, Scenario, ScenarioKind, Steady};
+pub use scenario::{
+    AdmissionProfile, Burst, CandidateProfile, Coldstart, Diurnal, Scenario, ScenarioKind, Steady,
+};
 
 use crate::relay::trigger::BehaviorMeta;
 use crate::util::rng::Rng;

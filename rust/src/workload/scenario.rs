@@ -35,6 +35,21 @@ pub struct CandidateProfile {
     pub hot_frac: f64,
 }
 
+/// Per-scenario initial operating point for the closed-loop admission
+/// controller (mirrors [`CandidateProfile`]): where the risk margin and
+/// the admitted-rate multiplier start before the windowed estimators
+/// warm up.  Flash crowds open the rate and tighten the margin up front
+/// (the spike outruns any estimator); coldstart traffic starts
+/// conservative (no reuse to exploit, every admit is a fresh
+/// production).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionProfile {
+    /// Initial effective risk headroom (at-risk iff est > h·budget).
+    pub headroom_init: f64,
+    /// Initial admitted-rate multiplier over Q_m·M.
+    pub rate_mult_init: f64,
+}
+
 /// A workload scenario: turns a [`WorkloadConfig`] into an arrival trace.
 pub trait Scenario {
     fn name(&self) -> &'static str;
@@ -112,6 +127,30 @@ impl ScenarioKind {
             ScenarioKind::Burst { .. } => CandidateProfile { hot_items: 64, hot_frac: 0.8 },
             // First-seen users bring long-tail candidates.
             ScenarioKind::Coldstart { .. } => CandidateProfile { hot_items: 4096, hot_frac: 0.05 },
+        }
+    }
+
+    /// The scenario's initial admission operating point (see
+    /// [`AdmissionProfile`]), seeded into the adaptive controller at run
+    /// start by both engines; explicit `--headroom-init` /
+    /// `--rate-mult-init` choices win.
+    pub fn admission_profile(&self) -> AdmissionProfile {
+        match self {
+            ScenarioKind::Steady => {
+                AdmissionProfile { headroom_init: 0.8, rate_mult_init: 0.5 }
+            }
+            ScenarioKind::Diurnal { .. } => {
+                AdmissionProfile { headroom_init: 0.75, rate_mult_init: 0.6 }
+            }
+            // Flash crowd: tighten the risk margin and open the rate
+            // before the estimators can catch up with the spike.
+            ScenarioKind::Burst { .. } => {
+                AdmissionProfile { headroom_init: 0.65, rate_mult_init: 1.0 }
+            }
+            // First-seen users: conservative until reuse materialises.
+            ScenarioKind::Coldstart { .. } => {
+                AdmissionProfile { headroom_init: 0.9, rate_mult_init: 0.4 }
+            }
         }
     }
 
@@ -330,6 +369,24 @@ mod tests {
             assert_eq!(kind.as_scenario().name(), name);
         }
         assert!(ScenarioKind::parse("lunar").is_err());
+    }
+
+    #[test]
+    fn admission_profiles_are_sane_and_scenario_shaped() {
+        for name in ScenarioKind::NAMES {
+            let p = ScenarioKind::parse(name).unwrap().admission_profile();
+            assert!((0.0..=1.0).contains(&p.headroom_init), "{name}: {p:?}");
+            assert!((0.0..=1.0).contains(&p.rate_mult_init), "{name}: {p:?}");
+        }
+        let steady = ScenarioKind::Steady.admission_profile();
+        let burst = ScenarioKind::parse("burst").unwrap().admission_profile();
+        let cold = ScenarioKind::parse("coldstart").unwrap().admission_profile();
+        // Flash crowds open the rate and tighten the margin up front;
+        // coldstart starts more conservative than steady on both axes.
+        assert!(burst.rate_mult_init > steady.rate_mult_init);
+        assert!(burst.headroom_init < steady.headroom_init);
+        assert!(cold.headroom_init > steady.headroom_init);
+        assert!(cold.rate_mult_init < steady.rate_mult_init);
     }
 
     #[test]

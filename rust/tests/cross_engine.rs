@@ -13,6 +13,7 @@ use relaygr::relay::coordinator::{
 };
 use relaygr::relay::pipeline::CacheOutcome;
 use relaygr::relay::tier::{DramPolicy, EvictPolicy, TierConfig};
+use relaygr::relay::trigger::AdmissionMode;
 use relaygr::workload::{generate, ScenarioKind, WorkloadConfig};
 
 fn workload(dram: bool) -> WorkloadConfig {
@@ -57,6 +58,80 @@ fn sim_and_serial_driver_agree_exactly() {
     // Sanity: the trace actually exercised the relay path.
     assert!(sim_log.iter().any(|&(_, o)| o == CacheOutcome::HbmHit), "no relay traffic");
     assert!(sim_log.iter().any(|&(_, o)| o == CacheOutcome::FullInference), "no normal traffic");
+}
+
+/// `--admission static` (the default) must stay decision-for-decision
+/// identical to the pre-adaptive trigger on *every* scenario: the
+/// simulator and the serialized reference classify each request the
+/// same way under the strict shape (no DRAM tier, no refresh bursts,
+/// T_life beyond the trace).
+#[test]
+fn static_admission_identical_across_engines_on_all_scenarios() {
+    for name in ScenarioKind::NAMES {
+        let mut wl = workload(false);
+        wl.scenario = ScenarioKind::parse(name).expect("built-in scenario");
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.pipeline.t_life_us = 2 * wl.duration_us;
+        assert_eq!(cfg.admission.mode, AdmissionMode::Static, "static is the default");
+        let sim_log = sim_outcomes(&cfg, &wl);
+        let serial = run_reference(&cfg, &wl).expect("serialized reference runs").outcomes;
+        assert_eq!(sim_log.len(), serial.len(), "{name}: trace length");
+        for (a, b) in sim_log.iter().zip(&serial) {
+            assert_eq!(a, b, "{name}: request {} classified differently across engines", a.0);
+        }
+        assert!(
+            sim_log.iter().any(|&(_, o)| o == CacheOutcome::HbmHit),
+            "{name}: no relay traffic"
+        );
+    }
+}
+
+/// Tentpole: the closed-loop controller's signals are all
+/// decision-synchronous (observed footprints, metadata estimates,
+/// arrival clocks — never completion timing), so adaptive admission
+/// must *also* be decision-identical across engines — here under the
+/// misprovisioned shape where the static bound collapses (`L_max = 0`)
+/// and the adaptive bound does all the work.
+#[test]
+fn adaptive_admission_identical_across_engines_and_beats_collapsed_bound() {
+    let mut wl = workload(false);
+    wl.long_frac = 0.2;
+    wl.fixed_long_len = Some(3072);
+    wl.max_prefix = 3072;
+    wl.scenario = ScenarioKind::parse("burst").unwrap();
+    let run = |mode: AdmissionMode| {
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.pipeline.t_life_us = 2 * wl.duration_us;
+        // Provisioned worst-case ψ (32K tokens ≈ 512 MB) exceeds the 1%
+        // r1 slice (≈ 344 MB): the static Eq. 2 bound admits nothing.
+        cfg.r1 = 0.01;
+        cfg.kv_p99_prefix = 32_768;
+        cfg.admission.mode = mode;
+        let sim_log = sim_outcomes(&cfg, &wl);
+        let serial = run_reference(&cfg, &wl).expect("serialized reference runs");
+        assert_eq!(
+            sim_log, serial.outcomes,
+            "{mode:?}: engines diverged on per-request outcomes"
+        );
+        (sim_log, serial)
+    };
+    let (_, stat) = run(AdmissionMode::Static);
+    let (_, adpt) = run(AdmissionMode::Adaptive);
+    assert_eq!(stat.trigger.admitted, 0, "collapsed static bound admits nothing");
+    assert!(stat.trigger.footprint_limited > 0);
+    assert!(adpt.trigger.admitted > 0, "adaptive admits against observed footprints");
+    assert!(
+        adpt.trigger.footprint_limited < stat.trigger.footprint_limited,
+        "adaptive fp-limited {} !< static {}",
+        adpt.trigger.footprint_limited,
+        stat.trigger.footprint_limited
+    );
+    // More relay service, less full inference — and no lost productions
+    // (the occupancy-aware bound never outruns the ψ window).
+    let full = |r: &relaygr::cluster::ReferenceRun| r.outcome_counts[0];
+    assert!(full(&adpt) < full(&stat));
+    assert_eq!((adpt.hbm.lost, adpt.hbm.rejected), (0, 0), "{:?}", adpt.hbm);
+    assert!(adpt.trigger.l_max_effective > 0);
 }
 
 /// With the DRAM tier and refresh bursts, cache-path timing may differ

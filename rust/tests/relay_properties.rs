@@ -41,7 +41,7 @@ fn prop_full_relay_cycle_consistent() {
                 // Admission + signal-side pseudo pre-infer.
                 0 => {
                     let meta = BehaviorMeta { user, prefix_len: 4096, dim: 256 };
-                    if trigger.decide(now, &meta) == Decision::Admit {
+                    if trigger.decide(now, &meta, 32 * MB) == Decision::Admit {
                         let r1 = router.route_special(user);
                         let r2 = router.route_special(user);
                         router.on_complete(r1.instance);
