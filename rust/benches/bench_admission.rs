@@ -85,8 +85,9 @@ fn main() {
             id += 1;
             now += 700;
             let user = id % 1024;
-            if coord.on_arrival(now, id, user, 4096, &[]) {
-                match coord.on_trigger_check(now, id) {
+            let (req, wants_trigger) = coord.on_arrival(now, user, 4096, &[]);
+            if wants_trigger {
+                match coord.on_trigger_check(now, req) {
                     SignalAction::Produce { instance, user, .. } => {
                         coord.on_psi_ready(now, instance, user, Some(()));
                     }
@@ -96,12 +97,12 @@ fn main() {
                     SignalAction::None => {}
                 }
             }
-            let inst = coord.on_stage_done(now, id, Stage::Preproc).expect("rank routed");
-            if let RankAction::StartReload { bytes } = coord.on_rank_start(now, id) {
+            let inst = coord.on_stage_done(now, req, Stage::Preproc).expect("rank routed");
+            if let RankAction::StartReload { bytes } = coord.on_rank_start(now, req) {
                 coord.on_reload_done(now, inst, user, Some(()), bytes);
             }
-            let _ = coord.rank_compute(now, id);
-            let done = coord.on_rank_done(now, id, kv);
+            let _ = coord.rank_compute(now, req);
+            let done = coord.on_rank_done(now, req, kv);
             if let Some(bytes) = done.spill {
                 coord.complete_spill(done.instance, done.user, bytes, ());
             }

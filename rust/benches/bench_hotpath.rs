@@ -3,12 +3,19 @@
 //! recording) plus live PJRT execution benches when artifacts exist.
 //!
 //! The coordinator budget is microseconds — it must never show up next
-//! to the tens-of-milliseconds ranking budget.
+//! to the tens-of-milliseconds ranking budget.  This binary installs the
+//! counting allocator and *asserts* zero steady-state allocations for
+//! the per-request control-plane ops (affinity route, admission
+//! decide+release, hierarchy hit lookup) — the zero-allocation hot-path
+//! contract, enforced on every bench run rather than assumed.
 
 #[path = "harness.rs"]
 mod harness;
 
 use harness::{bench, write_results};
+
+#[global_allocator]
+static ALLOC: harness::CountingAlloc = harness::CountingAlloc;
 use relaygr::relay::hbm::HbmCache;
 use relaygr::relay::hierarchy::CacheHierarchy;
 use relaygr::relay::router::{Router, RouterConfig};
@@ -68,6 +75,23 @@ fn main() {
         hbm.consume(user);
         hbm.evict(user);
     }));
+
+    // --- hierarchy hit lookup (the pseudo-pre-infer front door) -------------
+    // Resident Ready entries with an effectively-infinite lease: every
+    // probe is the pure lookup path — counter bumps only, no state
+    // churn, and (asserted below) no allocator traffic.
+    {
+        let mut h: CacheHierarchy<u32> = CacheHierarchy::new(64 << 30, &[], 4);
+        for user in 0..512u64 {
+            h.hbm_mut().begin_produce(user, 16 << 20, 0, u64::MAX / 2).unwrap();
+            h.hbm_mut().complete_produce(user, user as u32);
+        }
+        let mut u = 0u64;
+        results.push(bench("hierarchy/lookup_hit", 100, 20_000, || {
+            u += 1;
+            std::hint::black_box(h.pseudo_pre_infer(u % 512, u));
+        }));
+    }
 
     // --- tier hierarchy -----------------------------------------------------
     let mut h: CacheHierarchy<u32> =
@@ -135,8 +159,9 @@ fn main() {
             id += 1;
             now += 700;
             let user = id % 1024;
-            if coord.on_arrival(now, id, user, 4096, &[]) {
-                match coord.on_trigger_check(now, id) {
+            let (req, wants_trigger) = coord.on_arrival(now, user, 4096, &[]);
+            if wants_trigger {
+                match coord.on_trigger_check(now, req) {
                     SignalAction::Produce { instance, user, .. } => {
                         coord.on_psi_ready(now, instance, user, Some(()));
                     }
@@ -147,13 +172,13 @@ fn main() {
                 }
             }
             let inst = coord
-                .on_stage_done(now, id, Stage::Preproc)
+                .on_stage_done(now, req, Stage::Preproc)
                 .expect("rank instance routed");
-            if let RankAction::StartReload { bytes } = coord.on_rank_start(now, id) {
+            if let RankAction::StartReload { bytes } = coord.on_rank_start(now, req) {
                 coord.on_reload_done(now, inst, user, Some(()), bytes);
             }
-            let _ = coord.rank_compute(now, id);
-            let done = coord.on_rank_done(now, id, kv);
+            let _ = coord.rank_compute(now, req);
+            let done = coord.on_rank_done(now, req, kv);
             if let Some(bytes) = done.spill {
                 coord.complete_spill(done.instance, done.user, bytes, ());
             }
@@ -215,6 +240,21 @@ fn main() {
         }
     } else {
         eprintln!("(skipping pjrt benches: no artifacts — run `make artifacts`)");
+    }
+
+    // The zero-allocation hot-path contract: the per-request control
+    // plane ops must show no allocator traffic in steady state (warm-up
+    // grows every pool/table to its high-water mark first).
+    for name in
+        ["router/route_special+complete", "trigger/decide+release", "hierarchy/lookup_hit"]
+    {
+        let r = results.iter().find(|r| r.name == name).expect("hot op benchmarked");
+        assert_eq!(
+            r.allocs_per_op,
+            Some(0.0),
+            "steady-state allocation regression on hot op '{name}': {:?} allocs/op",
+            r.allocs_per_op
+        );
     }
 
     write_results("hotpath", &results);

@@ -84,8 +84,10 @@ fn main() {
             id += 1;
             now += 700;
             let user = id % 1024;
-            if coord.on_arrival(now, id, user, 4096, &cands[(id & 255) as usize]) {
-                match coord.on_trigger_check(now, id) {
+            let (req, wants_trigger) =
+                coord.on_arrival(now, user, 4096, &cands[(id & 255) as usize]);
+            if wants_trigger {
+                match coord.on_trigger_check(now, req) {
                     SignalAction::Produce { instance, user, .. } => {
                         coord.on_psi_ready(now, instance, user, Some(()));
                     }
@@ -96,13 +98,13 @@ fn main() {
                 }
             }
             let inst = coord
-                .on_stage_done(now, id, Stage::Preproc)
+                .on_stage_done(now, req, Stage::Preproc)
                 .expect("rank instance routed");
-            if let RankAction::StartReload { bytes } = coord.on_rank_start(now, id) {
+            if let RankAction::StartReload { bytes } = coord.on_rank_start(now, req) {
                 coord.on_reload_done(now, inst, user, Some(()), bytes);
             }
-            let _ = coord.rank_compute(now, id);
-            let done = coord.on_rank_done(now, id, kv);
+            let _ = coord.rank_compute(now, req);
+            let done = coord.on_rank_done(now, req, kv);
             if let Some(bytes) = done.spill {
                 coord.complete_spill(done.instance, done.user, bytes, ());
             }

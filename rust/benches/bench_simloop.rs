@@ -1,0 +1,96 @@
+//! End-to-end simulator-loop benchmarks: the first real perf-trajectory
+//! datapoints for the evaluation plane itself.
+//!
+//! * `simloop/steady_2s_300qps` — one full discrete-event simulation
+//!   (timer wheel + streaming arrivals + slab-backed coordinator),
+//!   reporting wall-clock and `events_per_sec` (total wheel events over
+//!   mean wall time);
+//! * `simloop/figure_grid_jobs{1,N}` — the `figure scenarios` grid (4
+//!   scenarios × 2 modes, quick shape) through the deterministic
+//!   parallel executor at 1 vs N jobs, with the byte-identical-rows
+//!   check run inline and `speedup_vs_jobs1` recorded on the parallel
+//!   row.
+//!
+//! Emits `BENCH_simloop.json` (and `results/bench/simloop.json`); runs
+//! in CI next to the other suites.  `--jobs N` overrides the parallel
+//! arm's job count (default 4).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_results};
+use relaygr::cluster::SimConfig;
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::tier::DramPolicy;
+use relaygr::util::cli::Args;
+use relaygr::workload::WorkloadConfig;
+
+fn grid_args(jobs: usize) -> Args {
+    Args::parse(
+        [
+            "bench".to_string(),
+            "figure".to_string(),
+            "--quick".to_string(),
+            "--qps".to_string(),
+            "60".to_string(),
+            "--jobs".to_string(),
+            jobs.to_string(),
+        ]
+        .into_iter(),
+    )
+    .expect("static args parse")
+}
+
+fn main() {
+    let argv = Args::from_env().unwrap_or_default();
+    let jobs = argv.get_usize("jobs", 4).unwrap_or(4);
+    let mut results = Vec::new();
+
+    // --- one full simulation: events/sec -----------------------------------
+    let cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) });
+    let wl = WorkloadConfig {
+        qps: 300.0,
+        duration_us: 2_000_000,
+        num_users: 10_000,
+        ..Default::default()
+    };
+    let mut events = 0u64;
+    let mut completed = 0u64;
+    let mut r = bench("simloop/steady_2s_300qps", 1, 10, || {
+        let m = relaygr::cluster::run_sim(cfg.clone(), &wl).expect("sim runs");
+        events = m.sim_events;
+        completed = m.completed;
+        std::hint::black_box(&m);
+    });
+    r.extra.push(("events".into(), events as f64));
+    r.extra.push(("events_per_sec".into(), events as f64 / (r.mean_us / 1e6)));
+    r.extra.push(("completed_requests".into(), completed as f64));
+    println!(
+        "{:<44} {:>20.0} events/s ({} events, {} requests)",
+        "simloop/steady_2s_300qps", events as f64 / (r.mean_us / 1e6), events, completed
+    );
+    results.push(r);
+
+    // --- figure grid: serial vs parallel wall-clock -------------------------
+    let mut serial_rows = Vec::new();
+    let r1 = bench("simloop/figure_grid_jobs1", 0, 3, || {
+        serial_rows = relaygr::figures::scenarios::grid_rows(&grid_args(1)).expect("grid runs");
+    });
+    let mut parallel_rows = Vec::new();
+    let mut rn = bench(&format!("simloop/figure_grid_jobs{jobs}"), 0, 3, || {
+        parallel_rows =
+            relaygr::figures::scenarios::grid_rows(&grid_args(jobs)).expect("grid runs");
+    });
+    assert_eq!(
+        serial_rows, parallel_rows,
+        "figure grid rows must be byte-identical at any job count"
+    );
+    let speedup = r1.mean_us / rn.mean_us;
+    rn.extra.push(("speedup_vs_jobs1".into(), speedup));
+    rn.extra.push(("jobs".into(), jobs as f64));
+    println!("figure grid speedup at --jobs {jobs}: {speedup:.2}×");
+    results.push(r1);
+    results.push(rn);
+
+    write_results("simloop", &results);
+}

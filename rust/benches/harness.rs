@@ -4,9 +4,70 @@
 //! warm-up + timed iterations with mean / p50 / p99 reporting and JSON
 //! persistence under `results/bench/`.
 //!
-//! Shared by both bench binaries via `#[path]` include.
+//! Shared by the bench binaries via `#[path]` include.
+//!
+//! ## Allocation accounting
+//!
+//! A bench binary opts into allocation counting by installing the
+//! counting global allocator:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: harness::CountingAlloc = harness::CountingAlloc;
+//! ```
+//!
+//! Every [`bench`] then measures the allocation count across the timed
+//! loop and reports `allocs_per_op` (printed and persisted in the BENCH
+//! JSON), so zero-allocation hot paths are asserted, not assumed.
+//! Without the opt-in the field is absent — the harness detects the
+//! allocator by whether the counter ever moved.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Counting wrapper around the system allocator.  Counts allocation
+/// *operations* (alloc / realloc / alloc_zeroed); frees are not charged —
+/// the hot-path budget is "no allocator traffic", and a free implies an
+/// earlier charged alloc.
+pub struct CountingAlloc;
+
+static ALLOC_OPS: AtomicU64 = AtomicU64::new(0);
+static COUNTER_LIVE: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        COUNTER_LIVE.store(true, Ordering::Relaxed);
+        ALLOC_OPS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        COUNTER_LIVE.store(true, Ordering::Relaxed);
+        ALLOC_OPS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        COUNTER_LIVE.store(true, Ordering::Relaxed);
+        ALLOC_OPS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Cumulative allocation operations, or `None` when the binary did not
+/// install [`CountingAlloc`].
+pub fn alloc_ops() -> Option<u64> {
+    if COUNTER_LIVE.load(Ordering::Relaxed) {
+        Some(ALLOC_OPS.load(Ordering::Relaxed))
+    } else {
+        None
+    }
+}
 
 pub struct BenchResult {
     pub name: String,
@@ -15,6 +76,12 @@ pub struct BenchResult {
     pub p50_us: f64,
     pub p99_us: f64,
     pub min_us: f64,
+    /// Allocator operations per iteration across the timed loop —
+    /// present only under [`CountingAlloc`].
+    pub allocs_per_op: Option<f64>,
+    /// Suite-specific extra metrics persisted alongside the timings
+    /// (e.g. `events_per_sec` for the sim loop).
+    pub extra: Vec<(String, f64)>,
 }
 
 /// Time `f` for `iters` iterations after `warmup` unmeasured runs.
@@ -22,12 +89,19 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Bench
     for _ in 0..warmup {
         f();
     }
+    // Pre-size the sample buffer before the allocation snapshot so the
+    // harness itself stays out of the measurement.
     let mut samples = Vec::with_capacity(iters as usize);
+    let allocs_before = alloc_ops();
     for _ in 0..iters {
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed().as_secs_f64() * 1e6);
     }
+    let allocs_per_op = match (allocs_before, alloc_ops()) {
+        (Some(a), Some(b)) => Some((b - a) as f64 / iters.max(1) as f64),
+        _ => None,
+    };
     samples.sort_by(|a, b| a.total_cmp(b));
     let n = samples.len();
     let mean = samples.iter().sum::<f64>() / n as f64;
@@ -38,9 +112,15 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Bench
         p50_us: samples[n / 2],
         p99_us: samples[(n as f64 * 0.99) as usize % n],
         min_us: samples[0],
+        allocs_per_op,
+        extra: Vec::new(),
+    };
+    let allocs = match r.allocs_per_op {
+        Some(a) => format!("  allocs/op {a:>8.2}"),
+        None => String::new(),
     };
     println!(
-        "{:<44} {:>8} iters  mean {:>12.2} µs  p50 {:>12.2} µs  p99 {:>12.2} µs",
+        "{:<44} {:>8} iters  mean {:>12.2} µs  p50 {:>12.2} µs  p99 {:>12.2} µs{allocs}",
         r.name, r.iters, r.mean_us, r.p50_us, r.p99_us
     );
     r
@@ -62,6 +142,12 @@ pub fn write_results(file: &str, results: &[BenchResult]) {
                 .set("p50_us", r.p50_us.into())
                 .set("p99_us", r.p99_us.into())
                 .set("min_us", r.min_us.into());
+            if let Some(a) = r.allocs_per_op {
+                j.set("allocs_per_op", a.into());
+            }
+            for (k, v) in &r.extra {
+                j.set(k, (*v).into());
+            }
             j
         })
         .collect();

@@ -8,9 +8,11 @@
 
 pub mod reference;
 pub mod sim;
+pub mod wheel;
 
 pub use reference::{drive_reference, run_reference, ReferenceRun};
 pub use sim::{run_sim, Sim, SimConfig};
+pub use wheel::TimerWheel;
 
 #[cfg(test)]
 mod tests {

@@ -20,7 +20,7 @@ use crate::relay::hierarchy::HierarchyStats;
 use crate::relay::pipeline::CacheOutcome;
 use crate::relay::segment::SegmentStats;
 use crate::relay::trigger::TriggerStats;
-use crate::workload::{candidate_set, generate, GenRequest, WorkloadConfig};
+use crate::workload::{candidate_set_into, generate, GenRequest, WorkloadConfig};
 
 /// One serialized run: per-request outcomes (sorted by request id), the
 /// analytic rank-compute cost summed over the coordinator's decisions
@@ -50,11 +50,17 @@ pub fn drive_reference(
     let mut outcomes = Vec::with_capacity(trace.len());
     let mut outcome_counts = [0u64; 5];
     let mut rank_us_sum = 0.0;
+    let mut cands: Vec<u64> = Vec::new();
     for req in trace {
         let now = req.arrival_us;
-        let cands = if coord.segments_enabled() { candidate_set(wl, req) } else { Vec::new() };
-        if coord.on_arrival(now, req.id, req.user, req.prefix_len, &cands) {
-            match coord.on_trigger_check(now, req.id) {
+        if coord.segments_enabled() {
+            candidate_set_into(wl, req, &mut cands);
+        } else {
+            cands.clear();
+        }
+        let (handle, wants_trigger) = coord.on_arrival(now, req.user, req.prefix_len, &cands);
+        if wants_trigger {
+            match coord.on_trigger_check(now, handle) {
                 SignalAction::Produce { instance, user, .. } => {
                     coord.on_psi_ready(now, instance, user, Some(()));
                 }
@@ -64,11 +70,11 @@ pub fn drive_reference(
                 SignalAction::None => {}
             }
         }
-        coord.on_stage_done(now, req.id, Stage::Retrieval);
+        coord.on_stage_done(now, handle, Stage::Retrieval);
         let inst = coord
-            .on_stage_done(now, req.id, Stage::Preproc)
+            .on_stage_done(now, handle, Stage::Preproc)
             .expect("preproc resolves the ranking instance");
-        match coord.on_rank_start(now, req.id) {
+        match coord.on_rank_start(now, handle) {
             RankAction::Proceed { .. } => {}
             RankAction::StartReload { bytes } => {
                 coord.on_reload_done(now, inst, req.user, Some(()), bytes);
@@ -78,10 +84,10 @@ pub fn drive_reference(
             // than report decisions from an unresolved request.
             other => bail!("serialized driver saw {other:?} for request {}", req.id),
         }
-        let rc = coord.rank_compute(now, req.id);
+        let rc = coord.rank_compute(now, handle);
         let skipped = rc.segments.map(|p| p.skipped()).unwrap_or(0);
         rank_us_sum += rank_cost(rc.cached, req.prefix_len, skipped);
-        let done = coord.on_rank_done(now, req.id, kv_bytes(req.prefix_len));
+        let done = coord.on_rank_done(now, handle, kv_bytes(req.prefix_len));
         if let Some(bytes) = done.spill {
             coord.complete_spill(done.instance, done.user, bytes, ());
         }

@@ -17,17 +17,27 @@
 //! pool) is a k-server FIFO — work is assigned to the earliest-free
 //! server *when it becomes ready*, which reproduces queuing delay and
 //! tail amplification under load without modelling preemption.
+//!
+//! Hot-path discipline (the relay-race premise — control must cost
+//! microseconds next to a tens-of-milliseconds ranking budget):
+//!
+//! * the event queue is a hierarchical [`TimerWheel`] — O(1) push, exact
+//!   `(t, event_seq)` pop order, byte-identical outcomes to the
+//!   `BinaryHeap` it replaced;
+//! * arrivals stream lazily from the workload's [`ArrivalStream`] — the
+//!   trace is never materialized, so memory is O(in-flight requests)
+//!   at million-user scale;
+//! * per-request state is keyed by the coordinator's generational
+//!   [`ReqId`] handles in a dense [`SecondaryMap`], and events carry the
+//!   handle (or the whole `Copy` pre-infer job) inline — no hashing, no
+//!   per-event allocation.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
-use crate::util::fxhash::FxHashMap;
-
+use crate::cluster::wheel::TimerWheel;
 use crate::metrics::RunMetrics;
 use crate::model::{HardwareProfile, ModelSpec};
 use crate::relay::baseline::Mode;
 use crate::relay::coordinator::{
-    CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, SignalAction, Stage,
+    CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, ReqId, SignalAction, Stage,
 };
 use crate::relay::pipeline::{Lifecycle, PipelineConfig, StageSampler};
 use crate::relay::router::RouterConfig;
@@ -35,7 +45,8 @@ use crate::relay::segment::SegmentConfig;
 use crate::relay::tier::{EvictPolicy, TierConfig};
 use crate::relay::trigger::{AdmissionConfig, BehaviorMeta, TriggerConfig};
 use crate::util::rng::Rng;
-use crate::workload::{GenRequest, WorkloadConfig};
+use crate::util::slab::SecondaryMap;
+use crate::workload::{ArrivalStream, GenRequest, WorkloadConfig};
 
 /// Full simulation configuration.
 #[derive(Debug, Clone)]
@@ -187,22 +198,34 @@ impl SimConfig {
 // Event machinery
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+/// An admitted pre-inference job.  Carried inline in its events — the job
+/// lives independently of the request (the rank may complete, by
+/// fallback, before the side path finishes), so it must not be keyed by
+/// the request's recyclable handle.
+#[derive(Debug, Clone, Copy)]
+struct PreJob {
+    inst: usize,
+    user: u64,
+    prefix_len: usize,
+    issue_us: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
 enum Ev {
-    /// Inject trace\[idx\] and schedule the next injection.
-    Arrive(usize),
-    TriggerCheck(u64),
-    PreCpuDone(u64),
-    PreXferDone(u64),
-    PreInferDone(u64),
-    RetrievalDone(u64),
-    PreprocDone(u64),
-    RankArrive(u64),
-    RankCpuDone(u64),
-    RankXferDone(u64),
+    /// Inject this arrival and pull the next one from the stream.
+    Arrive(GenRequest),
+    TriggerCheck(ReqId),
+    PreCpuDone { job: PreJob, req: ReqId },
+    PreXferDone { job: PreJob, req: ReqId },
+    PreInferDone { job: PreJob, req: ReqId },
+    RetrievalDone(ReqId),
+    PreprocDone(ReqId),
+    RankArrive(ReqId),
+    RankCpuDone(ReqId),
+    RankXferDone(ReqId),
     /// A DRAM→HBM reload of `bytes` finished on `inst` for `user`.
     ReloadDone { user: u64, inst: usize, bytes: usize },
-    RankExecDone(u64),
+    RankExecDone(ReqId),
 }
 
 /// Per-request timing record (decision state lives in the coordinator).
@@ -236,33 +259,26 @@ fn alloc(free: &mut [u64], now: u64, dur_us: f64) -> (u64, u64) {
     (start, end)
 }
 
-/// An admitted pre-inference job (lives independently of the request:
-/// the rank may complete — by fallback — before the side path finishes).
-#[derive(Debug, Clone, Copy)]
-struct PreJob {
-    inst: usize,
-    user: u64,
-    prefix_len: usize,
-    issue_us: u64,
-}
-
 /// The simulator.
 pub struct Sim {
     cfg: SimConfig,
     /// Workload shape kept for lazy per-request candidate derivation.
     workload: WorkloadConfig,
-    trace: Vec<GenRequest>,
+    /// Lazy arrival source (the trace is never materialized).
+    arrivals: ArrivalStream,
+    arrived: u64,
     coord: RelayCoordinator<()>,
     /// Per-instance NPU model-slot FIFOs and busy time.
     slots: Vec<Vec<u64>>,
     busy_us: Vec<f64>,
     servers: Vec<Server>,
-    states: FxHashMap<u64, ReqState>,
-    pre_jobs: FxHashMap<u64, PreJob>,
-    /// (time, tie-break seq, event) — events stored inline (Copy), no
-    /// side table (perf: the old `Vec<Ev>` grew unboundedly and cost an
-    /// extra indirection per dispatch).
-    heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
+    states: SecondaryMap<ReqState>,
+    /// Recycled candidate-set buffer (the coordinator copies it into the
+    /// request's own recycled slot).
+    cand_buf: Vec<u64>,
+    /// `(time, tie-break seq)`-ordered event queue; events are `Copy` and
+    /// stored inline in the wheel's recycled slot vectors.
+    events: TimerWheel<Ev>,
     event_seq: u64,
     rng: Rng,
     retrieval: StageSampler,
@@ -277,7 +293,7 @@ impl Sim {
         // controller (explicit CLI/config choices win; static ignores it).
         let profile = workload.scenario.admission_profile();
         cfg.admission.seed_operating_point(profile.headroom_init, profile.rate_mult_init);
-        let trace = crate::workload::generate(workload);
+        let arrivals = crate::workload::stream(workload);
         let coord = RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator())?;
         let slots = (0..cfg.router.n_instances).map(|_| vec![0u64; cfg.m_slots]).collect();
         let busy_us = vec![0.0; cfg.router.n_instances];
@@ -298,14 +314,15 @@ impl Sim {
             rng: Rng::new(cfg.seed),
             cfg,
             workload: workload.clone(),
-            trace,
+            arrivals,
+            arrived: 0,
             coord,
             slots,
             busy_us,
             servers,
-            states: FxHashMap::default(),
-            pre_jobs: FxHashMap::default(),
-            heap: BinaryHeap::new(),
+            states: SecondaryMap::new(),
+            cand_buf: Vec::new(),
+            events: TimerWheel::new(),
             event_seq: 0,
             retrieval,
             preproc,
@@ -316,7 +333,7 @@ impl Sim {
 
     fn push(&mut self, t: u64, ev: Ev) {
         self.event_seq += 1;
-        self.heap.push(Reverse((t, self.event_seq, ev)));
+        self.events.push(t, self.event_seq, ev);
     }
 
     fn server_of(&self, inst: usize) -> usize {
@@ -325,10 +342,10 @@ impl Sim {
 
     /// Run to completion and return the metrics.
     pub fn run(mut self) -> RunMetrics {
-        if !self.trace.is_empty() {
-            self.push(self.trace[0].arrival_us, Ev::Arrive(0));
+        if let Some(first) = self.arrivals.next() {
+            self.push(first.arrival_us, Ev::Arrive(first));
         }
-        while let Some(Reverse((t, _, ev))) = self.heap.pop() {
+        while let Some((t, _seq, ev)) = self.events.pop() {
             self.dispatch(t, ev);
         }
         // Finalize utilization (busy over elapsed × slots).
@@ -344,16 +361,17 @@ impl Sim {
         self.metrics.trigger = self.coord.trigger_stats();
         self.metrics.segments = self.coord.segment_stats();
         self.metrics.sim_duration_us = self.end_us;
+        self.metrics.sim_events = self.event_seq;
         self.metrics
     }
 
     fn dispatch(&mut self, now: u64, ev: Ev) {
         match ev {
-            Ev::Arrive(idx) => self.on_arrive(now, idx),
+            Ev::Arrive(gen) => self.on_arrive(now, gen),
             Ev::TriggerCheck(r) => self.on_trigger_check(now, r),
-            Ev::PreCpuDone(r) => self.on_pre_cpu_done(now, r),
-            Ev::PreXferDone(r) => self.on_pre_xfer_done(now, r),
-            Ev::PreInferDone(r) => self.on_pre_infer_done(now, r),
+            Ev::PreCpuDone { job, req } => self.on_pre_cpu_done(now, job, req),
+            Ev::PreXferDone { job, req } => self.on_pre_xfer_done(now, job, req),
+            Ev::PreInferDone { job, req } => self.on_pre_infer_done(now, job, req),
             Ev::RetrievalDone(r) => self.on_retrieval_done(now, r),
             Ev::PreprocDone(r) => self.on_preproc_done(now, r),
             Ev::RankArrive(r) => self.on_rank_arrive(now, r),
@@ -366,14 +384,22 @@ impl Sim {
 
     // ---- pipeline front half ------------------------------------------------
 
-    fn on_arrive(&mut self, now: u64, idx: usize) {
-        if idx + 1 < self.trace.len() {
-            let t = self.trace[idx + 1].arrival_us;
-            self.push(t, Ev::Arrive(idx + 1));
+    fn on_arrive(&mut self, now: u64, gen: GenRequest) {
+        if let Some(next) = self.arrivals.next() {
+            self.push(next.arrival_us, Ev::Arrive(next));
         }
-        let gen = self.trace[idx];
+        self.arrived += 1;
+        // Candidate sets are only materialised when segment reuse is on
+        // (request-keyed RNG stream: never perturbs the arrival trace).
+        if self.coord.segments_enabled() {
+            crate::workload::candidate_set_into(&self.workload, &gen, &mut self.cand_buf);
+        } else {
+            self.cand_buf.clear();
+        }
+        let (req, wants_trigger) =
+            self.coord.on_arrival(now, gen.user, gen.prefix_len, &self.cand_buf);
         self.states.insert(
-            gen.id,
+            req,
             ReqState {
                 gen,
                 rank_instance: usize::MAX,
@@ -385,34 +411,25 @@ impl Sim {
                 rank_start: 0,
             },
         );
-        // Candidate sets are only materialised when segment reuse is on
-        // (request-keyed RNG stream: never perturbs the arrival trace).
-        let cands = if self.coord.segments_enabled() {
-            crate::workload::candidate_set(&self.workload, &gen)
-        } else {
-            Vec::new()
-        };
-        let wants_trigger = self.coord.on_arrival(now, gen.id, gen.user, gen.prefix_len, &cands);
         let dur = self.retrieval.sample(&mut self.rng);
-        self.push(now + dur as u64, Ev::RetrievalDone(gen.id));
+        self.push(now + dur as u64, Ev::RetrievalDone(req));
         if wants_trigger {
             let t = now + self.cfg.pipeline.trigger_us as u64;
-            self.push(t, Ev::TriggerCheck(gen.id));
+            self.push(t, Ev::TriggerCheck(req));
         }
     }
 
-    fn on_trigger_check(&mut self, now: u64, req: u64) {
+    fn on_trigger_check(&mut self, now: u64, req: ReqId) {
         match self.coord.on_trigger_check(now, req) {
             SignalAction::None => {}
             SignalAction::Produce { instance, user, prefix_len } => {
                 // Behaviour fetch + CPU feature processing, then H2D, then
                 // the prefix pass on an NPU slot.
-                self.pre_jobs
-                    .insert(req, PreJob { inst: instance, user, prefix_len, issue_us: now });
+                let job = PreJob { inst: instance, user, prefix_len, issue_us: now };
                 let server = self.server_of(instance);
                 let cpu_dur = self.cfg.hw.feature_proc_us(prefix_len);
                 let (_, end) = alloc(&mut self.servers[server].cpu, now, cpu_dur);
-                self.push(end, Ev::PreCpuDone(req));
+                self.push(end, Ev::PreCpuDone { job, req });
             }
             SignalAction::Reload { instance, user, bytes } => {
                 let server = self.server_of(instance);
@@ -423,44 +440,42 @@ impl Sim {
         }
     }
 
-    fn on_pre_cpu_done(&mut self, now: u64, req: u64) {
-        let PreJob { inst, prefix_len, .. } = self.pre_jobs[&req];
-        let server = self.server_of(inst);
-        let bytes = self.cfg.spec.embed_bytes(prefix_len);
+    fn on_pre_cpu_done(&mut self, now: u64, job: PreJob, req: ReqId) {
+        let server = self.server_of(job.inst);
+        let bytes = self.cfg.spec.embed_bytes(job.prefix_len);
         let dur = self.cfg.hw.h2d_embed_us(bytes);
         let (_, end) = alloc(&mut self.servers[server].pcie, now, dur);
-        self.push(end, Ev::PreXferDone(req));
+        self.push(end, Ev::PreXferDone { job, req });
     }
 
-    fn on_pre_xfer_done(&mut self, now: u64, req: u64) {
-        let PreJob { inst, prefix_len, .. } = self.pre_jobs[&req];
-        let dur = self.cfg.hw.pre_infer_us(&self.cfg.spec, prefix_len);
-        let (_, end) = alloc(&mut self.slots[inst], now, dur);
-        self.busy_us[inst] += dur;
-        self.push(end, Ev::PreInferDone(req));
+    fn on_pre_xfer_done(&mut self, now: u64, job: PreJob, req: ReqId) {
+        let dur = self.cfg.hw.pre_infer_us(&self.cfg.spec, job.prefix_len);
+        let (_, end) = alloc(&mut self.slots[job.inst], now, dur);
+        self.busy_us[job.inst] += dur;
+        self.push(end, Ev::PreInferDone { job, req });
     }
 
-    fn on_pre_infer_done(&mut self, now: u64, req: u64) {
-        let PreJob { inst, user, issue_us: issue, .. } =
-            self.pre_jobs.remove(&req).expect("pre job exists");
-        if let Some(st) = self.states.get_mut(&req) {
-            st.pre_us = (now - issue) as f64;
+    fn on_pre_infer_done(&mut self, now: u64, job: PreJob, req: ReqId) {
+        // The request may already have completed (fallback): the stale
+        // generational handle then simply misses.
+        if let Some(st) = self.states.get_mut(req) {
+            st.pre_us = (now - job.issue_us) as f64;
         }
         // ψ ready: the coordinator classifies and wakes waiting ranks.
-        let woken = self.coord.on_psi_ready(now, inst, user, Some(()));
+        let woken = self.coord.on_psi_ready(now, job.inst, job.user, Some(()));
         for w in woken {
             self.start_rank_processing(now, w);
         }
     }
 
-    fn on_retrieval_done(&mut self, now: u64, req: u64) {
-        self.states.get_mut(&req).unwrap().retrieval_done = now;
+    fn on_retrieval_done(&mut self, now: u64, req: ReqId) {
+        self.states.get_mut(req).unwrap().retrieval_done = now;
         self.coord.on_stage_done(now, req, Stage::Retrieval);
         let dur = self.preproc.sample(&mut self.rng);
         self.push(now + dur as u64, Ev::PreprocDone(req));
     }
 
-    fn on_preproc_done(&mut self, now: u64, req: u64) {
+    fn on_preproc_done(&mut self, now: u64, req: ReqId) {
         // Late binding resolved here: the coordinator routes long-sequence
         // requests (consistency-hash-key) to the special service and short
         // ones by standard balancing.
@@ -468,7 +483,7 @@ impl Sim {
             .coord
             .on_stage_done(now, req, Stage::Preproc)
             .expect("preproc resolves the ranking instance");
-        let st = self.states.get_mut(&req).unwrap();
+        let st = self.states.get_mut(req).unwrap();
         st.preproc_done = now;
         st.rank_instance = inst;
         let t = now + (2.0 * self.cfg.hop_us) as u64; // LB hop + gateway hop
@@ -477,8 +492,8 @@ impl Sim {
 
     // ---- ranking at the instance ---------------------------------------------
 
-    fn on_rank_arrive(&mut self, now: u64, req: u64) {
-        self.states.get_mut(&req).unwrap().rank_start = now;
+    fn on_rank_arrive(&mut self, now: u64, req: ReqId) {
+        self.states.get_mut(req).unwrap().rank_start = now;
         match self.coord.on_rank_start(now, req) {
             RankAction::Proceed { .. } => self.start_rank_processing(now, req),
             // Waiting for ψ production or an in-flight reload: the
@@ -487,7 +502,7 @@ impl Sim {
             RankAction::Wait | RankAction::WaitReload => {}
             RankAction::StartReload { bytes } => {
                 let (inst, user) = {
-                    let st = &self.states[&req];
+                    let st = self.states.get(req).unwrap();
                     (st.rank_instance, st.gen.user)
                 };
                 let server = self.server_of(inst);
@@ -503,7 +518,7 @@ impl Sim {
         let load = self.cfg.hw.load_us(bytes);
         // Wake all requests joined to this reload (≤ 1 H2D per burst).
         for w in res.woken {
-            if let Some(st) = self.states.get_mut(&w) {
+            if let Some(st) = self.states.get_mut(w) {
                 st.load_us = load;
             }
             self.start_rank_processing(now, w);
@@ -535,8 +550,8 @@ impl Sim {
     }
 
     /// CPU feature processing → H2D → NPU execution for the rank request.
-    fn start_rank_processing(&mut self, now: u64, req: u64) {
-        let inst = self.states[&req].rank_instance;
+    fn start_rank_processing(&mut self, now: u64, req: ReqId) {
+        let inst = self.states.get(req).unwrap().rank_instance;
         let tokens = self.rank_tokens(req);
         let server = self.server_of(inst);
         let dur = self.cfg.hw.feature_proc_us(tokens);
@@ -546,17 +561,17 @@ impl Sim {
 
     /// Cached path processes only incremental tokens + items; fallback /
     /// baseline must process the whole sequence on the critical path.
-    fn rank_tokens(&self, req: u64) -> usize {
+    fn rank_tokens(&self, req: ReqId) -> usize {
         let spec = &self.cfg.spec;
         if self.coord.is_cached(req) {
             spec.incr_len + spec.num_items
         } else {
-            self.states[&req].gen.prefix_len + spec.incr_len + spec.num_items
+            self.states.get(req).unwrap().gen.prefix_len + spec.incr_len + spec.num_items
         }
     }
 
-    fn on_rank_cpu_done(&mut self, now: u64, req: u64) {
-        let inst = self.states[&req].rank_instance;
+    fn on_rank_cpu_done(&mut self, now: u64, req: ReqId) {
+        let inst = self.states.get(req).unwrap().rank_instance;
         let tokens = self.rank_tokens(req);
         let server = self.server_of(inst);
         let dur = self.cfg.hw.h2d_embed_us(self.cfg.spec.embed_bytes(tokens));
@@ -564,9 +579,9 @@ impl Sim {
         self.push(end, Ev::RankXferDone(req));
     }
 
-    fn on_rank_xfer_done(&mut self, now: u64, req: u64) {
+    fn on_rank_xfer_done(&mut self, now: u64, req: ReqId) {
         let (inst, prefix_len) = {
-            let st = &self.states[&req];
+            let st = self.states.get(req).unwrap();
             (st.rank_instance, st.gen.prefix_len)
         };
         // Consume ψ at execution start; segments the plan reuses (or
@@ -582,12 +597,12 @@ impl Sim {
         };
         let (_, end) = alloc(&mut self.slots[inst], now, dur);
         self.busy_us[inst] += dur;
-        self.states.get_mut(&req).unwrap().rank_us = dur;
+        self.states.get_mut(req).unwrap().rank_us = dur;
         self.push(end, Ev::RankExecDone(req));
     }
 
-    fn on_rank_exec_done(&mut self, now: u64, req: u64) {
-        let st = self.states.remove(&req).unwrap();
+    fn on_rank_exec_done(&mut self, now: u64, req: ReqId) {
+        let st = self.states.remove(req).unwrap();
         let kv = self.cfg.spec.kv_bytes_for(st.gen.prefix_len);
         let done = self.coord.on_rank_done(now, req, kv);
         // Spill freshly produced caches to DRAM for short-term reuse (off
@@ -617,11 +632,7 @@ impl Sim {
             instance: done.instance,
         };
         self.metrics.record(&lc, done.is_long);
-        self.metrics.offered_qps = self.cfg_offered_qps();
-    }
-
-    fn cfg_offered_qps(&self) -> f64 {
-        self.trace.len() as f64 / (self.end_us as f64 / 1e6)
+        self.metrics.offered_qps = self.arrived as f64 / (self.end_us as f64 / 1e6);
     }
 }
 

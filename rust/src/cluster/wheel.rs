@@ -1,0 +1,321 @@
+//! Hierarchical timer wheel for the discrete-event simulator.
+//!
+//! The simulator's event queue was a `BinaryHeap<Reverse<(t, seq, Ev)>>`:
+//! O(log n) per push/pop with poor locality once millions of events are
+//! in flight.  This wheel is the classic hashed hierarchical design
+//! (Varghese & Lauck): 11 levels × 64 slots of geometrically coarser
+//! resolution (level *l* spans 2^(6·l) µs per slot, 66 bits total — any
+//! `u64` timestamp fits with no overflow list).  Push is O(1); pop finds
+//! the next occupied slot with one `trailing_zeros` per level and
+//! cascades coarse slots down as the clock reaches them.
+//!
+//! ## Ordering contract (load-bearing)
+//!
+//! Pops are in **exactly** ascending `(t, seq)` order — byte-identical to
+//! the `BinaryHeap` it replaced, for any interleaving of pushes and pops
+//! with monotonically increasing `seq` and `t >= now()` (the simulator
+//! never schedules into the past).  Two mechanisms guarantee it:
+//!
+//! * a level-0 slot holds exactly one µs tick, and is sorted by `seq`
+//!   when drained (cascades append entries out of push order only in
+//!   same-tick corner cases — the sort makes the contract unconditional);
+//! * an event pushed *at* the current tick while that tick's batch is
+//!   draining carries the largest `seq` issued so far, so appending it to
+//!   the ready queue keeps the queue ascending.
+//!
+//! `tests::wheel_matches_heap_order_*` pin the contract against a live
+//! `BinaryHeap` on adversarial event sets (same-tick bursts, far-future
+//! reloads, pushes mid-drain).
+
+use std::collections::VecDeque;
+
+const SLOT_BITS: u32 = 6;
+const SLOTS: usize = 1 << SLOT_BITS;
+const MASK: u64 = (SLOTS - 1) as u64;
+/// ceil(64 / SLOT_BITS): enough levels that any u64 delta has a home.
+const LEVELS: usize = 11;
+
+/// Timer wheel dispatching `(t, seq, E)` triples in `(t, seq)` order.
+pub struct TimerWheel<E> {
+    /// `LEVELS × SLOTS` cells, flattened; cell vectors are recycled (a
+    /// drained cell keeps its capacity), so steady-state traffic through
+    /// the wheel allocates nothing.
+    cells: Vec<Vec<(u64, u64, E)>>,
+    /// Per-level occupancy bitmap: bit *s* set iff cell *s* is non-empty.
+    occ: [u64; LEVELS],
+    /// Current tick: nothing earlier remains undelivered.
+    now: u64,
+    len: usize,
+    /// The current tick's batch, ascending `(t, seq)`; popped from the
+    /// front, same-tick pushes (largest seq so far) append at the back.
+    ready: VecDeque<(u64, u64, E)>,
+    /// Recycled buffer for cascading a coarse slot without allocating.
+    scratch: Vec<(u64, u64, E)>,
+}
+
+impl<E> TimerWheel<E> {
+    pub fn new() -> TimerWheel<E> {
+        TimerWheel {
+            cells: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            occ: [0; LEVELS],
+            now: 0,
+            len: 0,
+            ready: VecDeque::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The current tick (the `t` of the last pop, or 0 before any).
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Level whose slot resolution matches the highest differing bit
+    /// group between an event time and `now`.
+    fn level_of(diff: u64) -> usize {
+        debug_assert!(diff != 0);
+        ((63 - diff.leading_zeros()) / SLOT_BITS) as usize
+    }
+
+    /// Schedule `ev` at time `t` with tie-break `seq`.  `seq` must be
+    /// strictly greater than every previously pushed `seq` (the
+    /// simulator's monotone event counter); `t` earlier than the current
+    /// tick is clamped to it (fires immediately, in seq order).
+    pub fn push(&mut self, t: u64, seq: u64, ev: E) {
+        let t = t.max(self.now);
+        self.len += 1;
+        if t == self.now {
+            if let Some(&(bt, bs, _)) = self.ready.back() {
+                debug_assert!(
+                    (bt, bs) < (t, seq),
+                    "same-tick push must carry the largest (t, seq) so far"
+                );
+            }
+            self.ready.push_back((t, seq, ev));
+            return;
+        }
+        let lvl = Self::level_of(t ^ self.now);
+        let slot = ((t >> (lvl as u32 * SLOT_BITS)) & MASK) as usize;
+        self.cells[lvl * SLOTS + slot].push((t, seq, ev));
+        self.occ[lvl] |= 1 << slot;
+    }
+
+    /// Deliver the earliest `(t, seq, E)`, advancing the clock to `t`.
+    pub fn pop(&mut self) -> Option<(u64, u64, E)> {
+        loop {
+            if let Some(x) = self.ready.pop_front() {
+                self.len -= 1;
+                self.now = x.0;
+                return Some(x);
+            }
+            if self.len == 0 {
+                return None;
+            }
+            self.advance();
+        }
+    }
+
+    /// One step of clock advance: drain the earliest level-0 slot into
+    /// `ready`, or cascade the earliest coarse slot one level down.
+    ///
+    /// Level *l* entries lie inside now's level-*l* window but outside
+    /// its level-(l−1) window, i.e. strictly after everything at lower
+    /// levels — so the lowest occupied level always holds the earliest
+    /// events, and within a level the smallest occupied slot index does
+    /// (slot indices are absolute time bit-groups, and all wheel times
+    /// are ≥ now, so indices never wrap within a window).
+    fn advance(&mut self) {
+        for lvl in 0..LEVELS {
+            if self.occ[lvl] == 0 {
+                continue;
+            }
+            let slot = self.occ[lvl].trailing_zeros() as usize;
+            self.occ[lvl] &= !(1u64 << slot);
+            if lvl == 0 {
+                let cell = &mut self.cells[slot];
+                debug_assert!(!cell.is_empty(), "occupancy bit set on empty cell");
+                cell.sort_unstable_by_key(|&(t, seq, _)| (t, seq));
+                self.now = cell[0].0;
+                debug_assert!(
+                    cell.iter().all(|&(t, _, _)| t == self.now),
+                    "level-0 slot spans one tick"
+                );
+                for x in cell.drain(..) {
+                    self.ready.push_back(x);
+                }
+                return;
+            }
+            // Cascade: advance the clock to the slot's window start (no
+            // event precedes it), then re-insert the entries — they land
+            // at lower levels (or in `ready`, for the window start tick).
+            let shift = lvl as u32 * SLOT_BITS;
+            let window = match shift + SLOT_BITS {
+                s if s >= 64 => 0, // the top level's window is all of u64
+                s => (self.now >> s) << s,
+            };
+            self.now = window | ((slot as u64) << shift);
+            let cell = lvl * SLOTS + slot;
+            let recycled = std::mem::take(&mut self.scratch);
+            let mut batch = std::mem::replace(&mut self.cells[cell], recycled);
+            self.len -= batch.len();
+            for (t, seq, ev) in batch.drain(..) {
+                debug_assert!(t >= self.now);
+                self.push(t, seq, ev);
+            }
+            self.scratch = batch;
+            return;
+        }
+        unreachable!("len > 0 with empty ready queue and no occupied slot");
+    }
+}
+
+impl<E> Default for TimerWheel<E> {
+    fn default() -> TimerWheel<E> {
+        TimerWheel::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// Reference model: the exact heap the simulator used to run on.
+    struct HeapModel {
+        heap: BinaryHeap<Reverse<(u64, u64, u32)>>,
+    }
+
+    impl HeapModel {
+        fn new() -> HeapModel {
+            HeapModel { heap: BinaryHeap::new() }
+        }
+        fn push(&mut self, t: u64, seq: u64, ev: u32) {
+            self.heap.push(Reverse((t, seq, ev)));
+        }
+        fn pop(&mut self) -> Option<(u64, u64, u32)> {
+            self.heap.pop().map(|Reverse(x)| x)
+        }
+    }
+
+    fn drain_both(wheel: &mut TimerWheel<u32>, heap: &mut HeapModel) {
+        loop {
+            let (a, b) = (wheel.pop(), heap.pop());
+            assert_eq!(a, b, "drain order diverged");
+            if a.is_none() {
+                break;
+            }
+        }
+        assert!(wheel.is_empty());
+    }
+
+    /// The tentpole determinism pin: on adversarial pushed sets — dense
+    /// same-tick bursts, near-future work, far-future reloads (t_life /
+    /// lease horizons land 10^5–10^9 µs out) — interleaved with pops, the
+    /// wheel's pop order equals the `(t, seq)` heap order exactly.
+    #[test]
+    fn wheel_matches_heap_order_on_adversarial_sets() {
+        for seed in 0..24u64 {
+            let mut rng = Rng::new(0xEE1 ^ seed);
+            let mut wheel: TimerWheel<u32> = TimerWheel::new();
+            let mut heap = HeapModel::new();
+            let mut seq = 0u64;
+            let mut now = 0u64;
+            for step in 0..4_000u32 {
+                if rng.range(0, 100) < 55 {
+                    let dt = match rng.range(0, 10) {
+                        0..=3 => 0, // same-tick burst
+                        4..=6 => rng.range(1, 64) as u64,
+                        7 => rng.range(64, 4_096) as u64,
+                        8 => rng.range(4_096, 300_000) as u64, // T_life-scale
+                        _ => 300_000 + rng.range_u64(2_000_000_000), // far-future reload horizon
+                    };
+                    seq += 1;
+                    wheel.push(now + dt, seq, step);
+                    heap.push(now + dt, seq, step);
+                } else {
+                    let (a, b) = (wheel.pop(), heap.pop());
+                    assert_eq!(a, b, "seed {seed} step {step}: pop diverged");
+                    if let Some((t, _, _)) = a {
+                        now = t;
+                    }
+                }
+                assert_eq!(wheel.len(), heap.heap.len());
+            }
+            drain_both(&mut wheel, &mut heap);
+        }
+    }
+
+    /// The simulator's dispatch pattern: handling an event pushes more
+    /// events, often at the *current* tick (zero-duration resource
+    /// grants).  Mid-drain same-tick pushes must fire after the rest of
+    /// the tick's batch, in seq order.
+    #[test]
+    fn pushes_at_current_tick_during_drain_fire_in_seq_order() {
+        let mut wheel: TimerWheel<u32> = TimerWheel::new();
+        let mut heap = HeapModel::new();
+        let mut seq = 0u64;
+        for ev in 0..8u32 {
+            seq += 1;
+            wheel.push(100, seq, ev);
+            heap.push(100, seq, ev);
+        }
+        // Pop one event of the tick, then push two more at t = 100 (the
+        // current tick) and one at t = 100 + 64·k (a far slot).
+        assert_eq!(wheel.pop(), heap.pop());
+        for dt in [0u64, 0, 6400] {
+            seq += 1;
+            wheel.push(100 + dt, seq, 1000 + dt as u32);
+            heap.push(100 + dt, seq, 1000 + dt as u32);
+        }
+        drain_both(&mut wheel, &mut heap);
+    }
+
+    /// Same-tick entries split across levels: some pushed from afar (the
+    /// tick sat in a coarse slot), some pushed once the clock was near —
+    /// the drained batch must still come out in seq order.
+    #[test]
+    fn cascaded_and_direct_entries_share_a_tick() {
+        let mut wheel: TimerWheel<u32> = TimerWheel::new();
+        let mut heap = HeapModel::new();
+        // From t=0, t=70_000 lives in a coarse slot.
+        wheel.push(70_000, 1, 1);
+        heap.push(70_000, 1, 1);
+        // A stepping stone advances the clock near the target window.
+        wheel.push(69_999, 2, 2);
+        heap.push(69_999, 2, 2);
+        assert_eq!(wheel.pop(), heap.pop()); // now = 69_999
+        // Direct same-tick push lands next to the coarse one's home.
+        wheel.push(70_000, 3, 3);
+        heap.push(70_000, 3, 3);
+        drain_both(&mut wheel, &mut heap);
+    }
+
+    #[test]
+    fn empty_wheel_pops_none_and_clock_is_monotone() {
+        let mut wheel: TimerWheel<u32> = TimerWheel::new();
+        assert_eq!(wheel.pop(), None);
+        wheel.push(5, 1, 0);
+        wheel.push(5, 2, 1);
+        wheel.push(1 << 40, 3, 2); // deep coarse level
+        let mut last = (0, 0);
+        let mut popped = 0;
+        while let Some((t, seq, _)) = wheel.pop() {
+            assert!((t, seq) > last, "ordering violated");
+            assert_eq!(wheel.now(), t);
+            last = (t, seq);
+            popped += 1;
+        }
+        assert_eq!(popped, 3);
+        assert_eq!(wheel.pop(), None, "drained wheel stays empty");
+    }
+}

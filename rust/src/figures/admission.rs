@@ -35,10 +35,12 @@ use crate::relay::pipeline::CacheOutcome;
 use crate::relay::tier::DramPolicy;
 use crate::relay::trigger::AdmissionMode;
 use crate::util::cli::Args;
+use crate::util::parallel;
 use crate::workload::{ScenarioKind, WorkloadConfig};
 
 /// Per-(scenario, mode) results needed for the cross-mode assertions.
 struct ModeRow {
+    label: &'static str,
     sim: RunMetrics,
     serial_counts: [u64; 5],
     serial_trigger: crate::relay::trigger::TriggerStats,
@@ -46,11 +48,17 @@ struct ModeRow {
 }
 
 /// `relaygr figure admission [--qps N] [--quick] [--scenario s]
-/// [--headroom-min h] [--headroom-max h] [--adapt-window n]`.
+/// [--headroom-min h] [--headroom-max h] [--adapt-window n] [--jobs N]`.
+///
+/// Each (scenario, admission-mode) cell runs both engines and asserts
+/// their per-request outcome equality intra-cell; the static-vs-adaptive
+/// comparisons need both of a scenario's cells, so they run on the
+/// caller's thread after the deterministic merge, in declaration order.
 pub fn admission(args: &Args) -> Result<()> {
     let duration_us = if args.has_flag("quick") { 4_000_000 } else { 8_000_000 };
     let qps = args.get_f64("qps", 60.0)?;
     let seed = args.get_u64("seed", 42)?;
+    let jobs = parallel::jobs_from_args(args)?;
     let kinds: Vec<ScenarioKind> = match args.get("scenario") {
         Some(s) => vec![ScenarioKind::parse(s).map_err(anyhow::Error::msg)?],
         None => ScenarioKind::NAMES
@@ -68,7 +76,14 @@ pub fn admission(args: &Args) -> Result<()> {
     );
     let full_idx = outcome_index(CacheOutcome::FullInference);
     let hbm_idx = outcome_index(CacheOutcome::HbmHit);
+    let mut cells: Vec<(ScenarioKind, AdmissionMode)> = Vec::new();
     for kind in &kinds {
+        for mode in [AdmissionMode::Static, AdmissionMode::Adaptive] {
+            cells.push((*kind, mode));
+        }
+    }
+    let results = parallel::map_indexed(jobs, cells.len(), |i| -> Result<ModeRow> {
+        let (kind, mode) = cells[i];
         let wl = WorkloadConfig {
             qps,
             duration_us,
@@ -77,47 +92,58 @@ pub fn admission(args: &Args) -> Result<()> {
             fixed_long_len: Some(3072),
             max_prefix: 3072,
             refresh_prob: 0.0,
-            scenario: *kind,
+            scenario: kind,
             seed,
             ..Default::default()
         };
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.pipeline.t_life_us = 2 * wl.duration_us;
+        // The misprovisioned static operating point: worst-case ψ
+        // provisioned at 32K tokens against a 1% HBM slice.
+        cfg.r1 = 0.01;
+        cfg.kv_p99_prefix = 32_768;
+        cfg.log_outcomes = true;
+        cfg.admission = crate::config::parse_admission(args, &cfg.admission)?;
+        cfg.admission.mode = mode;
+        let m: RunMetrics = sim("admission", cfg.clone(), &wl)?;
+        let serial = run_reference(&cfg, &wl)?;
+        let mut sim_log = m.outcome_log.clone();
+        sim_log.sort_by_key(|&(id, _)| id);
+        ensure!(
+            sim_log == serial.outcomes,
+            "admission: engines diverged on per-request outcomes \
+             (scenario {}, admission {})",
+            kind.label(),
+            cfg.admission.label()
+        );
+        Ok(ModeRow {
+            label: cfg.admission.label(),
+            sim: m,
+            serial_counts: serial.outcome_counts,
+            serial_trigger: serial.trigger,
+            serial_mean_rank_us: serial.mean_rank_us,
+        })
+    });
+    let mut results = results.into_iter();
+    for kind in &kinds {
         let mut rows: Vec<ModeRow> = Vec::new();
-        for mode in [AdmissionMode::Static, AdmissionMode::Adaptive] {
-            let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
-            cfg.pipeline.t_life_us = 2 * wl.duration_us;
-            // The misprovisioned static operating point: worst-case ψ
-            // provisioned at 32K tokens against a 1% HBM slice.
-            cfg.r1 = 0.01;
-            cfg.kv_p99_prefix = 32_768;
-            cfg.log_outcomes = true;
-            cfg.admission = crate::config::parse_admission(args, &cfg.admission)?;
-            cfg.admission.mode = mode;
-            let m: RunMetrics = sim("admission", cfg.clone(), &wl)?;
-            let serial = run_reference(&cfg, &wl)?;
-            let mut sim_log = m.outcome_log.clone();
-            sim_log.sort_by_key(|&(id, _)| id);
-            ensure!(
-                sim_log == serial.outcomes,
-                "admission: engines diverged on per-request outcomes \
-                 (scenario {}, admission {})",
-                kind.label(),
-                cfg.admission.label()
-            );
-            let label = cfg.admission.label().to_string();
+        for _mode in [AdmissionMode::Static, AdmissionMode::Adaptive] {
+            let r = results.next().expect("one result per cell")?;
+            let label = r.label.to_string();
             for (engine, n, trig, counts, rank_ms) in [
                 (
                     "sim",
-                    m.completed,
-                    m.trigger,
-                    m.outcome_counts,
-                    ms(m.rank_exec.mean()),
+                    r.sim.completed,
+                    r.sim.trigger,
+                    r.sim.outcome_counts,
+                    ms(r.sim.rank_exec.mean()),
                 ),
                 (
                     "serial",
-                    serial.outcomes.len() as u64,
-                    serial.trigger,
-                    serial.outcome_counts,
-                    ms(serial.mean_rank_us),
+                    r.serial_counts.iter().sum(),
+                    r.serial_trigger,
+                    r.serial_counts,
+                    ms(r.serial_mean_rank_us),
                 ),
             ] {
                 t.row(vec![
@@ -134,12 +160,7 @@ pub fn admission(args: &Args) -> Result<()> {
                     trig.l_max_effective.to_string(),
                 ]);
             }
-            rows.push(ModeRow {
-                sim: m,
-                serial_counts: serial.outcome_counts,
-                serial_trigger: serial.trigger,
-                serial_mean_rank_us: serial.mean_rank_us,
-            });
+            rows.push(r);
         }
         let (stat, adpt) = (&rows[0], &rows[1]);
         let scen = kind.label();

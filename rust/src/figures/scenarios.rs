@@ -3,6 +3,12 @@
 //! vs RelayGR+DRAM, reporting per-scenario latency/SLO/cache behaviour.
 //! Not a paper figure — the scenario engine's standing report
 //! (`relaygr figure scenarios`).
+//!
+//! Every (scenario, mode) cell is an independent seeded simulation, so
+//! the grid runs on the deterministic parallel executor (`--jobs N`);
+//! rows come back in declaration order and are byte-identical at any job
+//! count ([`grid_rows`] is pinned by `tests/cross_engine.rs` and timed
+//! by `bench_simloop`).
 
 use anyhow::Result;
 
@@ -11,13 +17,17 @@ use crate::figures::common::{ms, pct, sim, Table};
 use crate::relay::baseline::Mode;
 use crate::relay::tier::DramPolicy;
 use crate::util::cli::Args;
+use crate::util::parallel;
 use crate::workload::{ScenarioKind, WorkloadConfig};
 
-/// `relaygr figure scenarios [--qps N] [--quick] [--scenario name]`.
-pub fn scenarios(args: &Args) -> Result<()> {
+/// Compute the grid's rows — (scenario × mode) cells on `--jobs` worker
+/// threads, merged in declaration order.  Shared with `bench_simloop`
+/// (wall-clock trajectory) and the cross-engine determinism test.
+pub fn grid_rows(args: &Args) -> Result<Vec<Vec<String>>> {
     let duration_us = if args.has_flag("quick") { 6_000_000 } else { 15_000_000 };
     let qps = args.get_f64("qps", 150.0)?;
     let seed = args.get_u64("seed", 42)?;
+    let jobs = parallel::jobs_from_args(args)?;
     let kinds: Vec<ScenarioKind> = match args.get("scenario") {
         Some(s) => vec![ScenarioKind::parse(s).map_err(anyhow::Error::msg)?],
         None => ScenarioKind::NAMES
@@ -25,8 +35,46 @@ pub fn scenarios(args: &Args) -> Result<()> {
             .map(|n| ScenarioKind::parse(n).expect("built-in scenario"))
             .collect(),
     };
-    let modes =
-        [Mode::Baseline, Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) }];
+    let modes = [Mode::Baseline, Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) }];
+    let mut cells: Vec<(ScenarioKind, Mode)> = Vec::new();
+    for kind in &kinds {
+        for mode in modes.iter().copied() {
+            cells.push((*kind, mode));
+        }
+    }
+    let rows = parallel::map_indexed(jobs, cells.len(), |i| -> Result<Vec<String>> {
+        let (kind, mode) = cells[i];
+        let wl = WorkloadConfig {
+            qps,
+            duration_us,
+            num_users: 30_000,
+            fixed_long_len: Some(3072),
+            max_prefix: 3072,
+            refresh_prob: 0.5,
+            scenario: kind,
+            seed,
+            ..Default::default()
+        };
+        let m = sim("scenarios", SimConfig::standard(mode), &wl)?;
+        let shed = m.trigger.rate_limited + m.trigger.footprint_limited;
+        Ok(vec![
+            kind.label().to_string(),
+            mode.label(),
+            m.completed.to_string(),
+            format!("{:.0}", m.goodput_qps()),
+            ms(m.p99_e2e()),
+            format!("{:.4}", m.success_rate()),
+            pct(m.relay_hit_rate()),
+            pct(m.dram_hit_rate()),
+            shed.to_string(),
+        ])
+    });
+    rows.into_iter().collect()
+}
+
+/// `relaygr figure scenarios [--qps N] [--quick] [--scenario name]
+/// [--jobs N]`.
+pub fn scenarios(args: &Args) -> Result<()> {
     let mut t = Table::new(
         "scenarios",
         "workload scenarios × serving modes (simulator)",
@@ -35,33 +83,8 @@ pub fn scenarios(args: &Args) -> Result<()> {
             "shed",
         ],
     );
-    for kind in &kinds {
-        let wl = WorkloadConfig {
-            qps,
-            duration_us,
-            num_users: 30_000,
-            fixed_long_len: Some(3072),
-            max_prefix: 3072,
-            refresh_prob: 0.5,
-            scenario: *kind,
-            seed,
-            ..Default::default()
-        };
-        for mode in modes.iter().copied() {
-            let m = sim("scenarios", SimConfig::standard(mode), &wl)?;
-            let shed = m.trigger.rate_limited + m.trigger.footprint_limited;
-            t.row(vec![
-                kind.label().to_string(),
-                mode.label(),
-                m.completed.to_string(),
-                format!("{:.0}", m.goodput_qps()),
-                ms(m.p99_e2e()),
-                format!("{:.4}", m.success_rate()),
-                pct(m.relay_hit_rate()),
-                pct(m.dram_hit_rate()),
-                shed.to_string(),
-            ]);
-        }
+    for row in grid_rows(args)? {
+        t.row(row);
     }
     t.emit(args)
 }

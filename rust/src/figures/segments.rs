@@ -27,6 +27,7 @@ use crate::relay::baseline::Mode;
 use crate::relay::segment::SegmentStats;
 use crate::relay::tier::DramPolicy;
 use crate::util::cli::Args;
+use crate::util::parallel;
 use crate::workload::{ScenarioKind, WorkloadConfig};
 
 fn seg_cells(s: &SegmentStats) -> [String; 4] {
@@ -39,13 +40,18 @@ fn seg_cells(s: &SegmentStats) -> [String; 4] {
 }
 
 /// `relaygr figure segments [--qps N] [--quick] [--scenario s]
-/// [--segment-cache f] [--zipf s]`.
+/// [--segment-cache f] [--zipf s] [--jobs N]`.
+///
+/// Each (scenario, segment-cache) cell runs *both* engines — the
+/// sim-vs-reference outcome assertion is intra-cell, so cells stay
+/// independent and the grid parallelizes on the deterministic executor.
 pub fn segments(args: &Args) -> Result<()> {
     let duration_us = if args.has_flag("quick") { 4_000_000 } else { 8_000_000 };
     let qps = args.get_f64("qps", 60.0)?;
     let seed = args.get_u64("seed", 42)?;
     let frac = parse_segment_frac(args, 0.25)?;
     ensure!(frac > 0.0, "figure segments compares reuse on vs off; --segment-cache must be > 0");
+    let jobs = parallel::jobs_from_args(args)?;
     let kinds: Vec<ScenarioKind> = match args.get("scenario") {
         Some(s) => vec![ScenarioKind::parse(s).map_err(anyhow::Error::msg)?],
         None => ScenarioKind::NAMES
@@ -53,15 +59,14 @@ pub fn segments(args: &Args) -> Result<()> {
             .map(|n| ScenarioKind::parse(n).expect("built-in scenario"))
             .collect(),
     };
-    let mut t = Table::new(
-        "segments",
-        "candidate-segment reuse on/off × scenarios (simulator + serialized reference)",
-        &[
-            "scenario", "segcache", "engine", "n", "mean rank ms", "seg hit", "joined",
-            "produced", "saved MB", "outcomes",
-        ],
-    );
+    let mut cells: Vec<(ScenarioKind, f64)> = Vec::new();
     for kind in &kinds {
+        for &f in &[0.0, frac] {
+            cells.push((*kind, f));
+        }
+    }
+    let row_pairs = parallel::map_indexed(jobs, cells.len(), |i| -> Result<[Vec<String>; 2]> {
+        let (kind, f) = cells[i];
         let mut wl = WorkloadConfig {
             qps,
             duration_us,
@@ -69,29 +74,30 @@ pub fn segments(args: &Args) -> Result<()> {
             fixed_long_len: Some(3072),
             max_prefix: 3072,
             refresh_prob: 0.0,
-            scenario: *kind,
+            scenario: kind,
             seed,
             ..Default::default()
         };
         apply_candidate_flags(args, &mut wl)?;
-        for &f in &[0.0, frac] {
-            let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
-            cfg.pipeline.t_life_us = 2 * wl.duration_us;
-            cfg.segment_frac = f;
-            cfg.log_outcomes = true;
-            let m: RunMetrics = sim("segments", cfg.clone(), &wl)?;
-            let serial = run_reference(&cfg, &wl)?;
-            let mut sim_log = m.outcome_log.clone();
-            sim_log.sort_by_key(|&(id, _)| id);
-            ensure!(
-                sim_log == serial.outcomes,
-                "segments: engines diverged on per-request outcomes \
-                 (scenario {}, segment-cache {f})",
-                kind.label()
-            );
-            let label = if f > 0.0 { format!("{f:.2}") } else { "off".into() };
-            let sim_seg = seg_cells(&m.segments);
-            t.row(vec![
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.pipeline.t_life_us = 2 * wl.duration_us;
+        cfg.segment_frac = f;
+        cfg.log_outcomes = true;
+        let m: RunMetrics = sim("segments", cfg.clone(), &wl)?;
+        let serial = run_reference(&cfg, &wl)?;
+        let mut sim_log = m.outcome_log.clone();
+        sim_log.sort_by_key(|&(id, _)| id);
+        ensure!(
+            sim_log == serial.outcomes,
+            "segments: engines diverged on per-request outcomes \
+             (scenario {}, segment-cache {f})",
+            kind.label()
+        );
+        let label = if f > 0.0 { format!("{f:.2}") } else { "off".into() };
+        let sim_seg = seg_cells(&m.segments);
+        let ser_seg = seg_cells(&serial.segments);
+        Ok([
+            vec![
                 kind.label().to_string(),
                 label.clone(),
                 "sim".into(),
@@ -102,9 +108,8 @@ pub fn segments(args: &Args) -> Result<()> {
                 sim_seg[2].clone(),
                 sim_seg[3].clone(),
                 "ok".into(),
-            ]);
-            let ser_seg = seg_cells(&serial.segments);
-            t.row(vec![
+            ],
+            vec![
                 kind.label().to_string(),
                 label,
                 "serial".into(),
@@ -115,8 +120,21 @@ pub fn segments(args: &Args) -> Result<()> {
                 ser_seg[2].clone(),
                 ser_seg[3].clone(),
                 "ok".into(),
-            ]);
-        }
+            ],
+        ])
+    });
+    let mut t = Table::new(
+        "segments",
+        "candidate-segment reuse on/off × scenarios (simulator + serialized reference)",
+        &[
+            "scenario", "segcache", "engine", "n", "mean rank ms", "seg hit", "joined",
+            "produced", "saved MB", "outcomes",
+        ],
+    );
+    for pair in row_pairs {
+        let [sim_row, serial_row] = pair?;
+        t.row(sim_row);
+        t.row(serial_row);
     }
     t.emit(args)
 }

@@ -9,35 +9,51 @@
 //!
 //! The DRAM tier is deliberately small (default 2 GB) so the eviction
 //! policy actually binds — with a ~500 GB tier every policy is a no-op.
+//!
+//! Every (scenario, policy, engine) cell is independent — its own seeded
+//! simulator or serialized coordinator — so the grid runs on the
+//! deterministic parallel executor (`--jobs N`); rows are merged in
+//! declaration order and are byte-identical at any job count.
+//!
+//! [`RelayCoordinator`]: crate::relay::RelayCoordinator
 
 use anyhow::Result;
 
 use crate::cluster::{run_reference, SimConfig};
 use crate::figures::common::{ms, pct, sim, Table};
-use crate::metrics::{dram_hit_rate, relay_hit_rate, RunMetrics};
+use crate::metrics::{dram_hit_rate, relay_hit_rate};
 use crate::relay::baseline::Mode;
 use crate::relay::hbm::HbmStats;
 use crate::relay::hierarchy::HierarchyStats;
 use crate::relay::tier::{DramPolicy, EvictPolicy};
 use crate::util::cli::Args;
+use crate::util::parallel;
 use crate::workload::{ScenarioKind, WorkloadConfig};
 
+#[derive(Clone, Copy)]
+enum Engine {
+    Sim,
+    Serial,
+}
+
 #[allow(clippy::too_many_arguments)]
-fn table_row(
-    t: &mut Table,
+fn cell_row(
     scenario: &str,
     policy: EvictPolicy,
-    engine: &str,
+    engine: Engine,
     n: u64,
     p99: Option<f64>,
     counts: &[u64; 5],
     h: &HierarchyStats,
     hbm: &HbmStats,
-) {
-    t.row(vec![
+) -> Vec<String> {
+    vec![
         scenario.to_string(),
         policy.label().to_string(),
-        engine.to_string(),
+        match engine {
+            Engine::Sim => "sim".to_string(),
+            Engine::Serial => "serial".to_string(),
+        },
         n.to_string(),
         p99.map(ms).unwrap_or_else(|| "-".into()),
         pct(relay_hit_rate(counts)),
@@ -47,15 +63,17 @@ fn table_row(
         h.reloads_started.to_string(),
         h.spills.to_string(),
         h.dram_evictions.to_string(),
-    ]);
+    ]
 }
 
-/// `relaygr figure tiers [--qps N] [--dram-gb N] [--quick] [--scenario s]`.
+/// `relaygr figure tiers [--qps N] [--dram-gb N] [--quick] [--scenario s]
+/// [--jobs N]`.
 pub fn tiers(args: &Args) -> Result<()> {
     let duration_us = if args.has_flag("quick") { 4_000_000 } else { 10_000_000 };
     let qps = args.get_f64("qps", 120.0)?;
     let seed = args.get_u64("seed", 42)?;
     let dram_gb = args.get_usize("dram-gb", 2)?;
+    let jobs = parallel::jobs_from_args(args)?;
     let kinds: Vec<ScenarioKind> = match args.get("scenario") {
         Some(s) => vec![ScenarioKind::parse(s).map_err(anyhow::Error::msg)?],
         None => ScenarioKind::NAMES
@@ -65,6 +83,59 @@ pub fn tiers(args: &Args) -> Result<()> {
     };
     let policies =
         [EvictPolicy::Lru, EvictPolicy::Lfu, EvictPolicy::CostAware, EvictPolicy::Lifecycle];
+    let mut cells: Vec<(ScenarioKind, EvictPolicy, Engine)> = Vec::new();
+    for kind in &kinds {
+        for policy in policies {
+            cells.push((*kind, policy, Engine::Sim));
+            cells.push((*kind, policy, Engine::Serial));
+        }
+    }
+    let rows = parallel::map_indexed(jobs, cells.len(), |i| -> Result<Vec<String>> {
+        let (kind, policy, engine) = cells[i];
+        let wl = WorkloadConfig {
+            qps,
+            duration_us,
+            num_users: 30_000,
+            fixed_long_len: Some(3072),
+            max_prefix: 3072,
+            refresh_prob: 0.6,
+            scenario: kind,
+            seed,
+            ..Default::default()
+        };
+        let mut cfg =
+            SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(dram_gb << 30) });
+        cfg.dram_policy = policy;
+        Ok(match engine {
+            Engine::Sim => {
+                let m = sim("tiers", cfg, &wl)?;
+                cell_row(
+                    kind.label(),
+                    policy,
+                    engine,
+                    m.completed,
+                    Some(m.p99_e2e()),
+                    &m.outcome_counts,
+                    &m.hierarchy,
+                    &m.hbm,
+                )
+            }
+            Engine::Serial => {
+                let r = run_reference(&cfg, &wl)?;
+                let n = r.outcome_counts.iter().sum();
+                cell_row(
+                    kind.label(),
+                    policy,
+                    engine,
+                    n,
+                    None,
+                    &r.outcome_counts,
+                    &r.hierarchy,
+                    &r.hbm,
+                )
+            }
+        })
+    });
     let mut t = Table::new(
         "tiers",
         "DRAM eviction policies × scenarios (simulator + serialized reference)",
@@ -73,48 +144,8 @@ pub fn tiers(args: &Args) -> Result<()> {
             "hbm 1st/re-rank", "promoted", "demoted", "evicted",
         ],
     );
-    for kind in &kinds {
-        let wl = WorkloadConfig {
-            qps,
-            duration_us,
-            num_users: 30_000,
-            fixed_long_len: Some(3072),
-            max_prefix: 3072,
-            refresh_prob: 0.6,
-            scenario: *kind,
-            seed,
-            ..Default::default()
-        };
-        for policy in policies {
-            let mut cfg =
-                SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(dram_gb << 30) });
-            cfg.dram_policy = policy;
-            let m: RunMetrics = sim("tiers", cfg.clone(), &wl)?;
-            table_row(
-                &mut t,
-                kind.label(),
-                policy,
-                "sim",
-                m.completed,
-                Some(m.p99_e2e()),
-                &m.outcome_counts,
-                &m.hierarchy,
-                &m.hbm,
-            );
-            let r = run_reference(&cfg, &wl)?;
-            let n = r.outcome_counts.iter().sum();
-            table_row(
-                &mut t,
-                kind.label(),
-                policy,
-                "serial",
-                n,
-                None,
-                &r.outcome_counts,
-                &r.hierarchy,
-                &r.hbm,
-            );
-        }
+    for row in rows {
+        t.row(row?);
     }
     t.emit(args)
 }

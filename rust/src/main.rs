@@ -79,7 +79,9 @@ fn help() -> String {
      \x20 --zipf <s>            candidate-item popularity skew (default 1.1)\n\
      \x20 --admission <m>       admission control: static (default) | adaptive\n\
      \x20                       (+ --headroom-min/-max, --rate-mult-min/-max,\n\
-     \x20                       --adapt-window; serve + figure/sim + plan)\n"
+     \x20                       --adapt-window; serve + figure/sim + plan)\n\
+     \x20 --jobs <n>            worker threads for the figure/sim grids\n\
+     \x20                       (default 1; output byte-identical at any n)\n"
         .to_string()
 }
 

@@ -46,6 +46,10 @@ pub struct RunMetrics {
     pub special_instances: Vec<usize>,
 
     pub sim_duration_us: u64,
+    /// Total events the simulator dispatched (0 for live runs) — the
+    /// numerator of the end-to-end events/sec trajectory in
+    /// `bench_simloop`.
+    pub sim_events: u64,
     pub offered_qps: f64,
     pub pipeline_slo_us: f64,
 
@@ -147,6 +151,7 @@ impl RunMetrics {
             util: Vec::new(),
             special_instances: Vec::new(),
             sim_duration_us: 0,
+            sim_events: 0,
             offered_qps: 0.0,
             pipeline_slo_us,
             scenario: String::new(),
@@ -232,20 +237,22 @@ impl RunMetrics {
         relay_hit_rate(&self.outcome_counts)
     }
 
+    /// Mean utilization over an index subset (`None` = all instances) —
+    /// computed over the slice in place, no per-call allocation.
     pub fn mean_util(&self, only: Option<&[usize]>) -> f64 {
-        let vals: Vec<f64> = match only {
-            Some(idx) => idx.iter().map(|&i| self.util[i]).collect(),
-            None => self.util.clone(),
+        let (sum, n) = match only {
+            Some(idx) => (idx.iter().map(|&i| self.util[i]).sum::<f64>(), idx.len()),
+            None => (self.util.iter().sum::<f64>(), self.util.len()),
         };
-        if vals.is_empty() {
+        if n == 0 {
             0.0
         } else {
-            vals.iter().sum::<f64>() / vals.len() as f64
+            sum / n as f64
         }
     }
 
     pub fn special_util(&self) -> f64 {
-        self.mean_util(Some(&self.special_instances.clone()))
+        self.mean_util(Some(&self.special_instances))
     }
 
     /// One-line human summary.

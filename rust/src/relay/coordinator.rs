@@ -16,7 +16,7 @@
 //!
 //! | event                | meaning                                        |
 //! |----------------------|------------------------------------------------|
-//! | [`on_arrival`]       | request entered the pipeline                   |
+//! | [`on_arrival`]       | request entered the pipeline → [`ReqId`] handle|
 //! | [`on_trigger_check`] | the trigger side path runs (admission + signal)|
 //! | [`on_stage_done`]    | a cascade stage finished (routes at preproc)   |
 //! | [`on_rank_start`]    | ranking request reached its instance           |
@@ -24,6 +24,17 @@
 //! | [`on_reload_done`]   | a DRAM→HBM transfer finished (or failed)       |
 //! | [`rank_compute`]     | ranking starts: consume ψ + plan segments      |
 //! | [`on_rank_done`]     | ranking finished: release + spill lifecycle    |
+//!
+//! ## Zero-allocation hot path
+//!
+//! [`on_arrival`] returns a generational [`ReqId`] handle that every
+//! later event takes back; per-request state lives in a [`Slab`] — dense
+//! O(1) index access, no hashing — whose slots recycle their owned
+//! buffers (candidate sets, segment pins), so the steady-state
+//! per-request cycle allocates nothing.  A handle outlives its request
+//! safely: releasing bumps the slot generation, so a late event for a
+//! retired request (delayed ψ completion after a wait-budget fallback)
+//! misses instead of aliasing the slot's next tenant.
 //!
 //! [`on_arrival`]: RelayCoordinator::on_arrival
 //! [`on_trigger_check`]: RelayCoordinator::on_trigger_check
@@ -51,6 +62,11 @@ use crate::relay::trigger::{
     BehaviorMeta, Decision, Estimator, Trigger, TriggerConfig, TriggerStats,
 };
 use crate::util::fxhash::FxHashMap;
+use crate::util::slab::Slab;
+
+/// Per-request handle issued by [`RelayCoordinator::on_arrival`] and
+/// consumed by every later event; see [`crate::util::slab`].
+pub type ReqId = crate::util::slab::SlabKey;
 
 /// ψ footprint (bytes) as a function of prefix length.  Boxed so the
 /// simulator wires in the analytic model (`kv_bytes_for`) and the live
@@ -126,7 +142,7 @@ pub struct ReloadResolution {
     /// Whether ψ was installed into HBM (false ⇒ waiters fell back).
     pub installed: bool,
     /// Ranking requests resolved by this reload (resume their processing).
-    pub woken: Vec<u64>,
+    pub woken: Vec<ReqId>,
     /// Next queued reload now permitted to start
     /// (drive it via [`RelayCoordinator::begin_queued_reload`]).
     pub next: Option<u64>,
@@ -140,7 +156,7 @@ pub enum QueuedReload {
     Start { bytes: usize },
     /// Evicted from DRAM while queued: aborted; `woken` requests fell
     /// back, `next` queued reload may start.
-    Aborted { woken: Vec<u64>, next: Option<u64> },
+    Aborted { woken: Vec<ReqId>, next: Option<u64> },
 }
 
 /// ψ handed to the ranking execution.
@@ -182,17 +198,18 @@ struct InstanceCtl<T> {
     /// present only when segment reuse is enabled.
     segments: Option<SegmentStore<T>>,
     /// Rank requests waiting for ψ production to finish, per user.
-    waiting_produce: FxHashMap<u64, Vec<u64>>,
+    waiting_produce: FxHashMap<u64, Vec<ReqId>>,
     /// Rank requests joined to an in-flight/queued reload, per user.
-    waiting_reload: FxHashMap<u64, Vec<u64>>,
+    waiting_reload: FxHashMap<u64, Vec<ReqId>>,
     /// Where the currently-resident ψ came from (fresh pre-inference →
     /// `HbmHit`, DRAM reload → `DramHit`): drives the paper's hit-rate
     /// attribution even when a signal-initiated reload pre-warmed HBM.
     origin: FxHashMap<u64, CacheOutcome>,
 }
 
-/// Per-request decision state.
-#[derive(Debug, Clone, Copy)]
+/// Per-request decision state, slab-resident.  The `Vec` fields are
+/// recycled with the slot (see [`Slab::insert_with`]), so the per-request
+/// cycle is allocation-free once buffer capacities are warm.
 struct ReqCtl {
     user: u64,
     prefix_len: usize,
@@ -206,13 +223,61 @@ struct ReqCtl {
     wait_us: f64,
     /// Rank-side wait resolved (production/reload finished or timed out).
     resolved: bool,
+    /// Candidate item ids awaiting segment planning (consumed by
+    /// [`RelayCoordinator::rank_compute`]).
+    cands: Vec<u64>,
+    /// Segment keys pinned by this rank pass, and the production tickets
+    /// among them (`seg_produced` keys ⊆ `seg_pinned`); released and
+    /// installed by [`RelayCoordinator::on_rank_done`].
+    seg_pinned: Vec<u64>,
+    seg_produced: Vec<(u64, u64)>,
 }
 
-/// Segment keys held by one in-flight rank pass.  `produced` carries the
-/// production tickets (its keys are a subset of `pinned`).
-struct SegRefs {
-    pinned: Vec<u64>,
-    produced: Vec<(u64, u64)>,
+impl ReqCtl {
+    /// Full per-tenant reset — the single authoritative list of every
+    /// field's initial value.  Both fresh slots (via `Default`) and
+    /// recycled slots (via `insert_with`) go through here, so a field
+    /// added to the struct cannot be inherited from a previous tenant by
+    /// being forgotten in one of two places.
+    fn reset(&mut self, user: u64, prefix_len: usize, is_long: bool) {
+        self.user = user;
+        self.prefix_len = prefix_len;
+        self.is_long = is_long;
+        self.admitted = false;
+        self.pre_instance = None;
+        self.rank_instance = usize::MAX;
+        self.outcome = CacheOutcome::FullInference;
+        self.cached = false;
+        self.wait_since = 0;
+        self.wait_us = 0.0;
+        self.resolved = false;
+        self.cands.clear();
+        self.seg_pinned.clear();
+        self.seg_produced.clear();
+    }
+}
+
+impl Default for ReqCtl {
+    fn default() -> ReqCtl {
+        let mut st = ReqCtl {
+            user: 0,
+            prefix_len: 0,
+            is_long: false,
+            admitted: false,
+            pre_instance: None,
+            rank_instance: 0,
+            outcome: CacheOutcome::FullInference,
+            cached: false,
+            wait_since: 0,
+            wait_us: 0.0,
+            resolved: false,
+            cands: Vec::new(),
+            seg_pinned: Vec::new(),
+            seg_produced: Vec::new(),
+        };
+        st.reset(0, 0, false);
+        st
+    }
 }
 
 /// The shared relay-race coordinator.
@@ -221,13 +286,9 @@ pub struct RelayCoordinator<T> {
     router: Router,
     triggers: HashMap<usize, Trigger>,
     instances: Vec<InstanceCtl<T>>,
-    requests: FxHashMap<u64, ReqCtl>,
-    /// Per-request candidate item ids awaiting segment planning
-    /// (consumed by [`RelayCoordinator::rank_compute`]).
-    cands: FxHashMap<u64, Vec<u64>>,
-    /// Segment pins/productions held per in-flight rank pass (released
-    /// and installed by [`RelayCoordinator::on_rank_done`]).
-    seg_refs: FxHashMap<u64, SegRefs>,
+    /// Per-request decision state behind generational [`ReqId`] handles:
+    /// dense O(1) access, recycled slots, no per-request allocation.
+    requests: Slab<ReqCtl>,
 }
 
 impl<T: Clone + Default> RelayCoordinator<T> {
@@ -260,15 +321,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 origin: FxHashMap::default(),
             })
             .collect();
-        Ok(RelayCoordinator {
-            cfg,
-            router,
-            triggers,
-            instances,
-            requests: FxHashMap::default(),
-            cands: FxHashMap::default(),
-            seg_refs: FxHashMap::default(),
-        })
+        Ok(RelayCoordinator { cfg, router, triggers, instances, requests: Slab::new() })
     }
 
     // ---- introspection -----------------------------------------------------
@@ -291,14 +344,25 @@ impl<T: Clone + Default> RelayCoordinator<T> {
 
     /// Whether the request will run ranking-on-cache (valid once its
     /// rank-side classification is settled).
-    pub fn is_cached(&self, req: u64) -> bool {
-        self.requests.get(&req).map(|r| r.cached).unwrap_or(false)
+    pub fn is_cached(&self, req: ReqId) -> bool {
+        self.requests.get(req).map(|r| r.cached).unwrap_or(false)
+    }
+
+    /// Whether the request holds an admitted live-cache slot.
+    pub fn is_admitted(&self, req: ReqId) -> bool {
+        self.requests.get(req).map(|r| r.admitted).unwrap_or(false)
     }
 
     /// Whether a waiting rank request has been resolved (woken or timed
-    /// out) — the live engine polls this under its condvar.
-    pub fn wait_resolved(&self, req: u64) -> bool {
-        self.requests.get(&req).map(|r| r.resolved).unwrap_or(true)
+    /// out) — the live engine polls this under its condvar.  A retired
+    /// handle reads as resolved.
+    pub fn wait_resolved(&self, req: ReqId) -> bool {
+        self.requests.get(req).map(|r| r.resolved).unwrap_or(true)
+    }
+
+    /// Live (un-retired) requests — leak check for tests and benches.
+    pub fn live_requests(&self) -> usize {
+        self.requests.len()
     }
 
     /// Merged cache/admission counters across instances.
@@ -376,47 +440,36 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     // ---- event API ---------------------------------------------------------
 
     /// A request entered the pipeline.  `candidates` is the ranking-side
-    /// candidate item set (used for segment planning at `rank_compute`;
-    /// pass `&[]` when segment reuse is off — hosts should consult
+    /// candidate item set (copied into the request's recycled slot buffer
+    /// for segment planning at `rank_compute`; pass `&[]` when segment
+    /// reuse is off — hosts should consult
     /// [`RelayCoordinator::segments_enabled`] before materialising it).
-    /// Returns whether the trigger side path should run (relay mode,
-    /// long sequence).
+    /// Returns the request's [`ReqId`] handle — every later event takes
+    /// it back — and whether the trigger side path should run (relay
+    /// mode, long sequence).
     pub fn on_arrival(
         &mut self,
         _now: u64,
-        req: u64,
         user: u64,
         prefix_len: usize,
         candidates: &[u64],
-    ) -> bool {
-        if self.segments_enabled() && !candidates.is_empty() {
-            self.cands.insert(req, candidates.to_vec());
-        }
+    ) -> (ReqId, bool) {
         let is_long = prefix_len > self.cfg.long_threshold;
-        self.requests.insert(
-            req,
-            ReqCtl {
-                user,
-                prefix_len,
-                is_long,
-                admitted: false,
-                pre_instance: None,
-                rank_instance: usize::MAX,
-                outcome: CacheOutcome::FullInference,
-                cached: false,
-                wait_since: 0,
-                wait_us: 0.0,
-                resolved: false,
-            },
-        );
-        self.cfg.mode.is_relay() && is_long
+        let keep_cands = self.cfg.mode.is_relay() && self.cfg.segment.enabled();
+        let req = self.requests.insert_with(|st| {
+            st.reset(user, prefix_len, is_long);
+            if keep_cands {
+                st.cands.extend_from_slice(candidates);
+            }
+        });
+        (req, self.cfg.mode.is_relay() && is_long)
     }
 
     /// The trigger side path: metadata risk test, admission control, and
     /// the signal-side pseudo-pre-infer (§3.2/§3.4).
-    pub fn on_trigger_check(&mut self, now: u64, req: u64) -> SignalAction {
+    pub fn on_trigger_check(&mut self, now: u64, req: ReqId) -> SignalAction {
         let (user, prefix_len) = {
-            let st = &self.requests[&req];
+            let st = self.requests.get(req).expect("trigger check for unknown request");
             (st.user, st.prefix_len)
         };
         let route = self.router.route_special(user);
@@ -435,7 +488,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             return SignalAction::None;
         }
         {
-            let st = self.requests.get_mut(&req).unwrap();
+            let st = self.requests.get_mut(req).unwrap();
             st.admitted = true;
             st.pre_instance = Some(inst);
         }
@@ -471,7 +524,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                         if let Some(t) = self.triggers.get_mut(&inst) {
                             t.cancel_admit(user);
                         }
-                        let st = self.requests.get_mut(&req).unwrap();
+                        let st = self.requests.get_mut(req).unwrap();
                         st.admitted = false;
                         st.pre_instance = None;
                         SignalAction::None
@@ -485,12 +538,12 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// resolved: long-sequence requests carry the consistency-hash-key
     /// and go to the special service; short ones follow standard
     /// balancing.  Returns the ranking instance at `Stage::Preproc`.
-    pub fn on_stage_done(&mut self, _now: u64, req: u64, stage: Stage) -> Option<usize> {
+    pub fn on_stage_done(&mut self, _now: u64, req: ReqId, stage: Stage) -> Option<usize> {
         if stage != Stage::Preproc {
             return None;
         }
         let (user, is_long) = {
-            let st = &self.requests[&req];
+            let st = self.requests.get(req).expect("stage done for unknown request");
             (st.user, st.is_long)
         };
         let route = if self.cfg.mode.is_relay() && is_long {
@@ -498,20 +551,20 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         } else {
             self.router.route_normal(user)
         };
-        self.requests.get_mut(&req).unwrap().rank_instance = route.instance;
+        self.requests.get_mut(req).unwrap().rank_instance = route.instance;
         Some(route.instance)
     }
 
     /// The ranking request reached its instance: run the pseudo-pre-infer
     /// fronting every ranking request (§3.4) and classify.
-    pub fn on_rank_start(&mut self, now: u64, req: u64) -> RankAction {
+    pub fn on_rank_start(&mut self, now: u64, req: ReqId) -> RankAction {
         let (inst, user, is_long, admitted) = {
-            let st = &self.requests[&req];
+            let st = self.requests.get(req).expect("rank start for unknown request");
             (st.rank_instance, st.user, st.is_long, st.admitted)
         };
         if !(self.cfg.mode.is_relay() && is_long) {
             // Baseline mode or short-sequence request: full inline inference.
-            self.requests.get_mut(&req).unwrap().resolved = true;
+            self.requests.get_mut(req).unwrap().resolved = true;
             return RankAction::Proceed { cached: false, outcome: CacheOutcome::FullInference };
         }
         let action = self.instances[inst].cache.pseudo_pre_infer(user, now);
@@ -522,20 +575,20 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                     .get(&user)
                     .copied()
                     .unwrap_or(CacheOutcome::HbmHit);
-                let st = self.requests.get_mut(&req).unwrap();
+                let st = self.requests.get_mut(req).unwrap();
                 st.outcome = origin;
                 st.cached = true;
                 st.resolved = true;
                 RankAction::Proceed { cached: true, outcome: origin }
             }
             PseudoAction::WaitProducing => {
-                self.requests.get_mut(&req).unwrap().wait_since = now;
+                self.requests.get_mut(req).unwrap().wait_since = now;
                 self.instances[inst].waiting_produce.entry(user).or_default().push(req);
                 RankAction::Wait
             }
             PseudoAction::StartReload { bytes } => {
                 {
-                    let st = self.requests.get_mut(&req).unwrap();
+                    let st = self.requests.get_mut(req).unwrap();
                     st.outcome = CacheOutcome::DramHit;
                     st.cached = true;
                     st.wait_since = now;
@@ -545,7 +598,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             }
             PseudoAction::JoinReload | PseudoAction::QueuedReload => {
                 {
-                    let st = self.requests.get_mut(&req).unwrap();
+                    let st = self.requests.get_mut(req).unwrap();
                     st.outcome = CacheOutcome::JoinedReload;
                     st.cached = true;
                     st.wait_since = now;
@@ -554,7 +607,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 RankAction::WaitReload
             }
             PseudoAction::Miss => {
-                let st = self.requests.get_mut(&req).unwrap();
+                let st = self.requests.get_mut(req).unwrap();
                 st.outcome =
                     if admitted { CacheOutcome::Fallback } else { CacheOutcome::FullInference };
                 st.cached = false;
@@ -573,7 +626,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         instance: usize,
         user: u64,
         payload: Option<T>,
-    ) -> Vec<u64> {
+    ) -> Vec<ReqId> {
         let ok = match payload {
             Some(p) => self.instances[instance].cache.hbm_mut().complete_produce(user, p),
             None => {
@@ -592,7 +645,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         let waiters =
             self.instances[instance].waiting_produce.remove(&user).unwrap_or_default();
         for &w in &waiters {
-            if let Some(st) = self.requests.get_mut(&w) {
+            if let Some(st) = self.requests.get_mut(w) {
                 st.wait_us += now.saturating_sub(st.wait_since) as f64;
                 if ok {
                     st.outcome = CacheOutcome::HbmHit;
@@ -632,7 +685,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         }
         let woken = self.instances[instance].waiting_reload.remove(&user).unwrap_or_default();
         for &w in &woken {
-            if let Some(st) = self.requests.get_mut(&w) {
+            if let Some(st) = self.requests.get_mut(w) {
                 st.wait_us += now.saturating_sub(st.wait_since) as f64;
                 if !done.installed {
                     st.outcome = CacheOutcome::Fallback;
@@ -655,7 +708,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 let woken =
                     self.instances[instance].waiting_reload.remove(&user).unwrap_or_default();
                 for &w in &woken {
-                    if let Some(st) = self.requests.get_mut(&w) {
+                    if let Some(st) = self.requests.get_mut(w) {
                         st.wait_us += now.saturating_sub(st.wait_since) as f64;
                         st.outcome = CacheOutcome::Fallback;
                         st.cached = false;
@@ -669,8 +722,8 @@ impl<T: Clone + Default> RelayCoordinator<T> {
 
     /// Wait-budget fallback: a rank request waited too long for ψ.  The
     /// request leaves its waiting list and falls back to full inference.
-    pub fn on_wait_timeout(&mut self, now: u64, req: u64) {
-        let Some(st) = self.requests.get_mut(&req) else { return };
+    pub fn on_wait_timeout(&mut self, now: u64, req: ReqId) {
+        let Some(st) = self.requests.get_mut(req) else { return };
         st.wait_us += now.saturating_sub(st.wait_since) as f64;
         st.outcome = CacheOutcome::Fallback;
         st.cached = false;
@@ -694,9 +747,9 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// resident segment, join an in-flight production, or become the
     /// producer (cross-request single-flight, implemented once here so
     /// both engines inherit identical dedup decisions).
-    pub fn rank_compute(&mut self, now: u64, req: u64) -> RankCompute<T> {
+    pub fn rank_compute(&mut self, now: u64, req: ReqId) -> RankCompute<T> {
         let (inst, user, cached) = {
-            let st = &self.requests[&req];
+            let st = self.requests.get(req).expect("rank compute for unknown request");
             (st.rank_instance, st.user, st.cached)
         };
         let payload =
@@ -706,43 +759,47 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     }
 
     /// Per-candidate segment decisions for one rank pass; pins are held
-    /// until [`RelayCoordinator::on_rank_done`] releases them.
-    fn plan_segments(&mut self, now: u64, req: u64, inst: usize) -> Option<SegmentPlan> {
-        let items = self.cands.remove(&req)?;
+    /// in the request's recycled slot buffers until
+    /// [`RelayCoordinator::on_rank_done`] releases them.
+    // Indexed loop: `st.cands` is read while `st.seg_pinned` is pushed —
+    // same struct, so an iterator over `cands` cannot borrow-check.
+    #[allow(clippy::needless_range_loop)]
+    fn plan_segments(&mut self, now: u64, req: ReqId, inst: usize) -> Option<SegmentPlan> {
         let version = self.cfg.segment.version;
+        let st = self.requests.get_mut(req)?;
+        if st.cands.is_empty() {
+            return None;
+        }
         let store = self.instances.get_mut(inst)?.segments.as_mut()?;
         let mut plan = SegmentPlan::default();
-        let mut refs = SegRefs { pinned: Vec::new(), produced: Vec::new() };
-        for item in items {
-            let key = SegmentKey::new(item, version).packed();
+        for i in 0..st.cands.len() {
+            let key = SegmentKey::new(st.cands[i], version).packed();
             match store.acquire(key, now) {
                 SegmentAction::Reuse | SegmentAction::Promote => {
                     plan.reused += 1;
-                    refs.pinned.push(key);
+                    st.seg_pinned.push(key);
                 }
                 SegmentAction::Join => {
                     plan.joined += 1;
-                    refs.pinned.push(key);
+                    st.seg_pinned.push(key);
                 }
                 SegmentAction::Produce { ticket } => {
                     plan.produced += 1;
-                    refs.pinned.push(key);
-                    refs.produced.push((key, ticket));
+                    st.seg_pinned.push(key);
+                    st.seg_produced.push((key, ticket));
                 }
                 SegmentAction::Bypass => plan.bypassed += 1,
             }
         }
-        if !refs.pinned.is_empty() {
-            self.seg_refs.insert(req, refs);
-        }
+        st.cands.clear();
         Some(plan)
     }
 
     /// The classified ψ was unusable at execution time (live engine only:
     /// e.g. the device buffer failed to materialise) — demote to a safe
     /// fallback so metrics reflect what actually ran.
-    pub fn force_fallback(&mut self, req: u64) {
-        if let Some(st) = self.requests.get_mut(&req) {
+    pub fn force_fallback(&mut self, req: ReqId) {
+        if let Some(st) = self.requests.get_mut(req) {
             st.outcome = CacheOutcome::Fallback;
             st.cached = false;
         }
@@ -750,10 +807,21 @@ impl<T: Clone + Default> RelayCoordinator<T> {
 
     /// Ranking finished: release the connection and the admitted
     /// live-cache slot, classify the spill lifecycle, and retire the
-    /// request.  `kv_bytes` is this request's ψ footprint.
-    pub fn on_rank_done(&mut self, _now: u64, req: u64, kv_bytes: usize) -> Completion {
-        let st = self.requests.remove(&req).expect("completion for unknown request");
-        let inst = st.rank_instance;
+    /// request (its slab slot is recycled, buffers and all; the handle
+    /// goes stale).  `kv_bytes` is this request's ψ footprint.
+    pub fn on_rank_done(&mut self, _now: u64, req: ReqId, kv_bytes: usize) -> Completion {
+        let st = self.requests.get_mut(req).expect("completion for unknown request");
+        let (user, prefix_len, is_long, inst, admitted, cached, outcome, wait_us, pre_instance) = (
+            st.user,
+            st.prefix_len,
+            st.is_long,
+            st.rank_instance,
+            st.admitted,
+            st.cached,
+            st.outcome,
+            st.wait_us,
+            st.pre_instance,
+        );
         self.router.on_complete(inst);
         // Candidate-segment lifecycle: install what this pass produced
         // (waking up reuse for every request that joined), then release
@@ -763,23 +831,23 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         // execution materialised (the live rank kernel does not export
         // per-item KV slices; the decision plane is engine-shared either
         // way).
-        self.cands.remove(&req);
-        if let Some(refs) = self.seg_refs.remove(&req) {
+        if !st.seg_pinned.is_empty() {
             if let Some(store) = self.instances[inst].segments.as_mut() {
-                for (key, ticket) in refs.produced {
+                for &(key, ticket) in &st.seg_produced {
                     store.complete(key, ticket, T::default());
                 }
-                for key in refs.pinned {
+                for &key in &st.seg_pinned {
                     store.release(key);
                 }
             }
         }
+        self.requests.release(req);
         // Release the admitted live-cache slot — the unique pairing for
         // this request's admit: a signal-time overcommit already cleared
         // `st.admitted` (after its own `cancel_admit`), so the two
         // release sites are mutually exclusive per request.
-        if st.admitted {
-            if let Some(pre_inst) = st.pre_instance {
+        if admitted {
+            if let Some(pre_inst) = pre_instance {
                 if let Some(t) = self.triggers.get_mut(&pre_inst) {
                     t.release();
                 }
@@ -790,25 +858,25 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         // critical path); reloaded ψ is still resident in DRAM, so the
         // window slides immediately.
         let mut spill = None;
-        if st.cached {
+        if cached {
             let ctl = &mut self.instances[inst];
-            let fresh = ctl.origin.get(&st.user) == Some(&CacheOutcome::HbmHit);
+            let fresh = ctl.origin.get(&user) == Some(&CacheOutcome::HbmHit);
             if fresh {
                 spill = Some(kv_bytes);
-            } else if ctl.cache.hbm().state_of(st.user) == Some(EntryState::Consumed) {
-                ctl.cache.hbm_mut().evict(st.user);
-                ctl.origin.remove(&st.user);
+            } else if ctl.cache.hbm().state_of(user) == Some(EntryState::Consumed) {
+                ctl.cache.hbm_mut().evict(user);
+                ctl.origin.remove(&user);
             }
         }
         Completion {
-            user: st.user,
-            prefix_len: st.prefix_len,
-            is_long: st.is_long,
+            user,
+            prefix_len,
+            is_long,
             instance: inst,
-            admitted: st.admitted,
-            cached: st.cached,
-            outcome: st.outcome,
-            wait_us: st.wait_us,
+            admitted,
+            cached,
+            outcome,
+            wait_us,
             spill,
         }
     }
@@ -871,9 +939,10 @@ mod tests {
     }
 
     /// Drive one request end to end with an instantly-completing host.
-    fn drive(c: &mut RelayCoordinator<u32>, now: u64, id: u64, user: u64, prefix: usize) -> Completion {
-        if c.on_arrival(now, id, user, prefix, &[]) {
-            match c.on_trigger_check(now, id) {
+    fn drive(c: &mut RelayCoordinator<u32>, now: u64, user: u64, prefix: usize) -> Completion {
+        let (req, wants_trigger) = c.on_arrival(now, user, prefix, &[]);
+        if wants_trigger {
+            match c.on_trigger_check(now, req) {
                 SignalAction::Produce { instance, user, .. } => {
                     let woken = c.on_psi_ready(now, instance, user, Some(7));
                     assert!(woken.is_empty(), "no rank request is waiting yet");
@@ -885,20 +954,19 @@ mod tests {
                 SignalAction::None => {}
             }
         }
-        c.on_stage_done(now, id, Stage::Retrieval);
-        c.on_stage_done(now, id, Stage::Preproc).expect("rank instance routed");
-        match c.on_rank_start(now, id) {
+        c.on_stage_done(now, req, Stage::Retrieval);
+        let inst = c.on_stage_done(now, req, Stage::Preproc).expect("rank instance routed");
+        match c.on_rank_start(now, req) {
             RankAction::Proceed { .. } => {}
             RankAction::StartReload { bytes } => {
-                let st = c.requests[&id];
-                c.on_reload_done(now, st.rank_instance, st.user, Some(7), bytes);
+                c.on_reload_done(now, inst, user, Some(7), bytes);
             }
             RankAction::Wait | RankAction::WaitReload => {
-                assert!(c.wait_resolved(id), "instant host should have resolved the wait");
+                assert!(c.wait_resolved(req), "instant host should have resolved the wait");
             }
         }
-        let rc = c.rank_compute(now, id);
-        let done = c.on_rank_done(now, id, 32 << 20);
+        let rc = c.rank_compute(now, req);
+        let done = c.on_rank_done(now, req, 32 << 20);
         if rc.cached {
             assert!(rc.payload.is_some());
         }
@@ -911,25 +979,26 @@ mod tests {
     #[test]
     fn baseline_mode_never_triggers_or_caches() {
         let mut c = coord(Mode::Baseline);
-        for id in 0..20 {
-            let done = drive(&mut c, id * 1000, id, id % 3, 4096);
+        for i in 0..20 {
+            let done = drive(&mut c, i * 1000, i % 3, 4096);
             assert_eq!(done.outcome, CacheOutcome::FullInference);
             assert!(!done.admitted && !done.cached);
         }
         assert_eq!(c.trigger_stats().assessed, 0);
+        assert_eq!(c.live_requests(), 0, "every request retired its slot");
     }
 
     #[test]
     fn relay_long_request_relays_and_spills() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) });
-        let done = drive(&mut c, 0, 1, 42, 4096);
+        let done = drive(&mut c, 0, 42, 4096);
         assert_eq!(done.outcome, CacheOutcome::HbmHit);
         assert!(done.admitted && done.cached && done.spill.is_some());
         // The spill landed in DRAM: a follow-up request reloads from it.
-        let done2 = drive(&mut c, 500_000, 2, 42, 4096);
+        let done2 = drive(&mut c, 500_000, 42, 4096);
         assert_eq!(done2.outcome, CacheOutcome::DramHit, "refresh must hit the DRAM tier");
         // Short request stays on the normal path.
-        let done3 = drive(&mut c, 600_000, 3, 99, 128);
+        let done3 = drive(&mut c, 600_000, 99, 128);
         assert_eq!(done3.outcome, CacheOutcome::FullInference);
         assert!(!done3.admitted);
     }
@@ -937,19 +1006,20 @@ mod tests {
     #[test]
     fn rank_waits_for_production_then_hits() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
-        assert!(c.on_arrival(0, 1, 7, 4096, &[]));
-        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
+        let (req, wants) = c.on_arrival(0, 7, 4096, &[]);
+        assert!(wants);
+        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) else {
             panic!("expected production");
         };
-        c.on_stage_done(0, 1, Stage::Preproc).unwrap();
-        assert_eq!(c.on_rank_start(10, 1), RankAction::Wait);
-        assert!(!c.wait_resolved(1));
+        c.on_stage_done(0, req, Stage::Preproc).unwrap();
+        assert_eq!(c.on_rank_start(10, req), RankAction::Wait);
+        assert!(!c.wait_resolved(req));
         let woken = c.on_psi_ready(5_000, instance, user, Some(3));
-        assert_eq!(woken, vec![1]);
-        assert!(c.wait_resolved(1) && c.is_cached(1));
-        let rc = c.rank_compute(5_000, 1);
+        assert_eq!(woken, vec![req]);
+        assert!(c.wait_resolved(req) && c.is_cached(req));
+        let rc = c.rank_compute(5_000, req);
         assert_eq!(rc.payload, Some(3));
-        let done = c.on_rank_done(5_000, 1, 1 << 20);
+        let done = c.on_rank_done(5_000, req, 1 << 20);
         assert_eq!(done.outcome, CacheOutcome::HbmHit);
         assert!((done.wait_us - 4_990.0).abs() < 1e-9);
     }
@@ -957,17 +1027,18 @@ mod tests {
     #[test]
     fn failed_production_falls_back() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
-        assert!(c.on_arrival(0, 1, 7, 4096, &[]));
-        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
+        let (req, wants) = c.on_arrival(0, 7, 4096, &[]);
+        assert!(wants);
+        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) else {
             panic!("expected production");
         };
-        c.on_stage_done(0, 1, Stage::Preproc).unwrap();
-        assert_eq!(c.on_rank_start(10, 1), RankAction::Wait);
+        c.on_stage_done(0, req, Stage::Preproc).unwrap();
+        assert_eq!(c.on_rank_start(10, req), RankAction::Wait);
         let woken = c.on_psi_ready(2_000, instance, user, None);
-        assert_eq!(woken, vec![1]);
-        let rc = c.rank_compute(2_000, 1);
+        assert_eq!(woken, vec![req]);
+        let rc = c.rank_compute(2_000, req);
         assert!(!rc.cached && rc.payload.is_none());
-        let done = c.on_rank_done(2_000, 1, 1 << 20);
+        let done = c.on_rank_done(2_000, req, 1 << 20);
         assert_eq!(done.outcome, CacheOutcome::Fallback);
         assert!(done.admitted, "fallback still counts as admitted");
     }
@@ -975,20 +1046,47 @@ mod tests {
     #[test]
     fn wait_timeout_resolves_to_fallback_and_detaches() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
-        assert!(c.on_arrival(0, 1, 7, 4096, &[]));
-        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
+        let (req, wants) = c.on_arrival(0, 7, 4096, &[]);
+        assert!(wants);
+        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) else {
             panic!("expected production");
         };
-        c.on_stage_done(0, 1, Stage::Preproc).unwrap();
-        assert_eq!(c.on_rank_start(10, 1), RankAction::Wait);
-        c.on_wait_timeout(200_010, 1);
-        assert!(c.wait_resolved(1));
+        c.on_stage_done(0, req, Stage::Preproc).unwrap();
+        assert_eq!(c.on_rank_start(10, req), RankAction::Wait);
+        c.on_wait_timeout(200_010, req);
+        assert!(c.wait_resolved(req));
         // Late production must not resurrect the timed-out request.
         let woken = c.on_psi_ready(300_000, instance, user, Some(3));
         assert!(woken.is_empty());
-        let done = c.on_rank_done(300_000, 1, 1 << 20);
+        let done = c.on_rank_done(300_000, req, 1 << 20);
         assert_eq!(done.outcome, CacheOutcome::Fallback);
         assert!((done.wait_us - 200_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stale_handle_misses_after_slot_recycled() {
+        let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
+        let (old, _) = c.on_arrival(0, 7, 4096, &[]);
+        c.on_stage_done(0, old, Stage::Preproc).unwrap();
+        let _ = c.on_rank_start(0, old);
+        let _ = c.rank_compute(0, old);
+        c.on_rank_done(0, old, 1 << 20);
+        // The next arrival recycles the slot; the retired handle must
+        // read as resolved/uncached rather than aliasing the new tenant.
+        let (new, _) = c.on_arrival(10, 9, 4096, &[]);
+        assert_eq!(new.index(), old.index(), "slot recycled");
+        assert_ne!(new, old);
+        assert!(c.wait_resolved(old), "stale handle reads as resolved");
+        assert!(!c.is_cached(old));
+        assert!(!c.is_admitted(old));
+        // A late timeout on the stale handle must not touch the new tenant.
+        c.on_wait_timeout(20, old);
+        assert!(!c.requests.get(new).unwrap().resolved);
+        c.on_stage_done(20, new, Stage::Preproc).unwrap();
+        let _ = c.on_rank_start(20, new);
+        let _ = c.rank_compute(20, new);
+        c.on_rank_done(20, new, 1 << 20);
+        assert_eq!(c.live_requests(), 0);
     }
 
     #[test]
@@ -998,23 +1096,24 @@ mod tests {
         // cache produced) but every admit's slot must be held for the
         // request lifecycle and freed exactly once at completion —
         // otherwise the Eq. 2 footprint bound stops binding.
-        for id in 0..6u64 {
-            let now = id * 10_000;
-            assert!(c.on_arrival(now, id, 7, 4096, &[]));
-            match c.on_trigger_check(now, id) {
+        for i in 0..6u64 {
+            let now = i * 10_000;
+            let (req, wants) = c.on_arrival(now, 7, 4096, &[]);
+            assert!(wants);
+            match c.on_trigger_check(now, req) {
                 SignalAction::Produce { instance, user, .. } => {
                     c.on_psi_ready(now, instance, user, Some(1));
                 }
                 SignalAction::None => {}
                 other => panic!("unexpected signal action {other:?}"),
             }
-            assert_eq!(c.trigger_live(), 1, "admit {id} holds one slot in flight");
-            c.on_stage_done(now, id, Stage::Preproc).unwrap();
-            let _ = c.on_rank_start(now, id);
-            let _ = c.rank_compute(now, id);
-            let done = c.on_rank_done(now, id, 32 << 20);
+            assert_eq!(c.trigger_live(), 1, "admit {i} holds one slot in flight");
+            c.on_stage_done(now, req, Stage::Preproc).unwrap();
+            let _ = c.on_rank_start(now, req);
+            let _ = c.rank_compute(now, req);
+            let done = c.on_rank_done(now, req, 32 << 20);
             assert!(done.admitted);
-            assert_eq!(c.trigger_live(), 0, "admit {id} freed exactly once at completion");
+            assert_eq!(c.trigger_live(), 0, "admit {i} freed exactly once at completion");
         }
     }
 
@@ -1022,27 +1121,28 @@ mod tests {
     fn joined_reload_classification() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) });
         // Seed DRAM for user 5 on its special instance via a full cycle.
-        let first = drive(&mut c, 0, 1, 5, 4096);
+        let first = drive(&mut c, 0, 5, 4096);
         assert!(first.spill.is_some());
         // Two refresh requests race: the first starts the reload, the
         // second joins it.
-        assert!(c.on_arrival(400_000, 2, 5, 4096, &[]));
-        assert!(c.on_arrival(400_000, 3, 5, 4096, &[]));
+        let (r2, _) = c.on_arrival(400_000, 5, 4096, &[]);
+        let (r3, _) = c.on_arrival(400_000, 5, 4096, &[]);
         // Skip admission (signal may be delayed): rank requests front
         // the reload themselves (out-of-order arrival, §3.4).
-        c.on_stage_done(400_000, 2, Stage::Preproc).unwrap();
-        c.on_stage_done(400_000, 3, Stage::Preproc).unwrap();
-        let a = c.on_rank_start(400_000, 2);
+        let inst2 = c.on_stage_done(400_000, r2, Stage::Preproc).unwrap();
+        c.on_stage_done(400_000, r3, Stage::Preproc).unwrap();
+        let a = c.on_rank_start(400_000, r2);
         let RankAction::StartReload { bytes } = a else { panic!("expected StartReload, got {a:?}") };
-        assert_eq!(c.on_rank_start(400_001, 3), RankAction::WaitReload);
-        let st2 = c.requests[&2];
-        let res = c.on_reload_done(400_500, st2.rank_instance, 5, Some(9), bytes);
+        assert_eq!(c.on_rank_start(400_001, r3), RankAction::WaitReload);
+        let res = c.on_reload_done(400_500, inst2, 5, Some(9), bytes);
         assert!(res.installed);
         let mut woken = res.woken;
         woken.sort_unstable();
-        assert_eq!(woken, vec![2, 3]);
-        let d2 = c.on_rank_done(400_500, 2, bytes);
-        let d3 = c.on_rank_done(400_500, 3, bytes);
+        let mut expect = vec![r2, r3];
+        expect.sort_unstable();
+        assert_eq!(woken, expect);
+        let d2 = c.on_rank_done(400_500, r2, bytes);
+        let d3 = c.on_rank_done(400_500, r3, bytes);
         assert_eq!(d2.outcome, CacheOutcome::DramHit);
         assert_eq!(d3.outcome, CacheOutcome::JoinedReload);
     }
@@ -1064,7 +1164,7 @@ mod tests {
             }
             let mut c: RelayCoordinator<u32> =
                 RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
-            let done = drive(&mut c, 0, 1, 42, 4096);
+            let done = drive(&mut c, 0, 42, 4096);
             (done, c.trigger_stats())
         };
         let (stat_done, stat_s) = run(false);
@@ -1095,8 +1195,9 @@ mod tests {
         let mut c: RelayCoordinator<u32> =
             RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
         // Request 1 produces 300 MB into the 512 MB window.
-        assert!(c.on_arrival(0, 1, 7, 4096, &[]));
-        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, 1) else {
+        let (r1, wants) = c.on_arrival(0, 7, 4096, &[]);
+        assert!(wants);
+        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, r1) else {
             panic!("first admit produces");
         };
         c.on_psi_ready(0, instance, user, Some(1));
@@ -1106,13 +1207,13 @@ mod tests {
         // only 212 MB free in the carved-down window and the admit is
         // cancelled; on the other special instance it produces cleanly.
         // Both paths must leave the ledger balanced.
-        assert!(c.on_arrival(10, 2, 7 + (1 << 40), 4096, &[]));
-        let act = c.on_trigger_check(10, 2);
-        let st2_admitted = c.requests[&2].admitted;
+        let (r2, wants2) = c.on_arrival(10, 7 + (1 << 40), 4096, &[]);
+        assert!(wants2);
+        let act = c.on_trigger_check(10, r2);
         match act {
             SignalAction::None => {
                 // Overcommit on the rendezvous instance: cancelled admit.
-                assert!(!st2_admitted, "cancelled admit is not admitted");
+                assert!(!c.is_admitted(r2), "cancelled admit is not admitted");
             }
             SignalAction::Produce { instance: i2, user: u2, .. } => {
                 // Landed on a different special instance with a free
@@ -1121,11 +1222,11 @@ mod tests {
             }
             other => panic!("unexpected action {other:?}"),
         }
-        for id in [1u64, 2] {
-            c.on_stage_done(20, id, Stage::Preproc).unwrap();
-            let _ = c.on_rank_start(20, id);
-            let _ = c.rank_compute(20, id);
-            c.on_rank_done(20, id, 300 << 20);
+        for req in [r1, r2] {
+            c.on_stage_done(20, req, Stage::Preproc).unwrap();
+            let _ = c.on_rank_start(20, req);
+            let _ = c.rank_compute(20, req);
+            c.on_rank_done(20, req, 300 << 20);
         }
         let s = c.trigger_stats();
         assert_eq!(c.trigger_live(), 0, "all slots returned");
@@ -1144,19 +1245,19 @@ mod tests {
     fn drive_with_cands(
         c: &mut RelayCoordinator<u32>,
         now: u64,
-        id: u64,
         user: u64,
         cands: &[u64],
     ) -> (Completion, Option<SegmentPlan>) {
-        if c.on_arrival(now, id, user, 4096, cands) {
-            if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(now, id) {
+        let (req, wants_trigger) = c.on_arrival(now, user, 4096, cands);
+        if wants_trigger {
+            if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(now, req) {
                 c.on_psi_ready(now, instance, user, Some(7));
             }
         }
-        c.on_stage_done(now, id, Stage::Preproc).unwrap();
-        let _ = c.on_rank_start(now, id);
-        let rc = c.rank_compute(now, id);
-        let done = c.on_rank_done(now, id, 32 << 20);
+        c.on_stage_done(now, req, Stage::Preproc).unwrap();
+        let _ = c.on_rank_start(now, req);
+        let rc = c.rank_compute(now, req);
+        let done = c.on_rank_done(now, req, 32 << 20);
         (done, rc.segments)
     }
 
@@ -1183,10 +1284,10 @@ mod tests {
         // Different users sharing candidates — but segment reuse is
         // per-instance, so rendezvous the two requests on one instance
         // by using the same (affinity-hashed) user id.
-        let (_, p1) = drive_with_cands(&mut c, 0, 1, 42, &[10, 11, 12]);
+        let (_, p1) = drive_with_cands(&mut c, 0, 42, &[10, 11, 12]);
         let p1 = p1.expect("segment plan present");
         assert_eq!((p1.produced, p1.reused, p1.joined), (3, 0, 0));
-        let (_, p2) = drive_with_cands(&mut c, 1_000, 2, 42, &[10, 11, 13]);
+        let (_, p2) = drive_with_cands(&mut c, 1_000, 42, &[10, 11, 13]);
         let p2 = p2.expect("segment plan present");
         assert_eq!((p2.reused, p2.produced), (2, 1), "overlap reused, novelty produced");
         let s = c.segment_stats();
@@ -1201,22 +1302,25 @@ mod tests {
             RelayCoordinator::new(seg_config(), |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
         // Two requests overlap in time: both pass rank_compute before
         // either completes — the second joins the first's production.
-        for id in [1u64, 2] {
-            assert!(c.on_arrival(0, id, 42, 4096, &[77]));
-            if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, id) {
+        let mut reqs = Vec::new();
+        for _ in 0..2 {
+            let (req, wants) = c.on_arrival(0, 42, 4096, &[77]);
+            assert!(wants);
+            if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) {
                 c.on_psi_ready(0, instance, user, Some(7));
             }
-            c.on_stage_done(0, id, Stage::Preproc).unwrap();
-            let _ = c.on_rank_start(0, id);
+            c.on_stage_done(0, req, Stage::Preproc).unwrap();
+            let _ = c.on_rank_start(0, req);
+            reqs.push(req);
         }
-        let r1 = c.rank_compute(0, 1).segments.unwrap();
-        let r2 = c.rank_compute(0, 2).segments.unwrap();
+        let r1 = c.rank_compute(0, reqs[0]).segments.unwrap();
+        let r2 = c.rank_compute(0, reqs[1]).segments.unwrap();
         assert_eq!(r1.produced, 1);
         assert_eq!(r2.joined, 1, "dedup: one compute for both requests");
-        c.on_rank_done(10, 1, 32 << 20);
-        c.on_rank_done(10, 2, 32 << 20);
+        c.on_rank_done(10, reqs[0], 32 << 20);
+        c.on_rank_done(10, reqs[1], 32 << 20);
         // The installed segment now serves later requests directly.
-        let (_, p3) = drive_with_cands(&mut c, 1_000, 3, 42, &[77]);
+        let (_, p3) = drive_with_cands(&mut c, 1_000, 42, &[77]);
         assert_eq!(p3.unwrap().reused, 1);
         assert_eq!(c.segment_stats().joined, 1);
     }
@@ -1225,13 +1329,13 @@ mod tests {
     fn model_version_bump_rotates_segment_keys() {
         let mut c: RelayCoordinator<u32> =
             RelayCoordinator::new(seg_config(), |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
-        let (_, p1) = drive_with_cands(&mut c, 0, 1, 42, &[5]);
+        let (_, p1) = drive_with_cands(&mut c, 0, 42, &[5]);
         assert_eq!(p1.unwrap().produced, 1);
-        let (_, p2) = drive_with_cands(&mut c, 100, 2, 42, &[5]);
+        let (_, p2) = drive_with_cands(&mut c, 100, 42, &[5]);
         assert_eq!(p2.unwrap().reused, 1);
         // Model push: the same item must be re-produced under the new key.
         c.set_model_version(1);
-        let (_, p3) = drive_with_cands(&mut c, 200, 3, 42, &[5]);
+        let (_, p3) = drive_with_cands(&mut c, 200, 42, &[5]);
         assert_eq!(p3.unwrap().produced, 1, "stale-version segment must not match");
     }
 
@@ -1239,7 +1343,7 @@ mod tests {
     fn segments_ignored_without_candidates_or_in_baseline() {
         let mut c: RelayCoordinator<u32> =
             RelayCoordinator::new(seg_config(), |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
-        let (_, plan) = drive_with_cands(&mut c, 0, 1, 42, &[]);
+        let (_, plan) = drive_with_cands(&mut c, 0, 42, &[]);
         assert!(plan.is_none(), "no candidates ⇒ no plan");
         assert_eq!(c.segment_stats().lookups, 0);
         // Baseline mode never builds a store even with frac set.
@@ -1248,10 +1352,11 @@ mod tests {
         let mut b: RelayCoordinator<u32> =
             RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
         assert!(!b.segments_enabled());
-        b.on_arrival(0, 1, 7, 4096, &[1, 2]);
-        b.on_stage_done(0, 1, Stage::Preproc).unwrap();
-        let _ = b.on_rank_start(0, 1);
-        assert!(b.rank_compute(0, 1).segments.is_none());
-        b.on_rank_done(0, 1, 1 << 20);
+        let (req, wants) = b.on_arrival(0, 7, 4096, &[1, 2]);
+        assert!(!wants);
+        b.on_stage_done(0, req, Stage::Preproc).unwrap();
+        let _ = b.on_rank_start(0, req);
+        assert!(b.rank_compute(0, req).segments.is_none());
+        b.on_rank_done(0, req, 1 << 20);
     }
 }

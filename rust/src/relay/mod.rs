@@ -66,7 +66,7 @@ pub mod trigger;
 pub use baseline::{Mode, RemotePool};
 pub use coordinator::{
     Completion, CoordinatorConfig, QueuedReload, RankAction, RankCompute, RelayCoordinator,
-    ReloadResolution, SignalAction, Stage,
+    ReloadResolution, ReqId, SignalAction, Stage,
 };
 pub use hbm::{EntryState, HbmCache, HbmStats, InsertError, Micros};
 pub use hierarchy::{CacheHierarchy, HierarchyStats, PseudoAction, ReloadDone};

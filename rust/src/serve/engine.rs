@@ -22,7 +22,7 @@ use crate::metrics::RunMetrics;
 use crate::model::ModelSpec;
 use crate::relay::baseline::Mode;
 use crate::relay::coordinator::{
-    CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, SignalAction, Stage,
+    CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, ReqId, SignalAction, Stage,
 };
 use crate::relay::pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
 use crate::relay::router::RouterConfig;
@@ -174,7 +174,9 @@ enum Work {
     PreInfer { user: u64 },
     /// Signal-initiated DRAM→HBM reload for `user`.
     Reload { user: u64 },
-    Rank { req: GenRequest, resp: Sender<RankDone> },
+    /// Rank `req`; `handle` is the coordinator's [`ReqId`] issued at
+    /// arrival.
+    Rank { req: GenRequest, handle: ReqId, resp: Sender<RankDone> },
     Stop,
 }
 
@@ -225,8 +227,8 @@ impl LiveInstance {
                     Ok(Work::Reload { user }) => {
                         Self::perform_reload(user, id, &models, &shared);
                     }
-                    Ok(Work::Rank { req, resp }) => {
-                        let done = Self::do_rank(&req, id, &cfg, &models, &shared, &busy);
+                    Ok(Work::Rank { req, handle, resp }) => {
+                        let done = Self::do_rank(&req, handle, id, &cfg, &models, &shared, &busy);
                         let _ = resp.send(done);
                     }
                     Ok(Work::Stop) | Err(_) => break,
@@ -313,6 +315,7 @@ impl LiveInstance {
 
     fn do_rank(
         req: &GenRequest,
+        handle: ReqId,
         instance: usize,
         cfg: &LiveConfig,
         models: &Models,
@@ -326,7 +329,7 @@ impl LiveInstance {
         let wait_start = Instant::now();
 
         let mut coord = shared.coord.lock().unwrap();
-        match coord.on_rank_start(now_us(), req.id) {
+        match coord.on_rank_start(now_us(), handle) {
             RankAction::Proceed { .. } => {}
             RankAction::StartReload { .. } => {
                 // Perform the H2D inline on this worker (it holds a
@@ -338,12 +341,12 @@ impl LiveInstance {
                 coord = shared.coord.lock().unwrap();
             }
             RankAction::Wait | RankAction::WaitReload => loop {
-                if coord.wait_resolved(req.id) {
+                if coord.wait_resolved(handle) {
                     break;
                 }
                 if wait_start.elapsed().as_micros() as u64 > cfg.wait_budget_us {
                     // Wait-budget fallback: classify and stop waiting.
-                    coord.on_wait_timeout(now_us(), req.id);
+                    coord.on_wait_timeout(now_us(), handle);
                     break;
                 }
                 let (g, _t) = shared
@@ -354,12 +357,12 @@ impl LiveInstance {
             },
         }
         // Consume ψ at execution start.
-        let rc = coord.rank_compute(now_us(), req.id);
+        let rc = coord.rank_compute(now_us(), handle);
         let mut kv: Option<Payload> = rc.payload;
         if rc.cached && !matches!(kv, Some(Payload::Device(_))) {
             // Classified cached but no device buffer materialised: run the
             // safe fallback and make the metrics reflect it.
-            coord.force_fallback(req.id);
+            coord.force_fallback(handle);
             kv = None;
         }
         drop(coord);
@@ -385,7 +388,7 @@ impl LiveInstance {
             _ => cfg.spec.kv_bytes(),
         };
         let mut coord = shared.coord.lock().unwrap();
-        let done = coord.on_rank_done(now_us(), req.id, kv_bytes);
+        let done = coord.on_rank_done(now_us(), handle, kv_bytes);
         drop(coord);
         if done.spill.is_some() {
             // Spill fresh ψ to DRAM (D2H, off the critical path) and slide
@@ -486,16 +489,16 @@ impl LiveCluster {
         rng: &mut Rng,
     ) -> Result<Lifecycle> {
         let t0 = Instant::now();
-        let wants_trigger = {
+        let (handle, wants_trigger) = {
             let mut coord = self.shared.coord.lock().unwrap();
-            coord.on_arrival(now_us(), req.id, req.user, req.prefix_len, candidates)
+            coord.on_arrival(now_us(), req.user, req.prefix_len, candidates)
         };
         if wants_trigger {
             // Trigger side path (metadata only); admitted work is handed
             // to the chosen instance's worker pool.
             let action = {
                 let mut coord = self.shared.coord.lock().unwrap();
-                coord.on_trigger_check(now_us(), req.id)
+                coord.on_trigger_check(now_us(), handle)
             };
             match action {
                 SignalAction::Produce { instance, user, .. } => {
@@ -519,7 +522,7 @@ impl LiveCluster {
         let retrieval_done = t0.elapsed().as_micros() as u64;
         {
             let mut coord = self.shared.coord.lock().unwrap();
-            coord.on_stage_done(now_us(), req.id, Stage::Retrieval);
+            coord.on_stage_done(now_us(), handle, Stage::Retrieval);
         }
         sleep_us(preproc.sample(rng) * self.cfg.stage_scale);
         let preproc_done = t0.elapsed().as_micros() as u64;
@@ -528,13 +531,13 @@ impl LiveCluster {
         let inst = {
             let mut coord = self.shared.coord.lock().unwrap();
             coord
-                .on_stage_done(now_us(), req.id, Stage::Preproc)
+                .on_stage_done(now_us(), handle, Stage::Preproc)
                 .expect("preproc resolves the ranking instance")
         };
         let (tx, rx): (Sender<RankDone>, Receiver<RankDone>) = channel();
         self.instances[inst]
             .tx
-            .send(Work::Rank { req, resp: tx })
+            .send(Work::Rank { req, handle, resp: tx })
             .map_err(|_| anyhow!("instance {inst} stopped"))?;
         let done = rx.recv().map_err(|_| anyhow!("rank worker dropped response"))?;
         let done_us = t0.elapsed().as_micros() as u64;

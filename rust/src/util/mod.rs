@@ -7,6 +7,8 @@ pub mod cli;
 pub mod fxhash;
 pub mod json;
 pub mod logging;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
+pub mod slab;
 pub mod stats;

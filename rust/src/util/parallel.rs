@@ -1,0 +1,121 @@
+//! Deterministic parallel run executor for independent evaluation cells.
+//!
+//! The figure/sim grids are embarrassingly parallel — every (scenario,
+//! policy, engine) cell builds its own seeded simulator and shares no
+//! state — but their *output* must stay byte-identical at any `--jobs`
+//! count.  [`map_indexed`] guarantees that by separating scheduling from
+//! ordering: worker threads claim cell indices from a shared counter (so
+//! a slow cell never idles the pool), and results are merged back into
+//! **declaration order** before the caller sees them.  Printing,
+//! persistence and error propagation all happen on the caller's thread,
+//! in order, after the barrier.
+//!
+//! `std::thread::scope` only — no extra dependencies, no unsafe.  A cell
+//! is "parallel-safe" iff it reaches shared state only through `&`
+//! (configs, workload templates) and derives all randomness from its own
+//! seed; see ROADMAP "Architecture notes (PR 5)".
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{ensure, Result};
+
+use crate::util::cli::Args;
+
+/// Parse the shared `--jobs N` flag (default 1 = serial; the serial path
+/// does not spawn at all, so single-job runs are exactly the old code).
+pub fn jobs_from_args(args: &Args) -> Result<usize> {
+    let jobs = args.get_usize("jobs", 1)?;
+    ensure!(jobs >= 1, "--jobs must be >= 1, got {jobs}");
+    Ok(jobs)
+}
+
+/// Evaluate `f(0..n)` on up to `jobs` worker threads and return the
+/// results in index order.  `f` must be safe to call concurrently for
+/// distinct indices; each index is evaluated exactly once.
+///
+/// A panic in any cell propagates to the caller after the scope joins —
+/// no result is silently dropped.
+pub fn map_indexed<T, F>(jobs: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..jobs.min(n))
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut got: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        got.push((i, f(i)));
+                    }
+                    got
+                })
+            })
+            .collect();
+        for w in workers {
+            for (i, v) in w.join().expect("parallel cell panicked") {
+                debug_assert!(out[i].is_none(), "cell {i} computed twice");
+                out[i] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|v| v.expect("every cell computed exactly once")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_declaration_order_at_any_job_count() {
+        let f = |i: usize| i * i + 1;
+        let serial: Vec<usize> = (0..37).map(f).collect();
+        for jobs in [1, 2, 4, 16, 64] {
+            assert_eq!(map_indexed(jobs, 37, f), serial, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn every_cell_runs_exactly_once() {
+        use std::sync::atomic::AtomicU64;
+        let counts: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        let out = map_indexed(8, 100, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert_eq!(map_indexed(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(map_indexed(4, 1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn more_jobs_than_cells_is_fine() {
+        assert_eq!(map_indexed(32, 3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn jobs_flag_parses_and_rejects_zero() {
+        let parse = |v: &[&str]| {
+            Args::parse(std::iter::once("p".to_string()).chain(v.iter().map(|s| s.to_string())))
+                .unwrap()
+        };
+        assert_eq!(jobs_from_args(&parse(&["figure"])).unwrap(), 1);
+        assert_eq!(jobs_from_args(&parse(&["figure", "--jobs", "4"])).unwrap(), 4);
+        assert!(jobs_from_args(&parse(&["figure", "--jobs", "0"])).is_err());
+    }
+}

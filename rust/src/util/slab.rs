@@ -1,0 +1,353 @@
+//! Generational slab: dense, index-addressed per-request storage for the
+//! steady-state-allocation-free hot path.
+//!
+//! The relay-race control plane retires every request it admits, so its
+//! per-request tables churn at line rate.  A hash map pays for that churn
+//! twice — hashing on every event and an eventual rehash as the table
+//! breathes — and `remove` drops any buffers the entry owned.  The slab
+//! instead hands out [`SlabKey`] handles (slot index + generation):
+//!
+//! * **O(1) dense access** — events address `entries[idx]` directly, no
+//!   hashing, no probing;
+//! * **use-after-retire safety** — releasing a slot bumps its generation,
+//!   so a stale handle (a late ψ completion for a request that already
+//!   fell back) misses instead of aliasing the slot's next tenant;
+//! * **buffer pooling** — `release` vacates a slot but leaves its value in
+//!   place, and [`Slab::insert_with`] hands the recycled value to the
+//!   caller to reset, so `Vec`s owned by the entry keep their capacity
+//!   across tenants.  Once the live high-water mark is reached, inserting
+//!   and releasing allocate nothing.
+//!
+//! [`SecondaryMap`] lets another subsystem (an engine's timing table)
+//! attach its own per-request state to the same keys without sharing the
+//! slab itself.
+
+use std::fmt;
+
+/// Handle to a slab slot: index plus the generation it was issued under.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SlabKey {
+    idx: u32,
+    gen: u32,
+}
+
+impl SlabKey {
+    /// Slot index (stable for the entry's lifetime; reused after release).
+    pub fn index(self) -> usize {
+        self.idx as usize
+    }
+
+    /// Packed `(generation, index)` form for logs and ordering.
+    pub fn packed(self) -> u64 {
+        ((self.gen as u64) << 32) | self.idx as u64
+    }
+}
+
+impl fmt::Debug for SlabKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "k{}v{}", self.idx, self.gen)
+    }
+}
+
+struct Entry<T> {
+    gen: u32,
+    live: bool,
+    value: T,
+}
+
+/// Generational slab with slot-value recycling (see module docs).
+pub struct Slab<T> {
+    entries: Vec<Entry<T>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<T: Default> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab { entries: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    pub fn with_capacity(n: usize) -> Slab<T> {
+        Slab { entries: Vec::with_capacity(n), free: Vec::with_capacity(n), live: 0 }
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Slots ever allocated (the high-water mark).
+    pub fn capacity(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Claim a slot and hand its (recycled) value to `init` for a full
+    /// reset.  `init` MUST overwrite every field it relies on — the value
+    /// is a previous tenant's, kept so owned buffers retain capacity.
+    pub fn insert_with(&mut self, init: impl FnOnce(&mut T)) -> SlabKey {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.entries.push(Entry { gen: 0, live: false, value: T::default() });
+                (self.entries.len() - 1) as u32
+            }
+        };
+        let e = &mut self.entries[idx as usize];
+        debug_assert!(!e.live, "free list handed out a live slot");
+        e.live = true;
+        init(&mut e.value);
+        self.live += 1;
+        SlabKey { idx, gen: e.gen }
+    }
+
+    pub fn contains(&self, key: SlabKey) -> bool {
+        self.get(key).is_some()
+    }
+
+    pub fn get(&self, key: SlabKey) -> Option<&T> {
+        match self.entries.get(key.idx as usize) {
+            Some(e) if e.live && e.gen == key.gen => Some(&e.value),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, key: SlabKey) -> Option<&mut T> {
+        match self.entries.get_mut(key.idx as usize) {
+            Some(e) if e.live && e.gen == key.gen => Some(&mut e.value),
+            _ => None,
+        }
+    }
+
+    /// Vacate the slot, keeping its value in place for the next tenant.
+    /// Bumps the generation so the released key (and any copies of it)
+    /// stop resolving.  Returns whether the key was live.
+    pub fn release(&mut self, key: SlabKey) -> bool {
+        match self.entries.get_mut(key.idx as usize) {
+            Some(e) if e.live && e.gen == key.gen => {
+                e.live = false;
+                e.gen = e.gen.wrapping_add(1);
+                self.free.push(key.idx);
+                self.live -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+impl<T: Default> Default for Slab<T> {
+    fn default() -> Slab<T> {
+        Slab::new()
+    }
+}
+
+/// Per-key side storage addressed by another slab's [`SlabKey`]s: dense
+/// O(1) access with the same generation check, so a host engine can keep
+/// its own per-request state (timings, trace rows) keyed by the
+/// coordinator's handles without a hash map.
+pub struct SecondaryMap<T> {
+    entries: Vec<(u32, Option<T>)>,
+    live: usize,
+}
+
+impl<T> SecondaryMap<T> {
+    pub fn new() -> SecondaryMap<T> {
+        SecondaryMap { entries: Vec::new(), live: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Insert under `key`, returning what the same generation previously
+    /// held.  A value left behind by an *older* generation is dropped;
+    /// inserting with a key older than the slot's stored generation is
+    /// rejected (no-op, `value` dropped) — a stale handle must never
+    /// clobber the live tenant, matching the generation checks on
+    /// `get`/`get_mut`/`remove`.
+    pub fn insert(&mut self, key: SlabKey, value: T) -> Option<T> {
+        let idx = key.index();
+        if idx >= self.entries.len() {
+            self.entries.resize_with(idx + 1, || (0, None));
+        }
+        let e = &mut self.entries[idx];
+        if e.0 > key.gen {
+            debug_assert!(false, "stale-generation insert at slot {idx}");
+            return None;
+        }
+        let same_gen = e.0 == key.gen;
+        let prev = e.1.take();
+        if prev.is_some() {
+            self.live -= 1;
+        }
+        e.0 = key.gen;
+        e.1 = Some(value);
+        self.live += 1;
+        if same_gen {
+            prev
+        } else {
+            None
+        }
+    }
+
+    pub fn get(&self, key: SlabKey) -> Option<&T> {
+        match self.entries.get(key.index()) {
+            Some((gen, Some(v))) if *gen == key.gen => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, key: SlabKey) -> Option<&mut T> {
+        match self.entries.get_mut(key.index()) {
+            Some((gen, v @ Some(_))) if *gen == key.gen => v.as_mut(),
+            _ => None,
+        }
+    }
+
+    pub fn remove(&mut self, key: SlabKey) -> Option<T> {
+        match self.entries.get_mut(key.index()) {
+            Some((gen, v)) if *gen == key.gen => {
+                let out = v.take();
+                if out.is_some() {
+                    self.live -= 1;
+                }
+                out
+            }
+            _ => None,
+        }
+    }
+}
+
+impl<T> Default for SecondaryMap<T> {
+    fn default() -> SecondaryMap<T> {
+        SecondaryMap::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_release_roundtrip() {
+        let mut s: Slab<u32> = Slab::new();
+        let a = s.insert_with(|v| *v = 10);
+        let b = s.insert_with(|v| *v = 20);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&10));
+        assert_eq!(s.get(b), Some(&20));
+        *s.get_mut(a).unwrap() += 1;
+        assert_eq!(s.get(a), Some(&11));
+        assert!(s.release(a));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(a), None, "released key stops resolving");
+        assert!(!s.release(a), "double release is a no-op");
+        assert_eq!(s.get(b), Some(&20), "other entries unaffected");
+    }
+
+    #[test]
+    fn stale_generation_never_aliases_new_tenant() {
+        let mut s: Slab<u32> = Slab::new();
+        let a = s.insert_with(|v| *v = 1);
+        s.release(a);
+        let b = s.insert_with(|v| *v = 2);
+        assert_eq!(b.index(), a.index(), "slot reused");
+        assert_ne!(a, b, "generation differs");
+        assert_eq!(s.get(a), None, "stale handle misses");
+        assert_eq!(s.get_mut(a), None);
+        assert_eq!(s.get(b), Some(&2));
+        assert!(!s.release(a), "stale release must not evict the new tenant");
+        assert_eq!(s.get(b), Some(&2));
+    }
+
+    #[test]
+    fn recycled_slots_keep_buffer_capacity() {
+        let mut s: Slab<Vec<u64>> = Slab::new();
+        let a = s.insert_with(|v| {
+            v.clear();
+            v.extend_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        });
+        let cap = s.get(a).unwrap().capacity();
+        assert!(cap >= 8);
+        s.release(a);
+        // The next tenant of the slot sees the old buffer to reset — its
+        // capacity survives, so steady-state inserts never allocate.
+        let b = s.insert_with(|v| {
+            assert!(v.capacity() >= 8, "recycled buffer lost its capacity");
+            v.clear();
+            v.push(9);
+        });
+        assert_eq!(s.get(b).unwrap().as_slice(), &[9]);
+        assert!(s.get(b).unwrap().capacity() >= cap.min(8));
+    }
+
+    #[test]
+    fn high_water_mark_bounds_slot_growth() {
+        let mut s: Slab<u64> = Slab::new();
+        // Churn 10k requests at 16 live: only 16 slots ever exist.
+        let mut live = std::collections::VecDeque::new();
+        for i in 0..10_000u64 {
+            live.push_back(s.insert_with(|v| *v = i));
+            if live.len() > 16 {
+                assert!(s.release(live.pop_front().unwrap()));
+            }
+        }
+        assert_eq!(s.capacity(), 17, "slots bounded by the live high-water mark");
+        assert_eq!(s.len(), 16);
+    }
+
+    #[test]
+    fn secondary_map_tracks_generations() {
+        let mut s: Slab<u32> = Slab::new();
+        let mut side: SecondaryMap<&'static str> = SecondaryMap::new();
+        let a = s.insert_with(|v| *v = 1);
+        assert_eq!(side.insert(a, "first"), None);
+        assert_eq!(side.get(a), Some(&"first"));
+        s.release(a);
+        let b = s.insert_with(|v| *v = 2);
+        assert_eq!(b.index(), a.index());
+        // The stale tenant is invisible under the new key and dropped on
+        // overwrite; the stale key no longer reads or removes anything.
+        assert_eq!(side.get(b), None);
+        assert_eq!(side.insert(b, "second"), None);
+        assert_eq!(side.get(a), None);
+        assert_eq!(side.remove(a), None);
+        assert_eq!(side.remove(b), Some("second"));
+        assert_eq!(side.len(), 0);
+        assert_eq!(side.remove(b), None);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "stale-generation insert"))]
+    fn secondary_map_rejects_stale_insert() {
+        let mut s: Slab<u32> = Slab::new();
+        let mut side: SecondaryMap<&'static str> = SecondaryMap::new();
+        let a = s.insert_with(|v| *v = 1);
+        s.release(a);
+        let b = s.insert_with(|v| *v = 2);
+        side.insert(b, "live");
+        // A stale handle must never clobber the live tenant: debug builds
+        // assert; release builds no-op and drop the value.
+        assert_eq!(side.insert(a, "stale"), None);
+        assert_eq!(side.get(b), Some(&"live"));
+    }
+
+    #[test]
+    fn secondary_map_same_generation_overwrites() {
+        let mut s: Slab<u32> = Slab::new();
+        let mut side: SecondaryMap<u64> = SecondaryMap::new();
+        let a = s.insert_with(|v| *v = 1);
+        assert_eq!(side.insert(a, 10), None);
+        assert_eq!(side.insert(a, 11), Some(10));
+        assert_eq!(side.len(), 1);
+        assert_eq!(side.get(a), Some(&11));
+    }
+}

@@ -22,7 +22,8 @@ pub mod arrival;
 pub mod scenario;
 
 pub use scenario::{
-    AdmissionProfile, Burst, CandidateProfile, Coldstart, Diurnal, Scenario, ScenarioKind, Steady,
+    AdmissionProfile, ArrivalStream, Burst, CandidateProfile, Coldstart, Diurnal, Scenario,
+    ScenarioKind, Steady,
 };
 
 use crate::relay::trigger::BehaviorMeta;
@@ -190,6 +191,14 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<GenRequest> {
     cfg.scenario.as_scenario().generate(cfg)
 }
 
+/// Stream the configured scenario's arrivals lazily, in the exact order
+/// [`generate`] would materialize them (which is itself just a collect of
+/// this stream).  The simulator consumes this instead of a trace vector,
+/// so memory stays O(live refresh bursts) at million-user scale.
+pub fn stream(cfg: &WorkloadConfig) -> ArrivalStream {
+    cfg.scenario.as_scenario().stream(cfg)
+}
+
 /// Deterministic per-request candidate set (order-preserving, deduped):
 /// Zipf-skewed item popularity over the catalog with the scenario's
 /// overlap profile mixed in — hot draws come from the catalog's
@@ -197,27 +206,35 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<GenRequest> {
 /// request-keyed RNG stream independent of the arrival generator, so
 /// enabling candidates never perturbs the trace itself.
 pub fn candidate_set(cfg: &WorkloadConfig, req: &GenRequest) -> Vec<u64> {
-    use std::collections::HashSet;
+    let mut out = Vec::new();
+    candidate_set_into(cfg, req, &mut out);
+    out
+}
+
+/// [`candidate_set`] into a caller-owned buffer (cleared first), so the
+/// per-request hot path reuses one allocation across the whole run.  The
+/// linear-scan dedup is exact for the order-preserving first-occurrence
+/// semantics and allocation-free; candidate sets are tens of items.
+pub fn candidate_set_into(cfg: &WorkloadConfig, req: &GenRequest, out: &mut Vec<u64>) {
+    out.clear();
     if cfg.cand_per_request == 0 {
-        return Vec::new();
+        return;
     }
     let profile = cfg.scenario.candidate_profile();
     let catalog = cfg.cand_catalog.max(1);
     let hot = profile.hot_items.clamp(1, catalog);
     let mut rng = Rng::new(cfg.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xCA9D);
-    let mut out = Vec::with_capacity(cfg.cand_per_request);
-    let mut seen = HashSet::with_capacity(cfg.cand_per_request);
+    out.reserve(cfg.cand_per_request);
     for _ in 0..cfg.cand_per_request {
         let item = if rng.bernoulli(profile.hot_frac) {
             rng.zipf(hot, cfg.cand_zipf_s) - 1
         } else {
             rng.zipf(catalog, cfg.cand_zipf_s) - 1
         };
-        if seen.insert(item) {
+        if !out.contains(&item) {
             out.push(item);
         }
     }
-    out
 }
 
 /// Trace statistics (sanity + tests + EXPERIMENTS.md reporting).

@@ -50,11 +50,20 @@ pub struct AdmissionProfile {
     pub rate_mult_init: f64,
 }
 
-/// A workload scenario: turns a [`WorkloadConfig`] into an arrival trace.
+/// A workload scenario: turns a [`WorkloadConfig`] into an arrival trace
+/// — streamed lazily through [`ArrivalStream`] (the simulator consumes
+/// it request by request, O(live refreshes) memory) or materialized by
+/// [`Scenario::generate`] (which just collects the stream, so both views
+/// are bit-identical by construction).
 pub trait Scenario {
     fn name(&self) -> &'static str;
-    /// Generate the full arrival trace, sorted by `(arrival_us, id)`.
-    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest>;
+    /// The scenario's streaming arrival source, in `(arrival_us, id)`
+    /// order.
+    fn stream(&self, cfg: &WorkloadConfig) -> ArrivalStream;
+    /// Materialize the full arrival trace, sorted by `(arrival_us, id)`.
+    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest> {
+        self.stream(cfg).collect()
+    }
 }
 
 /// Scenario selector carried in [`WorkloadConfig`] (CLI: `--scenario`).
@@ -178,38 +187,172 @@ impl ScenarioKind {
     }
 }
 
-/// Emit one base request plus its rapid-refresh burst (exactly the
-/// legacy generator's per-arrival body, so `steady` stays bit-identical).
-fn push_with_refreshes(
-    cfg: &WorkloadConfig,
-    rng: &mut Rng,
-    id: &mut u64,
-    arrival: u64,
-    user: u64,
-    out: &mut Vec<GenRequest>,
-) {
-    let prefix_len = user_prefix_len(cfg, user);
-    out.push(GenRequest { id: *id, arrival_us: arrival, user, prefix_len, is_refresh: false });
-    *id += 1;
-    // Rapid-refresh bursts: same user again shortly after — the
-    // short-term cross-request reuse the DRAM tier targets.
-    if prefix_len > cfg.long_threshold && rng.bernoulli(cfg.refresh_prob) {
-        let burst = 1 + rng.range(0, cfg.refresh_burst_max);
-        let mut rt = arrival;
-        for _ in 0..burst {
-            rt += rng.range(cfg.refresh_gap_us.0 as usize, cfg.refresh_gap_us.1 as usize) as u64;
-            if rt >= cfg.duration_us {
-                break;
+/// One scenario's base-arrival process: the `(arrival_us, user)` pairs of
+/// the non-refresh requests, in arrival order, consuming the stream's
+/// shared RNG in exactly the order the batch generators did — that RNG
+/// discipline is what keeps streamed traces bit-identical to the legacy
+/// materialized ones (pinned by `steady_matches_legacy_generator_bit_for_bit`).
+enum BaseProcess {
+    Steady(Poisson),
+    Diurnal(ModulatedPoisson<Box<dyn Fn(f64) -> f64>>),
+    Burst { arrivals: ModulatedPoisson<Box<dyn Fn(f64) -> f64>>, start: u64, end: u64, hot: u64 },
+    Coldstart { arrivals: Poisson, cold_frac: f64, cold_next: u64 },
+}
+
+impl BaseProcess {
+    fn next(&mut self, rng: &mut Rng, cfg: &WorkloadConfig) -> Option<(u64, u64)> {
+        match self {
+            BaseProcess::Steady(arrivals) => {
+                if arrivals.time_us() >= cfg.duration_us {
+                    return None;
+                }
+                let arrival = arrivals.next(rng);
+                if arrival >= cfg.duration_us {
+                    return None;
+                }
+                Some((arrival, rng.zipf(cfg.num_users, cfg.zipf_s) - 1))
             }
-            out.push(GenRequest { id: *id, arrival_us: rt, user, prefix_len, is_refresh: true });
-            *id += 1;
+            BaseProcess::Diurnal(arrivals) => {
+                let arrival = arrivals.next(rng, cfg.duration_us)?;
+                Some((arrival, rng.zipf(cfg.num_users, cfg.zipf_s) - 1))
+            }
+            BaseProcess::Burst { arrivals, start, end, hot } => {
+                let arrival = arrivals.next(rng, cfg.duration_us)?;
+                let user = if arrival >= *start && arrival < *end {
+                    rng.zipf(*hot, cfg.zipf_s) - 1
+                } else {
+                    rng.zipf(cfg.num_users, cfg.zipf_s) - 1
+                };
+                Some((arrival, user))
+            }
+            BaseProcess::Coldstart { arrivals, cold_frac, cold_next } => {
+                if arrivals.time_us() >= cfg.duration_us {
+                    return None;
+                }
+                let arrival = arrivals.next(rng);
+                if arrival >= cfg.duration_us {
+                    return None;
+                }
+                let user = if rng.bernoulli(*cold_frac) {
+                    let u = *cold_next;
+                    *cold_next += 1;
+                    u
+                } else {
+                    rng.zipf(cfg.num_users, cfg.zipf_s) - 1
+                };
+                Some((arrival, user))
+            }
         }
     }
 }
 
-fn finish(mut out: Vec<GenRequest>) -> Vec<GenRequest> {
-    out.sort_by_key(|r| (r.arrival_us, r.id));
-    out
+/// Pending-heap entry ordered by the trace sort key `(arrival_us, id)`.
+#[derive(PartialEq, Eq)]
+struct PendingReq(GenRequest);
+
+impl Ord for PendingReq {
+    fn cmp(&self, other: &PendingReq) -> std::cmp::Ordering {
+        (self.0.arrival_us, self.0.id).cmp(&(other.0.arrival_us, other.0.id))
+    }
+}
+
+impl PartialOrd for PendingReq {
+    fn partial_cmp(&self, other: &PendingReq) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Lazy arrival generator: yields the scenario's requests one at a time
+/// in `(arrival_us, id)` order — the exact order of the materialized
+/// trace — holding only the not-yet-due refresh bursts in memory
+/// (O(live) instead of O(trace) at million-user scale).
+///
+/// Why the emission order is exact: base arrivals are generated in
+/// non-decreasing time order, ids in generation order, and a refresh is
+/// generated (with an id between its base's and the next base's) strictly
+/// at or after its base's arrival.  So once a base at time `t` has been
+/// generated, every pending request with `arrival_us <= t` precedes all
+/// not-yet-generated requests in `(arrival_us, id)` order — those all
+/// have `arrival_us >= t` *and* larger ids — and can be emitted.
+pub struct ArrivalStream {
+    cfg: WorkloadConfig,
+    rng: Rng,
+    base: BaseProcess,
+    pending: std::collections::BinaryHeap<std::cmp::Reverse<PendingReq>>,
+    next_id: u64,
+    last_base_t: u64,
+    exhausted: bool,
+}
+
+impl ArrivalStream {
+    fn new(cfg: &WorkloadConfig, base: BaseProcess) -> ArrivalStream {
+        ArrivalStream {
+            cfg: cfg.clone(),
+            rng: Rng::new(cfg.seed),
+            base,
+            pending: std::collections::BinaryHeap::new(),
+            next_id: 0,
+            last_base_t: 0,
+            exhausted: false,
+        }
+    }
+
+    fn emit(&mut self, arrival_us: u64, user: u64, prefix_len: usize, is_refresh: bool) {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.push(std::cmp::Reverse(PendingReq(GenRequest {
+            id,
+            arrival_us,
+            user,
+            prefix_len,
+            is_refresh,
+        })));
+    }
+
+    /// Generate one base request plus its rapid-refresh burst — exactly
+    /// the legacy generator's per-arrival body, same RNG call order.
+    fn refill(&mut self) {
+        let Some((arrival, user)) = self.base.next(&mut self.rng, &self.cfg) else {
+            self.exhausted = true;
+            return;
+        };
+        self.last_base_t = arrival;
+        let prefix_len = user_prefix_len(&self.cfg, user);
+        self.emit(arrival, user, prefix_len, false);
+        // Rapid-refresh bursts: same user again shortly after — the
+        // short-term cross-request reuse the DRAM tier targets.
+        if prefix_len > self.cfg.long_threshold && self.rng.bernoulli(self.cfg.refresh_prob) {
+            let burst = 1 + self.rng.range(0, self.cfg.refresh_burst_max);
+            let mut rt = arrival;
+            for _ in 0..burst {
+                rt += self
+                    .rng
+                    .range(self.cfg.refresh_gap_us.0 as usize, self.cfg.refresh_gap_us.1 as usize)
+                    as u64;
+                if rt >= self.cfg.duration_us {
+                    break;
+                }
+                self.emit(rt, user, prefix_len, true);
+            }
+        }
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = GenRequest;
+
+    fn next(&mut self) -> Option<GenRequest> {
+        loop {
+            if let Some(std::cmp::Reverse(min)) = self.pending.peek() {
+                if self.exhausted || min.0.arrival_us <= self.last_base_t {
+                    return self.pending.pop().map(|std::cmp::Reverse(p)| p.0);
+                }
+            } else if self.exhausted {
+                return None;
+            }
+            self.refill();
+        }
+    }
 }
 
 /// Today's behaviour: homogeneous Poisson + Zipf popularity.
@@ -220,20 +363,8 @@ impl Scenario for Steady {
         "steady"
     }
 
-    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest> {
-        let mut rng = Rng::new(cfg.seed);
-        let mut out = Vec::new();
-        let mut arrivals = Poisson::new(cfg.qps);
-        let mut id = 0u64;
-        while arrivals.time_us() < cfg.duration_us {
-            let arrival = arrivals.next(&mut rng);
-            if arrival >= cfg.duration_us {
-                break;
-            }
-            let user = rng.zipf(cfg.num_users, cfg.zipf_s) - 1;
-            push_with_refreshes(cfg, &mut rng, &mut id, arrival, user, &mut out);
-        }
-        finish(out)
+    fn stream(&self, cfg: &WorkloadConfig) -> ArrivalStream {
+        ArrivalStream::new(cfg, BaseProcess::Steady(Poisson::new(cfg.qps)))
     }
 }
 
@@ -248,21 +379,17 @@ impl Scenario for Diurnal {
         "diurnal"
     }
 
-    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest> {
+    fn stream(&self, cfg: &WorkloadConfig) -> ArrivalStream {
         let amp = self.amplitude.clamp(0.0, 1.0);
         let period = self.period_us.max(1) as f64;
         let qps = cfg.qps;
-        let mut rng = Rng::new(cfg.seed);
-        let mut out = Vec::new();
-        let mut arrivals = ModulatedPoisson::new(qps * (1.0 + amp), move |t_us| {
-            qps * (1.0 + amp * (2.0 * std::f64::consts::PI * t_us / period).sin())
-        });
-        let mut id = 0u64;
-        while let Some(arrival) = arrivals.next(&mut rng, cfg.duration_us) {
-            let user = rng.zipf(cfg.num_users, cfg.zipf_s) - 1;
-            push_with_refreshes(cfg, &mut rng, &mut id, arrival, user, &mut out);
-        }
-        finish(out)
+        let arrivals = ModulatedPoisson::new(
+            qps * (1.0 + amp),
+            Box::new(move |t_us: f64| {
+                qps * (1.0 + amp * (2.0 * std::f64::consts::PI * t_us / period).sin())
+            }) as Box<dyn Fn(f64) -> f64>,
+        );
+        ArrivalStream::new(cfg, BaseProcess::Diurnal(arrivals))
     }
 }
 
@@ -280,32 +407,24 @@ impl Scenario for Burst {
         "burst"
     }
 
-    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest> {
+    fn stream(&self, cfg: &WorkloadConfig) -> ArrivalStream {
         let start = (cfg.duration_us as f64 * self.start_frac.clamp(0.0, 1.0)) as u64;
         let end = start + (cfg.duration_us as f64 * self.dur_frac.clamp(0.0, 1.0)) as u64;
         let magnitude = self.magnitude.max(1.0);
         let qps = cfg.qps;
-        let mut rng = Rng::new(cfg.seed);
-        let mut out = Vec::new();
-        let mut arrivals = ModulatedPoisson::new(qps * magnitude, move |t_us| {
-            let t = t_us as u64;
-            if t >= start && t < end {
-                qps * magnitude
-            } else {
-                qps
-            }
-        });
+        let arrivals = ModulatedPoisson::new(
+            qps * magnitude,
+            Box::new(move |t_us: f64| {
+                let t = t_us as u64;
+                if t >= start && t < end {
+                    qps * magnitude
+                } else {
+                    qps
+                }
+            }) as Box<dyn Fn(f64) -> f64>,
+        );
         let hot = self.hot_users.clamp(1, cfg.num_users);
-        let mut id = 0u64;
-        while let Some(arrival) = arrivals.next(&mut rng, cfg.duration_us) {
-            let user = if arrival >= start && arrival < end {
-                rng.zipf(hot, cfg.zipf_s) - 1
-            } else {
-                rng.zipf(cfg.num_users, cfg.zipf_s) - 1
-            };
-            push_with_refreshes(cfg, &mut rng, &mut id, arrival, user, &mut out);
-        }
-        finish(out)
+        ArrivalStream::new(cfg, BaseProcess::Burst { arrivals, start, end, hot })
     }
 }
 
@@ -321,28 +440,15 @@ impl Scenario for Coldstart {
         "coldstart"
     }
 
-    fn generate(&self, cfg: &WorkloadConfig) -> Vec<GenRequest> {
-        let cold_frac = self.cold_frac.clamp(0.0, 1.0);
-        let mut rng = Rng::new(cfg.seed);
-        let mut out = Vec::new();
-        let mut arrivals = Poisson::new(cfg.qps);
-        let mut id = 0u64;
-        let mut cold_next = cfg.num_users; // fresh ids, disjoint from warm
-        while arrivals.time_us() < cfg.duration_us {
-            let arrival = arrivals.next(&mut rng);
-            if arrival >= cfg.duration_us {
-                break;
-            }
-            let user = if rng.bernoulli(cold_frac) {
-                let u = cold_next;
-                cold_next += 1;
-                u
-            } else {
-                rng.zipf(cfg.num_users, cfg.zipf_s) - 1
-            };
-            push_with_refreshes(cfg, &mut rng, &mut id, arrival, user, &mut out);
-        }
-        finish(out)
+    fn stream(&self, cfg: &WorkloadConfig) -> ArrivalStream {
+        ArrivalStream::new(
+            cfg,
+            BaseProcess::Coldstart {
+                arrivals: Poisson::new(cfg.qps),
+                cold_frac: self.cold_frac.clamp(0.0, 1.0),
+                cold_next: cfg.num_users, // fresh ids, disjoint from warm
+            },
+        )
     }
 }
 
@@ -387,6 +493,32 @@ mod tests {
         assert!(burst.headroom_init < steady.headroom_init);
         assert!(cold.headroom_init > steady.headroom_init);
         assert!(cold.rate_mult_init < steady.rate_mult_init);
+    }
+
+    #[test]
+    fn stream_emits_in_trace_order_with_contiguous_ids() {
+        // The sim consumes arrivals lazily; the stream's emission order
+        // must equal the materialized trace's `(arrival_us, id)` sort
+        // order exactly, with no request dropped or duplicated — the
+        // flush rule (emit once the base clock passes a pending refresh)
+        // is what this pins.
+        for name in ScenarioKind::NAMES {
+            let kind = ScenarioKind::parse(name).unwrap();
+            let mut c = cfg(kind);
+            c.refresh_prob = 0.7; // dense refresh bursts stress the heap
+            let streamed: Vec<GenRequest> = kind.as_scenario().stream(&c).collect();
+            assert!(!streamed.is_empty());
+            let mut sorted = streamed.clone();
+            sorted.sort_by_key(|r| (r.arrival_us, r.id));
+            assert_eq!(streamed, sorted, "{name}: stream out of (arrival, id) order");
+            let mut ids: Vec<u64> = streamed.iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            assert_eq!(
+                ids,
+                (0..streamed.len() as u64).collect::<Vec<_>>(),
+                "{name}: ids must be contiguous — nothing dropped in flight"
+            );
+        }
     }
 
     #[test]

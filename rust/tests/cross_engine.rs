@@ -224,9 +224,9 @@ fn coordinator_reload_abort_falls_back_joined_waiters() {
     // that landed on the same special instance (affinity-hashed).
     let mut seeded: Vec<(u64, usize)> = Vec::new();
     for user in 0..32u64 {
-        let req = user + 1;
         let t = user * 50_000; // spaced so admission rate limits never bind
-        assert!(coord.on_arrival(t, req, user, 4096, &[]));
+        let (req, wants) = coord.on_arrival(t, user, 4096, &[]);
+        assert!(wants);
         if let SignalAction::Produce { instance, user, .. } = coord.on_trigger_check(t, req) {
             coord.on_psi_ready(t, instance, user, Some(()));
         }
@@ -249,10 +249,9 @@ fn coordinator_reload_abort_falls_back_joined_waiters() {
 
     // Two racing rank requests (pre-infer delayed, §3.4 out-of-order):
     // A starts the only reload slot, B queues behind it.
-    let (ra, rb) = (1000u64, 1001u64);
     let now = 2_000_000;
-    assert!(coord.on_arrival(now, ra, a, 4096, &[]));
-    assert!(coord.on_arrival(now, rb, b, 4096, &[]));
+    let (ra, _) = coord.on_arrival(now, a, 4096, &[]);
+    let (rb, _) = coord.on_arrival(now, b, 4096, &[]);
     assert_eq!(coord.on_stage_done(now, ra, Stage::Preproc), Some(inst));
     assert_eq!(coord.on_stage_done(now, rb, Stage::Preproc), Some(inst));
     let RankAction::StartReload { bytes } = coord.on_rank_start(now, ra) else {
@@ -298,29 +297,30 @@ fn coordinator_failed_reload_payload_falls_back() {
     let kv = cfg.spec.kv_bytes_for(4096);
 
     // Seed one user's DRAM entry.
-    assert!(coord.on_arrival(0, 1, 7, 4096, &[]));
-    if let SignalAction::Produce { instance, user, .. } = coord.on_trigger_check(0, 1) {
+    let (r1, wants) = coord.on_arrival(0, 7, 4096, &[]);
+    assert!(wants);
+    if let SignalAction::Produce { instance, user, .. } = coord.on_trigger_check(0, r1) {
         coord.on_psi_ready(0, instance, user, Some(()));
     }
-    coord.on_stage_done(0, 1, Stage::Preproc).unwrap();
-    let _ = coord.on_rank_start(0, 1);
-    let _ = coord.rank_compute(0, 1);
-    let done = coord.on_rank_done(0, 1, kv);
+    coord.on_stage_done(0, r1, Stage::Preproc).unwrap();
+    let _ = coord.on_rank_start(0, r1);
+    let _ = coord.rank_compute(0, r1);
+    let done = coord.on_rank_done(0, r1, kv);
     let inst = done.instance;
     assert!(coord.complete_spill(inst, 7, done.spill.expect("fresh ψ spills"), ()));
 
     // A refresh rank request starts the reload; the transfer fails.
-    assert!(coord.on_arrival(400_000, 2, 7, 4096, &[]));
-    coord.on_stage_done(400_000, 2, Stage::Preproc).unwrap();
-    let RankAction::StartReload { bytes } = coord.on_rank_start(400_000, 2) else {
+    let (r2, _) = coord.on_arrival(400_000, 7, 4096, &[]);
+    coord.on_stage_done(400_000, r2, Stage::Preproc).unwrap();
+    let RankAction::StartReload { bytes } = coord.on_rank_start(400_000, r2) else {
         panic!("expected reload");
     };
     let res = coord.on_reload_done(400_500, inst, 7, None, bytes);
     assert!(!res.installed);
-    assert_eq!(res.woken, vec![2]);
-    let rc = coord.rank_compute(400_500, 2);
+    assert_eq!(res.woken, vec![r2]);
+    let rc = coord.rank_compute(400_500, r2);
     assert!(!rc.cached && rc.payload.is_none());
-    let d = coord.on_rank_done(400_500, 2, kv);
+    let d = coord.on_rank_done(400_500, r2, kv);
     assert_eq!(d.outcome, CacheOutcome::Fallback);
 }
 
@@ -428,6 +428,27 @@ fn segments_agree_under_nondefault_tier_policies() {
             serial.segments
         );
     }
+}
+
+/// Tentpole (parallel evaluation plane): the figure grid's rows must be
+/// byte-identical at any `--jobs` count — every (scenario, mode) cell
+/// builds its own seeded simulator, and the executor merges results in
+/// declaration order, so parallelism may only change wall-clock time.
+#[test]
+fn figure_grid_rows_byte_identical_across_jobs() {
+    use relaygr::util::cli::Args;
+    let mk = |jobs: &str| {
+        Args::parse(
+            ["test", "figure", "--quick", "--qps", "40", "--jobs", jobs]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap()
+    };
+    let serial = relaygr::figures::scenarios::grid_rows(&mk("1")).expect("serial grid runs");
+    let parallel = relaygr::figures::scenarios::grid_rows(&mk("4")).expect("parallel grid runs");
+    assert_eq!(serial.len(), 8, "4 scenarios × 2 modes");
+    assert_eq!(serial, parallel, "figure rows must not depend on the job count");
 }
 
 /// The real thing, when artifacts exist: a 1-instance, 1-slot live engine
