@@ -76,6 +76,29 @@ fn main() {
         hbm.evict(user);
     }));
 
+    // --- sharded per-user map (trigger window / single-flight backing) ------
+    // The coordinator-stack per-user maps are ShardedMaps since the
+    // trace-scale pass; the steady-state remove→insert→get_mut cycle on
+    // a warmed key set must stay allocation-free (shards retain their
+    // high-water capacity).
+    {
+        let mut map: relaygr::util::sharded::ShardedMap<(u64, usize)> =
+            relaygr::util::sharded::ShardedMap::new();
+        for user in 0..4096u64 {
+            map.insert(user, (user, 32 << 20));
+        }
+        let mut u = 0u64;
+        results.push(bench("sharded/remove+insert+get_mut", 100, 20_000, || {
+            u += 1;
+            let user = u % 4096;
+            let v = map.remove(user);
+            map.insert(user, v.unwrap_or((u, 32 << 20)));
+            if let Some(slot) = map.get_mut(user) {
+                slot.0 = u;
+            }
+        }));
+    }
+
     // --- hierarchy hit lookup (the pseudo-pre-infer front door) -------------
     // Resident Ready entries with an effectively-infinite lease: every
     // probe is the pure lookup path — counter bumps only, no state
@@ -245,9 +268,12 @@ fn main() {
     // The zero-allocation hot-path contract: the per-request control
     // plane ops must show no allocator traffic in steady state (warm-up
     // grows every pool/table to its high-water mark first).
-    for name in
-        ["router/route_special+complete", "trigger/decide+release", "hierarchy/lookup_hit"]
-    {
+    for name in [
+        "router/route_special+complete",
+        "trigger/decide+release",
+        "hierarchy/lookup_hit",
+        "sharded/remove+insert+get_mut",
+    ] {
         let r = results.iter().find(|r| r.name == name).expect("hot op benchmarked");
         assert_eq!(
             r.allocs_per_op,

@@ -9,11 +9,18 @@
 //!   scenarios × 2 modes, quick shape) through the deterministic
 //!   parallel executor at 1 vs N jobs, with the byte-identical-rows
 //!   check run inline and `speedup_vs_jobs1` recorded on the parallel
-//!   row.
+//!   row;
+//! * `simloop/scale_replay_2000qps` — the trace-scale arm: record a
+//!   binary trace, then replay it through the simulator from disk,
+//!   reporting `events_per_sec` / `requests_per_sec`.  The request count
+//!   is capped by `RELAYGR_BENCH_SCALE` (CI sets a small cap; locally it
+//!   defaults to 200k requests over a 1M-user population).
 //!
 //! Emits `BENCH_simloop.json` (and `results/bench/simloop.json`); runs
 //! in CI next to the other suites.  `--jobs N` overrides the parallel
-//! arm's job count (default 4).
+//! arm's job count (default 4).  `events_per_sec` on the steady and
+//! scale arms is the committed perf-trajectory metric (see
+//! `bench/trajectory/`).
 
 #[path = "harness.rs"]
 mod harness;
@@ -70,6 +77,47 @@ fn main() {
         "simloop/steady_2s_300qps", events as f64 / (r.mean_us / 1e6), events, completed
     );
     results.push(r);
+
+    // --- trace-scale replay: events/sec at population scale ------------------
+    // Record once, replay from disk — the same path the CI scale-smoke
+    // job and any 100M-request run use.  RELAYGR_BENCH_SCALE caps the
+    // request count so CI stays fast while local runs measure at scale.
+    let scale_requests: u64 = std::env::var("RELAYGR_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200_000);
+    let scale_qps = 2_000.0;
+    let scale_wl = WorkloadConfig {
+        qps: scale_qps,
+        duration_us: (scale_requests as f64 / scale_qps * 1e6) as u64,
+        num_users: 1_000_000,
+        ..Default::default()
+    };
+    let trace_path = std::env::temp_dir().join("relaygr_bench_scale.trace");
+    let trace_path = trace_path.to_str().expect("utf-8 temp path");
+    let (recorded, _) =
+        relaygr::workload::trace::record(trace_path, &scale_wl).expect("scale trace records");
+    let replay_wl = relaygr::workload::trace::open_replay(trace_path).expect("trace opens");
+    let scale_cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) });
+    let mut events = 0u64;
+    let mut completed = 0u64;
+    let mut rs = bench("simloop/scale_replay_2000qps", 0, 3, || {
+        let m = relaygr::cluster::run_sim(scale_cfg.clone(), &replay_wl).expect("replay runs");
+        events = m.sim_events;
+        completed = m.completed;
+        std::hint::black_box(&m);
+    });
+    let events_per_sec = events as f64 / (rs.mean_us / 1e6);
+    rs.extra.push(("trace_requests".into(), recorded as f64));
+    rs.extra.push(("events".into(), events as f64));
+    rs.extra.push(("events_per_sec".into(), events_per_sec));
+    rs.extra.push(("requests_per_sec".into(), completed as f64 / (rs.mean_us / 1e6)));
+    println!(
+        "{:<44} {:>20.0} events/s ({} events, {} of {} requests)",
+        "simloop/scale_replay_2000qps", events_per_sec, events, completed, recorded
+    );
+    let _ = std::fs::remove_file(trace_path);
+    results.push(rs);
 
     // --- figure grid: serial vs parallel wall-clock -------------------------
     let mut serial_rows = Vec::new();

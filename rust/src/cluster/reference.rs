@@ -20,7 +20,7 @@ use crate::relay::hierarchy::HierarchyStats;
 use crate::relay::pipeline::CacheOutcome;
 use crate::relay::segment::SegmentStats;
 use crate::relay::trigger::TriggerStats;
-use crate::workload::{candidate_set_into, generate, GenRequest, WorkloadConfig};
+use crate::workload::{candidate_set_into, stream, GenRequest, WorkloadConfig};
 
 /// One serialized run: per-request outcomes (sorted by request id), the
 /// analytic rank-compute cost summed over the coordinator's decisions
@@ -40,25 +40,27 @@ pub struct ReferenceRun {
 /// Drive `trace` through `coord` serially.  `rank_cost` receives
 /// `(cached, prefix_len, segments_skipped)` per request; candidate sets
 /// come from the same workload derivation the other engines share.
+/// The trace is consumed as a stream, so replaying a recorded trace
+/// holds O(1) request state beyond the outcome log itself.
 pub fn drive_reference(
     mut coord: RelayCoordinator<()>,
-    trace: &[GenRequest],
+    trace: impl IntoIterator<Item = GenRequest>,
     wl: &WorkloadConfig,
     kv_bytes: impl Fn(usize) -> usize,
     rank_cost: impl Fn(bool, usize, usize) -> f64,
 ) -> Result<ReferenceRun> {
-    let mut outcomes = Vec::with_capacity(trace.len());
+    let mut outcomes = Vec::new();
     let mut outcome_counts = [0u64; 5];
     let mut rank_us_sum = 0.0;
     let mut cands: Vec<u64> = Vec::new();
     for req in trace {
         let now = req.arrival_us;
         if coord.segments_enabled() {
-            candidate_set_into(wl, req, &mut cands);
+            candidate_set_into(wl, &req, &mut cands);
         } else {
             cands.clear();
         }
-        let (handle, wants_trigger) = coord.on_arrival(now, req.user, req.prefix_len, &cands);
+        let (handle, wants_trigger) = coord.on_arrival(now, req.uid(), req.plen(), &cands);
         if wants_trigger {
             match coord.on_trigger_check(now, handle) {
                 SignalAction::Produce { instance, user, .. } => {
@@ -77,7 +79,7 @@ pub fn drive_reference(
         match coord.on_rank_start(now, handle) {
             RankAction::Proceed { .. } => {}
             RankAction::StartReload { bytes } => {
-                coord.on_reload_done(now, inst, req.user, Some(()), bytes);
+                coord.on_reload_done(now, inst, req.uid(), Some(()), bytes);
             }
             // With an instantly-completing host nothing can be pending; a
             // wait here means a coordinator invariant broke — fail rather
@@ -86,17 +88,17 @@ pub fn drive_reference(
         }
         let rc = coord.rank_compute(now, handle);
         let skipped = rc.segments.map(|p| p.skipped()).unwrap_or(0);
-        rank_us_sum += rank_cost(rc.cached, req.prefix_len, skipped);
-        let done = coord.on_rank_done(now, handle, kv_bytes(req.prefix_len));
+        rank_us_sum += rank_cost(rc.cached, req.plen(), skipped);
+        let done = coord.on_rank_done(now, handle, kv_bytes(req.plen()));
         if let Some(bytes) = done.spill {
             coord.complete_spill(done.instance, done.user, bytes, ());
         }
         outcome_counts[outcome_index(done.outcome)] += 1;
-        outcomes.push((req.id, done.outcome));
+        outcomes.push((req.rid(), done.outcome));
     }
     outcomes.sort_by_key(|&(id, _)| id);
     Ok(ReferenceRun {
-        mean_rank_us: rank_us_sum / trace.len().max(1) as f64,
+        mean_rank_us: rank_us_sum / outcomes.len().max(1) as f64,
         segments: coord.segment_stats(),
         hierarchy: coord.hierarchy_stats(),
         hbm: coord.hbm_stats(),
@@ -120,7 +122,7 @@ pub fn run_reference(cfg: &SimConfig, wl: &WorkloadConfig) -> Result<ReferenceRu
     let hw = cfg.hw.clone();
     drive_reference(
         coord,
-        &generate(wl),
+        stream(wl),
         wl,
         |p| spec.kv_bytes_for(p),
         move |cached, p, skipped| {

@@ -86,10 +86,16 @@ pub struct SimConfig {
     pub segment_frac: f64,
     /// Staleness bound for cached candidate segments.
     pub seg_ttl_us: u64,
-    /// Record the per-request `(id, CacheOutcome)` log in [`RunMetrics`]
+    /// Record the bitpacked per-request outcome log in [`RunMetrics`]
     /// (cross-engine equivalence tests; off by default — it grows with
-    /// the trace).
+    /// the trace, 8 bytes/request).
     pub log_outcomes: bool,
+    /// Streaming cross-engine compare: check each completed request's
+    /// outcome against this reference table (see
+    /// [`crate::metrics::outcome_table`]) instead of logging — bounded
+    /// memory at any trace length.  Takes precedence over
+    /// `log_outcomes`.
+    pub outcome_check: Option<std::sync::Arc<Vec<u8>>>,
     pub seed: u64,
 }
 
@@ -125,6 +131,7 @@ impl SimConfig {
             segment_frac: 0.0,
             seg_ttl_us: 3_000_000,
             log_outcomes: false,
+            outcome_check: None,
             seed: 7,
         }
     }
@@ -308,7 +315,13 @@ impl Sim {
             StageSampler::from_mean_p99(cfg.pipeline.preproc_mean_us, cfg.pipeline.preproc_p99_us);
         let mut metrics = RunMetrics::new(cfg.pipeline.pipeline_slo_us);
         metrics.scenario = workload.scenario.label().to_string();
-        metrics.log_outcomes = cfg.log_outcomes;
+        metrics.outcomes = if let Some(table) = &cfg.outcome_check {
+            crate::metrics::OutcomeRecorder::check(table.clone())
+        } else if cfg.log_outcomes {
+            crate::metrics::OutcomeRecorder::log()
+        } else {
+            crate::metrics::OutcomeRecorder::Off
+        };
         let end_us = workload.duration_us;
         Ok(Sim {
             rng: Rng::new(cfg.seed),
@@ -397,7 +410,7 @@ impl Sim {
             self.cand_buf.clear();
         }
         let (req, wants_trigger) =
-            self.coord.on_arrival(now, gen.user, gen.prefix_len, &self.cand_buf);
+            self.coord.on_arrival(now, gen.uid(), gen.plen(), &self.cand_buf);
         self.states.insert(
             req,
             ReqState {
@@ -503,7 +516,7 @@ impl Sim {
             RankAction::StartReload { bytes } => {
                 let (inst, user) = {
                     let st = self.states.get(req).unwrap();
-                    (st.rank_instance, st.gen.user)
+                    (st.rank_instance, st.gen.uid())
                 };
                 let server = self.server_of(inst);
                 let dur = self.cfg.hw.load_us(bytes);
@@ -566,7 +579,7 @@ impl Sim {
         if self.coord.is_cached(req) {
             spec.incr_len + spec.num_items
         } else {
-            self.states.get(req).unwrap().gen.prefix_len + spec.incr_len + spec.num_items
+            self.states.get(req).unwrap().gen.plen() + spec.incr_len + spec.num_items
         }
     }
 
@@ -582,7 +595,7 @@ impl Sim {
     fn on_rank_xfer_done(&mut self, now: u64, req: ReqId) {
         let (inst, prefix_len) = {
             let st = self.states.get(req).unwrap();
-            (st.rank_instance, st.gen.prefix_len)
+            (st.rank_instance, st.gen.plen())
         };
         // Consume ψ at execution start; segments the plan reuses (or
         // joins — the producer's execution pays) trim the rank compute.
@@ -603,7 +616,7 @@ impl Sim {
 
     fn on_rank_exec_done(&mut self, now: u64, req: ReqId) {
         let st = self.states.remove(req).unwrap();
-        let kv = self.cfg.spec.kv_bytes_for(st.gen.prefix_len);
+        let kv = self.cfg.spec.kv_bytes_for(st.gen.plen());
         let done = self.coord.on_rank_done(now, req, kv);
         // Spill freshly produced caches to DRAM for short-term reuse (off
         // the critical path; occupies the PCIe link).
@@ -615,9 +628,9 @@ impl Sim {
             }
         }
         let lc = Lifecycle {
-            request: st.gen.id,
-            user: st.gen.user,
-            prefix_len: st.gen.prefix_len,
+            request: st.gen.rid(),
+            user: st.gen.uid(),
+            prefix_len: st.gen.plen(),
             arrival_us: st.gen.arrival_us,
             retrieval_done_us: st.retrieval_done,
             preproc_done_us: st.preproc_done,

@@ -223,6 +223,18 @@ pub fn workload_config(args: &Args) -> Result<WorkloadConfig> {
     wl.qps = args.get_f64("qps", wl.qps)?;
     wl.duration_us = (args.get_f64("duration-s", wl.duration_us as f64 / 1e6)? * 1e6) as u64;
     wl.num_users = args.get_u64("users", wl.num_users)?;
+    // Requests carry 32-bit user ids, and the coldstart scenario mints
+    // cold users *above* `num_users` — cap the base population at 2^31 so
+    // minted ids can never silently truncate.  Reject, don't clamp: a
+    // clamped population is a mislabeled experiment.
+    const MAX_USERS: u64 = 1 << 31;
+    if wl.num_users > MAX_USERS {
+        bail!(
+            "--users {} exceeds the supported maximum {MAX_USERS} (requests carry \
+             32-bit user ids; coldstart mints cold users above the base population)",
+            wl.num_users
+        );
+    }
     wl.long_frac = args.get_f64("long-frac", wl.long_frac)?;
     wl.long_threshold = args.get_usize("long-threshold", wl.long_threshold)?;
     wl.max_prefix = args.get_usize("max-prefix", wl.max_prefix)?;
@@ -363,6 +375,18 @@ mod tests {
         assert_eq!(stack.tier_stack().len(), 2);
         assert_eq!(stack.tier_stack()[1].policy, EvictPolicy::CostAware);
         assert!(sim_config(&args(&["figure", "--dram-policy", "mru"]), mode).is_err());
+    }
+
+    #[test]
+    fn user_population_beyond_u32_budget_is_rejected() {
+        // The cap itself is accepted...
+        let ok = args(&["figure", "--users", "2147483648"]);
+        assert_eq!(workload_config(&ok).unwrap().num_users, 1 << 31);
+        // ...one past it is an error naming the id width, never a
+        // silently truncated population.
+        let bad = args(&["figure", "--users", "2147483649"]);
+        let err = workload_config(&bad).unwrap_err().to_string();
+        assert!(err.contains("32-bit"), "unexpected error: {err}");
     }
 
     #[test]

@@ -107,7 +107,7 @@ pub fn admission(args: &Args) -> Result<()> {
         cfg.admission.mode = mode;
         let m: RunMetrics = sim("admission", cfg.clone(), &wl)?;
         let serial = run_reference(&cfg, &wl)?;
-        let mut sim_log = m.outcome_log.clone();
+        let mut sim_log = m.outcome_log();
         sim_log.sort_by_key(|&(id, _)| id);
         ensure!(
             sim_log == serial.outcomes,

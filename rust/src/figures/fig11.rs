@@ -1,6 +1,11 @@
 //! Fig. 11 — effectiveness of RelayGR (Q1): maximum supported sequence
 //! length, tail latency under concurrency, component breakdown, and
 //! SLO-compliant throughput.
+//!
+//! Every panel's cells are independent seeded runs, so each sweep runs
+//! on the deterministic `--jobs` executor; cross-cell derivations (the
+//! `vs_baseline` ratios) happen after the declaration-order merge, so
+//! output is byte-identical at any job count.
 
 use anyhow::Result;
 
@@ -8,6 +13,7 @@ use crate::cluster::SimConfig;
 use crate::figures::common::{self, Table};
 use crate::metrics::slo;
 use crate::util::cli::Args;
+use crate::util::parallel;
 
 /// Fig. 11a: max supported sequence length per variant (paper: RelayGR up
 /// to 1.5× baseline; DRAM reuse extends it further).
@@ -19,7 +25,6 @@ pub fn fig11a(args: &Args) -> Result<()> {
         "maximum supported sequence length (P99 ≤ 135 ms, success ≥ 99.9%)",
         &["variant", "max_seq_len", "dram_hit", "vs_baseline"],
     );
-    let mut baseline_len = 0.0;
     // The last row models the paper's high-hit-rate regime (2–4 TB DRAM →
     // 50–100% measured hits): heavy rapid-refresh reuse.
     let mut variants: Vec<(crate::relay::baseline::Mode, f64, &str)> = common::standard_modes()
@@ -33,7 +38,9 @@ pub fn fig11a(args: &Args) -> Result<()> {
         0.95,
         " (high reuse)",
     ));
-    for (mode, refresh_prob, suffix) in variants {
+    let jobs = parallel::jobs_from_args(args)?;
+    let cells = parallel::map_indexed(jobs, variants.len(), |i| -> Result<(String, f64, f64)> {
+        let (mode, refresh_prob, suffix) = variants[i];
         let cfg = SimConfig::standard(mode);
         let mut last_hit = 0.0;
         let search = slo::max_supported_len(
@@ -47,14 +54,18 @@ pub fn fig11a(args: &Args) -> Result<()> {
             &common::seq_lens(),
             cfg.pipeline.required_success,
         );
-        if mode == crate::relay::baseline::Mode::Baseline {
-            baseline_len = search.value.max(1.0);
-        }
+        Ok((format!("{}{}", mode.label(), suffix), search.value, last_hit))
+    });
+    let cells = cells.into_iter().collect::<Result<Vec<_>>>()?;
+    // Baseline is the first standard mode; the ratio is derived after
+    // the merge so parallel cells never depend on each other.
+    let baseline_len = cells[0].1.max(1.0);
+    for (label, value, hit) in cells {
         t.row(vec![
-            format!("{}{}", mode.label(), suffix),
-            format!("{:.0}", search.value),
-            common::pct(last_hit),
-            format!("{:.2}x", search.value / baseline_len),
+            label,
+            format!("{value:.0}"),
+            common::pct(hit),
+            format!("{:.2}x", value / baseline_len),
         ]);
     }
     t.emit(args)
@@ -70,21 +81,30 @@ pub fn fig11b(args: &Args) -> Result<()> {
         "e2e P99 (ms) and concurrency vs offered QPS at fixed length",
         &["qps", "variant", "concurrency", "p99_ms", "success"],
     );
+    let mut cells: Vec<(f64, crate::relay::baseline::Mode)> = Vec::new();
     for qps in [50.0, 100.0, 200.0, 400.0, 800.0] {
         for mode in common::standard_modes() {
-            let cfg = SimConfig::standard(mode);
-            let wl = common::fixed_len_workload(len, qps, dur, 46);
-            let m = common::sim("fig11b", cfg, &wl)?;
-            // Little's law: mean in-flight = completion rate × mean e2e.
-            let conc = m.goodput_qps() * m.e2e.mean() / 1e6;
-            t.row(vec![
-                common::qps(qps),
-                mode.label(),
-                format!("{conc:.1}"),
-                common::ms(m.p99_e2e()),
-                format!("{:.4}", m.success_rate()),
-            ]);
+            cells.push((qps, mode));
         }
+    }
+    let jobs = parallel::jobs_from_args(args)?;
+    let rows = parallel::map_indexed(jobs, cells.len(), |i| -> Result<Vec<String>> {
+        let (qps, mode) = cells[i];
+        let cfg = SimConfig::standard(mode);
+        let wl = common::fixed_len_workload(len, qps, dur, 46);
+        let m = common::sim("fig11b", cfg, &wl)?;
+        // Little's law: mean in-flight = completion rate × mean e2e.
+        let conc = m.goodput_qps() * m.e2e.mean() / 1e6;
+        Ok(vec![
+            common::qps(qps),
+            mode.label(),
+            format!("{conc:.1}"),
+            common::ms(m.p99_e2e()),
+            format!("{:.4}", m.success_rate()),
+        ])
+    });
+    for row in rows {
+        t.row(row?);
     }
     t.emit(args)
 }
@@ -101,18 +121,25 @@ pub fn fig11c(args: &Args) -> Result<()> {
         "P99 component latency (ms): pre (relay path) vs load/rank (critical path)",
         &["seq_len", "pre_p99", "load_p99", "rank_p99", "wait_p99", "rank_stage_p99"],
     );
-    for len in common::seq_lens() {
+    let qps = args.get_f64("qps", 80.0)?;
+    let lens = common::seq_lens();
+    let jobs = parallel::jobs_from_args(args)?;
+    let rows = parallel::map_indexed(jobs, lens.len(), |i| -> Result<Vec<String>> {
+        let len = lens[i];
         let cfg = SimConfig::standard(mode);
-        let wl = common::fixed_len_workload(len, args.get_f64("qps", 80.0)?, dur, 47);
+        let wl = common::fixed_len_workload(len, qps, dur, 47);
         let m = common::sim("fig11c", cfg, &wl)?;
-        t.row(vec![
+        Ok(vec![
             len.to_string(),
             common::ms(m.pre.p99()),
             common::ms(m.load.p99()),
             common::ms(m.rank_exec_long.p99()),
             common::ms(m.wait.p99()),
             common::ms(m.rank_stage_long.p99()),
-        ]);
+        ])
+    });
+    for row in rows {
+        t.row(row?);
     }
     t.emit(args)
 }
@@ -130,8 +157,10 @@ pub fn fig11d(args: &Args) -> Result<()> {
         "SLO-compliant throughput (QPS) per variant at fixed length",
         &["variant", "max_qps", "dram_hit", "vs_baseline"],
     );
-    let mut base = 0.0;
-    for mode in common::standard_modes() {
+    let modes = common::standard_modes();
+    let jobs = parallel::jobs_from_args(args)?;
+    let cells = parallel::map_indexed(jobs, modes.len(), |i| -> Result<(String, f64, f64)> {
+        let mode = modes[i];
         let mut cfg = SimConfig::standard(mode);
         cfg.long_threshold = 1024;
         // Small pool + long-heavy traffic so capacity (not the search
@@ -155,14 +184,16 @@ pub fn fig11d(args: &Args) -> Result<()> {
             cfg.pipeline.required_success,
             0.05,
         );
-        if mode == crate::relay::baseline::Mode::Baseline {
-            base = search.value.max(1.0);
-        }
+        Ok((mode.label(), search.value, last_hit))
+    });
+    let cells = cells.into_iter().collect::<Result<Vec<_>>>()?;
+    let base = cells[0].1.max(1.0); // standard_modes()[0] is Baseline
+    for (label, value, hit) in cells {
         t.row(vec![
-            mode.label(),
-            common::qps(search.value),
-            common::pct(last_hit),
-            format!("{:.2}x", search.value / base),
+            label,
+            common::qps(value),
+            common::pct(hit),
+            format!("{:.2}x", value / base),
         ]);
     }
     t.emit(args)

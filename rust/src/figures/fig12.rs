@@ -1,6 +1,7 @@
 //! Fig. 12 — affinity is necessary: local (RelayGR) cache access vs
 //! remote fetch from a no-affinity distributed KV pool.  Remote fetch is
 //! orders of magnitude slower and can exceed the lifecycle window.
+//! (Pure arithmetic — no simulations, so no `--jobs` executor here.)
 
 use anyhow::Result;
 

@@ -1,6 +1,10 @@
 //! Fig. 13 — RelayGR for scaled sequences (Q2): graceful throughput
 //! degradation, latency composition, cache loading under concurrency,
 //! and the retrieval-slack effect.
+//!
+//! All four panels sweep independent seeded runs, so their cells run on
+//! the deterministic `--jobs` executor and merge in declaration order —
+//! output is byte-identical at any job count.
 
 use anyhow::Result;
 
@@ -10,6 +14,7 @@ use crate::metrics::slo;
 use crate::relay::baseline::Mode;
 use crate::relay::tier::DramPolicy;
 use crate::util::cli::Args;
+use crate::util::parallel;
 
 /// Fig. 13a: SLO-compliant QPS vs sequence length per variant (paper:
 /// baseline collapses beyond ~6K; RelayGR keeps tens of QPS; high DRAM
@@ -21,26 +26,34 @@ pub fn fig13a(args: &Args) -> Result<()> {
         "SLO-compliant QPS vs sequence length (pipeline P99 ≤ 135 ms)",
         &["seq_len", "baseline", "relaygr", "relaygr+dram2g", "relaygr+dram500g"],
     );
-    for len in common::seq_lens() {
-        let mut cells = vec![len.to_string()];
-        for mode in common::standard_modes() {
-            let cfg = SimConfig::standard(mode);
-            // High refresh reuse so the DRAM variants reach the paper's
-            // elevated hit-rate regimes at scale.
-            let search = slo::max_qps(
-                |q| {
-                    let mut wl = common::fixed_len_workload(len, q, dur, 50);
-                    wl.refresh_prob = 0.8;
-                    common::sim("fig13a", cfg.clone(), &wl).expect("sim")
-                },
-                2.0,
-                3000.0,
-                cfg.pipeline.required_success,
-                0.05,
-            );
-            cells.push(common::qps(search.value));
-        }
-        t.row(cells);
+    let lens = common::seq_lens();
+    let modes = common::standard_modes();
+    let jobs = parallel::jobs_from_args(args)?;
+    // Flat (len, mode) cells: each is one SLO search; rows reassemble
+    // from `modes.len()`-sized chunks after the ordered merge.
+    let cells = parallel::map_indexed(jobs, lens.len() * modes.len(), |i| -> Result<String> {
+        let (len, mode) = (lens[i / modes.len()], modes[i % modes.len()]);
+        let cfg = SimConfig::standard(mode);
+        // High refresh reuse so the DRAM variants reach the paper's
+        // elevated hit-rate regimes at scale.
+        let search = slo::max_qps(
+            |q| {
+                let mut wl = common::fixed_len_workload(len, q, dur, 50);
+                wl.refresh_prob = 0.8;
+                common::sim("fig13a", cfg.clone(), &wl).expect("sim")
+            },
+            2.0,
+            3000.0,
+            cfg.pipeline.required_success,
+            0.05,
+        );
+        Ok(common::qps(search.value))
+    });
+    let cells = cells.into_iter().collect::<Result<Vec<_>>>()?;
+    for (li, len) in lens.iter().enumerate() {
+        let mut row = vec![len.to_string()];
+        row.extend(cells[li * modes.len()..(li + 1) * modes.len()].iter().cloned());
+        t.row(row);
     }
     t.emit(args)
 }
@@ -55,19 +68,25 @@ pub fn fig13b(args: &Args) -> Result<()> {
         "component latency vs sequence length (P99 ms)",
         &["seq_len", "baseline_full", "pre", "load", "rank_on_cache"],
     );
-    for len in common::seq_lens() {
+    let lens = common::seq_lens();
+    let jobs = parallel::jobs_from_args(args)?;
+    let rows = parallel::map_indexed(jobs, lens.len(), |i| -> Result<Vec<String>> {
+        let len = lens[i];
         let b_cfg = SimConfig::standard(Mode::Baseline);
         let b = common::sim("fig13b", b_cfg, &common::fixed_len_workload(len, qps, dur, 51))?;
         let r_cfg =
             SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) });
         let m = common::sim("fig13b", r_cfg, &common::fixed_len_workload(len, qps, dur, 51))?;
-        t.row(vec![
+        Ok(vec![
             len.to_string(),
             common::ms(b.rank_exec_long.p99()),
             common::ms(m.pre.p99()),
             common::ms(m.load.p99()),
             common::ms(m.rank_exec_long.p99()),
-        ]);
+        ])
+    });
+    for row in rows {
+        t.row(row?);
     }
     t.emit(args)
 }
@@ -82,19 +101,25 @@ pub fn fig13c(args: &Args) -> Result<()> {
         "DRAM→HBM load P99 (ms) vs sequence length × offered QPS",
         &["seq_len", "qps50", "qps150", "qps300", "analytic_ms"],
     );
-    for len in [2048usize, 4096, 8192, 15360] {
-        let mut cells = vec![len.to_string()];
-        for qps in [50.0, 150.0, 300.0] {
-            let cfg = SimConfig::standard(mode);
-            let mut wl = common::fixed_len_workload(len, qps, dur, 52);
-            wl.refresh_prob = 0.8; // plenty of DRAM reuse to measure loads
-            let m = common::sim("fig13c", cfg, &wl)?;
-            cells.push(if m.load.count() > 0 { common::ms(m.load.p99()) } else { "-".into() });
-        }
+    let lens = [2048usize, 4096, 8192, 15360];
+    let qpss = [50.0, 150.0, 300.0];
+    let jobs = parallel::jobs_from_args(args)?;
+    let cells = parallel::map_indexed(jobs, lens.len() * qpss.len(), |i| -> Result<String> {
+        let (len, qps) = (lens[i / qpss.len()], qpss[i % qpss.len()]);
         let cfg = SimConfig::standard(mode);
-        let analytic = cfg.hw.load_us(cfg.spec.kv_bytes_for(len));
-        cells.push(common::ms(analytic));
-        t.row(cells);
+        let mut wl = common::fixed_len_workload(len, qps, dur, 52);
+        wl.refresh_prob = 0.8; // plenty of DRAM reuse to measure loads
+        let m = common::sim("fig13c", cfg, &wl)?;
+        Ok(if m.load.count() > 0 { common::ms(m.load.p99()) } else { "-".into() })
+    });
+    let cells = cells.into_iter().collect::<Result<Vec<_>>>()?;
+    for (li, len) in lens.iter().enumerate() {
+        let mut row = vec![len.to_string()];
+        row.extend(cells[li * qpss.len()..(li + 1) * qpss.len()].iter().cloned());
+        // The analytic bound is pure arithmetic — computed post-merge.
+        let cfg = SimConfig::standard(mode);
+        row.push(common::ms(cfg.hw.load_us(cfg.spec.kv_bytes_for(*len))));
+        t.row(row);
     }
     t.emit(args)
 }
@@ -112,39 +137,48 @@ pub fn fig13d(args: &Args) -> Result<()> {
         "max supported load vs retrieval-stage P99 budget",
         &["retrieval_p99_ms", "variant", "max_qps", "concurrency"],
     );
+    let mut cells: Vec<(f64, Mode)> = Vec::new();
     for retr_ms in [25.0, 50.0, 75.0, 100.0] {
         for mode in [Mode::Baseline, Mode::RelayGr { dram: DramPolicy::Disabled }] {
-            let mut cfg = SimConfig::standard(mode);
-            cfg.pipeline.retrieval_mean_us = retr_ms * 1e3 * 0.6;
-            cfg.pipeline.retrieval_p99_us = retr_ms * 1e3;
-            // Slack beyond the default 40 ms retrieval budget extends the
-            // pipeline SLO (the paper varies the retrieval *budget*).
-            cfg.pipeline.pipeline_slo_us = 135_000.0 + (retr_ms * 1e3 - 40_000.0).max(0.0);
-            // The lifecycle window tracks the longer pipeline tail.
-            cfg.pipeline.t_life_us =
-                (2.0 * (retr_ms * 1e3 + cfg.pipeline.preproc_p99_us + cfg.pipeline.rank_budget_us))
-                    as u64;
-            let required = cfg.pipeline.required_success;
-            let mut conc = 0.0;
-            let search = slo::max_qps(
-                |q| {
-                    let wl = common::fixed_len_workload(len, q, dur, 53);
-                    let m = common::sim("fig13d", cfg.clone(), &wl).expect("sim");
-                    conc = m.goodput_qps() * m.e2e.mean() / 1e6;
-                    m
-                },
-                2.0,
-                3000.0,
-                required,
-                0.05,
-            );
-            t.row(vec![
-                format!("{retr_ms:.0}"),
-                mode.label(),
-                common::qps(search.value),
-                format!("{conc:.1}"),
-            ]);
+            cells.push((retr_ms, mode));
         }
+    }
+    let jobs = parallel::jobs_from_args(args)?;
+    let rows = parallel::map_indexed(jobs, cells.len(), |i| -> Result<Vec<String>> {
+        let (retr_ms, mode) = cells[i];
+        let mut cfg = SimConfig::standard(mode);
+        cfg.pipeline.retrieval_mean_us = retr_ms * 1e3 * 0.6;
+        cfg.pipeline.retrieval_p99_us = retr_ms * 1e3;
+        // Slack beyond the default 40 ms retrieval budget extends the
+        // pipeline SLO (the paper varies the retrieval *budget*).
+        cfg.pipeline.pipeline_slo_us = 135_000.0 + (retr_ms * 1e3 - 40_000.0).max(0.0);
+        // The lifecycle window tracks the longer pipeline tail.
+        cfg.pipeline.t_life_us =
+            (2.0 * (retr_ms * 1e3 + cfg.pipeline.preproc_p99_us + cfg.pipeline.rank_budget_us))
+                as u64;
+        let required = cfg.pipeline.required_success;
+        let mut conc = 0.0;
+        let search = slo::max_qps(
+            |q| {
+                let wl = common::fixed_len_workload(len, q, dur, 53);
+                let m = common::sim("fig13d", cfg.clone(), &wl).expect("sim");
+                conc = m.goodput_qps() * m.e2e.mean() / 1e6;
+                m
+            },
+            2.0,
+            3000.0,
+            required,
+            0.05,
+        );
+        Ok(vec![
+            format!("{retr_ms:.0}"),
+            mode.label(),
+            common::qps(search.value),
+            format!("{conc:.1}"),
+        ])
+    });
+    for row in rows {
+        t.row(row?);
     }
     t.emit(args)
 }

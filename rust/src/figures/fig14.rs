@@ -1,5 +1,9 @@
 //! Fig. 14 — extension of RelayGR (Q3): candidate-set size, NPU
 //! utilization, embedding-dimension scaling and model-depth scaling.
+//!
+//! All four panels sweep independent seeded runs, so their cells run on
+//! the deterministic `--jobs` executor and merge in declaration order —
+//! output is byte-identical at any job count.
 
 use anyhow::Result;
 
@@ -9,6 +13,7 @@ use crate::metrics::slo;
 use crate::relay::baseline::Mode;
 use crate::relay::tier::DramPolicy;
 use crate::util::cli::Args;
+use crate::util::parallel;
 
 /// Fig. 14a: ranking latency vs candidate-set size (paper: rank-on-cache
 /// below ~10 ms even at 2048 items; baseline carries the long prefix).
@@ -21,16 +26,24 @@ pub fn fig14a(args: &Args) -> Result<()> {
         "long-request rank-stage latency (ms) vs candidate-set size",
         &["items", "baseline_p50", "baseline_p99", "relaygr_p50", "relaygr_p99"],
     );
-    for items in [128usize, 256, 512, 1024, 2048] {
-        let mut cells = vec![items.to_string()];
-        for mode in [Mode::Baseline, Mode::RelayGr { dram: DramPolicy::Disabled }] {
+    let item_counts = [128usize, 256, 512, 1024, 2048];
+    let modes = [Mode::Baseline, Mode::RelayGr { dram: DramPolicy::Disabled }];
+    let jobs = parallel::jobs_from_args(args)?;
+    let cells =
+        parallel::map_indexed(jobs, item_counts.len() * modes.len(), |i| -> Result<[String; 2]> {
+            let (items, mode) = (item_counts[i / modes.len()], modes[i % modes.len()]);
             let mut cfg = SimConfig::standard(mode);
             cfg.spec.num_items = items;
             let m = common::sim("fig14a", cfg, &common::fixed_len_workload(len, qps, dur, 60))?;
-            cells.push(common::ms(m.rank_stage_long.p50()));
-            cells.push(common::ms(m.rank_stage_long.p99()));
+            Ok([common::ms(m.rank_stage_long.p50()), common::ms(m.rank_stage_long.p99())])
+        });
+    let cells = cells.into_iter().collect::<Result<Vec<_>>>()?;
+    for (ii, items) in item_counts.iter().enumerate() {
+        let mut row = vec![items.to_string()];
+        for cell in &cells[ii * modes.len()..(ii + 1) * modes.len()] {
+            row.extend(cell.iter().cloned());
         }
-        t.row(cells);
+        t.row(row);
     }
     t.emit(args)
 }
@@ -45,23 +58,32 @@ pub fn fig14b(args: &Args) -> Result<()> {
         "special/mean NPU utilization vs offered QPS",
         &["qps", "variant", "special_util", "mean_util", "p99_ms"],
     );
+    let mut cells: Vec<(f64, Mode)> = Vec::new();
     for qps in [50.0, 100.0, 200.0, 400.0] {
         for mode in common::standard_modes() {
-            let cfg = SimConfig::standard(mode);
-            let m = common::sim("fig14b", cfg, &common::fixed_len_workload(len, qps, dur, 61))?;
-            let special = if m.special_instances.is_empty() {
-                m.mean_util(None)
-            } else {
-                m.special_util()
-            };
-            t.row(vec![
-                common::qps(qps),
-                mode.label(),
-                common::pct(special),
-                common::pct(m.mean_util(None)),
-                common::ms(m.p99_e2e()),
-            ]);
+            cells.push((qps, mode));
         }
+    }
+    let jobs = parallel::jobs_from_args(args)?;
+    let rows = parallel::map_indexed(jobs, cells.len(), |i| -> Result<Vec<String>> {
+        let (qps, mode) = cells[i];
+        let cfg = SimConfig::standard(mode);
+        let m = common::sim("fig14b", cfg, &common::fixed_len_workload(len, qps, dur, 61))?;
+        let special = if m.special_instances.is_empty() {
+            m.mean_util(None)
+        } else {
+            m.special_util()
+        };
+        Ok(vec![
+            common::qps(qps),
+            mode.label(),
+            common::pct(special),
+            common::pct(m.mean_util(None)),
+            common::ms(m.p99_e2e()),
+        ])
+    });
+    for row in rows {
+        t.row(row?);
     }
     t.emit(args)
 }
@@ -76,31 +98,37 @@ pub fn fig14c(args: &Args) -> Result<()> {
         "SLO-compliant QPS vs embedding dimension",
         &["dim", "baseline", "relaygr", "relaygr+dram500g"],
     );
-    for dim in [128usize, 256, 512, 768, 1024] {
-        let mut cells = vec![dim.to_string()];
-        for mode in [
-            Mode::Baseline,
-            Mode::RelayGr { dram: DramPolicy::Disabled },
-            Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) },
-        ] {
-            let mut cfg = SimConfig::standard(mode);
-            cfg.spec.dim = dim;
-            cfg.spec.heads = (dim / 64).max(1);
-            cfg.spec.layers = 4; // width sweep at moderate depth
-            cfg.long_threshold = 1024; // 2K-token class is relay-eligible
-            let search = slo::max_qps(
-                |q| {
-                    let wl = common::fixed_len_workload_thresh(len, 1024, q, dur, 62);
-                    common::sim("fig14c", cfg.clone(), &wl).expect("sim")
-                },
-                2.0,
-                3000.0,
-                cfg.pipeline.required_success,
-                0.05,
-            );
-            cells.push(common::qps(search.value));
-        }
-        t.row(cells);
+    let dims = [128usize, 256, 512, 768, 1024];
+    let modes = [
+        Mode::Baseline,
+        Mode::RelayGr { dram: DramPolicy::Disabled },
+        Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) },
+    ];
+    let jobs = parallel::jobs_from_args(args)?;
+    let cells = parallel::map_indexed(jobs, dims.len() * modes.len(), |i| -> Result<String> {
+        let (dim, mode) = (dims[i / modes.len()], modes[i % modes.len()]);
+        let mut cfg = SimConfig::standard(mode);
+        cfg.spec.dim = dim;
+        cfg.spec.heads = (dim / 64).max(1);
+        cfg.spec.layers = 4; // width sweep at moderate depth
+        cfg.long_threshold = 1024; // 2K-token class is relay-eligible
+        let search = slo::max_qps(
+            |q| {
+                let wl = common::fixed_len_workload_thresh(len, 1024, q, dur, 62);
+                common::sim("fig14c", cfg.clone(), &wl).expect("sim")
+            },
+            2.0,
+            3000.0,
+            cfg.pipeline.required_success,
+            0.05,
+        );
+        Ok(common::qps(search.value))
+    });
+    let cells = cells.into_iter().collect::<Result<Vec<_>>>()?;
+    for (di, dim) in dims.iter().enumerate() {
+        let mut row = vec![dim.to_string()];
+        row.extend(cells[di * modes.len()..(di + 1) * modes.len()].iter().cloned());
+        t.row(row);
     }
     t.emit(args)
 }
@@ -115,29 +143,35 @@ pub fn fig14d(args: &Args) -> Result<()> {
         "SLO-compliant QPS vs model depth",
         &["layers", "baseline", "relaygr", "relaygr+dram500g"],
     );
-    for layers in [4usize, 8, 16, 24] {
-        let mut cells = vec![layers.to_string()];
-        for mode in [
-            Mode::Baseline,
-            Mode::RelayGr { dram: DramPolicy::Disabled },
-            Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) },
-        ] {
-            let mut cfg = SimConfig::standard(mode);
-            cfg.spec.layers = layers;
-            cfg.long_threshold = 1024; // 2K-token class is relay-eligible
-            let search = slo::max_qps(
-                |q| {
-                    let wl = common::fixed_len_workload_thresh(len, 1024, q, dur, 63);
-                    common::sim("fig14d", cfg.clone(), &wl).expect("sim")
-                },
-                2.0,
-                3000.0,
-                cfg.pipeline.required_success,
-                0.05,
-            );
-            cells.push(common::qps(search.value));
-        }
-        t.row(cells);
+    let depths = [4usize, 8, 16, 24];
+    let modes = [
+        Mode::Baseline,
+        Mode::RelayGr { dram: DramPolicy::Disabled },
+        Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) },
+    ];
+    let jobs = parallel::jobs_from_args(args)?;
+    let cells = parallel::map_indexed(jobs, depths.len() * modes.len(), |i| -> Result<String> {
+        let (layers, mode) = (depths[i / modes.len()], modes[i % modes.len()]);
+        let mut cfg = SimConfig::standard(mode);
+        cfg.spec.layers = layers;
+        cfg.long_threshold = 1024; // 2K-token class is relay-eligible
+        let search = slo::max_qps(
+            |q| {
+                let wl = common::fixed_len_workload_thresh(len, 1024, q, dur, 63);
+                common::sim("fig14d", cfg.clone(), &wl).expect("sim")
+            },
+            2.0,
+            3000.0,
+            cfg.pipeline.required_success,
+            0.05,
+        );
+        Ok(common::qps(search.value))
+    });
+    let cells = cells.into_iter().collect::<Result<Vec<_>>>()?;
+    for (di, layers) in depths.iter().enumerate() {
+        let mut row = vec![layers.to_string()];
+        row.extend(cells[di * modes.len()..(di + 1) * modes.len()].iter().cloned());
+        t.row(row);
     }
     t.emit(args)
 }

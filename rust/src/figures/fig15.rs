@@ -1,6 +1,10 @@
 //! Fig. 15 + Table 1 — generality across GR models (HSTU, revised HSTU,
 //! LONGER+RankMixer) and across NPU types (Ascend 310 vs 910C), plus the
 //! default-setting ψ footprint table.
+//!
+//! The two sweep panels run their (model|npu, variant) cells on the
+//! deterministic `--jobs` executor with declaration-order merge; Table 1
+//! is pure arithmetic and stays serial.
 
 use anyhow::Result;
 
@@ -11,6 +15,7 @@ use crate::model::{Dtype, HardwareProfile, ModelSpec, ModelType};
 use crate::relay::baseline::Mode;
 use crate::relay::tier::DramPolicy;
 use crate::util::cli::Args;
+use crate::util::parallel;
 
 fn model_variants() -> Vec<(&'static str, ModelSpec)> {
     let base = ModelSpec::paper_default();
@@ -41,37 +46,46 @@ pub fn fig15a(args: &Args) -> Result<()> {
         "generality across GR models: max length and SLO QPS",
         &["model", "variant", "max_seq_len", "max_qps"],
     );
+    let mut cells: Vec<(&'static str, ModelSpec, Mode)> = Vec::new();
     for (name, spec) in model_variants() {
         for mode in [Mode::Baseline, Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) }] {
-            let mut cfg = SimConfig::standard(mode);
-            cfg.spec = spec;
-            cfg.long_threshold = 1024; // relay-eligible from 1K tokens
-            let lens = [1536usize, 2048, 3072, 4096, 6144];
-            let len_search = slo::max_supported_len(
-                |len| {
-                    let wl = common::fixed_len_workload_thresh(len, 1024, qps, dur, 70);
-                    common::sim("fig15a", cfg.clone(), &wl).expect("sim")
-                },
-                &lens,
-                cfg.pipeline.required_success,
-            );
-            let qps_search = slo::max_qps(
-                |q| {
-                    let wl = common::fixed_len_workload_thresh(1536, 1024, q, dur, 71);
-                    common::sim("fig15a", cfg.clone(), &wl).expect("sim")
-                },
-                2.0,
-                3000.0,
-                cfg.pipeline.required_success,
-                0.05,
-            );
-            t.row(vec![
-                name.to_string(),
-                mode.label(),
-                format!("{:.0}", len_search.value),
-                common::qps(qps_search.value),
-            ]);
+            cells.push((name, spec, mode));
         }
+    }
+    let jobs = parallel::jobs_from_args(args)?;
+    let rows = parallel::map_indexed(jobs, cells.len(), |i| -> Result<Vec<String>> {
+        let (name, spec, mode) = cells[i];
+        let mut cfg = SimConfig::standard(mode);
+        cfg.spec = spec;
+        cfg.long_threshold = 1024; // relay-eligible from 1K tokens
+        let lens = [1536usize, 2048, 3072, 4096, 6144];
+        let len_search = slo::max_supported_len(
+            |len| {
+                let wl = common::fixed_len_workload_thresh(len, 1024, qps, dur, 70);
+                common::sim("fig15a", cfg.clone(), &wl).expect("sim")
+            },
+            &lens,
+            cfg.pipeline.required_success,
+        );
+        let qps_search = slo::max_qps(
+            |q| {
+                let wl = common::fixed_len_workload_thresh(1536, 1024, q, dur, 71);
+                common::sim("fig15a", cfg.clone(), &wl).expect("sim")
+            },
+            2.0,
+            3000.0,
+            cfg.pipeline.required_success,
+            0.05,
+        );
+        Ok(vec![
+            name.to_string(),
+            mode.label(),
+            format!("{:.0}", len_search.value),
+            common::qps(qps_search.value),
+        ])
+    });
+    for row in rows {
+        t.row(row?);
     }
     t.emit(args)
 }
@@ -86,45 +100,54 @@ pub fn fig15b(args: &Args) -> Result<()> {
         "generality across NPU types: max length and SLO QPS",
         &["npu", "variant", "max_seq_len", "max_qps"],
     );
+    let mut cells: Vec<(HardwareProfile, Mode)> = Vec::new();
     for hw in [HardwareProfile::ascend_310(), HardwareProfile::ascend_910c()] {
         for mode in [Mode::Baseline, Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) }] {
-            let mut cfg = SimConfig::standard(mode);
-            // The 310 (edge-class, ~4× less compute) serves an edge-sized
-            // GR variant, as in production tiering; absolute numbers
-            // differ by ~an order of magnitude, trends must match.
-            if hw.name == "ascend-310" {
-                cfg.spec.layers = 4;
-                cfg.spec.dim = 128;
-                cfg.spec.heads = 2;
-            }
-            cfg.hw = hw.clone();
-            cfg.long_threshold = 1024;
-            let lens = [1536usize, 2048, 3072, 4096, 6144];
-            let len_search = slo::max_supported_len(
-                |len| {
-                    let wl = common::fixed_len_workload_thresh(len, 1024, qps, dur, 72);
-                    common::sim("fig15b", cfg.clone(), &wl).expect("sim")
-                },
-                &lens,
-                cfg.pipeline.required_success,
-            );
-            let qps_search = slo::max_qps(
-                |q| {
-                    let wl = common::fixed_len_workload_thresh(1536, 1024, q, dur, 73);
-                    common::sim("fig15b", cfg.clone(), &wl).expect("sim")
-                },
-                2.0,
-                3000.0,
-                cfg.pipeline.required_success,
-                0.05,
-            );
-            t.row(vec![
-                hw.name.clone(),
-                mode.label(),
-                format!("{:.0}", len_search.value),
-                common::qps(qps_search.value),
-            ]);
+            cells.push((hw.clone(), mode));
         }
+    }
+    let jobs = parallel::jobs_from_args(args)?;
+    let rows = parallel::map_indexed(jobs, cells.len(), |i| -> Result<Vec<String>> {
+        let (hw, mode) = &cells[i];
+        let mut cfg = SimConfig::standard(*mode);
+        // The 310 (edge-class, ~4× less compute) serves an edge-sized
+        // GR variant, as in production tiering; absolute numbers
+        // differ by ~an order of magnitude, trends must match.
+        if hw.name == "ascend-310" {
+            cfg.spec.layers = 4;
+            cfg.spec.dim = 128;
+            cfg.spec.heads = 2;
+        }
+        cfg.hw = hw.clone();
+        cfg.long_threshold = 1024;
+        let lens = [1536usize, 2048, 3072, 4096, 6144];
+        let len_search = slo::max_supported_len(
+            |len| {
+                let wl = common::fixed_len_workload_thresh(len, 1024, qps, dur, 72);
+                common::sim("fig15b", cfg.clone(), &wl).expect("sim")
+            },
+            &lens,
+            cfg.pipeline.required_success,
+        );
+        let qps_search = slo::max_qps(
+            |q| {
+                let wl = common::fixed_len_workload_thresh(1536, 1024, q, dur, 73);
+                common::sim("fig15b", cfg.clone(), &wl).expect("sim")
+            },
+            2.0,
+            3000.0,
+            cfg.pipeline.required_success,
+            0.05,
+        );
+        Ok(vec![
+            hw.name.clone(),
+            mode.label(),
+            format!("{:.0}", len_search.value),
+            common::qps(qps_search.value),
+        ])
+    });
+    for row in rows {
+        t.row(row?);
     }
     t.emit(args)
 }

@@ -1,5 +1,9 @@
 //! Fig. 1 and Fig. 3 — the motivation experiments: ranking-stage P99
 //! restricts sequence length and throughput (baseline only).
+//!
+//! Both sweeps run their cells on the deterministic `--jobs` executor
+//! with declaration-order merge — output is byte-identical at any job
+//! count.
 
 use anyhow::Result;
 
@@ -8,6 +12,7 @@ use crate::figures::common::{self, Table};
 use crate::metrics::slo;
 use crate::relay::baseline::Mode;
 use crate::util::cli::Args;
+use crate::util::parallel;
 
 /// Fig. 1a/1b: with full inference inline, (a) P99 blows past the SLO as
 /// sequence length grows at fixed load, and (b) the SLO-compliant QPS
@@ -20,7 +25,10 @@ pub fn fig1(args: &Args) -> Result<()> {
         "ranking-stage P99 restricts sequence length and throughput (baseline)",
         &["seq_len", "rank_p99_ms", "e2e_p99_ms", "success", "slo_ok", "max_qps"],
     );
-    for len in [1024usize, 2048, 3072, 4096, 6144, 8192] {
+    let lens = [1024usize, 2048, 3072, 4096, 6144, 8192];
+    let jobs = parallel::jobs_from_args(args)?;
+    let rows = parallel::map_indexed(jobs, lens.len(), |i| -> Result<Vec<String>> {
+        let len = lens[i];
         let cfg = SimConfig::standard(Mode::Baseline);
         let wl = common::fixed_len_workload(len, qps_fixed, dur, 42);
         let m = common::sim("fig1", cfg.clone(), &wl)?;
@@ -34,14 +42,17 @@ pub fn fig1(args: &Args) -> Result<()> {
             cfg.pipeline.required_success,
             0.05,
         );
-        t.row(vec![
+        Ok(vec![
             len.to_string(),
             common::ms(m.rank_stage_long.p99()),
             common::ms(m.e2e_long.p99()),
             format!("{:.4}", m.success_rate()),
             m.slo_compliant(cfg.pipeline.required_success).to_string(),
             common::qps(search.value),
-        ]);
+        ])
+    });
+    for row in rows {
+        t.row(row?);
     }
     t.emit(args)
 }
@@ -55,17 +66,23 @@ pub fn fig3(args: &Args) -> Result<()> {
         "limited sequences: rank-stage P99 (ms) vs length × dim, 50 ms budget",
         &["seq_len", "dim128", "dim256", "dim512", "dim1024"],
     );
-    for len in [512usize, 1024, 2048, 4096] {
-        let mut cells = vec![len.to_string()];
-        for dim in [128usize, 256, 512, 1024] {
-            let mut cfg = SimConfig::standard(Mode::Baseline);
-            cfg.spec.dim = dim;
-            cfg.spec.heads = (dim / 64).max(1);
-            let wl = common::fixed_len_workload(len, 30.0, dur, 44);
-            let m = common::sim("fig3", cfg, &wl)?;
-            cells.push(common::ms(m.rank_stage_long.p99()));
-        }
-        t.row(cells);
+    let lens = [512usize, 1024, 2048, 4096];
+    let dims = [128usize, 256, 512, 1024];
+    let jobs = parallel::jobs_from_args(args)?;
+    let cells = parallel::map_indexed(jobs, lens.len() * dims.len(), |i| -> Result<String> {
+        let (len, dim) = (lens[i / dims.len()], dims[i % dims.len()]);
+        let mut cfg = SimConfig::standard(Mode::Baseline);
+        cfg.spec.dim = dim;
+        cfg.spec.heads = (dim / 64).max(1);
+        let wl = common::fixed_len_workload(len, 30.0, dur, 44);
+        let m = common::sim("fig3", cfg, &wl)?;
+        Ok(common::ms(m.rank_stage_long.p99()))
+    });
+    let cells = cells.into_iter().collect::<Result<Vec<_>>>()?;
+    for (li, len) in lens.iter().enumerate() {
+        let mut row = vec![len.to_string()];
+        row.extend(cells[li * dims.len()..(li + 1) * dims.len()].iter().cloned());
+        t.row(row);
     }
     t.emit(args)
 }

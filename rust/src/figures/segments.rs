@@ -85,7 +85,7 @@ pub fn segments(args: &Args) -> Result<()> {
         cfg.log_outcomes = true;
         let m: RunMetrics = sim("segments", cfg.clone(), &wl)?;
         let serial = run_reference(&cfg, &wl)?;
-        let mut sim_log = m.outcome_log.clone();
+        let mut sim_log = m.outcome_log();
         sim_log.sort_by_key(|&(id, _)| id);
         ensure!(
             sim_log == serial.outcomes,

@@ -7,6 +7,7 @@
 //!   calibrate  — measure live costs and write calibration JSON
 //!   figure     — regenerate a paper figure/table (fig1..fig15b, table1)
 //!   plan       — admission-control capacity planning (Eqs. 1–3)
+//!   trace      — record a workload to a compact binary trace / replay one
 
 use anyhow::{bail, Result};
 
@@ -40,6 +41,7 @@ fn run(args: &Args) -> Result<()> {
         Some("calibrate") => relaygr::serve::calibrate::run(args),
         Some("figure") => relaygr::figures::run(args),
         Some("plan") => relaygr::relay::trigger::plan_cli(args),
+        Some("trace") => trace_cli(args),
         Some("help") | None => {
             print!("{}", help());
             Ok(())
@@ -64,6 +66,10 @@ fn help() -> String {
      \x20 plan       admission-control capacity planning (Eqs. 1–3); with\n\
      \x20            --admission adaptive also the closed-loop operating\n\
      \x20            bands and per-scenario initial operating points\n\
+     \x20 trace      record <out> [workload flags] — capture the scenario's\n\
+     \x20            arrival stream as a compact binary trace (delta-encoded,\n\
+     \x20            varint ids; O(1) memory); replay <path> [--engine sim|\n\
+     \x20            reference] — bit-identical re-run, prints events/sec\n\
      \n\
      COMMON OPTIONS:\n\
      \x20 --artifacts <dir>     artifact directory (default: artifacts)\n\
@@ -87,6 +93,71 @@ fn help() -> String {
 
 fn artifacts_dir(args: &Args) -> String {
     args.get_or("artifacts", "artifacts").to_string()
+}
+
+/// `relaygr trace record <out> [workload flags]` /
+/// `relaygr trace replay <path> [--engine sim|reference] [--mode ...]`.
+///
+/// Record streams the configured scenario straight to disk (the full
+/// workload config rides in the header, so a trace is self-describing);
+/// replay rebuilds that config, swaps the arrival source for the file,
+/// and drives the chosen engine — decisions are bit-identical to a live
+/// run of the same scenario, which `tests/trace_replay.rs` pins.
+fn trace_cli(args: &Args) -> Result<()> {
+    use relaygr::workload::trace;
+
+    let action = args.positionals.get(1).map(String::as_str);
+    let path = args.positionals.get(2).map(String::as_str);
+    match (action, path) {
+        (Some("record"), Some(path)) => {
+            let wl = relaygr::config::workload_config(args)?;
+            let t0 = std::time::Instant::now();
+            let (count, bytes) = trace::record(path, &wl)?;
+            println!(
+                "recorded {count} requests → {path} ({bytes} bytes, {:.2} B/request, {:.2}s)",
+                bytes as f64 / count.max(1) as f64,
+                t0.elapsed().as_secs_f64(),
+            );
+            Ok(())
+        }
+        (Some("replay"), Some(path)) => {
+            let wl = trace::open_replay(path)?;
+            let mode = relaygr::config::parse_mode(args.get_or("mode", "relaygr"))?;
+            let cfg = relaygr::config::sim_config(args, mode)?;
+            let t0 = std::time::Instant::now();
+            match args.get_or("engine", "sim") {
+                "sim" => {
+                    let m = relaygr::cluster::run_sim(cfg, &wl)?;
+                    let wall = t0.elapsed().as_secs_f64();
+                    println!(
+                        "replayed {path}: {} requests, {} sim events in {wall:.2}s \
+                         ({:.0} events/sec, {:.0} requests/sec)",
+                        m.completed,
+                        m.sim_events,
+                        m.sim_events as f64 / wall.max(1e-9),
+                        m.completed as f64 / wall.max(1e-9),
+                    );
+                }
+                "reference" => {
+                    let r = relaygr::cluster::run_reference(&cfg, &wl)?;
+                    let wall = t0.elapsed().as_secs_f64();
+                    println!(
+                        "replayed {path} (serialized reference): {} requests in {wall:.2}s \
+                         ({:.0} requests/sec, mean rank {:.1} µs)",
+                        r.outcomes.len(),
+                        r.outcomes.len() as f64 / wall.max(1e-9),
+                        r.mean_rank_us,
+                    );
+                }
+                other => bail!("--engine {other}: expected sim | reference"),
+            }
+            Ok(())
+        }
+        _ => bail!(
+            "usage: relaygr trace record <out> [workload flags] | \
+             relaygr trace replay <path> [--engine sim|reference]"
+        ),
+    }
 }
 
 /// Validate the python→rust bridge and the paper's ε-bound end to end:

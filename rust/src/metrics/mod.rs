@@ -55,12 +55,121 @@ pub struct RunMetrics {
 
     /// Workload scenario label this run served (empty when unknown).
     pub scenario: String,
-    /// When set, [`RunMetrics::record`] appends `(request, outcome)` to
-    /// [`RunMetrics::outcome_log`] — the cross-engine equivalence tests
-    /// compare these per-request sequences.  Off by default (it grows
-    /// with the trace).
-    pub log_outcomes: bool,
-    pub outcome_log: Vec<(u64, CacheOutcome)>,
+    /// Per-request outcome capture mode (off by default — see
+    /// [`OutcomeRecorder`]).
+    pub outcomes: OutcomeRecorder,
+}
+
+/// How [`RunMetrics::record`] captures per-request outcomes.
+///
+/// The old unconditional `Vec<(u64, CacheOutcome)>` log cost 16 bytes
+/// per request and grew with the trace — at 100M requests that is 1.6 GB
+/// just to compare two engines.  `Log` bitpacks each record into 8 bytes
+/// ([`PackedOutcome`]); `Check` streams against a precomputed reference
+/// table with one byte per request id and a capped mismatch list, so the
+/// cross-engine comparison itself adds O(1) beyond the shared table.
+#[derive(Debug, Clone, Default)]
+pub enum OutcomeRecorder {
+    /// Aggregate counters only (the default).
+    #[default]
+    Off,
+    /// Append a bitpacked [`PackedOutcome`] per completed request.
+    Log(Vec<PackedOutcome>),
+    /// Bounded streaming compare against a reference run (see
+    /// [`OutcomeCheck`]).
+    Check(OutcomeCheck),
+}
+
+impl OutcomeRecorder {
+    pub fn log() -> OutcomeRecorder {
+        OutcomeRecorder::Log(Vec::new())
+    }
+
+    pub fn check(expected: std::sync::Arc<Vec<u8>>) -> OutcomeRecorder {
+        OutcomeRecorder::Check(OutcomeCheck { expected, seen: 0, mismatches: Vec::new() })
+    }
+}
+
+/// Bitpacked per-request outcome: request id in the high 61 bits, the
+/// 3-bit outcome code in the low bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PackedOutcome(u64);
+
+impl PackedOutcome {
+    pub fn new(request: u64, outcome: CacheOutcome) -> PackedOutcome {
+        debug_assert!(request <= u64::MAX >> 3, "request id overflows packed record");
+        PackedOutcome((request << 3) | outcome_index(outcome) as u64)
+    }
+
+    pub fn request(self) -> u64 {
+        self.0 >> 3
+    }
+
+    pub fn outcome(self) -> CacheOutcome {
+        outcome_from_index((self.0 & 7) as usize).expect("packed outcome code")
+    }
+
+    pub fn unpack(self) -> (u64, CacheOutcome) {
+        (self.request(), self.outcome())
+    }
+}
+
+/// Streaming cross-engine outcome comparison with bounded memory:
+/// `expected[id]` holds the reference outcome code + 1 (0 = the
+/// reference never completed that id).  Mismatches are capped at
+/// [`OutcomeCheck::MAX_MISMATCHES`] — enough to diagnose, O(1) to hold.
+#[derive(Debug, Clone)]
+pub struct OutcomeCheck {
+    expected: std::sync::Arc<Vec<u8>>,
+    /// Requests checked so far.
+    pub seen: u64,
+    pub mismatches: Vec<OutcomeMismatch>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutcomeMismatch {
+    pub request: u64,
+    /// `None`: the reference run never completed this request id.
+    pub expected: Option<CacheOutcome>,
+    pub got: CacheOutcome,
+}
+
+impl OutcomeCheck {
+    pub const MAX_MISMATCHES: usize = 16;
+
+    fn record(&mut self, request: u64, got: CacheOutcome) {
+        self.seen += 1;
+        let want = self.expected.get(request as usize).copied().unwrap_or(0);
+        let matches = want != 0 && outcome_from_index((want - 1) as usize) == Some(got);
+        if !matches && self.mismatches.len() < Self::MAX_MISMATCHES {
+            let expected = if want == 0 {
+                None
+            } else {
+                outcome_from_index((want - 1) as usize)
+            };
+            self.mismatches.push(OutcomeMismatch { request, expected, got });
+        }
+    }
+
+    /// Every reference request seen exactly once with the same outcome?
+    pub fn matches(&self) -> bool {
+        self.mismatches.is_empty() && self.seen as usize == self.expected.len()
+    }
+}
+
+/// Dense per-id expected-outcome table for [`OutcomeRecorder::Check`]
+/// (request ids are contiguous from 0 in every generated trace): one
+/// byte per id, code + 1, 0 = absent.
+pub fn outcome_table(pairs: impl IntoIterator<Item = (u64, CacheOutcome)>) -> Vec<u8> {
+    let mut table = Vec::new();
+    for (id, outcome) in pairs {
+        let idx = id as usize;
+        if idx >= table.len() {
+            table.resize(idx + 1, 0);
+        }
+        table[idx] = outcome_index(outcome) as u8 + 1;
+    }
+    table
 }
 
 /// Index of an outcome in [`RunMetrics::outcome_counts`] /
@@ -73,6 +182,18 @@ pub fn outcome_index(o: CacheOutcome) -> usize {
         CacheOutcome::JoinedReload => 3,
         CacheOutcome::Fallback => 4,
     }
+}
+
+/// Inverse of [`outcome_index`].
+pub fn outcome_from_index(i: usize) -> Option<CacheOutcome> {
+    Some(match i {
+        0 => CacheOutcome::FullInference,
+        1 => CacheOutcome::HbmHit,
+        2 => CacheOutcome::DramHit,
+        3 => CacheOutcome::JoinedReload,
+        4 => CacheOutcome::Fallback,
+        _ => return None,
+    })
 }
 
 pub const OUTCOME_NAMES: [&str; 5] = ["full", "hbm", "dram", "join", "fallback"];
@@ -155,8 +276,26 @@ impl RunMetrics {
             offered_qps: 0.0,
             pipeline_slo_us,
             scenario: String::new(),
-            log_outcomes: false,
-            outcome_log: Vec::new(),
+            outcomes: OutcomeRecorder::Off,
+        }
+    }
+
+    /// Decoded per-request outcome log (empty unless the run used
+    /// [`OutcomeRecorder::Log`]) — the small-run test/figure view of the
+    /// bitpacked records.
+    pub fn outcome_log(&self) -> Vec<(u64, CacheOutcome)> {
+        match &self.outcomes {
+            OutcomeRecorder::Log(log) => log.iter().map(|p| p.unpack()).collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// The streaming-compare result, if this run ran with
+    /// [`OutcomeRecorder::Check`].
+    pub fn outcome_check(&self) -> Option<&OutcomeCheck> {
+        match &self.outcomes {
+            OutcomeRecorder::Check(c) => Some(c),
+            _ => None,
         }
     }
 
@@ -184,8 +323,10 @@ impl RunMetrics {
         if lc.admitted {
             self.admitted += 1;
         }
-        if self.log_outcomes {
-            self.outcome_log.push((lc.request, lc.outcome));
+        match &mut self.outcomes {
+            OutcomeRecorder::Off => {}
+            OutcomeRecorder::Log(log) => log.push(PackedOutcome::new(lc.request, lc.outcome)),
+            OutcomeRecorder::Check(c) => c.record(lc.request, lc.outcome),
         }
     }
 
@@ -453,6 +594,68 @@ mod tests {
         let line = m.admission_brief().unwrap();
         assert!(line.contains("headroom=[0.52..0.95]"), "{line}");
         assert!(line.contains("l_max*=6"), "{line}");
+    }
+
+    #[test]
+    fn packed_outcomes_round_trip_all_codes() {
+        for (i, name) in OUTCOME_NAMES.iter().enumerate() {
+            let o = outcome_from_index(i).unwrap();
+            assert_eq!(outcome_index(o), i, "{name}");
+            let p = PackedOutcome::new(123_456_789, o);
+            assert_eq!(p.unpack(), (123_456_789, o), "{name}");
+        }
+        assert!(outcome_from_index(5).is_none());
+        // 8 bytes per record — half the old (u64, CacheOutcome) pair.
+        assert_eq!(std::mem::size_of::<PackedOutcome>(), 8);
+    }
+
+    #[test]
+    fn log_recorder_captures_bitpacked_outcomes() {
+        let mut m = RunMetrics::new(135_000.0);
+        assert!(m.outcome_log().is_empty(), "off by default");
+        m.outcomes = OutcomeRecorder::log();
+        let mut a = lc(50.0, CacheOutcome::HbmHit);
+        a.request = 7;
+        m.record(&a, true);
+        let mut b = lc(60.0, CacheOutcome::Fallback);
+        b.request = 3;
+        m.record(&b, true);
+        assert_eq!(
+            m.outcome_log(),
+            vec![(7, CacheOutcome::HbmHit), (3, CacheOutcome::Fallback)]
+        );
+    }
+
+    #[test]
+    fn streaming_check_matches_and_detects_divergence() {
+        let reference =
+            vec![(0u64, CacheOutcome::HbmHit), (1, CacheOutcome::FullInference)];
+        let table = std::sync::Arc::new(outcome_table(reference));
+        // Identical run: matches.
+        let mut m = RunMetrics::new(135_000.0);
+        m.outcomes = OutcomeRecorder::check(table.clone());
+        for (id, o) in [(0u64, CacheOutcome::HbmHit), (1, CacheOutcome::FullInference)] {
+            let mut l = lc(50.0, o);
+            l.request = id;
+            m.record(&l, false);
+        }
+        let c = m.outcome_check().unwrap();
+        assert!(c.matches(), "{:?}", c.mismatches);
+        assert_eq!(c.seen, 2);
+        // Divergent outcome and an id the reference never completed.
+        let mut d = RunMetrics::new(135_000.0);
+        d.outcomes = OutcomeRecorder::check(table);
+        for (id, o) in [(0u64, CacheOutcome::Fallback), (9, CacheOutcome::HbmHit)] {
+            let mut l = lc(50.0, o);
+            l.request = id;
+            d.record(&l, false);
+        }
+        let c = d.outcome_check().unwrap();
+        assert!(!c.matches());
+        assert_eq!(c.mismatches.len(), 2);
+        assert_eq!(c.mismatches[0].expected, Some(CacheOutcome::HbmHit));
+        assert_eq!(c.mismatches[0].got, CacheOutcome::Fallback);
+        assert_eq!(c.mismatches[1].expected, None, "unseen id flagged");
     }
 
     #[test]

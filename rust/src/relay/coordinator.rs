@@ -61,7 +61,7 @@ use crate::relay::tier::TierConfig;
 use crate::relay::trigger::{
     BehaviorMeta, Decision, Estimator, Trigger, TriggerConfig, TriggerStats,
 };
-use crate::util::fxhash::FxHashMap;
+use crate::util::sharded::ShardedMap;
 use crate::util::slab::Slab;
 
 /// Per-request handle issued by [`RelayCoordinator::on_arrival`] and
@@ -198,13 +198,15 @@ struct InstanceCtl<T> {
     /// present only when segment reuse is enabled.
     segments: Option<SegmentStore<T>>,
     /// Rank requests waiting for ψ production to finish, per user.
-    waiting_produce: FxHashMap<u64, Vec<ReqId>>,
+    /// These per-user maps are sharded by user-id hash so trace-scale
+    /// populations never concentrate in one table; every access is keyed.
+    waiting_produce: ShardedMap<Vec<ReqId>>,
     /// Rank requests joined to an in-flight/queued reload, per user.
-    waiting_reload: FxHashMap<u64, Vec<ReqId>>,
+    waiting_reload: ShardedMap<Vec<ReqId>>,
     /// Where the currently-resident ψ came from (fresh pre-inference →
     /// `HbmHit`, DRAM reload → `DramHit`): drives the paper's hit-rate
     /// attribution even when a signal-initiated reload pre-warmed HBM.
-    origin: FxHashMap<u64, CacheOutcome>,
+    origin: ShardedMap<CacheOutcome>,
 }
 
 /// Per-request decision state, slab-resident.  The `Vec` fields are
@@ -316,9 +318,9 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             .map(|_| InstanceCtl {
                 cache: CacheHierarchy::new(psi_budget, &cfg.tiers, cfg.max_reload_concurrency),
                 segments: seg_on.then(|| SegmentStore::from_config(seg_budget, &cfg.segment)),
-                waiting_produce: FxHashMap::default(),
-                waiting_reload: FxHashMap::default(),
-                origin: FxHashMap::default(),
+                waiting_produce: ShardedMap::new(),
+                waiting_reload: ShardedMap::new(),
+                origin: ShardedMap::new(),
             })
             .collect();
         Ok(RelayCoordinator { cfg, router, triggers, instances, requests: Slab::new() })
@@ -572,7 +574,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             PseudoAction::HbmHit => {
                 let origin = self.instances[inst]
                     .origin
-                    .get(&user)
+                    .get(user)
                     .copied()
                     .unwrap_or(CacheOutcome::HbmHit);
                 let st = self.requests.get_mut(req).unwrap();
@@ -583,7 +585,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             }
             PseudoAction::WaitProducing => {
                 self.requests.get_mut(req).unwrap().wait_since = now;
-                self.instances[inst].waiting_produce.entry(user).or_default().push(req);
+                self.instances[inst].waiting_produce.or_insert_with(user, Vec::new).push(req);
                 RankAction::Wait
             }
             PseudoAction::StartReload { bytes } => {
@@ -593,7 +595,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                     st.cached = true;
                     st.wait_since = now;
                 }
-                self.instances[inst].waiting_reload.entry(user).or_default().push(req);
+                self.instances[inst].waiting_reload.or_insert_with(user, Vec::new).push(req);
                 RankAction::StartReload { bytes }
             }
             PseudoAction::JoinReload | PseudoAction::QueuedReload => {
@@ -603,7 +605,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                     st.cached = true;
                     st.wait_since = now;
                 }
-                self.instances[inst].waiting_reload.entry(user).or_default().push(req);
+                self.instances[inst].waiting_reload.or_insert_with(user, Vec::new).push(req);
                 RankAction::WaitReload
             }
             PseudoAction::Miss => {
@@ -643,7 +645,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         // admitted slot is still released exactly once, by the owning
         // request's `on_rank_done`.
         let waiters =
-            self.instances[instance].waiting_produce.remove(&user).unwrap_or_default();
+            self.instances[instance].waiting_produce.remove(user).unwrap_or_default();
         for &w in &waiters {
             if let Some(st) = self.requests.get_mut(w) {
                 st.wait_us += now.saturating_sub(st.wait_since) as f64;
@@ -683,7 +685,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         if done.installed {
             self.instances[instance].origin.insert(user, CacheOutcome::DramHit);
         }
-        let woken = self.instances[instance].waiting_reload.remove(&user).unwrap_or_default();
+        let woken = self.instances[instance].waiting_reload.remove(user).unwrap_or_default();
         for &w in &woken {
             if let Some(st) = self.requests.get_mut(w) {
                 st.wait_us += now.saturating_sub(st.wait_since) as f64;
@@ -706,7 +708,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             None => {
                 let next = self.instances[instance].cache.abort_reload(user);
                 let woken =
-                    self.instances[instance].waiting_reload.remove(&user).unwrap_or_default();
+                    self.instances[instance].waiting_reload.remove(user).unwrap_or_default();
                 for &w in &woken {
                     if let Some(st) = self.requests.get_mut(w) {
                         st.wait_us += now.saturating_sub(st.wait_since) as f64;
@@ -732,10 +734,10 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         if inst < self.instances.len() {
             let ctl = &mut self.instances[inst];
             for map in [&mut ctl.waiting_produce, &mut ctl.waiting_reload] {
-                if let Some(v) = map.get_mut(&user) {
+                if let Some(v) = map.get_mut(user) {
                     v.retain(|&r| r != req);
                     if v.is_empty() {
-                        map.remove(&user);
+                        map.remove(user);
                     }
                 }
             }
@@ -860,12 +862,12 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         let mut spill = None;
         if cached {
             let ctl = &mut self.instances[inst];
-            let fresh = ctl.origin.get(&user) == Some(&CacheOutcome::HbmHit);
+            let fresh = ctl.origin.get(user) == Some(&CacheOutcome::HbmHit);
             if fresh {
                 spill = Some(kv_bytes);
             } else if ctl.cache.hbm().state_of(user) == Some(EntryState::Consumed) {
                 ctl.cache.hbm_mut().evict(user);
-                ctl.origin.remove(&user);
+                ctl.origin.remove(user);
             }
         }
         Completion {
@@ -898,7 +900,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         }
         if ctl.cache.hbm().state_of(user) == Some(EntryState::Consumed) {
             ctl.cache.hbm_mut().evict(user);
-            ctl.origin.remove(&user);
+            ctl.origin.remove(user);
         }
         true
     }

@@ -29,7 +29,7 @@
 
 use std::collections::VecDeque;
 
-use crate::util::fxhash::FxHashMap;
+use crate::util::sharded::ShardedMap;
 
 use crate::relay::hbm::{EntryState, HbmCache, Micros};
 use crate::relay::tier::{PolicyTier, TierConfig, TierStats};
@@ -123,7 +123,8 @@ pub struct CacheHierarchy<T> {
     /// Lower tiers, top-down (level 1 = DRAM first).
     lower: Vec<PolicyTier<T>>,
     /// Users with a promotion in flight (single-flight) and join counts.
-    inflight: FxHashMap<u64, u32>,
+    /// Sharded by user-id hash (trace scale); every access is keyed.
+    inflight: ShardedMap<u32>,
     /// Promotions waiting for a concurrency slot, FIFO.
     queued: VecDeque<u64>,
     active_reloads: usize,
@@ -138,7 +139,7 @@ impl<T: Clone> CacheHierarchy<T> {
         CacheHierarchy {
             hbm: HbmCache::new(hbm_bytes),
             lower: tiers.iter().map(|&c| PolicyTier::from_config(c)).collect(),
-            inflight: FxHashMap::default(),
+            inflight: ShardedMap::new(),
             queued: VecDeque::new(),
             active_reloads: 0,
             max_reload_concurrency: max_reload_concurrency.max(1),
@@ -184,7 +185,7 @@ impl<T: Clone> CacheHierarchy<T> {
     }
 
     pub fn inflight_for(&self, user: u64) -> bool {
-        self.inflight.contains_key(&user)
+        self.inflight.contains_key(user)
     }
 
     // ---- N-level lookup ----------------------------------------------------
@@ -205,7 +206,7 @@ impl<T: Clone> CacheHierarchy<T> {
             None => {}
         }
         // Single-flight: join any in-flight/queued promotion for this user.
-        if let Some(joiners) = self.inflight.get_mut(&user) {
+        if let Some(joiners) = self.inflight.get_mut(user) {
             *joiners += 1;
             self.stats.reloads_joined += 1;
             return PseudoAction::JoinReload;
@@ -270,7 +271,7 @@ impl<T: Clone> CacheHierarchy<T> {
     /// promotion *without* touching HBM — used by the live engine, whose
     /// HBM window holds device buffers while lower tiers hold host copies.
     pub fn finish_reload(&mut self, user: u64) -> (u32, Option<u64>) {
-        let joiners = self.inflight.remove(&user).unwrap_or(0);
+        let joiners = self.inflight.remove(user).unwrap_or(0);
         self.active_reloads = self.active_reloads.saturating_sub(1);
         (joiners, self.pop_queued_reload())
     }
@@ -290,7 +291,7 @@ impl<T: Clone> CacheHierarchy<T> {
     /// A promotion failed (e.g. the payload was evicted from its tier
     /// mid-flight): release guards so waiters can fall back.
     pub fn abort_reload(&mut self, user: u64) -> Option<u64> {
-        self.inflight.remove(&user);
+        self.inflight.remove(user);
         self.active_reloads = self.active_reloads.saturating_sub(1);
         self.pop_queued_reload()
     }

@@ -51,7 +51,7 @@ use std::collections::VecDeque;
 use anyhow::{bail, Result};
 
 use crate::util::cli::Args;
-use crate::util::fxhash::FxHashMap;
+use crate::util::sharded::ShardedMap;
 
 /// Lightweight per-request behaviour metadata the trigger inspects.
 #[derive(Debug, Clone, Copy)]
@@ -395,7 +395,10 @@ struct AdaptiveState {
     /// Windowed observed ψ footprints (bytes) of admitted requests.
     fp: QuantileRing,
     /// user → (last admit µs, footprint bytes) inside the window.
-    window: FxHashMap<u64, (u64, usize)>,
+    /// Sharded by user-id hash: at trace scale a single table would
+    /// concentrate every probe and resize; every access here is keyed,
+    /// so decision order never depends on shard layout.
+    window: ShardedMap<(u64, usize)>,
     /// Admission order for pruning; entries whose `(time, user)` no
     /// longer matches `window` are tombstones (the user re-admitted).
     order: VecDeque<(u64, u64)>,
@@ -413,9 +416,9 @@ impl AdaptiveState {
                 break;
             }
             self.order.pop_front();
-            if let Some(&(last, bytes)) = self.window.get(&user) {
+            if let Some(&(last, bytes)) = self.window.get(user) {
                 if last == t {
-                    self.window.remove(&user);
+                    self.window.remove(user);
                     self.window_bytes -= bytes;
                 }
             }
@@ -429,14 +432,14 @@ impl AdaptiveState {
     /// *growth* of its footprint — a user whose prefix lengthened since
     /// the last admit must still pass the byte bound.
     fn fits(&self, user: u64, bytes: usize, capacity: usize) -> bool {
-        let held = self.window.get(&user).map(|&(_, b)| b).unwrap_or(0);
+        let held = self.window.get(user).map(|&(_, b)| b).unwrap_or(0);
         self.window_bytes - held + bytes <= capacity
     }
 
     /// Record an admission.
     fn admit(&mut self, user: u64, now: u64, bytes: usize, est_window: usize) {
         self.fp.push(est_window, bytes as f64);
-        if let Some(&(_, old)) = self.window.get(&user) {
+        if let Some(&(_, old)) = self.window.get(user) {
             self.window_bytes -= old;
         }
         self.window.insert(user, (now, bytes));
@@ -447,7 +450,7 @@ impl AdaptiveState {
     /// An admit was cancelled before its production started: free the
     /// user's footprint reservation (its order slot becomes a tombstone).
     fn cancel(&mut self, user: u64) {
-        if let Some((_, bytes)) = self.window.remove(&user) {
+        if let Some((_, bytes)) = self.window.remove(user) {
             self.window_bytes -= bytes;
         }
     }

@@ -322,9 +322,9 @@ impl LiveInstance {
         shared: &Shared,
         busy: &Arc<AtomicU64>,
     ) -> RankDone {
-        let user = req.user;
+        let user = req.uid();
         let incr = synth_embedding(user ^ 2, cfg.spec.incr_len, cfg.spec.dim, 0.5);
-        let items = synth_embedding(req.id ^ 3, cfg.spec.num_items, cfg.spec.dim, 0.5);
+        let items = synth_embedding(req.rid() ^ 3, cfg.spec.num_items, cfg.spec.dim, 0.5);
         let mut load_us = 0.0;
         let wait_start = Instant::now();
 
@@ -491,7 +491,7 @@ impl LiveCluster {
         let t0 = Instant::now();
         let (handle, wants_trigger) = {
             let mut coord = self.shared.coord.lock().unwrap();
-            coord.on_arrival(now_us(), req.user, req.prefix_len, candidates)
+            coord.on_arrival(now_us(), req.uid(), req.plen(), candidates)
         };
         if wants_trigger {
             // Trigger side path (metadata only); admitted work is handed
@@ -543,9 +543,9 @@ impl LiveCluster {
         let done_us = t0.elapsed().as_micros() as u64;
         anyhow::ensure!(!done.scores.is_empty(), "empty scores from rank execution");
         Ok(Lifecycle {
-            request: req.id,
-            user: req.user,
-            prefix_len: req.prefix_len,
+            request: req.rid(),
+            user: req.uid(),
+            prefix_len: req.plen(),
             arrival_us: 0,
             retrieval_done_us: retrieval_done,
             preproc_done_us: preproc_done,
@@ -580,13 +580,13 @@ impl LiveCluster {
                     if seg_on { crate::workload::candidate_set(wl, &req) } else { Vec::new() };
                 let metrics = &metrics;
                 let threshold = self.cfg.long_threshold;
-                let seed = self.cfg.seed ^ req.id;
+                let seed = self.cfg.seed ^ req.rid();
                 scope.spawn(move || {
                     let mut rng = Rng::new(seed);
                     match self.drive_request_with(req, &cands, &mut rng) {
                         Ok(lc) => {
                             let mut m = metrics.lock().unwrap();
-                            m.record(&lc, req.prefix_len > threshold);
+                            m.record(&lc, req.plen() > threshold);
                         }
                         Err(e) => log::warn!("request {} failed: {e:#}", req.id),
                     }

@@ -10,5 +10,6 @@ pub mod logging;
 pub mod parallel;
 pub mod prop;
 pub mod rng;
+pub mod sharded;
 pub mod slab;
 pub mod stats;

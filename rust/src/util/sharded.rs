@@ -1,0 +1,207 @@
+//! User-id-sharded hash map for the per-user hot state of the relay
+//! coordinator stack (trigger footprint window, hierarchy single-flight,
+//! per-instance wait queues).
+//!
+//! At 10M-user scale a single `FxHashMap` concentrates every probe,
+//! every resize and every tombstone in one table: a resize stalls the
+//! event loop for the whole population and the table's peak footprint is
+//! never returned.  Sharding by a strong hash of the user id bounds each
+//! table to `1/SHARDS` of the population, so resizes are short and
+//! independent and the per-probe working set is cache-friendlier.
+//!
+//! Determinism: every operation is keyed — there is no cross-shard
+//! iteration order on any decision path.  `for_each` visits shards in
+//! fixed index order (and keys within a shard in the map's order), so it
+//! must only be used for order-insensitive aggregation (tests, drains
+//! that sort afterwards), which the callers uphold.
+
+use crate::util::fxhash::FxHashMap;
+
+/// Number of shards (power of two; chosen so a 10M-entry map keeps each
+/// shard under ~160k entries).
+pub const SHARDS: usize = 64;
+
+/// Strong 64-bit mix of the user id (splitmix64 finalizer) so shard
+/// selection is independent of the in-shard FxHash probe sequence and of
+/// any structure in the id space (sequential ids, coldstart minting).
+#[inline]
+pub fn shard_of(user: u64) -> usize {
+    let mut z = user.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (z ^ (z >> 31)) as usize & (SHARDS - 1)
+}
+
+/// A `u64 → V` map sharded by [`shard_of`] the key.  Keyed operations
+/// mirror the `HashMap` API; whole-map operations (`len`, `clear`,
+/// `for_each`, `retain`) aggregate over the fixed shard order.
+#[derive(Debug, Clone)]
+pub struct ShardedMap<V> {
+    shards: Box<[FxHashMap<u64, V>]>,
+}
+
+impl<V> Default for ShardedMap<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> ShardedMap<V> {
+    pub fn new() -> Self {
+        let shards: Vec<FxHashMap<u64, V>> =
+            (0..SHARDS).map(|_| FxHashMap::default()).collect();
+        ShardedMap { shards: shards.into_boxed_slice() }
+    }
+
+    #[inline]
+    fn shard(&self, key: u64) -> &FxHashMap<u64, V> {
+        &self.shards[shard_of(key)]
+    }
+
+    #[inline]
+    fn shard_mut(&mut self, key: u64) -> &mut FxHashMap<u64, V> {
+        &mut self.shards[shard_of(key)]
+    }
+
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<&V> {
+        self.shard(key).get(&key)
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, key: u64) -> Option<&mut V> {
+        self.shard_mut(key).get_mut(&key)
+    }
+
+    #[inline]
+    pub fn contains_key(&self, key: u64) -> bool {
+        self.shard(key).contains_key(&key)
+    }
+
+    #[inline]
+    pub fn insert(&mut self, key: u64, value: V) -> Option<V> {
+        self.shard_mut(key).insert(key, value)
+    }
+
+    #[inline]
+    pub fn remove(&mut self, key: u64) -> Option<V> {
+        self.shard_mut(key).remove(&key)
+    }
+
+    /// `entry(key).or_insert_with(default)` equivalent.
+    #[inline]
+    pub fn or_insert_with<F: FnOnce() -> V>(&mut self, key: u64, default: F) -> &mut V {
+        self.shard_mut(key).entry(key).or_insert_with(default)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(FxHashMap::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(FxHashMap::is_empty)
+    }
+
+    pub fn clear(&mut self) {
+        for s in self.shards.iter_mut() {
+            s.clear();
+        }
+    }
+
+    /// Largest single shard (tests pin the anti-concentration property).
+    pub fn max_shard_len(&self) -> usize {
+        self.shards.iter().map(FxHashMap::len).max().unwrap_or(0)
+    }
+
+    /// Visit every entry, shards in fixed index order.  Only for
+    /// order-insensitive aggregation — never on a decision path.
+    pub fn for_each<F: FnMut(u64, &V)>(&self, mut f: F) {
+        for s in self.shards.iter() {
+            for (&k, v) in s.iter() {
+                f(k, v);
+            }
+        }
+    }
+
+    pub fn retain<F: FnMut(u64, &mut V) -> bool>(&mut self, mut f: F) {
+        for s in self.shards.iter_mut() {
+            s.retain(|&k, v| f(k, v));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keyed_ops_match_hashmap_semantics() {
+        let mut m: ShardedMap<u32> = ShardedMap::new();
+        assert!(m.is_empty());
+        assert_eq!(m.insert(7, 1), None);
+        assert_eq!(m.insert(7, 2), Some(1));
+        assert_eq!(m.get(7), Some(&2));
+        *m.get_mut(7).unwrap() += 1;
+        assert_eq!(m.get(7), Some(&3));
+        assert!(m.contains_key(7));
+        assert!(!m.contains_key(8));
+        assert_eq!(m.remove(7), Some(3));
+        assert_eq!(m.remove(7), None);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn or_insert_with_inserts_once() {
+        let mut m: ShardedMap<Vec<u32>> = ShardedMap::new();
+        m.or_insert_with(5, Vec::new).push(1);
+        m.or_insert_with(5, Vec::new).push(2);
+        assert_eq!(m.get(5), Some(&vec![1, 2]));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn sequential_ids_spread_across_shards() {
+        // Sequential user ids (the generator's id space) must not pile
+        // into one shard — the whole point of the strong mix.
+        let mut m: ShardedMap<()> = ShardedMap::new();
+        let n = 100_000u64;
+        for u in 0..n {
+            m.insert(u, ());
+        }
+        assert_eq!(m.len(), n as usize);
+        let ideal = n as usize / SHARDS;
+        assert!(
+            m.max_shard_len() < ideal * 2,
+            "max shard {} vs ideal {ideal}",
+            m.max_shard_len()
+        );
+    }
+
+    #[test]
+    fn retain_and_for_each_cover_all_entries() {
+        let mut m: ShardedMap<u64> = ShardedMap::new();
+        for u in 0..1000u64 {
+            m.insert(u, u * 2);
+        }
+        let mut sum = 0u64;
+        m.for_each(|k, &v| {
+            assert_eq!(v, k * 2);
+            sum += v;
+        });
+        assert_eq!(sum, (0..1000u64).map(|u| u * 2).sum());
+        m.retain(|k, _| k % 2 == 0);
+        assert_eq!(m.len(), 500);
+        m.clear();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn clone_is_deep() {
+        let mut a: ShardedMap<u64> = ShardedMap::new();
+        a.insert(1, 10);
+        let mut b = a.clone();
+        b.insert(1, 20);
+        assert_eq!(a.get(1), Some(&10));
+        assert_eq!(b.get(1), Some(&20));
+    }
+}

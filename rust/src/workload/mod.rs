@@ -20,11 +20,13 @@
 
 pub mod arrival;
 pub mod scenario;
+pub mod trace;
 
 pub use scenario::{
     AdmissionProfile, ArrivalStream, Burst, CandidateProfile, Coldstart, Diurnal, Scenario,
     ScenarioKind, Steady,
 };
+pub use trace::ReplaySource;
 
 use crate::relay::trigger::BehaviorMeta;
 use crate::util::rng::Rng;
@@ -68,6 +70,11 @@ pub struct WorkloadConfig {
     /// Zipf exponent of candidate-item popularity (`--zipf`).
     pub cand_zipf_s: f64,
     pub seed: u64,
+    /// When set, arrivals are replayed verbatim from a recorded binary
+    /// trace ([`trace`]) instead of being generated; the other fields
+    /// (restored from the trace header) still drive candidate sets,
+    /// admission seeding and long/short classification.
+    pub replay: Option<ReplaySource>,
 }
 
 impl Default for WorkloadConfig {
@@ -90,25 +97,49 @@ impl Default for WorkloadConfig {
             cand_catalog: 100_000,
             cand_zipf_s: 1.1,
             seed: 42,
+            replay: None,
         }
     }
 }
 
-/// One generated request.
+/// One generated request.  Compact by design: at 100M-request scale the
+/// arrival heap and the simulator's event queue are full of copies of
+/// this record, so id / user / prefix length are `u32` (the id budget is
+/// guarded at config parse and re-checked at emission) and the whole
+/// record packs into 24 bytes instead of 40.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GenRequest {
-    pub id: u64,
     pub arrival_us: u64,
-    pub user: u64,
+    pub id: u32,
+    pub user: u32,
     /// Long-term behaviour prefix length for this user (tokens).
-    pub prefix_len: usize,
+    pub prefix_len: u32,
     /// True for rapid-refresh follow-ups of an earlier request.
     pub is_refresh: bool,
 }
 
 impl GenRequest {
+    /// Request id widened to the metrics/coordinator `u64` key space.
+    #[inline]
+    pub fn rid(&self) -> u64 {
+        self.id as u64
+    }
+
+    /// User id widened to the coordinator's `u64` key space (the
+    /// coordinator itself stays 64-bit: production user ids need it).
+    #[inline]
+    pub fn uid(&self) -> u64 {
+        self.user as u64
+    }
+
+    /// Prefix length as the `usize` the model/cost layers consume.
+    #[inline]
+    pub fn plen(&self) -> usize {
+        self.prefix_len as usize
+    }
+
     pub fn meta(&self, dim: usize) -> BehaviorMeta {
-        BehaviorMeta { user: self.user, prefix_len: self.prefix_len, dim }
+        BehaviorMeta { user: self.uid(), prefix_len: self.plen(), dim }
     }
 }
 
@@ -186,17 +217,26 @@ pub fn user_prefix_len(cfg: &WorkloadConfig, user: u64) -> usize {
 
 /// Generate the configured scenario's arrival trace, sorted by arrival
 /// time.  `ScenarioKind::Steady` reproduces the pre-scenario generator
-/// bit-for-bit for a fixed seed.
+/// bit-for-bit for a fixed seed.  With [`WorkloadConfig::replay`] set the
+/// trace is read back from the recorded file instead.
 pub fn generate(cfg: &WorkloadConfig) -> Vec<GenRequest> {
-    cfg.scenario.as_scenario().generate(cfg)
+    match &cfg.replay {
+        Some(_) => stream(cfg).collect(),
+        None => cfg.scenario.as_scenario().generate(cfg),
+    }
 }
 
 /// Stream the configured scenario's arrivals lazily, in the exact order
 /// [`generate`] would materialize them (which is itself just a collect of
 /// this stream).  The simulator consumes this instead of a trace vector,
-/// so memory stays O(live refresh bursts) at million-user scale.
+/// so memory stays O(live refresh bursts) at million-user scale.  With
+/// [`WorkloadConfig::replay`] set, arrivals come verbatim from the
+/// recorded trace (O(1) memory: one buffered reader).
 pub fn stream(cfg: &WorkloadConfig) -> ArrivalStream {
-    cfg.scenario.as_scenario().stream(cfg)
+    match &cfg.replay {
+        Some(src) => ArrivalStream::replay(cfg, src),
+        None => cfg.scenario.as_scenario().stream(cfg),
+    }
 }
 
 /// Deterministic per-request candidate set (order-preserving, deduped):
@@ -223,7 +263,7 @@ pub fn candidate_set_into(cfg: &WorkloadConfig, req: &GenRequest, out: &mut Vec<
     let profile = cfg.scenario.candidate_profile();
     let catalog = cfg.cand_catalog.max(1);
     let hot = profile.hot_items.clamp(1, catalog);
-    let mut rng = Rng::new(cfg.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xCA9D);
+    let mut rng = Rng::new(cfg.seed ^ req.rid().wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xCA9D);
     out.reserve(cfg.cand_per_request);
     for _ in 0..cfg.cand_per_request {
         let item = if rng.bernoulli(profile.hot_frac) {
@@ -251,12 +291,12 @@ pub struct TraceStats {
 
 pub fn stats(cfg: &WorkloadConfig, trace: &[GenRequest]) -> TraceStats {
     use std::collections::HashSet;
-    let mut users: HashSet<u64> = HashSet::new();
-    let mut long_users: HashSet<u64> = HashSet::new();
+    let mut users: HashSet<u32> = HashSet::new();
+    let mut long_users: HashSet<u32> = HashSet::new();
     let (mut long_req, mut refresh, mut sum_prefix) = (0usize, 0usize, 0f64);
     for r in trace {
         users.insert(r.user);
-        if r.prefix_len > cfg.long_threshold {
+        if r.plen() > cfg.long_threshold {
             long_users.insert(r.user);
             long_req += 1;
         }
@@ -323,7 +363,7 @@ mod tests {
         assert!(s.effective_qps > 450.0 && s.effective_qps < 700.0, "{s:?}");
         assert!(trace.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
         // ids unique
-        let mut ids: Vec<u64> = trace.iter().map(|r| r.id).collect();
+        let mut ids: Vec<u32> = trace.iter().map(|r| r.id).collect();
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), trace.len());
@@ -334,11 +374,11 @@ mod tests {
         let cfg = WorkloadConfig { refresh_prob: 1.0, ..Default::default() };
         let trace = generate(&cfg);
         use std::collections::HashMap;
-        let base: HashMap<u64, usize> =
+        let base: HashMap<u32, u32> =
             trace.iter().filter(|r| !r.is_refresh).map(|r| (r.user, r.prefix_len)).collect();
         for r in trace.iter().filter(|r| r.is_refresh) {
             assert_eq!(base.get(&r.user), Some(&r.prefix_len));
-            assert!(r.prefix_len > cfg.long_threshold, "only long users burst");
+            assert!(r.plen() > cfg.long_threshold, "only long users burst");
         }
         let s = stats(&cfg, &trace);
         assert!(s.refresh_frac > 0.02, "refresh traffic present: {s:?}");
@@ -383,11 +423,11 @@ mod tests {
                 scenario: ScenarioKind::parse(kind).unwrap(),
                 ..Default::default()
             };
-            let sets: Vec<HashSet<u64>> = (0..120u64)
+            let sets: Vec<HashSet<u64>> = (0..120u32)
                 .map(|id| {
                     let req = GenRequest {
                         id,
-                        arrival_us: id,
+                        arrival_us: id as u64,
                         user: id,
                         prefix_len: 4096,
                         is_refresh: false,

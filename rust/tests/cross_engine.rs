@@ -33,7 +33,7 @@ fn sim_outcomes(cfg: &SimConfig, wl: &WorkloadConfig) -> Vec<(u64, CacheOutcome)
     let mut cfg = cfg.clone();
     cfg.log_outcomes = true;
     let m = run_sim(cfg, wl).expect("simulation runs");
-    let mut log = m.outcome_log;
+    let mut log = m.outcome_log();
     log.sort_by_key(|&(id, _)| id);
     log
 }
@@ -58,6 +58,45 @@ fn sim_and_serial_driver_agree_exactly() {
     // Sanity: the trace actually exercised the relay path.
     assert!(sim_log.iter().any(|&(_, o)| o == CacheOutcome::HbmHit), "no relay traffic");
     assert!(sim_log.iter().any(|&(_, o)| o == CacheOutcome::FullInference), "no normal traffic");
+}
+
+/// The bounded streaming comparator reproduces the full-log equivalence
+/// check without materializing the simulator's outcome log: the
+/// serialized reference's outcomes become a dense expectation table and
+/// the simulator checks each completion against it in O(1) memory per
+/// request.  This is the memory-bounded path scale replays rely on.
+#[test]
+fn streaming_outcome_check_matches_serial_reference() {
+    let wl = workload(false);
+    let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+    cfg.pipeline.t_life_us = 2 * wl.duration_us;
+    let serial = run_reference(&cfg, &wl).expect("serialized reference runs").outcomes;
+    let table = std::sync::Arc::new(relaygr::metrics::outcome_table(serial.iter().copied()));
+
+    let mut check_cfg = cfg.clone();
+    check_cfg.outcome_check = Some(table.clone());
+    let m = run_sim(check_cfg, &wl).expect("simulation runs");
+    let check = m.outcome_check().expect("check mode was requested");
+    assert!(
+        check.matches(),
+        "streaming compare diverged: seen {} of {}, first mismatches {:?}",
+        check.seen,
+        serial.len(),
+        check.mismatches
+    );
+    assert!(m.outcome_log().is_empty(), "check mode must not accumulate a log");
+
+    // A poisoned table must be detected (and reported boundedly).
+    let mut bad = table.as_ref().clone();
+    let flip = bad.iter().position(|&c| c != 0).expect("table is non-empty");
+    bad[flip] = if bad[flip] == 1 { 2 } else { 1 };
+    let mut bad_cfg = cfg.clone();
+    bad_cfg.outcome_check = Some(std::sync::Arc::new(bad));
+    let m = run_sim(bad_cfg, &wl).expect("simulation runs");
+    let check = m.outcome_check().expect("check mode was requested");
+    assert!(!check.matches(), "poisoned expectation table must be flagged");
+    assert_eq!(check.mismatches.len(), 1, "exactly one entry was poisoned");
+    assert_eq!(check.mismatches[0].request, flip as u64);
 }
 
 /// `--admission static` (the default) must stay decision-for-decision
@@ -351,7 +390,7 @@ fn segment_reuse_cuts_rank_compute_with_identical_outcomes() {
         cfg.segment_frac = frac;
         cfg.log_outcomes = true;
         let m = run_sim(cfg.clone(), &wl).expect("simulation runs");
-        let mut sim_log = m.outcome_log.clone();
+        let mut sim_log = m.outcome_log();
         sim_log.sort_by_key(|&(id, _)| id);
         let serial = run_reference(&cfg, &wl).expect("serialized reference runs");
         assert_eq!(
@@ -410,7 +449,7 @@ fn segments_agree_under_nondefault_tier_policies() {
         cfg.segment_frac = 0.25;
         cfg.log_outcomes = true;
         let sim_m = run_sim(cfg.clone(), &wl).expect("simulation runs");
-        let mut sim_log = sim_m.outcome_log.clone();
+        let mut sim_log = sim_m.outcome_log();
         sim_log.sort_by_key(|&(id, _)| id);
         let serial = run_reference(&cfg, &wl).expect("serialized reference runs");
         assert_eq!(sim_log.len(), serial.outcomes.len(), "{policy:?}: trace length");
@@ -504,7 +543,7 @@ fn live_engine_matches_serial_reference() {
     let mut live: Vec<(u64, CacheOutcome)> = Vec::new();
     for req in &trace {
         let lc = cluster.drive_request(*req, &mut rng).unwrap();
-        live.push((req.id, lc.outcome));
+        live.push((req.rid(), lc.outcome));
     }
     cluster.shutdown();
     live.sort_by_key(|&(id, _)| id);
@@ -520,9 +559,10 @@ fn live_engine_matches_serial_reference() {
         })
     })
     .unwrap();
-    let serial = drive_reference(coord, &trace, &wl, |_| spec.kv_bytes(), |_, _, _| 0.0)
-        .expect("serialized reference runs")
-        .outcomes;
+    let serial =
+        drive_reference(coord, trace.iter().copied(), &wl, |_| spec.kv_bytes(), |_, _, _| 0.0)
+            .expect("serialized reference runs")
+            .outcomes;
     assert_eq!(live, serial, "live engine diverged from the shared coordinator's decisions");
     assert!(live.iter().all(|&(_, o)| o == CacheOutcome::HbmHit),
         "all-long serialized trace must relay every request: {live:?}");

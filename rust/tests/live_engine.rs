@@ -136,10 +136,10 @@ fn concurrent_same_user_requests_are_safe() {
             s.spawn(move || {
                 let mut rng = Rng::new(i);
                 let req = relaygr::workload::GenRequest {
-                    id: i,
+                    id: i as u32,
                     arrival_us: 0,
                     user: 777,
-                    prefix_len,
+                    prefix_len: prefix_len as u32,
                     is_refresh: i > 0,
                 };
                 let lc = cluster.drive_request(req, &mut rng).unwrap();

@@ -258,7 +258,7 @@ fn legacy_generate(cfg: &WorkloadConfig) -> Vec<GenRequest> {
     let mut out = Vec::new();
     let mut t = 0.0_f64;
     let rate_per_us = cfg.qps / 1e6;
-    let mut id = 0u64;
+    let mut id = 0u32;
     while (t as u64) < cfg.duration_us {
         t += rng.exponential(rate_per_us);
         let arrival = t as u64;
@@ -267,7 +267,13 @@ fn legacy_generate(cfg: &WorkloadConfig) -> Vec<GenRequest> {
         }
         let user = rng.zipf(cfg.num_users, cfg.zipf_s) - 1;
         let prefix_len = user_prefix_len(cfg, user);
-        out.push(GenRequest { id, arrival_us: arrival, user, prefix_len, is_refresh: false });
+        out.push(GenRequest {
+            id,
+            arrival_us: arrival,
+            user: user as u32,
+            prefix_len: prefix_len as u32,
+            is_refresh: false,
+        });
         id += 1;
         if prefix_len > cfg.long_threshold && rng.bernoulli(cfg.refresh_prob) {
             let burst = 1 + rng.range(0, cfg.refresh_burst_max);
@@ -278,7 +284,13 @@ fn legacy_generate(cfg: &WorkloadConfig) -> Vec<GenRequest> {
                 if rt >= cfg.duration_us {
                     break;
                 }
-                out.push(GenRequest { id, arrival_us: rt, user, prefix_len, is_refresh: true });
+                out.push(GenRequest {
+                    id,
+                    arrival_us: rt,
+                    user: user as u32,
+                    prefix_len: prefix_len as u32,
+                    is_refresh: true,
+                });
                 id += 1;
             }
         }

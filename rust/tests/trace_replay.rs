@@ -1,0 +1,82 @@
+//! Trace record→replay round trip, pinned across engines: for every
+//! built-in scenario, recording the arrival stream and replaying it from
+//! the file must yield byte-identical per-request outcomes to the live
+//! generator — under both the discrete-event simulator and the
+//! serialized reference driver.  A replayed trace carries its full
+//! workload config in the header, so candidate sets, admission seeding
+//! and long/short classification reproduce without any side channel.
+
+use relaygr::cluster::{run_reference, run_sim, SimConfig};
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::pipeline::CacheOutcome;
+use relaygr::relay::tier::DramPolicy;
+use relaygr::workload::{trace, ScenarioKind, WorkloadConfig};
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("relaygr_trace_replay_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_str().unwrap().to_string()
+}
+
+fn workload(kind: ScenarioKind) -> WorkloadConfig {
+    WorkloadConfig {
+        qps: 40.0,
+        duration_us: 5_000_000,
+        num_users: 5_000,
+        fixed_long_len: Some(4096),
+        max_prefix: 4096,
+        refresh_prob: 0.3,
+        scenario: kind,
+        seed: 99,
+        ..Default::default()
+    }
+}
+
+fn sim_outcomes(cfg: &SimConfig, wl: &WorkloadConfig) -> Vec<(u64, CacheOutcome)> {
+    let mut cfg = cfg.clone();
+    cfg.log_outcomes = true;
+    let mut log = run_sim(cfg, wl).expect("simulation runs").outcome_log();
+    log.sort_by_key(|&(id, _)| id);
+    log
+}
+
+/// The property the trace format exists for: replay == live, per
+/// request, on every scenario, under both engines — and the replayed
+/// run still matches across engines (the trace changes the arrival
+/// *source*, never a decision).
+#[test]
+fn replay_outcomes_bit_identical_on_every_scenario_and_engine() {
+    for name in ScenarioKind::NAMES {
+        let wl = workload(ScenarioKind::parse(name).expect("built-in scenario"));
+        let path = tmp(&format!("{name}.trace"));
+        let (records, _) = trace::record(&path, &wl).expect("trace records");
+        assert!(records > 0, "{name}: empty trace");
+        let replay = trace::open_replay(&path).expect("trace header parses");
+
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.pipeline.t_life_us = 2 * wl.duration_us;
+
+        let live_sim = sim_outcomes(&cfg, &wl);
+        let replay_sim = sim_outcomes(&cfg, &replay);
+        assert_eq!(live_sim.len() as u64, records, "{name}: sim served the whole trace");
+        assert_eq!(live_sim, replay_sim, "{name}: sim diverged between live and replay");
+
+        let live_ref = run_reference(&cfg, &wl).expect("reference runs").outcomes;
+        let replay_ref = run_reference(&cfg, &replay).expect("reference replays").outcomes;
+        assert_eq!(live_ref, replay_ref, "{name}: reference diverged between live and replay");
+        assert_eq!(replay_sim, replay_ref, "{name}: engines diverged on the replayed trace");
+    }
+}
+
+/// Replay composes with the DRAM tier and refresh bursts (the stateful
+/// cache paths): same trace, same decisions, live or from disk.
+#[test]
+fn replay_bit_identical_with_dram_tier() {
+    let mut wl = workload(ScenarioKind::Steady);
+    wl.refresh_prob = 0.6;
+    let path = tmp("dram.trace");
+    trace::record(&path, &wl).expect("trace records");
+    let replay = trace::open_replay(&path).expect("trace header parses");
+    let cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) });
+    assert_eq!(sim_outcomes(&cfg, &wl), sim_outcomes(&cfg, &replay));
+}

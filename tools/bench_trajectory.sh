@@ -1,0 +1,84 @@
+#!/usr/bin/env bash
+# Perf-trajectory tooling: fold the per-suite BENCH_*.json files emitted
+# by `cargo bench` into one snapshot under bench/trajectory/, and diff
+# two snapshots so regressions show up in the PR log.
+#
+#   tools/bench_trajectory.sh collect <label> [bench-dir] [out-dir]
+#       Reads <bench-dir>/BENCH_*.json (default: rust/) and writes
+#       <out-dir>/<label>.json (default: bench/trajectory/).
+#
+#   tools/bench_trajectory.sh diff <old.json> <new.json>
+#       Prints per-bench deltas for mean_us and events_per_sec.  Exits
+#       nonzero only on unreadable input; perf deltas are informational
+#       (CI runners are too noisy for a hard gate) but regressions are
+#       flagged loudly.
+set -euo pipefail
+
+cmd="${1:-}"
+case "$cmd" in
+  collect)
+    label="${2:?usage: bench_trajectory.sh collect <label> [bench-dir] [out-dir]}"
+    bench_dir="${3:-rust}"
+    out_dir="${4:-bench/trajectory}"
+    mkdir -p "$out_dir"
+    python3 - "$label" "$bench_dir" "$out_dir" <<'PY'
+import glob, json, os, sys
+label, bench_dir, out_dir = sys.argv[1:4]
+suites = {}
+for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for r in doc.get("results", []):
+        row = {k: v for k, v in r.items() if k != "name"}
+        rows[r["name"]] = row
+    suites[doc.get("suite", os.path.basename(path))] = rows
+if not suites:
+    sys.exit(f"no BENCH_*.json found under {bench_dir}/ — run `cargo bench` first")
+out = {"schema": 1, "label": label, "measured": True, "suites": suites}
+dest = os.path.join(out_dir, f"{label}.json")
+with open(dest, "w") as f:
+    json.dump(out, f, indent=2, sort_keys=True)
+    f.write("\n")
+print(f"wrote {dest} ({sum(len(v) for v in suites.values())} benches, "
+      f"{len(suites)} suites)")
+PY
+    ;;
+  diff)
+    old="${2:?usage: bench_trajectory.sh diff <old.json> <new.json>}"
+    new="${3:?usage: bench_trajectory.sh diff <old.json> <new.json>}"
+    python3 - "$old" "$new" <<'PY'
+import json, sys
+old_path, new_path = sys.argv[1:3]
+def load(p):
+    with open(p) as f:
+        return json.load(f)
+old, new = load(old_path), load(new_path)
+if not old.get("measured", True):
+    print(f"note: {old_path} is an unmeasured placeholder — no baseline to diff")
+    sys.exit(0)
+print(f"trajectory diff: {old.get('label')} → {new.get('label')}")
+METRICS = [("mean_us", -1), ("events_per_sec", +1)]  # sign: +1 = higher is better
+for suite, benches in sorted(new.get("suites", {}).items()):
+    base = old.get("suites", {}).get(suite, {})
+    for name, row in sorted(benches.items()):
+        prev = base.get(name)
+        if prev is None:
+            print(f"  {suite}/{name}: new bench (no baseline)")
+            continue
+        for metric, sign in METRICS:
+            a, b = prev.get(metric), row.get(metric)
+            if a is None or b is None or not a:
+                continue
+            pct = (b - a) / a * 100.0
+            tag = ""
+            if sign * pct < -25.0:
+                tag = "  <-- REGRESSION"
+            print(f"  {suite}/{name} {metric}: {a:.1f} → {b:.1f} ({pct:+.1f}%){tag}")
+PY
+    ;;
+  *)
+    echo "usage: $0 collect <label> [bench-dir] [out-dir] | diff <old.json> <new.json>" >&2
+    exit 2
+    ;;
+esac
