@@ -1,0 +1,126 @@
+//! Batch-former microbenchmarks (PR 7): the coordinator's offer →
+//! fill/deadline → close cycle at representative windows, isolated from
+//! ranking compute.  Every cycle shape must honour the zero-allocation
+//! steady-state contract (pooled member and drain buffers), which this
+//! binary asserts on every run — the batch former sits on the same
+//! microsecond control-plane budget as routing and admission.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_results};
+
+#[global_allocator]
+static ALLOC: harness::CountingAlloc = harness::CountingAlloc;
+
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::coordinator::{BatchDecision, RelayCoordinator, ReqId, Stage};
+use relaygr::relay::tier::DramPolicy;
+
+/// A coordinator with `n` perpetually rank-ready passes for one user
+/// (affinity routes them to a single instance).  The former never
+/// consumes request state, so the same handles cycle through
+/// offer/close forever — the benchmarks measure the batch control plane
+/// alone, with the member requests held steady.
+fn ready_coord(window_us: u64, max: usize, n: u64) -> (RelayCoordinator<()>, Vec<ReqId>, usize) {
+    let mut cfg = relaygr::cluster::SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+    cfg.batch_window_us = window_us;
+    cfg.batch_max = max;
+    let mut coord: RelayCoordinator<()> =
+        RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator())
+            .expect("coordinator builds");
+    let mut inst = 0usize;
+    let reqs: Vec<ReqId> = (0..n)
+        .map(|i| {
+            let (req, _) = coord.on_arrival(i * 10, 42, 4096, &[]);
+            inst = coord.on_stage_done(i * 10, req, Stage::Preproc).expect("routed");
+            let _ = coord.on_rank_start(i * 10, req);
+            req
+        })
+        .collect();
+    (coord, reqs, inst)
+}
+
+fn main() {
+    let mut results = Vec::new();
+
+    // Window 0: the unbatched identity path.  Every offer returns
+    // `Solo` before touching any batch state — the cost of leaving the
+    // feature compiled in but switched off.
+    {
+        let (mut coord, reqs, _) = ready_coord(0, 32, 8);
+        let mut now = 0u64;
+        results.push(bench("batch_former/offer8_window0_solo", 100, 20_000, || {
+            now += 50;
+            for &req in &reqs {
+                assert!(matches!(coord.offer_rank(now, req), BatchDecision::Solo));
+            }
+        }));
+    }
+
+    // Filled flush: offers run the batch to `batch_max` and the filler
+    // closes it immediately — the fast path the simulator and live
+    // engine take under load.
+    for window_us in [100u64, 1_000] {
+        let (mut coord, reqs, inst) = ready_coord(window_us, 8, 8);
+        let mut out: Vec<ReqId> = Vec::with_capacity(8);
+        let mut now = 0u64;
+        let mut r = bench(
+            &format!("batch_former/fill8_flush_window{window_us}us"),
+            100,
+            20_000,
+            || {
+                now += window_us;
+                let mut gen = 0u64;
+                for &req in &reqs {
+                    if let BatchDecision::Filled { gen: g } = coord.offer_rank(now, req) {
+                        gen = g;
+                    }
+                }
+                assert!(coord.close_batch(inst, gen, &mut out), "eighth offer filled the batch");
+                std::hint::black_box(out.len());
+            },
+        );
+        let passes = 8e6 / r.mean_us.max(1e-9);
+        r.extra.push(("passes_per_sec".to_string(), passes));
+        results.push(r);
+    }
+
+    // Deadline flush: a short batch closed by its window timer (the
+    // simulator's `BatchFlush` event, the reference driver's pending
+    // deadline drain), then a second, stale close against the same
+    // generation — the race every timer flush must lose cleanly after a
+    // `Filled` drain.
+    {
+        let (mut coord, reqs, inst) = ready_coord(1_000, 8, 3);
+        let mut out: Vec<ReqId> = Vec::with_capacity(8);
+        let mut now = 0u64;
+        results.push(bench("batch_former/open3_deadline_flush+stale_close", 100, 20_000, || {
+            now += 1_000;
+            let mut gen = 0u64;
+            for &req in &reqs {
+                if let BatchDecision::Opened { gen: g, .. } = coord.offer_rank(now, req) {
+                    gen = g;
+                }
+            }
+            assert!(coord.close_batch(inst, gen, &mut out), "deadline close drains the batch");
+            std::hint::black_box(out.len());
+            assert!(!coord.close_batch(inst, gen, &mut out), "second close is stale");
+        }));
+    }
+
+    // The zero-allocation contract, extended to the batch former: every
+    // cycle shape above must run allocation-free once member and drain
+    // buffers reach their high-water capacity during warm-up.
+    for r in &results {
+        assert_eq!(
+            r.allocs_per_op,
+            Some(0.0),
+            "steady-state allocation regression on '{}': {:?} allocs/op",
+            r.name,
+            r.allocs_per_op
+        );
+    }
+
+    write_results("batching", &results);
+}

@@ -208,6 +208,50 @@ fn main() {
         }));
     }
 
+    // --- coordinator: batch former (PR 7) ------------------------------------
+    // The microbatching control plane in isolation: offer four
+    // rank-ready passes on one instance until the batch fills, then
+    // close it into a recycled drain buffer.  Member and drain buffers
+    // are pooled (high-water capacity after warm-up), so the
+    // steady-state form/flush cycle is asserted allocation-free below —
+    // the PR 5 contract extended to the batch state.
+    {
+        use relaygr::relay::coordinator::{BatchDecision, RelayCoordinator, ReqId, Stage};
+        let mut sim_cfg = relaygr::cluster::SimConfig::standard(
+            relaygr::relay::baseline::Mode::RelayGr { dram: DramPolicy::Disabled },
+        );
+        sim_cfg.batch_window_us = 1_000;
+        sim_cfg.batch_max = 4;
+        let mut coord: RelayCoordinator<()> =
+            RelayCoordinator::new(sim_cfg.coordinator_config(), |_| sim_cfg.estimator())
+                .expect("coordinator builds");
+        // Four perpetually rank-ready passes for one user (affinity
+        // routes them to a single instance); the former never consumes
+        // request state, so the same handles cycle forever.
+        let mut inst = 0usize;
+        let reqs: Vec<ReqId> = (0..4u64)
+            .map(|i| {
+                let (req, _) = coord.on_arrival(i * 10, 42, 4096, &[]);
+                inst = coord.on_stage_done(i * 10, req, Stage::Preproc).expect("routed");
+                let _ = coord.on_rank_start(i * 10, req);
+                req
+            })
+            .collect();
+        let mut out: Vec<ReqId> = Vec::with_capacity(4);
+        let mut now = 0u64;
+        results.push(bench("coordinator/batch_form+flush", 100, 20_000, || {
+            now += 50;
+            let mut gen = 0u64;
+            for &req in &reqs {
+                if let BatchDecision::Filled { gen: g } = coord.offer_rank(now, req) {
+                    gen = g;
+                }
+            }
+            assert!(coord.close_batch(inst, gen, &mut out), "fourth offer filled the batch");
+            std::hint::black_box(out.len());
+        }));
+    }
+
     // --- metrics -----------------------------------------------------------
     let mut h = Histogram::new();
     let mut x = 1.0f64;
@@ -273,6 +317,7 @@ fn main() {
         "trigger/decide+release",
         "hierarchy/lookup_hit",
         "sharded/remove+insert+get_mut",
+        "coordinator/batch_form+flush",
     ] {
         let r = results.iter().find(|r| r.name == name).expect("hot op benchmarked");
         assert_eq!(

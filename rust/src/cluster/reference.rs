@@ -6,20 +6,34 @@
 //! This is the third decision engine next to the discrete-event
 //! simulator and the live threaded engine — the one with *no* timing at
 //! all, so any divergence from it is a genuine policy difference.  It is
-//! shared by `relaygr figure tiers`/`figure segments` and by
-//! `tests/cross_engine.rs`, which pin the simulator (and, with
+//! shared by `relaygr figure tiers`/`figure segments`/`figure batching`
+//! and by `tests/cross_engine.rs`, which pin the simulator (and, with
 //! artifacts, the live engine) against it.
+//!
+//! Microbatching (`--batch-window > 0`): each classified rank pass is
+//! offered to the coordinator's batch former.  Held members defer their
+//! `rank_compute`/`on_rank_done` until the batch flushes — at its window
+//! deadline (processed in deadline order against the arrival clock) or
+//! when `batch_max` fills it — so co-batched duplicate segments dedup
+//! through the single-flight store exactly as in the simulator.  Window
+//! 0 takes the inline path below, bit-identical to the unbatched driver.
+
+use std::collections::VecDeque;
 
 use anyhow::{bail, Result};
 
 use crate::cluster::SimConfig;
 use crate::metrics::outcome_index;
-use crate::relay::coordinator::{RankAction, RelayCoordinator, SignalAction, Stage};
+use crate::model::BatchMember;
+use crate::relay::coordinator::{
+    BatchDecision, RankAction, RelayCoordinator, ReqId, SignalAction, Stage,
+};
 use crate::relay::hbm::HbmStats;
 use crate::relay::hierarchy::HierarchyStats;
 use crate::relay::pipeline::CacheOutcome;
 use crate::relay::segment::SegmentStats;
 use crate::relay::trigger::TriggerStats;
+use crate::util::slab::SecondaryMap;
 use crate::workload::{candidate_set_into, stream, GenRequest, WorkloadConfig};
 
 /// One serialized run: per-request outcomes (sorted by request id), the
@@ -37,24 +51,112 @@ pub struct ReferenceRun {
     pub trigger: TriggerStats,
 }
 
-/// Drive `trace` through `coord` serially.  `rank_cost` receives
-/// `(cached, prefix_len, segments_skipped)` per request; candidate sets
-/// come from the same workload derivation the other engines share.
-/// The trace is consumed as a stream, so replaying a recorded trace
-/// holds O(1) request state beyond the outcome log itself.
+/// Completion bookkeeping + pooled batch state shared by the inline
+/// (solo) path and batch flushes.
+struct Acc {
+    outcomes: Vec<(u64, CacheOutcome)>,
+    outcome_counts: [u64; 5],
+    rank_us_sum: f64,
+    /// Requests held open by the batch former: the per-request metadata
+    /// needed when the batch flushes.
+    held: SecondaryMap<GenRequest>,
+    batch_buf: Vec<ReqId>,
+    member_buf: Vec<BatchMember>,
+}
+
+impl Acc {
+    fn finish(
+        &mut self,
+        coord: &mut RelayCoordinator<()>,
+        now: u64,
+        handle: ReqId,
+        rid: u64,
+        kv: usize,
+    ) {
+        let done = coord.on_rank_done(now, handle, kv);
+        if let Some(bytes) = done.spill {
+            coord.complete_spill(done.instance, done.user, bytes, ());
+        }
+        self.outcome_counts[outcome_index(done.outcome)] += 1;
+        self.outcomes.push((rid, done.outcome));
+    }
+}
+
+/// Flush batch `gen` on `inst` at clock `now`: plan every member first
+/// (co-batched duplicates dedup into `Join` against the first member's
+/// `Produce`), price the batch once, then complete each member.  Stale
+/// generations (already flushed by `Filled`) are a no-op.
+fn flush<K, R>(
+    coord: &mut RelayCoordinator<()>,
+    acc: &mut Acc,
+    now: u64,
+    inst: usize,
+    gen: u64,
+    kv_bytes: &K,
+    rank_cost: &R,
+) where
+    K: Fn(usize) -> usize,
+    R: Fn(&[BatchMember], usize) -> f64,
+{
+    let mut batch = std::mem::take(&mut acc.batch_buf);
+    if !coord.close_batch(inst, gen, &mut batch) {
+        acc.batch_buf = batch;
+        return;
+    }
+    acc.member_buf.clear();
+    let mut skipped = 0;
+    for &h in batch.iter() {
+        let g = *acc.held.get(h).expect("held batch member");
+        let rc = coord.rank_compute(now, h);
+        skipped += rc.segments.map(|p| p.skipped()).unwrap_or(0);
+        acc.member_buf.push(BatchMember { cached: rc.cached, prefix_len: g.plen() });
+    }
+    let members = std::mem::take(&mut acc.member_buf);
+    acc.rank_us_sum += rank_cost(&members, skipped);
+    acc.member_buf = members;
+    for &h in batch.iter() {
+        let g = acc.held.remove(h).expect("held batch member");
+        acc.finish(coord, now, h, g.rid(), kv_bytes(g.plen()));
+    }
+    batch.clear();
+    acc.batch_buf = batch;
+}
+
+/// Drive `trace` through `coord` serially.  `rank_cost` prices one
+/// (possibly single-member) batched rank pass from its member
+/// descriptors and the summed segment-reuse count; candidate sets come
+/// from the same workload derivation the other engines share.  The
+/// trace is consumed as a stream, so replaying a recorded trace holds
+/// O(in-flight) request state beyond the outcome log itself.
 pub fn drive_reference(
     mut coord: RelayCoordinator<()>,
     trace: impl IntoIterator<Item = GenRequest>,
     wl: &WorkloadConfig,
     kv_bytes: impl Fn(usize) -> usize,
-    rank_cost: impl Fn(bool, usize, usize) -> f64,
+    rank_cost: impl Fn(&[BatchMember], usize) -> f64,
 ) -> Result<ReferenceRun> {
-    let mut outcomes = Vec::new();
-    let mut outcome_counts = [0u64; 5];
-    let mut rank_us_sum = 0.0;
+    let mut acc = Acc {
+        outcomes: Vec::new(),
+        outcome_counts: [0u64; 5],
+        rank_us_sum: 0.0,
+        held: SecondaryMap::new(),
+        batch_buf: Vec::new(),
+        member_buf: Vec::new(),
+    };
+    // Open batches pending their window deadline, in open order — which
+    // is deadline order, since arrivals are monotone and the window is
+    // fixed.
+    let mut pending: VecDeque<(u64, usize, u64)> = VecDeque::new();
     let mut cands: Vec<u64> = Vec::new();
     for req in trace {
         let now = req.arrival_us;
+        // Batches whose window closed before this arrival flush first,
+        // at their deadline clock — matching the simulator's
+        // `BatchFlush` timer event.
+        while pending.front().is_some_and(|&(d, _, _)| d <= now) {
+            let (d, inst, gen) = pending.pop_front().unwrap();
+            flush(&mut coord, &mut acc, d, inst, gen, &kv_bytes, &rank_cost);
+        }
         if coord.segments_enabled() {
             candidate_set_into(wl, &req, &mut cands);
         } else {
@@ -86,30 +188,46 @@ pub fn drive_reference(
             // than report decisions from an unresolved request.
             other => bail!("serialized driver saw {other:?} for request {}", req.id),
         }
-        let rc = coord.rank_compute(now, handle);
-        let skipped = rc.segments.map(|p| p.skipped()).unwrap_or(0);
-        rank_us_sum += rank_cost(rc.cached, req.plen(), skipped);
-        let done = coord.on_rank_done(now, handle, kv_bytes(req.plen()));
-        if let Some(bytes) = done.spill {
-            coord.complete_spill(done.instance, done.user, bytes, ());
+        match coord.offer_rank(now, handle) {
+            BatchDecision::Solo => {
+                let rc = coord.rank_compute(now, handle);
+                let skipped = rc.segments.map(|p| p.skipped()).unwrap_or(0);
+                let m = [BatchMember { cached: rc.cached, prefix_len: req.plen() }];
+                acc.rank_us_sum += rank_cost(&m, skipped);
+                acc.finish(&mut coord, now, handle, req.rid(), kv_bytes(req.plen()));
+            }
+            BatchDecision::Opened { deadline, gen } => {
+                acc.held.insert(handle, req);
+                pending.push_back((deadline, inst, gen));
+            }
+            BatchDecision::Joined => {
+                acc.held.insert(handle, req);
+            }
+            BatchDecision::Filled { gen } => {
+                acc.held.insert(handle, req);
+                flush(&mut coord, &mut acc, now, inst, gen, &kv_bytes, &rank_cost);
+            }
         }
-        outcome_counts[outcome_index(done.outcome)] += 1;
-        outcomes.push((req.rid(), done.outcome));
     }
-    outcomes.sort_by_key(|&(id, _)| id);
+    // End of trace: flush every batch still waiting out its window.
+    while let Some((d, inst, gen)) = pending.pop_front() {
+        flush(&mut coord, &mut acc, d, inst, gen, &kv_bytes, &rank_cost);
+    }
+    acc.outcomes.sort_by_key(|&(id, _)| id);
     Ok(ReferenceRun {
-        mean_rank_us: rank_us_sum / outcomes.len().max(1) as f64,
+        mean_rank_us: acc.rank_us_sum / acc.outcomes.len().max(1) as f64,
         segments: coord.segment_stats(),
         hierarchy: coord.hierarchy_stats(),
         hbm: coord.hbm_stats(),
         trigger: coord.trigger_stats(),
-        outcomes,
-        outcome_counts,
+        outcomes: acc.outcomes,
+        outcome_counts: acc.outcome_counts,
     })
 }
 
 /// Convenience: serialized run of `cfg`'s coordinator over `wl`'s trace,
-/// pricing rank compute with `cfg`'s hardware cost model.
+/// pricing rank compute with `cfg`'s hardware cost model (batched costs
+/// reduce bit-identically to the single-request model at batch size 1).
 pub fn run_reference(cfg: &SimConfig, wl: &WorkloadConfig) -> Result<ReferenceRun> {
     // Same per-scenario adaptive operating point the simulator seeds —
     // the engines must start the closed loop from the same state.
@@ -125,12 +243,6 @@ pub fn run_reference(cfg: &SimConfig, wl: &WorkloadConfig) -> Result<ReferenceRu
         stream(wl),
         wl,
         |p| spec.kv_bytes_for(p),
-        move |cached, p, skipped| {
-            if cached {
-                hw.rank_cached_reuse_us(&spec, p, skipped)
-            } else {
-                hw.rank_full_reuse_us(&spec, p, skipped)
-            }
-        },
+        move |members, skipped| hw.rank_batched_us(&spec, members, skipped),
     )
 }

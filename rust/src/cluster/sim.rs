@@ -34,10 +34,11 @@
 
 use crate::cluster::wheel::TimerWheel;
 use crate::metrics::RunMetrics;
-use crate::model::{HardwareProfile, ModelSpec};
+use crate::model::{BatchMember, HardwareProfile, ModelSpec};
 use crate::relay::baseline::Mode;
 use crate::relay::coordinator::{
-    CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, ReqId, SignalAction, Stage,
+    BatchDecision, CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, ReqId,
+    SignalAction, Stage,
 };
 use crate::relay::pipeline::{Lifecycle, PipelineConfig, StageSampler};
 use crate::relay::router::RouterConfig;
@@ -86,6 +87,12 @@ pub struct SimConfig {
     pub segment_frac: f64,
     /// Staleness bound for cached candidate segments.
     pub seg_ttl_us: u64,
+    /// Microbatch window for the coordinator's batch former
+    /// (`--batch-window`, µs; 0 = unbatched, bit-identical to the
+    /// pre-batching event flow).
+    pub batch_window_us: u64,
+    /// Maximum members per batched rank pass (`--batch-max`).
+    pub batch_max: usize,
     /// Record the bitpacked per-request outcome log in [`RunMetrics`]
     /// (cross-engine equivalence tests; off by default — it grows with
     /// the trace, 8 bytes/request).
@@ -130,6 +137,8 @@ impl SimConfig {
             tiers: None,
             segment_frac: 0.0,
             seg_ttl_us: 3_000_000,
+            batch_window_us: 0,
+            batch_max: 32,
             log_outcomes: false,
             outcome_check: None,
             seed: 7,
@@ -185,6 +194,8 @@ impl SimConfig {
                 version: 0,
                 tiers: Vec::new(),
             },
+            batch_window_us: self.batch_window_us,
+            batch_max: self.batch_max,
         }
     }
 
@@ -233,6 +244,9 @@ enum Ev {
     /// A DRAM→HBM reload of `bytes` finished on `inst` for `user`.
     ReloadDone { user: u64, inst: usize, bytes: usize },
     RankExecDone(ReqId),
+    /// The microbatch window on `inst` closed: flush batch `gen` (a
+    /// stale `gen` — already flushed by `Filled` — is a no-op).
+    BatchFlush { inst: usize, gen: u64 },
 }
 
 /// Per-request timing record (decision state lives in the coordinator).
@@ -283,6 +297,10 @@ pub struct Sim {
     /// Recycled candidate-set buffer (the coordinator copies it into the
     /// request's own recycled slot).
     cand_buf: Vec<u64>,
+    /// Recycled batch-flush buffers (zero steady-state allocation, like
+    /// `cand_buf`): drained members and their cost-model descriptors.
+    batch_buf: Vec<ReqId>,
+    member_buf: Vec<BatchMember>,
     /// `(time, tie-break seq)`-ordered event queue; events are `Copy` and
     /// stored inline in the wheel's recycled slot vectors.
     events: TimerWheel<Ev>,
@@ -335,6 +353,8 @@ impl Sim {
             servers,
             states: SecondaryMap::new(),
             cand_buf: Vec::new(),
+            batch_buf: Vec::new(),
+            member_buf: Vec::new(),
             events: TimerWheel::new(),
             event_seq: 0,
             retrieval,
@@ -392,6 +412,7 @@ impl Sim {
             Ev::RankXferDone(r) => self.on_rank_xfer_done(now, r),
             Ev::ReloadDone { user, inst, bytes } => self.on_reload_done(now, user, inst, bytes),
             Ev::RankExecDone(r) => self.on_rank_exec_done(now, r),
+            Ev::BatchFlush { inst, gen } => self.flush_batch(now, inst, gen),
         }
     }
 
@@ -593,6 +614,26 @@ impl Sim {
     }
 
     fn on_rank_xfer_done(&mut self, now: u64, req: ReqId) {
+        // Offer the classified, execution-ready pass to the instance's
+        // batch former (coordinator policy).  Window 0 answers `Solo`
+        // without touching batch state, keeping the unbatched event
+        // sequence bit-identical.
+        match self.coord.offer_rank(now, req) {
+            BatchDecision::Solo => self.exec_rank_solo(now, req),
+            BatchDecision::Opened { deadline, gen } => {
+                let inst = self.states.get(req).unwrap().rank_instance;
+                self.push(deadline, Ev::BatchFlush { inst, gen });
+            }
+            BatchDecision::Joined => {}
+            BatchDecision::Filled { gen } => {
+                let inst = self.states.get(req).unwrap().rank_instance;
+                self.flush_batch(now, inst, gen);
+            }
+        }
+    }
+
+    /// Unbatched rank execution — exactly the pre-batching pricing path.
+    fn exec_rank_solo(&mut self, now: u64, req: ReqId) {
         let (inst, prefix_len) = {
             let st = self.states.get(req).unwrap();
             (st.rank_instance, st.gen.plen())
@@ -612,6 +653,41 @@ impl Sim {
         self.busy_us[inst] += dur;
         self.states.get_mut(req).unwrap().rank_us = dur;
         self.push(end, Ev::RankExecDone(req));
+    }
+
+    /// Close batch `gen` on `inst` and run it as one batched rank pass:
+    /// plan every member first (co-batched duplicate segments dedup via
+    /// the single-flight store), price once with the sub-linear batched
+    /// cost, occupy one NPU slot, and complete every member at the
+    /// shared end time (`RankExecDone` events in offer order — the
+    /// wheel's `(t, seq)` contract keeps completion order deterministic).
+    fn flush_batch(&mut self, now: u64, inst: usize, gen: u64) {
+        // `close_batch` drains into the recycled buffer; a stale
+        // generation (already flushed by `Filled`) is a no-op.
+        let mut batch = std::mem::take(&mut self.batch_buf);
+        if !self.coord.close_batch(inst, gen, &mut batch) {
+            self.batch_buf = batch;
+            return;
+        }
+        let mut members = std::mem::take(&mut self.member_buf);
+        members.clear();
+        let mut skipped = 0;
+        for &req in batch.iter() {
+            let prefix_len = self.states.get(req).unwrap().gen.plen();
+            let rc = self.coord.rank_compute(now, req);
+            skipped += rc.segments.map(|p| p.skipped()).unwrap_or(0);
+            members.push(BatchMember { cached: rc.cached, prefix_len });
+        }
+        let dur = self.cfg.hw.rank_batched_us(&self.cfg.spec, &members, skipped);
+        let (_, end) = alloc(&mut self.slots[inst], now, dur);
+        self.busy_us[inst] += dur;
+        for &req in batch.iter() {
+            self.states.get_mut(req).unwrap().rank_us = dur;
+            self.push(end, Ev::RankExecDone(req));
+        }
+        batch.clear();
+        self.batch_buf = batch;
+        self.member_buf = members;
     }
 
     fn on_rank_exec_done(&mut self, now: u64, req: ReqId) {

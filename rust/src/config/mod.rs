@@ -174,6 +174,12 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
         if let Some(v) = j.get("headroom_max").and_then(Json::as_f64) {
             cfg.admission.headroom_max = v;
         }
+        if let Some(v) = j.get("batch_window").and_then(Json::as_usize) {
+            cfg.batch_window_us = v as u64;
+        }
+        if let Some(v) = j.get("batch_max").and_then(Json::as_usize) {
+            cfg.batch_max = v;
+        }
     }
     // CLI overrides.
     if let Some(hw) = args.get("hw") {
@@ -195,6 +201,11 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
     }
     cfg.segment_frac = parse_segment_frac(args, cfg.segment_frac)?;
     cfg.admission = parse_admission(args, &cfg.admission)?;
+    cfg.batch_window_us = args.get_u64("batch-window", cfg.batch_window_us)?;
+    cfg.batch_max = args.get_usize("batch-max", cfg.batch_max)?;
+    if cfg.batch_max == 0 {
+        bail!("--batch-max must be >= 1 (use --batch-window 0 to disable batching)");
+    }
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     if cfg.spec.dim % cfg.spec.heads != 0 {
         // Keep heads consistent when dim is overridden.
@@ -272,6 +283,8 @@ pub fn sim_config_json(cfg: &SimConfig, wl: &WorkloadConfig) -> Json {
         )
         .set("segment_cache", cfg.segment_frac.into())
         .set("admission", cfg.admission.label().into())
+        .set("batch_window", cfg.batch_window_us.into())
+        .set("batch_max", cfg.batch_max.into())
         .set("zipf", wl.cand_zipf_s.into())
         .set("seed", cfg.seed.into());
     j
@@ -458,6 +471,38 @@ mod tests {
         let j = sim_config_json(&cfg, &WorkloadConfig::default());
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.req_str("admission").unwrap(), "adaptive");
+    }
+
+    #[test]
+    fn batching_flags_and_file_keys_layer() {
+        // Defaults: unbatched — the PR 6-identical configuration.
+        let none = sim_config(&args(&["figure"]), Mode::Baseline).unwrap();
+        assert_eq!(none.batch_window_us, 0);
+        assert_eq!(none.batch_max, 32);
+        // CLI flags.
+        let a = args(&["figure", "--batch-window", "500", "--batch-max", "8"]);
+        let cfg = sim_config(&a, Mode::Baseline).unwrap();
+        assert_eq!(cfg.batch_window_us, 500);
+        assert_eq!(cfg.batch_max, 8);
+        // batch_max 0 is rejected, not clamped.
+        let bad = args(&["figure", "--batch-max", "0"]);
+        assert!(sim_config(&bad, Mode::Baseline).is_err());
+        // File keys layer under CLI.
+        let dir = std::env::temp_dir().join("relaygr_batch_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"batch_window": 250, "batch_max": 4}"#).unwrap();
+        let f = args(&["x", "--config", path.to_str().unwrap()]);
+        let cfg = sim_config(&f, Mode::Baseline).unwrap();
+        assert_eq!(cfg.batch_window_us, 250);
+        assert_eq!(cfg.batch_max, 4);
+        let over = args(&["x", "--config", path.to_str().unwrap(), "--batch-window", "100"]);
+        assert_eq!(sim_config(&over, Mode::Baseline).unwrap().batch_window_us, 100);
+        // The run record carries both knobs.
+        let j = sim_config_json(&cfg, &WorkloadConfig::default());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req_usize("batch_window").unwrap(), 250);
+        assert_eq!(parsed.req_usize("batch_max").unwrap(), 4);
     }
 
     #[test]

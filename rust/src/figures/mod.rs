@@ -4,6 +4,7 @@
 //! Results are printed and persisted under `results/`.
 
 pub mod admission;
+pub mod batching;
 pub mod common;
 pub mod fig11;
 pub mod fig12;
@@ -25,7 +26,7 @@ use crate::util::cli::Args;
 pub const ALL: &[&str] = &[
     "fig1", "fig3", "fig11a", "fig11b", "fig11c", "fig11d", "fig12", "fig13a", "fig13b",
     "fig13c", "fig13d", "fig14a", "fig14b", "fig14c", "fig14d", "fig15a", "fig15b", "table1",
-    "scenarios", "tiers", "segments", "admission",
+    "scenarios", "tiers", "segments", "admission", "batching",
 ];
 
 pub fn run_one(id: &str, args: &Args) -> Result<()> {
@@ -52,6 +53,7 @@ pub fn run_one(id: &str, args: &Args) -> Result<()> {
         "tiers" => tiers::tiers(args),
         "segments" => segments::segments(args),
         "admission" => admission::admission(args),
+        "batching" => batching::batching(args),
         other => bail!("unknown figure '{other}' (available: {} all)", ALL.join(" ")),
     }
 }

@@ -62,7 +62,7 @@ fn help() -> String {
      \x20 calibrate  measure live execution costs, write calibration JSON\n\
      \x20 figure     regenerate a paper figure/table: fig1 fig3 fig11a..d fig12\n\
      \x20            fig13a..d fig14a..d fig15a fig15b table1 scenarios tiers\n\
-     \x20            segments admission all\n\
+     \x20            segments admission batching all\n\
      \x20 plan       admission-control capacity planning (Eqs. 1–3); with\n\
      \x20            --admission adaptive also the closed-loop operating\n\
      \x20            bands and per-scenario initial operating points\n\
@@ -86,6 +86,10 @@ fn help() -> String {
      \x20 --admission <m>       admission control: static (default) | adaptive\n\
      \x20                       (+ --headroom-min/-max, --rate-mult-min/-max,\n\
      \x20                       --adapt-window; serve + figure/sim + plan)\n\
+     \x20 --batch-window <us>   coordinator batch-former window in µs for\n\
+     \x20                       microbatched ranking (0 = off, default;\n\
+     \x20                       serve + figure/sim)\n\
+     \x20 --batch-max <n>       max members per batched rank pass (default 32)\n\
      \x20 --jobs <n>            worker threads for the figure/sim grids\n\
      \x20                       (default 1; output byte-identical at any n)\n"
         .to_string()

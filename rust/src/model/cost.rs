@@ -14,6 +14,25 @@
 
 use crate::model::spec::ModelSpec;
 
+/// One member of a microbatched rank pass, as priced by
+/// [`HardwareProfile::rank_batched_us`]: the classification (cached vs
+/// full) and prefix length are fixed per-request *before* the batch
+/// former groups executions, so batching can change pricing but never
+/// outcomes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchMember {
+    pub cached: bool,
+    pub prefix_len: usize,
+}
+
+/// Batch-efficiency exponent: total batched rank compute scales as
+/// n^BATCH_ALPHA in the batch size (M-FALCON-style candidate/request
+/// batching keeps the MXU busier than latency-bound single-request
+/// scoring — the same effect `pre_eff_factor` models for the prefix
+/// pass).  Sub-linear (< 1.0) so per-request compute amortizes; the
+/// single shared launch amortizes the fixed overhead on top.
+const BATCH_ALPHA: f64 = 0.8;
+
 /// Hardware profile: effective rates, not peak (serving-shape batches).
 #[derive(Debug, Clone)]
 pub struct HardwareProfile {
@@ -158,6 +177,44 @@ impl HardwareProfile {
         (base - reused as f64 * self.seg_save_us(spec)).max(self.launch_us)
     }
 
+    /// One microbatched rank pass over `members`, with `reused`
+    /// candidate segments (summed across the batch) served from the
+    /// segment cache.
+    ///
+    /// Contract (pinned by tests and by the `--batch-window 0`
+    /// cross-engine identity):
+    /// * empty batch → 0 (never formed);
+    /// * exactly one member → bit-identical to
+    ///   [`Self::rank_cached_reuse_us`] / [`Self::rank_full_reuse_us`],
+    ///   so unbatched runs price decision-for-decision as before;
+    /// * k > 1 → one shared launch plus the members' summed compute
+    ///   amortized by the sub-linear batch-efficiency curve
+    ///   (`n^(BATCH_ALPHA-1)` per member), minus the segment-reuse
+    ///   savings, floored at the launch overhead.
+    pub fn rank_batched_us(&self, spec: &ModelSpec, members: &[BatchMember], reused: usize) -> f64 {
+        match members {
+            [] => 0.0,
+            [m] if m.cached => self.rank_cached_reuse_us(spec, m.prefix_len, reused),
+            [m] => self.rank_full_reuse_us(spec, m.prefix_len, reused),
+            _ => {
+                let compute: f64 = members
+                    .iter()
+                    .map(|m| {
+                        let flops = if m.cached {
+                            spec.rank_cached_flops(m.prefix_len)
+                        } else {
+                            spec.full_flops(m.prefix_len)
+                        };
+                        flops / self.eff_flops_per_us
+                    })
+                    .sum();
+                let amort = (members.len() as f64).powf(BATCH_ALPHA - 1.0);
+                (self.launch_us + compute * amort - reused as f64 * self.seg_save_us(spec))
+                    .max(self.launch_us)
+            }
+        }
+    }
+
     /// DRAM → HBM reload of a spilled ψ (H2D over PCIe).
     pub fn load_us(&self, kv_bytes: usize) -> f64 {
         self.dma_fixed_us + kv_bytes as f64 / self.pcie_bytes_per_us
@@ -246,6 +303,66 @@ mod tests {
         assert!(
             hw.rank_cached_reuse_us(&spec, p, spec.num_items) > 0.5 * hw.rank_cached_us(&spec, p)
         );
+    }
+
+    #[test]
+    fn batched_rank_is_bit_identical_at_batch_size_one() {
+        // The batch former routes *every* rank pass through the batched
+        // price; a batch of one must reproduce the PR 6 single-request
+        // costs bit-for-bit on both classification paths, at every
+        // reuse count.
+        let hw = HardwareProfile::ascend_910c();
+        let spec = ModelSpec::paper_default();
+        for p in [512, 2048, 4096] {
+            for reused in [0, 1, 16, spec.num_items] {
+                let cached = [BatchMember { cached: true, prefix_len: p }];
+                let full = [BatchMember { cached: false, prefix_len: p }];
+                assert_eq!(
+                    hw.rank_batched_us(&spec, &cached, reused).to_bits(),
+                    hw.rank_cached_reuse_us(&spec, p, reused).to_bits()
+                );
+                assert_eq!(
+                    hw.rank_batched_us(&spec, &full, reused).to_bits(),
+                    hw.rank_full_reuse_us(&spec, p, reused).to_bits()
+                );
+            }
+        }
+        assert_eq!(hw.rank_batched_us(&spec, &[], 0), 0.0);
+    }
+
+    #[test]
+    fn batched_rank_amortizes_sublinearly() {
+        let hw = HardwareProfile::ascend_910c();
+        let spec = ModelSpec::paper_default();
+        let m = BatchMember { cached: true, prefix_len: 2048 };
+        let solo = hw.rank_cached_us(&spec, 2048);
+        let mut last_per_member = solo;
+        for n in [2usize, 4, 8, 16, 32] {
+            let members = vec![m; n];
+            let batched = hw.rank_batched_us(&spec, &members, 0);
+            // Strictly cheaper than n independent passes, floored at
+            // one launch, and per-member cost strictly improving.
+            assert!(batched < n as f64 * solo, "n={n}: {batched} !< {}", n as f64 * solo);
+            assert!(batched >= hw.launch_us);
+            let per_member = batched / n as f64;
+            assert!(per_member < last_per_member, "n={n}: {per_member} !< {last_per_member}");
+            last_per_member = per_member;
+            // But batching is not free: the batch as a whole takes
+            // longer than one solo pass (the P99 tension the figure
+            // sweeps).
+            assert!(batched > solo);
+        }
+        // Mixed batches price each member by its own classification.
+        let mixed =
+            [BatchMember { cached: true, prefix_len: 2048 }, BatchMember { cached: false, prefix_len: 2048 }];
+        let both_cached = [m, m];
+        assert!(hw.rank_batched_us(&spec, &mixed, 0) > hw.rank_batched_us(&spec, &both_cached, 0));
+        // Segment reuse still trims the batched pass, floored at launch.
+        let members = vec![m; 8];
+        assert!(
+            hw.rank_batched_us(&spec, &members, 64) < hw.rank_batched_us(&spec, &members, 0)
+        );
+        assert!(hw.rank_batched_us(&spec, &members, 1_000_000) >= hw.launch_us);
     }
 
     #[test]

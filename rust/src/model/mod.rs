@@ -3,5 +3,5 @@
 pub mod cost;
 pub mod spec;
 
-pub use cost::HardwareProfile;
+pub use cost::{BatchMember, HardwareProfile};
 pub use spec::{Dtype, ModelSpec, ModelType};

@@ -96,6 +96,15 @@ pub struct CoordinatorConfig {
     /// caches and segment caches contend explicitly.  `frac = 0` keeps
     /// behaviour decision-for-decision identical to the ψ-only system.
     pub segment: SegmentConfig,
+    /// Microbatch window (µs): rank passes reaching the same instance
+    /// within this window group into one batched execution
+    /// (`--batch-window`).  `0` disables the batch former entirely —
+    /// [`RelayCoordinator::offer_rank`] answers `Solo` without touching
+    /// batch state, so the unbatched event flow is bit-identical.
+    pub batch_window_us: u64,
+    /// Maximum members per batch (`--batch-max`); reaching it closes the
+    /// batch immediately (`Filled`) without waiting out the window.
+    pub batch_max: usize,
 }
 
 /// Cascade stages the coordinator is told about.
@@ -190,6 +199,46 @@ pub struct Completion {
     pub spill: Option<usize>,
 }
 
+/// What the batch former decided for one rank pass offered to it (see
+/// [`RelayCoordinator::offer_rank`]).  All variants are `Copy`; the
+/// member list stays pooled inside the coordinator until
+/// [`RelayCoordinator::close_batch`] drains it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchDecision {
+    /// Batching is off (window 0): execute this pass alone, exactly as
+    /// the unbatched engines always did.
+    Solo,
+    /// This pass opened a new batch on its instance.  The host must
+    /// arrange a flush at `deadline` (timer-wheel event in the
+    /// simulator, a bounded wait in the live engine) and then call
+    /// [`RelayCoordinator::close_batch`] with `gen` — a stale `gen`
+    /// means a `Filled` flush already closed it.
+    Opened { deadline: u64, gen: u64 },
+    /// Joined the instance's open batch; executed by whoever flushes it.
+    Joined,
+    /// Joining filled the batch to `batch_max`: the host must flush it
+    /// now (`close_batch(gen)`), ahead of the window deadline.
+    Filled { gen: u64 },
+}
+
+/// Per-instance microbatch former state.  The member buffer is pooled:
+/// `close_batch` drains it into the caller's (also recycled) buffer, so
+/// the steady-state form/flush cycle allocates nothing once capacities
+/// are warm.
+struct BatchCtl {
+    members: Vec<ReqId>,
+    /// Monotone per-instance batch generation; guards timer flushes
+    /// against batches already closed by `Filled`.
+    gen: u64,
+    open: bool,
+}
+
+impl BatchCtl {
+    fn new() -> BatchCtl {
+        BatchCtl { members: Vec::new(), gen: 0, open: false }
+    }
+}
+
 /// Per-instance cache-plane state.
 struct InstanceCtl<T> {
     /// The tiered ψ cache: HBM window + lower tiers + promotion flow.
@@ -207,6 +256,9 @@ struct InstanceCtl<T> {
     /// `HbmHit`, DRAM reload → `DramHit`): drives the paper's hit-rate
     /// attribution even when a signal-initiated reload pre-warmed HBM.
     origin: ShardedMap<CacheOutcome>,
+    /// The instance's microbatch former (rank passes grouped per
+    /// `--batch-window` / `--batch-max`).
+    batch: BatchCtl,
 }
 
 /// Per-request decision state, slab-resident.  The `Vec` fields are
@@ -321,6 +373,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 waiting_produce: ShardedMap::new(),
                 waiting_reload: ShardedMap::new(),
                 origin: ShardedMap::new(),
+                batch: BatchCtl::new(),
             })
             .collect();
         Ok(RelayCoordinator { cfg, router, triggers, instances, requests: Slab::new() })
@@ -744,6 +797,80 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         }
     }
 
+    /// Offer one rank pass — classified, wait-resolved, ready to
+    /// execute — to its instance's microbatch former.
+    ///
+    /// The batch-former contract (PR 7): batching groups rank
+    /// *executions* strictly after per-request classification
+    /// ([`RelayCoordinator::on_rank_start`] and the wait/reload
+    /// resolution events), so batch membership may change *pricing and
+    /// timing* but never a request's [`CacheOutcome`].  Every rank pass
+    /// is offered exactly once and lands in exactly one batch (`Solo`
+    /// is its own batch of one); a batch is drained exactly once, by
+    /// whichever of the `Filled` host or the window-deadline flush
+    /// reaches [`RelayCoordinator::close_batch`] first with a live
+    /// generation.
+    pub fn offer_rank(&mut self, now: u64, req: ReqId) -> BatchDecision {
+        let window = self.cfg.batch_window_us;
+        if window == 0 {
+            return BatchDecision::Solo;
+        }
+        let inst = {
+            let st = self.requests.get(req).expect("batch offer for unknown request");
+            st.rank_instance
+        };
+        let max = self.cfg.batch_max.max(1);
+        let b = &mut self.instances[inst].batch;
+        if !b.open {
+            b.gen += 1;
+            b.members.push(req);
+            if max == 1 {
+                // Degenerate cap: every batch closes as it opens.
+                return BatchDecision::Filled { gen: b.gen };
+            }
+            b.open = true;
+            BatchDecision::Opened { deadline: now + window, gen: b.gen }
+        } else {
+            b.members.push(req);
+            if b.members.len() >= max {
+                b.open = false;
+                BatchDecision::Filled { gen: b.gen }
+            } else {
+                BatchDecision::Joined
+            }
+        }
+    }
+
+    /// Close batch `gen` on `instance` and drain its members into `out`
+    /// (cleared first; the internal buffer stays pooled).  Returns
+    /// `false` — and leaves `out` empty — when the generation is stale:
+    /// a `Filled` flush already drained this batch and the deadline
+    /// timer fired late (or vice versa).  The host executes the drained
+    /// members as one batched rank pass: `rank_compute` for *all*
+    /// members first (co-batched duplicate segments dedup into
+    /// `Join`/`Reuse` against the first member's `Produce` via the
+    /// single-flight store), then one batched execution, then
+    /// `on_rank_done` per member (installs/releases each pin exactly
+    /// once).
+    pub fn close_batch(&mut self, instance: usize, gen: u64, out: &mut Vec<ReqId>) -> bool {
+        out.clear();
+        let b = &mut self.instances[instance].batch;
+        if b.gen != gen || b.members.is_empty() {
+            return false;
+        }
+        b.open = false;
+        out.append(&mut b.members);
+        true
+    }
+
+    /// Whether batch `gen` on `instance` is still open (live-engine
+    /// window leaders poll this under the condvar to detect a `Filled`
+    /// flush by another worker).
+    pub fn batch_open(&self, instance: usize, gen: u64) -> bool {
+        let b = &self.instances[instance].batch;
+        b.open && b.gen == gen
+    }
+
     /// Ranking execution starts: consume ψ when cached, and plan the
     /// candidate-segment reuse for this pass — per candidate, reuse a
     /// resident segment, join an in-flight production, or become the
@@ -933,6 +1060,8 @@ mod tests {
             dim: 256,
             kv_bytes: Box::new(|_| 32 << 20),
             segment: SegmentConfig::disabled(),
+            batch_window_us: 0,
+            batch_max: 32,
         }
     }
 
@@ -1339,6 +1468,199 @@ mod tests {
         c.set_model_version(1);
         let (_, p3) = drive_with_cands(&mut c, 200, 42, &[5]);
         assert_eq!(p3.unwrap().produced, 1, "stale-version segment must not match");
+    }
+
+    fn batch_config(window_us: u64, max: usize) -> CoordinatorConfig {
+        let mut cfg = config(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.batch_window_us = window_us;
+        cfg.batch_max = max;
+        cfg
+    }
+
+    /// Bring one request to the rank-ready point (classified, resolved)
+    /// and return its handle + instance.
+    fn rank_ready(c: &mut RelayCoordinator<u32>, now: u64, user: u64) -> (ReqId, usize) {
+        let (req, wants) = c.on_arrival(now, user, 4096, &[]);
+        if wants {
+            if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(now, req) {
+                c.on_psi_ready(now, instance, user, Some(7));
+            }
+        }
+        let inst = c.on_stage_done(now, req, Stage::Preproc).unwrap();
+        let _ = c.on_rank_start(now, req);
+        (req, inst)
+    }
+
+    #[test]
+    fn window_zero_offer_is_solo_and_touches_no_batch_state() {
+        let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
+        for i in 0..8u64 {
+            let (req, inst) = rank_ready(&mut c, i * 1_000, i);
+            assert_eq!(c.offer_rank(i * 1_000, req), BatchDecision::Solo);
+            assert_eq!(c.instances[inst].batch.gen, 0, "window 0 never opens a batch");
+            assert!(c.instances[inst].batch.members.is_empty());
+            let _ = c.rank_compute(i * 1_000, req);
+            c.on_rank_done(i * 1_000, req, 1 << 20);
+        }
+        assert_eq!(c.live_requests(), 0);
+    }
+
+    /// Property: every offered rank pass lands in exactly one batch —
+    /// drained by exactly one successful `close_batch` — regardless of
+    /// how window flushes and `Filled` flushes interleave.
+    #[test]
+    fn every_offered_pass_lands_in_exactly_one_batch() {
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(batch_config(500, 3), |_| Box::new(|_: &BehaviorMeta| 1e9))
+                .unwrap();
+        // (deadline, inst, gen) flushes pending, in open order.
+        let mut pending: Vec<(u64, usize, u64)> = Vec::new();
+        let mut offered: Vec<ReqId> = Vec::new();
+        let mut drained: Vec<ReqId> = Vec::new();
+        let mut buf: Vec<ReqId> = Vec::new();
+        let mut flushes = 0;
+        for i in 0..40u64 {
+            let now = i * 137; // several arrivals per 500 µs window
+            // Window-deadline flushes due before this offer fire first.
+            while pending.first().is_some_and(|&(d, _, _)| d <= now) {
+                let (d, inst, gen) = pending.remove(0);
+                if c.close_batch(inst, gen, &mut buf) {
+                    flushes += 1;
+                    for &r in &buf {
+                        let _ = c.rank_compute(d, r);
+                        drained.push(r);
+                        c.on_rank_done(d, r, 1 << 20);
+                    }
+                }
+            }
+            let (req, inst) = rank_ready(&mut c, now, 42); // one rendezvous instance
+            offered.push(req);
+            match c.offer_rank(now, req) {
+                BatchDecision::Solo => panic!("window > 0 must not answer Solo"),
+                BatchDecision::Opened { deadline, gen } => {
+                    assert_eq!(deadline, now + 500);
+                    pending.push((deadline, inst, gen));
+                }
+                BatchDecision::Joined => {}
+                BatchDecision::Filled { gen } => {
+                    assert!(c.close_batch(inst, gen, &mut buf), "filled batch drains");
+                    flushes += 1;
+                    assert_eq!(buf.len(), 3, "filled at batch_max");
+                    for &r in &buf {
+                        let _ = c.rank_compute(now, r);
+                        drained.push(r);
+                        c.on_rank_done(now, r, 1 << 20);
+                    }
+                }
+            }
+        }
+        for (d, inst, gen) in pending.drain(..) {
+            if c.close_batch(inst, gen, &mut buf) {
+                flushes += 1;
+                for &r in &buf {
+                    let _ = c.rank_compute(d, r);
+                    drained.push(r);
+                    c.on_rank_done(d, r, 1 << 20);
+                }
+            }
+        }
+        // Exactly-once: same passes, same multiplicity, nothing left over.
+        let mut o = offered.clone();
+        let mut g = drained.clone();
+        o.sort_unstable();
+        g.sort_unstable();
+        assert_eq!(o, g, "every offered pass drained exactly once");
+        assert!(flushes > offered.len() / 3, "both Filled and deadline flushes occurred");
+        assert_eq!(c.live_requests(), 0);
+    }
+
+    #[test]
+    fn filled_flush_makes_the_deadline_timer_stale() {
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(batch_config(1_000, 2), |_| Box::new(|_: &BehaviorMeta| 1e9))
+                .unwrap();
+        let (r1, inst) = rank_ready(&mut c, 0, 42);
+        let BatchDecision::Opened { deadline, gen } = c.offer_rank(0, r1) else {
+            panic!("first offer opens");
+        };
+        assert_eq!(deadline, 1_000);
+        assert!(c.batch_open(inst, gen));
+        let (r2, _) = rank_ready(&mut c, 10, 42);
+        assert_eq!(c.offer_rank(10, r2), BatchDecision::Filled { gen });
+        assert!(!c.batch_open(inst, gen), "filled batch is no longer open");
+        let mut buf = Vec::new();
+        assert!(c.close_batch(inst, gen, &mut buf));
+        assert_eq!(buf.len(), 2);
+        for &r in &buf {
+            let _ = c.rank_compute(10, r);
+            c.on_rank_done(10, r, 1 << 20);
+        }
+        // The deadline timer fires later: its generation is stale.
+        assert!(!c.close_batch(inst, gen, &mut buf), "deadline flush after Filled is a no-op");
+        assert!(buf.is_empty());
+        // The next offer opens a fresh generation.
+        let (r3, _) = rank_ready(&mut c, 2_000, 42);
+        let BatchDecision::Opened { gen: gen2, .. } = c.offer_rank(2_000, r3) else {
+            panic!("fresh batch opens");
+        };
+        assert_eq!(gen2, gen + 1);
+        assert!(c.close_batch(inst, gen2, &mut buf));
+        assert_eq!(buf, vec![r3]);
+        let _ = c.rank_compute(2_100, r3);
+        c.on_rank_done(2_100, r3, 1 << 20);
+        assert_eq!(c.live_requests(), 0);
+    }
+
+    /// Tentpole: co-batched duplicates of the same segment key plan as
+    /// one `Produce` + joins, because the whole batch runs
+    /// `rank_compute` before any member's `on_rank_done` installs.
+    #[test]
+    fn co_batched_duplicate_segments_produce_once() {
+        let mut cfg = seg_config();
+        cfg.batch_window_us = 1_000;
+        cfg.batch_max = 4;
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        let mut inst = 0;
+        let mut last = BatchDecision::Solo;
+        for _ in 0..3 {
+            let (req, wants) = c.on_arrival(0, 42, 4096, &[10, 11]);
+            if wants {
+                if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) {
+                    c.on_psi_ready(0, instance, user, Some(7));
+                }
+            }
+            inst = c.on_stage_done(0, req, Stage::Preproc).unwrap();
+            let _ = c.on_rank_start(0, req);
+            last = c.offer_rank(0, req);
+        }
+        assert_eq!(last, BatchDecision::Joined, "3 members under batch_max 4 stay open");
+        let gen = c.instances[inst].batch.gen;
+        assert!(c.batch_open(inst, gen));
+        let mut buf = Vec::new();
+        // Deadline flush at window close.
+        assert!(c.close_batch(inst, gen, &mut buf));
+        assert_eq!(buf.len(), 3);
+        let mut produced = 0;
+        let mut joined = 0;
+        let mut reused = 0;
+        for &r in &buf {
+            let plan = c.rank_compute(1_000, r).segments.expect("plan present");
+            produced += plan.produced;
+            joined += plan.joined;
+            reused += plan.reused;
+        }
+        // 2 distinct keys × 3 members: one Produce per key, the
+        // co-batched duplicates join — not N independent productions.
+        assert_eq!((produced, joined, reused), (2, 4, 0));
+        for &r in &buf {
+            c.on_rank_done(1_000, r, 1 << 20);
+        }
+        // Pins installed/released exactly once per member: the store's
+        // refcounts are back to zero and the segments serve reuse now.
+        let (_, p) = drive_with_cands(&mut c, 2_000, 42, &[10, 11]);
+        assert_eq!(p.unwrap().reused, 2);
+        assert_eq!(c.live_requests(), 0);
     }
 
     #[test]

@@ -38,6 +38,13 @@ pub fn run(args: &Args) -> Result<()> {
     }
     cfg.segment_frac = config::parse_segment_frac(args, cfg.segment_frac)?;
     cfg.admission = config::parse_admission(args, &cfg.admission)?;
+    cfg.batch_window_us = args.get_u64("batch-window", cfg.batch_window_us)?;
+    cfg.batch_max = args.get_usize("batch-max", cfg.batch_max)?;
+    if cfg.batch_max == 0 {
+        return Err(anyhow!(
+            "--batch-max must be >= 1 (use --batch-window 0 to disable batching)"
+        ));
+    }
 
     let scenario = match args.get("scenario") {
         Some(s) => ScenarioKind::parse(s).map_err(|e| anyhow!(e))?,

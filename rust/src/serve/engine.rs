@@ -22,7 +22,8 @@ use crate::metrics::RunMetrics;
 use crate::model::ModelSpec;
 use crate::relay::baseline::Mode;
 use crate::relay::coordinator::{
-    CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, ReqId, SignalAction, Stage,
+    BatchDecision, CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, ReqId,
+    SignalAction, Stage,
 };
 use crate::relay::pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
 use crate::relay::router::RouterConfig;
@@ -78,6 +79,11 @@ pub struct LiveConfig {
     pub seg_ttl_us: u64,
     /// Admission-control mode + closed-loop knobs (`--admission`).
     pub admission: AdmissionConfig,
+    /// Microbatch window for the coordinator's batch former
+    /// (`--batch-window`, µs; 0 = unbatched).
+    pub batch_window_us: u64,
+    /// Maximum members per batched rank pass (`--batch-max`).
+    pub batch_max: usize,
     pub seed: u64,
 }
 
@@ -100,6 +106,8 @@ impl LiveConfig {
             segment_frac: 0.0,
             seg_ttl_us: 3_000_000,
             admission: AdmissionConfig::default(),
+            batch_window_us: 0,
+            batch_max: 32,
             seed: 42,
         }
     }
@@ -159,6 +167,8 @@ impl LiveConfig {
                 version: 0,
                 tiers: Vec::new(),
             },
+            batch_window_us: self.batch_window_us,
+            batch_max: self.batch_max,
         }
     }
 }
@@ -167,6 +177,22 @@ impl LiveConfig {
 struct Shared {
     coord: Mutex<RelayCoordinator<Payload>>,
     cv: Condvar,
+    /// Per-instance rank passes held by the coordinator's batch former:
+    /// the response channel (and reload accounting) whoever flushes the
+    /// batch needs to complete each member.  Entries are stashed in the
+    /// same coordinator critical section as their `offer_rank`, so a
+    /// flush (which closes the batch under the coordinator lock first)
+    /// always finds all of its members here.  Lock order: `coord` →
+    /// `pending`, everywhere.
+    pending: Mutex<Vec<Vec<PendingRank>>>,
+}
+
+/// A rank pass stashed while its microbatch forms.
+struct PendingRank {
+    req: GenRequest,
+    handle: ReqId,
+    resp: Sender<RankDone>,
+    load_us: f64,
 }
 
 enum Work {
@@ -228,8 +254,7 @@ impl LiveInstance {
                         Self::perform_reload(user, id, &models, &shared);
                     }
                     Ok(Work::Rank { req, handle, resp }) => {
-                        let done = Self::do_rank(&req, handle, id, &cfg, &models, &shared, &busy);
-                        let _ = resp.send(done);
+                        Self::do_rank(&req, handle, resp, id, &cfg, &models, &shared, &busy);
                     }
                     Ok(Work::Stop) | Err(_) => break,
                 }
@@ -313,18 +338,27 @@ impl LiveInstance {
         }
     }
 
+    /// Classify + wait-resolve one rank pass, then hand it to the
+    /// instance's batch former.  `Solo` executes inline; otherwise the
+    /// pass (with its response channel) is stashed in `Shared::pending`
+    /// and whoever flushes the batch — the worker that filled it, or the
+    /// opener waiting out the window — executes every member and sends
+    /// each response.  Decision-plane batching only: segment planning
+    /// and pricing are batch-aware in the coordinator/cost model, while
+    /// PJRT still executes one member at a time (the rank artifact has
+    /// no batched entry point).
+    #[allow(clippy::too_many_arguments)]
     fn do_rank(
         req: &GenRequest,
         handle: ReqId,
+        resp: Sender<RankDone>,
         instance: usize,
         cfg: &LiveConfig,
         models: &Models,
         shared: &Shared,
         busy: &Arc<AtomicU64>,
-    ) -> RankDone {
+    ) {
         let user = req.uid();
-        let incr = synth_embedding(user ^ 2, cfg.spec.incr_len, cfg.spec.dim, 0.5);
-        let items = synth_embedding(req.rid() ^ 3, cfg.spec.num_items, cfg.spec.dim, 0.5);
         let mut load_us = 0.0;
         let wait_start = Instant::now();
 
@@ -356,7 +390,115 @@ impl LiveInstance {
                 coord = g;
             },
         }
+        match coord.offer_rank(now_us(), handle) {
+            BatchDecision::Solo => {
+                drop(coord);
+                let done = Self::exec_rank(req, handle, load_us, cfg, models, shared, busy);
+                let _ = resp.send(done);
+            }
+            BatchDecision::Opened { deadline, gen } => {
+                // Stash under the coord lock (lock order coord → pending)
+                // so the batch cannot close before its member is findable.
+                shared.pending.lock().unwrap()[instance].push(PendingRank {
+                    req: *req,
+                    handle,
+                    resp,
+                    load_us,
+                });
+                // This worker is the window leader: hold the window open
+                // on the condvar, then flush — unless a `Filled` flush
+                // got there first (stale generation).
+                loop {
+                    if !coord.batch_open(instance, gen) {
+                        drop(coord);
+                        return;
+                    }
+                    let now = now_us();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (g, _t) = shared
+                        .cv
+                        .wait_timeout(coord, Duration::from_micros(deadline - now))
+                        .expect("condvar poisoned");
+                    coord = g;
+                }
+                drop(coord);
+                Self::flush_batch(instance, gen, cfg, models, shared, busy);
+            }
+            BatchDecision::Joined => {
+                shared.pending.lock().unwrap()[instance].push(PendingRank {
+                    req: *req,
+                    handle,
+                    resp,
+                    load_us,
+                });
+                drop(coord);
+            }
+            BatchDecision::Filled { gen } => {
+                shared.pending.lock().unwrap()[instance].push(PendingRank {
+                    req: *req,
+                    handle,
+                    resp,
+                    load_us,
+                });
+                drop(coord);
+                Self::flush_batch(instance, gen, cfg, models, shared, busy);
+            }
+        }
+    }
+
+    /// Close batch `gen` on `instance` and execute every member,
+    /// sending each stashed response.  Stale generations are a no-op
+    /// (the batch was already flushed).
+    fn flush_batch(
+        instance: usize,
+        gen: u64,
+        cfg: &LiveConfig,
+        models: &Models,
+        shared: &Shared,
+        busy: &Arc<AtomicU64>,
+    ) {
+        let mut members: Vec<ReqId> = Vec::new();
+        let drained: Vec<PendingRank> = {
+            let mut coord = shared.coord.lock().unwrap();
+            if !coord.close_batch(instance, gen, &mut members) {
+                return;
+            }
+            drop(coord);
+            let mut pending = shared.pending.lock().unwrap();
+            let q = &mut pending[instance];
+            let mut out = Vec::with_capacity(members.len());
+            for &h in &members {
+                if let Some(pos) = q.iter().position(|p| p.handle == h) {
+                    out.push(q.swap_remove(pos));
+                }
+            }
+            out
+        };
+        shared.cv.notify_all(); // wake a window leader whose batch went stale
+        for p in drained {
+            let done = Self::exec_rank(&p.req, p.handle, p.load_us, cfg, models, shared, busy);
+            let _ = p.resp.send(done);
+        }
+    }
+
+    /// Execute one classified rank pass: consume ψ + plan segments, run
+    /// the PJRT execution, and close out the request.
+    fn exec_rank(
+        req: &GenRequest,
+        handle: ReqId,
+        load_us: f64,
+        cfg: &LiveConfig,
+        models: &Models,
+        shared: &Shared,
+        busy: &Arc<AtomicU64>,
+    ) -> RankDone {
+        let user = req.uid();
+        let incr = synth_embedding(user ^ 2, cfg.spec.incr_len, cfg.spec.dim, 0.5);
+        let items = synth_embedding(req.rid() ^ 3, cfg.spec.num_items, cfg.spec.dim, 0.5);
         // Consume ψ at execution start.
+        let mut coord = shared.coord.lock().unwrap();
         let rc = coord.rank_compute(now_us(), handle);
         let mut kv: Option<Payload> = rc.payload;
         if rc.cached && !matches!(kv, Some(Payload::Device(_))) {
@@ -463,7 +605,11 @@ impl LiveCluster {
                 }
             })
         })?;
-        let shared = Arc::new(Shared { coord: Mutex::new(coord), cv: Condvar::new() });
+        let shared = Arc::new(Shared {
+            coord: Mutex::new(coord),
+            cv: Condvar::new(),
+            pending: Mutex::new((0..cfg.n_instances).map(|_| Vec::new()).collect()),
+        });
         let instances = (0..cfg.n_instances)
             .map(|id| LiveInstance::spawn(id, &cfg, models.clone(), shared.clone()))
             .collect();

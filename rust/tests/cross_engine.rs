@@ -173,6 +173,74 @@ fn adaptive_admission_identical_across_engines_and_beats_collapsed_bound() {
     assert!(adpt.trigger.l_max_effective > 0);
 }
 
+/// Tentpole: the coordinator's batch former groups rank *executions*
+/// after each request is classified, so microbatching must never move a
+/// [`CacheOutcome`] — on every scenario, in both replayable engines,
+/// even though the simulator offers passes at rank-exec-ready simulated
+/// times and the serialized reference at arrival times (they form
+/// *different* batches).  `--batch-window 0` is the unbatched identity
+/// configuration: it takes the `Solo` path, touches no batch state, and
+/// the whole pre-batching test suite above pins it decision-for-decision
+/// against the serialized reference.
+#[test]
+fn microbatching_never_changes_decisions_across_engines() {
+    for name in ScenarioKind::NAMES {
+        let mut wl = workload(false);
+        // Enough per-instance pressure that multi-member batches really
+        // form inside a 100 ms window (the mean-rank check below keeps
+        // this test honest about that).
+        wl.qps = 250.0;
+        wl.scenario = ScenarioKind::parse(name).expect("built-in scenario");
+        let run = |window: u64, max: usize, seg_frac: f64| {
+            let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+            cfg.pipeline.t_life_us = 2 * wl.duration_us;
+            cfg.batch_window_us = window;
+            cfg.batch_max = max;
+            cfg.segment_frac = seg_frac;
+            cfg.log_outcomes = true;
+            let m = run_sim(cfg.clone(), &wl).expect("simulation runs");
+            let mut sim_log = m.outcome_log();
+            sim_log.sort_by_key(|&(id, _)| id);
+            let serial = run_reference(&cfg, &wl).expect("serialized reference runs");
+            assert_eq!(
+                sim_log, serial.outcomes,
+                "{name}, window {window}: engines diverged on per-request outcomes"
+            );
+            (sim_log, m, serial)
+        };
+        let (w0, w0_m, _) = run(0, 32, 0.0);
+        let (batched, batched_m, _) = run(100_000, 8, 0.0);
+        assert_eq!(w0, batched, "{name}: batching changed CacheOutcome decisions");
+        // Batches actually formed: every ≥2-member pass records the
+        // longer shared duration, so the mean strictly rises.
+        assert!(
+            batched_m.rank_exec.mean() > w0_m.rank_exec.mean(),
+            "{name}: no batches formed (mean rank {} !> {})",
+            batched_m.rank_exec.mean(),
+            w0_m.rank_exec.mean()
+        );
+        // batch_max 1 fills every batch immediately: grouped bookkeeping,
+        // solo pricing, identical decisions.
+        let (filled, filled_m, _) = run(100_000, 1, 0.0);
+        assert_eq!(w0, filled, "{name}: batch_max=1 former changed decisions");
+        assert_eq!(
+            filled_m.rank_exec.mean().to_bits(),
+            w0_m.rank_exec.mean().to_bits(),
+            "{name}: batch_max=1 must price exactly like the unbatched path"
+        );
+        // Segment reuse composes: co-batched members plan before any of
+        // them completes, so duplicate candidate segments dedup through
+        // the single-flight store — still without moving a ψ decision.
+        let (seg, _, seg_serial) = run(100_000, 8, 0.25);
+        assert_eq!(w0, seg, "{name}: batching + segment reuse changed decisions");
+        assert!(
+            seg_serial.segments.hit_ratio() > 0.0,
+            "{name}: segment cache unused ({:?})",
+            seg_serial.segments
+        );
+    }
+}
+
 /// With the DRAM tier and refresh bursts, cache-path timing may differ
 /// across engines for overlapping same-user requests (started vs joined
 /// a reload; HBM-resident vs respilled-to-DRAM) — all of those are
@@ -560,10 +628,28 @@ fn live_engine_matches_serial_reference() {
     })
     .unwrap();
     let serial =
-        drive_reference(coord, trace.iter().copied(), &wl, |_| spec.kv_bytes(), |_, _, _| 0.0)
+        drive_reference(coord, trace.iter().copied(), &wl, |_| spec.kv_bytes(), |_, _| 0.0)
             .expect("serialized reference runs")
             .outcomes;
     assert_eq!(live, serial, "live engine diverged from the shared coordinator's decisions");
     assert!(live.iter().all(|&(_, o)| o == CacheOutcome::HbmHit),
         "all-long serialized trace must relay every request: {live:?}");
+
+    // The same trace through a live wall-clock batch former (window
+    // leaders time out on the condvar; the serial driver and single slot
+    // keep batches at size one): every decision must stay in place —
+    // batching may change pricing and timing, never outcomes.
+    let mut bcfg = cfg.clone();
+    bcfg.batch_window_us = 20_000;
+    bcfg.batch_max = 4;
+    let cluster = LiveCluster::start(bcfg).unwrap();
+    let mut rng = Rng::new(9);
+    let mut batched: Vec<(u64, CacheOutcome)> = Vec::new();
+    for req in &trace {
+        let lc = cluster.drive_request(*req, &mut rng).unwrap();
+        batched.push((req.rid(), lc.outcome));
+    }
+    cluster.shutdown();
+    batched.sort_by_key(|&(id, _)| id);
+    assert_eq!(batched, serial, "live batch former changed decisions");
 }

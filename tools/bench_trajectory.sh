@@ -8,10 +8,13 @@
 #       <out-dir>/<label>.json (default: bench/trajectory/).
 #
 #   tools/bench_trajectory.sh diff <old.json> <new.json>
-#       Prints per-bench deltas for mean_us and events_per_sec.  Exits
-#       nonzero only on unreadable input; perf deltas are informational
-#       (CI runners are too noisy for a hard gate) but regressions are
-#       flagged loudly.
+#       Prints per-bench deltas for mean_us and events_per_sec.  Most
+#       deltas are informational (CI runners are noisy) and merely
+#       flagged loudly — but a >20% drop in any `simloop` suite
+#       events_per_sec against a measured baseline exits nonzero, so a
+#       throughput regression on the headline metric fails CI instead
+#       of scrolling past.  An unmeasured (`"measured": false`)
+#       baseline still exits 0: there is nothing real to gate on.
 set -euo pipefail
 
 cmd="${1:-}"
@@ -59,6 +62,11 @@ if not old.get("measured", True):
     sys.exit(0)
 print(f"trajectory diff: {old.get('label')} → {new.get('label')}")
 METRICS = [("mean_us", -1), ("events_per_sec", +1)]  # sign: +1 = higher is better
+# Hard gate: simloop throughput (the headline events/sec numbers) may
+# not drop more than 20% against a measured baseline.  Everything else
+# stays informational — shared runners are too noisy to gate on µs.
+GATE_SUITE, GATE_METRIC, GATE_DROP_PCT = "simloop", "events_per_sec", -20.0
+failures = []
 for suite, benches in sorted(new.get("suites", {}).items()):
     base = old.get("suites", {}).get(suite, {})
     for name, row in sorted(benches.items()):
@@ -72,9 +80,16 @@ for suite, benches in sorted(new.get("suites", {}).items()):
                 continue
             pct = (b - a) / a * 100.0
             tag = ""
-            if sign * pct < -25.0:
+            if suite == GATE_SUITE and metric == GATE_METRIC and pct < GATE_DROP_PCT:
+                failures.append(f"{suite}/{name} {metric} {pct:+.1f}%")
+                tag = "  <-- REGRESSION (gated)"
+            elif sign * pct < -25.0:
                 tag = "  <-- REGRESSION"
             print(f"  {suite}/{name} {metric}: {a:.1f} → {b:.1f} ({pct:+.1f}%){tag}")
+if failures:
+    print(f"FAIL: {len(failures)} gated regression(s) beyond "
+          f"{-GATE_DROP_PCT:.0f}%: " + "; ".join(failures))
+    sys.exit(1)
 PY
     ;;
   *)
