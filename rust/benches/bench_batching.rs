@@ -32,7 +32,7 @@ fn ready_coord(window_us: u64, max: usize, n: u64) -> (RelayCoordinator<()>, Vec
     let mut inst = 0usize;
     let reqs: Vec<ReqId> = (0..n)
         .map(|i| {
-            let (req, _) = coord.on_arrival(i * 10, 42, 4096, &[]);
+            let (req, _) = coord.on_arrival(i * 10, i, 42, 4096, &[]);
             inst = coord.on_stage_done(i * 10, req, Stage::Preproc).expect("routed");
             let _ = coord.on_rank_start(i * 10, req);
             req
@@ -77,7 +77,10 @@ fn main() {
                         gen = g;
                     }
                 }
-                assert!(coord.close_batch(inst, gen, &mut out), "eighth offer filled the batch");
+                assert!(
+                    coord.close_batch(now, inst, gen, &mut out),
+                    "eighth offer filled the batch"
+                );
                 std::hint::black_box(out.len());
             },
         );
@@ -103,9 +106,9 @@ fn main() {
                     gen = g;
                 }
             }
-            assert!(coord.close_batch(inst, gen, &mut out), "deadline close drains the batch");
+            assert!(coord.close_batch(now, inst, gen, &mut out), "deadline close drains the batch");
             std::hint::black_box(out.len());
-            assert!(!coord.close_batch(inst, gen, &mut out), "second close is stale");
+            assert!(!coord.close_batch(now, inst, gen, &mut out), "second close is stale");
         }));
     }
 

@@ -167,45 +167,88 @@ fn main() {
     // RelayCoordinator with an instantly-completing host: admission →
     // signal pseudo-pre-infer → routing → rank classification → consume →
     // completion + spill.  Regression baseline for future policy changes.
+    // Run twice — flight recorder off and on — so BENCH_hotpath.json
+    // carries the whole-decision-path cost of tracing as
+    // `trace_overhead_ns_per_op` on the traced twin.
     {
         use relaygr::relay::coordinator::{RankAction, RelayCoordinator, SignalAction, Stage};
-        let sim_cfg = relaygr::cluster::SimConfig::standard(
-            relaygr::relay::baseline::Mode::RelayGr { dram: DramPolicy::Capacity(64 << 30) },
-        );
-        let mut coord: RelayCoordinator<()> =
-            RelayCoordinator::new(sim_cfg.coordinator_config(), |_| sim_cfg.estimator())
-                .expect("coordinator builds");
-        let kv = 32usize << 20;
-        let mut id = 0u64;
-        let mut now = 0u64;
-        results.push(bench("coordinator/full_decision_flow", 50, 20_000, || {
-            id += 1;
-            now += 700;
-            let user = id % 1024;
-            let (req, wants_trigger) = coord.on_arrival(now, user, 4096, &[]);
-            if wants_trigger {
-                match coord.on_trigger_check(now, req) {
-                    SignalAction::Produce { instance, user, .. } => {
-                        coord.on_psi_ready(now, instance, user, Some(()));
+        for trace_spans in [0usize, 1 << 12] {
+            let mut sim_cfg = relaygr::cluster::SimConfig::standard(
+                relaygr::relay::baseline::Mode::RelayGr { dram: DramPolicy::Capacity(64 << 30) },
+            );
+            sim_cfg.trace_spans = trace_spans;
+            let name = if trace_spans == 0 {
+                "coordinator/full_decision_flow"
+            } else {
+                "coordinator/full_decision_flow_traced"
+            };
+            let mut coord: RelayCoordinator<()> =
+                RelayCoordinator::new(sim_cfg.coordinator_config(), |_| sim_cfg.estimator())
+                    .expect("coordinator builds");
+            let kv = 32usize << 20;
+            let mut id = 0u64;
+            let mut now = 0u64;
+            results.push(bench(name, 50, 20_000, || {
+                id += 1;
+                now += 700;
+                let user = id % 1024;
+                let (req, wants_trigger) = coord.on_arrival(now, id, user, 4096, &[]);
+                if wants_trigger {
+                    match coord.on_trigger_check(now, req) {
+                        SignalAction::Produce { instance, user, .. } => {
+                            coord.on_psi_ready(now, instance, user, Some(()));
+                        }
+                        SignalAction::Reload { instance, user, bytes } => {
+                            coord.on_reload_done(now, instance, user, Some(()), bytes);
+                        }
+                        SignalAction::None => {}
                     }
-                    SignalAction::Reload { instance, user, bytes } => {
-                        coord.on_reload_done(now, instance, user, Some(()), bytes);
-                    }
-                    SignalAction::None => {}
                 }
-            }
-            let inst = coord
-                .on_stage_done(now, req, Stage::Preproc)
-                .expect("rank instance routed");
-            if let RankAction::StartReload { bytes } = coord.on_rank_start(now, req) {
-                coord.on_reload_done(now, inst, user, Some(()), bytes);
-            }
-            let _ = coord.rank_compute(now, req);
-            let done = coord.on_rank_done(now, req, kv);
-            if let Some(bytes) = done.spill {
-                coord.complete_spill(done.instance, done.user, bytes, ());
-            }
+                let inst = coord
+                    .on_stage_done(now, req, Stage::Preproc)
+                    .expect("rank instance routed");
+                if let RankAction::StartReload { bytes } = coord.on_rank_start(now, req) {
+                    coord.on_reload_done(now, inst, user, Some(()), bytes);
+                }
+                let _ = coord.rank_compute(now, req);
+                let done = coord.on_rank_done(now, req, kv);
+                if let Some(bytes) = done.spill {
+                    coord.complete_spill(now, done.instance, done.user, bytes, ());
+                }
+            }));
+        }
+        let base = results
+            .iter()
+            .find(|r| r.name == "coordinator/full_decision_flow")
+            .map(|r| r.mean_us)
+            .expect("untraced twin benchmarked");
+        if let Some(t) =
+            results.iter_mut().find(|r| r.name == "coordinator/full_decision_flow_traced")
+        {
+            t.extra.push(("trace_overhead_ns_per_op".to_string(), (t.mean_us - base) * 1e3));
+        }
+    }
+
+    // --- flight recorder: span emission into a warm ring (PR 8) --------------
+    // The per-event cost of tracing in isolation: shard select + slot
+    // write, overwriting oldest once the ring is full.  The recorder
+    // pre-sizes every shard at construction, so this is asserted
+    // allocation-free below alongside the other hot ops.
+    {
+        use relaygr::relay::flight::{FlightRecorder, SpanKind};
+        let mut fl = FlightRecorder::new(1 << 12);
+        // Warm every shard past capacity so steady state is the
+        // overwrite path.
+        let mut i = 0u64;
+        while i < (2 << 12) {
+            fl.emit(i, i, SpanKind::Arrival, 0, 0);
+            i += 1;
+        }
+        results.push(bench("coordinator/trace_emit", 100, 50_000, || {
+            i += 1;
+            fl.emit(i, i, SpanKind::RankDone, 1, 0);
         }));
+        std::hint::black_box(fl.retained());
     }
 
     // --- coordinator: batch former (PR 7) ------------------------------------
@@ -231,7 +274,7 @@ fn main() {
         let mut inst = 0usize;
         let reqs: Vec<ReqId> = (0..4u64)
             .map(|i| {
-                let (req, _) = coord.on_arrival(i * 10, 42, 4096, &[]);
+                let (req, _) = coord.on_arrival(i * 10, i, 42, 4096, &[]);
                 inst = coord.on_stage_done(i * 10, req, Stage::Preproc).expect("routed");
                 let _ = coord.on_rank_start(i * 10, req);
                 req
@@ -247,7 +290,7 @@ fn main() {
                     gen = g;
                 }
             }
-            assert!(coord.close_batch(inst, gen, &mut out), "fourth offer filled the batch");
+            assert!(coord.close_batch(now, inst, gen, &mut out), "fourth offer filled the batch");
             std::hint::black_box(out.len());
         }));
     }
@@ -318,6 +361,7 @@ fn main() {
         "hierarchy/lookup_hit",
         "sharded/remove+insert+get_mut",
         "coordinator/batch_form+flush",
+        "coordinator/trace_emit",
     ] {
         let r = results.iter().find(|r| r.name == name).expect("hot op benchmarked");
         assert_eq!(

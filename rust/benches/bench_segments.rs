@@ -85,7 +85,7 @@ fn main() {
             now += 700;
             let user = id % 1024;
             let (req, wants_trigger) =
-                coord.on_arrival(now, user, 4096, &cands[(id & 255) as usize]);
+                coord.on_arrival(now, id, user, 4096, &cands[(id & 255) as usize]);
             if wants_trigger {
                 match coord.on_trigger_check(now, req) {
                     SignalAction::Produce { instance, user, .. } => {
@@ -106,7 +106,7 @@ fn main() {
             let _ = coord.rank_compute(now, req);
             let done = coord.on_rank_done(now, req, kv);
             if let Some(bytes) = done.spill {
-                coord.complete_spill(done.instance, done.user, bytes, ());
+                coord.complete_spill(now, done.instance, done.user, bytes, ());
             }
         }));
     }

@@ -28,6 +28,7 @@ use crate::model::BatchMember;
 use crate::relay::coordinator::{
     BatchDecision, RankAction, RelayCoordinator, ReqId, SignalAction, Stage,
 };
+use crate::relay::flight::{FlightRecorder, StageBreakdown};
 use crate::relay::hbm::HbmStats;
 use crate::relay::hierarchy::HierarchyStats;
 use crate::relay::pipeline::CacheOutcome;
@@ -49,6 +50,11 @@ pub struct ReferenceRun {
     pub hierarchy: HierarchyStats,
     pub hbm: HbmStats,
     pub trigger: TriggerStats,
+    /// Stage-latency breakdown on the arrival clock (empty unless the
+    /// coordinator traced with `trace_spans > 0`).
+    pub stages: StageBreakdown,
+    /// The detached flight recorder (raw spans), when tracing was on.
+    pub flight: Option<std::sync::Arc<FlightRecorder>>,
 }
 
 /// Completion bookkeeping + pooled batch state shared by the inline
@@ -75,7 +81,7 @@ impl Acc {
     ) {
         let done = coord.on_rank_done(now, handle, kv);
         if let Some(bytes) = done.spill {
-            coord.complete_spill(done.instance, done.user, bytes, ());
+            coord.complete_spill(now, done.instance, done.user, bytes, ());
         }
         self.outcome_counts[outcome_index(done.outcome)] += 1;
         self.outcomes.push((rid, done.outcome));
@@ -99,7 +105,7 @@ fn flush<K, R>(
     R: Fn(&[BatchMember], usize) -> f64,
 {
     let mut batch = std::mem::take(&mut acc.batch_buf);
-    if !coord.close_batch(inst, gen, &mut batch) {
+    if !coord.close_batch(now, inst, gen, &mut batch) {
         acc.batch_buf = batch;
         return;
     }
@@ -162,7 +168,8 @@ pub fn drive_reference(
         } else {
             cands.clear();
         }
-        let (handle, wants_trigger) = coord.on_arrival(now, req.uid(), req.plen(), &cands);
+        let (handle, wants_trigger) =
+            coord.on_arrival(now, req.rid(), req.uid(), req.plen(), &cands);
         if wants_trigger {
             match coord.on_trigger_check(now, handle) {
                 SignalAction::Produce { instance, user, .. } => {
@@ -214,6 +221,10 @@ pub fn drive_reference(
         flush(&mut coord, &mut acc, d, inst, gen, &kv_bytes, &rank_cost);
     }
     acc.outcomes.sort_by_key(|&(id, _)| id);
+    let (stages, flight) = match coord.take_flight() {
+        Some(fl) => (fl.breakdown.clone(), Some(std::sync::Arc::new(fl))),
+        None => (StageBreakdown::default(), None),
+    };
     Ok(ReferenceRun {
         mean_rank_us: acc.rank_us_sum / acc.outcomes.len().max(1) as f64,
         segments: coord.segment_stats(),
@@ -222,6 +233,8 @@ pub fn drive_reference(
         trigger: coord.trigger_stats(),
         outcomes: acc.outcomes,
         outcome_counts: acc.outcome_counts,
+        stages,
+        flight,
     })
 }
 

@@ -103,6 +103,9 @@ pub struct SimConfig {
     /// memory at any trace length.  Takes precedence over
     /// `log_outcomes`.
     pub outcome_check: Option<std::sync::Arc<Vec<u8>>>,
+    /// Flight-recorder span retention (`--trace-spans`; 0 = tracing off).
+    /// Observe-only: decisions are bit-identical either way.
+    pub trace_spans: usize,
     pub seed: u64,
 }
 
@@ -141,6 +144,7 @@ impl SimConfig {
             batch_max: 32,
             log_outcomes: false,
             outcome_check: None,
+            trace_spans: 0,
             seed: 7,
         }
     }
@@ -196,6 +200,7 @@ impl SimConfig {
             },
             batch_window_us: self.batch_window_us,
             batch_max: self.batch_max,
+            trace_spans: self.trace_spans,
         }
     }
 
@@ -395,6 +400,13 @@ impl Sim {
         self.metrics.segments = self.coord.segment_stats();
         self.metrics.sim_duration_us = self.end_us;
         self.metrics.sim_events = self.event_seq;
+        // Detach the flight recorder (tracing runs only): stage-latency
+        // breakdown + raw spans travel with the metrics so the CLI can
+        // write the RGSP sidecar and `figure breakdown` can report.
+        if let Some(fl) = self.coord.take_flight() {
+            self.metrics.stages = fl.breakdown.clone();
+            self.metrics.flight = Some(std::sync::Arc::new(fl));
+        }
         self.metrics
     }
 
@@ -431,7 +443,7 @@ impl Sim {
             self.cand_buf.clear();
         }
         let (req, wants_trigger) =
-            self.coord.on_arrival(now, gen.uid(), gen.plen(), &self.cand_buf);
+            self.coord.on_arrival(now, gen.rid(), gen.uid(), gen.plen(), &self.cand_buf);
         self.states.insert(
             req,
             ReqState {
@@ -665,7 +677,7 @@ impl Sim {
         // `close_batch` drains into the recycled buffer; a stale
         // generation (already flushed by `Filled`) is a no-op.
         let mut batch = std::mem::take(&mut self.batch_buf);
-        if !self.coord.close_batch(inst, gen, &mut batch) {
+        if !self.coord.close_batch(now, inst, gen, &mut batch) {
             self.batch_buf = batch;
             return;
         }
@@ -697,7 +709,7 @@ impl Sim {
         // Spill freshly produced caches to DRAM for short-term reuse (off
         // the critical path; occupies the PCIe link).
         if let Some(bytes) = done.spill {
-            if self.coord.complete_spill(done.instance, done.user, bytes, ()) {
+            if self.coord.complete_spill(now, done.instance, done.user, bytes, ()) {
                 let server = self.server_of(done.instance);
                 let dur = self.cfg.hw.spill_us(bytes);
                 let _ = alloc(&mut self.servers[server].pcie, now, dur);

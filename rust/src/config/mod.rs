@@ -180,6 +180,9 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
         if let Some(v) = j.get("batch_max").and_then(Json::as_usize) {
             cfg.batch_max = v;
         }
+        if let Some(v) = j.get("trace_spans").and_then(Json::as_usize) {
+            cfg.trace_spans = v;
+        }
     }
     // CLI overrides.
     if let Some(hw) = args.get("hw") {
@@ -206,6 +209,7 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
     if cfg.batch_max == 0 {
         bail!("--batch-max must be >= 1 (use --batch-window 0 to disable batching)");
     }
+    cfg.trace_spans = args.get_usize("trace-spans", cfg.trace_spans)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     if cfg.spec.dim % cfg.spec.heads != 0 {
         // Keep heads consistent when dim is overridden.

@@ -1,0 +1,171 @@
+//! `relaygr figure breakdown` — the flight-recorder standing report:
+//! per-stage latency breakdown (admission, ψ-wait, batch-wait, rank-exec,
+//! spill) across the workload scenarios, in both decision engines, with
+//! tracing on.
+//!
+//! Two claims are checked *inside* the figure rather than published on
+//! trust:
+//!
+//! * **Observe-only** — tracing feeds no decision: every scenario runs
+//!   the simulator twice, tracing on and off, and asserts the
+//!   per-request outcomes are bit-identical.
+//! * **Decision-plane identity** — the simulator and the serialized
+//!   reference agree per-request on outcomes *and* per-stage fold counts
+//!   for every decision-driven stage (admission, batch-wait, rank-exec,
+//!   spill).  ψ-wait is the one timing-driven stage: the reference's
+//!   instantly-completing host never waits by construction, so its
+//!   ψ-wait column is structurally zero and excluded from the count
+//!   assertion.
+//!
+//! Stage *durations* are engine-clock-specific (virtual vs arrival
+//! time), so each row carries both engines' quantiles side by side; the
+//! row set itself is deterministic — byte-identical across `--jobs`
+//! (ordered merge on the deterministic executor) and across repeat runs.
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::SimConfig;
+use crate::config::apply_candidate_flags;
+use crate::figures::common::{ms, sim, Table};
+use crate::relay::baseline::Mode;
+use crate::relay::flight::StageBreakdown;
+use crate::relay::tier::DramPolicy;
+use crate::util::cli::Args;
+use crate::util::parallel;
+use crate::workload::{ScenarioKind, WorkloadConfig};
+
+/// Span retention for the traced probe runs.  The stage histograms fold
+/// on emission (not from retained spans), so the bound only limits the
+/// raw-span sidecar, never the breakdown counts.
+const TRACE_SPANS: usize = 1 << 16;
+
+/// `relaygr figure breakdown [--qps N] [--quick] [--scenario s]
+/// [--jobs N]`.
+pub fn breakdown(args: &Args) -> Result<()> {
+    let dur = if args.has_flag("quick") { 3_000_000 } else { 8_000_000 };
+    let probe_qps = args.get_f64("qps", 60.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let jobs = parallel::jobs_from_args(args)?;
+    let kinds: Vec<ScenarioKind> = match args.get("scenario") {
+        Some(s) => vec![ScenarioKind::parse(s).map_err(anyhow::Error::msg)?],
+        None => ScenarioKind::NAMES
+            .iter()
+            .map(|n| ScenarioKind::parse(n).expect("built-in scenario"))
+            .collect(),
+    };
+    // One cell per scenario; each produces the 5 stage rows.
+    let results = parallel::map_indexed(jobs, kinds.len(), |i| -> Result<Vec<Vec<String>>> {
+        let kind = kinds[i];
+        let mut wl = WorkloadConfig {
+            qps: probe_qps,
+            duration_us: dur,
+            num_users: 30_000,
+            fixed_long_len: Some(3072),
+            max_prefix: 3072,
+            refresh_prob: 0.0,
+            scenario: kind,
+            seed,
+            ..Default::default()
+        };
+        apply_candidate_flags(args, &mut wl)?;
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(8 << 30) });
+        // Timing-insensitive lifecycle (as in `figure batching`): any
+        // sim-vs-reference divergence is a genuine policy difference.
+        cfg.pipeline.t_life_us = 2 * dur;
+        cfg.log_outcomes = true;
+
+        // Observe-only, asserted: tracing on vs off, decision-identical.
+        let plain = sim("breakdown", cfg.clone(), &wl)?;
+        cfg.trace_spans = TRACE_SPANS;
+        let traced = sim("breakdown", cfg.clone(), &wl)?;
+        ensure!(
+            plain.outcome_log() == traced.outcome_log(),
+            "breakdown: tracing changed decisions (scenario {})",
+            kind.label()
+        );
+        ensure!(
+            !traced.stages.is_empty() && plain.stages.is_empty(),
+            "breakdown: stage histograms must fold exactly when tracing is on \
+             (scenario {})",
+            kind.label()
+        );
+
+        // Decision-plane identity vs the serialized reference.
+        let serial = crate::cluster::run_reference(&cfg, &wl)?;
+        let mut sim_log = traced.outcome_log();
+        sim_log.sort_by_key(|&(id, _)| id);
+        ensure!(
+            sim_log == serial.outcomes,
+            "breakdown: engines diverged on per-request outcomes (scenario {})",
+            kind.label()
+        );
+        for (name, h_sim, h_ref) in counted_stages(&traced.stages, &serial.stages) {
+            ensure!(
+                h_sim == h_ref,
+                "breakdown: {name} fold count diverged (scenario {}, sim {h_sim} \
+                 vs reference {h_ref})",
+                kind.label()
+            );
+        }
+
+        let ref_named = serial.stages.named();
+        let rows = traced
+            .stages
+            .named()
+            .iter()
+            .zip(ref_named.iter())
+            .map(|((name, h), (_, hr))| {
+                vec![
+                    kind.label().to_string(),
+                    name.to_string(),
+                    h.count().to_string(),
+                    ms(h.p50()),
+                    ms(h.p99()),
+                    hr.count().to_string(),
+                    ms(hr.p50()),
+                    ms(hr.p99()),
+                    "ok".into(),
+                ]
+            })
+            .collect();
+        Ok(rows)
+    });
+    let mut t = Table::new(
+        "breakdown",
+        "Per-stage latency breakdown, tracing on (simulator + serialized reference)",
+        &[
+            "scenario",
+            "stage",
+            "n",
+            "p50 ms",
+            "p99 ms",
+            "ref n",
+            "ref p50 ms",
+            "ref p99 ms",
+            "checks",
+        ],
+    );
+    t.meta
+        .set("trace_spans", TRACE_SPANS.into())
+        .set("probe_qps", probe_qps.into())
+        .set("duration_s", (dur as f64 / 1e6).into());
+    for res in results {
+        for row in res? {
+            t.row(row);
+        }
+    }
+    t.emit(args)
+}
+
+/// The decision-plane stages whose fold counts must agree across
+/// engines, as `(name, sim count, reference count)`.  ψ-wait is
+/// excluded: it folds only where an engine actually waited, and the
+/// serialized reference never waits (instant host).
+fn counted_stages(a: &StageBreakdown, b: &StageBreakdown) -> [(&'static str, u64, u64); 4] {
+    [
+        ("admission", a.admission.count(), b.admission.count()),
+        ("batch-wait", a.batch_wait.count(), b.batch_wait.count()),
+        ("rank-exec", a.rank_exec.count(), b.rank_exec.count()),
+        ("spill", a.spill.count(), b.spill.count()),
+    ]
+}

@@ -5,6 +5,7 @@
 
 pub mod admission;
 pub mod batching;
+pub mod breakdown;
 pub mod common;
 pub mod fig11;
 pub mod fig12;
@@ -26,7 +27,7 @@ use crate::util::cli::Args;
 pub const ALL: &[&str] = &[
     "fig1", "fig3", "fig11a", "fig11b", "fig11c", "fig11d", "fig12", "fig13a", "fig13b",
     "fig13c", "fig13d", "fig14a", "fig14b", "fig14c", "fig14d", "fig15a", "fig15b", "table1",
-    "scenarios", "tiers", "segments", "admission", "batching",
+    "scenarios", "tiers", "segments", "admission", "batching", "breakdown",
 ];
 
 pub fn run_one(id: &str, args: &Args) -> Result<()> {
@@ -54,6 +55,7 @@ pub fn run_one(id: &str, args: &Args) -> Result<()> {
         "segments" => segments::segments(args),
         "admission" => admission::admission(args),
         "batching" => batching::batching(args),
+        "breakdown" => breakdown::breakdown(args),
         other => bail!("unknown figure '{other}' (available: {} all)", ALL.join(" ")),
     }
 }

@@ -8,8 +8,9 @@
 //!   figure     — regenerate a paper figure/table (fig1..fig15b, table1)
 //!   plan       — admission-control capacity planning (Eqs. 1–3)
 //!   trace      — record a workload to a compact binary trace / replay one
+//!   explain    — reconstruct one request's lifecycle from a span sidecar
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use relaygr::util::cli::Args;
 use relaygr::util::logging;
@@ -42,6 +43,7 @@ fn run(args: &Args) -> Result<()> {
         Some("figure") => relaygr::figures::run(args),
         Some("plan") => relaygr::relay::trigger::plan_cli(args),
         Some("trace") => trace_cli(args),
+        Some("explain") => explain_cli(args),
         Some("help") | None => {
             print!("{}", help());
             Ok(())
@@ -62,14 +64,17 @@ fn help() -> String {
      \x20 calibrate  measure live execution costs, write calibration JSON\n\
      \x20 figure     regenerate a paper figure/table: fig1 fig3 fig11a..d fig12\n\
      \x20            fig13a..d fig14a..d fig15a fig15b table1 scenarios tiers\n\
-     \x20            segments admission batching all\n\
+     \x20            segments admission batching breakdown all\n\
      \x20 plan       admission-control capacity planning (Eqs. 1–3); with\n\
      \x20            --admission adaptive also the closed-loop operating\n\
      \x20            bands and per-scenario initial operating points\n\
      \x20 trace      record <out> [workload flags] — capture the scenario's\n\
      \x20            arrival stream as a compact binary trace (delta-encoded,\n\
      \x20            varint ids; O(1) memory); replay <path> [--engine sim|\n\
-     \x20            reference] — bit-identical re-run, prints events/sec\n\
+     \x20            reference] — bit-identical re-run, prints events/sec;\n\
+     \x20            inspect <path.rgsp> — summarize a recorded span sidecar\n\
+     \x20 explain    <request-id> --trace <path.rgsp> — reconstruct one\n\
+     \x20            request's lifecycle timeline with per-stage durations\n\
      \n\
      COMMON OPTIONS:\n\
      \x20 --artifacts <dir>     artifact directory (default: artifacts)\n\
@@ -90,6 +95,13 @@ fn help() -> String {
      \x20                       microbatched ranking (0 = off, default;\n\
      \x20                       serve + figure/sim)\n\
      \x20 --batch-max <n>       max members per batched rank pass (default 32)\n\
+     \x20 --trace-spans <n>     flight-recorder span retention (0 = off,\n\
+     \x20                       default; observe-only — decisions are\n\
+     \x20                       bit-identical either way; serve + figure/sim)\n\
+     \x20 --trace-out <path>    write retained spans to an RGSP sidecar at\n\
+     \x20                       end of run (serve + trace replay)\n\
+     \x20 --heartbeat <path>    JSONL metrics heartbeat sink (serve), one\n\
+     \x20                       snapshot line every --heartbeat-ms (def. 1000)\n\
      \x20 --jobs <n>            worker threads for the figure/sim grids\n\
      \x20                       (default 1; output byte-identical at any n)\n"
         .to_string()
@@ -141,6 +153,7 @@ fn trace_cli(args: &Args) -> Result<()> {
                         m.sim_events as f64 / wall.max(1e-9),
                         m.completed as f64 / wall.max(1e-9),
                     );
+                    report_spans(args, m.flight.as_deref(), wall)?;
                 }
                 "reference" => {
                     let r = relaygr::cluster::run_reference(&cfg, &wl)?;
@@ -152,14 +165,70 @@ fn trace_cli(args: &Args) -> Result<()> {
                         r.outcomes.len() as f64 / wall.max(1e-9),
                         r.mean_rank_us,
                     );
+                    report_spans(args, r.flight.as_deref(), wall)?;
                 }
                 other => bail!("--engine {other}: expected sim | reference"),
             }
             Ok(())
         }
+        (Some("inspect"), Some(path)) => {
+            let f = relaygr::relay::flight::read_rgsp(path)?;
+            print!("{}", relaygr::relay::flight::inspect_summary(&f));
+            Ok(())
+        }
         _ => bail!(
             "usage: relaygr trace record <out> [workload flags] | \
-             relaygr trace replay <path> [--engine sim|reference]"
+             relaygr trace replay <path> [--engine sim|reference] | \
+             relaygr trace inspect <path.rgsp>"
+        ),
+    }
+}
+
+/// Print the flight-recorder tail line after a traced replay (span
+/// throughput + the sample request id for `relaygr explain`), and write
+/// the RGSP sidecar when `--trace-out` is given.
+fn report_spans(args: &Args, fl: Option<&relaygr::relay::FlightRecorder>, wall: f64) -> Result<()> {
+    let Some(fl) = fl else { return Ok(()) };
+    println!(
+        "traced {} spans ({} retained, {} dropped, {:.0} spans/sec), sample request {}",
+        fl.emitted(),
+        fl.retained(),
+        fl.dropped(),
+        fl.emitted() as f64 / wall.max(1e-9),
+        fl.last_done_rid.map_or_else(|| "-".to_string(), |r| r.to_string()),
+    );
+    if let Some(out) = args.get("trace-out") {
+        let (n, bytes) = fl.write_rgsp(out)?;
+        println!("wrote {n} spans ({bytes} bytes) to {out}");
+    }
+    Ok(())
+}
+
+/// `relaygr explain <request-id> --trace <path.rgsp>` — reconstruct one
+/// request's lifecycle timeline (per-span offsets + telescoping stage
+/// durations) from a recorded span sidecar.
+fn explain_cli(args: &Args) -> Result<()> {
+    use relaygr::relay::flight;
+
+    let rid: u64 = args
+        .positionals
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: relaygr explain <request-id> --trace <path.rgsp>"))?
+        .parse()
+        .context("request id")?;
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow!("--trace <path.rgsp> is required"))?;
+    let f = flight::read_rgsp(path)?;
+    match flight::timeline(&f.spans, rid) {
+        Some(tl) => {
+            print!("{}", tl.render());
+            Ok(())
+        }
+        None => bail!(
+            "request {rid} has no spans in {path} (evicted by the {}-span retention \
+             bound, or never traced)",
+            f.trace_spans,
         ),
     }
 }

@@ -6,6 +6,7 @@
 
 pub mod slo;
 
+use crate::relay::flight::{FlightRecorder, StageBreakdown};
 use crate::relay::hbm::HbmStats;
 use crate::relay::hierarchy::HierarchyStats;
 use crate::relay::pipeline::{CacheOutcome, Lifecycle};
@@ -58,6 +59,14 @@ pub struct RunMetrics {
     /// Per-request outcome capture mode (off by default — see
     /// [`OutcomeRecorder`]).
     pub outcomes: OutcomeRecorder,
+
+    /// Per-stage latency breakdown folded by the flight recorder
+    /// (empty unless the run traced with `--trace-spans > 0`).
+    pub stages: StageBreakdown,
+    /// The detached flight recorder itself (raw spans for `explain` /
+    /// RGSP sidecar writing).  `Arc` keeps `RunMetrics: Clone` cheap —
+    /// span buffers are shared, never copied.
+    pub flight: Option<std::sync::Arc<FlightRecorder>>,
 }
 
 /// How [`RunMetrics::record`] captures per-request outcomes.
@@ -277,6 +286,8 @@ impl RunMetrics {
             pipeline_slo_us,
             scenario: String::new(),
             outcomes: OutcomeRecorder::Off,
+            stages: StageBreakdown::default(),
+            flight: None,
         }
     }
 

@@ -50,6 +50,9 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::relay::baseline::Mode;
+use crate::relay::flight::{
+    psi_action, rank_action, trigger_reason, FlightRecorder, SpanKind, NONE_OPERAND,
+};
 use crate::relay::hbm::{EntryState, HbmStats};
 use crate::relay::hierarchy::{CacheHierarchy, HierarchyStats, PseudoAction, ReloadDone};
 use crate::relay::pipeline::CacheOutcome;
@@ -105,6 +108,13 @@ pub struct CoordinatorConfig {
     /// Maximum members per batch (`--batch-max`); reaching it closes the
     /// batch immediately (`Filled`) without waiting out the window.
     pub batch_max: usize,
+    /// Flight-recorder retention bound (`--trace-spans`): total lifecycle
+    /// spans kept across the pooled per-shard rings.  `0` disables
+    /// tracing entirely — no recorder is constructed and every emission
+    /// hook is skipped.  The recorder is observe-only by contract (see
+    /// [`crate::relay::flight`]): no decision path may read it, so the
+    /// decision flow is bit-identical with tracing on or off.
+    pub trace_spans: usize,
 }
 
 /// Cascade stages the coordinator is told about.
@@ -265,6 +275,9 @@ struct InstanceCtl<T> {
 /// recycled with the slot (see [`Slab::insert_with`]), so the per-request
 /// cycle is allocation-free once buffer capacities are warm.
 struct ReqCtl {
+    /// Workload request id (`GenRequest::rid`) — carried only so the
+    /// flight recorder can label spans; no decision path reads it.
+    rid: u64,
     user: u64,
     prefix_len: usize,
     is_long: bool,
@@ -293,7 +306,8 @@ impl ReqCtl {
     /// recycled slots (via `insert_with`) go through here, so a field
     /// added to the struct cannot be inherited from a previous tenant by
     /// being forgotten in one of two places.
-    fn reset(&mut self, user: u64, prefix_len: usize, is_long: bool) {
+    fn reset(&mut self, rid: u64, user: u64, prefix_len: usize, is_long: bool) {
+        self.rid = rid;
         self.user = user;
         self.prefix_len = prefix_len;
         self.is_long = is_long;
@@ -314,6 +328,7 @@ impl ReqCtl {
 impl Default for ReqCtl {
     fn default() -> ReqCtl {
         let mut st = ReqCtl {
+            rid: 0,
             user: 0,
             prefix_len: 0,
             is_long: false,
@@ -329,8 +344,20 @@ impl Default for ReqCtl {
             seg_pinned: Vec::new(),
             seg_produced: Vec::new(),
         };
-        st.reset(0, 0, false);
+        st.reset(0, 0, 0, false);
         st
+    }
+}
+
+/// [`PseudoAction`] → flight-recorder ψ lookup code ([`psi_action`]).
+fn psi_code(a: &PseudoAction) -> u64 {
+    match a {
+        PseudoAction::HbmHit => psi_action::HBM_HIT,
+        PseudoAction::WaitProducing => psi_action::WAIT_PRODUCING,
+        PseudoAction::StartReload { .. } => psi_action::START_RELOAD,
+        PseudoAction::JoinReload => psi_action::JOIN_RELOAD,
+        PseudoAction::QueuedReload => psi_action::QUEUED_RELOAD,
+        PseudoAction::Miss => psi_action::MISS,
     }
 }
 
@@ -343,6 +370,9 @@ pub struct RelayCoordinator<T> {
     /// Per-request decision state behind generational [`ReqId`] handles:
     /// dense O(1) access, recycled slots, no per-request allocation.
     requests: Slab<ReqCtl>,
+    /// The observe-only flight recorder (`--trace-spans > 0`); never
+    /// consulted by any decision path — see [`crate::relay::flight`].
+    flight: Option<FlightRecorder>,
 }
 
 impl<T: Clone + Default> RelayCoordinator<T> {
@@ -376,7 +406,8 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 batch: BatchCtl::new(),
             })
             .collect();
-        Ok(RelayCoordinator { cfg, router, triggers, instances, requests: Slab::new() })
+        let flight = (cfg.trace_spans > 0).then(|| FlightRecorder::new(cfg.trace_spans));
+        Ok(RelayCoordinator { cfg, router, triggers, instances, requests: Slab::new(), flight })
     }
 
     // ---- introspection -----------------------------------------------------
@@ -418,6 +449,18 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// Live (un-retired) requests — leak check for tests and benches.
     pub fn live_requests(&self) -> usize {
         self.requests.len()
+    }
+
+    /// The flight recorder, when tracing is on (`--trace-spans > 0`) —
+    /// live heartbeats read span counters through this.
+    pub fn flight(&self) -> Option<&FlightRecorder> {
+        self.flight.as_ref()
+    }
+
+    /// Detach the flight recorder at end of run; engines fold its stage
+    /// breakdown into their metrics and write the RGSP sidecar from it.
+    pub fn take_flight(&mut self) -> Option<FlightRecorder> {
+        self.flight.take()
     }
 
     /// Merged cache/admission counters across instances.
@@ -494,17 +537,19 @@ impl<T: Clone + Default> RelayCoordinator<T> {
 
     // ---- event API ---------------------------------------------------------
 
-    /// A request entered the pipeline.  `candidates` is the ranking-side
-    /// candidate item set (copied into the request's recycled slot buffer
-    /// for segment planning at `rank_compute`; pass `&[]` when segment
-    /// reuse is off — hosts should consult
-    /// [`RelayCoordinator::segments_enabled`] before materialising it).
-    /// Returns the request's [`ReqId`] handle — every later event takes
-    /// it back — and whether the trigger side path should run (relay
-    /// mode, long sequence).
+    /// A request entered the pipeline.  `rid` is the workload request id
+    /// (`GenRequest::rid`), used only to label flight-recorder spans.
+    /// `candidates` is the ranking-side candidate item set (copied into
+    /// the request's recycled slot buffer for segment planning at
+    /// `rank_compute`; pass `&[]` when segment reuse is off — hosts
+    /// should consult [`RelayCoordinator::segments_enabled`] before
+    /// materialising it).  Returns the request's [`ReqId`] handle —
+    /// every later event takes it back — and whether the trigger side
+    /// path should run (relay mode, long sequence).
     pub fn on_arrival(
         &mut self,
-        _now: u64,
+        now: u64,
+        rid: u64,
         user: u64,
         prefix_len: usize,
         candidates: &[u64],
@@ -512,11 +557,14 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         let is_long = prefix_len > self.cfg.long_threshold;
         let keep_cands = self.cfg.mode.is_relay() && self.cfg.segment.enabled();
         let req = self.requests.insert_with(|st| {
-            st.reset(user, prefix_len, is_long);
+            st.reset(rid, user, prefix_len, is_long);
             if keep_cands {
                 st.cands.extend_from_slice(candidates);
             }
         });
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_arrival(now, rid, req.index(), user, prefix_len as u64);
+        }
         (req, self.cfg.mode.is_relay() && is_long)
     }
 
@@ -539,6 +587,16 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             .get_mut(&inst)
             .map(|t| t.decide(now, &meta, kv))
             .unwrap_or(Decision::NotAtRisk);
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_route(now, req.index(), false, inst as u64);
+            let reason = match decision {
+                Decision::NotAtRisk => trigger_reason::NOT_AT_RISK,
+                Decision::Admit => trigger_reason::ADMIT,
+                Decision::RateLimited => trigger_reason::RATE_LIMITED,
+                Decision::FootprintLimited => trigger_reason::FOOTPRINT_LIMITED,
+            };
+            fl.note_trigger(now, req.index(), reason, inst as u64);
+        }
         if decision != Decision::Admit {
             return SignalAction::None;
         }
@@ -550,6 +608,9 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         // The pre-infer signal itself performs the pseudo-pre-infer checks,
         // skipping redundant recomputation when ψ is already local (§3.4).
         let action = self.instances[inst].cache.pseudo_pre_infer(user, now);
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_psi(now, req.index(), psi_code(&action), false);
+        }
         match action {
             PseudoAction::HbmHit | PseudoAction::WaitProducing => {
                 // Cache already present / being produced: re-arm its
@@ -560,7 +621,12 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 self.instances[inst].cache.hbm_mut().extend_lease(user, now + self.cfg.t_life_us);
                 SignalAction::None
             }
-            PseudoAction::StartReload { bytes } => SignalAction::Reload { instance: inst, user, bytes },
+            PseudoAction::StartReload { bytes } => {
+                if let Some(fl) = self.flight.as_mut() {
+                    fl.note_reload_begin(now, req.index(), user, inst as u64, bytes as u64);
+                }
+                SignalAction::Reload { instance: inst, user, bytes }
+            }
             PseudoAction::JoinReload | PseudoAction::QueuedReload => {
                 // A reload is already pending; the signal needs no follow-up.
                 SignalAction::None
@@ -568,7 +634,12 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             PseudoAction::Miss => {
                 let instance = &mut self.instances[inst];
                 match instance.cache.hbm_mut().begin_produce(user, kv, now, self.cfg.t_life_us) {
-                    Ok(()) => SignalAction::Produce { instance: inst, user, prefix_len },
+                    Ok(()) => {
+                        if let Some(fl) = self.flight.as_mut() {
+                            fl.note_produce_begin(now, req.index(), user, inst as u64);
+                        }
+                        SignalAction::Produce { instance: inst, user, prefix_len }
+                    }
                     Err(_) => {
                         // Admission overcommitted (shouldn't happen when Eqs.
                         // 1-3 hold); treat as not admitted.  The cancel frees
@@ -582,6 +653,18 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                         let st = self.requests.get_mut(req).unwrap();
                         st.admitted = false;
                         st.pre_instance = None;
+                        let rid = st.rid;
+                        if let Some(fl) = self.flight.as_mut() {
+                            // Post-admit reversal: a second trigger span
+                            // records the cancel (the first said `admit`).
+                            fl.emit(
+                                now,
+                                rid,
+                                SpanKind::TriggerDecision,
+                                trigger_reason::OVERCOMMIT_CANCEL,
+                                inst as u64,
+                            );
+                        }
                         SignalAction::None
                     }
                 }
@@ -593,7 +676,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// resolved: long-sequence requests carry the consistency-hash-key
     /// and go to the special service; short ones follow standard
     /// balancing.  Returns the ranking instance at `Stage::Preproc`.
-    pub fn on_stage_done(&mut self, _now: u64, req: ReqId, stage: Stage) -> Option<usize> {
+    pub fn on_stage_done(&mut self, now: u64, req: ReqId, stage: Stage) -> Option<usize> {
         if stage != Stage::Preproc {
             return None;
         }
@@ -607,6 +690,9 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             self.router.route_normal(user)
         };
         self.requests.get_mut(req).unwrap().rank_instance = route.instance;
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_route(now, req.index(), true, route.instance as u64);
+        }
         Some(route.instance)
     }
 
@@ -620,9 +706,22 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         if !(self.cfg.mode.is_relay() && is_long) {
             // Baseline mode or short-sequence request: full inline inference.
             self.requests.get_mut(req).unwrap().resolved = true;
+            if let Some(fl) = self.flight.as_mut() {
+                fl.note_rank_start(now, req.index(), rank_action::PROCEED, inst as u64);
+            }
             return RankAction::Proceed { cached: false, outcome: CacheOutcome::FullInference };
         }
         let action = self.instances[inst].cache.pseudo_pre_infer(user, now);
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_psi(now, req.index(), psi_code(&action), true);
+            let code = match &action {
+                PseudoAction::HbmHit | PseudoAction::Miss => rank_action::PROCEED,
+                PseudoAction::WaitProducing => rank_action::WAIT,
+                PseudoAction::StartReload { .. } => rank_action::START_RELOAD,
+                PseudoAction::JoinReload | PseudoAction::QueuedReload => rank_action::WAIT_RELOAD,
+            };
+            fl.note_rank_start(now, req.index(), code, inst as u64);
+        }
         match action {
             PseudoAction::HbmHit => {
                 let origin = self.instances[inst]
@@ -649,6 +748,9 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                     st.wait_since = now;
                 }
                 self.instances[inst].waiting_reload.or_insert_with(user, Vec::new).push(req);
+                if let Some(fl) = self.flight.as_mut() {
+                    fl.note_reload_begin(now, req.index(), user, inst as u64, bytes as u64);
+                }
                 RankAction::StartReload { bytes }
             }
             PseudoAction::JoinReload | PseudoAction::QueuedReload => {
@@ -667,7 +769,13 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                     if admitted { CacheOutcome::Fallback } else { CacheOutcome::FullInference };
                 st.cached = false;
                 st.resolved = true;
-                RankAction::Proceed { cached: false, outcome: st.outcome }
+                let outcome = st.outcome;
+                if admitted {
+                    if let Some(fl) = self.flight.as_mut() {
+                        fl.note_fallback(now, req.index(), 4);
+                    }
+                }
+                RankAction::Proceed { cached: false, outcome }
             }
         }
     }
@@ -694,6 +802,9 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         if ok {
             self.instances[instance].origin.insert(user, CacheOutcome::HbmHit);
         }
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_produce_end(now, user, instance as u64, ok);
+        }
         // On failure (entry evicted while producing — lost work) the
         // admitted slot is still released exactly once, by the owning
         // request's `on_rank_done`.
@@ -701,7 +812,8 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             self.instances[instance].waiting_produce.remove(user).unwrap_or_default();
         for &w in &waiters {
             if let Some(st) = self.requests.get_mut(w) {
-                st.wait_us += now.saturating_sub(st.wait_since) as f64;
+                let waited = now.saturating_sub(st.wait_since);
+                st.wait_us += waited as f64;
                 if ok {
                     st.outcome = CacheOutcome::HbmHit;
                     st.cached = true;
@@ -710,6 +822,12 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                     st.cached = false;
                 }
                 st.resolved = true;
+                if let Some(fl) = self.flight.as_mut() {
+                    fl.note_wait_resolved(now, w.index(), 0, waited);
+                    if !ok {
+                        fl.note_fallback(now, w.index(), 3);
+                    }
+                }
             }
         }
         waiters
@@ -738,15 +856,25 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         if done.installed {
             self.instances[instance].origin.insert(user, CacheOutcome::DramHit);
         }
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_reload_end(now, user, done.installed, bytes as u64);
+        }
         let woken = self.instances[instance].waiting_reload.remove(user).unwrap_or_default();
         for &w in &woken {
             if let Some(st) = self.requests.get_mut(w) {
-                st.wait_us += now.saturating_sub(st.wait_since) as f64;
+                let waited = now.saturating_sub(st.wait_since);
+                st.wait_us += waited as f64;
                 if !done.installed {
                     st.outcome = CacheOutcome::Fallback;
                     st.cached = false;
                 }
                 st.resolved = true;
+                if let Some(fl) = self.flight.as_mut() {
+                    fl.note_wait_resolved(now, w.index(), 1, waited);
+                    if !done.installed {
+                        fl.note_fallback(now, w.index(), 1);
+                    }
+                }
             }
         }
         ReloadResolution { installed: done.installed, woken, next: done.next }
@@ -764,10 +892,15 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                     self.instances[instance].waiting_reload.remove(user).unwrap_or_default();
                 for &w in &woken {
                     if let Some(st) = self.requests.get_mut(w) {
-                        st.wait_us += now.saturating_sub(st.wait_since) as f64;
+                        let waited = now.saturating_sub(st.wait_since);
+                        st.wait_us += waited as f64;
                         st.outcome = CacheOutcome::Fallback;
                         st.cached = false;
                         st.resolved = true;
+                        if let Some(fl) = self.flight.as_mut() {
+                            fl.note_wait_resolved(now, w.index(), 3, waited);
+                            fl.note_fallback(now, w.index(), 1);
+                        }
                     }
                 }
                 QueuedReload::Aborted { woken, next }
@@ -779,11 +912,16 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// request leaves its waiting list and falls back to full inference.
     pub fn on_wait_timeout(&mut self, now: u64, req: ReqId) {
         let Some(st) = self.requests.get_mut(req) else { return };
-        st.wait_us += now.saturating_sub(st.wait_since) as f64;
+        let waited = now.saturating_sub(st.wait_since);
+        st.wait_us += waited as f64;
         st.outcome = CacheOutcome::Fallback;
         st.cached = false;
         st.resolved = true;
         let (inst, user) = (st.rank_instance, st.user);
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_wait_resolved(now, req.index(), 2, waited);
+            fl.note_fallback(now, req.index(), 0);
+        }
         if inst < self.instances.len() {
             let ctl = &mut self.instances[inst];
             for map in [&mut ctl.waiting_produce, &mut ctl.waiting_reload] {
@@ -813,6 +951,11 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     pub fn offer_rank(&mut self, now: u64, req: ReqId) -> BatchDecision {
         let window = self.cfg.batch_window_us;
         if window == 0 {
+            if let Some(fl) = self.flight.as_mut() {
+                let inst =
+                    self.requests.get(req).map_or(NONE_OPERAND, |st| st.rank_instance as u64);
+                fl.note_batch(now, req.index(), SpanKind::BatchSolo, inst, 0);
+            }
             return BatchDecision::Solo;
         }
         let inst = {
@@ -824,18 +967,32 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         if !b.open {
             b.gen += 1;
             b.members.push(req);
+            let gen = b.gen;
             if max == 1 {
                 // Degenerate cap: every batch closes as it opens.
-                return BatchDecision::Filled { gen: b.gen };
+                if let Some(fl) = self.flight.as_mut() {
+                    fl.note_batch(now, req.index(), SpanKind::BatchFilled, inst as u64, gen);
+                }
+                return BatchDecision::Filled { gen };
             }
             b.open = true;
-            BatchDecision::Opened { deadline: now + window, gen: b.gen }
+            if let Some(fl) = self.flight.as_mut() {
+                fl.note_batch(now, req.index(), SpanKind::BatchOpen, inst as u64, gen);
+            }
+            BatchDecision::Opened { deadline: now + window, gen }
         } else {
             b.members.push(req);
+            let gen = b.gen;
             if b.members.len() >= max {
                 b.open = false;
-                BatchDecision::Filled { gen: b.gen }
+                if let Some(fl) = self.flight.as_mut() {
+                    fl.note_batch(now, req.index(), SpanKind::BatchFilled, inst as u64, gen);
+                }
+                BatchDecision::Filled { gen }
             } else {
+                if let Some(fl) = self.flight.as_mut() {
+                    fl.note_batch(now, req.index(), SpanKind::BatchJoin, inst as u64, gen);
+                }
                 BatchDecision::Joined
             }
         }
@@ -852,7 +1009,13 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// single-flight store), then one batched execution, then
     /// `on_rank_done` per member (installs/releases each pin exactly
     /// once).
-    pub fn close_batch(&mut self, instance: usize, gen: u64, out: &mut Vec<ReqId>) -> bool {
+    pub fn close_batch(
+        &mut self,
+        now: u64,
+        instance: usize,
+        gen: u64,
+        out: &mut Vec<ReqId>,
+    ) -> bool {
         out.clear();
         let b = &mut self.instances[instance].batch;
         if b.gen != gen || b.members.is_empty() {
@@ -860,6 +1023,11 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         }
         b.open = false;
         out.append(&mut b.members);
+        if let Some(fl) = self.flight.as_mut() {
+            for &r in out.iter() {
+                fl.note_batch_flush(now, r.index(), instance as u64, gen);
+            }
+        }
         true
     }
 
@@ -884,6 +1052,10 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         let payload =
             if cached { self.instances[inst].cache.hbm_mut().consume(user) } else { None };
         let segments = self.plan_segments(now, req, inst);
+        if let Some(fl) = self.flight.as_mut() {
+            let reused = segments.as_ref().map_or(0, |p| p.reused as u64);
+            fl.note_exec_start(now, req.index(), cached, reused);
+        }
         RankCompute { cached, payload, segments }
     }
 
@@ -927,10 +1099,13 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// The classified ψ was unusable at execution time (live engine only:
     /// e.g. the device buffer failed to materialise) — demote to a safe
     /// fallback so metrics reflect what actually ran.
-    pub fn force_fallback(&mut self, req: ReqId) {
+    pub fn force_fallback(&mut self, now: u64, req: ReqId) {
         if let Some(st) = self.requests.get_mut(req) {
             st.outcome = CacheOutcome::Fallback;
             st.cached = false;
+            if let Some(fl) = self.flight.as_mut() {
+                fl.note_fallback(now, req.index(), 2);
+            }
         }
     }
 
@@ -938,9 +1113,10 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// live-cache slot, classify the spill lifecycle, and retire the
     /// request (its slab slot is recycled, buffers and all; the handle
     /// goes stale).  `kv_bytes` is this request's ψ footprint.
-    pub fn on_rank_done(&mut self, _now: u64, req: ReqId, kv_bytes: usize) -> Completion {
+    pub fn on_rank_done(&mut self, now: u64, req: ReqId, kv_bytes: usize) -> Completion {
         let st = self.requests.get_mut(req).expect("completion for unknown request");
-        let (user, prefix_len, is_long, inst, admitted, cached, outcome, wait_us, pre_instance) = (
+        let (rid, user, prefix_len, is_long, inst, admitted, cached, outcome, wait_us) = (
+            st.rid,
             st.user,
             st.prefix_len,
             st.is_long,
@@ -949,8 +1125,8 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             st.cached,
             st.outcome,
             st.wait_us,
-            st.pre_instance,
         );
+        let pre_instance = st.pre_instance;
         self.router.on_complete(inst);
         // Candidate-segment lifecycle: install what this pass produced
         // (waking up reuse for every request that joined), then release
@@ -997,6 +1173,17 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 ctl.origin.remove(user);
             }
         }
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_rank_done(
+                now,
+                req.index(),
+                crate::metrics::outcome_index(outcome) as u64,
+                wait_us,
+            );
+            if let Some(bytes) = spill {
+                fl.note_spill_begin(now, rid, user, inst as u64, bytes as u64);
+            }
+        }
         Completion {
             user,
             prefix_len,
@@ -1016,20 +1203,22 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// `Consumed` until its lifecycle expires (probe-time reclamation).
     pub fn complete_spill(
         &mut self,
+        now: u64,
         instance: usize,
         user: u64,
         bytes: usize,
         payload: T,
     ) -> bool {
         let ctl = &mut self.instances[instance];
-        if !ctl.cache.spill(user, bytes, payload) {
-            return false;
-        }
-        if ctl.cache.hbm().state_of(user) == Some(EntryState::Consumed) {
+        let accepted = ctl.cache.spill(user, bytes, payload);
+        if accepted && ctl.cache.hbm().state_of(user) == Some(EntryState::Consumed) {
             ctl.cache.hbm_mut().evict(user);
             ctl.origin.remove(user);
         }
-        true
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_spill_end(now, user, accepted, bytes as u64);
+        }
+        accepted
     }
 }
 
@@ -1062,6 +1251,7 @@ mod tests {
             segment: SegmentConfig::disabled(),
             batch_window_us: 0,
             batch_max: 32,
+            trace_spans: 0,
         }
     }
 
@@ -1071,7 +1261,7 @@ mod tests {
 
     /// Drive one request end to end with an instantly-completing host.
     fn drive(c: &mut RelayCoordinator<u32>, now: u64, user: u64, prefix: usize) -> Completion {
-        let (req, wants_trigger) = c.on_arrival(now, user, prefix, &[]);
+        let (req, wants_trigger) = c.on_arrival(now, user, user, prefix, &[]);
         if wants_trigger {
             match c.on_trigger_check(now, req) {
                 SignalAction::Produce { instance, user, .. } => {
@@ -1102,7 +1292,7 @@ mod tests {
             assert!(rc.payload.is_some());
         }
         if let Some(bytes) = done.spill {
-            c.complete_spill(done.instance, done.user, bytes, 7);
+            c.complete_spill(now, done.instance, done.user, bytes, 7);
         }
         done
     }
@@ -1137,7 +1327,7 @@ mod tests {
     #[test]
     fn rank_waits_for_production_then_hits() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
-        let (req, wants) = c.on_arrival(0, 7, 4096, &[]);
+        let (req, wants) = c.on_arrival(0, 7, 7, 4096, &[]);
         assert!(wants);
         let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) else {
             panic!("expected production");
@@ -1158,7 +1348,7 @@ mod tests {
     #[test]
     fn failed_production_falls_back() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
-        let (req, wants) = c.on_arrival(0, 7, 4096, &[]);
+        let (req, wants) = c.on_arrival(0, 7, 7, 4096, &[]);
         assert!(wants);
         let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) else {
             panic!("expected production");
@@ -1177,7 +1367,7 @@ mod tests {
     #[test]
     fn wait_timeout_resolves_to_fallback_and_detaches() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
-        let (req, wants) = c.on_arrival(0, 7, 4096, &[]);
+        let (req, wants) = c.on_arrival(0, 7, 7, 4096, &[]);
         assert!(wants);
         let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) else {
             panic!("expected production");
@@ -1197,14 +1387,14 @@ mod tests {
     #[test]
     fn stale_handle_misses_after_slot_recycled() {
         let mut c = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
-        let (old, _) = c.on_arrival(0, 7, 4096, &[]);
+        let (old, _) = c.on_arrival(0, 1, 7, 4096, &[]);
         c.on_stage_done(0, old, Stage::Preproc).unwrap();
         let _ = c.on_rank_start(0, old);
         let _ = c.rank_compute(0, old);
         c.on_rank_done(0, old, 1 << 20);
         // The next arrival recycles the slot; the retired handle must
         // read as resolved/uncached rather than aliasing the new tenant.
-        let (new, _) = c.on_arrival(10, 9, 4096, &[]);
+        let (new, _) = c.on_arrival(10, 2, 9, 4096, &[]);
         assert_eq!(new.index(), old.index(), "slot recycled");
         assert_ne!(new, old);
         assert!(c.wait_resolved(old), "stale handle reads as resolved");
@@ -1229,7 +1419,7 @@ mod tests {
         // otherwise the Eq. 2 footprint bound stops binding.
         for i in 0..6u64 {
             let now = i * 10_000;
-            let (req, wants) = c.on_arrival(now, 7, 4096, &[]);
+            let (req, wants) = c.on_arrival(now, i, 7, 4096, &[]);
             assert!(wants);
             match c.on_trigger_check(now, req) {
                 SignalAction::Produce { instance, user, .. } => {
@@ -1256,8 +1446,8 @@ mod tests {
         assert!(first.spill.is_some());
         // Two refresh requests race: the first starts the reload, the
         // second joins it.
-        let (r2, _) = c.on_arrival(400_000, 5, 4096, &[]);
-        let (r3, _) = c.on_arrival(400_000, 5, 4096, &[]);
+        let (r2, _) = c.on_arrival(400_000, 2, 5, 4096, &[]);
+        let (r3, _) = c.on_arrival(400_000, 3, 5, 4096, &[]);
         // Skip admission (signal may be delayed): rank requests front
         // the reload themselves (out-of-order arrival, §3.4).
         let inst2 = c.on_stage_done(400_000, r2, Stage::Preproc).unwrap();
@@ -1326,7 +1516,7 @@ mod tests {
         let mut c: RelayCoordinator<u32> =
             RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
         // Request 1 produces 300 MB into the 512 MB window.
-        let (r1, wants) = c.on_arrival(0, 7, 4096, &[]);
+        let (r1, wants) = c.on_arrival(0, 1, 7, 4096, &[]);
         assert!(wants);
         let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, r1) else {
             panic!("first admit produces");
@@ -1338,7 +1528,7 @@ mod tests {
         // only 212 MB free in the carved-down window and the admit is
         // cancelled; on the other special instance it produces cleanly.
         // Both paths must leave the ledger balanced.
-        let (r2, wants2) = c.on_arrival(10, 7 + (1 << 40), 4096, &[]);
+        let (r2, wants2) = c.on_arrival(10, 2, 7 + (1 << 40), 4096, &[]);
         assert!(wants2);
         let act = c.on_trigger_check(10, r2);
         match act {
@@ -1379,7 +1569,7 @@ mod tests {
         user: u64,
         cands: &[u64],
     ) -> (Completion, Option<SegmentPlan>) {
-        let (req, wants_trigger) = c.on_arrival(now, user, 4096, cands);
+        let (req, wants_trigger) = c.on_arrival(now, user, user, 4096, cands);
         if wants_trigger {
             if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(now, req) {
                 c.on_psi_ready(now, instance, user, Some(7));
@@ -1435,7 +1625,7 @@ mod tests {
         // either completes — the second joins the first's production.
         let mut reqs = Vec::new();
         for _ in 0..2 {
-            let (req, wants) = c.on_arrival(0, 42, 4096, &[77]);
+            let (req, wants) = c.on_arrival(0, 42, 42, 4096, &[77]);
             assert!(wants);
             if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) {
                 c.on_psi_ready(0, instance, user, Some(7));
@@ -1480,7 +1670,7 @@ mod tests {
     /// Bring one request to the rank-ready point (classified, resolved)
     /// and return its handle + instance.
     fn rank_ready(c: &mut RelayCoordinator<u32>, now: u64, user: u64) -> (ReqId, usize) {
-        let (req, wants) = c.on_arrival(now, user, 4096, &[]);
+        let (req, wants) = c.on_arrival(now, user, user, 4096, &[]);
         if wants {
             if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(now, req) {
                 c.on_psi_ready(now, instance, user, Some(7));
@@ -1524,7 +1714,7 @@ mod tests {
             // Window-deadline flushes due before this offer fire first.
             while pending.first().is_some_and(|&(d, _, _)| d <= now) {
                 let (d, inst, gen) = pending.remove(0);
-                if c.close_batch(inst, gen, &mut buf) {
+                if c.close_batch(d, inst, gen, &mut buf) {
                     flushes += 1;
                     for &r in &buf {
                         let _ = c.rank_compute(d, r);
@@ -1543,7 +1733,7 @@ mod tests {
                 }
                 BatchDecision::Joined => {}
                 BatchDecision::Filled { gen } => {
-                    assert!(c.close_batch(inst, gen, &mut buf), "filled batch drains");
+                    assert!(c.close_batch(now, inst, gen, &mut buf), "filled batch drains");
                     flushes += 1;
                     assert_eq!(buf.len(), 3, "filled at batch_max");
                     for &r in &buf {
@@ -1555,7 +1745,7 @@ mod tests {
             }
         }
         for (d, inst, gen) in pending.drain(..) {
-            if c.close_batch(inst, gen, &mut buf) {
+            if c.close_batch(d, inst, gen, &mut buf) {
                 flushes += 1;
                 for &r in &buf {
                     let _ = c.rank_compute(d, r);
@@ -1589,14 +1779,17 @@ mod tests {
         assert_eq!(c.offer_rank(10, r2), BatchDecision::Filled { gen });
         assert!(!c.batch_open(inst, gen), "filled batch is no longer open");
         let mut buf = Vec::new();
-        assert!(c.close_batch(inst, gen, &mut buf));
+        assert!(c.close_batch(10, inst, gen, &mut buf));
         assert_eq!(buf.len(), 2);
         for &r in &buf {
             let _ = c.rank_compute(10, r);
             c.on_rank_done(10, r, 1 << 20);
         }
         // The deadline timer fires later: its generation is stale.
-        assert!(!c.close_batch(inst, gen, &mut buf), "deadline flush after Filled is a no-op");
+        assert!(
+            !c.close_batch(1_000, inst, gen, &mut buf),
+            "deadline flush after Filled is a no-op"
+        );
         assert!(buf.is_empty());
         // The next offer opens a fresh generation.
         let (r3, _) = rank_ready(&mut c, 2_000, 42);
@@ -1604,7 +1797,7 @@ mod tests {
             panic!("fresh batch opens");
         };
         assert_eq!(gen2, gen + 1);
-        assert!(c.close_batch(inst, gen2, &mut buf));
+        assert!(c.close_batch(2_000, inst, gen2, &mut buf));
         assert_eq!(buf, vec![r3]);
         let _ = c.rank_compute(2_100, r3);
         c.on_rank_done(2_100, r3, 1 << 20);
@@ -1624,7 +1817,7 @@ mod tests {
         let mut inst = 0;
         let mut last = BatchDecision::Solo;
         for _ in 0..3 {
-            let (req, wants) = c.on_arrival(0, 42, 4096, &[10, 11]);
+            let (req, wants) = c.on_arrival(0, 42, 42, 4096, &[10, 11]);
             if wants {
                 if let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) {
                     c.on_psi_ready(0, instance, user, Some(7));
@@ -1639,7 +1832,7 @@ mod tests {
         assert!(c.batch_open(inst, gen));
         let mut buf = Vec::new();
         // Deadline flush at window close.
-        assert!(c.close_batch(inst, gen, &mut buf));
+        assert!(c.close_batch(1_000, inst, gen, &mut buf));
         assert_eq!(buf.len(), 3);
         let mut produced = 0;
         let mut joined = 0;
@@ -1663,6 +1856,34 @@ mod tests {
         assert_eq!(c.live_requests(), 0);
     }
 
+    /// Tentpole: with tracing on, a full relay lifecycle emits a span
+    /// stream whose reconstructed timeline telescopes to the request's
+    /// e2e latency, and `take_flight` detaches the recorder (stage
+    /// breakdown included) exactly once.
+    #[test]
+    fn flight_recorder_traces_full_lifecycle_and_telescopes() {
+        use crate::relay::flight::timeline;
+        let mut cfg = config(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) });
+        cfg.trace_spans = 4096;
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        let done = drive(&mut c, 0, 42, 4096);
+        assert_eq!(done.outcome, CacheOutcome::HbmHit);
+        let fl = c.take_flight().expect("recorder constructed when trace_spans > 0");
+        assert!(c.take_flight().is_none(), "recorder detaches once");
+        let spans = fl.spans_sorted();
+        assert!(spans.iter().any(|s| s.kind == SpanKind::Arrival && s.rid == 42));
+        assert!(spans.iter().any(|s| s.kind == SpanKind::TriggerDecision
+            && s.a == trigger_reason::ADMIT));
+        assert!(spans.iter().any(|s| s.kind == SpanKind::RankDone));
+        assert!(spans.iter().any(|s| s.kind == SpanKind::SpillEnd), "spill recorded end-to-end");
+        let tl = timeline(&spans, 42).expect("request reconstructed from its spans");
+        let total: u64 = tl.stages.iter().map(|&(_, d)| d).sum();
+        assert_eq!(total, tl.e2e_us(), "stage durations telescope to e2e");
+        assert_eq!(tl.outcome, Some(crate::metrics::outcome_index(CacheOutcome::HbmHit)));
+        assert_eq!(fl.breakdown.admission.count(), 1, "admission interval folded");
+    }
+
     #[test]
     fn segments_ignored_without_candidates_or_in_baseline() {
         let mut c: RelayCoordinator<u32> =
@@ -1676,7 +1897,7 @@ mod tests {
         let mut b: RelayCoordinator<u32> =
             RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
         assert!(!b.segments_enabled());
-        let (req, wants) = b.on_arrival(0, 7, 4096, &[1, 2]);
+        let (req, wants) = b.on_arrival(0, 7, 7, 4096, &[1, 2]);
         assert!(!wants);
         b.on_stage_done(0, req, Stage::Preproc).unwrap();
         let _ = b.on_rank_start(0, req);

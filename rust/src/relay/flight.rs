@@ -1,0 +1,943 @@
+//! Coordinator-resident flight recorder: a zero-allocation, structured
+//! per-request event trace of every relay-race lifecycle transition.
+//!
+//! The recorder is strictly **decision-observing**: it is consulted by no
+//! decision path, feeds no policy, and a run with tracing on must be
+//! decision-for-decision bit-identical to the same run with tracing off
+//! (pinned by `tests/cross_engine.rs`).  It lives inside
+//! [`RelayCoordinator`](crate::relay::coordinator::RelayCoordinator) — the
+//! PR 1 invariant that all decisions flow through the coordinator means
+//! all three engines (discrete-event sim, serialized reference, live
+//! threaded) emit spans for free, each with its own clock.
+//!
+//! ## Span records
+//!
+//! Each lifecycle transition is one fixed-size [`Span`]: a global emission
+//! ordinal (`ord`, the deterministic sort key), the host clock `t_us`, the
+//! workload request id `rid`, a [`SpanKind`] tag and two operands whose
+//! meaning depends on the kind (reason codes, instance ids, byte counts —
+//! see the kind docs).  Spans land in pooled per-shard ring buffers
+//! (sharded by `rid`, overwrite-oldest, bounded by `--trace-spans`), so
+//! steady-state emission into a warm ring performs **zero allocations** —
+//! asserted by `bench_hotpath` (`coordinator/trace_emit`).
+//!
+//! ## RGSP sidecar format (version 1)
+//!
+//! Retained spans serialize to a compact binary sidecar mirroring the
+//! RGTR trace conventions (`workload/trace.rs`):
+//!
+//! ```text
+//! magic "RGSP" | version u8 | span count u64 LE
+//!   | varint trace_spans | varint emitted | varint dropped
+//!   | records…
+//! ```
+//!
+//! Each record is `varint Δord | zigzag-varint Δt_us | varint rid |
+//! kind u8 | varint a | varint b`, with deltas against the previous
+//! record in `ord` order (ords are strictly increasing; `t_us` is
+//! near-monotone, so both deltas stay small).  **Extension recipe**
+//! (mirrors RGTR's): new span kinds append to the [`SpanKind`] table with
+//! the next free tag — readers skip unknown tags, so old tooling reads
+//! new files; removing or renumbering a tag requires a version bump.
+//!
+//! ## Stage-latency breakdown
+//!
+//! Alongside the raw spans the recorder folds per-request stage durations
+//! into [`StageBreakdown`] histograms (admission, ψ-wait, batch-wait,
+//! rank-exec, spill) using a slot-indexed clock table keyed by the
+//! coordinator's slab slots.  Engines copy the breakdown into
+//! [`RunMetrics`](crate::metrics::RunMetrics) at end of run; `relaygr
+//! figure breakdown` reports P50/P99 per stage × scenario × engine.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::stats::Histogram;
+use crate::workload::trace::{put_varint, read_u8, read_varint};
+
+/// Sentinel for "no instance / not applicable" operands.
+pub const NONE_OPERAND: u64 = u64::MAX;
+
+/// One lifecycle transition.  `a`/`b` are kind-specific operands (see
+/// [`SpanKind`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Global emission ordinal — the deterministic sort/merge key.
+    pub ord: u64,
+    /// Host-engine clock at emission (µs; virtual, arrival or wall).
+    pub t_us: u64,
+    /// Workload request id (`GenRequest::rid`), NOT the slab handle.
+    pub rid: u64,
+    pub kind: SpanKind,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Span tags.  Operand meaning per kind is listed as `a` / `b`.
+///
+/// Tags are append-only (see the module-level extension recipe).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// a = user, b = prefix_len.
+    Arrival = 0,
+    /// a = reason code ([`trigger_reason`]), b = signal instance (or
+    /// [`NONE_OPERAND`]).
+    TriggerDecision = 1,
+    /// a = ψ lookup outcome ([`psi_action`]), b = side (0 signal, 1 rank).
+    PsiLookup = 2,
+    /// a = stage (0 signal/retrieval, 1 preproc→rank), b = instance.
+    Route = 3,
+    /// a = instance, b = ψ bytes (0 when unknown at begin).
+    ProduceBegin = 4,
+    /// a = instance, b = 1 installed / 0 failed.
+    ProduceEnd = 5,
+    /// a = rank action code ([`rank_action`]), b = instance.
+    RankStart = 6,
+    /// a = cause (0 ψ ready, 1 reload done, 2 timeout, 3 abort), b = wait µs.
+    WaitResolved = 7,
+    /// a = instance, b = bytes.
+    ReloadBegin = 8,
+    /// a = 1 installed / 0 failed-or-aborted, b = bytes.
+    ReloadEnd = 9,
+    /// a = instance, b = batch generation.
+    BatchOpen = 10,
+    /// a = instance, b = batch generation.
+    BatchJoin = 11,
+    /// a = instance, b = batch generation.
+    BatchFilled = 12,
+    /// a = instance, b = batch generation.
+    BatchFlush = 13,
+    /// a = instance, b = 0 (window 0 / unbatched pass).
+    BatchSolo = 14,
+    /// a = 1 cached / 0 full, b = reused segment count.
+    ExecStart = 15,
+    /// a = outcome index ([`crate::metrics::outcome_index`]), b = wait µs.
+    RankDone = 16,
+    /// a = cause (0 wait-budget, 1 reload-abort, 2 forced,
+    /// 3 produce-failed, 4 admitted-miss), b = 0.
+    Fallback = 17,
+    /// a = instance, b = bytes.
+    SpillBegin = 18,
+    /// a = 1 accepted / 0 rejected, b = bytes.
+    SpillEnd = 19,
+}
+
+impl SpanKind {
+    pub fn from_u8(tag: u8) -> Option<SpanKind> {
+        use SpanKind::*;
+        Some(match tag {
+            0 => Arrival,
+            1 => TriggerDecision,
+            2 => PsiLookup,
+            3 => Route,
+            4 => ProduceBegin,
+            5 => ProduceEnd,
+            6 => RankStart,
+            7 => WaitResolved,
+            8 => ReloadBegin,
+            9 => ReloadEnd,
+            10 => BatchOpen,
+            11 => BatchJoin,
+            12 => BatchFilled,
+            13 => BatchFlush,
+            14 => BatchSolo,
+            15 => ExecStart,
+            16 => RankDone,
+            17 => Fallback,
+            18 => SpillBegin,
+            19 => SpillEnd,
+            _ => return None,
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        use SpanKind::*;
+        match self {
+            Arrival => "arrival",
+            TriggerDecision => "trigger",
+            PsiLookup => "psi-lookup",
+            Route => "route",
+            ProduceBegin => "produce-begin",
+            ProduceEnd => "produce-end",
+            RankStart => "rank-start",
+            WaitResolved => "wait-resolved",
+            ReloadBegin => "reload-begin",
+            ReloadEnd => "reload-end",
+            BatchOpen => "batch-open",
+            BatchJoin => "batch-join",
+            BatchFilled => "batch-filled",
+            BatchFlush => "batch-flush",
+            BatchSolo => "batch-solo",
+            ExecStart => "exec-start",
+            RankDone => "rank-done",
+            Fallback => "fallback",
+            SpillBegin => "spill-begin",
+            SpillEnd => "spill-end",
+        }
+    }
+
+    /// The pipeline stage an interval *ending* at this span belongs to —
+    /// the explain timeline's bucketing rule.  Intervals telescope, so
+    /// whatever the labels, stage durations sum exactly to `done −
+    /// arrival`.
+    pub fn stage(self) -> &'static str {
+        use SpanKind::*;
+        match self {
+            Arrival => "arrival",
+            TriggerDecision | PsiLookup | Route | ProduceBegin | ProduceEnd => "admission",
+            RankStart => "rank-queue",
+            WaitResolved | ReloadBegin | ReloadEnd | Fallback => "psi-wait",
+            BatchOpen | BatchJoin | BatchFilled | BatchFlush | BatchSolo => "batch-form",
+            ExecStart => "batch-wait",
+            RankDone => "rank-exec",
+            SpillBegin | SpillEnd => "spill",
+        }
+    }
+}
+
+/// Reason codes for [`SpanKind::TriggerDecision`], aligned with
+/// [`Decision`](crate::relay::trigger::Decision) plus the overcommit
+/// cancel (a post-admit reversal when the ψ window rejects the
+/// reservation).
+pub mod trigger_reason {
+    pub const NOT_AT_RISK: u64 = 0;
+    pub const ADMIT: u64 = 1;
+    pub const RATE_LIMITED: u64 = 2;
+    pub const FOOTPRINT_LIMITED: u64 = 3;
+    pub const OVERCOMMIT_CANCEL: u64 = 4;
+
+    pub const NAMES: [&str; 5] =
+        ["not-at-risk", "admit", "rate-limited", "footprint-limited", "overcommit-cancel"];
+}
+
+/// ψ lookup outcome codes for [`SpanKind::PsiLookup`], aligned with
+/// [`PseudoAction`](crate::relay::hierarchy::PseudoAction).
+pub mod psi_action {
+    pub const HBM_HIT: u64 = 0;
+    pub const WAIT_PRODUCING: u64 = 1;
+    pub const START_RELOAD: u64 = 2;
+    pub const JOIN_RELOAD: u64 = 3;
+    pub const QUEUED_RELOAD: u64 = 4;
+    pub const MISS: u64 = 5;
+
+    pub const NAMES: [&str; 6] =
+        ["hbm-hit", "wait-producing", "start-reload", "join-reload", "queued-reload", "miss"];
+}
+
+/// Rank action codes for [`SpanKind::RankStart`].
+pub mod rank_action {
+    pub const PROCEED: u64 = 0;
+    pub const WAIT: u64 = 1;
+    pub const START_RELOAD: u64 = 2;
+    pub const WAIT_RELOAD: u64 = 3;
+
+    pub const NAMES: [&str; 4] = ["proceed", "wait", "start-reload", "wait-reload"];
+}
+
+// ---- stage-latency breakdown --------------------------------------------
+
+/// Per-stage latency histograms folded by the recorder as requests
+/// complete.  Empty (all zero counts) when tracing is off.
+#[derive(Debug, Clone, Default)]
+pub struct StageBreakdown {
+    /// Arrival → trigger decision (requests whose trigger ran).
+    pub admission: Histogram,
+    /// Rank-side ψ wait (wait-for-produce / reload promotion), µs.
+    pub psi_wait: Histogram,
+    /// Batch-former offer → execution start (nonzero only for window
+    /// leaders and joiners that waited out the window).
+    pub batch_wait: Histogram,
+    /// Execution start → rank done.
+    pub rank_exec: Histogram,
+    /// Spill begin → spill end (D2H demotion, post-completion).
+    pub spill: Histogram,
+}
+
+impl StageBreakdown {
+    /// `(stage name, histogram)` in report order.
+    pub fn named(&self) -> [(&'static str, &Histogram); 5] {
+        [
+            ("admission", &self.admission),
+            ("psi-wait", &self.psi_wait),
+            ("batch-wait", &self.batch_wait),
+            ("rank-exec", &self.rank_exec),
+            ("spill", &self.spill),
+        ]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.named().iter().all(|(_, h)| h.count() == 0)
+    }
+}
+
+// ---- recorder ------------------------------------------------------------
+
+const SHARDS: usize = 8;
+const UNSET: u64 = u64::MAX;
+
+/// Per-slot stage clocks (slab-slot-indexed — slots recycle, Arrival
+/// resets).  `UNSET` marks a stage the request never entered.
+#[derive(Debug, Clone, Copy)]
+struct StageClock {
+    rid: u64,
+    arrival: u64,
+    offered: u64,
+    exec_start: u64,
+}
+
+impl StageClock {
+    const EMPTY: StageClock =
+        StageClock { rid: UNSET, arrival: UNSET, offered: UNSET, exec_start: UNSET };
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<Span>,
+    /// Retention bound for this shard (`Vec::capacity` may over-reserve).
+    cap: usize,
+    /// Oldest retained span once the ring is full (next overwrite target).
+    head: usize,
+}
+
+/// The flight recorder (see module docs).  Constructed only when
+/// `trace_spans > 0`; every hook is a no-op at the coordinator level when
+/// the recorder is absent.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    shards: Vec<Ring>,
+    /// Total retention bound (`--trace-spans`), split across shards.
+    trace_spans: usize,
+    ord: u64,
+    emitted: u64,
+    dropped: u64,
+    clocks: Vec<StageClock>,
+    /// user → (rid, t_begin) for in-flight signal-side productions.
+    pending_produce: HashMap<u64, (u64, u64)>,
+    /// user → (rid, t_begin) for in-flight DRAM→HBM reloads.
+    pending_reload: HashMap<u64, (u64, u64)>,
+    /// user → (rid, t_begin) for in-flight D2H spills.
+    pending_spill: HashMap<u64, (u64, u64)>,
+    pub breakdown: StageBreakdown,
+    /// Batch-former event counts `[open, join, filled, flush, solo]` —
+    /// the serve heartbeat's batch snapshot (no other component counts
+    /// these).
+    pub batch_counts: [u64; 5],
+    /// Most recently completed request id — the CLI's sample pick for
+    /// `relaygr explain` smoke runs.
+    pub last_done_rid: Option<u64>,
+}
+
+impl FlightRecorder {
+    /// `trace_spans` bounds total retained spans across all shards.
+    pub fn new(trace_spans: usize) -> FlightRecorder {
+        let cap = trace_spans.max(SHARDS).div_ceil(SHARDS);
+        FlightRecorder {
+            shards: (0..SHARDS)
+                .map(|_| Ring { buf: Vec::with_capacity(cap), cap, head: 0 })
+                .collect(),
+            trace_spans,
+            ord: 0,
+            emitted: 0,
+            dropped: 0,
+            clocks: Vec::new(),
+            pending_produce: HashMap::new(),
+            pending_reload: HashMap::new(),
+            pending_spill: HashMap::new(),
+            breakdown: StageBreakdown::default(),
+            batch_counts: [0; 5],
+            last_done_rid: None,
+        }
+    }
+
+    /// Spans ever emitted (retained + dropped).
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Spans overwritten by the bounded rings.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Spans currently retained.
+    pub fn retained(&self) -> usize {
+        self.shards.iter().map(|s| s.buf.len()).sum()
+    }
+
+    /// Core emission: one span into the rid's shard ring.  Warm rings
+    /// (at capacity, or with capacity pre-reserved) never allocate — the
+    /// `coordinator/trace_emit` zero-alloc contract.
+    #[inline]
+    pub fn emit(&mut self, t_us: u64, rid: u64, kind: SpanKind, a: u64, b: u64) {
+        let span = Span { ord: self.ord, t_us, rid, kind, a, b };
+        self.ord += 1;
+        self.emitted += 1;
+        let ring = &mut self.shards[(rid as usize) & (SHARDS - 1)];
+        if ring.buf.len() < ring.cap {
+            ring.buf.push(span);
+        } else {
+            self.dropped += 1;
+            ring.buf[ring.head] = span;
+            ring.head = (ring.head + 1) % ring.buf.len();
+        }
+    }
+
+    #[inline]
+    fn clock_mut(&mut self, slot: usize) -> &mut StageClock {
+        if slot >= self.clocks.len() {
+            self.clocks.resize(slot + 1, StageClock::EMPTY);
+        }
+        &mut self.clocks[slot]
+    }
+
+    #[inline]
+    fn rid_of(&self, slot: usize) -> u64 {
+        self.clocks.get(slot).map_or(UNSET, |c| c.rid)
+    }
+
+    // ---- lifecycle hooks (called by the coordinator, observe-only) ------
+
+    pub fn note_arrival(&mut self, t: u64, rid: u64, slot: usize, user: u64, prefix_len: u64) {
+        *self.clock_mut(slot) =
+            StageClock { rid, arrival: t, offered: UNSET, exec_start: UNSET };
+        self.emit(t, rid, SpanKind::Arrival, user, prefix_len);
+    }
+
+    pub fn note_trigger(&mut self, t: u64, slot: usize, reason: u64, instance: u64) {
+        let c = *self.clock_mut(slot);
+        if c.arrival != UNSET && t >= c.arrival {
+            self.breakdown.admission.record((t - c.arrival) as f64);
+        }
+        self.emit(t, c.rid, SpanKind::TriggerDecision, reason, instance);
+    }
+
+    pub fn note_psi(&mut self, t: u64, slot: usize, action: u64, rank_side: bool) {
+        let rid = self.rid_of(slot);
+        self.emit(t, rid, SpanKind::PsiLookup, action, u64::from(rank_side));
+    }
+
+    pub fn note_route(&mut self, t: u64, slot: usize, rank_side: bool, instance: u64) {
+        let rid = self.rid_of(slot);
+        self.emit(t, rid, SpanKind::Route, u64::from(rank_side), instance);
+    }
+
+    pub fn note_produce_begin(&mut self, t: u64, slot: usize, user: u64, instance: u64) {
+        let rid = self.rid_of(slot);
+        self.pending_produce.insert(user, (rid, t));
+        self.emit(t, rid, SpanKind::ProduceBegin, instance, 0);
+    }
+
+    pub fn note_produce_end(&mut self, t: u64, user: u64, instance: u64, installed: bool) {
+        let (rid, _) = self.pending_produce.remove(&user).unwrap_or((UNSET, t));
+        self.emit(t, rid, SpanKind::ProduceEnd, instance, u64::from(installed));
+    }
+
+    pub fn note_rank_start(&mut self, t: u64, slot: usize, action: u64, instance: u64) {
+        let rid = self.rid_of(slot);
+        self.emit(t, rid, SpanKind::RankStart, action, instance);
+    }
+
+    pub fn note_wait_resolved(&mut self, t: u64, slot: usize, cause: u64, wait_us: u64) {
+        let rid = self.rid_of(slot);
+        self.emit(t, rid, SpanKind::WaitResolved, cause, wait_us);
+    }
+
+    pub fn note_reload_begin(&mut self, t: u64, slot: usize, user: u64, instance: u64, bytes: u64) {
+        let rid = self.rid_of(slot);
+        self.pending_reload.insert(user, (rid, t));
+        self.emit(t, rid, SpanKind::ReloadBegin, instance, bytes);
+    }
+
+    pub fn note_reload_end(&mut self, t: u64, user: u64, installed: bool, bytes: u64) {
+        let (rid, _) = self.pending_reload.remove(&user).unwrap_or((UNSET, t));
+        self.emit(t, rid, SpanKind::ReloadEnd, u64::from(installed), bytes);
+    }
+
+    pub fn note_batch(&mut self, t: u64, slot: usize, kind: SpanKind, instance: u64, gen: u64) {
+        let c = self.clock_mut(slot);
+        if c.offered == UNSET {
+            c.offered = t;
+        }
+        let rid = c.rid;
+        match kind {
+            SpanKind::BatchOpen => self.batch_counts[0] += 1,
+            SpanKind::BatchJoin => self.batch_counts[1] += 1,
+            SpanKind::BatchFilled => self.batch_counts[2] += 1,
+            SpanKind::BatchSolo => self.batch_counts[4] += 1,
+            _ => {}
+        }
+        self.emit(t, rid, kind, instance, gen);
+    }
+
+    pub fn note_batch_flush(&mut self, t: u64, slot: usize, instance: u64, gen: u64) {
+        let rid = self.rid_of(slot);
+        self.batch_counts[3] += 1;
+        self.emit(t, rid, SpanKind::BatchFlush, instance, gen);
+    }
+
+    pub fn note_exec_start(&mut self, t: u64, slot: usize, cached: bool, reused: u64) {
+        let c = self.clock_mut(slot);
+        c.exec_start = t;
+        let (rid, offered) = (c.rid, c.offered);
+        if offered != UNSET && t >= offered {
+            self.breakdown.batch_wait.record((t - offered) as f64);
+        }
+        self.emit(t, rid, SpanKind::ExecStart, u64::from(cached), reused);
+    }
+
+    pub fn note_rank_done(&mut self, t: u64, slot: usize, outcome: u64, wait_us: f64) {
+        let c = *self.clock_mut(slot);
+        if wait_us > 0.0 {
+            self.breakdown.psi_wait.record(wait_us);
+        }
+        if c.exec_start != UNSET && t >= c.exec_start {
+            self.breakdown.rank_exec.record((t - c.exec_start) as f64);
+        }
+        if c.rid != UNSET {
+            self.last_done_rid = Some(c.rid);
+        }
+        self.emit(t, c.rid, SpanKind::RankDone, outcome, wait_us as u64);
+    }
+
+    pub fn note_fallback(&mut self, t: u64, slot: usize, cause: u64) {
+        let rid = self.rid_of(slot);
+        self.emit(t, rid, SpanKind::Fallback, cause, 0);
+    }
+
+    pub fn note_spill_begin(&mut self, t: u64, rid: u64, user: u64, instance: u64, bytes: u64) {
+        self.pending_spill.insert(user, (rid, t));
+        self.emit(t, rid, SpanKind::SpillBegin, instance, bytes);
+    }
+
+    pub fn note_spill_end(&mut self, t: u64, user: u64, accepted: bool, bytes: u64) {
+        let (rid, begin) = self.pending_spill.remove(&user).unwrap_or((UNSET, t));
+        if t >= begin {
+            self.breakdown.spill.record((t - begin) as f64);
+        }
+        self.emit(t, rid, SpanKind::SpillEnd, u64::from(accepted), bytes);
+    }
+
+    // ---- extraction ------------------------------------------------------
+
+    /// All retained spans in deterministic emission (`ord`) order.
+    pub fn spans_sorted(&self) -> Vec<Span> {
+        let mut all: Vec<Span> = self.shards.iter().flat_map(|s| s.buf.iter().copied()).collect();
+        all.sort_by_key(|s| s.ord);
+        all
+    }
+
+    /// Serialize retained spans to an RGSP sidecar.  Returns
+    /// `(spans written, bytes)`.
+    pub fn write_rgsp(&self, path: &str) -> Result<(u64, u64)> {
+        let spans = self.spans_sorted();
+        let mut buf = Vec::with_capacity(32 + spans.len() * 8);
+        buf.extend_from_slice(RGSP_MAGIC);
+        buf.push(RGSP_VERSION);
+        buf.extend_from_slice(&(spans.len() as u64).to_le_bytes());
+        put_varint(&mut buf, self.trace_spans as u64);
+        put_varint(&mut buf, self.emitted);
+        put_varint(&mut buf, self.dropped);
+        let (mut prev_ord, mut prev_t) = (0u64, 0u64);
+        for s in &spans {
+            put_varint(&mut buf, s.ord - prev_ord);
+            put_varint(&mut buf, zigzag(s.t_us.wrapping_sub(prev_t) as i64));
+            put_varint(&mut buf, s.rid);
+            buf.push(s.kind as u8);
+            put_varint(&mut buf, s.a);
+            put_varint(&mut buf, s.b);
+            prev_ord = s.ord;
+            prev_t = s.t_us;
+        }
+        let bytes = buf.len() as u64;
+        std::fs::write(path, &buf).with_context(|| format!("writing span sidecar '{path}'"))?;
+        Ok((spans.len() as u64, bytes))
+    }
+}
+
+pub const RGSP_MAGIC: &[u8; 4] = b"RGSP";
+pub const RGSP_VERSION: u8 = 1;
+
+#[inline]
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// A parsed RGSP sidecar.
+#[derive(Debug, Clone)]
+pub struct SpanFile {
+    pub spans: Vec<Span>,
+    /// The run's `--trace-spans` retention bound.
+    pub trace_spans: u64,
+    pub emitted: u64,
+    pub dropped: u64,
+}
+
+/// Parse an RGSP sidecar written by [`FlightRecorder::write_rgsp`].
+/// Unknown span tags are skipped (forward compatibility within a
+/// version — see the module-level extension recipe).
+pub fn read_rgsp(path: &str) -> Result<SpanFile> {
+    let data = std::fs::read(path).with_context(|| format!("opening span sidecar '{path}'"))?;
+    let mut r = data.as_slice();
+    let mut magic = [0u8; 4];
+    std::io::Read::read_exact(&mut r, &mut magic).context("sidecar header truncated")?;
+    if &magic != RGSP_MAGIC {
+        bail!("'{path}' is not an RGSP span sidecar (bad magic)");
+    }
+    let version = read_u8(&mut r)?;
+    if version != RGSP_VERSION {
+        bail!("sidecar '{path}' has unsupported version {version} (expected {RGSP_VERSION})");
+    }
+    let mut count = [0u8; 8];
+    std::io::Read::read_exact(&mut r, &mut count)?;
+    let count = u64::from_le_bytes(count);
+    let trace_spans = read_varint(&mut r)?;
+    let emitted = read_varint(&mut r)?;
+    let dropped = read_varint(&mut r)?;
+    let mut spans = Vec::with_capacity(count as usize);
+    let (mut prev_ord, mut prev_t) = (0u64, 0u64);
+    for i in 0..count {
+        let ord = prev_ord + read_varint(&mut r).with_context(|| format!("span {i}"))?;
+        let t_us = prev_t.wrapping_add(unzigzag(read_varint(&mut r)?) as u64);
+        let rid = read_varint(&mut r)?;
+        let tag = read_u8(&mut r)?;
+        let a = read_varint(&mut r)?;
+        let b = read_varint(&mut r)?;
+        prev_ord = ord;
+        prev_t = t_us;
+        if let Some(kind) = SpanKind::from_u8(tag) {
+            spans.push(Span { ord, t_us, rid, kind, a, b });
+        }
+    }
+    Ok(SpanFile { spans, trace_spans, emitted, dropped })
+}
+
+// ---- timeline reconstruction (`relaygr explain`) -------------------------
+
+/// A request's reconstructed lifecycle: its spans in emission order, the
+/// per-stage durations between consecutive lifecycle spans (telescoping,
+/// so they sum exactly to `done − arrival`), and any post-completion
+/// spans (spill end) reported separately.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub rid: u64,
+    pub arrival_us: u64,
+    /// Clock of the completion span ([`SpanKind::RankDone`]), or the last
+    /// observed span for a request still in flight at capture time.
+    pub done_us: u64,
+    /// Outcome index from the completion span, `None` if still in flight.
+    pub outcome: Option<usize>,
+    /// `(stage, total µs)` aggregated over the lifecycle intervals in
+    /// first-entered order.  Sums exactly to [`Timeline::e2e_us`].
+    pub stages: Vec<(&'static str, u64)>,
+    /// Lifecycle spans (arrival..=completion), ord-sorted.
+    pub events: Vec<Span>,
+    /// Spans recorded after completion (e.g. spill end), ord-sorted.
+    pub post: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn e2e_us(&self) -> u64 {
+        self.done_us - self.arrival_us
+    }
+
+    /// Human rendering: one line per span with its +offset, then the
+    /// stage totals and the telescoping e2e sum.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let outcome = match self.outcome {
+            Some(i) => crate::metrics::OUTCOME_NAMES.get(i).copied().unwrap_or("?"),
+            None => "in-flight",
+        };
+        let _ = writeln!(
+            out,
+            "request {} — {} spans, e2e {:.3} ms, outcome {}",
+            self.rid,
+            self.events.len() + self.post.len(),
+            self.e2e_us() as f64 / 1e3,
+            outcome,
+        );
+        for s in &self.events {
+            let _ = writeln!(
+                out,
+                "  t+{:>10.3} ms  {:<14} {}",
+                (s.t_us - self.arrival_us) as f64 / 1e3,
+                s.kind.label(),
+                describe(s),
+            );
+        }
+        for s in &self.post {
+            let _ = writeln!(
+                out,
+                "  t+{:>10.3} ms  {:<14} {} (post-completion)",
+                (s.t_us - self.arrival_us) as f64 / 1e3,
+                s.kind.label(),
+                describe(s),
+            );
+        }
+        let total: u64 = self.stages.iter().map(|&(_, d)| d).sum();
+        let stages = self
+            .stages
+            .iter()
+            .map(|&(name, d)| format!("{name} {:.3} ms", d as f64 / 1e3))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        let _ = writeln!(
+            out,
+            "stage totals: {stages} | total {:.3} ms (= e2e {:.3} ms)",
+            total as f64 / 1e3,
+            self.e2e_us() as f64 / 1e3,
+        );
+        out
+    }
+}
+
+fn describe(s: &Span) -> String {
+    use SpanKind::*;
+    let name = |table: &[&str], i: u64| -> String {
+        table.get(i as usize).map_or_else(|| format!("?{i}"), |n| n.to_string())
+    };
+    let inst = |i: u64| {
+        if i == NONE_OPERAND {
+            "-".to_string()
+        } else {
+            i.to_string()
+        }
+    };
+    match s.kind {
+        Arrival => format!("user={} prefix={}", s.a, s.b),
+        TriggerDecision => {
+            format!("{} instance={}", name(&trigger_reason::NAMES, s.a), inst(s.b))
+        }
+        PsiLookup => format!(
+            "{} side={}",
+            name(&psi_action::NAMES, s.a),
+            if s.b == 0 { "signal" } else { "rank" }
+        ),
+        Route => format!(
+            "{} instance={}",
+            if s.a == 0 { "signal" } else { "rank" },
+            inst(s.b)
+        ),
+        ProduceBegin => format!("instance={}", inst(s.a)),
+        ProduceEnd => format!("instance={} installed={}", inst(s.a), s.b == 1),
+        RankStart => format!("{} instance={}", name(&rank_action::NAMES, s.a), inst(s.b)),
+        WaitResolved => format!("cause={} waited={} µs", s.a, s.b),
+        ReloadBegin => format!("instance={} bytes={}", inst(s.a), s.b),
+        ReloadEnd => format!("installed={} bytes={}", s.a == 1, s.b),
+        BatchOpen | BatchJoin | BatchFilled | BatchFlush | BatchSolo => {
+            format!("instance={} gen={}", inst(s.a), s.b)
+        }
+        ExecStart => format!("cached={} reused={}", s.a == 1, s.b),
+        RankDone => format!(
+            "outcome={} waited={} µs",
+            name(&crate::metrics::OUTCOME_NAMES, s.a),
+            s.b
+        ),
+        Fallback => format!("cause={}", s.a),
+        SpillBegin => format!("instance={} bytes={}", inst(s.a), s.b),
+        SpillEnd => format!("accepted={} bytes={}", s.a == 1, s.b),
+    }
+}
+
+/// Reconstruct request `rid`'s timeline from a span set (any order).
+/// Returns `None` when no span for `rid` exists (evicted from the
+/// bounded rings, or never traced).
+pub fn timeline(spans: &[Span], rid: u64) -> Option<Timeline> {
+    let mut mine: Vec<Span> = spans.iter().filter(|s| s.rid == rid).copied().collect();
+    if mine.is_empty() {
+        return None;
+    }
+    mine.sort_by_key(|s| s.ord);
+    // The lifecycle closes at the completion span; anything after it
+    // (spill completion) is post-lifecycle and excluded from the
+    // telescoping sum.
+    let done_idx = mine.iter().position(|s| s.kind == SpanKind::RankDone);
+    let split = done_idx.map_or(mine.len(), |i| i + 1);
+    let post = mine.split_off(split);
+    let arrival_us = mine.first()?.t_us;
+    let done_us = mine.last()?.t_us;
+    let outcome = done_idx.map(|_| mine.last().map_or(0, |s| s.a as usize));
+    let mut stages: Vec<(&'static str, u64)> = Vec::new();
+    for w in mine.windows(2) {
+        let (prev, cur) = (w[0], w[1]);
+        let d = cur.t_us.saturating_sub(prev.t_us);
+        let stage = cur.kind.stage();
+        match stages.iter_mut().find(|(n, _)| *n == stage) {
+            Some((_, total)) => *total += d,
+            None => stages.push((stage, d)),
+        }
+    }
+    Some(Timeline { rid, arrival_us, done_us, outcome, stages, events: mine, post })
+}
+
+/// `relaygr trace inspect` summary of a span sidecar.
+pub fn inspect_summary(f: &SpanFile) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let mut by_kind: Vec<(SpanKind, u64)> = Vec::new();
+    let mut rids: Vec<u64> = Vec::new();
+    let (mut t_min, mut t_max) = (u64::MAX, 0u64);
+    for s in &f.spans {
+        match by_kind.iter_mut().find(|(k, _)| *k == s.kind) {
+            Some((_, n)) => *n += 1,
+            None => by_kind.push((s.kind, 1)),
+        }
+        rids.push(s.rid);
+        t_min = t_min.min(s.t_us);
+        t_max = t_max.max(s.t_us);
+    }
+    rids.sort_unstable();
+    rids.dedup();
+    let _ = writeln!(
+        out,
+        "{} spans retained ({} emitted, {} dropped by the {}-span bound)",
+        f.spans.len(),
+        f.emitted,
+        f.dropped,
+        f.trace_spans,
+    );
+    if f.spans.is_empty() {
+        return out;
+    }
+    let _ = writeln!(
+        out,
+        "{} distinct requests, clock range [{:.3} ms .. {:.3} ms]",
+        rids.len(),
+        t_min as f64 / 1e3,
+        t_max as f64 / 1e3,
+    );
+    for (k, n) in &by_kind {
+        let _ = writeln!(out, "  {:<14} {n}", k.label());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("relaygr_flight_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_str().unwrap().to_string()
+    }
+
+    /// Drive one synthetic request through the hook API.
+    fn record_one(fl: &mut FlightRecorder, rid: u64, slot: usize, t0: u64) {
+        fl.note_arrival(t0, rid, slot, 7, 4096);
+        fl.note_trigger(t0 + 10, slot, trigger_reason::ADMIT, 3);
+        fl.note_psi(t0 + 10, slot, psi_action::MISS, false);
+        fl.note_produce_begin(t0 + 10, slot, 7, 3);
+        fl.note_route(t0 + 500, slot, true, 3);
+        fl.note_rank_start(t0 + 500, slot, rank_action::PROCEED, 3);
+        fl.note_batch(t0 + 500, slot, SpanKind::BatchSolo, 3, 0);
+        fl.note_exec_start(t0 + 700, slot, true, 0);
+        fl.note_produce_end(t0 + 800, 7, 3, true);
+        fl.note_rank_done(t0 + 2_000, slot, 1, 0.0);
+        fl.note_spill_begin(t0 + 2_000, rid, 7, 3, 1 << 20);
+        fl.note_spill_end(t0 + 2_500, 7, true, 1 << 20);
+    }
+
+    #[test]
+    fn timeline_stage_durations_telescope_to_e2e() {
+        let mut fl = FlightRecorder::new(1024);
+        record_one(&mut fl, 42, 0, 1_000);
+        let spans = fl.spans_sorted();
+        let tl = timeline(&spans, 42).expect("request traced");
+        assert_eq!(tl.arrival_us, 1_000);
+        assert_eq!(tl.done_us, 3_000, "lifecycle closes at rank-done");
+        assert_eq!(tl.e2e_us(), 2_000);
+        let total: u64 = tl.stages.iter().map(|&(_, d)| d).sum();
+        assert_eq!(total, tl.e2e_us(), "stage durations must telescope to e2e");
+        assert_eq!(tl.outcome, Some(1), "outcome reconstructed from the completion span");
+        assert_eq!(tl.post.len(), 2, "spill begin+end are post-completion");
+        let rendered = tl.render();
+        assert!(rendered.contains("outcome hbm"), "{rendered}");
+        assert!(rendered.contains("stage totals:"), "{rendered}");
+        // Breakdown folds: admission 10 µs, rank-exec 1300 µs, spill 500 µs,
+        // batch-wait 200 µs.
+        assert_eq!(fl.breakdown.admission.count(), 1);
+        assert!((fl.breakdown.admission.max() - 10.0).abs() < 1e-9);
+        assert!((fl.breakdown.rank_exec.max() - 1300.0).abs() < 1e-9);
+        assert!((fl.breakdown.batch_wait.max() - 200.0).abs() < 1e-9);
+        assert!((fl.breakdown.spill.max() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_bound_overwrites_oldest_and_counts_drops() {
+        // Bound far below the emission volume: old spans fall off, the
+        // newest survive, accounting stays exact.
+        let mut fl = FlightRecorder::new(16);
+        for i in 0..100u64 {
+            fl.emit(i, i, SpanKind::Arrival, 0, 0);
+        }
+        assert_eq!(fl.emitted(), 100);
+        assert_eq!(fl.retained(), 16);
+        assert_eq!(fl.dropped(), 84);
+        let spans = fl.spans_sorted();
+        assert!(spans.windows(2).all(|w| w[0].ord < w[1].ord), "ord-sorted");
+        // Each rid-shard retains its own newest spans.
+        assert!(spans.iter().all(|s| s.ord >= 100 - 8 * 2 - 8), "only recent spans retained");
+    }
+
+    #[test]
+    fn rgsp_round_trips_and_rejects_bad_headers() {
+        let mut fl = FlightRecorder::new(4096);
+        for slot in 0..20usize {
+            record_one(&mut fl, slot as u64 * 3 + 1, slot, slot as u64 * 10_000);
+        }
+        let path = tmp("roundtrip.rgsp");
+        let (n, bytes) = fl.write_rgsp(&path).unwrap();
+        assert_eq!(n as usize, fl.retained());
+        assert!(bytes > 0);
+        let back = read_rgsp(&path).unwrap();
+        assert_eq!(back.spans, fl.spans_sorted(), "lossless round trip");
+        assert_eq!(back.emitted, fl.emitted());
+        assert_eq!(back.dropped, 0);
+        // Compactness: well under the 48-byte in-memory span.
+        assert!((bytes as f64 / n as f64) < 16.0, "{:.1} bytes/span", bytes as f64 / n as f64);
+        let summary = inspect_summary(&back);
+        assert!(summary.contains("20 distinct requests"), "{summary}");
+        assert!(summary.contains("rank-done"), "{summary}");
+
+        let bad = tmp("bad.rgsp");
+        std::fs::write(&bad, b"NOPE").unwrap();
+        assert!(read_rgsp(&bad).is_err());
+        std::fs::write(&bad, b"RGSP\x63").unwrap();
+        assert!(read_rgsp(&bad).is_err(), "unsupported version");
+    }
+
+    #[test]
+    fn zigzag_round_trips() {
+        for v in [0i64, 1, -1, 2, -2, i64::MAX, i64::MIN, 123_456, -123_456] {
+            assert_eq!(unzigzag(zigzag(v)), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn missing_request_yields_no_timeline() {
+        let mut fl = FlightRecorder::new(64);
+        record_one(&mut fl, 5, 0, 0);
+        assert!(timeline(&fl.spans_sorted(), 999).is_none());
+    }
+
+    #[test]
+    fn in_flight_request_renders_without_outcome() {
+        let mut fl = FlightRecorder::new(64);
+        fl.note_arrival(100, 9, 0, 1, 2048);
+        fl.note_trigger(150, 0, trigger_reason::RATE_LIMITED, NONE_OPERAND);
+        let tl = timeline(&fl.spans_sorted(), 9).unwrap();
+        assert_eq!(tl.outcome, None);
+        assert_eq!(tl.e2e_us(), 50);
+        assert!(tl.render().contains("in-flight"));
+        assert!(tl.render().contains("rate-limited"));
+    }
+}

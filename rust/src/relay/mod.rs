@@ -55,6 +55,7 @@
 
 pub mod baseline;
 pub mod coordinator;
+pub mod flight;
 pub mod hbm;
 pub mod hierarchy;
 pub mod pipeline;
@@ -68,6 +69,7 @@ pub use coordinator::{
     Completion, CoordinatorConfig, QueuedReload, RankAction, RankCompute, RelayCoordinator,
     ReloadResolution, ReqId, SignalAction, Stage,
 };
+pub use flight::{FlightRecorder, Span, SpanKind, StageBreakdown, Timeline};
 pub use hbm::{EntryState, HbmCache, HbmStats, InsertError, Micros};
 pub use hierarchy::{CacheHierarchy, HierarchyStats, PseudoAction, ReloadDone};
 pub use pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};

@@ -45,6 +45,12 @@ pub fn run(args: &Args) -> Result<()> {
             "--batch-max must be >= 1 (use --batch-window 0 to disable batching)"
         ));
     }
+    cfg.trace_spans = args.get_usize("trace-spans", cfg.trace_spans)?;
+    cfg.heartbeat_path = args.get("heartbeat").map(str::to_string);
+    cfg.heartbeat_ms = args.get_u64("heartbeat-ms", cfg.heartbeat_ms)?;
+    if cfg.heartbeat_ms == 0 {
+        return Err(anyhow!("--heartbeat-ms must be >= 1"));
+    }
 
     let scenario = match args.get("scenario") {
         Some(s) => ScenarioKind::parse(s).map_err(|e| anyhow!(e))?,
@@ -132,6 +138,18 @@ pub fn run(args: &Args) -> Result<()> {
     }
     if let Some(line) = m.admission_brief() {
         println!("  {line}");
+    }
+    if let Some(fl) = m.flight.as_deref() {
+        println!(
+            "  spans      {} emitted, {} retained, {} dropped",
+            fl.emitted(),
+            fl.retained(),
+            fl.dropped()
+        );
+        if let Some(path) = args.get("trace-out") {
+            let (n, bytes) = fl.write_rgsp(path)?;
+            println!("  wrote {n} spans ({bytes} bytes) to {path}");
+        }
     }
     cluster.shutdown();
     Ok(())

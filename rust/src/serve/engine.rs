@@ -84,6 +84,14 @@ pub struct LiveConfig {
     pub batch_window_us: u64,
     /// Maximum members per batched rank pass (`--batch-max`).
     pub batch_max: usize,
+    /// Flight-recorder span retention (`--trace-spans`; 0 = tracing off).
+    /// Observe-only: decisions are bit-identical either way.
+    pub trace_spans: usize,
+    /// JSONL metrics-heartbeat sink for `relaygr serve` (`--heartbeat`;
+    /// `None` = no heartbeat).
+    pub heartbeat_path: Option<String>,
+    /// Heartbeat emission interval, milliseconds (`--heartbeat-ms`).
+    pub heartbeat_ms: u64,
     pub seed: u64,
 }
 
@@ -108,6 +116,9 @@ impl LiveConfig {
             admission: AdmissionConfig::default(),
             batch_window_us: 0,
             batch_max: 32,
+            trace_spans: 0,
+            heartbeat_path: None,
+            heartbeat_ms: 1_000,
             seed: 42,
         }
     }
@@ -169,6 +180,7 @@ impl LiveConfig {
             },
             batch_window_us: self.batch_window_us,
             batch_max: self.batch_max,
+            trace_spans: self.trace_spans,
         }
     }
 }
@@ -462,7 +474,7 @@ impl LiveInstance {
         let mut members: Vec<ReqId> = Vec::new();
         let drained: Vec<PendingRank> = {
             let mut coord = shared.coord.lock().unwrap();
-            if !coord.close_batch(instance, gen, &mut members) {
+            if !coord.close_batch(now_us(), instance, gen, &mut members) {
                 return;
             }
             drop(coord);
@@ -504,7 +516,7 @@ impl LiveInstance {
         if rc.cached && !matches!(kv, Some(Payload::Device(_))) {
             // Classified cached but no device buffer materialised: run the
             // safe fallback and make the metrics reflect it.
-            coord.force_fallback(handle);
+            coord.force_fallback(now_us(), handle);
             kv = None;
         }
         drop(coord);
@@ -540,6 +552,7 @@ impl LiveInstance {
                     Ok(host) => {
                         let mut coord = shared.coord.lock().unwrap();
                         coord.complete_spill(
+                            now_us(),
                             done.instance,
                             user,
                             buf.bytes,
@@ -637,7 +650,7 @@ impl LiveCluster {
         let t0 = Instant::now();
         let (handle, wants_trigger) = {
             let mut coord = self.shared.coord.lock().unwrap();
-            coord.on_arrival(now_us(), req.uid(), req.plen(), candidates)
+            coord.on_arrival(now_us(), req.rid(), req.uid(), req.plen(), candidates)
         };
         if wants_trigger {
             // Trigger side path (metadata only); admitted work is handed
@@ -707,6 +720,72 @@ impl LiveCluster {
         })
     }
 
+    /// One JSONL heartbeat line: wall-clock offset plus an interval
+    /// snapshot of completion, trigger, hierarchy, segment and batch
+    /// counters.  Append-only observer — reads the same stats accessors
+    /// the end-of-run block does, decides nothing.
+    fn emit_heartbeat(
+        &self,
+        out: &mut std::fs::File,
+        elapsed: Duration,
+        metrics: &Mutex<RunMetrics>,
+    ) {
+        use std::io::Write;
+        let (completed, outcomes) = {
+            let m = metrics.lock().unwrap();
+            (m.completed, m.outcome_counts)
+        };
+        let coord = self.shared.coord.lock().unwrap();
+        let in_flight = coord.live_requests();
+        let t = coord.trigger_stats();
+        let h = coord.hierarchy_stats();
+        let s = coord.segment_stats();
+        let (batch, spans) = coord
+            .flight()
+            .map(|fl| (fl.batch_counts, (fl.emitted(), fl.dropped())))
+            .unwrap_or(([0; 5], (0, 0)));
+        drop(coord);
+        let outcome_fields = crate::metrics::OUTCOME_NAMES
+            .iter()
+            .zip(outcomes)
+            .map(|(n, c)| format!("\"{n}\":{c}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let line = format!(
+            "{{\"t_ms\":{},\"completed\":{completed},\"in_flight\":{in_flight},\
+\"outcomes\":{{{outcome_fields}}},\
+\"trigger\":{{\"assessed\":{},\"admitted\":{},\"rate_limited\":{},\"footprint_limited\":{}}},\
+\"hierarchy\":{{\"hbm_hits\":{},\"dram_hits\":{},\"misses\":{},\"reloads\":{},\"spills\":{}}},\
+\"segments\":{{\"lookups\":{},\"reused\":{},\"joined\":{},\"produced\":{}}},\
+\"batch\":{{\"opened\":{},\"joined\":{},\"filled\":{},\"flushed\":{},\"solo\":{}}},\
+\"spans\":{{\"emitted\":{},\"dropped\":{}}}}}",
+            elapsed.as_millis(),
+            t.assessed,
+            t.admitted,
+            t.rate_limited,
+            t.footprint_limited,
+            h.hbm_hits,
+            h.dram_hits,
+            h.misses,
+            h.reloads_started + h.reloads_joined + h.reloads_queued,
+            h.spills,
+            s.lookups,
+            s.reused,
+            s.joined,
+            s.produced,
+            batch[0],
+            batch[1],
+            batch[2],
+            batch[3],
+            batch[4],
+            spans.0,
+            spans.1,
+        );
+        if let Err(e) = writeln!(out, "{line}") {
+            log::warn!("heartbeat write failed: {e}");
+        }
+    }
+
     /// Run a whole trace open-loop; returns aggregated metrics.
     pub fn run_trace(&self, wl: &WorkloadConfig) -> Result<RunMetrics> {
         let trace = crate::workload::generate(wl);
@@ -714,6 +793,15 @@ impl LiveCluster {
         metrics.scenario = wl.scenario.label().to_string();
         let metrics = Mutex::new(metrics);
         let seg_on = { self.shared.coord.lock().unwrap().segments_enabled() };
+        let mut heartbeat = match self.cfg.heartbeat_path.as_deref() {
+            Some(p) => Some(
+                std::fs::File::create(p)
+                    .map_err(|e| anyhow!("creating heartbeat sink '{p}': {e}"))?,
+            ),
+            None => None,
+        };
+        let beat_every = Duration::from_millis(self.cfg.heartbeat_ms.max(1));
+        let mut last_beat = Duration::ZERO;
         let t0 = Instant::now();
         std::thread::scope(|scope| {
             for req in trace {
@@ -721,6 +809,13 @@ impl LiveCluster {
                 let due = Duration::from_micros(req.arrival_us);
                 if let Some(wait) = due.checked_sub(t0.elapsed()) {
                     std::thread::sleep(wait);
+                }
+                if let Some(f) = heartbeat.as_mut() {
+                    let elapsed = t0.elapsed();
+                    if elapsed.saturating_sub(last_beat) >= beat_every {
+                        last_beat = elapsed;
+                        self.emit_heartbeat(f, elapsed, &metrics);
+                    }
                 }
                 let cands =
                     if seg_on { crate::workload::candidate_set(wl, &req) } else { Vec::new() };
@@ -739,6 +834,11 @@ impl LiveCluster {
                 });
             }
         });
+        // Final heartbeat: every request has completed (scope joined), so
+        // this line mirrors the end-of-run stats block.
+        if let Some(f) = heartbeat.as_mut() {
+            self.emit_heartbeat(f, t0.elapsed(), &metrics);
+        }
         let mut m = metrics.into_inner().unwrap();
         m.sim_duration_us = t0.elapsed().as_micros() as u64;
         let elapsed = m.sim_duration_us.max(1) as f64;
@@ -752,12 +852,16 @@ impl LiveCluster {
             })
             .collect();
         {
-            let coord = self.shared.coord.lock().unwrap();
+            let mut coord = self.shared.coord.lock().unwrap();
             m.special_instances = coord.special_instances().to_vec();
             m.hbm = coord.hbm_stats();
             m.hierarchy = coord.hierarchy_stats();
             m.trigger = coord.trigger_stats();
             m.segments = coord.segment_stats();
+            if let Some(fl) = coord.take_flight() {
+                m.stages = fl.breakdown.clone();
+                m.flight = Some(Arc::new(fl));
+            }
         }
         Ok(m)
     }

@@ -44,9 +44,20 @@ pub fn init() {
     let level = match std::env::var("RELAYGR_LOG").as_deref() {
         Ok("error") => LevelFilter::Error,
         Ok("warn") => LevelFilter::Warn,
+        Ok("info") => LevelFilter::Info,
         Ok("debug") => LevelFilter::Debug,
         Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        Ok(other) => {
+            // One warning straight to stderr (the logger is not installed
+            // yet), then the default — a typo'd level should not silently
+            // change verbosity.
+            eprintln!(
+                "RELAYGR_LOG={other:?} is not a log level \
+                 (error|warn|info|debug|trace); defaulting to info"
+            );
+            LevelFilter::Info
+        }
+        Err(_) => LevelFilter::Info,
     };
     let logger = Box::leak(Box::new(Logger { start: Instant::now() }));
     if log::set_logger(logger).is_ok() {

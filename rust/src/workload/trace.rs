@@ -53,7 +53,7 @@ pub struct ReplaySource {
 
 // ---- varint / f64 primitives -------------------------------------------
 
-fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+pub(crate) fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
     while v >= 0x80 {
         buf.push((v as u8) | 0x80);
         v >>= 7;
@@ -65,13 +65,13 @@ fn put_f64(buf: &mut Vec<u8>, x: f64) {
     buf.extend_from_slice(&x.to_bits().to_le_bytes());
 }
 
-fn read_u8(r: &mut impl Read) -> io::Result<u8> {
+pub(crate) fn read_u8(r: &mut impl Read) -> io::Result<u8> {
     let mut b = [0u8; 1];
     r.read_exact(&mut b)?;
     Ok(b[0])
 }
 
-fn read_varint(r: &mut impl Read) -> io::Result<u64> {
+pub(crate) fn read_varint(r: &mut impl Read) -> io::Result<u64> {
     let mut v = 0u64;
     let mut shift = 0u32;
     loop {

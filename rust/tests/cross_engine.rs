@@ -332,7 +332,7 @@ fn coordinator_reload_abort_falls_back_joined_waiters() {
     let mut seeded: Vec<(u64, usize)> = Vec::new();
     for user in 0..32u64 {
         let t = user * 50_000; // spaced so admission rate limits never bind
-        let (req, wants) = coord.on_arrival(t, user, 4096, &[]);
+        let (req, wants) = coord.on_arrival(t, user, user, 4096, &[]);
         assert!(wants);
         if let SignalAction::Produce { instance, user, .. } = coord.on_trigger_check(t, req) {
             coord.on_psi_ready(t, instance, user, Some(()));
@@ -342,7 +342,7 @@ fn coordinator_reload_abort_falls_back_joined_waiters() {
         let _ = coord.rank_compute(t, req);
         let done = coord.on_rank_done(t, req, kv(4096));
         if let Some(bytes) = done.spill {
-            if coord.complete_spill(done.instance, done.user, bytes, ()) {
+            if coord.complete_spill(t, done.instance, done.user, bytes, ()) {
                 seeded.push((user, done.instance));
             }
         }
@@ -357,8 +357,8 @@ fn coordinator_reload_abort_falls_back_joined_waiters() {
     // Two racing rank requests (pre-infer delayed, §3.4 out-of-order):
     // A starts the only reload slot, B queues behind it.
     let now = 2_000_000;
-    let (ra, _) = coord.on_arrival(now, a, 4096, &[]);
-    let (rb, _) = coord.on_arrival(now, b, 4096, &[]);
+    let (ra, _) = coord.on_arrival(now, 100, a, 4096, &[]);
+    let (rb, _) = coord.on_arrival(now, 101, b, 4096, &[]);
     assert_eq!(coord.on_stage_done(now, ra, Stage::Preproc), Some(inst));
     assert_eq!(coord.on_stage_done(now, rb, Stage::Preproc), Some(inst));
     let RankAction::StartReload { bytes } = coord.on_rank_start(now, ra) else {
@@ -404,7 +404,7 @@ fn coordinator_failed_reload_payload_falls_back() {
     let kv = cfg.spec.kv_bytes_for(4096);
 
     // Seed one user's DRAM entry.
-    let (r1, wants) = coord.on_arrival(0, 7, 4096, &[]);
+    let (r1, wants) = coord.on_arrival(0, 1, 7, 4096, &[]);
     assert!(wants);
     if let SignalAction::Produce { instance, user, .. } = coord.on_trigger_check(0, r1) {
         coord.on_psi_ready(0, instance, user, Some(()));
@@ -414,10 +414,10 @@ fn coordinator_failed_reload_payload_falls_back() {
     let _ = coord.rank_compute(0, r1);
     let done = coord.on_rank_done(0, r1, kv);
     let inst = done.instance;
-    assert!(coord.complete_spill(inst, 7, done.spill.expect("fresh ψ spills"), ()));
+    assert!(coord.complete_spill(0, inst, 7, done.spill.expect("fresh ψ spills"), ()));
 
     // A refresh rank request starts the reload; the transfer fails.
-    let (r2, _) = coord.on_arrival(400_000, 7, 4096, &[]);
+    let (r2, _) = coord.on_arrival(400_000, 2, 7, 4096, &[]);
     coord.on_stage_done(400_000, r2, Stage::Preproc).unwrap();
     let RankAction::StartReload { bytes } = coord.on_rank_start(400_000, r2) else {
         panic!("expected reload");
@@ -558,6 +558,91 @@ fn figure_grid_rows_byte_identical_across_jobs() {
     assert_eq!(serial, parallel, "figure rows must not depend on the job count");
 }
 
+/// Satellite (PR 8): the flight recorder is observe-only — a traced run
+/// must be decision-for-decision bit-identical to an untraced one, on
+/// every scenario, in both replayable engines, and the engines must
+/// still agree with each other while tracing.  Any divergence means a
+/// span emission leaked into the decision plane.
+#[test]
+fn tracing_is_decision_invisible_across_engines() {
+    for name in ScenarioKind::NAMES {
+        let mut wl = workload(false);
+        wl.scenario = ScenarioKind::parse(name).expect("built-in scenario");
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.pipeline.t_life_us = 2 * wl.duration_us;
+        let mut traced_cfg = cfg.clone();
+        traced_cfg.trace_spans = 1 << 14;
+
+        let plain = sim_outcomes(&cfg, &wl);
+        let traced = sim_outcomes(&traced_cfg, &wl);
+        assert_eq!(plain, traced, "{name}: tracing changed simulator decisions");
+
+        let serial_plain = run_reference(&cfg, &wl).expect("serialized reference runs");
+        let serial_traced = run_reference(&traced_cfg, &wl).expect("serialized reference runs");
+        assert_eq!(
+            serial_plain.outcomes, serial_traced.outcomes,
+            "{name}: tracing changed reference decisions"
+        );
+        assert_eq!(plain, serial_traced.outcomes, "{name}: engines diverged while tracing");
+
+        // Tracing actually happened — and only when asked for.
+        let fl = serial_traced.flight.as_ref().expect("traced run detaches its recorder");
+        assert!(fl.emitted() > 0, "{name}: recorder armed but silent");
+        assert!(!serial_traced.stages.is_empty(), "{name}: no stage folds");
+        assert!(serial_plain.flight.is_none() && serial_plain.stages.is_empty());
+    }
+}
+
+/// Satellite (PR 8): `relaygr explain` round-trip — a traced simulator
+/// run writes its RGSP sidecar; reading it back and reconstructing each
+/// request's timeline must (a) reproduce the exact [`CacheOutcome`] the
+/// run's own outcome log recorded, and (b) telescope: the per-stage
+/// durations sum exactly to the request's recorded e2e interval.
+#[test]
+fn explain_reconstructs_recorded_outcomes_from_sidecar() {
+    let wl = workload(true);
+    let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Capacity(500 << 30) });
+    cfg.log_outcomes = true;
+    cfg.trace_spans = 1 << 16; // retain everything: the round trip must cover every request
+    let m = run_sim(cfg, &wl).expect("simulation runs");
+    let fl = m.flight.as_deref().expect("traced run detaches its recorder");
+    assert_eq!(fl.dropped(), 0, "retention bound must cover this trace");
+
+    let path = std::env::temp_dir()
+        .join("relaygr_cross_engine_explain.rgsp")
+        .to_str()
+        .unwrap()
+        .to_string();
+    let (n, bytes) = fl.write_rgsp(&path).expect("sidecar writes");
+    assert!(n > 0 && bytes > 0);
+    let file = relaygr::relay::flight::read_rgsp(&path).expect("sidecar parses");
+    assert_eq!(file.spans.len() as u64, n, "round trip preserves the span count");
+    assert_eq!((file.emitted, file.dropped), (fl.emitted(), fl.dropped()));
+
+    let log = m.outcome_log();
+    assert!(!log.is_empty());
+    assert!(
+        log.iter().any(|&(_, o)| matches!(o, CacheOutcome::DramHit | CacheOutcome::JoinedReload)),
+        "refresh traffic must exercise the reload spans"
+    );
+    for &(rid, outcome) in &log {
+        let tl = relaygr::relay::flight::timeline(&file.spans, rid)
+            .unwrap_or_else(|| panic!("request {rid} completed but has no spans"));
+        assert_eq!(
+            tl.outcome,
+            Some(relaygr::metrics::outcome_index(outcome)),
+            "request {rid}: explain reconstructed a different outcome than the run reported"
+        );
+        let total: u64 = tl.stages.iter().map(|&(_, d)| d).sum();
+        assert_eq!(
+            total,
+            tl.e2e_us(),
+            "request {rid}: stage durations must telescope to the e2e interval"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
 /// The real thing, when artifacts exist: a 1-instance, 1-slot live engine
 /// (stage sleeps scaled to ~0, generous wait budget) serves a seeded
 /// all-long trace; its per-request outcomes must equal the serialized
@@ -652,4 +737,20 @@ fn live_engine_matches_serial_reference() {
     cluster.shutdown();
     batched.sort_by_key(|&(id, _)| id);
     assert_eq!(batched, serial, "live batch former changed decisions");
+
+    // PR 8: the same trace with the flight recorder armed in the live
+    // coordinator — the observe-only contract must hold under wall
+    // clocks too: tracing may never move a decision.
+    let mut tcfg = cfg.clone();
+    tcfg.trace_spans = 1 << 14;
+    let cluster = LiveCluster::start(tcfg).unwrap();
+    let mut rng = Rng::new(9);
+    let mut traced: Vec<(u64, CacheOutcome)> = Vec::new();
+    for req in &trace {
+        let lc = cluster.drive_request(*req, &mut rng).unwrap();
+        traced.push((req.rid(), lc.outcome));
+    }
+    cluster.shutdown();
+    traced.sort_by_key(|&(id, _)| id);
+    assert_eq!(traced, serial, "live tracing changed decisions");
 }
