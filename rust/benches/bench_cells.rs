@@ -1,0 +1,128 @@
+//! Multi-cell routing microbenchmarks (PR 9): the two-level pick
+//! (rendezvous home + affinity/spread policy + load bookkeeping) and the
+//! drained-home failover path, measured through the full per-request
+//! cell cycle — arrival pick → in-cell route → completion accounting.
+//! The cell layer sits on the same microsecond control-plane budget as
+//! routing and admission, so the pick and failover cycles are asserted
+//! allocation-free in steady state on every run.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_results};
+
+#[global_allocator]
+static ALLOC: harness::CountingAlloc = harness::CountingAlloc;
+
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::cell::{CellPickerKind, CellSet};
+use relaygr::relay::coordinator::{RelayCoordinator, Stage};
+use relaygr::relay::tier::DramPolicy;
+
+/// A 4-cell set over the standard cluster shape (5 instances × 2
+/// servers per cell), scripted-churn-free so the bench drives churn
+/// explicitly where it wants it.
+fn cell_set(picker: CellPickerKind, spill: f64) -> CellSet<()> {
+    let mut cfg =
+        relaygr::cluster::SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+    cfg.cells = 4;
+    cfg.router.servers = 8;
+    cfg.cell_picker = picker;
+    cfg.cell_spill = spill;
+    let coords = (0..cfg.cells)
+        .map(|_| RelayCoordinator::new(cfg.cell_coordinator_config(), |_| cfg.estimator()))
+        .collect::<Result<Vec<_>, _>>()
+        .expect("coordinators build");
+    CellSet::new(cfg.cell_config(), coords, 0).expect("cell set builds")
+}
+
+/// One full short-request cycle: level-1 pick, in-cell route, rank
+/// classification, completion (slab slot recycled, cross flag cleared).
+/// Short prefixes keep the ψ plane out of the loop — this measures the
+/// routing control plane, not cache lifecycle.
+fn cycle(set: &mut CellSet<()>, now: u64, rid: u64, user: u64) -> usize {
+    let (req, _) = set.on_arrival(now, rid, user, 256, &[]);
+    set.coord_mut(req.cell).on_stage_done(now, req.id, Stage::Preproc).expect("routed");
+    let _ = set.coord_mut(req.cell).on_rank_start(now, req.id);
+    let _ = set.coord_mut(req.cell).rank_compute(now, req.id);
+    let done = set.on_rank_done(now, req, 32 << 20);
+    std::hint::black_box(done.outcome);
+    req.cell
+}
+
+fn main() {
+    let mut results = Vec::new();
+
+    // Affinity pick: rendezvous over 4 cells + decayed-load spill test.
+    {
+        let mut set = cell_set(CellPickerKind::Affinity, 2.0);
+        let mut id = 0u64;
+        let mut now = 0u64;
+        results.push(bench("cells/route4_affinity_cycle", 100, 20_000, || {
+            id += 1;
+            now += 700;
+            cycle(&mut set, now, id, id % 1024);
+        }));
+        std::hint::black_box(set.cross_totals());
+    }
+
+    // Spread pick: rendezvous on the request id — the no-locality
+    // control whose cost must match affinity's to first order.
+    {
+        let mut set = cell_set(CellPickerKind::Spread, 2.0);
+        let mut id = 0u64;
+        let mut now = 0u64;
+        results.push(bench("cells/route4_spread_cycle", 100, 20_000, || {
+            id += 1;
+            now += 700;
+            cycle(&mut set, now, id, id % 1024);
+        }));
+        std::hint::black_box(set.cross_totals());
+    }
+
+    // Failover: every arrival's home cell is drained, so the pick must
+    // re-rendezvous over the eligible mask and the cross-route counters
+    // take the hit — the path a drain or failure puts every subsequent
+    // request on.
+    {
+        // Find users homed on cell 1 (pure locality: picks == homes).
+        let mut probe = cell_set(CellPickerKind::Affinity, f64::INFINITY);
+        let mut homed: Vec<u64> = Vec::new();
+        for u in 0..8192u64 {
+            if homed.len() == 1024 {
+                break;
+            }
+            if cycle(&mut probe, (u + 1) * 700, u + 1, u) == 1 {
+                homed.push(u);
+            }
+        }
+        assert!(homed.len() == 1024, "rendezvous sharded too unevenly: {}", homed.len());
+        let mut set = cell_set(CellPickerKind::Affinity, f64::INFINITY);
+        set.drain_cell(1);
+        let mut id = 0u64;
+        let mut now = 0u64;
+        results.push(bench("cells/route4_failover_drained_home", 100, 20_000, || {
+            id += 1;
+            now += 700;
+            let cell = cycle(&mut set, now, id, homed[(id % 1024) as usize]);
+            assert_ne!(cell, 1, "drained cell must take no traffic");
+        }));
+        let (cross, _) = set.cross_totals();
+        assert!(cross > 0, "failover path never cross-routed");
+    }
+
+    // The zero-allocation contract, extended to the cell layer: pick,
+    // failover and completion accounting must show no allocator traffic
+    // once slabs and flag vectors reach their high-water capacity.
+    for r in &results {
+        assert_eq!(
+            r.allocs_per_op,
+            Some(0.0),
+            "steady-state allocation regression on '{}': {:?} allocs/op",
+            r.name,
+            r.allocs_per_op
+        );
+    }
+
+    write_results("cells", &results);
+}

@@ -10,7 +10,9 @@ pub mod reference;
 pub mod sim;
 pub mod wheel;
 
-pub use reference::{drive_reference, run_reference, ReferenceRun};
+pub use reference::{
+    build_cells, drive_reference, drive_reference_cells, run_reference, ReferenceRun,
+};
 pub use sim::{run_sim, Sim, SimConfig};
 pub use wheel::TimerWheel;
 
@@ -110,6 +112,30 @@ mod tests {
         )
         .unwrap();
         assert_eq!(m.completed as usize, trace_len);
+    }
+
+    #[test]
+    fn multi_cell_sim_shards_traffic_and_reports_cells() {
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.cells = 4;
+        cfg.router.servers = 8; // 5 instances / 2 servers per cell
+        let m = run_sim(cfg, &small_workload(80.0)).unwrap();
+        assert_eq!(m.cells.len(), 4);
+        let picks: u64 = m.cells.iter().map(|c| c.picks).sum();
+        assert_eq!(picks, m.completed);
+        // Affinity shards the population: more than one cell sees traffic.
+        assert!(m.cells.iter().filter(|c| c.picks > 0).count() > 1, "{:?}", m.cells);
+        assert!(m.outcome_counts[1] > 0, "cells still serve HBM hits: {}", m.brief());
+        // One entry per global instance either way.
+        assert_eq!(m.util.len(), 20);
+        assert!(m.special_instances.iter().all(|&i| i < 20));
+    }
+
+    #[test]
+    fn cells_must_divide_cluster_shape() {
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.cells = 3; // 20 instances / 10 servers: not divisible
+        assert!(run_sim(cfg, &small_workload(10.0)).is_err());
     }
 
     #[test]

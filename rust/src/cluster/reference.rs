@@ -25,6 +25,7 @@ use anyhow::{bail, Result};
 use crate::cluster::SimConfig;
 use crate::metrics::outcome_index;
 use crate::model::BatchMember;
+use crate::relay::cell::{CellReport, CellReq, CellSet};
 use crate::relay::coordinator::{
     BatchDecision, RankAction, RelayCoordinator, ReqId, SignalAction, Stage,
 };
@@ -55,6 +56,9 @@ pub struct ReferenceRun {
     pub stages: StageBreakdown,
     /// The detached flight recorder (raw spans), when tracing was on.
     pub flight: Option<std::sync::Arc<FlightRecorder>>,
+    /// Per-cell routing/failure report (empty from the legacy
+    /// single-coordinator driver, which predates the cell layer).
+    pub cells: Vec<CellReport>,
 }
 
 /// Completion bookkeeping + pooled batch state shared by the inline
@@ -235,24 +239,229 @@ pub fn drive_reference(
         outcome_counts: acc.outcome_counts,
         stages,
         flight,
+        cells: Vec::new(),
     })
 }
 
-/// Convenience: serialized run of `cfg`'s coordinator over `wl`'s trace,
-/// pricing rank compute with `cfg`'s hardware cost model (batched costs
-/// reduce bit-identically to the single-request model at batch size 1).
-pub fn run_reference(cfg: &SimConfig, wl: &WorkloadConfig) -> Result<ReferenceRun> {
-    // Same per-scenario adaptive operating point the simulator seeds —
-    // the engines must start the closed loop from the same state.
+/// Per-cell completion bookkeeping for the cell-aware driver: `held`
+/// is one map per cell because [`ReqId`] slots are per-cell slabs.
+struct CellAcc {
+    outcomes: Vec<(u64, CacheOutcome)>,
+    outcome_counts: [u64; 5],
+    rank_us_sum: f64,
+    held: Vec<SecondaryMap<GenRequest>>,
+    batch_buf: Vec<ReqId>,
+    member_buf: Vec<BatchMember>,
+}
+
+impl CellAcc {
+    fn finish(&mut self, cells: &mut CellSet<()>, now: u64, req: CellReq, rid: u64, kv: usize) {
+        // Through the cell layer, not the coordinator directly — the
+        // wrapper is what counts cross-cell ψ misses on completion.
+        let done = cells.on_rank_done(now, req, kv);
+        if let Some(bytes) = done.spill {
+            cells.coord_mut(req.cell).complete_spill(now, done.instance, done.user, bytes, ());
+        }
+        self.outcome_counts[outcome_index(done.outcome)] += 1;
+        self.outcomes.push((rid, done.outcome));
+    }
+}
+
+/// Cell-aware batch flush: same contract as [`flush`], scoped to one
+/// cell's coordinator.
+fn flush_cell<K, R>(
+    cells: &mut CellSet<()>,
+    acc: &mut CellAcc,
+    now: u64,
+    cell: usize,
+    inst: usize,
+    gen: u64,
+    kv_bytes: &K,
+    rank_cost: &R,
+) where
+    K: Fn(usize) -> usize,
+    R: Fn(&[BatchMember], usize) -> f64,
+{
+    let mut batch = std::mem::take(&mut acc.batch_buf);
+    if !cells.coord_mut(cell).close_batch(now, inst, gen, &mut batch) {
+        acc.batch_buf = batch;
+        return;
+    }
+    acc.member_buf.clear();
+    let mut skipped = 0;
+    for &h in batch.iter() {
+        let g = *acc.held[cell].get(h).expect("held batch member");
+        let rc = cells.coord_mut(cell).rank_compute(now, h);
+        skipped += rc.segments.map(|p| p.skipped()).unwrap_or(0);
+        acc.member_buf.push(BatchMember { cached: rc.cached, prefix_len: g.plen() });
+    }
+    let members = std::mem::take(&mut acc.member_buf);
+    acc.rank_us_sum += rank_cost(&members, skipped);
+    acc.member_buf = members;
+    for &h in batch.iter() {
+        let g = acc.held[cell].remove(h).expect("held batch member");
+        acc.finish(cells, now, CellReq { cell, id: h }, g.rid(), kv_bytes(g.plen()));
+    }
+    batch.clear();
+    acc.batch_buf = batch;
+}
+
+/// Drive `trace` through an N-cell [`CellSet`] serially — the cell-aware
+/// counterpart of [`drive_reference`].  The two are deliberately
+/// independent implementations: `tests/cross_engine.rs` pins this driver
+/// at `cells = 1` decision-for-decision against the legacy one, so the
+/// cell layer's structural-identity claim is checked against code that
+/// never heard of cells.
+pub fn drive_reference_cells(
+    mut cells: CellSet<()>,
+    trace: impl IntoIterator<Item = GenRequest>,
+    wl: &WorkloadConfig,
+    kv_bytes: impl Fn(usize) -> usize,
+    rank_cost: impl Fn(&[BatchMember], usize) -> f64,
+) -> Result<ReferenceRun> {
+    let n_cells = cells.n_cells();
+    let mut acc = CellAcc {
+        outcomes: Vec::new(),
+        outcome_counts: [0u64; 5],
+        rank_us_sum: 0.0,
+        held: (0..n_cells).map(|_| SecondaryMap::new()).collect(),
+        batch_buf: Vec::new(),
+        member_buf: Vec::new(),
+    };
+    // Open batches pending their window deadline: (deadline, cell, inst,
+    // gen) in open order == deadline order (monotone arrivals, fixed
+    // window).
+    let mut pending: VecDeque<(u64, usize, usize, u64)> = VecDeque::new();
+    let mut cands: Vec<u64> = Vec::new();
+    for req in trace {
+        let now = req.arrival_us;
+        while pending.front().is_some_and(|&(d, _, _, _)| d <= now) {
+            let (d, cell, inst, gen) = pending.pop_front().unwrap();
+            flush_cell(&mut cells, &mut acc, d, cell, inst, gen, &kv_bytes, &rank_cost);
+        }
+        if cells.coord(0).segments_enabled() {
+            candidate_set_into(wl, &req, &mut cands);
+        } else {
+            cands.clear();
+        }
+        let (handle, wants_trigger) =
+            cells.on_arrival(now, req.rid(), req.uid(), req.plen(), &cands);
+        let cell = handle.cell;
+        if wants_trigger {
+            match cells.coord_mut(cell).on_trigger_check(now, handle.id) {
+                SignalAction::Produce { instance, user, .. } => {
+                    cells.coord_mut(cell).on_psi_ready(now, instance, user, Some(()));
+                }
+                SignalAction::Reload { instance, user, bytes } => {
+                    cells.coord_mut(cell).on_reload_done(now, instance, user, Some(()), bytes);
+                }
+                SignalAction::None => {}
+            }
+        }
+        cells.coord_mut(cell).on_stage_done(now, handle.id, Stage::Retrieval);
+        let inst = cells
+            .coord_mut(cell)
+            .on_stage_done(now, handle.id, Stage::Preproc)
+            .expect("preproc resolves the ranking instance");
+        match cells.coord_mut(cell).on_rank_start(now, handle.id) {
+            RankAction::Proceed { .. } => {}
+            RankAction::StartReload { bytes } => {
+                cells.coord_mut(cell).on_reload_done(now, inst, req.uid(), Some(()), bytes);
+            }
+            other => bail!("serialized driver saw {other:?} for request {}", req.id),
+        }
+        match cells.coord_mut(cell).offer_rank(now, handle.id) {
+            BatchDecision::Solo => {
+                let rc = cells.coord_mut(cell).rank_compute(now, handle.id);
+                let skipped = rc.segments.map(|p| p.skipped()).unwrap_or(0);
+                let m = [BatchMember { cached: rc.cached, prefix_len: req.plen() }];
+                acc.rank_us_sum += rank_cost(&m, skipped);
+                acc.finish(&mut cells, now, handle, req.rid(), kv_bytes(req.plen()));
+            }
+            BatchDecision::Opened { deadline, gen } => {
+                acc.held[cell].insert(handle.id, req);
+                pending.push_back((deadline, cell, inst, gen));
+            }
+            BatchDecision::Joined => {
+                acc.held[cell].insert(handle.id, req);
+            }
+            BatchDecision::Filled { gen } => {
+                acc.held[cell].insert(handle.id, req);
+                flush_cell(&mut cells, &mut acc, now, cell, inst, gen, &kv_bytes, &rank_cost);
+            }
+        }
+    }
+    while let Some((d, cell, inst, gen)) = pending.pop_front() {
+        flush_cell(&mut cells, &mut acc, d, cell, inst, gen, &kv_bytes, &rank_cost);
+    }
+    acc.outcomes.sort_by_key(|&(id, _)| id);
+    // Deterministic cross-cell merge, cell-index order — same rule as
+    // the simulator's finalize.
+    let (mut hbm, mut hier, mut trig, mut seg) = (
+        cells.coord(0).hbm_stats(),
+        cells.coord(0).hierarchy_stats(),
+        cells.coord(0).trigger_stats(),
+        cells.coord(0).segment_stats(),
+    );
+    for c in 1..n_cells {
+        hbm.merge(cells.coord(c).hbm_stats());
+        hier.merge(cells.coord(c).hierarchy_stats());
+        trig.merge(cells.coord(c).trigger_stats());
+        seg.merge(cells.coord(c).segment_stats());
+    }
+    let (stages, flight) = match cells.take_flight() {
+        Some(fl) => (fl.breakdown.clone(), Some(std::sync::Arc::new(fl))),
+        None => (StageBreakdown::default(), None),
+    };
+    Ok(ReferenceRun {
+        mean_rank_us: acc.rank_us_sum / acc.outcomes.len().max(1) as f64,
+        segments: seg,
+        hierarchy: hier,
+        hbm,
+        trigger: trig,
+        outcomes: acc.outcomes,
+        outcome_counts: acc.outcome_counts,
+        stages,
+        flight,
+        cells: cells.reports(),
+    })
+}
+
+/// Build `cfg`'s [`CellSet`] — the per-cell coordinator shards behind
+/// the two-level router — seeded exactly as [`run_reference`] seeds the
+/// admission loop (shared with `tests/cross_engine.rs`).
+pub fn build_cells(cfg: &SimConfig, wl: &WorkloadConfig) -> Result<CellSet<()>> {
     let mut cfg = cfg.clone();
     let profile = wl.scenario.admission_profile();
     cfg.admission.seed_operating_point(profile.headroom_init, profile.rate_mult_init);
-    let coord: RelayCoordinator<()> =
-        RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator())?;
+    if cfg.cells == 0
+        || cfg.router.n_instances % cfg.cells != 0
+        || cfg.router.servers % cfg.cells != 0
+    {
+        bail!(
+            "--cells {} must be >= 1 and divide both instances {} and servers {}",
+            cfg.cells,
+            cfg.router.n_instances,
+            cfg.router.servers
+        );
+    }
+    let coords = (0..cfg.cells)
+        .map(|_| RelayCoordinator::new(cfg.cell_coordinator_config(), |_| cfg.estimator()))
+        .collect::<Result<Vec<_>>>()?;
+    CellSet::new(cfg.cell_config(), coords, wl.duration_us)
+}
+
+/// Convenience: serialized run of `cfg`'s cell set over `wl`'s trace,
+/// pricing rank compute with `cfg`'s hardware cost model (batched costs
+/// reduce bit-identically to the single-request model at batch size 1).
+/// At `cells = 1` the cell layer is a structural passthrough, so this
+/// remains the pre-cell serialized reference decision-for-decision.
+pub fn run_reference(cfg: &SimConfig, wl: &WorkloadConfig) -> Result<ReferenceRun> {
+    let cells = build_cells(cfg, wl)?;
     let spec = cfg.spec;
     let hw = cfg.hw.clone();
-    drive_reference(
-        coord,
+    drive_reference_cells(
+        cells,
         stream(wl),
         wl,
         |p| spec.kv_bytes_for(p),

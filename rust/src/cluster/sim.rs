@@ -36,6 +36,7 @@ use crate::cluster::wheel::TimerWheel;
 use crate::metrics::RunMetrics;
 use crate::model::{BatchMember, HardwareProfile, ModelSpec};
 use crate::relay::baseline::Mode;
+use crate::relay::cell::{CellConfig, CellPickerKind, CellReq, CellScenario, CellSet};
 use crate::relay::coordinator::{
     BatchDecision, CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, ReqId,
     SignalAction, Stage,
@@ -93,6 +94,17 @@ pub struct SimConfig {
     pub batch_window_us: u64,
     /// Maximum members per batched rank pass (`--batch-max`).
     pub batch_max: usize,
+    /// Coordinator cells (`--cells`; 1 = the single pre-cell pool,
+    /// decision-bit-identical to it).  Must divide `router.n_instances`
+    /// and `router.servers`.
+    pub cells: usize,
+    /// Level-1 cell picker (`--cell-picker affinity|spread`).
+    pub cell_picker: CellPickerKind,
+    /// Affinity locality-vs-load knob (`--cell-spill`; `inf` = pure
+    /// locality, never spill off the home cell).
+    pub cell_spill: f64,
+    /// Scripted cluster churn (`--cell-scenario`).
+    pub cell_scenario: CellScenario,
     /// Record the bitpacked per-request outcome log in [`RunMetrics`]
     /// (cross-engine equivalence tests; off by default — it grows with
     /// the trace, 8 bytes/request).
@@ -142,6 +154,10 @@ impl SimConfig {
             seg_ttl_us: 3_000_000,
             batch_window_us: 0,
             batch_max: 32,
+            cells: 1,
+            cell_picker: CellPickerKind::Affinity,
+            cell_spill: 2.0,
+            cell_scenario: CellScenario::None,
             log_outcomes: false,
             outcome_check: None,
             trace_spans: 0,
@@ -167,6 +183,8 @@ impl SimConfig {
             m_slots: self.m_slots,
             r2: self.router.r2.max(1e-9),
             n_instances: self.router.n_instances,
+            // Filled in by the coordinator from `batch_window_us`.
+            batch_window_us: 0,
             admission: self.admission.clone(),
         }
     }
@@ -204,6 +222,28 @@ impl SimConfig {
         }
     }
 
+    /// The cluster-shape half of the cell layer.
+    pub fn cell_config(&self) -> CellConfig {
+        CellConfig {
+            cells: self.cells,
+            picker: self.cell_picker,
+            spill_ratio: self.cell_spill,
+            scenario: self.cell_scenario,
+        }
+    }
+
+    /// The coordinator configuration for ONE cell: the whole-cluster
+    /// shape with the instance and server pools split evenly across
+    /// cells (each cell keeps its own gateway fabric).  With
+    /// `cells == 1` this IS [`SimConfig::coordinator_config`] — the
+    /// pre-cell identity the cross-engine tests pin.
+    pub fn cell_coordinator_config(&self) -> CoordinatorConfig {
+        let mut per = self.clone();
+        per.router.n_instances = self.router.n_instances / self.cells.max(1);
+        per.router.servers = self.router.servers / self.cells.max(1);
+        per.coordinator_config()
+    }
+
     /// The cost-model latency estimator wired into each special
     /// instance's trigger.
     pub fn estimator(&self) -> crate::relay::trigger::Estimator {
@@ -227,6 +267,8 @@ impl SimConfig {
 /// the request's recyclable handle.
 #[derive(Debug, Clone, Copy)]
 struct PreJob {
+    cell: usize,
+    /// Cell-local instance index (the coordinator's namespace).
     inst: usize,
     user: u64,
     prefix_len: usize,
@@ -237,27 +279,28 @@ struct PreJob {
 enum Ev {
     /// Inject this arrival and pull the next one from the stream.
     Arrive(GenRequest),
-    TriggerCheck(ReqId),
-    PreCpuDone { job: PreJob, req: ReqId },
-    PreXferDone { job: PreJob, req: ReqId },
-    PreInferDone { job: PreJob, req: ReqId },
-    RetrievalDone(ReqId),
-    PreprocDone(ReqId),
-    RankArrive(ReqId),
-    RankCpuDone(ReqId),
-    RankXferDone(ReqId),
-    /// A DRAM→HBM reload of `bytes` finished on `inst` for `user`.
-    ReloadDone { user: u64, inst: usize, bytes: usize },
-    RankExecDone(ReqId),
-    /// The microbatch window on `inst` closed: flush batch `gen` (a
-    /// stale `gen` — already flushed by `Filled` — is a no-op).
-    BatchFlush { inst: usize, gen: u64 },
+    TriggerCheck(CellReq),
+    PreCpuDone { job: PreJob, req: CellReq },
+    PreXferDone { job: PreJob, req: CellReq },
+    PreInferDone { job: PreJob, req: CellReq },
+    RetrievalDone(CellReq),
+    PreprocDone(CellReq),
+    RankArrive(CellReq),
+    RankCpuDone(CellReq),
+    RankXferDone(CellReq),
+    /// A DRAM→HBM reload of `bytes` finished on `cell`/`inst` for `user`.
+    ReloadDone { user: u64, cell: usize, inst: usize, bytes: usize },
+    RankExecDone(CellReq),
+    /// The microbatch window on `cell`/`inst` closed: flush batch `gen`
+    /// (a stale `gen` — already flushed by `Filled` — is a no-op).
+    BatchFlush { cell: usize, inst: usize, gen: u64 },
 }
 
 /// Per-request timing record (decision state lives in the coordinator).
 #[derive(Debug, Clone)]
 struct ReqState {
     gen: GenRequest,
+    /// Cell-local rank instance (the owning cell is in the [`CellReq`]).
     rank_instance: usize,
     pre_us: f64,
     load_us: f64,
@@ -293,12 +336,19 @@ pub struct Sim {
     /// Lazy arrival source (the trace is never materialized).
     arrivals: ArrivalStream,
     arrived: u64,
-    coord: RelayCoordinator<()>,
-    /// Per-instance NPU model-slot FIFOs and busy time.
+    /// The coordinator shards behind the two-level router.  Decisions
+    /// happen per cell; the sim's *resources* stay global, indexed
+    /// `cell × per-cell-count + local` (see [`Sim::gi`]).
+    cells: CellSet<()>,
+    inst_per_cell: usize,
+    servers_per_cell: usize,
+    /// Per-instance NPU model-slot FIFOs and busy time (global index).
     slots: Vec<Vec<u64>>,
     busy_us: Vec<f64>,
     servers: Vec<Server>,
-    states: SecondaryMap<ReqState>,
+    /// Per-cell request state: [`ReqId`] slots are per-cell slabs, so
+    /// one global map would collide across cells.
+    states: Vec<SecondaryMap<ReqState>>,
     /// Recycled candidate-set buffer (the coordinator copies it into the
     /// request's own recycled slot).
     cand_buf: Vec<u64>,
@@ -319,12 +369,26 @@ pub struct Sim {
 
 impl Sim {
     pub fn new(mut cfg: SimConfig, workload: &WorkloadConfig) -> anyhow::Result<Sim> {
+        if cfg.cells == 0
+            || cfg.router.n_instances % cfg.cells != 0
+            || cfg.router.servers % cfg.cells != 0
+        {
+            anyhow::bail!(
+                "--cells {} must be >= 1 and divide both instances {} and servers {}",
+                cfg.cells,
+                cfg.router.n_instances,
+                cfg.router.servers
+            );
+        }
         // Per-scenario initial operating point for the adaptive admission
         // controller (explicit CLI/config choices win; static ignores it).
         let profile = workload.scenario.admission_profile();
         cfg.admission.seed_operating_point(profile.headroom_init, profile.rate_mult_init);
         let arrivals = crate::workload::stream(workload);
-        let coord = RelayCoordinator::new(cfg.coordinator_config(), |_| cfg.estimator())?;
+        let coords = (0..cfg.cells)
+            .map(|_| RelayCoordinator::new(cfg.cell_coordinator_config(), |_| cfg.estimator()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let cells = CellSet::new(cfg.cell_config(), coords, workload.duration_us)?;
         let slots = (0..cfg.router.n_instances).map(|_| vec![0u64; cfg.m_slots]).collect();
         let busy_us = vec![0.0; cfg.router.n_instances];
         let servers = (0..cfg.router.servers)
@@ -348,15 +412,17 @@ impl Sim {
         let end_us = workload.duration_us;
         Ok(Sim {
             rng: Rng::new(cfg.seed),
+            inst_per_cell: cfg.router.n_instances / cfg.cells,
+            servers_per_cell: cfg.router.servers / cfg.cells,
+            states: (0..cfg.cells).map(|_| SecondaryMap::new()).collect(),
             cfg,
             workload: workload.clone(),
             arrivals,
             arrived: 0,
-            coord,
+            cells,
             slots,
             busy_us,
             servers,
-            states: SecondaryMap::new(),
             cand_buf: Vec::new(),
             batch_buf: Vec::new(),
             member_buf: Vec::new(),
@@ -374,8 +440,14 @@ impl Sim {
         self.events.push(t, self.event_seq, ev);
     }
 
-    fn server_of(&self, inst: usize) -> usize {
-        self.coord.server_of(inst)
+    /// Global instance index of a cell-local one (resource arrays).
+    fn gi(&self, cell: usize, inst: usize) -> usize {
+        cell * self.inst_per_cell + inst
+    }
+
+    /// Global server index for a cell-local instance.
+    fn server_of(&self, cell: usize, inst: usize) -> usize {
+        cell * self.servers_per_cell + self.cells.coord(cell).server_of(inst)
     }
 
     /// Run to completion and return the metrics.
@@ -393,17 +465,37 @@ impl Sim {
             .iter()
             .map(|&b| (b / (elapsed * self.cfg.m_slots as f64)).min(1.0))
             .collect();
-        self.metrics.special_instances = self.coord.special_instances().to_vec();
-        self.metrics.hbm = self.coord.hbm_stats();
-        self.metrics.hierarchy = self.coord.hierarchy_stats();
-        self.metrics.trigger = self.coord.trigger_stats();
-        self.metrics.segments = self.coord.segment_stats();
+        // Deterministic cross-cell merge: cell-index order, always.
+        let n_cells = self.cells.n_cells();
+        self.metrics.special_instances = (0..n_cells)
+            .flat_map(|c| {
+                let per = self.inst_per_cell;
+                self.cells.coord(c).special_instances().iter().map(move |&i| c * per + i)
+            })
+            .collect();
+        let (mut hbm, mut hier, mut trig, mut seg) = (
+            self.cells.coord(0).hbm_stats(),
+            self.cells.coord(0).hierarchy_stats(),
+            self.cells.coord(0).trigger_stats(),
+            self.cells.coord(0).segment_stats(),
+        );
+        for c in 1..n_cells {
+            hbm.merge(self.cells.coord(c).hbm_stats());
+            hier.merge(self.cells.coord(c).hierarchy_stats());
+            trig.merge(self.cells.coord(c).trigger_stats());
+            seg.merge(self.cells.coord(c).segment_stats());
+        }
+        self.metrics.hbm = hbm;
+        self.metrics.hierarchy = hier;
+        self.metrics.trigger = trig;
+        self.metrics.segments = seg;
+        self.metrics.cells = self.cells.reports();
         self.metrics.sim_duration_us = self.end_us;
         self.metrics.sim_events = self.event_seq;
         // Detach the flight recorder (tracing runs only): stage-latency
         // breakdown + raw spans travel with the metrics so the CLI can
         // write the RGSP sidecar and `figure breakdown` can report.
-        if let Some(fl) = self.coord.take_flight() {
+        if let Some(fl) = self.cells.take_flight() {
             self.metrics.stages = fl.breakdown.clone();
             self.metrics.flight = Some(std::sync::Arc::new(fl));
         }
@@ -422,9 +514,11 @@ impl Sim {
             Ev::RankArrive(r) => self.on_rank_arrive(now, r),
             Ev::RankCpuDone(r) => self.on_rank_cpu_done(now, r),
             Ev::RankXferDone(r) => self.on_rank_xfer_done(now, r),
-            Ev::ReloadDone { user, inst, bytes } => self.on_reload_done(now, user, inst, bytes),
+            Ev::ReloadDone { user, cell, inst, bytes } => {
+                self.on_reload_done(now, user, cell, inst, bytes)
+            }
             Ev::RankExecDone(r) => self.on_rank_exec_done(now, r),
-            Ev::BatchFlush { inst, gen } => self.flush_batch(now, inst, gen),
+            Ev::BatchFlush { cell, inst, gen } => self.flush_batch(now, cell, inst, gen),
         }
     }
 
@@ -437,15 +531,15 @@ impl Sim {
         self.arrived += 1;
         // Candidate sets are only materialised when segment reuse is on
         // (request-keyed RNG stream: never perturbs the arrival trace).
-        if self.coord.segments_enabled() {
+        if self.cells.coord(0).segments_enabled() {
             crate::workload::candidate_set_into(&self.workload, &gen, &mut self.cand_buf);
         } else {
             self.cand_buf.clear();
         }
         let (req, wants_trigger) =
-            self.coord.on_arrival(now, gen.rid(), gen.uid(), gen.plen(), &self.cand_buf);
-        self.states.insert(
-            req,
+            self.cells.on_arrival(now, gen.rid(), gen.uid(), gen.plen(), &self.cand_buf);
+        self.states[req.cell].insert(
+            req.id,
             ReqState {
                 gen,
                 rank_instance: usize::MAX,
@@ -465,71 +559,73 @@ impl Sim {
         }
     }
 
-    fn on_trigger_check(&mut self, now: u64, req: ReqId) {
-        match self.coord.on_trigger_check(now, req) {
+    fn on_trigger_check(&mut self, now: u64, req: CellReq) {
+        match self.cells.coord_mut(req.cell).on_trigger_check(now, req.id) {
             SignalAction::None => {}
             SignalAction::Produce { instance, user, prefix_len } => {
                 // Behaviour fetch + CPU feature processing, then H2D, then
                 // the prefix pass on an NPU slot.
-                let job = PreJob { inst: instance, user, prefix_len, issue_us: now };
-                let server = self.server_of(instance);
+                let job = PreJob { cell: req.cell, inst: instance, user, prefix_len, issue_us: now };
+                let server = self.server_of(req.cell, instance);
                 let cpu_dur = self.cfg.hw.feature_proc_us(prefix_len);
                 let (_, end) = alloc(&mut self.servers[server].cpu, now, cpu_dur);
                 self.push(end, Ev::PreCpuDone { job, req });
             }
             SignalAction::Reload { instance, user, bytes } => {
-                let server = self.server_of(instance);
+                let server = self.server_of(req.cell, instance);
                 let dur = self.cfg.hw.load_us(bytes);
                 let (_, end) = alloc(&mut self.servers[server].pcie, now, dur);
-                self.push(end, Ev::ReloadDone { user, inst: instance, bytes });
+                self.push(end, Ev::ReloadDone { user, cell: req.cell, inst: instance, bytes });
             }
         }
     }
 
-    fn on_pre_cpu_done(&mut self, now: u64, job: PreJob, req: ReqId) {
-        let server = self.server_of(job.inst);
+    fn on_pre_cpu_done(&mut self, now: u64, job: PreJob, req: CellReq) {
+        let server = self.server_of(job.cell, job.inst);
         let bytes = self.cfg.spec.embed_bytes(job.prefix_len);
         let dur = self.cfg.hw.h2d_embed_us(bytes);
         let (_, end) = alloc(&mut self.servers[server].pcie, now, dur);
         self.push(end, Ev::PreXferDone { job, req });
     }
 
-    fn on_pre_xfer_done(&mut self, now: u64, job: PreJob, req: ReqId) {
+    fn on_pre_xfer_done(&mut self, now: u64, job: PreJob, req: CellReq) {
+        let gi = self.gi(job.cell, job.inst);
         let dur = self.cfg.hw.pre_infer_us(&self.cfg.spec, job.prefix_len);
-        let (_, end) = alloc(&mut self.slots[job.inst], now, dur);
-        self.busy_us[job.inst] += dur;
+        let (_, end) = alloc(&mut self.slots[gi], now, dur);
+        self.busy_us[gi] += dur;
         self.push(end, Ev::PreInferDone { job, req });
     }
 
-    fn on_pre_infer_done(&mut self, now: u64, job: PreJob, req: ReqId) {
+    fn on_pre_infer_done(&mut self, now: u64, job: PreJob, req: CellReq) {
         // The request may already have completed (fallback): the stale
         // generational handle then simply misses.
-        if let Some(st) = self.states.get_mut(req) {
+        if let Some(st) = self.states[req.cell].get_mut(req.id) {
             st.pre_us = (now - job.issue_us) as f64;
         }
         // ψ ready: the coordinator classifies and wakes waiting ranks.
-        let woken = self.coord.on_psi_ready(now, job.inst, job.user, Some(()));
+        let woken = self.cells.coord_mut(job.cell).on_psi_ready(now, job.inst, job.user, Some(()));
         for w in woken {
-            self.start_rank_processing(now, w);
+            self.start_rank_processing(now, CellReq { cell: job.cell, id: w });
         }
     }
 
-    fn on_retrieval_done(&mut self, now: u64, req: ReqId) {
-        self.states.get_mut(req).unwrap().retrieval_done = now;
-        self.coord.on_stage_done(now, req, Stage::Retrieval);
+    fn on_retrieval_done(&mut self, now: u64, req: CellReq) {
+        self.states[req.cell].get_mut(req.id).unwrap().retrieval_done = now;
+        self.cells.coord_mut(req.cell).on_stage_done(now, req.id, Stage::Retrieval);
         let dur = self.preproc.sample(&mut self.rng);
         self.push(now + dur as u64, Ev::PreprocDone(req));
     }
 
-    fn on_preproc_done(&mut self, now: u64, req: ReqId) {
+    fn on_preproc_done(&mut self, now: u64, req: CellReq) {
         // Late binding resolved here: the coordinator routes long-sequence
         // requests (consistency-hash-key) to the special service and short
         // ones by standard balancing.
         let inst = self
-            .coord
-            .on_stage_done(now, req, Stage::Preproc)
+            .cells
+            .coord_mut(req.cell)
+            .on_stage_done(now, req.id, Stage::Preproc)
             .expect("preproc resolves the ranking instance");
-        let st = self.states.get_mut(req).unwrap();
+        let st = self.states[req.cell].get_mut(req.id).unwrap();
         st.preproc_done = now;
         st.rank_instance = inst;
         let t = now + (2.0 * self.cfg.hop_us) as u64; // LB hop + gateway hop
@@ -538,9 +634,9 @@ impl Sim {
 
     // ---- ranking at the instance ---------------------------------------------
 
-    fn on_rank_arrive(&mut self, now: u64, req: ReqId) {
-        self.states.get_mut(req).unwrap().rank_start = now;
-        match self.coord.on_rank_start(now, req) {
+    fn on_rank_arrive(&mut self, now: u64, req: CellReq) {
+        self.states[req.cell].get_mut(req.id).unwrap().rank_start = now;
+        match self.cells.coord_mut(req.cell).on_rank_start(now, req.id) {
             RankAction::Proceed { .. } => self.start_rank_processing(now, req),
             // Waiting for ψ production or an in-flight reload: the
             // coordinator wakes the request from `on_psi_ready` /
@@ -548,58 +644,58 @@ impl Sim {
             RankAction::Wait | RankAction::WaitReload => {}
             RankAction::StartReload { bytes } => {
                 let (inst, user) = {
-                    let st = self.states.get(req).unwrap();
+                    let st = self.states[req.cell].get(req.id).unwrap();
                     (st.rank_instance, st.gen.uid())
                 };
-                let server = self.server_of(inst);
+                let server = self.server_of(req.cell, inst);
                 let dur = self.cfg.hw.load_us(bytes);
                 let (_, end) = alloc(&mut self.servers[server].pcie, now, dur);
-                self.push(end, Ev::ReloadDone { user, inst, bytes });
+                self.push(end, Ev::ReloadDone { user, cell: req.cell, inst, bytes });
             }
         }
     }
 
-    fn on_reload_done(&mut self, now: u64, user: u64, inst: usize, bytes: usize) {
-        let res = self.coord.on_reload_done(now, inst, user, Some(()), bytes);
+    fn on_reload_done(&mut self, now: u64, user: u64, cell: usize, inst: usize, bytes: usize) {
+        let res = self.cells.coord_mut(cell).on_reload_done(now, inst, user, Some(()), bytes);
         let load = self.cfg.hw.load_us(bytes);
         // Wake all requests joined to this reload (≤ 1 H2D per burst).
         for w in res.woken {
-            if let Some(st) = self.states.get_mut(w) {
+            if let Some(st) = self.states[cell].get_mut(w) {
                 st.load_us = load;
             }
-            self.start_rank_processing(now, w);
+            self.start_rank_processing(now, CellReq { cell, id: w });
         }
         // Grant the next queued reload its PCIe transfer.
         if let Some(next_user) = res.next {
-            self.start_queued_reload(now, inst, next_user);
+            self.start_queued_reload(now, cell, inst, next_user);
         }
     }
 
-    fn start_queued_reload(&mut self, now: u64, inst: usize, user: u64) {
-        match self.coord.begin_queued_reload(now, inst, user) {
+    fn start_queued_reload(&mut self, now: u64, cell: usize, inst: usize, user: u64) {
+        match self.cells.coord_mut(cell).begin_queued_reload(now, inst, user) {
             QueuedReload::Start { bytes } => {
-                let server = self.server_of(inst);
+                let server = self.server_of(cell, inst);
                 let dur = self.cfg.hw.load_us(bytes);
                 let (_, end) = alloc(&mut self.servers[server].pcie, now, dur);
-                self.push(end, Ev::ReloadDone { user, inst, bytes });
+                self.push(end, Ev::ReloadDone { user, cell, inst, bytes });
             }
             QueuedReload::Aborted { woken, next } => {
                 // Evicted from DRAM while queued: waiters fall back.
                 for w in woken {
-                    self.start_rank_processing(now, w);
+                    self.start_rank_processing(now, CellReq { cell, id: w });
                 }
                 if let Some(nu) = next {
-                    self.start_queued_reload(now, inst, nu);
+                    self.start_queued_reload(now, cell, inst, nu);
                 }
             }
         }
     }
 
     /// CPU feature processing → H2D → NPU execution for the rank request.
-    fn start_rank_processing(&mut self, now: u64, req: ReqId) {
-        let inst = self.states.get(req).unwrap().rank_instance;
+    fn start_rank_processing(&mut self, now: u64, req: CellReq) {
+        let inst = self.states[req.cell].get(req.id).unwrap().rank_instance;
         let tokens = self.rank_tokens(req);
-        let server = self.server_of(inst);
+        let server = self.server_of(req.cell, inst);
         let dur = self.cfg.hw.feature_proc_us(tokens);
         let (_, end) = alloc(&mut self.servers[server].cpu, now, dur);
         self.push(end, Ev::RankCpuDone(req));
@@ -607,63 +703,64 @@ impl Sim {
 
     /// Cached path processes only incremental tokens + items; fallback /
     /// baseline must process the whole sequence on the critical path.
-    fn rank_tokens(&self, req: ReqId) -> usize {
+    fn rank_tokens(&self, req: CellReq) -> usize {
         let spec = &self.cfg.spec;
-        if self.coord.is_cached(req) {
+        if self.cells.coord(req.cell).is_cached(req.id) {
             spec.incr_len + spec.num_items
         } else {
-            self.states.get(req).unwrap().gen.plen() + spec.incr_len + spec.num_items
+            self.states[req.cell].get(req.id).unwrap().gen.plen() + spec.incr_len + spec.num_items
         }
     }
 
-    fn on_rank_cpu_done(&mut self, now: u64, req: ReqId) {
-        let inst = self.states.get(req).unwrap().rank_instance;
+    fn on_rank_cpu_done(&mut self, now: u64, req: CellReq) {
+        let inst = self.states[req.cell].get(req.id).unwrap().rank_instance;
         let tokens = self.rank_tokens(req);
-        let server = self.server_of(inst);
+        let server = self.server_of(req.cell, inst);
         let dur = self.cfg.hw.h2d_embed_us(self.cfg.spec.embed_bytes(tokens));
         let (_, end) = alloc(&mut self.servers[server].pcie, now, dur);
         self.push(end, Ev::RankXferDone(req));
     }
 
-    fn on_rank_xfer_done(&mut self, now: u64, req: ReqId) {
+    fn on_rank_xfer_done(&mut self, now: u64, req: CellReq) {
         // Offer the classified, execution-ready pass to the instance's
         // batch former (coordinator policy).  Window 0 answers `Solo`
         // without touching batch state, keeping the unbatched event
         // sequence bit-identical.
-        match self.coord.offer_rank(now, req) {
+        match self.cells.coord_mut(req.cell).offer_rank(now, req.id) {
             BatchDecision::Solo => self.exec_rank_solo(now, req),
             BatchDecision::Opened { deadline, gen } => {
-                let inst = self.states.get(req).unwrap().rank_instance;
-                self.push(deadline, Ev::BatchFlush { inst, gen });
+                let inst = self.states[req.cell].get(req.id).unwrap().rank_instance;
+                self.push(deadline, Ev::BatchFlush { cell: req.cell, inst, gen });
             }
             BatchDecision::Joined => {}
             BatchDecision::Filled { gen } => {
-                let inst = self.states.get(req).unwrap().rank_instance;
-                self.flush_batch(now, inst, gen);
+                let inst = self.states[req.cell].get(req.id).unwrap().rank_instance;
+                self.flush_batch(now, req.cell, inst, gen);
             }
         }
     }
 
     /// Unbatched rank execution — exactly the pre-batching pricing path.
-    fn exec_rank_solo(&mut self, now: u64, req: ReqId) {
+    fn exec_rank_solo(&mut self, now: u64, req: CellReq) {
         let (inst, prefix_len) = {
-            let st = self.states.get(req).unwrap();
+            let st = self.states[req.cell].get(req.id).unwrap();
             (st.rank_instance, st.gen.plen())
         };
         // Consume ψ at execution start; segments the plan reuses (or
         // joins — the producer's execution pays) trim the rank compute.
         // With reuse off `skipped` is 0 and the costs are bit-identical
         // to the unsplit model.
-        let rc = self.coord.rank_compute(now, req);
+        let rc = self.cells.coord_mut(req.cell).rank_compute(now, req.id);
         let skipped = rc.segments.map(|p| p.skipped()).unwrap_or(0);
         let dur = if rc.cached {
             self.cfg.hw.rank_cached_reuse_us(&self.cfg.spec, prefix_len, skipped)
         } else {
             self.cfg.hw.rank_full_reuse_us(&self.cfg.spec, prefix_len, skipped)
         };
-        let (_, end) = alloc(&mut self.slots[inst], now, dur);
-        self.busy_us[inst] += dur;
-        self.states.get_mut(req).unwrap().rank_us = dur;
+        let gi = self.gi(req.cell, inst);
+        let (_, end) = alloc(&mut self.slots[gi], now, dur);
+        self.busy_us[gi] += dur;
+        self.states[req.cell].get_mut(req.id).unwrap().rank_us = dur;
         self.push(end, Ev::RankExecDone(req));
     }
 
@@ -673,11 +770,11 @@ impl Sim {
     /// cost, occupy one NPU slot, and complete every member at the
     /// shared end time (`RankExecDone` events in offer order — the
     /// wheel's `(t, seq)` contract keeps completion order deterministic).
-    fn flush_batch(&mut self, now: u64, inst: usize, gen: u64) {
+    fn flush_batch(&mut self, now: u64, cell: usize, inst: usize, gen: u64) {
         // `close_batch` drains into the recycled buffer; a stale
         // generation (already flushed by `Filled`) is a no-op.
         let mut batch = std::mem::take(&mut self.batch_buf);
-        if !self.coord.close_batch(now, inst, gen, &mut batch) {
+        if !self.cells.coord_mut(cell).close_batch(now, inst, gen, &mut batch) {
             self.batch_buf = batch;
             return;
         }
@@ -685,32 +782,37 @@ impl Sim {
         members.clear();
         let mut skipped = 0;
         for &req in batch.iter() {
-            let prefix_len = self.states.get(req).unwrap().gen.plen();
-            let rc = self.coord.rank_compute(now, req);
+            let prefix_len = self.states[cell].get(req).unwrap().gen.plen();
+            let rc = self.cells.coord_mut(cell).rank_compute(now, req);
             skipped += rc.segments.map(|p| p.skipped()).unwrap_or(0);
             members.push(BatchMember { cached: rc.cached, prefix_len });
         }
         let dur = self.cfg.hw.rank_batched_us(&self.cfg.spec, &members, skipped);
-        let (_, end) = alloc(&mut self.slots[inst], now, dur);
-        self.busy_us[inst] += dur;
+        let gi = self.gi(cell, inst);
+        let (_, end) = alloc(&mut self.slots[gi], now, dur);
+        self.busy_us[gi] += dur;
         for &req in batch.iter() {
-            self.states.get_mut(req).unwrap().rank_us = dur;
-            self.push(end, Ev::RankExecDone(req));
+            self.states[cell].get_mut(req).unwrap().rank_us = dur;
+            self.push(end, Ev::RankExecDone(CellReq { cell, id: req }));
         }
         batch.clear();
         self.batch_buf = batch;
         self.member_buf = members;
     }
 
-    fn on_rank_exec_done(&mut self, now: u64, req: ReqId) {
-        let st = self.states.remove(req).unwrap();
+    fn on_rank_exec_done(&mut self, now: u64, req: CellReq) {
+        let st = self.states[req.cell].remove(req.id).unwrap();
         let kv = self.cfg.spec.kv_bytes_for(st.gen.plen());
-        let done = self.coord.on_rank_done(now, req, kv);
+        let done = self.cells.on_rank_done(now, req, kv);
         // Spill freshly produced caches to DRAM for short-term reuse (off
         // the critical path; occupies the PCIe link).
         if let Some(bytes) = done.spill {
-            if self.coord.complete_spill(now, done.instance, done.user, bytes, ()) {
-                let server = self.server_of(done.instance);
+            if self
+                .cells
+                .coord_mut(req.cell)
+                .complete_spill(now, done.instance, done.user, bytes, ())
+            {
+                let server = self.server_of(req.cell, done.instance);
                 let dur = self.cfg.hw.spill_us(bytes);
                 let _ = alloc(&mut self.servers[server].pcie, now, dur);
             }
@@ -730,7 +832,9 @@ impl Sim {
             wait_us: done.wait_us,
             outcome: done.outcome,
             admitted: done.admitted,
-            instance: done.instance,
+            // Global index: unambiguous across cells, value-identical at
+            // cells = 1.
+            instance: self.gi(req.cell, done.instance),
         };
         self.metrics.record(&lc, done.is_long);
         self.metrics.offered_qps = self.arrived as f64 / (self.end_us as f64 / 1e6);

@@ -8,6 +8,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::cluster::SimConfig;
 use crate::model::{Dtype, HardwareProfile, ModelSpec, ModelType};
 use crate::relay::baseline::Mode;
+use crate::relay::cell::{CellPickerKind, CellScenario};
 use crate::relay::tier::{DramPolicy, EvictPolicy, TierConfig};
 use crate::relay::trigger::{AdmissionConfig, AdmissionMode};
 use crate::util::cli::Args;
@@ -183,6 +184,18 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
         if let Some(v) = j.get("trace_spans").and_then(Json::as_usize) {
             cfg.trace_spans = v;
         }
+        if let Some(v) = j.get("cells").and_then(Json::as_usize) {
+            cfg.cells = v;
+        }
+        if let Some(v) = j.get("cell_picker").and_then(Json::as_str) {
+            cfg.cell_picker = CellPickerKind::parse(v).context("config file")?;
+        }
+        if let Some(v) = j.get("cell_spill").and_then(Json::as_f64) {
+            cfg.cell_spill = v;
+        }
+        if let Some(v) = j.get("cell_scenario").and_then(Json::as_str) {
+            cfg.cell_scenario = CellScenario::parse(v).context("config file")?;
+        }
     }
     // CLI overrides.
     if let Some(hw) = args.get("hw") {
@@ -210,6 +223,17 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
         bail!("--batch-max must be >= 1 (use --batch-window 0 to disable batching)");
     }
     cfg.trace_spans = args.get_usize("trace-spans", cfg.trace_spans)?;
+    cfg.cells = args.get_usize("cells", cfg.cells)?;
+    if let Some(p) = args.get("cell-picker") {
+        cfg.cell_picker = CellPickerKind::parse(p)?;
+    }
+    cfg.cell_spill = args.get_f64("cell-spill", cfg.cell_spill)?;
+    if cfg.cell_spill <= 0.0 {
+        bail!("--cell-spill must be > 0 (use inf for pure locality), got {}", cfg.cell_spill);
+    }
+    if let Some(s) = args.get("cell-scenario") {
+        cfg.cell_scenario = CellScenario::parse(s)?;
+    }
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     if cfg.spec.dim % cfg.spec.heads != 0 {
         // Keep heads consistent when dim is overridden.
@@ -289,6 +313,9 @@ pub fn sim_config_json(cfg: &SimConfig, wl: &WorkloadConfig) -> Json {
         .set("admission", cfg.admission.label().into())
         .set("batch_window", cfg.batch_window_us.into())
         .set("batch_max", cfg.batch_max.into())
+        .set("cells", cfg.cells.into())
+        .set("cell_picker", cfg.cell_picker.label().into())
+        .set("cell_scenario", cfg.cell_scenario.label().into())
         .set("zipf", wl.cand_zipf_s.into())
         .set("seed", cfg.seed.into());
     j
@@ -507,6 +534,53 @@ mod tests {
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.req_usize("batch_window").unwrap(), 250);
         assert_eq!(parsed.req_usize("batch_max").unwrap(), 4);
+    }
+
+    #[test]
+    fn cell_flags_and_file_keys_layer() {
+        // Defaults: one cell — the pre-cell-layer identical configuration.
+        let none = sim_config(&args(&["figure"]), Mode::Baseline).unwrap();
+        assert_eq!(none.cells, 1);
+        assert_eq!(none.cell_picker, CellPickerKind::Affinity);
+        assert_eq!(none.cell_scenario, CellScenario::None);
+        // CLI flags.
+        let a = args(&[
+            "figure", "--cells", "4", "--cell-picker", "spread", "--cell-spill", "1.5",
+            "--cell-scenario", "drain",
+        ]);
+        let cfg = sim_config(&a, Mode::Baseline).unwrap();
+        assert_eq!(cfg.cells, 4);
+        assert_eq!(cfg.cell_picker, CellPickerKind::Spread);
+        assert!((cfg.cell_spill - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.cell_scenario, CellScenario::Drain);
+        // `inf` = pure locality; non-positive spill ratios are rejected.
+        let inf = args(&["figure", "--cell-spill", "inf"]);
+        assert!(sim_config(&inf, Mode::Baseline).unwrap().cell_spill.is_infinite());
+        assert!(sim_config(&args(&["figure", "--cell-spill", "0"]), Mode::Baseline).is_err());
+        assert!(sim_config(&args(&["figure", "--cell-picker", "random"]), Mode::Baseline).is_err());
+        assert!(sim_config(&args(&["figure", "--cell-scenario", "meteor"]), Mode::Baseline).is_err());
+        // File keys layer under CLI.
+        let dir = std::env::temp_dir().join("relaygr_cell_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"cells": 2, "cell_picker": "spread", "cell_scenario": "failure"}"#,
+        )
+        .unwrap();
+        let f = args(&["x", "--config", path.to_str().unwrap()]);
+        let cfg = sim_config(&f, Mode::Baseline).unwrap();
+        assert_eq!(cfg.cells, 2);
+        assert_eq!(cfg.cell_picker, CellPickerKind::Spread);
+        assert_eq!(cfg.cell_scenario, CellScenario::Failure);
+        let over = args(&["x", "--config", path.to_str().unwrap(), "--cells", "5"]);
+        assert_eq!(sim_config(&over, Mode::Baseline).unwrap().cells, 5);
+        // The run record carries the cell shape.
+        let j = sim_config_json(&cfg, &WorkloadConfig::default());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req_usize("cells").unwrap(), 2);
+        assert_eq!(parsed.req_str("cell_picker").unwrap(), "spread");
+        assert_eq!(parsed.req_str("cell_scenario").unwrap(), "failure");
     }
 
     #[test]

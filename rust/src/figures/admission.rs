@@ -211,5 +211,92 @@ pub fn admission(args: &Args) -> Result<()> {
             adpt.sim.hbm
         );
     }
+    // Batch-window coupling: the adaptive controller charges the
+    // microbatch window to its admission latency estimate, so opening a
+    // 20 ms window can only move boundary requests *into* the relay
+    // path — never out of it.  One extra steady cell per engine,
+    // compared against a window-0 adaptive base (monotone-safe `<=`:
+    // the sweep stays green even if no request sits on the boundary).
+    if kinds.iter().any(|k| matches!(k, ScenarioKind::Steady)) {
+        let run_steady = |window: u64| -> Result<ModeRow> {
+            let wl = WorkloadConfig {
+                qps,
+                duration_us,
+                num_users: 30_000,
+                long_frac: 0.2,
+                fixed_long_len: Some(3072),
+                max_prefix: 3072,
+                refresh_prob: 0.0,
+                scenario: ScenarioKind::Steady,
+                seed,
+                ..Default::default()
+            };
+            let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+            cfg.pipeline.t_life_us = 2 * wl.duration_us;
+            cfg.r1 = 0.01;
+            cfg.kv_p99_prefix = 32_768;
+            cfg.batch_window_us = window;
+            cfg.log_outcomes = true;
+            cfg.admission = crate::config::parse_admission(args, &cfg.admission)?;
+            cfg.admission.mode = AdmissionMode::Adaptive;
+            let m: RunMetrics = sim("admission", cfg.clone(), &wl)?;
+            let serial = run_reference(&cfg, &wl)?;
+            let mut sim_log = m.outcome_log();
+            sim_log.sort_by_key(|&(id, _)| id);
+            ensure!(
+                sim_log == serial.outcomes,
+                "admission: engines diverged on per-request outcomes \
+                 (steady, adaptive, batch-window {window})"
+            );
+            Ok(ModeRow {
+                label: "adaptive+w20ms",
+                sim: m,
+                serial_counts: serial.outcome_counts,
+                serial_trigger: serial.trigger,
+                serial_mean_rank_us: serial.mean_rank_us,
+            })
+        };
+        let base = run_steady(0)?;
+        let w20 = run_steady(20_000)?;
+        for (engine, n, trig, counts, rank_ms) in [
+            ("sim", w20.sim.completed, w20.sim.trigger, w20.sim.outcome_counts,
+             ms(w20.sim.rank_exec.mean())),
+            ("serial", w20.serial_counts.iter().sum(), w20.serial_trigger, w20.serial_counts,
+             ms(w20.serial_mean_rank_us)),
+        ] {
+            t.row(vec![
+                "steady".into(),
+                w20.label.to_string(),
+                engine.into(),
+                n.to_string(),
+                trig.admitted.to_string(),
+                trig.footprint_limited.to_string(),
+                trig.rate_limited.to_string(),
+                counts[hbm_idx].to_string(),
+                counts[full_idx].to_string(),
+                rank_ms,
+                trig.l_max_effective.to_string(),
+            ]);
+        }
+        for (name, b, w) in [
+            ("sim", &base.sim.trigger, &w20.sim.trigger),
+            ("serial", &base.serial_trigger, &w20.serial_trigger),
+        ] {
+            ensure!(
+                w.assessed == b.assessed,
+                "admission (steady/{name}): window changed the assessed count \
+                 ({} vs {})",
+                w.assessed,
+                b.assessed
+            );
+            ensure!(
+                w.not_at_risk <= b.not_at_risk,
+                "admission (steady/{name}): 20 ms window left MORE requests \
+                 not-at-risk ({} vs {}) — the estimate is not charging the window",
+                w.not_at_risk,
+                b.not_at_risk
+            );
+        }
+    }
     t.emit(args)
 }

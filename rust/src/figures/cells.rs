@@ -1,0 +1,169 @@
+//! `relaygr figure cells` — the multi-cell cluster standing report: the
+//! two-level router (cell picker above the in-cell affinity router)
+//! swept across picker policies and cluster-churn scenarios, in both
+//! decision engines.
+//!
+//! Three claims are checked *inside* the figure rather than published on
+//! trust:
+//!
+//! * **Engine identity** — cell routing, scripted failures, drains and
+//!   elastic resizes are decisions, so they replay decision-for-decision
+//!   in the serialized reference driver.  Every (picker, scenario) cell
+//!   runs the simulator *and* the reference and asserts per-request
+//!   outcomes are identical.
+//! * **Locality pays** — on the cache-locality workload (a small user
+//!   population re-arriving against warm ψ caches) the affinity picker
+//!   must deliver strictly more HBM hits than spread: spread scatters a
+//!   user's requests across cells, so its repeat arrivals land where no
+//!   ψ was produced.
+//! * **Sharding is visible** — at `--cells 4` the report must show a
+//!   nonzero cross-cell ψ-miss count somewhere in the grid (the spread
+//!   rows guarantee it); a zero column would mean the cell layer is not
+//!   actually routing across cells.
+//!
+//! The churn rows additionally assert the scripted events happened:
+//! failure rows must record injected failures (and their reload-storm
+//! wipes), drain/elastic rows must still complete every request.
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::SimConfig;
+use crate::config::apply_candidate_flags;
+use crate::figures::common::{ms, sim, Table};
+use crate::metrics::RunMetrics;
+use crate::relay::baseline::Mode;
+use crate::relay::cell::{CellPickerKind, CellScenario};
+use crate::relay::tier::DramPolicy;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::parallel;
+use crate::workload::{ScenarioKind, WorkloadConfig};
+
+const PICKERS: &[CellPickerKind] = &[CellPickerKind::Affinity, CellPickerKind::Spread];
+
+/// `relaygr figure cells [--cells N] [--qps N] [--quick] [--jobs N]`.
+///
+/// Grid: both pickers × all churn scenarios at `--cells` (default 4),
+/// plus a single-cell control row (the PR 8-identical configuration).
+/// Each cell is self-contained, so the grid parallelizes on the
+/// deterministic executor.
+pub fn cells(args: &Args) -> Result<()> {
+    let dur = if args.has_flag("quick") { 4_000_000u64 } else { 8_000_000 };
+    let probe_qps = args.get_f64("qps", 100.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let n_cells = args.get_usize("cells", 4)?;
+    ensure!(n_cells >= 2, "--cells must be >= 2 (the control row covers cells=1)");
+    let jobs = parallel::jobs_from_args(args)?;
+
+    // (cells, picker, scenario); the final entry is the 1-cell control.
+    let mut grid: Vec<(usize, CellPickerKind, CellScenario)> = Vec::new();
+    for &p in PICKERS {
+        for name in CellScenario::NAMES {
+            grid.push((n_cells, p, CellScenario::parse(name)?));
+        }
+    }
+    grid.push((1, CellPickerKind::Affinity, CellScenario::None));
+
+    let results = parallel::map_indexed(jobs, grid.len(), |i| -> Result<(Vec<String>, RunMetrics)> {
+        let (cells, picker, scenario) = grid[i];
+        // Cache-locality workload: a small population re-arrives against
+        // warm ψ caches, so the picker's placement decides the hit rate.
+        let mut wl = WorkloadConfig {
+            qps: probe_qps,
+            duration_us: dur,
+            num_users: 200,
+            fixed_long_len: Some(3072),
+            max_prefix: 3072,
+            refresh_prob: 0.0,
+            scenario: ScenarioKind::Steady,
+            seed,
+            ..Default::default()
+        };
+        apply_candidate_flags(args, &mut wl)?;
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        // Timing-insensitive shape (no DRAM, lifecycle beyond the trace,
+        // no refresh): sim-vs-reference divergence would be a genuine
+        // policy difference, not clock skew.
+        cfg.pipeline.t_life_us = 2 * dur;
+        cfg.router.servers = 8; // divisible by 1, 2, 4, 8 cells
+        cfg.cells = cells;
+        cfg.cell_picker = picker;
+        cfg.cell_scenario = scenario;
+        cfg.log_outcomes = true;
+        let m: RunMetrics = sim("cells", cfg.clone(), &wl)?;
+        let serial = crate::cluster::run_reference(&cfg, &wl)?;
+        let mut sim_log = m.outcome_log();
+        sim_log.sort_by_key(|&(id, _)| id);
+        ensure!(
+            sim_log == serial.outcomes,
+            "cells: engines diverged on per-request outcomes \
+             (cells {cells}, picker {}, scenario {})",
+            picker.label(),
+            scenario.label()
+        );
+        let cross: u64 = m.cells.iter().map(|c| c.cross_routes).sum();
+        let miss: u64 = m.cells.iter().map(|c| c.cross_psi_miss).sum();
+        let fails: u64 = m.cells.iter().map(|c| c.failures).sum();
+        let wipes: u64 = m.cells.iter().map(|c| c.storm_invalidations).sum();
+        if scenario == CellScenario::Failure {
+            ensure!(fails > 0, "failure scenario injected no failures");
+        }
+        let row = vec![
+            cells.to_string(),
+            picker.label().to_string(),
+            scenario.label().to_string(),
+            m.completed.to_string(),
+            m.outcome_counts[1].to_string(),
+            cross.to_string(),
+            miss.to_string(),
+            fails.to_string(),
+            wipes.to_string(),
+            ms(m.e2e.p99()),
+            "ok".into(),
+        ];
+        Ok((row, m))
+    });
+
+    let mut t = Table::new(
+        "cells",
+        "multi-cell cluster: picker policy × churn scenario (simulator + serialized reference)",
+        &[
+            "cells", "picker", "cell_scenario", "n", "hbm_hits", "cross_routes",
+            "cross_psi_miss", "failures", "storm_wipes", "p99 e2e ms", "outcomes",
+        ],
+    );
+    t.meta.set("cells", n_cells.into()).set("probe_qps", probe_qps.into()).set(
+        "scenarios",
+        Json::Arr(CellScenario::NAMES.iter().map(|&s| s.into()).collect()),
+    );
+    let mut runs: Vec<RunMetrics> = Vec::new();
+    for res in results {
+        let (row, m) = res?;
+        t.row(row);
+        runs.push(m);
+    }
+    // Locality pays: affinity strictly beats spread on HBM hits in the
+    // steady (no-churn) cells=N pair.
+    let hbm_at = |p: CellPickerKind| {
+        grid.iter()
+            .zip(&runs)
+            .find(|((c, pk, sc), _)| *c == n_cells && *pk == p && *sc == CellScenario::None)
+            .map(|(_, m)| m.outcome_counts[1])
+            .expect("grid row present")
+    };
+    let (aff, spr) = (hbm_at(CellPickerKind::Affinity), hbm_at(CellPickerKind::Spread));
+    ensure!(
+        aff > spr,
+        "cells: affinity does not beat spread on cache locality \
+         ({aff} vs {spr} HBM hits at cells={n_cells})"
+    );
+    // Sharding is visible: somewhere in the multi-cell grid, a long
+    // request completed off its ψ home and paid the cross-cell miss.
+    let total_miss: u64 = runs
+        .iter()
+        .flat_map(|m| m.cells.iter())
+        .map(|c| c.cross_psi_miss)
+        .sum();
+    ensure!(total_miss > 0, "cells: no cross-cell psi misses anywhere at cells={n_cells}");
+    t.emit(args)
+}

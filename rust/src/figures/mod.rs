@@ -6,6 +6,7 @@
 pub mod admission;
 pub mod batching;
 pub mod breakdown;
+pub mod cells;
 pub mod common;
 pub mod fig11;
 pub mod fig12;
@@ -27,7 +28,7 @@ use crate::util::cli::Args;
 pub const ALL: &[&str] = &[
     "fig1", "fig3", "fig11a", "fig11b", "fig11c", "fig11d", "fig12", "fig13a", "fig13b",
     "fig13c", "fig13d", "fig14a", "fig14b", "fig14c", "fig14d", "fig15a", "fig15b", "table1",
-    "scenarios", "tiers", "segments", "admission", "batching", "breakdown",
+    "scenarios", "tiers", "segments", "admission", "batching", "breakdown", "cells",
 ];
 
 pub fn run_one(id: &str, args: &Args) -> Result<()> {
@@ -56,6 +57,7 @@ pub fn run_one(id: &str, args: &Args) -> Result<()> {
         "admission" => admission::admission(args),
         "batching" => batching::batching(args),
         "breakdown" => breakdown::breakdown(args),
+        "cells" => cells::cells(args),
         other => bail!("unknown figure '{other}' (available: {} all)", ALL.join(" ")),
     }
 }

@@ -64,7 +64,7 @@ fn help() -> String {
      \x20 calibrate  measure live execution costs, write calibration JSON\n\
      \x20 figure     regenerate a paper figure/table: fig1 fig3 fig11a..d fig12\n\
      \x20            fig13a..d fig14a..d fig15a fig15b table1 scenarios tiers\n\
-     \x20            segments admission batching breakdown all\n\
+     \x20            segments admission batching breakdown cells all\n\
      \x20 plan       admission-control capacity planning (Eqs. 1–3); with\n\
      \x20            --admission adaptive also the closed-loop operating\n\
      \x20            bands and per-scenario initial operating points\n\
@@ -95,6 +95,15 @@ fn help() -> String {
      \x20                       microbatched ranking (0 = off, default;\n\
      \x20                       serve + figure/sim)\n\
      \x20 --batch-max <n>       max members per batched rank pass (default 32)\n\
+     \x20 --cells <n>           coordinator cells behind the two-level router\n\
+     \x20                       (default 1 = the pre-cell pool, decision-\n\
+     \x20                       identical; must divide instances and servers)\n\
+     \x20 --cell-picker <p>     level-1 cell pick: affinity (default) | spread\n\
+     \x20 --cell-spill <r>      affinity locality-vs-load knob: spill off the\n\
+     \x20                       home cell when its load exceeds r× the mean\n\
+     \x20                       (default 2.0; inf = pure locality)\n\
+     \x20 --cell-scenario <s>   scripted cluster churn: none (default) |\n\
+     \x20                       failure | drain | elastic (serve + figure/sim)\n\
      \x20 --trace-spans <n>     flight-recorder span retention (0 = off,\n\
      \x20                       default; observe-only — decisions are\n\
      \x20                       bit-identical either way; serve + figure/sim)\n\
@@ -153,6 +162,7 @@ fn trace_cli(args: &Args) -> Result<()> {
                         m.sim_events as f64 / wall.max(1e-9),
                         m.completed as f64 / wall.max(1e-9),
                     );
+                    report_cells(&m.cells);
                     report_spans(args, m.flight.as_deref(), wall)?;
                 }
                 "reference" => {
@@ -165,6 +175,7 @@ fn trace_cli(args: &Args) -> Result<()> {
                         r.outcomes.len() as f64 / wall.max(1e-9),
                         r.mean_rank_us,
                     );
+                    report_cells(&r.cells);
                     report_spans(args, r.flight.as_deref(), wall)?;
                 }
                 other => bail!("--engine {other}: expected sim | reference"),
@@ -181,6 +192,24 @@ fn trace_cli(args: &Args) -> Result<()> {
              relaygr trace replay <path> [--engine sim|reference] | \
              relaygr trace inspect <path.rgsp>"
         ),
+    }
+}
+
+/// Print the cell-routing tail lines after a multi-cell replay (the CI
+/// scale-smoke job greps the `cross-cell routes` total).
+fn report_cells(cells: &[relaygr::relay::CellReport]) {
+    if cells.len() < 2 {
+        return;
+    }
+    let cross: u64 = cells.iter().map(|c| c.cross_routes).sum();
+    let miss: u64 = cells.iter().map(|c| c.cross_psi_miss).sum();
+    println!("{} cells: cross-cell routes {cross}, cross-cell psi misses {miss}", cells.len());
+    for (i, c) in cells.iter().enumerate() {
+        println!(
+            "  C{i}: picks={} home={} spilled={} cross={} cross-psi-miss={} failures={} storm-wipes={}",
+            c.picks, c.home_picks, c.spilled, c.cross_routes, c.cross_psi_miss, c.failures,
+            c.storm_invalidations,
+        );
     }
 }
 

@@ -6,6 +6,7 @@
 
 pub mod slo;
 
+use crate::relay::cell::CellReport;
 use crate::relay::flight::{FlightRecorder, StageBreakdown};
 use crate::relay::hbm::HbmStats;
 use crate::relay::hierarchy::HierarchyStats;
@@ -45,6 +46,10 @@ pub struct RunMetrics {
     /// Busy-time utilization per instance (0..1), and the special subset.
     pub util: Vec<f64>,
     pub special_instances: Vec<usize>,
+
+    /// Per-cell routing/failure report (one entry per coordinator cell;
+    /// single-cell runs report one entry with zero picker activity).
+    pub cells: Vec<CellReport>,
 
     pub sim_duration_us: u64,
     /// Total events the simulator dispatched (0 for live runs) — the
@@ -280,6 +285,7 @@ impl RunMetrics {
             trigger: TriggerStats::default(),
             util: Vec::new(),
             special_instances: Vec::new(),
+            cells: Vec::new(),
             sim_duration_us: 0,
             sim_events: 0,
             offered_qps: 0.0,
@@ -495,6 +501,33 @@ impl RunMetrics {
         }
         out
     }
+
+    /// One line per coordinator cell: picker traffic split plus the
+    /// cross-cell ψ-miss and failure/reload-storm counters.  Empty for
+    /// single-cell runs — there is no second cell to route across, so
+    /// the line would be all zeros.
+    pub fn cells_report(&self) -> Vec<String> {
+        if self.cells.len() < 2 {
+            return Vec::new();
+        }
+        self.cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                format!(
+                    "C{} cell            picks={} home={} spilled={} cross={} cross-psi-miss={} failures={} storm-wipes={}",
+                    i,
+                    c.picks,
+                    c.home_picks,
+                    c.spilled,
+                    c.cross_routes,
+                    c.cross_psi_miss,
+                    c.failures,
+                    c.storm_invalidations,
+                )
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -667,6 +700,22 @@ mod tests {
         assert_eq!(c.mismatches[0].expected, Some(CacheOutcome::HbmHit));
         assert_eq!(c.mismatches[0].got, CacheOutcome::Fallback);
         assert_eq!(c.mismatches[1].expected, None, "unseen id flagged");
+    }
+
+    #[test]
+    fn cells_report_only_for_multi_cell_runs() {
+        let mut m = RunMetrics::new(1.0);
+        m.cells = vec![CellReport { picks: 10, ..Default::default() }];
+        assert!(m.cells_report().is_empty(), "single cell: nothing to report");
+        m.cells = vec![
+            CellReport { picks: 10, home_picks: 9, cross_routes: 1, ..Default::default() },
+            CellReport { picks: 5, cross_psi_miss: 2, storm_invalidations: 3, ..Default::default() },
+        ];
+        let report = m.cells_report();
+        assert_eq!(report.len(), 2);
+        assert!(report[0].contains("picks=10") && report[0].contains("cross=1"), "{}", report[0]);
+        assert!(report[1].contains("cross-psi-miss=2"), "{}", report[1]);
+        assert!(report[1].contains("storm-wipes=3"), "{}", report[1]);
     }
 
     #[test]

@@ -1,0 +1,920 @@
+//! Multi-cell cluster layer: two-level cache-affinity routing.
+//!
+//! Production fleets are organised as *cells* (pods / datacenters), each
+//! with its own coordinator, ψ cache-hierarchy set and affinity router.
+//! [`CellSet`] owns one [`RelayCoordinator`] shard per cell and adds the
+//! level *above* the paper's router: a user→cell pick, after which the
+//! existing in-cell consistent-hash / least-connections route runs
+//! unchanged.
+//!
+//! ## The two-level routing contract
+//!
+//! * **Level 1 (this module)** — pick a cell for the request.  The
+//!   *home* cell is the rendezvous (highest-random-weight) argmax of
+//!   `hash_key(user, salt[cell])` over **all** cells, so a user's home
+//!   is a pure function of the user id and the cell count — stable
+//!   across drain/failure churn.  The pick itself runs over the
+//!   *eligible* (active ∧ not-drained) cells only:
+//!   - [`CellPickerKind::Affinity`] routes to the user's rendezvous
+//!     choice among eligible cells, spilling to the least-loaded
+//!     eligible cell when the home's recent load exceeds
+//!     `spill_ratio ×` the eligible mean (the locality-vs-load knob;
+//!     `inf` = pure locality).  Load is an exponentially-decayed
+//!     arrival count (half-life [`LOAD_HALF_LIFE_US`]).
+//!   - [`CellPickerKind::Spread`] rendezvous-hashes the *request id*
+//!     instead of the user — load-uniform, locality-blind.
+//! * **Level 2 (unchanged)** — the chosen cell's own
+//!   [`Router`](crate::relay::router::Router) routes gateways and
+//!   instances exactly as before.
+//!
+//! Every input to the pick (user id, request id, eligibility masks,
+//! decayed loads keyed by the engine-shared *arrival* clock) evolves
+//! deterministically from the arrival sequence, so the discrete-event
+//! simulator and the serialized reference make bit-identical cell
+//! choices.  Nothing here reads `ShardedMap` iteration order or any
+//! other engine-dependent state.  With `cells == 1` the pick
+//! short-circuits to cell 0 and touches no picker state at all —
+//! structurally identical to the pre-cell coordinator.
+//!
+//! ## Adding a cell-picker policy
+//!
+//! Add a [`CellPickerKind`] variant, its `parse`/`label` arms, and one
+//! match arm in `CellSet::pick` that maps `(user, rid, eligible mask,
+//! loads)` to a cell index.  Keep it a pure function of those inputs —
+//! that is the whole determinism contract — and extend
+//! `picker_is_deterministic` in this module's tests.
+//!
+//! ## Scenario scripts
+//!
+//! [`CellScenario`] compiles to a fixed event list at construction
+//! (fractions of the run duration) and is applied lazily on the arrival
+//! path, so failure / drain / elasticity churn is driven through the
+//! shared decision plane and stays engine-identical:
+//!
+//! * `failure` — at 40% of the run, cell 0's first special instance
+//!   fails: settled ψ lineages on it are wiped lazily (reload storm),
+//!   in-flight lineages survive (see
+//!   [`RelayCoordinator::fail_instance`]).
+//! * `drain` — cell 1 (cell 0 when single-cell) drains at 30% and
+//!   returns at 70%: no new picks land on it; in-flight work completes.
+//! * `elastic` — the last cell starts deactivated, scales up at 30%
+//!   (diurnal peak) and back down at 80%.
+
+use anyhow::{bail, Result};
+
+use crate::relay::coordinator::{Completion, RelayCoordinator, ReqId};
+use crate::relay::flight::FlightRecorder;
+use crate::relay::pipeline::CacheOutcome;
+use crate::relay::router::hash_key;
+use crate::relay::trigger::Estimator;
+
+/// Half-life of the picker's exponentially-decayed per-cell arrival
+/// load (µs).  One second: long enough to smooth a microbatch window,
+/// short enough to track a diurnal ramp.
+pub const LOAD_HALF_LIFE_US: u64 = 1_000_000;
+
+/// Salt namespace for the per-cell rendezvous hashes.
+const CELL_SALT: u64 = 0xCE11_5A17;
+
+/// Level-1 routing policy: how a request picks its cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellPickerKind {
+    /// Cache-locality-aware: rendezvous-hash the *user* so producer and
+    /// consumer meet in one cell, spilling off an overloaded home.
+    Affinity,
+    /// Load-uniform strawman: rendezvous-hash the *request id* — every
+    /// cell sees every user, so cross-cell ψ misses are the norm.
+    Spread,
+}
+
+impl CellPickerKind {
+    pub fn parse(s: &str) -> Result<CellPickerKind> {
+        match s {
+            "affinity" => Ok(CellPickerKind::Affinity),
+            "spread" => Ok(CellPickerKind::Spread),
+            other => bail!("unknown cell picker {other:?} (expected affinity|spread)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CellPickerKind::Affinity => "affinity",
+            CellPickerKind::Spread => "spread",
+        }
+    }
+}
+
+/// Built-in cluster-churn scripts (fractions of the run duration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellScenario {
+    None,
+    Failure,
+    Drain,
+    Elastic,
+}
+
+impl CellScenario {
+    pub const NAMES: [&'static str; 4] = ["none", "failure", "drain", "elastic"];
+
+    pub fn parse(s: &str) -> Result<CellScenario> {
+        match s {
+            "none" => Ok(CellScenario::None),
+            "failure" => Ok(CellScenario::Failure),
+            "drain" => Ok(CellScenario::Drain),
+            "elastic" => Ok(CellScenario::Elastic),
+            other => bail!(
+                "unknown cell scenario {other:?} (expected none|failure|drain|elastic)"
+            ),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CellScenario::None => "none",
+            CellScenario::Failure => "failure",
+            CellScenario::Drain => "drain",
+            CellScenario::Elastic => "elastic",
+        }
+    }
+
+    /// Compile the script against a concrete cell count and duration.
+    /// `fail_instance` is the instance the failure scenario kills (the
+    /// first special of cell 0, resolved by [`CellSet::new`]).
+    fn events(self, cells: usize, duration_us: u64, fail_instance: usize) -> Vec<CellEvent> {
+        let at = |frac_pct: u64| duration_us / 100 * frac_pct;
+        match self {
+            CellScenario::None => Vec::new(),
+            CellScenario::Failure => vec![CellEvent {
+                at_us: at(40),
+                action: CellAction::FailInstance { cell: 0, instance: fail_instance },
+            }],
+            CellScenario::Drain => {
+                let target = if cells > 1 { 1 } else { 0 };
+                vec![
+                    CellEvent { at_us: at(30), action: CellAction::Drain(target) },
+                    CellEvent { at_us: at(70), action: CellAction::Undrain(target) },
+                ]
+            }
+            CellScenario::Elastic => {
+                if cells < 2 {
+                    return Vec::new(); // nothing to scale
+                }
+                let last = cells - 1;
+                vec![
+                    CellEvent { at_us: 0, action: CellAction::Deactivate(last) },
+                    CellEvent { at_us: at(30), action: CellAction::Activate(last) },
+                    CellEvent { at_us: at(80), action: CellAction::Deactivate(last) },
+                ]
+            }
+        }
+    }
+}
+
+/// One scripted churn step, applied on the arrival path at `at_us`
+/// (engine-shared arrival clock ⇒ engine-identical application point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellEvent {
+    pub at_us: u64,
+    pub action: CellAction,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellAction {
+    /// An instance inside a cell dies: its settled ψ lineages are lost.
+    FailInstance { cell: usize, instance: usize },
+    /// Stop routing new work to a cell; in-flight work completes.
+    Drain(usize),
+    Undrain(usize),
+    /// Elasticity: remove / return a whole cell's capacity.
+    Deactivate(usize),
+    Activate(usize),
+}
+
+/// Cluster-shape configuration for a [`CellSet`].
+#[derive(Debug, Clone)]
+pub struct CellConfig {
+    /// Number of cells (1–64; 1 reproduces the pre-cell coordinator).
+    pub cells: usize,
+    pub picker: CellPickerKind,
+    /// Locality-vs-load knob for the affinity picker: spill off the
+    /// home cell when its decayed load exceeds `spill_ratio ×` the mean
+    /// eligible load.  `f64::INFINITY` = never spill (pure locality).
+    pub spill_ratio: f64,
+    pub scenario: CellScenario,
+}
+
+impl Default for CellConfig {
+    fn default() -> CellConfig {
+        CellConfig {
+            cells: 1,
+            picker: CellPickerKind::Affinity,
+            spill_ratio: 2.0,
+            scenario: CellScenario::None,
+        }
+    }
+}
+
+/// A request handle scoped to the cell that owns its coordinator slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellReq {
+    pub cell: usize,
+    pub id: ReqId,
+}
+
+/// Per-cell picker counters (see [`CellReport`] for the merged view).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CellStats {
+    /// Arrivals this cell served.
+    pub picks: u64,
+    /// Arrivals whose all-cells rendezvous home was this cell.
+    pub home_picks: u64,
+    /// Picks that landed here via the affinity load-spill override.
+    pub spilled: u64,
+    /// Picks served here for a user homed elsewhere (locality lost).
+    pub cross_routes: u64,
+    /// Cross-routed *long* requests that paid for it — the ψ produced
+    /// in the user's home cell was unreachable, so ranking ran
+    /// `FullInference` / `Fallback` here.
+    pub cross_psi_miss: u64,
+}
+
+/// One row of the `cells` metrics report: picker counters plus the
+/// cell coordinator's failure-plane counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CellReport {
+    pub picks: u64,
+    pub home_picks: u64,
+    pub spilled: u64,
+    pub cross_routes: u64,
+    pub cross_psi_miss: u64,
+    /// Instances failed in this cell (scenario injection).
+    pub failures: u64,
+    /// Settled ψ lineages wiped by failure enforcement (reload storm).
+    pub storm_invalidations: u64,
+}
+
+struct Pick {
+    cell: usize,
+    /// All-cells rendezvous home (churn-independent).
+    home: usize,
+    /// The affinity picker overrode an overloaded home.
+    spilled: bool,
+}
+
+/// N coordinator shards behind one two-level router (module doc).
+pub struct CellSet<T> {
+    cfg: CellConfig,
+    cells: Vec<RelayCoordinator<T>>,
+    /// Per-cell rendezvous salts (pure function of the cell index).
+    salts: Vec<u64>,
+    /// Elasticity / drain eligibility bitmasks (cells ≤ 64).
+    active: u64,
+    drained: u64,
+    /// Exponentially-decayed arrival counts, last decayed at `load_at`.
+    loads: Vec<f64>,
+    load_at: u64,
+    /// Scenario script, sorted by `at_us`; `next_event` is the cursor.
+    events: Vec<CellEvent>,
+    next_event: usize,
+    stats: Vec<CellStats>,
+    /// Cross-route flag per live coordinator slot, per cell (slots are
+    /// recycled, so these stay bounded by live concurrency).
+    cross: Vec<Vec<bool>>,
+    /// Dynamically promoted specials, insertion-ordered `(cell,
+    /// instance)`.  Cell-scoped on purpose: instance indices repeat
+    /// across cells, so a per-instance ledger would conflate them.
+    promoted: Vec<(usize, usize)>,
+}
+
+fn all_mask(n: usize) -> u64 {
+    if n >= 64 {
+        !0
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+impl<T: Clone + Default> CellSet<T> {
+    /// Wrap per-cell coordinators (built by the engine, one config
+    /// each) into a cluster.  `duration_us` anchors the scenario
+    /// script's event times.
+    pub fn new(
+        cfg: CellConfig,
+        cells: Vec<RelayCoordinator<T>>,
+        duration_us: u64,
+    ) -> Result<CellSet<T>> {
+        if cfg.cells == 0 || cfg.cells > 64 {
+            bail!("cells: need 1..=64 cells (got {})", cfg.cells);
+        }
+        if cells.len() != cfg.cells {
+            bail!("cells: {} coordinators for --cells {}", cells.len(), cfg.cells);
+        }
+        if !(cfg.spill_ratio > 0.0) {
+            bail!("cells: --cell-spill must be > 0 (got {})", cfg.spill_ratio);
+        }
+        let fail_instance = cells[0].special_instances().first().copied().unwrap_or(0);
+        let mut events = cfg.scenario.events(cfg.cells, duration_us, fail_instance);
+        events.sort_by_key(|e| e.at_us);
+        let n = cfg.cells;
+        Ok(CellSet {
+            cells,
+            salts: (0..n as u64).map(|c| hash_key(c, CELL_SALT)).collect(),
+            active: all_mask(n),
+            drained: 0,
+            loads: vec![0.0; n],
+            load_at: 0,
+            events,
+            next_event: 0,
+            stats: vec![CellStats::default(); n],
+            cross: vec![Vec::new(); n],
+            promoted: Vec::new(),
+            cfg,
+        })
+    }
+
+    // ---- introspection -----------------------------------------------------
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn config(&self) -> &CellConfig {
+        &self.cfg
+    }
+
+    pub fn coord(&self, cell: usize) -> &RelayCoordinator<T> {
+        &self.cells[cell]
+    }
+
+    pub fn coord_mut(&mut self, cell: usize) -> &mut RelayCoordinator<T> {
+        &mut self.cells[cell]
+    }
+
+    pub fn is_drained(&self, cell: usize) -> bool {
+        self.drained >> cell & 1 == 1
+    }
+
+    pub fn is_active(&self, cell: usize) -> bool {
+        self.active >> cell & 1 == 1
+    }
+
+    pub fn cell_stats(&self) -> &[CellStats] {
+        &self.stats
+    }
+
+    /// Per-cell report rows: picker counters + failure-plane counters.
+    pub fn reports(&self) -> Vec<CellReport> {
+        self.stats
+            .iter()
+            .zip(&self.cells)
+            .map(|(s, c)| {
+                let f = c.fail_stats();
+                CellReport {
+                    picks: s.picks,
+                    home_picks: s.home_picks,
+                    spilled: s.spilled,
+                    cross_routes: s.cross_routes,
+                    cross_psi_miss: s.cross_psi_miss,
+                    failures: f.failures,
+                    storm_invalidations: f.storm_invalidations,
+                }
+            })
+            .collect()
+    }
+
+    /// `(cross-cell routes, cross-cell ψ misses)` summed over cells.
+    pub fn cross_totals(&self) -> (u64, u64) {
+        self.stats
+            .iter()
+            .fold((0, 0), |(r, m), s| (r + s.cross_routes, m + s.cross_psi_miss))
+    }
+
+    /// Insertion-ordered promoted-special ledger (tests / drain audit).
+    pub fn promoted_ledger(&self) -> &[(usize, usize)] {
+        &self.promoted
+    }
+
+    // ---- churn API ---------------------------------------------------------
+
+    /// Kill an instance inside a cell (see
+    /// [`RelayCoordinator::fail_instance`] for the lazy-wipe contract).
+    pub fn fail_instance(&mut self, at_us: u64, cell: usize, instance: usize) {
+        self.cells[cell].fail_instance(at_us, instance);
+    }
+
+    /// Drain a cell: no new picks land on it (in-flight work completes)
+    /// and every special *this layer* promoted into it is demoted in
+    /// promotion order.  Cell-scoped ledger removal on purpose — a
+    /// naive per-instance `retain` would also strip same-numbered
+    /// instances promoted in *other* cells, orphaning their ledger
+    /// entries (pinned by `drain_demotes_only_its_own_cells_specials`).
+    pub fn drain_cell(&mut self, cell: usize) {
+        self.drained |= 1 << cell;
+        let mut i = 0;
+        while i < self.promoted.len() {
+            if self.promoted[i].0 == cell {
+                let (_, inst) = self.promoted.remove(i);
+                self.cells[cell].demote_special(inst);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    pub fn undrain_cell(&mut self, cell: usize) {
+        self.drained &= !(1 << cell);
+    }
+
+    /// Elasticity: remove / return a whole cell's capacity.
+    pub fn deactivate_cell(&mut self, cell: usize) {
+        self.active &= !(1 << cell);
+    }
+
+    pub fn activate_cell(&mut self, cell: usize) {
+        self.active |= 1 << cell;
+    }
+
+    /// Promote an instance into a cell's special pool, recording it in
+    /// the drain ledger.  Mirrors
+    /// [`RelayCoordinator::promote_special`]'s density-cap semantics.
+    pub fn promote_special(&mut self, cell: usize, instance: usize, est: Estimator) -> bool {
+        if !self.cells[cell].promote_special(instance, est) {
+            return false;
+        }
+        if !self.promoted.contains(&(cell, instance)) {
+            self.promoted.push((cell, instance));
+        }
+        true
+    }
+
+    /// Demote an instance from a cell's special pool; removes exactly
+    /// this cell's ledger entry.
+    pub fn demote_special(&mut self, cell: usize, instance: usize) -> bool {
+        if let Some(pos) = self.promoted.iter().position(|&e| e == (cell, instance)) {
+            self.promoted.remove(pos);
+        }
+        self.cells[cell].demote_special(instance)
+    }
+
+    // ---- routing -----------------------------------------------------------
+
+    fn apply_events(&mut self, now: u64) {
+        while self.next_event < self.events.len() && self.events[self.next_event].at_us <= now {
+            let ev = self.events[self.next_event];
+            self.next_event += 1;
+            match ev.action {
+                CellAction::FailInstance { cell, instance } => {
+                    // Anchored at the scripted time, not the arrival
+                    // that noticed it: enforcement compares lineage
+                    // stamps against the failure epoch.
+                    self.cells[cell].fail_instance(ev.at_us, instance);
+                }
+                CellAction::Drain(c) => self.drain_cell(c),
+                CellAction::Undrain(c) => self.undrain_cell(c),
+                CellAction::Deactivate(c) => self.deactivate_cell(c),
+                CellAction::Activate(c) => self.activate_cell(c),
+            }
+        }
+    }
+
+    /// Rendezvous (highest-random-weight) pick over the masked cells;
+    /// ties (never in practice) break to the lowest index.
+    fn rendezvous(key: u64, salts: &[u64], mask: u64) -> usize {
+        let mut best = 0usize;
+        let mut best_h = 0u64;
+        let mut seen = false;
+        for (c, &salt) in salts.iter().enumerate() {
+            if mask >> c & 1 == 0 {
+                continue;
+            }
+            let h = hash_key(key, salt);
+            if !seen || h > best_h {
+                best = c;
+                best_h = h;
+                seen = true;
+            }
+        }
+        debug_assert!(seen, "rendezvous over empty mask");
+        best
+    }
+
+    fn pick(&mut self, now: u64, user: u64, rid: u64) -> Pick {
+        let n = self.cells.len();
+        if n == 1 {
+            // Structural identity with the pre-cell coordinator: no
+            // picker state is read or written.
+            return Pick { cell: 0, home: 0, spilled: false };
+        }
+        let dt = now.saturating_sub(self.load_at);
+        if dt > 0 {
+            let decay = 0.5f64.powf(dt as f64 / LOAD_HALF_LIFE_US as f64);
+            for l in &mut self.loads {
+                *l *= decay;
+            }
+            self.load_at = now;
+        }
+        let home = Self::rendezvous(user, &self.salts, all_mask(n));
+        let mut eligible = self.active & !self.drained;
+        if eligible == 0 {
+            // A fully drained/deactivated cluster still serves: fall
+            // back to every cell rather than dropping traffic.
+            eligible = all_mask(n);
+        }
+        let (cell, spilled) = match self.cfg.picker {
+            CellPickerKind::Spread => (Self::rendezvous(rid, &self.salts, eligible), false),
+            CellPickerKind::Affinity => {
+                let target = Self::rendezvous(user, &self.salts, eligible);
+                let mut spill = None;
+                if self.cfg.spill_ratio.is_finite() {
+                    let mut sum = 0.0;
+                    let mut cnt = 0u32;
+                    for c in 0..n {
+                        if eligible >> c & 1 == 1 {
+                            sum += self.loads[c];
+                            cnt += 1;
+                        }
+                    }
+                    if self.loads[target] > self.cfg.spill_ratio * (sum / cnt as f64) {
+                        let mut best = target;
+                        let mut best_l = f64::INFINITY;
+                        for c in 0..n {
+                            if eligible >> c & 1 == 1 && self.loads[c] < best_l {
+                                best_l = self.loads[c];
+                                best = c;
+                            }
+                        }
+                        if best != target {
+                            spill = Some(best);
+                        }
+                    }
+                }
+                match spill {
+                    Some(c) => (c, true),
+                    None => (target, false),
+                }
+            }
+        };
+        self.loads[cell] += 1.0;
+        Pick { cell, home, spilled }
+    }
+
+    // ---- event API (the wrapped subset) ------------------------------------
+
+    /// Level-1 route + delegate to the chosen cell's coordinator.
+    /// Every later event goes straight to `coord_mut(req.cell)` with
+    /// `req.id` — only arrival and completion need the cell layer.
+    pub fn on_arrival(
+        &mut self,
+        now: u64,
+        rid: u64,
+        user: u64,
+        prefix_len: usize,
+        candidates: &[u64],
+    ) -> (CellReq, bool) {
+        self.apply_events(now);
+        let pick = self.pick(now, user, rid);
+        let (id, relay) = self.cells[pick.cell].on_arrival(now, rid, user, prefix_len, candidates);
+        if self.cells.len() > 1 {
+            let cross = pick.cell != pick.home;
+            self.cells[pick.cell].note_cell_routed(now, id, pick.cell, pick.home, cross);
+            let s = &mut self.stats[pick.cell];
+            s.picks += 1;
+            if pick.spilled {
+                s.spilled += 1;
+            }
+            if cross {
+                s.cross_routes += 1;
+            }
+            self.stats[pick.home].home_picks += 1;
+            let flags = &mut self.cross[pick.cell];
+            let slot = id.index();
+            if slot >= flags.len() {
+                flags.resize(slot + 1, false);
+            }
+            flags[slot] = cross;
+        }
+        (CellReq { cell: pick.cell, id }, relay)
+    }
+
+    /// Completion wrapper: counts the cross-cell ψ miss — a long
+    /// request served away from its home cell whose ranking ran
+    /// without a usable ψ (`FullInference` / `Fallback`).
+    pub fn on_rank_done(&mut self, now: u64, req: CellReq, kv_bytes: usize) -> Completion {
+        let done = self.cells[req.cell].on_rank_done(now, req.id, kv_bytes);
+        if self.cells.len() > 1 {
+            let slot = req.id.index();
+            let flags = &mut self.cross[req.cell];
+            let cross = slot < flags.len() && std::mem::replace(&mut flags[slot], false);
+            if cross
+                && done.is_long
+                && matches!(done.outcome, CacheOutcome::FullInference | CacheOutcome::Fallback)
+            {
+                self.stats[req.cell].cross_psi_miss += 1;
+            }
+        }
+        done
+    }
+
+    /// Detach and merge the per-cell flight recorders.  Single-cell
+    /// clusters hand back cell 0's recorder untouched (span-identical
+    /// to the pre-cell coordinator); multi-cell clusters re-emit every
+    /// cell's spans into one recorder in cell-index order.
+    pub fn take_flight(&mut self) -> Option<FlightRecorder> {
+        if self.cells.len() == 1 {
+            return self.cells[0].take_flight();
+        }
+        let cap = self.cells[0].config().trace_spans;
+        if cap == 0 {
+            return None;
+        }
+        let mut merged = FlightRecorder::new(cap.saturating_mul(self.cells.len()));
+        for cell in &mut self.cells {
+            if let Some(fl) = cell.take_flight() {
+                merged.absorb(&fl);
+            }
+        }
+        Some(merged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::baseline::Mode;
+    use crate::relay::coordinator::CoordinatorConfig;
+    use crate::relay::router::{BalancePolicy, RouterConfig};
+    use crate::relay::segment::SegmentConfig;
+    use crate::relay::tier::{DramPolicy, EvictPolicy, TierConfig};
+    use crate::relay::trigger::{BehaviorMeta, TriggerConfig};
+
+    fn coord_config(trace_spans: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            mode: Mode::RelayGr { dram: DramPolicy::Disabled },
+            router: RouterConfig {
+                n_instances: 4,
+                servers: 2,
+                r2: 0.5,
+                max_special_per_server: 1,
+                gateways: 2,
+                vnodes: 16,
+                normal_policy: BalancePolicy::LeastConnections,
+            },
+            trigger: TriggerConfig::paper_example(),
+            tiers: vec![TierConfig::new(1 << 30, EvictPolicy::Lru)],
+            long_threshold: 2048,
+            t_life_us: 300_000,
+            max_reload_concurrency: 2,
+            hbm_bytes: 1 << 30,
+            dim: 256,
+            kv_bytes: Box::new(|_| 32 << 20),
+            segment: SegmentConfig::disabled(),
+            batch_window_us: 0,
+            batch_max: 32,
+            trace_spans,
+        }
+    }
+
+    fn cell_set(cfg: CellConfig, duration_us: u64) -> CellSet<u32> {
+        cell_set_traced(cfg, duration_us, 0)
+    }
+
+    fn cell_set_traced(cfg: CellConfig, duration_us: u64, spans: usize) -> CellSet<u32> {
+        let coords = (0..cfg.cells)
+            .map(|_| {
+                RelayCoordinator::new(coord_config(spans), |_| {
+                    Box::new(|_: &BehaviorMeta| 1e9)
+                })
+                .unwrap()
+            })
+            .collect();
+        CellSet::new(cfg, coords, duration_us).unwrap()
+    }
+
+    /// Route an arrival and immediately retire it (picker-level tests
+    /// don't need the rank pipeline).
+    fn route_one(set: &mut CellSet<u32>, now: u64, rid: u64, user: u64) -> usize {
+        let (req, _) = set.on_arrival(now, rid, user, 1024, &[]);
+        set.coord_mut(req.cell).on_stage_done(now, req.id, crate::relay::Stage::Retrieval);
+        set.coord_mut(req.cell).on_stage_done(now, req.id, crate::relay::Stage::Preproc);
+        let _ = set.coord_mut(req.cell).on_rank_start(now, req.id);
+        let _ = set.coord_mut(req.cell).rank_compute(now, req.id);
+        set.on_rank_done(now, req, 32 << 20);
+        req.cell
+    }
+
+    #[test]
+    fn single_cell_short_circuits_all_picker_state() {
+        let mut set = cell_set(CellConfig::default(), 1_000_000);
+        for i in 0..32u64 {
+            let cell = route_one(&mut set, i * 1000, i, i % 5);
+            assert_eq!(cell, 0);
+        }
+        // No picker state was touched: stats stay zero and the load
+        // clock never advanced — the structural PR-8 identity.
+        assert_eq!(set.cell_stats()[0], CellStats::default());
+        assert_eq!(set.load_at, 0);
+        assert_eq!(set.cross_totals(), (0, 0));
+    }
+
+    #[test]
+    fn affinity_is_user_stable_and_covers_cells() {
+        // Pure locality (spill off): the pick must be a function of the
+        // user alone while eligibility is stable.
+        let cfg = CellConfig { cells: 4, spill_ratio: f64::INFINITY, ..CellConfig::default() };
+        let mut set = cell_set(cfg, 10_000_000);
+        let mut homes = std::collections::HashMap::new();
+        let mut seen = [false; 4];
+        for i in 0..400u64 {
+            let user = i % 100;
+            // Arrivals spread out so the load spill never engages.
+            let cell = route_one(&mut set, i * 100_000, i, user);
+            seen[cell] = true;
+            // A user's cell never changes while eligibility is stable.
+            assert_eq!(*homes.entry(user).or_insert(cell), cell, "user {user}");
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 3, "rendezvous covers cells: {seen:?}");
+        let total: u64 = set.cell_stats().iter().map(|s| s.picks).sum();
+        assert_eq!(total, 400);
+        // Stable eligibility ⇒ the eligible rendezvous IS the all-cells
+        // home: nothing cross-routes.
+        assert_eq!(set.cross_totals(), (0, 0));
+    }
+
+    /// The determinism property the cross-engine contract rests on: the
+    /// pick is a pure function of the arrival sequence — two identical
+    /// cell sets fed the same `(now, rid, user)` stream make identical
+    /// choices, under every picker and scenario.  (Nothing here may
+    /// ever read `ShardedMap` iteration order; the picker state is
+    /// plain index-ordered vectors and bitmasks.)
+    #[test]
+    fn picker_is_deterministic() {
+        for picker in [CellPickerKind::Affinity, CellPickerKind::Spread] {
+            for scenario in
+                [CellScenario::None, CellScenario::Failure, CellScenario::Drain, CellScenario::Elastic]
+            {
+                let cfg = CellConfig { cells: 4, picker, spill_ratio: 1.2, scenario };
+                let duration = 2_000_000;
+                let mut a = cell_set(cfg.clone(), duration);
+                let mut b = cell_set(cfg, duration);
+                for i in 0..600u64 {
+                    // Bursty arrivals (10 per tick) so the load spill
+                    // path engages too.
+                    let now = i / 10 * 33_000;
+                    let user = hash_key(i, 17) % 50;
+                    let ca = route_one(&mut a, now, i, user);
+                    let cb = route_one(&mut b, now, i, user);
+                    assert_eq!(ca, cb, "{picker:?}/{scenario:?} diverged at arrival {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drain_diverts_and_undrain_restores() {
+        let cfg = CellConfig { cells: 2, scenario: CellScenario::Drain, ..CellConfig::default() };
+        let duration = 1_000_000;
+        let mut set = cell_set(cfg, duration);
+        // Find a user homed on cell 1 (the drain target).
+        let user = (0..64)
+            .find(|&u| {
+                CellSet::<u32>::rendezvous(u, &set.salts, 0b11) == 1
+            })
+            .expect("some user homes on cell 1");
+        assert_eq!(route_one(&mut set, 0, 0, user), 1, "before the drain");
+        // 30%..70% of the run: cell 1 is drained — the pick diverts to
+        // cell 0 and counts as a cross-route.
+        assert_eq!(route_one(&mut set, 400_000, 1, user), 0, "during the drain");
+        assert!(set.is_drained(1));
+        assert_eq!(set.cell_stats()[0].cross_routes, 1);
+        // After 70%: restored.
+        assert_eq!(route_one(&mut set, 800_000, 2, user), 1, "after the undrain");
+        assert!(!set.is_drained(1));
+    }
+
+    #[test]
+    fn elastic_scenario_toggles_last_cell() {
+        let cfg = CellConfig { cells: 3, scenario: CellScenario::Elastic, ..CellConfig::default() };
+        let mut set = cell_set(cfg, 1_000_000);
+        route_one(&mut set, 1, 0, 1);
+        assert!(!set.is_active(2), "scaled down from t=0");
+        route_one(&mut set, 400_000, 1, 1);
+        assert!(set.is_active(2), "scaled up at 30%");
+        route_one(&mut set, 900_000, 2, 1);
+        assert!(!set.is_active(2), "scaled back down at 80%");
+    }
+
+    #[test]
+    fn failure_scenario_reaches_cell_zero_coordinator() {
+        let cfg = CellConfig { cells: 2, scenario: CellScenario::Failure, ..CellConfig::default() };
+        let mut set = cell_set(cfg, 1_000_000);
+        route_one(&mut set, 0, 0, 1);
+        assert_eq!(set.coord(0).fail_stats().failures, 0);
+        route_one(&mut set, 500_000, 1, 1);
+        assert_eq!(set.coord(0).fail_stats().failures, 1, "fired at 40%");
+        assert_eq!(set.coord(1).fail_stats().failures, 0, "scoped to cell 0");
+    }
+
+    #[test]
+    fn spread_picker_ignores_user_affinity() {
+        let cfg = CellConfig { cells: 4, picker: CellPickerKind::Spread, ..CellConfig::default() };
+        let mut set = cell_set(cfg, 10_000_000);
+        let mut cells = std::collections::HashSet::new();
+        for i in 0..64u64 {
+            cells.insert(route_one(&mut set, i * 1000, i, 7)); // one hot user
+        }
+        assert!(cells.len() > 1, "one user spreads across cells");
+        let (cross, _) = set.cross_totals();
+        assert!(cross > 0, "spread loses locality by construction");
+    }
+
+    #[test]
+    fn affinity_spills_off_overloaded_home_and_tracks_load() {
+        let cfg = CellConfig { cells: 2, spill_ratio: 1.5, ..CellConfig::default() };
+        let mut set = cell_set(cfg, 10_000_000);
+        let home = CellSet::<u32>::rendezvous(7, &set.salts, 0b11);
+        // Hammer one user at one instant: its home's decayed load blows
+        // past 1.5× the mean and picks spill to the idle cell.
+        let mut spilled_to = None;
+        for i in 0..32u64 {
+            let cell = route_one(&mut set, 1000, i, 7);
+            if cell != home {
+                spilled_to = Some(cell);
+            }
+        }
+        let other = 1 - home;
+        assert_eq!(spilled_to, Some(other), "spill lands on the idle cell");
+        assert!(set.cell_stats()[other].spilled > 0);
+        assert!(set.cell_stats()[other].cross_routes > 0, "spill is a locality loss");
+    }
+
+    /// Satellite regression: draining a cell demotes only *its own*
+    /// promoted specials.  A naive per-instance split of the ledger
+    /// (`retain(|&(_, i)| i != inst)`) strips the same instance index
+    /// promoted in other cells — this test fails on that bug.
+    #[test]
+    fn drain_demotes_only_its_own_cells_specials() {
+        let mut set = cell_set(CellConfig { cells: 2, ..CellConfig::default() }, 1_000_000);
+        // Instance 1 shares its index across both cells (specials sit
+        // on instance 0 under the 4-inst/2-server/r2=0.5 fixture, so 1
+        // is promotable in each cell).
+        assert!(set.promote_special(0, 1, Box::new(|_: &BehaviorMeta| 1e9)));
+        assert!(set.promote_special(1, 1, Box::new(|_: &BehaviorMeta| 1e9)));
+        assert_eq!(set.promoted_ledger(), &[(0, 1), (1, 1)]);
+        set.drain_cell(0);
+        // Cell 0's promotion is gone; cell 1's survives in the ledger
+        // AND on its router.
+        assert_eq!(set.promoted_ledger(), &[(1, 1)]);
+        assert!(!set.coord(0).special_instances().contains(&1), "cell 0 demoted");
+        assert!(set.coord(1).special_instances().contains(&1), "cell 1 untouched");
+        // Demoting cell 1's is cell-scoped too.
+        assert!(set.demote_special(1, 1));
+        assert!(set.promoted_ledger().is_empty());
+    }
+
+    #[test]
+    fn take_flight_merges_cells_in_index_order() {
+        let cfg = CellConfig { cells: 2, picker: CellPickerKind::Spread, ..CellConfig::default() };
+        let mut set = cell_set_traced(cfg, 10_000_000, 256);
+        let mut cells = std::collections::HashSet::new();
+        for i in 0..16u64 {
+            cells.insert(route_one(&mut set, i * 1000, i, 7));
+        }
+        assert_eq!(cells.len(), 2, "both cells served traffic");
+        let fl = set.take_flight().expect("tracing was on");
+        let spans = fl.spans_sorted();
+        assert!(!spans.is_empty());
+        let cell_spans = spans
+            .iter()
+            .filter(|s| matches!(s.kind, crate::relay::SpanKind::CellRouted | crate::relay::SpanKind::CellFailover))
+            .count();
+        assert_eq!(cell_spans, 16, "one cell-route span per arrival");
+        // Single-cell sets hand the recorder through untouched — and
+        // emit no cell spans at all.
+        let mut one = cell_set_traced(CellConfig::default(), 10_000_000, 256);
+        route_one(&mut one, 0, 0, 7);
+        let fl1 = one.take_flight().expect("tracing was on");
+        assert!(fl1
+            .spans_sorted()
+            .iter()
+            .all(|s| !matches!(s.kind, crate::relay::SpanKind::CellRouted | crate::relay::SpanKind::CellFailover)));
+    }
+
+    #[test]
+    fn config_validation() {
+        let coords: Vec<RelayCoordinator<u32>> = Vec::new();
+        assert!(CellSet::new(CellConfig { cells: 0, ..CellConfig::default() }, coords, 1).is_err());
+        let mk = || {
+            RelayCoordinator::<u32>::new(coord_config(0), |_| Box::new(|_: &BehaviorMeta| 1e9))
+                .unwrap()
+        };
+        assert!(CellSet::new(CellConfig { cells: 2, ..CellConfig::default() }, vec![mk()], 1).is_err());
+        let one = vec![mk()];
+        assert!(
+            CellSet::new(CellConfig { spill_ratio: 0.0, ..CellConfig::default() }, one, 1).is_err()
+        );
+        assert!(CellPickerKind::parse("affinity").is_ok());
+        assert!(CellPickerKind::parse("spred").is_err());
+        assert!(CellScenario::parse("elastic").is_ok());
+        assert!(CellScenario::parse("chaos").is_err());
+    }
+}

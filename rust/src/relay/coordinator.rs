@@ -249,6 +249,23 @@ impl BatchCtl {
     }
 }
 
+/// Per-coordinator failure-injection counters (multi-cell scenarios).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FailStats {
+    /// Instance failures applied ([`RelayCoordinator::fail_instance`]).
+    pub failures: u64,
+    /// Settled ψ lineages lazily wiped after a failure — the reload-storm
+    /// numerator: each wipe forces the user's next touch to re-produce.
+    pub storm_invalidations: u64,
+}
+
+impl FailStats {
+    pub fn merge(&mut self, o: FailStats) {
+        self.failures += o.failures;
+        self.storm_invalidations += o.storm_invalidations;
+    }
+}
+
 /// Per-instance cache-plane state.
 struct InstanceCtl<T> {
     /// The tiered ψ cache: HBM window + lower tiers + promotion flow.
@@ -269,6 +286,17 @@ struct InstanceCtl<T> {
     /// The instance's microbatch former (rank passes grouped per
     /// `--batch-window` / `--batch-max`).
     batch: BatchCtl,
+    /// Failure plane (multi-cell scenarios): the arrival clock at which
+    /// this instance last failed (0 = never failed).  Applied lazily by
+    /// [`RelayCoordinator::enforce_failure`] at the classification
+    /// sites, so both engines observe the wipe at identical
+    /// arrival-derived clocks in identical per-user order.
+    failed_at: u64,
+    /// Per-user lineage stamp: the arrival clock at which the user's
+    /// current settled ψ lineage was created (production begun, or the
+    /// post-failure wipe that reset it).  `stamp >= failed_at` means the
+    /// lineage postdates the failure and survives.
+    psi_stamp: ShardedMap<u64>,
 }
 
 /// Per-request decision state, slab-resident.  The `Vec` fields are
@@ -281,6 +309,10 @@ struct ReqCtl {
     user: u64,
     prefix_len: usize,
     is_long: bool,
+    /// Arrival clock (µs) — the engine-shared timestamp every
+    /// failure-plane comparison keys on (identical in sim and reference,
+    /// unlike the event clocks of later stages).
+    arrival_us: u64,
     admitted: bool,
     pre_instance: Option<usize>,
     rank_instance: usize,
@@ -311,6 +343,7 @@ impl ReqCtl {
         self.user = user;
         self.prefix_len = prefix_len;
         self.is_long = is_long;
+        self.arrival_us = 0;
         self.admitted = false;
         self.pre_instance = None;
         self.rank_instance = usize::MAX;
@@ -332,6 +365,7 @@ impl Default for ReqCtl {
             user: 0,
             prefix_len: 0,
             is_long: false,
+            arrival_us: 0,
             admitted: false,
             pre_instance: None,
             rank_instance: 0,
@@ -367,6 +401,8 @@ pub struct RelayCoordinator<T> {
     router: Router,
     triggers: HashMap<usize, Trigger>,
     instances: Vec<InstanceCtl<T>>,
+    /// Failure-injection counters (multi-cell scenarios).
+    fail: FailStats,
     /// Per-request decision state behind generational [`ReqId`] handles:
     /// dense O(1) access, recycled slots, no per-request allocation.
     requests: Slab<ReqCtl>,
@@ -379,9 +415,15 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// Build the coordinator; `mk_estimator` supplies the latency
     /// estimator for each special instance's trigger.
     pub fn new(
-        cfg: CoordinatorConfig,
+        mut cfg: CoordinatorConfig,
         mut mk_estimator: impl FnMut(usize) -> Estimator,
     ) -> Result<RelayCoordinator<T>> {
+        // The batch window is decision-synchronous latency every admitted
+        // request will spend waiting out the former: fold it into the
+        // trigger config so the adaptive controller's estimate charges it
+        // to admission instead of silently attributing it to compute.
+        // The coordinator's window is the single source of truth.
+        cfg.trigger.batch_window_us = cfg.batch_window_us;
         let router = Router::new(cfg.router.clone())?;
         let mut triggers = HashMap::new();
         for &i in router.special_instances() {
@@ -404,10 +446,20 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 waiting_reload: ShardedMap::new(),
                 origin: ShardedMap::new(),
                 batch: BatchCtl::new(),
+                failed_at: 0,
+                psi_stamp: ShardedMap::new(),
             })
             .collect();
         let flight = (cfg.trace_spans > 0).then(|| FlightRecorder::new(cfg.trace_spans));
-        Ok(RelayCoordinator { cfg, router, triggers, instances, requests: Slab::new(), flight })
+        Ok(RelayCoordinator {
+            cfg,
+            router,
+            triggers,
+            instances,
+            fail: FailStats::default(),
+            requests: Slab::new(),
+            flight,
+        })
     }
 
     // ---- introspection -----------------------------------------------------
@@ -535,6 +587,92 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         self.instances[instance].cache.invalidate(user)
     }
 
+    // ---- failure / churn plane (multi-cell scenarios) ----------------------
+
+    /// Mark `instance` failed at arrival clock `at_us` (fail-restart: the
+    /// process restarts with its ψ/segment caches lost; ring membership
+    /// does not change).  The wipe itself is applied lazily, per user, at
+    /// the classification sites ([`RelayCoordinator::enforce_failure`]) —
+    /// the only clocks both engines share — so a failure is
+    /// decision-bit-identical across sim and serialized reference.
+    pub fn fail_instance(&mut self, at_us: u64, instance: usize) {
+        self.instances[instance].failed_at = at_us.max(1);
+        self.fail.failures += 1;
+    }
+
+    pub fn fail_stats(&self) -> FailStats {
+        self.fail
+    }
+
+    /// Lazily apply an instance failure to one user's ψ state: a request
+    /// arriving at or after the failure clock must not observe settled
+    /// state created before it.  In-flight lineages (HBM `Producing`, or
+    /// a pending reload) survive: their pre-failure waiters already
+    /// settled outcomes in the serialized reference, so wiping them would
+    /// diverge the engines — a post-failure joiner converges to the same
+    /// outcome either way.  Keyed on the request's *arrival* clock, which
+    /// is identical in both engines (later event clocks are not).
+    fn enforce_failure(&mut self, instance: usize, user: u64, arrival: u64) {
+        let ctl = &mut self.instances[instance];
+        if ctl.failed_at == 0 || arrival < ctl.failed_at {
+            return;
+        }
+        if ctl.psi_stamp.get(user).copied().unwrap_or(0) >= ctl.failed_at {
+            return; // lineage created after the failure — survives
+        }
+        // Restamp first so the survivors below are not re-examined on
+        // every touch: an in-flight lineage that outlives the failure is
+        // treated as post-failure from here on.
+        ctl.psi_stamp.insert(user, arrival);
+        if ctl.cache.hbm().state_of(user) == Some(EntryState::Producing)
+            || ctl.cache.inflight_for(user)
+        {
+            return;
+        }
+        let mut wiped = ctl.cache.hbm_mut().evict(user);
+        wiped |= ctl.cache.invalidate(user);
+        ctl.origin.remove(user);
+        if wiped {
+            self.fail.storm_invalidations += 1;
+        }
+    }
+
+    /// Promote `instance` into the special (relay) set, creating its
+    /// trigger if it never had one.  Returns `false` when the router
+    /// refuses (already special, or the per-server density cap).
+    pub fn promote_special(&mut self, instance: usize, est: Estimator) -> bool {
+        if !self.router.add_special(instance) {
+            return false;
+        }
+        self.triggers
+            .entry(instance)
+            .or_insert_with(|| Trigger::new(self.cfg.trigger.clone(), est));
+        true
+    }
+
+    /// Demote `instance` out of the special set.  Its trigger is kept so
+    /// admission slots held by in-flight requests release cleanly; it
+    /// simply receives no new signals once the ring stops routing to it.
+    pub fn demote_special(&mut self, instance: usize) -> bool {
+        self.router.remove_special(instance)
+    }
+
+    /// Flight-recorder hook for the cell layer (observe-only): which
+    /// cell served this request, and whether the pick overrode the
+    /// user's home cell.  Called by `CellSet` right after `on_arrival`.
+    pub fn note_cell_routed(
+        &mut self,
+        now: u64,
+        req: ReqId,
+        cell: usize,
+        home: usize,
+        failover: bool,
+    ) {
+        if let Some(fl) = self.flight.as_mut() {
+            fl.note_cell_route(now, req.index(), cell as u64, home as u64, failover);
+        }
+    }
+
     // ---- event API ---------------------------------------------------------
 
     /// A request entered the pipeline.  `rid` is the workload request id
@@ -558,6 +696,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         let keep_cands = self.cfg.mode.is_relay() && self.cfg.segment.enabled();
         let req = self.requests.insert_with(|st| {
             st.reset(rid, user, prefix_len, is_long);
+            st.arrival_us = now;
             if keep_cands {
                 st.cands.extend_from_slice(candidates);
             }
@@ -571,9 +710,9 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// The trigger side path: metadata risk test, admission control, and
     /// the signal-side pseudo-pre-infer (§3.2/§3.4).
     pub fn on_trigger_check(&mut self, now: u64, req: ReqId) -> SignalAction {
-        let (user, prefix_len) = {
+        let (user, prefix_len, arrival) = {
             let st = self.requests.get(req).expect("trigger check for unknown request");
-            (st.user, st.prefix_len)
+            (st.user, st.prefix_len, st.arrival_us)
         };
         let route = self.router.route_special(user);
         self.router.on_complete(route.instance); // signal, not a held connection
@@ -607,6 +746,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         }
         // The pre-infer signal itself performs the pseudo-pre-infer checks,
         // skipping redundant recomputation when ψ is already local (§3.4).
+        self.enforce_failure(inst, user, arrival);
         let action = self.instances[inst].cache.pseudo_pre_infer(user, now);
         if let Some(fl) = self.flight.as_mut() {
             fl.note_psi(now, req.index(), psi_code(&action), false);
@@ -635,6 +775,9 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 let instance = &mut self.instances[inst];
                 match instance.cache.hbm_mut().begin_produce(user, kv, now, self.cfg.t_life_us) {
                     Ok(()) => {
+                        // New lineage, stamped with the engine-shared
+                        // arrival clock (failure-plane survivorship).
+                        instance.psi_stamp.insert(user, arrival);
                         if let Some(fl) = self.flight.as_mut() {
                             fl.note_produce_begin(now, req.index(), user, inst as u64);
                         }
@@ -699,9 +842,9 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// The ranking request reached its instance: run the pseudo-pre-infer
     /// fronting every ranking request (§3.4) and classify.
     pub fn on_rank_start(&mut self, now: u64, req: ReqId) -> RankAction {
-        let (inst, user, is_long, admitted) = {
+        let (inst, user, is_long, admitted, arrival) = {
             let st = self.requests.get(req).expect("rank start for unknown request");
-            (st.rank_instance, st.user, st.is_long, st.admitted)
+            (st.rank_instance, st.user, st.is_long, st.admitted, st.arrival_us)
         };
         if !(self.cfg.mode.is_relay() && is_long) {
             // Baseline mode or short-sequence request: full inline inference.
@@ -711,6 +854,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             }
             return RankAction::Proceed { cached: false, outcome: CacheOutcome::FullInference };
         }
+        self.enforce_failure(inst, user, arrival);
         let action = self.instances[inst].cache.pseudo_pre_infer(user, now);
         if let Some(fl) = self.flight.as_mut() {
             fl.note_psi(now, req.index(), psi_code(&action), true);

@@ -122,6 +122,12 @@ pub enum SpanKind {
     SpillBegin = 18,
     /// a = 1 accepted / 0 rejected, b = bytes.
     SpillEnd = 19,
+    /// a = chosen cell, b = home (affinity) cell.
+    CellRouted = 20,
+    /// a = chosen cell, b = home (affinity) cell — emitted instead of
+    /// [`SpanKind::CellRouted`] when the picker overrode the user's home
+    /// cell (load spill, drain, failure eligibility).
+    CellFailover = 21,
 }
 
 impl SpanKind {
@@ -148,6 +154,8 @@ impl SpanKind {
             17 => Fallback,
             18 => SpillBegin,
             19 => SpillEnd,
+            20 => CellRouted,
+            21 => CellFailover,
             _ => return None,
         })
     }
@@ -175,6 +183,8 @@ impl SpanKind {
             Fallback => "fallback",
             SpillBegin => "spill-begin",
             SpillEnd => "spill-end",
+            CellRouted => "cell-routed",
+            CellFailover => "cell-failover",
         }
     }
 
@@ -185,7 +195,7 @@ impl SpanKind {
     pub fn stage(self) -> &'static str {
         use SpanKind::*;
         match self {
-            Arrival => "arrival",
+            Arrival | CellRouted | CellFailover => "arrival",
             TriggerDecision | PsiLookup | Route | ProduceBegin | ProduceEnd => "admission",
             RankStart => "rank-queue",
             WaitResolved | ReloadBegin | ReloadEnd | Fallback => "psi-wait",
@@ -501,6 +511,14 @@ impl FlightRecorder {
         self.emit(t, c.rid, SpanKind::RankDone, outcome, wait_us as u64);
     }
 
+    /// Two-level routing: the cell picked for this request at arrival
+    /// (`CellFailover` when the choice overrode the user's home cell).
+    pub fn note_cell_route(&mut self, t: u64, slot: usize, cell: u64, home: u64, failover: bool) {
+        let rid = self.rid_of(slot);
+        let kind = if failover { SpanKind::CellFailover } else { SpanKind::CellRouted };
+        self.emit(t, rid, kind, cell, home);
+    }
+
     pub fn note_fallback(&mut self, t: u64, slot: usize, cause: u64) {
         let rid = self.rid_of(slot);
         self.emit(t, rid, SpanKind::Fallback, cause, 0);
@@ -520,6 +538,32 @@ impl FlightRecorder {
     }
 
     // ---- extraction ------------------------------------------------------
+
+    /// Fold another recorder (a different cell's) into this one: the
+    /// other's retained spans are re-ordinalized in their emission order
+    /// after this recorder's existing spans, and the stage histograms,
+    /// batch counters and drop accounting merge.  Per-request span order
+    /// is preserved because a request lives in exactly one cell; callers
+    /// absorb cells in fixed index order so the merged stream is
+    /// deterministic.
+    pub fn absorb(&mut self, other: &FlightRecorder) {
+        for s in other.spans_sorted() {
+            self.emit(s.t_us, s.rid, s.kind, s.a, s.b);
+        }
+        // `emit` charged only the other's *retained* spans; fold in the
+        // spans its bounded rings had already overwritten.
+        self.emitted += other.dropped;
+        self.dropped += other.dropped;
+        self.breakdown.admission.merge(&other.breakdown.admission);
+        self.breakdown.psi_wait.merge(&other.breakdown.psi_wait);
+        self.breakdown.batch_wait.merge(&other.breakdown.batch_wait);
+        self.breakdown.rank_exec.merge(&other.breakdown.rank_exec);
+        self.breakdown.spill.merge(&other.breakdown.spill);
+        for (c, o) in self.batch_counts.iter_mut().zip(other.batch_counts) {
+            *c += o;
+        }
+        self.last_done_rid = other.last_done_rid.or(self.last_done_rid);
+    }
 
     /// All retained spans in deterministic emission (`ord`) order.
     pub fn spans_sorted(&self) -> Vec<Span> {
@@ -744,6 +788,7 @@ fn describe(s: &Span) -> String {
         Fallback => format!("cause={}", s.a),
         SpillBegin => format!("instance={} bytes={}", inst(s.a), s.b),
         SpillEnd => format!("accepted={} bytes={}", s.a == 1, s.b),
+        CellRouted | CellFailover => format!("cell={} home={}", s.a, s.b),
     }
 }
 
@@ -920,6 +965,55 @@ mod tests {
         for v in [0i64, 1, -1, 2, -2, i64::MAX, i64::MIN, 123_456, -123_456] {
             assert_eq!(unzigzag(zigzag(v)), v, "v={v}");
         }
+    }
+
+    #[test]
+    fn cell_route_spans_round_trip_and_render() {
+        let mut fl = FlightRecorder::new(64);
+        fl.note_arrival(100, 7, 0, 1, 4096);
+        fl.note_cell_route(100, 0, 2, 2, false);
+        fl.note_arrival(200, 8, 1, 9, 4096);
+        fl.note_cell_route(200, 1, 0, 3, true);
+        let spans = fl.spans_sorted();
+        assert_eq!(spans[1].kind, SpanKind::CellRouted);
+        assert_eq!((spans[1].a, spans[1].b), (2, 2));
+        assert_eq!(spans[3].kind, SpanKind::CellFailover);
+        assert_eq!((spans[3].a, spans[3].b), (0, 3));
+        // Tags are append-only past the PR 8 table.
+        assert_eq!(SpanKind::from_u8(20), Some(SpanKind::CellRouted));
+        assert_eq!(SpanKind::from_u8(21), Some(SpanKind::CellFailover));
+        assert_eq!(SpanKind::from_u8(22), None);
+        let path = tmp("cells.rgsp");
+        fl.write_rgsp(&path).unwrap();
+        let back = read_rgsp(&path).unwrap();
+        assert_eq!(back.spans, spans, "new tags survive the sidecar round trip");
+        let tl = timeline(&spans, 8).unwrap();
+        assert!(tl.render().contains("cell-failover"), "{}", tl.render());
+        assert!(tl.render().contains("cell=0 home=3"), "{}", tl.render());
+    }
+
+    #[test]
+    fn absorb_merges_cells_deterministically() {
+        let mut a = FlightRecorder::new(1024);
+        record_one(&mut a, 1, 0, 0);
+        let mut b = FlightRecorder::new(1024);
+        record_one(&mut b, 2, 0, 500);
+        let (ea, eb) = (a.emitted(), b.emitted());
+        let (ca, cb) = (a.batch_counts, b.batch_counts);
+        a.absorb(&b);
+        assert_eq!(a.emitted(), ea + eb);
+        assert_eq!(a.retained(), (ea + eb) as usize, "nothing dropped at this bound");
+        for (i, (x, y)) in ca.iter().zip(cb).enumerate() {
+            assert_eq!(a.batch_counts[i], x + y);
+        }
+        assert_eq!(a.breakdown.admission.count(), 2, "stage histograms merged");
+        let spans = a.spans_sorted();
+        assert!(spans.windows(2).all(|w| w[0].ord < w[1].ord), "ords stay unique");
+        // Both requests' timelines survive the merge intact.
+        assert!(timeline(&spans, 1).is_some());
+        let tl = timeline(&spans, 2).unwrap();
+        let total: u64 = tl.stages.iter().map(|&(_, d)| d).sum();
+        assert_eq!(total, tl.e2e_us(), "absorbed request still telescopes");
     }
 
     #[test]

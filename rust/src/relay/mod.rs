@@ -54,6 +54,7 @@
 //! coordinator and both engines pick it up for free.
 
 pub mod baseline;
+pub mod cell;
 pub mod coordinator;
 pub mod flight;
 pub mod hbm;
@@ -65,9 +66,12 @@ pub mod tier;
 pub mod trigger;
 
 pub use baseline::{Mode, RemotePool};
+pub use cell::{
+    CellConfig, CellPickerKind, CellReport, CellReq, CellScenario, CellSet, CellStats,
+};
 pub use coordinator::{
-    Completion, CoordinatorConfig, QueuedReload, RankAction, RankCompute, RelayCoordinator,
-    ReloadResolution, ReqId, SignalAction, Stage,
+    Completion, CoordinatorConfig, FailStats, QueuedReload, RankAction, RankCompute,
+    RelayCoordinator, ReloadResolution, ReqId, SignalAction, Stage,
 };
 pub use flight::{FlightRecorder, Span, SpanKind, StageBreakdown, Timeline};
 pub use hbm::{EntryState, HbmCache, HbmStats, InsertError, Micros};

@@ -241,6 +241,15 @@ pub struct TriggerConfig {
     pub r2: f64,
     /// N — total ranking instances.
     pub n_instances: usize,
+    /// Decision-synchronous microbatch window, folded in by the
+    /// coordinator from its own `batch_window_us` (the coordinator's
+    /// window is the single source of truth — do not set this by hand).
+    /// Every admitted request spends up to this long waiting out the
+    /// batch former, so the adaptive controller charges it to the
+    /// admission latency estimate instead of silently attributing the
+    /// wait to compute.  The static path is untouched: Eqs. 1–3 have no
+    /// batching term and must keep reproducing the paper exactly.
+    pub batch_window_us: u64,
     /// Closed-loop admission knobs; `AdmissionMode::Static` (the
     /// default) reproduces the original Eqs. 1–3 flow exactly.
     pub admission: AdmissionConfig,
@@ -260,6 +269,7 @@ impl TriggerConfig {
             m_slots: 5,
             r2: 0.1,
             n_instances: 100,
+            batch_window_us: 0,
             admission: AdmissionConfig::default(),
         }
     }
@@ -670,12 +680,18 @@ impl Trigger {
             return Decision::Admit;
         }
         // Closed loop (all signals decision-synchronous; see module doc).
+        // The effective estimate charges the configured microbatch
+        // window to admission: an admitted request cannot start ranking
+        // before the batch former releases it, so an aggressive window
+        // consumes real headroom the controller would otherwise
+        // attribute to compute.
+        let est_eff = est_full_us + self.cfg.batch_window_us as f64;
         self.stats.adapted += 1;
-        self.adapt.est.push(self.cfg.admission.est_window, est_full_us);
+        self.adapt.est.push(self.cfg.admission.est_window, est_eff);
         let (headroom, rate_mult) = self.operating_point();
         self.note_headroom(headroom);
         let decision = 'adapt: {
-            if est_full_us <= headroom * self.cfg.rank_p99_budget_us {
+            if est_eff <= headroom * self.cfg.rank_p99_budget_us {
                 self.stats.not_at_risk += 1;
                 break 'adapt Decision::NotAtRisk;
             }
@@ -759,6 +775,7 @@ pub fn plan_cli(args: &Args) -> Result<()> {
         m_slots: args.get_usize("slots", d.m_slots)?,
         r2: args.get_f64("r2", d.r2)?,
         n_instances: args.get_usize("instances", d.n_instances)?,
+        batch_window_us: d.batch_window_us,
         admission: AdmissionConfig::from_args(args, &d.admission)?,
     };
     let lim = cfg.limits();
@@ -1025,6 +1042,34 @@ mod tests {
         // The window expires with T_life: a new user admits again.
         let later = t.config().t_life_us * 2;
         assert_eq!(t.decide(later, &user_meta(9), kv), Decision::Admit);
+    }
+
+    /// Satellite: the configured microbatch window is decision-
+    /// synchronous latency, so the adaptive controller charges it to the
+    /// admission estimate.  A request estimated just inside the risk
+    /// boundary flips from NotAtRisk to Admit once the window is folded
+    /// in — and the static path (paper Eqs. 1–3) must ignore the window
+    /// entirely.
+    #[test]
+    fn adaptive_estimate_charges_batch_window() {
+        // Initial operating point: headroom 0.8 × 50 ms budget = 40 ms
+        // boundary.  Estimator pinned at 39 ms, 1 ms under the line.
+        let boundary_est: fn() -> Estimator = || Box::new(|_: &BehaviorMeta| 39_000.0);
+        let mut cfg = adaptive_cfg();
+        cfg.q_m = 1e9; // rate never binds — isolate the risk comparison
+        let mut t = Trigger::new(cfg.clone(), boundary_est());
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::NotAtRisk);
+        // A 20 ms window pushes the effective estimate to 59 ms > 40 ms:
+        // the same request is now at risk and admitted to the relay path.
+        cfg.batch_window_us = 20_000;
+        let mut t = Trigger::new(cfg.clone(), boundary_est());
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::Admit);
+        assert_eq!(t.stats().not_at_risk, 0);
+        // Static admission has no batching term: same window, same
+        // estimator, still NotAtRisk (the paper's flow is untouched).
+        cfg.admission = AdmissionConfig::default();
+        let mut t = Trigger::new(cfg, boundary_est());
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::NotAtRisk);
     }
 
     /// The risk margin tightens toward `headroom_min` when the windowed

@@ -45,6 +45,17 @@ pub fn run(args: &Args) -> Result<()> {
             "--batch-max must be >= 1 (use --batch-window 0 to disable batching)"
         ));
     }
+    cfg.cells = args.get_usize("cells", cfg.cells)?;
+    if let Some(p) = args.get("cell-picker") {
+        cfg.cell_picker = crate::relay::cell::CellPickerKind::parse(p)?;
+    }
+    cfg.cell_spill = args.get_f64("cell-spill", cfg.cell_spill)?;
+    if cfg.cell_spill <= 0.0 {
+        return Err(anyhow!(
+            "--cell-spill must be > 0 (use inf for pure locality), got {}",
+            cfg.cell_spill
+        ));
+    }
     cfg.trace_spans = args.get_usize("trace-spans", cfg.trace_spans)?;
     cfg.heartbeat_path = args.get("heartbeat").map(str::to_string);
     cfg.heartbeat_ms = args.get_u64("heartbeat-ms", cfg.heartbeat_ms)?;
@@ -83,11 +94,12 @@ pub fn run(args: &Args) -> Result<()> {
         .collect::<Vec<_>>()
         .join(",");
     println!(
-        "serving {} on {} instance(s) × {} slot(s), mode {}, tiers [{}], scenario {}, \
-         admission {}, qps {}, {}s",
+        "serving {} on {} instance(s) × {} slot(s) in {} cell(s), mode {}, tiers [{}], \
+         scenario {}, admission {}, qps {}, {}s",
         spec.name(),
         cfg.n_instances,
         cfg.m_slots,
+        cfg.cells,
         mode.label(),
         if tier_desc.is_empty() { "hbm-only" } else { &tier_desc },
         wl.scenario.label(),
@@ -134,6 +146,9 @@ pub fn run(args: &Args) -> Result<()> {
         m.mean_util(None) * 100.0
     );
     for line in m.tier_report() {
+        println!("  {line}");
+    }
+    for line in m.cells_report() {
         println!("  {line}");
     }
     if let Some(line) = m.admission_brief() {

@@ -21,6 +21,7 @@ use anyhow::{anyhow, Result};
 use crate::metrics::RunMetrics;
 use crate::model::ModelSpec;
 use crate::relay::baseline::Mode;
+use crate::relay::cell::{CellConfig, CellPickerKind, CellReq, CellScenario, CellSet};
 use crate::relay::coordinator::{
     BatchDecision, CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, ReqId,
     SignalAction, Stage,
@@ -84,6 +85,13 @@ pub struct LiveConfig {
     pub batch_window_us: u64,
     /// Maximum members per batched rank pass (`--batch-max`).
     pub batch_max: usize,
+    /// Coordinator cells (`--cells`; 1 = the single pre-cell pool,
+    /// decision-identical to it).  Must divide `n_instances`.
+    pub cells: usize,
+    /// Level-1 cell picker (`--cell-picker affinity|spread`).
+    pub cell_picker: CellPickerKind,
+    /// Affinity locality-vs-load knob (`--cell-spill`).
+    pub cell_spill: f64,
     /// Flight-recorder span retention (`--trace-spans`; 0 = tracing off).
     /// Observe-only: decisions are bit-identical either way.
     pub trace_spans: usize,
@@ -116,6 +124,9 @@ impl LiveConfig {
             admission: AdmissionConfig::default(),
             batch_window_us: 0,
             batch_max: 32,
+            cells: 1,
+            cell_picker: CellPickerKind::Affinity,
+            cell_spill: 2.0,
             trace_spans: 0,
             heartbeat_path: None,
             heartbeat_ms: 1_000,
@@ -162,6 +173,8 @@ impl LiveConfig {
                 m_slots: self.m_slots,
                 r2: 0.5,
                 n_instances: self.n_instances,
+                // Filled in by the coordinator from `batch_window_us`.
+                batch_window_us: 0,
                 admission: self.admission.clone(),
             },
             tiers: self.tier_stack(),
@@ -183,20 +196,51 @@ impl LiveConfig {
             trace_spans: self.trace_spans,
         }
     }
+
+    /// The cluster-shape half of the cell layer (the live engine runs no
+    /// scripted churn — wall-clock runs have no fixed duration to script
+    /// against; use the sim/reference engines for scenario figures).
+    pub fn cell_config(&self) -> CellConfig {
+        CellConfig {
+            cells: self.cells,
+            picker: self.cell_picker,
+            spill_ratio: self.cell_spill,
+            scenario: CellScenario::None,
+        }
+    }
+
+    /// The coordinator configuration for ONE cell: the deployment shape
+    /// with the instance pool split evenly across cells.  With
+    /// `cells == 1` this IS [`LiveConfig::coordinator_config`].
+    pub fn cell_coordinator_config(&self) -> CoordinatorConfig {
+        let mut per = self.clone();
+        per.n_instances = self.n_instances / self.cells.max(1);
+        per.coordinator_config()
+    }
 }
 
-/// The coordinator shared by the request driver and every worker thread.
+/// The cell set (coordinator shards) shared by the request driver and
+/// every worker thread.
 struct Shared {
-    coord: Mutex<RelayCoordinator<Payload>>,
+    cells: Mutex<CellSet<Payload>>,
+    /// Instances per cell: global instance id = cell × this + local.
+    inst_per_cell: usize,
     cv: Condvar,
     /// Per-instance rank passes held by the coordinator's batch former:
     /// the response channel (and reload accounting) whoever flushes the
     /// batch needs to complete each member.  Entries are stashed in the
-    /// same coordinator critical section as their `offer_rank`, so a
-    /// flush (which closes the batch under the coordinator lock first)
-    /// always finds all of its members here.  Lock order: `coord` →
-    /// `pending`, everywhere.
+    /// same cell-set critical section as their `offer_rank`, so a flush
+    /// (which closes the batch under the cell-set lock first) always
+    /// finds all of its members here.  Lock order: `cells` → `pending`,
+    /// everywhere.
     pending: Mutex<Vec<Vec<PendingRank>>>,
+}
+
+impl Shared {
+    /// `(cell, cell-local instance)` of a global instance id.
+    fn locate(&self, instance: usize) -> (usize, usize) {
+        (instance / self.inst_per_cell, instance % self.inst_per_cell)
+    }
 }
 
 /// A rank pass stashed while its microbatch forms.
@@ -297,19 +341,21 @@ impl LiveInstance {
                 None
             }
         };
-        let mut coord = shared.coord.lock().unwrap();
-        coord.on_psi_ready(now_us(), instance, user, payload);
+        let (cell, li) = shared.locate(instance);
+        let mut cells = shared.cells.lock().unwrap();
+        cells.coord_mut(cell).on_psi_ready(now_us(), li, user, payload);
         shared.cv.notify_all();
     }
 
     /// Perform one DRAM→HBM reload (real H2D), report it, and drain any
     /// queued reloads this completion unblocks.
     fn perform_reload(user: u64, instance: usize, models: &Models, shared: &Shared) {
+        let (cell, li) = shared.locate(instance);
         let mut current = Some(user);
         while let Some(u) = current.take() {
             let host = {
-                let mut coord = shared.coord.lock().unwrap();
-                coord.dram_payload(instance, u)
+                let mut cells = shared.cells.lock().unwrap();
+                cells.coord_mut(cell).dram_payload(li, u)
             };
             let (payload, bytes) = match host {
                 Some((bytes, Payload::Host(data))) => {
@@ -324,16 +370,16 @@ impl LiveInstance {
                 }
                 _ => (None, 0),
             };
-            let mut coord = shared.coord.lock().unwrap();
-            let res = coord.on_reload_done(now_us(), instance, u, payload, bytes);
+            let mut cells = shared.cells.lock().unwrap();
+            let res = cells.coord_mut(cell).on_reload_done(now_us(), li, u, payload, bytes);
             shared.cv.notify_all();
             let mut next = res.next;
             // Grant queued reloads their turn; aborted ones release their
             // waiters and pass the slot on.
             while let Some(nu) = next {
-                match coord.begin_queued_reload(now_us(), instance, nu) {
+                match cells.coord_mut(cell).begin_queued_reload(now_us(), li, nu) {
                     QueuedReload::Start { .. } => {
-                        drop(coord);
+                        drop(cells);
                         current = Some(nu);
                         break;
                     }
@@ -371,46 +417,48 @@ impl LiveInstance {
         busy: &Arc<AtomicU64>,
     ) {
         let user = req.uid();
+        let (cell, li) = shared.locate(instance);
         let mut load_us = 0.0;
         let wait_start = Instant::now();
 
-        let mut coord = shared.coord.lock().unwrap();
-        match coord.on_rank_start(now_us(), handle) {
+        let mut cells = shared.cells.lock().unwrap();
+        match cells.coord_mut(cell).on_rank_start(now_us(), handle) {
             RankAction::Proceed { .. } => {}
             RankAction::StartReload { .. } => {
                 // Perform the H2D inline on this worker (it holds a
                 // reload-concurrency slot); `on_reload_done` resolves us.
-                drop(coord);
+                drop(cells);
                 let t0 = Instant::now();
                 Self::perform_reload(user, instance, models, shared);
                 load_us = t0.elapsed().as_micros() as f64;
-                coord = shared.coord.lock().unwrap();
+                cells = shared.cells.lock().unwrap();
             }
             RankAction::Wait | RankAction::WaitReload => loop {
-                if coord.wait_resolved(handle) {
+                if cells.coord(cell).wait_resolved(handle) {
                     break;
                 }
                 if wait_start.elapsed().as_micros() as u64 > cfg.wait_budget_us {
                     // Wait-budget fallback: classify and stop waiting.
-                    coord.on_wait_timeout(now_us(), handle);
+                    cells.coord_mut(cell).on_wait_timeout(now_us(), handle);
                     break;
                 }
                 let (g, _t) = shared
                     .cv
-                    .wait_timeout(coord, Duration::from_millis(5))
+                    .wait_timeout(cells, Duration::from_millis(5))
                     .expect("condvar poisoned");
-                coord = g;
+                cells = g;
             },
         }
-        match coord.offer_rank(now_us(), handle) {
+        match cells.coord_mut(cell).offer_rank(now_us(), handle) {
             BatchDecision::Solo => {
-                drop(coord);
-                let done = Self::exec_rank(req, handle, load_us, cfg, models, shared, busy);
+                drop(cells);
+                let done = Self::exec_rank(req, handle, cell, load_us, cfg, models, shared, busy);
                 let _ = resp.send(done);
             }
             BatchDecision::Opened { deadline, gen } => {
-                // Stash under the coord lock (lock order coord → pending)
-                // so the batch cannot close before its member is findable.
+                // Stash under the cell-set lock (lock order cells →
+                // pending) so the batch cannot close before its member is
+                // findable.
                 shared.pending.lock().unwrap()[instance].push(PendingRank {
                     req: *req,
                     handle,
@@ -421,8 +469,8 @@ impl LiveInstance {
                 // on the condvar, then flush — unless a `Filled` flush
                 // got there first (stale generation).
                 loop {
-                    if !coord.batch_open(instance, gen) {
-                        drop(coord);
+                    if !cells.coord(cell).batch_open(li, gen) {
+                        drop(cells);
                         return;
                     }
                     let now = now_us();
@@ -431,11 +479,11 @@ impl LiveInstance {
                     }
                     let (g, _t) = shared
                         .cv
-                        .wait_timeout(coord, Duration::from_micros(deadline - now))
+                        .wait_timeout(cells, Duration::from_micros(deadline - now))
                         .expect("condvar poisoned");
-                    coord = g;
+                    cells = g;
                 }
-                drop(coord);
+                drop(cells);
                 Self::flush_batch(instance, gen, cfg, models, shared, busy);
             }
             BatchDecision::Joined => {
@@ -445,7 +493,7 @@ impl LiveInstance {
                     resp,
                     load_us,
                 });
-                drop(coord);
+                drop(cells);
             }
             BatchDecision::Filled { gen } => {
                 shared.pending.lock().unwrap()[instance].push(PendingRank {
@@ -454,7 +502,7 @@ impl LiveInstance {
                     resp,
                     load_us,
                 });
-                drop(coord);
+                drop(cells);
                 Self::flush_batch(instance, gen, cfg, models, shared, busy);
             }
         }
@@ -471,13 +519,14 @@ impl LiveInstance {
         shared: &Shared,
         busy: &Arc<AtomicU64>,
     ) {
+        let (cell, li) = shared.locate(instance);
         let mut members: Vec<ReqId> = Vec::new();
         let drained: Vec<PendingRank> = {
-            let mut coord = shared.coord.lock().unwrap();
-            if !coord.close_batch(now_us(), instance, gen, &mut members) {
+            let mut cells = shared.cells.lock().unwrap();
+            if !cells.coord_mut(cell).close_batch(now_us(), li, gen, &mut members) {
                 return;
             }
-            drop(coord);
+            drop(cells);
             let mut pending = shared.pending.lock().unwrap();
             let q = &mut pending[instance];
             let mut out = Vec::with_capacity(members.len());
@@ -490,16 +539,19 @@ impl LiveInstance {
         };
         shared.cv.notify_all(); // wake a window leader whose batch went stale
         for p in drained {
-            let done = Self::exec_rank(&p.req, p.handle, p.load_us, cfg, models, shared, busy);
+            let done =
+                Self::exec_rank(&p.req, p.handle, cell, p.load_us, cfg, models, shared, busy);
             let _ = p.resp.send(done);
         }
     }
 
     /// Execute one classified rank pass: consume ψ + plan segments, run
     /// the PJRT execution, and close out the request.
+    #[allow(clippy::too_many_arguments)]
     fn exec_rank(
         req: &GenRequest,
         handle: ReqId,
+        cell: usize,
         load_us: f64,
         cfg: &LiveConfig,
         models: &Models,
@@ -510,16 +562,16 @@ impl LiveInstance {
         let incr = synth_embedding(user ^ 2, cfg.spec.incr_len, cfg.spec.dim, 0.5);
         let items = synth_embedding(req.rid() ^ 3, cfg.spec.num_items, cfg.spec.dim, 0.5);
         // Consume ψ at execution start.
-        let mut coord = shared.coord.lock().unwrap();
-        let rc = coord.rank_compute(now_us(), handle);
+        let mut cells = shared.cells.lock().unwrap();
+        let rc = cells.coord_mut(cell).rank_compute(now_us(), handle);
         let mut kv: Option<Payload> = rc.payload;
         if rc.cached && !matches!(kv, Some(Payload::Device(_))) {
             // Classified cached but no device buffer materialised: run the
             // safe fallback and make the metrics reflect it.
-            coord.force_fallback(now_us(), handle);
+            cells.coord_mut(cell).force_fallback(now_us(), handle);
             kv = None;
         }
-        drop(coord);
+        drop(cells);
 
         // Execute ranking.
         let t0 = Instant::now();
@@ -541,17 +593,19 @@ impl LiveInstance {
             Some(Payload::Device(buf)) => buf.bytes,
             _ => cfg.spec.kv_bytes(),
         };
-        let mut coord = shared.coord.lock().unwrap();
-        let done = coord.on_rank_done(now_us(), handle, kv_bytes);
-        drop(coord);
+        let mut cells = shared.cells.lock().unwrap();
+        // Through the cell layer, not the coordinator directly — the
+        // wrapper is what counts cross-cell ψ misses on completion.
+        let done = cells.on_rank_done(now_us(), CellReq { cell, id: handle }, kv_bytes);
+        drop(cells);
         if done.spill.is_some() {
             // Spill fresh ψ to DRAM (D2H, off the critical path) and slide
             // the HBM window.
             if let Some(Payload::Device(buf)) = &kv {
                 match buf.to_host() {
                     Ok(host) => {
-                        let mut coord = shared.coord.lock().unwrap();
-                        coord.complete_spill(
+                        let mut cells = shared.cells.lock().unwrap();
+                        cells.coord_mut(cell).complete_spill(
                             now_us(),
                             done.instance,
                             user,
@@ -608,18 +662,33 @@ impl LiveCluster {
             full: engine.model(FnKind::Full, &cfg.spec)?,
         });
         let threshold = cfg.long_threshold;
-        let coord = RelayCoordinator::new(cfg.coordinator_config(), |_| {
-            Box::new(move |m: &BehaviorMeta| {
-                // Live risk test: long prefixes are at risk by construction.
-                if m.prefix_len > threshold {
-                    1e9
-                } else {
-                    0.0
-                }
+        anyhow::ensure!(
+            cfg.cells >= 1 && cfg.n_instances % cfg.cells == 0,
+            "--cells {} must be >= 1 and divide the {} instances",
+            cfg.cells,
+            cfg.n_instances,
+        );
+        let coords = (0..cfg.cells)
+            .map(|_| {
+                RelayCoordinator::new(cfg.cell_coordinator_config(), |_| {
+                    Box::new(move |m: &BehaviorMeta| {
+                        // Live risk test: long prefixes are at risk by
+                        // construction.
+                        if m.prefix_len > threshold {
+                            1e9
+                        } else {
+                            0.0
+                        }
+                    })
+                })
             })
-        })?;
+            .collect::<Result<Vec<_>>>()?;
+        // No scripted churn on the wall clock — duration 0 compiles the
+        // `None` scenario to an empty event list.
+        let cells = CellSet::new(cfg.cell_config(), coords, 0)?;
         let shared = Arc::new(Shared {
-            coord: Mutex::new(coord),
+            cells: Mutex::new(cells),
+            inst_per_cell: cfg.n_instances / cfg.cells,
             cv: Condvar::new(),
             pending: Mutex::new((0..cfg.n_instances).map(|_| Vec::new()).collect()),
         });
@@ -648,23 +717,28 @@ impl LiveCluster {
         rng: &mut Rng,
     ) -> Result<Lifecycle> {
         let t0 = Instant::now();
+        // Two-level routing: the cell layer picks the serving cell, then
+        // the in-cell coordinator owns every downstream decision.  All
+        // instance indices it returns are cell-local; workers are
+        // addressed by global id.
         let (handle, wants_trigger) = {
-            let mut coord = self.shared.coord.lock().unwrap();
-            coord.on_arrival(now_us(), req.rid(), req.uid(), req.plen(), candidates)
+            let mut cells = self.shared.cells.lock().unwrap();
+            cells.on_arrival(now_us(), req.rid(), req.uid(), req.plen(), candidates)
         };
+        let base = handle.cell * self.shared.inst_per_cell;
         if wants_trigger {
             // Trigger side path (metadata only); admitted work is handed
             // to the chosen instance's worker pool.
             let action = {
-                let mut coord = self.shared.coord.lock().unwrap();
-                coord.on_trigger_check(now_us(), handle)
+                let mut cells = self.shared.cells.lock().unwrap();
+                cells.coord_mut(handle.cell).on_trigger_check(now_us(), handle.id)
             };
             match action {
                 SignalAction::Produce { instance, user, .. } => {
-                    let _ = self.instances[instance].tx.send(Work::PreInfer { user });
+                    let _ = self.instances[base + instance].tx.send(Work::PreInfer { user });
                 }
                 SignalAction::Reload { instance, user, .. } => {
-                    let _ = self.instances[instance].tx.send(Work::Reload { user });
+                    let _ = self.instances[base + instance].tx.send(Work::Reload { user });
                 }
                 SignalAction::None => {}
             }
@@ -680,23 +754,26 @@ impl LiveCluster {
         sleep_us(retrieval.sample(rng) * self.cfg.stage_scale);
         let retrieval_done = t0.elapsed().as_micros() as u64;
         {
-            let mut coord = self.shared.coord.lock().unwrap();
-            coord.on_stage_done(now_us(), handle, Stage::Retrieval);
+            let mut cells = self.shared.cells.lock().unwrap();
+            cells.coord_mut(handle.cell).on_stage_done(now_us(), handle.id, Stage::Retrieval);
         }
         sleep_us(preproc.sample(rng) * self.cfg.stage_scale);
         let preproc_done = t0.elapsed().as_micros() as u64;
 
-        // Late binding: the coordinator resolves the ranking instance.
+        // Late binding: the coordinator resolves the ranking instance
+        // (cell-local; mapped to the global worker id).
         let inst = {
-            let mut coord = self.shared.coord.lock().unwrap();
-            coord
-                .on_stage_done(now_us(), handle, Stage::Preproc)
+            let mut cells = self.shared.cells.lock().unwrap();
+            cells
+                .coord_mut(handle.cell)
+                .on_stage_done(now_us(), handle.id, Stage::Preproc)
                 .expect("preproc resolves the ranking instance")
         };
+        let inst = base + inst;
         let (tx, rx): (Sender<RankDone>, Receiver<RankDone>) = channel();
         self.instances[inst]
             .tx
-            .send(Work::Rank { req, handle, resp: tx })
+            .send(Work::Rank { req, handle: handle.id, resp: tx })
             .map_err(|_| anyhow!("instance {inst} stopped"))?;
         let done = rx.recv().map_err(|_| anyhow!("rank worker dropped response"))?;
         let done_us = t0.elapsed().as_micros() as u64;
@@ -735,16 +812,32 @@ impl LiveCluster {
             let m = metrics.lock().unwrap();
             (m.completed, m.outcome_counts)
         };
-        let coord = self.shared.coord.lock().unwrap();
-        let in_flight = coord.live_requests();
-        let t = coord.trigger_stats();
-        let h = coord.hierarchy_stats();
-        let s = coord.segment_stats();
-        let (batch, spans) = coord
-            .flight()
-            .map(|fl| (fl.batch_counts, (fl.emitted(), fl.dropped())))
-            .unwrap_or(([0; 5], (0, 0)));
-        drop(coord);
+        // Cluster-wide snapshot: merge every cell's counters so the
+        // heartbeat line keeps its PR 8 shape regardless of `--cells`.
+        let cells = self.shared.cells.lock().unwrap();
+        let mut in_flight = 0usize;
+        let mut t = cells.coord(0).trigger_stats();
+        let mut h = cells.coord(0).hierarchy_stats();
+        let mut s = cells.coord(0).segment_stats();
+        let mut batch = [0u64; 5];
+        let mut spans = (0u64, 0u64);
+        for c in 0..cells.n_cells() {
+            let coord = cells.coord(c);
+            in_flight += coord.live_requests();
+            if c > 0 {
+                t.merge(coord.trigger_stats());
+                h.merge(coord.hierarchy_stats());
+                s.merge(coord.segment_stats());
+            }
+            if let Some(fl) = coord.flight() {
+                for (acc, n) in batch.iter_mut().zip(fl.batch_counts) {
+                    *acc += n;
+                }
+                spans.0 += fl.emitted();
+                spans.1 += fl.dropped();
+            }
+        }
+        drop(cells);
         let outcome_fields = crate::metrics::OUTCOME_NAMES
             .iter()
             .zip(outcomes)
@@ -792,7 +885,7 @@ impl LiveCluster {
         let mut metrics = RunMetrics::new(self.cfg.pipeline.pipeline_slo_us);
         metrics.scenario = wl.scenario.label().to_string();
         let metrics = Mutex::new(metrics);
-        let seg_on = { self.shared.coord.lock().unwrap().segments_enabled() };
+        let seg_on = { self.shared.cells.lock().unwrap().coord(0).segments_enabled() };
         let mut heartbeat = match self.cfg.heartbeat_path.as_deref() {
             Some(p) => Some(
                 std::fs::File::create(p)
@@ -852,13 +945,27 @@ impl LiveCluster {
             })
             .collect();
         {
-            let mut coord = self.shared.coord.lock().unwrap();
-            m.special_instances = coord.special_instances().to_vec();
-            m.hbm = coord.hbm_stats();
-            m.hierarchy = coord.hierarchy_stats();
-            m.trigger = coord.trigger_stats();
-            m.segments = coord.segment_stats();
-            if let Some(fl) = coord.take_flight() {
+            let mut cells = self.shared.cells.lock().unwrap();
+            let per = self.shared.inst_per_cell;
+            // Specials reported by global instance id; stats merged in
+            // cell-index order for determinism.
+            m.special_instances = (0..cells.n_cells())
+                .flat_map(|c| {
+                    cells.coord(c).special_instances().iter().map(move |&i| c * per + i)
+                })
+                .collect();
+            m.hbm = cells.coord(0).hbm_stats();
+            m.hierarchy = cells.coord(0).hierarchy_stats();
+            m.trigger = cells.coord(0).trigger_stats();
+            m.segments = cells.coord(0).segment_stats();
+            for c in 1..cells.n_cells() {
+                m.hbm.merge(cells.coord(c).hbm_stats());
+                m.hierarchy.merge(cells.coord(c).hierarchy_stats());
+                m.trigger.merge(cells.coord(c).trigger_stats());
+                m.segments.merge(cells.coord(c).segment_stats());
+            }
+            m.cells = cells.reports();
+            if let Some(fl) = cells.take_flight() {
                 m.stages = fl.breakdown.clone();
                 m.flight = Some(Arc::new(fl));
             }

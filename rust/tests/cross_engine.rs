@@ -754,3 +754,141 @@ fn live_engine_matches_serial_reference() {
     traced.sort_by_key(|&(id, _)| id);
     assert_eq!(traced, serial, "live tracing changed decisions");
 }
+
+/// Tentpole (PR 9): at `--cells 1` the cell layer is a structural
+/// passthrough, so the cell-aware serialized driver must stay
+/// decision-for-decision identical — on every scenario — to the legacy
+/// single-coordinator driver, an independent implementation that never
+/// heard of cells.  The simulator (which now always routes through the
+/// cell layer) must agree with both.
+#[test]
+fn single_cell_layer_identical_to_legacy_driver_on_all_scenarios() {
+    use relaygr::workload::stream;
+    for name in ScenarioKind::NAMES {
+        let mut wl = workload(false);
+        wl.scenario = ScenarioKind::parse(name).expect("built-in scenario");
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.pipeline.t_life_us = 2 * wl.duration_us;
+        assert_eq!(cfg.cells, 1, "single cell is the default");
+
+        // The legacy driver, seeded exactly as `run_reference` seeds it.
+        let mut legacy_cfg = cfg.clone();
+        let profile = wl.scenario.admission_profile();
+        legacy_cfg.admission.seed_operating_point(profile.headroom_init, profile.rate_mult_init);
+        let coord: RelayCoordinator<()> =
+            RelayCoordinator::new(legacy_cfg.coordinator_config(), |_| legacy_cfg.estimator())
+                .unwrap();
+        let spec = legacy_cfg.spec;
+        let hw = legacy_cfg.hw.clone();
+        let legacy = drive_reference(
+            coord,
+            stream(&wl),
+            &wl,
+            |p| spec.kv_bytes_for(p),
+            move |members, skipped| hw.rank_batched_us(&spec, members, skipped),
+        )
+        .expect("legacy serialized driver runs");
+
+        let cellaware = run_reference(&cfg, &wl).expect("cell-aware serialized driver runs");
+        assert_eq!(
+            legacy.outcomes, cellaware.outcomes,
+            "{name}: cells=1 diverged from the pre-cell serialized driver"
+        );
+        assert_eq!(legacy.outcome_counts, cellaware.outcome_counts, "{name}");
+        assert_eq!(
+            legacy.mean_rank_us.to_bits(),
+            cellaware.mean_rank_us.to_bits(),
+            "{name}: cells=1 must price rank passes bit-identically"
+        );
+        let sim_log = sim_outcomes(&cfg, &wl);
+        assert_eq!(sim_log, cellaware.outcomes, "{name}: simulator diverged at cells=1");
+    }
+}
+
+/// Tentpole (PR 9): at `--cells 4` the two-level router, the scripted
+/// churn (instance failure + reload storm, cell drain, elastic
+/// scale-up/down) and both picker policies are all decisions — so the
+/// simulator and the cell-aware serialized reference must classify every
+/// request identically for every (picker, churn scenario) combination,
+/// and repeating a run must reproduce it exactly.
+#[test]
+fn multi_cell_engines_agree_across_pickers_and_churn_scenarios() {
+    use relaygr::relay::cell::{CellPickerKind, CellScenario};
+    let wl = workload(false);
+    for picker in [CellPickerKind::Affinity, CellPickerKind::Spread] {
+        for scenario in CellScenario::NAMES {
+            let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+            cfg.pipeline.t_life_us = 2 * wl.duration_us;
+            cfg.router.servers = 8; // divisible by 4 cells
+            cfg.cells = 4;
+            cfg.cell_picker = picker;
+            cfg.cell_scenario = CellScenario::parse(scenario).expect("built-in cell scenario");
+            let sim_log = sim_outcomes(&cfg, &wl);
+            let serial = run_reference(&cfg, &wl).expect("serialized reference runs");
+            assert_eq!(
+                sim_log, serial.outcomes,
+                "picker {picker:?}, churn {scenario}: engines diverged on per-request outcomes"
+            );
+            assert_eq!(sim_log.len(), generate(&wl).len(), "every request completes");
+            assert_eq!(serial.cells.len(), 4);
+            let picks: u64 = serial.cells.iter().map(|c| c.picks).sum();
+            assert_eq!(picks as usize, sim_log.len(), "every request picked exactly one cell");
+            if scenario == "failure" {
+                let fails: u64 = serial.cells.iter().map(|c| c.failures).sum();
+                assert!(fails > 0, "{picker:?}: failure script injected no failures");
+            }
+            // Determinism: the same configuration replays itself.
+            let again = run_reference(&cfg, &wl).expect("serialized reference runs");
+            assert_eq!(serial.outcomes, again.outcomes, "{picker:?}/{scenario}: not deterministic");
+            assert_eq!(serial.cells, again.cells, "{picker:?}/{scenario}: cell reports drifted");
+        }
+    }
+}
+
+/// Satellite (PR 9): the spread picker actually spreads (a user's
+/// repeats scatter off their ψ home, which the cross-cell miss counters
+/// must surface), while affinity keeps repeats home — so affinity must
+/// record strictly fewer cross-cell routes than spread on the same
+/// trace, and strictly more HBM hits on a locality-heavy population.
+#[test]
+fn affinity_picker_beats_spread_on_locality_and_cross_traffic() {
+    use relaygr::relay::cell::CellPickerKind;
+    let mut wl = workload(false);
+    wl.num_users = 200; // small population: repeats against warm caches
+    wl.qps = 150.0; // ~4-5 arrivals per user: placement decides the hit rate
+    let run = |picker: CellPickerKind| {
+        let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+        cfg.pipeline.t_life_us = 2 * wl.duration_us;
+        cfg.router.servers = 8;
+        cfg.cells = 4;
+        cfg.cell_picker = picker;
+        cfg.log_outcomes = true;
+        let m = run_sim(cfg.clone(), &wl).expect("simulation runs");
+        let mut log = m.outcome_log();
+        log.sort_by_key(|&(id, _)| id);
+        let serial = run_reference(&cfg, &wl).expect("serialized reference runs");
+        assert_eq!(log, serial.outcomes, "{picker:?}: engines diverged");
+        m
+    };
+    let aff = run(CellPickerKind::Affinity);
+    let spr = run(CellPickerKind::Spread);
+    let cross = |m: &relaygr::metrics::RunMetrics| -> u64 {
+        m.cells.iter().map(|c| c.cross_routes).sum()
+    };
+    let miss = |m: &relaygr::metrics::RunMetrics| -> u64 {
+        m.cells.iter().map(|c| c.cross_psi_miss).sum()
+    };
+    assert!(
+        cross(&aff) < cross(&spr),
+        "affinity cross routes {} !< spread {}",
+        cross(&aff),
+        cross(&spr)
+    );
+    assert!(miss(&spr) > 0, "spread must pay cross-cell psi misses");
+    assert!(
+        aff.outcome_counts[1] > spr.outcome_counts[1],
+        "affinity HBM hits {} !> spread {}",
+        aff.outcome_counts[1],
+        spr.outcome_counts[1]
+    );
+}
