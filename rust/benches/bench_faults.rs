@@ -1,0 +1,160 @@
+//! Fault-plane microbenchmarks (PR 10): the seeded draw/resolve cycle,
+//! the bounded-retry ladder, the shed-or-degrade draw, and the full
+//! per-request routing cycle with the plane off vs on.  Fault resolution
+//! sits on the same microsecond control-plane budget as routing and
+//! admission — every path here is asserted allocation-free in steady
+//! state, and the off-vs-on cycle pair is the standing measurement of
+//! what an enabled plan costs a request that faults never touch.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, write_results};
+
+#[global_allocator]
+static ALLOC: harness::CountingAlloc = harness::CountingAlloc;
+
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::cell::CellSet;
+use relaygr::relay::coordinator::{RelayCoordinator, Stage};
+use relaygr::relay::fault::{FaultConfig, FaultKind, FaultPlan};
+use relaygr::relay::tier::DramPolicy;
+
+fn plan(spec: &str, seed: u64) -> FaultPlan {
+    let mut cfg = FaultConfig::parse(spec).expect("valid fault spec");
+    cfg.seed = seed;
+    FaultPlan::new(cfg)
+}
+
+/// A single-cell set over the standard cluster shape with the given
+/// fault spec compiled in (duration 0 — no scheduled crash events; this
+/// measures the steady request path, not churn).
+fn cell_set(spec: &str) -> CellSet<()> {
+    let mut cfg =
+        relaygr::cluster::SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+    cfg.faults = FaultConfig::parse(spec).expect("valid fault spec");
+    let coords = (0..cfg.cells)
+        .map(|_| RelayCoordinator::new(cfg.cell_coordinator_config(), |_| cfg.estimator()))
+        .collect::<Result<Vec<_>, _>>()
+        .expect("coordinators build");
+    CellSet::new(cfg.cell_config(), coords, 0).expect("cell set builds")
+}
+
+/// One full short-request cycle (the bench_cells shape): arrival pick,
+/// in-cell route, rank classification, completion.  Short prefixes keep
+/// the ψ lifecycle out of the loop so the off-vs-on pair isolates the
+/// fault plane's per-request overhead.
+fn cycle(set: &mut CellSet<()>, now: u64, rid: u64, user: u64) {
+    let (req, _) = set.on_arrival(now, rid, user, 256, &[]);
+    set.coord_mut(req.cell).on_stage_done(now, req.id, Stage::Preproc).expect("routed");
+    let _ = set.coord_mut(req.cell).on_rank_start(now, req.id);
+    let _ = set.coord_mut(req.cell).rank_compute(now, req.id);
+    let done = set.on_rank_done(now, req, 32 << 20);
+    std::hint::black_box(done.outcome);
+}
+
+fn main() {
+    let mut results = Vec::new();
+
+    // Zero-rate passthrough: the branch every request pays when a kind
+    // is not configured — must be a load and a compare, nothing more.
+    {
+        let mut p = plan("none", 42);
+        let mut id = 0u64;
+        results.push(bench("faults/resolve_off_passthrough_x1024", 100, 10_000, || {
+            for _ in 0..1024 {
+                id += 1;
+                std::hint::black_box(p.resolve(FaultKind::PsiFail, id));
+            }
+        }));
+        assert!(!p.report().any(), "zero-rate plan must never inject");
+    }
+
+    // Live draw at a realistic rate with retries: ~90% clean draws, ~10%
+    // inject + bounded-retry ladder — the steady mix of a faulted run.
+    {
+        let mut p = plan("trigger-drop:0.1,retry:2,backoff:200us", 42);
+        let mut id = 0u64;
+        results.push(bench("faults/resolve_draw_retry_x1024", 100, 10_000, || {
+            for _ in 0..1024 {
+                id += 1;
+                std::hint::black_box(p.resolve(FaultKind::TriggerDrop, id));
+            }
+        }));
+        let r = p.report();
+        assert!(r.any() && r.retried[FaultKind::TriggerDrop.index()] > 0);
+    }
+
+    // Worst case: rate 1.0 injects every op and burns the full 8-attempt
+    // ladder (a [0,1) draw never beats rate 1.0, so nothing recovers).
+    {
+        let mut p = plan("trigger-drop:1.0,retry:8,backoff:200us", 42);
+        let mut id = 0u64;
+        results.push(bench("faults/resolve_full_ladder_x1024", 100, 5_000, || {
+            for _ in 0..1024 {
+                id += 1;
+                std::hint::black_box(p.resolve(FaultKind::TriggerDrop, id));
+            }
+        }));
+        let r = p.report();
+        let idx = FaultKind::TriggerDrop.index();
+        assert_eq!(r.recovered[idx], 0, "rate 1.0 must never recover");
+        assert_eq!(r.retried[idx], 8 * r.injected[idx]);
+    }
+
+    // The degradation-ladder draw: shed-vs-degrade on every op.
+    {
+        let mut p = plan("psi-fail:1.0,shed:0.3", 42);
+        let mut id = 0u64;
+        results.push(bench("faults/shed_or_degrade_x1024", 100, 10_000, || {
+            for _ in 0..1024 {
+                id += 1;
+                std::hint::black_box(p.shed_or_degrade(FaultKind::PsiFail, id));
+            }
+        }));
+        let (_, _, _, deg, shed) = p.report().totals();
+        assert!(deg > 0 && shed > 0, "shed:0.3 must split the ladder");
+    }
+
+    // The full per-request decision flow, plane off: the PR 9 baseline
+    // this suite's on-cycle is compared against run over run.
+    {
+        let mut set = cell_set("none");
+        let mut id = 0u64;
+        let mut now = 0u64;
+        results.push(bench("faults/cycle_plane_off", 100, 20_000, || {
+            id += 1;
+            now += 700;
+            cycle(&mut set, now, id, id % 1024);
+        }));
+    }
+
+    // The same flow with an enabled plan: every fault decision point is
+    // consulted (and the retry budget is folded into admission), so the
+    // delta vs cycle_plane_off is the plane's clean-path overhead.
+    {
+        let mut set = cell_set("psi-fail:0.05,trigger-drop:0.05,retry:2,backoff:200us,shed:0.3");
+        let mut id = 0u64;
+        let mut now = 0u64;
+        results.push(bench("faults/cycle_plane_on", 100, 20_000, || {
+            id += 1;
+            now += 700;
+            cycle(&mut set, now, id, id % 1024);
+        }));
+    }
+
+    // The zero-allocation contract, extended to the fault plane: draws,
+    // the retry ladder, the shed draw, and both cycle shapes must show
+    // no allocator traffic once slabs reach their high-water capacity.
+    for r in &results {
+        assert_eq!(
+            r.allocs_per_op,
+            Some(0.0),
+            "steady-state allocation regression on '{}': {:?} allocs/op",
+            r.name,
+            r.allocs_per_op
+        );
+    }
+
+    write_results("faults", &results);
+}

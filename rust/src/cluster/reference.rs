@@ -29,6 +29,7 @@ use crate::relay::cell::{CellReport, CellReq, CellSet};
 use crate::relay::coordinator::{
     BatchDecision, RankAction, RelayCoordinator, ReqId, SignalAction, Stage,
 };
+use crate::relay::fault::FaultReport;
 use crate::relay::flight::{FlightRecorder, StageBreakdown};
 use crate::relay::hbm::HbmStats;
 use crate::relay::hierarchy::HierarchyStats;
@@ -45,7 +46,7 @@ use crate::workload::{candidate_set_into, stream, GenRequest, WorkloadConfig};
 /// counters.
 pub struct ReferenceRun {
     pub outcomes: Vec<(u64, CacheOutcome)>,
-    pub outcome_counts: [u64; 5],
+    pub outcome_counts: [u64; 6],
     pub mean_rank_us: f64,
     pub segments: SegmentStats,
     pub hierarchy: HierarchyStats,
@@ -59,13 +60,16 @@ pub struct ReferenceRun {
     /// Per-cell routing/failure report (empty from the legacy
     /// single-coordinator driver, which predates the cell layer).
     pub cells: Vec<CellReport>,
+    /// Fault-plane counters merged across cells (all-zero when the
+    /// fault plane is off).
+    pub faults: FaultReport,
 }
 
 /// Completion bookkeeping + pooled batch state shared by the inline
 /// (solo) path and batch flushes.
 struct Acc {
     outcomes: Vec<(u64, CacheOutcome)>,
-    outcome_counts: [u64; 5],
+    outcome_counts: [u64; 6],
     rank_us_sum: f64,
     /// Requests held open by the batch former: the per-request metadata
     /// needed when the batch flushes.
@@ -147,7 +151,7 @@ pub fn drive_reference(
 ) -> Result<ReferenceRun> {
     let mut acc = Acc {
         outcomes: Vec::new(),
-        outcome_counts: [0u64; 5],
+        outcome_counts: [0u64; 6],
         rank_us_sum: 0.0,
         held: SecondaryMap::new(),
         batch_buf: Vec::new(),
@@ -240,6 +244,7 @@ pub fn drive_reference(
         stages,
         flight,
         cells: Vec::new(),
+        faults: coord.fault_report(),
     })
 }
 
@@ -247,7 +252,7 @@ pub fn drive_reference(
 /// is one map per cell because [`ReqId`] slots are per-cell slabs.
 struct CellAcc {
     outcomes: Vec<(u64, CacheOutcome)>,
-    outcome_counts: [u64; 5],
+    outcome_counts: [u64; 6],
     rank_us_sum: f64,
     held: Vec<SecondaryMap<GenRequest>>,
     batch_buf: Vec<ReqId>,
@@ -322,7 +327,7 @@ pub fn drive_reference_cells(
     let n_cells = cells.n_cells();
     let mut acc = CellAcc {
         outcomes: Vec::new(),
-        outcome_counts: [0u64; 5],
+        outcome_counts: [0u64; 6],
         rank_us_sum: 0.0,
         held: (0..n_cells).map(|_| SecondaryMap::new()).collect(),
         batch_buf: Vec::new(),
@@ -403,11 +408,13 @@ pub fn drive_reference_cells(
         cells.coord(0).trigger_stats(),
         cells.coord(0).segment_stats(),
     );
+    let mut faults = cells.coord(0).fault_report();
     for c in 1..n_cells {
         hbm.merge(cells.coord(c).hbm_stats());
         hier.merge(cells.coord(c).hierarchy_stats());
         trig.merge(cells.coord(c).trigger_stats());
         seg.merge(cells.coord(c).segment_stats());
+        faults.merge(&cells.coord(c).fault_report());
     }
     let (stages, flight) = match cells.take_flight() {
         Some(fl) => (fl.breakdown.clone(), Some(std::sync::Arc::new(fl))),
@@ -424,6 +431,7 @@ pub fn drive_reference_cells(
         stages,
         flight,
         cells: cells.reports(),
+        faults,
     })
 }
 

@@ -37,6 +37,7 @@ use crate::metrics::RunMetrics;
 use crate::model::{BatchMember, HardwareProfile, ModelSpec};
 use crate::relay::baseline::Mode;
 use crate::relay::cell::{CellConfig, CellPickerKind, CellReq, CellScenario, CellSet};
+use crate::relay::fault::FaultConfig;
 use crate::relay::coordinator::{
     BatchDecision, CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, ReqId,
     SignalAction, Stage,
@@ -118,6 +119,10 @@ pub struct SimConfig {
     /// Flight-recorder span retention (`--trace-spans`; 0 = tracing off).
     /// Observe-only: decisions are bit-identical either way.
     pub trace_spans: usize,
+    /// Fault plane (`--faults`; default = no injection, decision-bit-
+    /// identical to the fault-free build).  The run seed is folded in
+    /// when the coordinator config is derived.
+    pub faults: FaultConfig,
     pub seed: u64,
 }
 
@@ -161,6 +166,7 @@ impl SimConfig {
             log_outcomes: false,
             outcome_check: None,
             trace_spans: 0,
+            faults: FaultConfig::default(),
             seed: 7,
         }
     }
@@ -183,8 +189,10 @@ impl SimConfig {
             m_slots: self.m_slots,
             r2: self.router.r2.max(1e-9),
             n_instances: self.router.n_instances,
-            // Filled in by the coordinator from `batch_window_us`.
+            // Filled in by the coordinator from `batch_window_us` and the
+            // fault plan's retry pricing.
             batch_window_us: 0,
+            retry_budget_us: 0,
             admission: self.admission.clone(),
         }
     }
@@ -219,6 +227,13 @@ impl SimConfig {
             batch_window_us: self.batch_window_us,
             batch_max: self.batch_max,
             trace_spans: self.trace_spans,
+            faults: {
+                // Fold the run seed so identical `--faults` specs draw
+                // identically across engines and job counts.
+                let mut f = self.faults.clone();
+                f.seed = self.seed;
+                f
+            },
         }
     }
 
@@ -229,6 +244,7 @@ impl SimConfig {
             picker: self.cell_picker,
             spill_ratio: self.cell_spill,
             scenario: self.cell_scenario,
+            crash: self.faults.crash,
         }
     }
 
@@ -479,12 +495,15 @@ impl Sim {
             self.cells.coord(0).trigger_stats(),
             self.cells.coord(0).segment_stats(),
         );
+        let mut faults = self.cells.coord(0).fault_report();
         for c in 1..n_cells {
             hbm.merge(self.cells.coord(c).hbm_stats());
             hier.merge(self.cells.coord(c).hierarchy_stats());
             trig.merge(self.cells.coord(c).trigger_stats());
             seg.merge(self.cells.coord(c).segment_stats());
+            faults.merge(&self.cells.coord(c).fault_report());
         }
+        self.metrics.faults = faults;
         self.metrics.hbm = hbm;
         self.metrics.hierarchy = hier;
         self.metrics.trigger = trig;

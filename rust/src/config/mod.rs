@@ -9,6 +9,7 @@ use crate::cluster::SimConfig;
 use crate::model::{Dtype, HardwareProfile, ModelSpec, ModelType};
 use crate::relay::baseline::Mode;
 use crate::relay::cell::{CellPickerKind, CellScenario};
+use crate::relay::fault::FaultConfig;
 use crate::relay::tier::{DramPolicy, EvictPolicy, TierConfig};
 use crate::relay::trigger::{AdmissionConfig, AdmissionMode};
 use crate::util::cli::Args;
@@ -196,6 +197,9 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
         if let Some(v) = j.get("cell_scenario").and_then(Json::as_str) {
             cfg.cell_scenario = CellScenario::parse(v).context("config file")?;
         }
+        if let Some(v) = j.get("faults").and_then(Json::as_str) {
+            cfg.faults = FaultConfig::parse(v).context("config file")?;
+        }
     }
     // CLI overrides.
     if let Some(hw) = args.get("hw") {
@@ -233,6 +237,9 @@ pub fn sim_config(args: &Args, mode: Mode) -> Result<SimConfig> {
     }
     if let Some(s) = args.get("cell-scenario") {
         cfg.cell_scenario = CellScenario::parse(s)?;
+    }
+    if let Some(s) = args.get("faults") {
+        cfg.faults = FaultConfig::parse(s)?;
     }
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     if cfg.spec.dim % cfg.spec.heads != 0 {
@@ -316,6 +323,7 @@ pub fn sim_config_json(cfg: &SimConfig, wl: &WorkloadConfig) -> Json {
         .set("cells", cfg.cells.into())
         .set("cell_picker", cfg.cell_picker.label().into())
         .set("cell_scenario", cfg.cell_scenario.label().into())
+        .set("faults", cfg.faults.label().as_str().into())
         .set("zipf", wl.cand_zipf_s.into())
         .set("seed", cfg.seed.into());
     j
@@ -581,6 +589,42 @@ mod tests {
         assert_eq!(parsed.req_usize("cells").unwrap(), 2);
         assert_eq!(parsed.req_str("cell_picker").unwrap(), "spread");
         assert_eq!(parsed.req_str("cell_scenario").unwrap(), "failure");
+    }
+
+    #[test]
+    fn fault_flags_and_file_keys_layer() {
+        use crate::relay::fault::FaultKind;
+        // Default: fault plane off — the PR 9-identical configuration.
+        let none = sim_config(&args(&["figure"]), Mode::Baseline).unwrap();
+        assert!(!none.faults.enabled());
+        assert_eq!(none.faults.label(), "none");
+        // CLI flag parses the full spec grammar.
+        let a = args(&["figure", "--faults", "psi-fail:0.01,crash@40%:cell0,retry:2"]);
+        let cfg = sim_config(&a, Mode::Baseline).unwrap();
+        assert!(cfg.faults.enabled());
+        assert!((cfg.faults.rates[FaultKind::PsiFail.index()] - 0.01).abs() < 1e-12);
+        assert_eq!(cfg.faults.crash.map(|c| (c.pct, c.cell)), Some((40, Some(0))));
+        assert_eq!(cfg.faults.retries, 2);
+        // Malformed specs are rejected, not clamped.
+        let bad = args(&["figure", "--faults", "psi-fail:2.0"]);
+        assert!(sim_config(&bad, Mode::Baseline).is_err());
+        // File key layers under CLI.
+        let dir = std::env::temp_dir().join("relaygr_fault_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"faults": "reload-fail:0.05"}"#).unwrap();
+        let f = args(&["x", "--config", path.to_str().unwrap()]);
+        let cfg = sim_config(&f, Mode::Baseline).unwrap();
+        assert!((cfg.faults.rates[FaultKind::ReloadFail.index()] - 0.05).abs() < 1e-12);
+        let over =
+            args(&["x", "--config", path.to_str().unwrap(), "--faults", "trigger-drop:0.1"]);
+        let over_cfg = sim_config(&over, Mode::Baseline).unwrap();
+        assert_eq!(over_cfg.faults.rates[FaultKind::ReloadFail.index()], 0.0);
+        assert!((over_cfg.faults.rates[FaultKind::TriggerDrop.index()] - 0.1).abs() < 1e-12);
+        // The run record carries the canonical label.
+        let j = sim_config_json(&over_cfg, &WorkloadConfig::default());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.req_str("faults").unwrap(), over_cfg.faults.label());
     }
 
     #[test]

@@ -42,7 +42,7 @@ use crate::workload::{ScenarioKind, WorkloadConfig};
 struct ModeRow {
     label: &'static str,
     sim: RunMetrics,
-    serial_counts: [u64; 5],
+    serial_counts: [u64; 6],
     serial_trigger: crate::relay::trigger::TriggerStats,
     serial_mean_rank_us: f64,
 }

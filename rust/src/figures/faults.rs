@@ -1,0 +1,203 @@
+//! `relaygr figure faults` — the fault-plane standing report: injection
+//! rate × retry policy × arrival scenario, in both decision engines.
+//!
+//! Three claims are checked *inside* the figure rather than published on
+//! trust:
+//!
+//! * **Engine identity** — fault draws are pure functions of decision-
+//!   plane state (seed, kind, stable id, attempt), so under the strict
+//!   shape (no DRAM tier, T_life beyond the trace) the simulator and the
+//!   serialized reference must classify every request identically AND
+//!   produce byte-identical [`FaultReport`]s.  A divergence means a draw
+//!   leaked clock or ordinal state.
+//! * **Retries pay** — at an equal fault spec, turning bounded retries on
+//!   must *strictly* reduce the full-inference count: recovered
+//!   productions and trigger signals restore relay service that the
+//!   retry-off run lost to the degradation ladder.
+//! * **Shed is bounded** — under the burst scenario with a nonzero shed
+//!   probability, the shed fraction of completed requests stays under a
+//!   fixed bound: the ladder degrades to full inference by default and
+//!   sheds only its configured slice of unrecovered faults.
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::SimConfig;
+use crate::config::apply_candidate_flags;
+use crate::figures::common::{ms, sim, Table};
+use crate::metrics::RunMetrics;
+use crate::relay::baseline::Mode;
+use crate::relay::fault::{FaultConfig, FaultReport};
+use crate::relay::tier::DramPolicy;
+use crate::util::cli::Args;
+use crate::util::parallel;
+use crate::workload::{ScenarioKind, WorkloadConfig};
+
+/// Shed fraction of completed requests the burst rows must stay under.
+const SHED_BOUND: f64 = 0.10;
+
+/// `relaygr figure faults [--qps N] [--quick] [--jobs N] [--seed N]`.
+///
+/// Grid: {fault-off, low rate, high rate} × {retry off, retry:2} ×
+/// {steady, burst}; fault-off runs once per scenario as the control row.
+pub fn faults(args: &Args) -> Result<()> {
+    let dur = if args.has_flag("quick") { 4_000_000u64 } else { 8_000_000 };
+    let probe_qps = args.get_f64("qps", 100.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let jobs = parallel::jobs_from_args(args)?;
+
+    let spec_at = |rate: f64, retry: bool| -> String {
+        let mut s = format!("psi-fail:{rate},trigger-drop:{rate},shed:0.5");
+        if retry {
+            s.push_str(",retry:2,backoff:200us");
+        }
+        s
+    };
+    // (spec, scenario); rates chosen so even the quick trace injects
+    // dozens of faults per kind.
+    let mut grid: Vec<(String, ScenarioKind)> = Vec::new();
+    for scenario in ["steady", "burst"] {
+        let sc = ScenarioKind::parse(scenario).expect("built-in scenario");
+        grid.push(("none".to_string(), sc));
+        for rate in [0.05, 0.15] {
+            grid.push((spec_at(rate, false), sc));
+            grid.push((spec_at(rate, true), sc));
+        }
+    }
+
+    let results =
+        parallel::map_indexed(jobs, grid.len(), |i| -> Result<(Vec<String>, RunMetrics)> {
+            let (spec, scenario) = &grid[i];
+            let mut wl = WorkloadConfig {
+                qps: probe_qps,
+                duration_us: dur,
+                num_users: 400,
+                fixed_long_len: Some(3072),
+                max_prefix: 3072,
+                refresh_prob: 0.0,
+                scenario: *scenario,
+                seed,
+                ..Default::default()
+            };
+            apply_candidate_flags(args, &mut wl)?;
+            let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+            // Strict engine-identity shape (no DRAM, lifecycle beyond the
+            // trace): divergence means a fault draw leaked timing state.
+            cfg.pipeline.t_life_us = 2 * dur;
+            cfg.faults = FaultConfig::parse(spec)?;
+            cfg.log_outcomes = true;
+            let m: RunMetrics = sim("faults", cfg.clone(), &wl)?;
+            let serial = crate::cluster::run_reference(&cfg, &wl)?;
+            let mut sim_log = m.outcome_log();
+            sim_log.sort_by_key(|&(id, _)| id);
+            ensure!(
+                sim_log == serial.outcomes,
+                "faults: engines diverged on per-request outcomes \
+                 (spec {spec}, scenario {})",
+                scenario.label()
+            );
+            ensure!(
+                m.faults == serial.faults,
+                "faults: engines diverged on the fault report \
+                 (spec {spec}, scenario {}): sim {:?} vs serial {:?}",
+                scenario.label(),
+                m.faults,
+                serial.faults
+            );
+            let (inj, ret, rec, deg, shed) = m.faults.totals();
+            if cfg.faults.enabled() {
+                ensure!(inj > 0, "faults: spec {spec} injected nothing");
+                if cfg.faults.retries > 0 {
+                    ensure!(
+                        rec > 0 && ret > 0,
+                        "faults: retries configured but nothing recovered \
+                         (spec {spec}, report {:?})",
+                        m.faults
+                    );
+                }
+            } else {
+                ensure!(
+                    !m.faults.any() && m.outcome_counts[5] == 0,
+                    "faults: fault-off control row injected or shed"
+                );
+            }
+            let row = vec![
+                spec.clone(),
+                scenario.label().to_string(),
+                m.completed.to_string(),
+                m.outcome_counts[0].to_string(),
+                m.outcome_counts[4].to_string(),
+                m.outcome_counts[5].to_string(),
+                inj.to_string(),
+                ret.to_string(),
+                rec.to_string(),
+                deg.to_string(),
+                shed.to_string(),
+                ms(m.e2e.p99()),
+                "ok".into(),
+            ];
+            Ok((row, m))
+        });
+
+    let mut t = Table::new(
+        "faults",
+        "fault plane: injection rate × retry policy × scenario (simulator + serialized reference)",
+        &[
+            "faults", "scenario", "n", "full", "fallback", "shed_reqs", "injected", "retried",
+            "recovered", "degraded", "shed", "p99 e2e ms", "outcomes",
+        ],
+    );
+    t.meta
+        .set("probe_qps", probe_qps.into())
+        .set("shed_bound", SHED_BOUND.into())
+        .set("seed", seed.into());
+    let mut runs: Vec<RunMetrics> = Vec::new();
+    for res in results {
+        let (row, m) = res?;
+        t.row(row);
+        runs.push(m);
+    }
+
+    // Retries pay: at every (rate, scenario), retry-on strictly reduces
+    // the full-inference count vs retry-off at the equal fault spec.
+    for scenario in ["steady", "burst"] {
+        for rate in [0.05, 0.15] {
+            let full_at = |spec: &str| {
+                grid.iter()
+                    .zip(&runs)
+                    .find(|((s, sc), _)| s == spec && sc.label() == scenario)
+                    .map(|(_, m)| m.outcome_counts[0])
+                    .expect("grid row present")
+            };
+            let off = full_at(&spec_at(rate, false));
+            let on = full_at(&spec_at(rate, true));
+            ensure!(
+                on < off,
+                "faults: retries do not reduce full inference at rate {rate} on {scenario} \
+                 ({on} !< {off})"
+            );
+        }
+    }
+    // Shed is bounded under burst, at every faulty spec.
+    for ((spec, scenario), m) in grid.iter().zip(&runs) {
+        if spec == "none" || scenario.label() != "burst" {
+            continue;
+        }
+        let shed_rate = m.outcome_counts[5] as f64 / m.completed.max(1) as f64;
+        ensure!(
+            shed_rate <= SHED_BOUND,
+            "faults: shed rate {shed_rate:.3} exceeds bound {SHED_BOUND} \
+             (spec {spec}, burst)"
+        );
+    }
+    // The report's internal accounting stays coherent on every row.
+    for m in &runs {
+        let f: &FaultReport = &m.faults;
+        let (inj, _, rec, deg, shed) = f.totals();
+        ensure!(rec + deg + shed <= inj, "faults: resolved {rec}+{deg}+{shed} > injected {inj}");
+        ensure!(
+            m.outcome_counts[5] <= shed,
+            "faults: more shed requests than shed fault events"
+        );
+    }
+    t.emit(args)
+}

@@ -13,6 +13,7 @@ pub mod fig12;
 pub mod fig13;
 pub mod fig14;
 pub mod fig15;
+pub mod faults;
 pub mod motivation;
 pub mod scenarios;
 pub mod segments;
@@ -28,7 +29,7 @@ use crate::util::cli::Args;
 pub const ALL: &[&str] = &[
     "fig1", "fig3", "fig11a", "fig11b", "fig11c", "fig11d", "fig12", "fig13a", "fig13b",
     "fig13c", "fig13d", "fig14a", "fig14b", "fig14c", "fig14d", "fig15a", "fig15b", "table1",
-    "scenarios", "tiers", "segments", "admission", "batching", "breakdown", "cells",
+    "scenarios", "tiers", "segments", "admission", "batching", "breakdown", "cells", "faults",
 ];
 
 pub fn run_one(id: &str, args: &Args) -> Result<()> {
@@ -58,6 +59,7 @@ pub fn run_one(id: &str, args: &Args) -> Result<()> {
         "batching" => batching::batching(args),
         "breakdown" => breakdown::breakdown(args),
         "cells" => cells::cells(args),
+        "faults" => faults::faults(args),
         other => bail!("unknown figure '{other}' (available: {} all)", ALL.join(" ")),
     }
 }

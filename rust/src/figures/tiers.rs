@@ -43,7 +43,7 @@ fn cell_row(
     engine: Engine,
     n: u64,
     p99: Option<f64>,
-    counts: &[u64; 5],
+    counts: &[u64; 6],
     h: &HierarchyStats,
     hbm: &HbmStats,
 ) -> Vec<String> {

@@ -64,7 +64,7 @@ fn help() -> String {
      \x20 calibrate  measure live execution costs, write calibration JSON\n\
      \x20 figure     regenerate a paper figure/table: fig1 fig3 fig11a..d fig12\n\
      \x20            fig13a..d fig14a..d fig15a fig15b table1 scenarios tiers\n\
-     \x20            segments admission batching breakdown cells all\n\
+     \x20            segments admission batching breakdown cells faults all\n\
      \x20 plan       admission-control capacity planning (Eqs. 1–3); with\n\
      \x20            --admission adaptive also the closed-loop operating\n\
      \x20            bands and per-scenario initial operating points\n\
@@ -103,7 +103,13 @@ fn help() -> String {
      \x20                       home cell when its load exceeds r× the mean\n\
      \x20                       (default 2.0; inf = pure locality)\n\
      \x20 --cell-scenario <s>   scripted cluster churn: none (default) |\n\
-     \x20                       failure | drain | elastic (serve + figure/sim)\n\
+     \x20                       failure | drain | elastic | rollout\n\
+     \x20                       (serve + figure/sim)\n\
+     \x20 --faults <spec>       deterministic fault plan: comma-separated\n\
+     \x20                       psi-fail:R reload-fail:R trigger-drop:R\n\
+     \x20                       spill-loss:R seg-abort:R crash@P%[:cellK]\n\
+     \x20                       retry:N backoff:USus shed:R, or none (default;\n\
+     \x20                       serve + figure/sim + trace replay)\n\
      \x20 --trace-spans <n>     flight-recorder span retention (0 = off,\n\
      \x20                       default; observe-only — decisions are\n\
      \x20                       bit-identical either way; serve + figure/sim)\n\
@@ -163,6 +169,7 @@ fn trace_cli(args: &Args) -> Result<()> {
                         m.completed as f64 / wall.max(1e-9),
                     );
                     report_cells(&m.cells);
+                    report_faults(&m.faults);
                     report_spans(args, m.flight.as_deref(), wall)?;
                 }
                 "reference" => {
@@ -176,6 +183,7 @@ fn trace_cli(args: &Args) -> Result<()> {
                         r.mean_rank_us,
                     );
                     report_cells(&r.cells);
+                    report_faults(&r.faults);
                     report_spans(args, r.flight.as_deref(), wall)?;
                 }
                 other => bail!("--engine {other}: expected sim | reference"),
@@ -206,11 +214,22 @@ fn report_cells(cells: &[relaygr::relay::CellReport]) {
     println!("{} cells: cross-cell routes {cross}, cross-cell psi misses {miss}", cells.len());
     for (i, c) in cells.iter().enumerate() {
         println!(
-            "  C{i}: picks={} home={} spilled={} cross={} cross-psi-miss={} failures={} storm-wipes={}",
+            "  C{i}: picks={} home={} spilled={} cross={} cross-psi-miss={} failures={} \
+             storm-wipes={} migrated={} migration-lost={}",
             c.picks, c.home_picks, c.spilled, c.cross_routes, c.cross_psi_miss, c.failures,
-            c.storm_invalidations,
+            c.storm_invalidations, c.migrated, c.migration_lost,
         );
     }
+}
+
+/// Print the fault-plane tail line after a faulted replay (the CI
+/// chaos-smoke job greps the recovered/shed totals).
+fn report_faults(f: &relaygr::relay::fault::FaultReport) {
+    if !f.any() {
+        return;
+    }
+    let (inj, ret, rec, deg, shed) = f.totals();
+    println!("faults: injected {inj} retried {ret} recovered {rec} degraded {deg} shed {shed}");
 }
 
 /// Print the flight-recorder tail line after a traced replay (span

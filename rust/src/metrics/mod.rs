@@ -7,6 +7,7 @@
 pub mod slo;
 
 use crate::relay::cell::CellReport;
+use crate::relay::fault::{FaultKind, FaultReport};
 use crate::relay::flight::{FlightRecorder, StageBreakdown};
 use crate::relay::hbm::HbmStats;
 use crate::relay::hierarchy::HierarchyStats;
@@ -33,7 +34,7 @@ pub struct RunMetrics {
     pub rank_stage_long: Histogram,
 
     pub completed: u64,
-    pub outcome_counts: [u64; 5],
+    pub outcome_counts: [u64; 6],
     pub admitted: u64,
 
     pub hbm: HbmStats,
@@ -50,6 +51,10 @@ pub struct RunMetrics {
     /// Per-cell routing/failure report (one entry per coordinator cell;
     /// single-cell runs report one entry with zero picker activity).
     pub cells: Vec<CellReport>,
+
+    /// Fault-plane counters (injected/retried/recovered/degraded/shed
+    /// per kind), merged across cells; all-zero for fault-free runs.
+    pub faults: FaultReport,
 
     pub sim_duration_us: u64,
     /// Total events the simulator dispatched (0 for live runs) — the
@@ -195,6 +200,7 @@ pub fn outcome_index(o: CacheOutcome) -> usize {
         CacheOutcome::DramHit => 2,
         CacheOutcome::JoinedReload => 3,
         CacheOutcome::Fallback => 4,
+        CacheOutcome::Shed => 5,
     }
 }
 
@@ -206,11 +212,12 @@ pub fn outcome_from_index(i: usize) -> Option<CacheOutcome> {
         2 => CacheOutcome::DramHit,
         3 => CacheOutcome::JoinedReload,
         4 => CacheOutcome::Fallback,
+        5 => CacheOutcome::Shed,
         _ => return None,
     })
 }
 
-pub const OUTCOME_NAMES: [&str; 5] = ["full", "hbm", "dram", "join", "fallback"];
+pub const OUTCOME_NAMES: [&str; 6] = ["full", "hbm", "dram", "join", "fallback", "shed"];
 
 /// The small-sample failure allowance shared by every compliance check:
 /// `max(1, ⌊(1−s)·n⌋)`.  The product is nudged by one relative ulp
@@ -240,11 +247,11 @@ pub(crate) fn histogram_compliant(
 }
 
 /// Cache-hit rate among relay-routed long requests: any cache-served
-/// outcome (HBM, DRAM, joined reload) over cache-served + fallback.
-/// `counts` is indexed like [`RunMetrics::outcome_counts`].
-pub fn relay_hit_rate(counts: &[u64; 5]) -> f64 {
+/// outcome (HBM, DRAM, joined reload) over cache-served + fallback +
+/// shed.  `counts` is indexed like [`RunMetrics::outcome_counts`].
+pub fn relay_hit_rate(counts: &[u64; 6]) -> f64 {
     let hits = counts[1] + counts[2] + counts[3];
-    let relayed = hits + counts[4];
+    let relayed = hits + counts[4] + counts[5];
     if relayed == 0 {
         0.0
     } else {
@@ -254,7 +261,7 @@ pub fn relay_hit_rate(counts: &[u64; 5]) -> f64 {
 
 /// DRAM hit rate among cache-served requests (the paper's "+x%"):
 /// DRAM-origin outcomes (reload + join) over all cache-served outcomes.
-pub fn dram_hit_rate(counts: &[u64; 5]) -> f64 {
+pub fn dram_hit_rate(counts: &[u64; 6]) -> f64 {
     let hits = counts[2] + counts[3];
     let served = hits + counts[1];
     if served == 0 {
@@ -277,7 +284,7 @@ impl RunMetrics {
             e2e_long: Histogram::new(),
             rank_stage_long: Histogram::new(),
             completed: 0,
-            outcome_counts: [0; 5],
+            outcome_counts: [0; 6],
             admitted: 0,
             hbm: HbmStats::default(),
             hierarchy: HierarchyStats::default(),
@@ -286,6 +293,7 @@ impl RunMetrics {
             util: Vec::new(),
             special_instances: Vec::new(),
             cells: Vec::new(),
+            faults: FaultReport::default(),
             sim_duration_us: 0,
             sim_events: 0,
             offered_qps: 0.0,
@@ -515,7 +523,7 @@ impl RunMetrics {
             .enumerate()
             .map(|(i, c)| {
                 format!(
-                    "C{} cell            picks={} home={} spilled={} cross={} cross-psi-miss={} failures={} storm-wipes={}",
+                    "C{} cell            picks={} home={} spilled={} cross={} cross-psi-miss={} failures={} storm-wipes={} migrated={} migration-lost={}",
                     i,
                     c.picks,
                     c.home_picks,
@@ -524,9 +532,41 @@ impl RunMetrics {
                     c.cross_psi_miss,
                     c.failures,
                     c.storm_invalidations,
+                    c.migrated,
+                    c.migration_lost,
                 )
             })
             .collect()
+    }
+
+    /// One line per fault kind with activity plus a totals line; empty
+    /// when the fault plane never injected (fault-free runs stay quiet).
+    pub fn faults_report(&self) -> Vec<String> {
+        if !self.faults.any() {
+            return Vec::new();
+        }
+        let f = &self.faults;
+        let mut out = Vec::new();
+        for k in FaultKind::ALL {
+            let i = k.index();
+            if f.injected[i] == 0 {
+                continue;
+            }
+            out.push(format!(
+                "F  {:<15} injected={} retried={} recovered={} degraded={} shed={}",
+                k.name(),
+                f.injected[i],
+                f.retried[i],
+                f.recovered[i],
+                f.degraded[i],
+                f.shed[i],
+            ));
+        }
+        let (inj, ret, rec, deg, shed) = f.totals();
+        out.push(format!(
+            "F  total           injected={inj} retried={ret} recovered={rec} degraded={deg} shed={shed}"
+        ));
+        out
     }
 }
 
@@ -648,7 +688,7 @@ mod tests {
             let p = PackedOutcome::new(123_456_789, o);
             assert_eq!(p.unpack(), (123_456_789, o), "{name}");
         }
-        assert!(outcome_from_index(5).is_none());
+        assert!(outcome_from_index(6).is_none());
         // 8 bytes per record — half the old (u64, CacheOutcome) pair.
         assert_eq!(std::mem::size_of::<PackedOutcome>(), 8);
     }

@@ -63,6 +63,7 @@
 use anyhow::{bail, Result};
 
 use crate::relay::coordinator::{Completion, RelayCoordinator, ReqId};
+use crate::relay::fault::CrashSpec;
 use crate::relay::flight::FlightRecorder;
 use crate::relay::pipeline::CacheOutcome;
 use crate::relay::router::hash_key;
@@ -111,10 +112,13 @@ pub enum CellScenario {
     Failure,
     Drain,
     Elastic,
+    /// Staggered model push: each cell rotates its model/segment key
+    /// space at its own scripted time, never all cells at once.
+    Rollout,
 }
 
 impl CellScenario {
-    pub const NAMES: [&'static str; 4] = ["none", "failure", "drain", "elastic"];
+    pub const NAMES: [&'static str; 5] = ["none", "failure", "drain", "elastic", "rollout"];
 
     pub fn parse(s: &str) -> Result<CellScenario> {
         match s {
@@ -122,8 +126,9 @@ impl CellScenario {
             "failure" => Ok(CellScenario::Failure),
             "drain" => Ok(CellScenario::Drain),
             "elastic" => Ok(CellScenario::Elastic),
+            "rollout" => Ok(CellScenario::Rollout),
             other => bail!(
-                "unknown cell scenario {other:?} (expected none|failure|drain|elastic)"
+                "unknown cell scenario {other:?} (expected none|failure|drain|elastic|rollout)"
             ),
         }
     }
@@ -134,6 +139,7 @@ impl CellScenario {
             CellScenario::Failure => "failure",
             CellScenario::Drain => "drain",
             CellScenario::Elastic => "elastic",
+            CellScenario::Rollout => "rollout",
         }
     }
 
@@ -166,6 +172,17 @@ impl CellScenario {
                     CellEvent { at_us: at(80), action: CellAction::Deactivate(last) },
                 ]
             }
+            CellScenario::Rollout => {
+                // Cell c pushes version 1 at 30% + c·(40%/cells): the
+                // invalidation wave is always cell-local, never a
+                // cluster-wide storm.
+                (0..cells)
+                    .map(|c| CellEvent {
+                        at_us: at(30 + 40 * c as u64 / cells as u64),
+                        action: CellAction::SetModelVersion { cell: c, version: 1 },
+                    })
+                    .collect()
+            }
         }
     }
 }
@@ -188,6 +205,12 @@ pub enum CellAction {
     /// Elasticity: remove / return a whole cell's capacity.
     Deactivate(usize),
     Activate(usize),
+    /// Staggered model push: rotate one cell's model/segment version.
+    SetModelVersion { cell: usize, version: u16 },
+    /// Scheduled fault-plane crash (`--faults crash@P%[:cellK]`): kills
+    /// like [`CellAction::FailInstance`] and counts into the cell's
+    /// [`crate::relay::fault::FaultReport`].
+    Crash { cell: usize, instance: usize },
 }
 
 /// Cluster-shape configuration for a [`CellSet`].
@@ -201,6 +224,9 @@ pub struct CellConfig {
     /// eligible load.  `f64::INFINITY` = never spill (pure locality).
     pub spill_ratio: f64,
     pub scenario: CellScenario,
+    /// Scheduled fault-plane crash (`--faults crash@P%[:cellK]`),
+    /// compiled to scripted events at construction like the scenario.
+    pub crash: Option<CrashSpec>,
 }
 
 impl Default for CellConfig {
@@ -210,6 +236,7 @@ impl Default for CellConfig {
             picker: CellPickerKind::Affinity,
             spill_ratio: 2.0,
             scenario: CellScenario::None,
+            crash: None,
         }
     }
 }
@@ -234,8 +261,14 @@ pub struct CellStats {
     pub cross_routes: u64,
     /// Cross-routed *long* requests that paid for it — the ψ produced
     /// in the user's home cell was unreachable, so ranking ran
-    /// `FullInference` / `Fallback` here.
+    /// `FullInference` / `Fallback` / `Shed` here.
     pub cross_psi_miss: u64,
+    /// ψ host copies this cell shipped out when it drained, landed in
+    /// their users' rendezvous-overflow cells.
+    pub migrated: u64,
+    /// Drain-time copies that found no landing spot (no eligible cell,
+    /// no special route, or the target tier rejected them).
+    pub migration_lost: u64,
 }
 
 /// One row of the `cells` metrics report: picker counters plus the
@@ -251,6 +284,10 @@ pub struct CellReport {
     pub failures: u64,
     /// Settled ψ lineages wiped by failure enforcement (reload storm).
     pub storm_invalidations: u64,
+    /// ψ host copies shipped out of this cell by a drain.
+    pub migrated: u64,
+    /// Drain-time copies lost in migration.
+    pub migration_lost: u64,
 }
 
 struct Pick {
@@ -314,6 +351,27 @@ impl<T: Clone + Default> CellSet<T> {
         }
         let fail_instance = cells[0].special_instances().first().copied().unwrap_or(0);
         let mut events = cfg.scenario.events(cfg.cells, duration_us, fail_instance);
+        // Compile the fault plane's scheduled crash to scripted events:
+        // a percentage of the run's arrival clock, so both engines kill
+        // at the identical decision point.  A zero duration (the live
+        // engine's open-ended runs) compiles no events.
+        if let Some(c) = cfg.crash {
+            if let Some(target) = c.cell {
+                if target >= cfg.cells {
+                    bail!("faults: crash cell {target} out of range (--cells {})", cfg.cells);
+                }
+            }
+            if duration_us > 0 {
+                let at_us = duration_us / 100 * c.pct as u64;
+                for (cell, coord) in cells.iter().enumerate() {
+                    if c.cell.is_some_and(|t| t != cell) {
+                        continue;
+                    }
+                    let instance = coord.special_instances().first().copied().unwrap_or(0);
+                    events.push(CellEvent { at_us, action: CellAction::Crash { cell, instance } });
+                }
+            }
+        }
         events.sort_by_key(|e| e.at_us);
         let n = cfg.cells;
         Ok(CellSet {
@@ -377,6 +435,8 @@ impl<T: Clone + Default> CellSet<T> {
                     cross_psi_miss: s.cross_psi_miss,
                     failures: f.failures,
                     storm_invalidations: f.storm_invalidations,
+                    migrated: s.migrated,
+                    migration_lost: s.migration_lost,
                 }
             })
             .collect()
@@ -417,6 +477,25 @@ impl<T: Clone + Default> CellSet<T> {
                 self.cells[cell].demote_special(inst);
             } else {
                 i += 1;
+            }
+        }
+        // ψ migration: ship the drained cell's settled host copies to
+        // each user's rendezvous-overflow cell — exactly where the
+        // picker sends the user's post-drain traffic, so reloads keep
+        // hitting.  The manifest order (instance index, then user id)
+        // and the rendezvous target are pure functions of decision
+        // state, so both engines migrate identically.  With no other
+        // eligible cell (single cell, or everything drained) the copies
+        // stay put: traffic falls back onto this cell anyway.
+        let eligible = self.active & !self.drained;
+        if eligible != 0 {
+            for (user, bytes, payload) in self.cells[cell].drain_dram() {
+                let target = Self::rendezvous(user, &self.salts, eligible);
+                if self.cells[target].adopt_psi(user, bytes, payload) {
+                    self.stats[cell].migrated += 1;
+                } else {
+                    self.stats[cell].migration_lost += 1;
+                }
             }
         }
     }
@@ -473,6 +552,13 @@ impl<T: Clone + Default> CellSet<T> {
                 CellAction::Undrain(c) => self.undrain_cell(c),
                 CellAction::Deactivate(c) => self.deactivate_cell(c),
                 CellAction::Activate(c) => self.activate_cell(c),
+                CellAction::SetModelVersion { cell, version } => {
+                    self.cells[cell].set_model_version(version);
+                }
+                CellAction::Crash { cell, instance } => {
+                    self.cells[cell].note_crash_injected();
+                    self.cells[cell].fail_instance(ev.at_us, instance);
+                }
             }
         }
     }
@@ -607,7 +693,10 @@ impl<T: Clone + Default> CellSet<T> {
             let cross = slot < flags.len() && std::mem::replace(&mut flags[slot], false);
             if cross
                 && done.is_long
-                && matches!(done.outcome, CacheOutcome::FullInference | CacheOutcome::Fallback)
+                && matches!(
+                    done.outcome,
+                    CacheOutcome::FullInference | CacheOutcome::Fallback | CacheOutcome::Shed
+                )
             {
                 self.stats[req.cell].cross_psi_miss += 1;
             }
@@ -642,6 +731,7 @@ mod tests {
     use super::*;
     use crate::relay::baseline::Mode;
     use crate::relay::coordinator::CoordinatorConfig;
+    use crate::relay::fault::{FaultConfig, FaultKind};
     use crate::relay::router::{BalancePolicy, RouterConfig};
     use crate::relay::segment::SegmentConfig;
     use crate::relay::tier::{DramPolicy, EvictPolicy, TierConfig};
@@ -671,6 +761,7 @@ mod tests {
             batch_window_us: 0,
             batch_max: 32,
             trace_spans,
+            faults: FaultConfig::default(),
         }
     }
 
@@ -749,9 +840,13 @@ mod tests {
     #[test]
     fn picker_is_deterministic() {
         for picker in [CellPickerKind::Affinity, CellPickerKind::Spread] {
-            for scenario in
-                [CellScenario::None, CellScenario::Failure, CellScenario::Drain, CellScenario::Elastic]
-            {
+            for scenario in [
+                CellScenario::None,
+                CellScenario::Failure,
+                CellScenario::Drain,
+                CellScenario::Elastic,
+                CellScenario::Rollout,
+            ] {
                 let cfg = CellConfig { cells: 4, picker, spill_ratio: 1.2, scenario };
                 let duration = 2_000_000;
                 let mut a = cell_set(cfg.clone(), duration);
@@ -869,6 +964,88 @@ mod tests {
         // Demoting cell 1's is cell-scoped too.
         assert!(set.demote_special(1, 1));
         assert!(set.promoted_ledger().is_empty());
+    }
+
+    /// Satellite: a staggered rollout bumps each cell's model version at
+    /// its own scripted time — per-cell invalidation, never a
+    /// cluster-wide storm.
+    #[test]
+    fn rollout_staggers_model_version_per_cell() {
+        let cfg =
+            CellConfig { cells: 2, scenario: CellScenario::Rollout, ..CellConfig::default() };
+        let mut set = cell_set(cfg, 1_000_000);
+        route_one(&mut set, 0, 0, 1);
+        assert_eq!(set.coord(0).config().segment.version, 0);
+        assert_eq!(set.coord(1).config().segment.version, 0);
+        // Cell 0 pushes at 30%, cell 1 not until 50%: mid-rollout the
+        // wave is strictly cell-local.
+        route_one(&mut set, 400_000, 1, 1);
+        assert_eq!(set.coord(0).config().segment.version, 1, "cell 0 pushed at 30%");
+        assert_eq!(set.coord(1).config().segment.version, 0, "cell 1 still on v0");
+        route_one(&mut set, 600_000, 2, 1);
+        assert_eq!(set.coord(1).config().segment.version, 1, "cell 1 pushed at 50%");
+    }
+
+    /// Satellite: draining a cell ships its settled ψ host copies to the
+    /// rendezvous-overflow cell — where the drained users' traffic goes
+    /// next — and counts the moves.
+    #[test]
+    fn drain_migrates_psi_to_overflow_cell_and_counts() {
+        let mut set = cell_set(CellConfig { cells: 2, ..CellConfig::default() }, 1_000_000);
+        let src_inst = set.coord(1).special_instances()[0];
+        assert!(
+            set.coord_mut(1).complete_spill(0, src_inst, 7, 32 << 20, 42),
+            "seed a settled DRAM copy in the cell about to drain"
+        );
+        set.drain_cell(1);
+        assert_eq!(set.cell_stats()[1].migrated, 1);
+        assert_eq!(set.cell_stats()[1].migration_lost, 0);
+        assert_eq!(set.reports()[1].migrated, 1, "report row carries the counter");
+        // The copy moved: gone from cell 1, resident in cell 0 at the
+        // instance cell 0's affinity ring serves user 7 from.
+        let n = set.coord(0).n_instances();
+        assert!((0..n).all(|i| set.coord_mut(1).dram_payload(i, 7).is_none()));
+        let found = (0..n).find_map(|i| set.coord_mut(0).dram_payload(i, 7));
+        assert_eq!(found, Some((32 << 20, 42)));
+        // Single-cell drains migrate nothing — the traffic has nowhere
+        // else to go, so the copies stay put.
+        let mut one = cell_set(CellConfig::default(), 1_000_000);
+        let inst = one.coord(0).special_instances()[0];
+        assert!(one.coord_mut(0).complete_spill(0, inst, 7, 32 << 20, 9));
+        one.drain_cell(0);
+        assert_eq!(one.cell_stats()[0].migrated, 0);
+        assert_eq!(one.coord_mut(0).dram_payload(inst, 7), Some((32 << 20, 9)));
+    }
+
+    /// Fault-plane crash spec compiles to a scripted cell event: fires
+    /// at the trace percentage, scoped to the target cell, counted in
+    /// that cell's fault report.
+    #[test]
+    fn crash_spec_compiles_to_scoped_cell_event() {
+        let cfg = CellConfig {
+            cells: 2,
+            crash: Some(CrashSpec { pct: 50, cell: Some(1) }),
+            ..CellConfig::default()
+        };
+        let mut set = cell_set(cfg, 1_000_000);
+        route_one(&mut set, 0, 0, 1);
+        assert_eq!(set.coord(1).fail_stats().failures, 0, "not before 50%");
+        route_one(&mut set, 600_000, 1, 1);
+        assert_eq!(set.coord(1).fail_stats().failures, 1, "fired at 50%");
+        assert_eq!(set.coord(1).fault_report().injected[FaultKind::Crash.index()], 1);
+        assert_eq!(set.coord(0).fail_stats().failures, 0, "scoped to cell 1");
+        assert_eq!(set.coord(0).fault_report().injected[FaultKind::Crash.index()], 0);
+        // Out-of-range target is a config error, not a silent no-op.
+        let mk = || {
+            RelayCoordinator::<u32>::new(coord_config(0), |_| Box::new(|_: &BehaviorMeta| 1e9))
+                .unwrap()
+        };
+        let bad = CellConfig {
+            cells: 2,
+            crash: Some(CrashSpec { pct: 50, cell: Some(5) }),
+            ..CellConfig::default()
+        };
+        assert!(CellSet::new(bad, vec![mk(), mk()], 1_000_000).is_err());
     }
 
     #[test]

@@ -50,6 +50,7 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::relay::baseline::Mode;
+use crate::relay::fault::{FaultConfig, FaultKind, FaultOutcome, FaultPlan, FaultReport};
 use crate::relay::flight::{
     psi_action, rank_action, trigger_reason, FlightRecorder, SpanKind, NONE_OPERAND,
 };
@@ -115,6 +116,14 @@ pub struct CoordinatorConfig {
     /// [`crate::relay::flight`]): no decision path may read it, so the
     /// decision flow is bit-identical with tracing on or off.
     pub trace_spans: usize,
+    /// The fault plane (`--faults <spec>`): a seeded [`FaultPlan`] is
+    /// compiled at construction and consulted at the named decision
+    /// points.  Every draw keys only on stable trace-assigned ids
+    /// (request rid / user id) — never clocks or engine-order counters —
+    /// so injection is decision-synchronous and all engines inject the
+    /// same faults at the same requests.  The all-off default makes the
+    /// plane a structural no-op: zero draws, zero folded retry budget.
+    pub faults: FaultConfig,
 }
 
 /// Cascade stages the coordinator is told about.
@@ -297,6 +306,12 @@ struct InstanceCtl<T> {
     /// post-failure wipe that reset it).  `stamp >= failed_at` means the
     /// lineage postdates the failure and survives.
     psi_stamp: ShardedMap<u64>,
+    /// Fault plane: users whose in-flight ψ production was doomed at
+    /// signal time (the psi-fail draw, keyed on the producing request's
+    /// rid).  Consumed by [`RelayCoordinator::on_psi_ready`], which
+    /// converts the completion to the failure path both engines already
+    /// share — so the engines need no fault-specific event flow.
+    doomed_psi: ShardedMap<()>,
 }
 
 /// Per-request decision state, slab-resident.  The `Vec` fields are
@@ -409,6 +424,10 @@ pub struct RelayCoordinator<T> {
     /// The observe-only flight recorder (`--trace-spans > 0`); never
     /// consulted by any decision path — see [`crate::relay::flight`].
     flight: Option<FlightRecorder>,
+    /// The compiled fault plane (`--faults`); all draws are pure
+    /// functions of (seed, kind, stable id, attempt), so consulting it
+    /// is itself decision-synchronous.
+    faults: FaultPlan,
 }
 
 impl<T: Clone + Default> RelayCoordinator<T> {
@@ -424,6 +443,12 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         // to admission instead of silently attributing it to compute.
         // The coordinator's window is the single source of truth.
         cfg.trigger.batch_window_us = cfg.batch_window_us;
+        // Same folding rule for the fault plan's worst-case retry
+        // budget: an admitted request may sit out exponential backoff
+        // before the degradation ladder resolves it, so the adaptive
+        // controller charges that latency to admission.  Zero when the
+        // plane is off — fault-free runs price identically to PR 9.
+        cfg.trigger.retry_budget_us = cfg.faults.retry_budget_us();
         let router = Router::new(cfg.router.clone())?;
         let mut triggers = HashMap::new();
         for &i in router.special_instances() {
@@ -448,9 +473,11 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                 batch: BatchCtl::new(),
                 failed_at: 0,
                 psi_stamp: ShardedMap::new(),
+                doomed_psi: ShardedMap::new(),
             })
             .collect();
         let flight = (cfg.trace_spans > 0).then(|| FlightRecorder::new(cfg.trace_spans));
+        let faults = FaultPlan::new(cfg.faults.clone());
         Ok(RelayCoordinator {
             cfg,
             router,
@@ -459,6 +486,7 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             fail: FailStats::default(),
             requests: Slab::new(),
             flight,
+            faults,
         })
     }
 
@@ -604,6 +632,46 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         self.fail
     }
 
+    /// Fault-plane counters (injected/retried/recovered/degraded/shed
+    /// per kind) for this coordinator; cells merge these like the other
+    /// stat blocks.
+    pub fn fault_report(&self) -> FaultReport {
+        self.faults.report()
+    }
+
+    /// Count a scheduled instance crash into the fault report.  The
+    /// crash itself is applied through [`Self::fail_instance`] — the
+    /// cell layer compiles `crash@P%` to a scripted event rather than a
+    /// per-request draw.
+    pub fn note_crash_injected(&mut self) {
+        self.faults.note_injected(FaultKind::Crash);
+    }
+
+    /// Cell drain: remove and return every settled lower-tier ψ host
+    /// copy, `(user, bytes, payload)` in instance-index then ascending
+    /// user order — a deterministic manifest for cross-cell migration.
+    /// HBM-resident entries stay behind (device memory does not ship);
+    /// they expire with the drained cell's lifecycle window.
+    pub fn drain_dram(&mut self) -> Vec<(u64, usize, T)> {
+        let mut out = Vec::new();
+        for ctl in &mut self.instances {
+            out.extend(ctl.cache.drain_lower());
+        }
+        out
+    }
+
+    /// Adopt a migrated ψ host copy into this cell: it lands in the
+    /// lower tier of the special instance this cell's affinity ring
+    /// maps `user` to, exactly where the user's post-drain reload will
+    /// look.  Returns `false` (migration lost) when no special route
+    /// exists or the tier rejects the copy.
+    pub fn adopt_psi(&mut self, user: u64, bytes: usize, payload: T) -> bool {
+        let Some(inst) = self.router.peek_special(user) else {
+            return false;
+        };
+        self.instances[inst].cache.spill(user, bytes, payload)
+    }
+
     /// Lazily apply an instance failure to one user's ψ state: a request
     /// arriving at or after the failure clock must not observe settled
     /// state created before it.  In-flight lineages (HBM `Producing`, or
@@ -673,6 +741,32 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         }
     }
 
+    /// Observe-only flight spans for one fault-plane resolution.  Takes
+    /// the workload `rid` directly — some injection sites (reload
+    /// completion) have no slab slot in hand.
+    fn note_fault_spans(&mut self, now: u64, rid: u64, kind: FaultKind, fate: FaultOutcome) {
+        let retries = self.faults.config().retries as u64;
+        let Some(fl) = self.flight.as_mut() else { return };
+        let idx = kind.index() as u64;
+        match fate {
+            FaultOutcome::Clean => {}
+            FaultOutcome::Recovered { attempts } => {
+                fl.note_fault(now, rid, idx, true);
+                for a in 1..=attempts as u64 {
+                    fl.note_retry(now, rid, idx, a);
+                }
+            }
+            FaultOutcome::Failed => {
+                fl.note_fault(now, rid, idx, false);
+                if kind.retryable() {
+                    for a in 1..=retries {
+                        fl.note_retry(now, rid, idx, a);
+                    }
+                }
+            }
+        }
+    }
+
     // ---- event API ---------------------------------------------------------
 
     /// A request entered the pipeline.  `rid` is the workload request id
@@ -710,10 +804,24 @@ impl<T: Clone + Default> RelayCoordinator<T> {
     /// The trigger side path: metadata risk test, admission control, and
     /// the signal-side pseudo-pre-infer (§3.2/§3.4).
     pub fn on_trigger_check(&mut self, now: u64, req: ReqId) -> SignalAction {
-        let (user, prefix_len, arrival) = {
+        let (rid, user, prefix_len, arrival) = {
             let st = self.requests.get(req).expect("trigger check for unknown request");
-            (st.user, st.prefix_len, st.arrival_us)
+            (st.rid, st.user, st.prefix_len, st.arrival_us)
         };
+        // Fault plane: the trigger signal may be dropped before the risk
+        // test runs (keyed on the request's rid — stable across engines).
+        // An unrecovered drop means the side path never fires: the
+        // request is never admitted and pays full inference at ranking —
+        // exactly the degradation the retry ladder exists to claw back,
+        // which is why `figure faults` uses the full-inference count as
+        // its headline.
+        let fate = self.faults.resolve(FaultKind::TriggerDrop, rid);
+        if fate != FaultOutcome::Clean {
+            self.note_fault_spans(now, rid, FaultKind::TriggerDrop, fate);
+            if fate == FaultOutcome::Failed {
+                return SignalAction::None;
+            }
+        }
         let route = self.router.route_special(user);
         self.router.on_complete(route.instance); // signal, not a held connection
         let inst = route.instance;
@@ -778,6 +886,17 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                         // New lineage, stamped with the engine-shared
                         // arrival clock (failure-plane survivorship).
                         instance.psi_stamp.insert(user, arrival);
+                        // Fault plane: doom this production now, keyed on
+                        // the producing request's rid.  The doom is
+                        // stored per user and consumed by `on_psi_ready`,
+                        // which routes the completion down the failure
+                        // path both engines already share — no
+                        // fault-specific event flow needed.
+                        let psi_fate = self.faults.resolve(FaultKind::PsiFail, rid);
+                        if psi_fate == FaultOutcome::Failed {
+                            self.instances[inst].doomed_psi.insert(user, ());
+                        }
+                        self.note_fault_spans(now, rid, FaultKind::PsiFail, psi_fate);
                         if let Some(fl) = self.flight.as_mut() {
                             fl.note_produce_begin(now, req.index(), user, inst as u64);
                         }
@@ -934,6 +1053,12 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         user: u64,
         payload: Option<T>,
     ) -> Vec<ReqId> {
+        // Fault plane: a production doomed at signal time completes down
+        // the shared failure path — payload dropped, reservation evicted
+        // — so both engines observe the identical conversion regardless
+        // of who computed ψ or when.
+        let doomed = self.instances[instance].doomed_psi.remove(user).is_some();
+        let payload = if doomed { None } else { payload };
         let ok = match payload {
             Some(p) => self.instances[instance].cache.hbm_mut().complete_produce(user, p),
             None => {
@@ -962,14 +1087,27 @@ impl<T: Clone + Default> RelayCoordinator<T> {
                     st.outcome = CacheOutcome::HbmHit;
                     st.cached = true;
                 } else {
-                    st.outcome = CacheOutcome::Fallback;
+                    // Degradation ladder for fault-doomed productions:
+                    // shed pressure picks between `Shed` and the plain
+                    // fallback rung.  Host-reported failures (live-engine
+                    // execution errors) keep the plain fallback path.
+                    let shed =
+                        doomed && self.faults.shed_or_degrade(FaultKind::PsiFail, st.rid);
+                    st.outcome =
+                        if shed { CacheOutcome::Shed } else { CacheOutcome::Fallback };
                     st.cached = false;
                 }
                 st.resolved = true;
+                let (rid, shed) = (st.rid, st.outcome == CacheOutcome::Shed);
                 if let Some(fl) = self.flight.as_mut() {
                     fl.note_wait_resolved(now, w.index(), 0, waited);
                     if !ok {
-                        fl.note_fallback(now, w.index(), 3);
+                        if doomed {
+                            fl.note_degraded(now, rid, FaultKind::PsiFail.index() as u64, shed);
+                        }
+                        if !shed {
+                            fl.note_fallback(now, w.index(), 3);
+                        }
                     }
                 }
             }
@@ -987,6 +1125,18 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         bytes: usize,
     ) -> ReloadResolution {
         let t_life = self.cfg.t_life_us;
+        // Fault plane: the H2D transfer may fail in flight.  Drawn only
+        // when the host actually delivered a payload, keyed on the user
+        // id alone (a reload has no single owning request; the user id
+        // is stable and globally unique across engines and cells).
+        let mut reload_fate = FaultOutcome::Clean;
+        let payload = if payload.is_some() {
+            reload_fate = self.faults.resolve(FaultKind::ReloadFail, user);
+            if reload_fate == FaultOutcome::Failed { None } else { payload }
+        } else {
+            payload
+        };
+        let faulted = reload_fate == FaultOutcome::Failed;
         let done = {
             let inst = &mut self.instances[instance];
             match payload {
@@ -1004,19 +1154,44 @@ impl<T: Clone + Default> RelayCoordinator<T> {
             fl.note_reload_end(now, user, done.installed, bytes as u64);
         }
         let woken = self.instances[instance].waiting_reload.remove(user).unwrap_or_default();
+        if reload_fate != FaultOutcome::Clean {
+            // Span labelling: attribute the injection to the first woken
+            // request when one exists (the reload itself has no rid).
+            let span_rid = woken
+                .first()
+                .and_then(|&w| self.requests.get(w))
+                .map_or(u64::MAX, |st| st.rid);
+            self.note_fault_spans(now, span_rid, FaultKind::ReloadFail, reload_fate);
+        }
         for &w in &woken {
             if let Some(st) = self.requests.get_mut(w) {
                 let waited = now.saturating_sub(st.wait_since);
                 st.wait_us += waited as f64;
                 if !done.installed {
-                    st.outcome = CacheOutcome::Fallback;
+                    // Degradation ladder for fault-injected reload loss;
+                    // host-reported H2D errors keep the plain fallback.
+                    let shed =
+                        faulted && self.faults.shed_or_degrade(FaultKind::ReloadFail, st.rid);
+                    st.outcome =
+                        if shed { CacheOutcome::Shed } else { CacheOutcome::Fallback };
                     st.cached = false;
                 }
                 st.resolved = true;
+                let (rid, shed) = (st.rid, st.outcome == CacheOutcome::Shed);
                 if let Some(fl) = self.flight.as_mut() {
                     fl.note_wait_resolved(now, w.index(), 1, waited);
                     if !done.installed {
-                        fl.note_fallback(now, w.index(), 1);
+                        if faulted {
+                            fl.note_degraded(
+                                now,
+                                rid,
+                                FaultKind::ReloadFail.index() as u64,
+                                shed,
+                            );
+                        }
+                        if !shed {
+                            fl.note_fallback(now, w.index(), 1);
+                        }
                     }
                 }
             }
@@ -1215,6 +1390,18 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         if st.cands.is_empty() {
             return None;
         }
+        // Fault plane: segment-production abort — the pass prices as if
+        // its candidate plan failed wholesale (no pins, no productions,
+        // no reuse).  Non-retryable and pricing-only: the request's ψ
+        // outcome is untouched.
+        let rid = st.rid;
+        if self.faults.resolve(FaultKind::SegAbort, rid) == FaultOutcome::Failed {
+            st.cands.clear();
+            if let Some(fl) = self.flight.as_mut() {
+                fl.note_fault(now, rid, FaultKind::SegAbort.index() as u64, false);
+            }
+            return None;
+        }
         let store = self.instances.get_mut(inst)?.segments.as_mut()?;
         let mut plan = SegmentPlan::default();
         for i in 0..st.cands.len() {
@@ -1308,13 +1495,26 @@ impl<T: Clone + Default> RelayCoordinator<T> {
         // window slides immediately.
         let mut spill = None;
         if cached {
-            let ctl = &mut self.instances[inst];
-            let fresh = ctl.origin.get(user) == Some(&CacheOutcome::HbmHit);
-            if fresh {
+            let fresh =
+                self.instances[inst].origin.get(user) == Some(&CacheOutcome::HbmHit);
+            // Fault plane: spill loss models the D2H copy dying in
+            // flight — the consumed ψ leaves HBM with no DRAM copy, the
+            // exact path a non-fresh (reloaded) ψ already takes.  Keyed
+            // on the completing request's rid; pricing/capacity only,
+            // the request's own outcome is untouched.
+            let lost = fresh
+                && self.faults.resolve(FaultKind::SpillLoss, rid) == FaultOutcome::Failed;
+            if lost {
+                self.note_fault_spans(now, rid, FaultKind::SpillLoss, FaultOutcome::Failed);
+            }
+            if fresh && !lost {
                 spill = Some(kv_bytes);
-            } else if ctl.cache.hbm().state_of(user) == Some(EntryState::Consumed) {
-                ctl.cache.hbm_mut().evict(user);
-                ctl.origin.remove(user);
+            } else {
+                let ctl = &mut self.instances[inst];
+                if ctl.cache.hbm().state_of(user) == Some(EntryState::Consumed) {
+                    ctl.cache.hbm_mut().evict(user);
+                    ctl.origin.remove(user);
+                }
             }
         }
         if let Some(fl) = self.flight.as_mut() {
@@ -1396,6 +1596,7 @@ mod tests {
             batch_window_us: 0,
             batch_max: 32,
             trace_spans: 0,
+            faults: FaultConfig::default(),
         }
     }
 
@@ -2026,6 +2227,194 @@ mod tests {
         assert_eq!(total, tl.e2e_us(), "stage durations telescope to e2e");
         assert_eq!(tl.outcome, Some(crate::metrics::outcome_index(CacheOutcome::HbmHit)));
         assert_eq!(fl.breakdown.admission.count(), 1, "admission interval folded");
+    }
+
+    fn fault_config(mode: Mode, spec: &str) -> CoordinatorConfig {
+        let mut cfg = config(mode);
+        cfg.faults = FaultConfig::parse(spec).unwrap();
+        cfg
+    }
+
+    fn fault_coord(mode: Mode, spec: &str) -> RelayCoordinator<u32> {
+        RelayCoordinator::new(fault_config(mode, spec), |_| Box::new(|_: &BehaviorMeta| 1e9))
+            .unwrap()
+    }
+
+    /// Tentpole: a dropped trigger signal means the side path never
+    /// fires — the request is never admitted and pays full inference at
+    /// ranking (the `figure faults` headline signal).
+    #[test]
+    fn dropped_trigger_signal_pays_full_inference() {
+        let mut c =
+            fault_coord(Mode::RelayGr { dram: DramPolicy::Disabled }, "trigger-drop:1");
+        let done = drive(&mut c, 0, 42, 4096);
+        assert_eq!(done.outcome, CacheOutcome::FullInference);
+        assert!(!done.admitted, "dropped signal never admits");
+        assert_eq!(c.fault_report().injected[FaultKind::TriggerDrop.index()], 1);
+        assert_eq!(c.trigger_stats().assessed, 0, "risk test never ran");
+        assert_eq!(c.trigger_live(), 0);
+        assert_eq!(c.live_requests(), 0);
+    }
+
+    /// Tentpole: a production doomed at signal time completes down the
+    /// shared failure path; the waiting rank request takes the
+    /// degradation ladder (Fallback, or Shed under shed pressure), and
+    /// the admitted slot still releases exactly once.
+    #[test]
+    fn doomed_production_degrades_waiter_and_balances_ledger() {
+        for (spec, want) in [
+            ("psi-fail:1", CacheOutcome::Fallback),
+            ("psi-fail:1,shed:1", CacheOutcome::Shed),
+        ] {
+            let mut c = fault_coord(Mode::RelayGr { dram: DramPolicy::Disabled }, spec);
+            let (req, wants) = c.on_arrival(0, 7, 7, 4096, &[]);
+            assert!(wants);
+            let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req)
+            else {
+                panic!("expected production");
+            };
+            c.on_stage_done(0, req, Stage::Preproc).unwrap();
+            assert_eq!(c.on_rank_start(10, req), RankAction::Wait);
+            // The host delivers a payload, but the plan doomed it.
+            let woken = c.on_psi_ready(2_000, instance, user, Some(3));
+            assert_eq!(woken, vec![req]);
+            let rc = c.rank_compute(2_000, req);
+            assert!(!rc.cached && rc.payload.is_none());
+            let done = c.on_rank_done(2_000, req, 1 << 20);
+            assert_eq!(done.outcome, want, "{spec}");
+            assert!(done.admitted, "ladder outcomes still count as admitted");
+            let r = c.fault_report();
+            let k = FaultKind::PsiFail.index();
+            assert_eq!(r.injected[k], 1, "{spec}");
+            if want == CacheOutcome::Shed {
+                assert_eq!((r.shed[k], r.degraded[k]), (1, 0), "{spec}");
+            } else {
+                assert_eq!((r.shed[k], r.degraded[k]), (0, 1), "{spec}");
+            }
+            assert_eq!(c.trigger_live(), 0, "admit released exactly once");
+            assert_eq!(c.trigger_stats().spurious_release, 0);
+            assert_eq!(c.live_requests(), 0);
+        }
+    }
+
+    #[test]
+    fn reload_fault_converts_delivered_payload_to_fallback() {
+        let mut c =
+            fault_coord(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) }, "reload-fail:1");
+        // Seed DRAM via a full produce→spill cycle (no reload drawn yet).
+        let first = drive(&mut c, 0, 5, 4096);
+        assert_eq!(first.outcome, CacheOutcome::HbmHit);
+        assert!(first.spill.is_some());
+        // The refresh starts a rank-side reload; the host delivers the
+        // payload but the fault plane drops it in flight.
+        let (r2, _) = c.on_arrival(400_000, 2, 5, 4096, &[]);
+        let inst2 = c.on_stage_done(400_000, r2, Stage::Preproc).unwrap();
+        let a = c.on_rank_start(400_000, r2);
+        let RankAction::StartReload { bytes } = a else {
+            panic!("expected StartReload, got {a:?}")
+        };
+        let res = c.on_reload_done(400_500, inst2, 5, Some(9), bytes);
+        assert!(!res.installed, "fault plane dropped the delivered payload");
+        assert_eq!(res.woken, vec![r2]);
+        let rc = c.rank_compute(400_500, r2);
+        assert!(!rc.cached && rc.payload.is_none());
+        let done = c.on_rank_done(400_500, r2, bytes);
+        assert_eq!(done.outcome, CacheOutcome::Fallback);
+        let r = c.fault_report();
+        let k = FaultKind::ReloadFail.index();
+        assert_eq!((r.injected[k], r.degraded[k]), (1, 1));
+        assert_eq!(c.live_requests(), 0);
+    }
+
+    #[test]
+    fn spill_loss_drops_the_dram_copy_and_slides_the_window() {
+        let mut c =
+            fault_coord(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) }, "spill-loss:1");
+        let done = drive(&mut c, 0, 42, 4096);
+        assert_eq!(done.outcome, CacheOutcome::HbmHit, "outcome untouched by spill loss");
+        assert!(done.spill.is_none(), "spill lost in flight");
+        // No DRAM copy landed and the consumed entry slid out of the
+        // window: the refresh must re-produce, not reload.
+        let (r2, wants) = c.on_arrival(500_000, 2, 42, 4096, &[]);
+        assert!(wants);
+        let act = c.on_trigger_check(500_000, r2);
+        assert!(matches!(act, SignalAction::Produce { .. }), "no DRAM copy to reload: {act:?}");
+        if let SignalAction::Produce { instance, user, .. } = act {
+            c.on_psi_ready(500_000, instance, user, Some(9));
+        }
+        c.on_stage_done(500_000, r2, Stage::Preproc).unwrap();
+        let _ = c.on_rank_start(500_000, r2);
+        let _ = c.rank_compute(500_000, r2);
+        c.on_rank_done(500_000, r2, 32 << 20);
+        assert!(c.fault_report().injected[FaultKind::SpillLoss.index()] >= 1);
+        assert_eq!(c.live_requests(), 0);
+    }
+
+    #[test]
+    fn seg_abort_prices_the_pass_without_touching_psi_outcome() {
+        let mut cfg = seg_config();
+        cfg.faults = FaultConfig::parse("seg-abort:1").unwrap();
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        let (done, plan) = drive_with_cands(&mut c, 0, 42, &[10, 11, 12]);
+        assert!(plan.is_none(), "aborted pass carries no segment plan");
+        assert_eq!(done.outcome, CacheOutcome::HbmHit, "ψ outcome untouched");
+        assert_eq!(c.segment_stats().lookups, 0, "no pins, no productions");
+        let r = c.fault_report();
+        let k = FaultKind::SegAbort.index();
+        assert_eq!(r.injected[k], 1);
+        assert_eq!(r.degraded[k] + r.shed[k], 0, "pricing-only: no ladder");
+        assert_eq!(c.live_requests(), 0);
+    }
+
+    #[test]
+    fn retry_budget_priced_into_admission_estimate() {
+        let c = fault_coord(
+            Mode::RelayGr { dram: DramPolicy::Disabled },
+            "psi-fail:0.1,retry:3,backoff:100us",
+        );
+        assert_eq!(c.config().trigger.retry_budget_us, 700, "backoff·(2^3−1)");
+        // All-off default folds nothing — fault-free pricing matches PR 9.
+        let off = coord(Mode::RelayGr { dram: DramPolicy::Disabled });
+        assert_eq!(off.config().trigger.retry_budget_us, 0);
+    }
+
+    #[test]
+    fn fault_free_plan_draws_nothing() {
+        let mut c = coord(Mode::RelayGr { dram: DramPolicy::Capacity(1 << 30) });
+        for i in 0..10 {
+            drive(&mut c, i * 10_000, i % 3, 4096);
+        }
+        assert!(!c.fault_report().any(), "all-off default never injects");
+    }
+
+    /// With tracing on, injected faults land in the span stream: the
+    /// fault-injected, retry and degraded kinds appear with the right
+    /// fault-kind operands.
+    #[test]
+    fn fault_spans_traced_when_recorder_on() {
+        let mut cfg =
+            fault_config(Mode::RelayGr { dram: DramPolicy::Disabled }, "psi-fail:1,shed:1");
+        cfg.trace_spans = 4096;
+        let mut c: RelayCoordinator<u32> =
+            RelayCoordinator::new(cfg, |_| Box::new(|_: &BehaviorMeta| 1e9)).unwrap();
+        let (req, _) = c.on_arrival(0, 7, 7, 4096, &[]);
+        let SignalAction::Produce { instance, user, .. } = c.on_trigger_check(0, req) else {
+            panic!("expected production");
+        };
+        c.on_stage_done(0, req, Stage::Preproc).unwrap();
+        assert_eq!(c.on_rank_start(10, req), RankAction::Wait);
+        c.on_psi_ready(2_000, instance, user, Some(3));
+        let _ = c.rank_compute(2_000, req);
+        let done = c.on_rank_done(2_000, req, 1 << 20);
+        assert_eq!(done.outcome, CacheOutcome::Shed);
+        let fl = c.take_flight().unwrap();
+        let spans = fl.spans_sorted();
+        let kidx = FaultKind::PsiFail.index() as u64;
+        assert!(spans
+            .iter()
+            .any(|s| s.kind == SpanKind::FaultInjected && s.a == kidx && s.b == 0));
+        assert!(spans.iter().any(|s| s.kind == SpanKind::Degraded && s.a == kidx && s.b == 1));
     }
 
     #[test]

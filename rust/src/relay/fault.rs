@@ -1,0 +1,596 @@
+//! Deterministic fault-injection plane: a seeded [`FaultPlan`] compiled
+//! at coordinator construction (the `CellScenario` recipe) that injects
+//! faults at named decision points of the relay-race flow, plus the
+//! response machinery — bounded retries with deterministic exponential
+//! backoff, and the graceful-degradation ladder
+//! `Relay → DegradedPrefix → FullInference → Shed` that replaces the
+//! single fall-to-full cliff.
+//!
+//! ## The injection-is-decision-synchronous contract
+//!
+//! Every fault draw is a pure function of `(plan seed, fault kind,
+//! stable id, attempt)` — the stable id is the workload request id
+//! (`GenRequest::rid`) or the user id, both assigned by the trace before
+//! any engine runs.  Draws never read completion timing, engine clocks,
+//! or engine-order-dependent counters (slab slots recycle in
+//! completion order and differ across engines; ordinal counters at
+//! `on_psi_ready`/`on_rank_start` sites would too).  Consequently the
+//! discrete-event simulator, the serialized reference and the live
+//! threaded engine inject the *same* faults at the *same* requests, and
+//! `tests/cross_engine.rs` / `tests/fault_determinism.rs` pin the whole
+//! plane bit-identical across engines and `--jobs` levels.
+//!
+//! ## Retries are priced, not timed
+//!
+//! A retry at attempt `i` waits `backoff · 2^(i-1)`; the total worst-case
+//! budget `backoff · (2^retries − 1)` is folded into the trigger's
+//! admission latency estimate ([`FaultConfig::retry_budget_us`], the
+//! `batch_window_us` folding precedent) so the adaptive controller sees
+//! retry pressure — but the decision of *whether* a retry recovers is
+//! another seeded draw, never a timer race.  This keeps the fault plane
+//! inside the decision plane.
+
+use anyhow::{bail, Result};
+
+/// Named decision points where the plan can inject a fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// ψ production fails on the special instance (side path): waiters
+    /// take the degradation ladder, the lifecycle entry is evicted.
+    PsiFail,
+    /// DRAM→HBM reload/promotion fails at completion: the payload is not
+    /// installed, woken joiners take the ladder.
+    ReloadFail,
+    /// Trigger signal dropped before the admission decision: the request
+    /// is never admitted and ranks as plain full inference — the fault
+    /// retries recover (the figure-`faults` headline).
+    TriggerDrop,
+    /// HBM→DRAM spill lost in flight: the demotion is suppressed, the
+    /// next miss reloads nothing (non-retryable).
+    SpillLoss,
+    /// Candidate-segment production aborted before planning: ranking
+    /// pays full prefill for the batch (pricing-only, non-retryable).
+    SegAbort,
+    /// Instance crash, compiled to cell-scenario events at a trace
+    /// percentage (`crash@40%[:cellK]`) rather than drawn per request.
+    Crash,
+}
+
+impl FaultKind {
+    pub const COUNT: usize = 6;
+    pub const NAMES: [&'static str; FaultKind::COUNT] =
+        ["psi-fail", "reload-fail", "trigger-drop", "spill-loss", "seg-abort", "crash"];
+    pub const ALL: [FaultKind; FaultKind::COUNT] = [
+        FaultKind::PsiFail,
+        FaultKind::ReloadFail,
+        FaultKind::TriggerDrop,
+        FaultKind::SpillLoss,
+        FaultKind::SegAbort,
+        FaultKind::Crash,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            FaultKind::PsiFail => 0,
+            FaultKind::ReloadFail => 1,
+            FaultKind::TriggerDrop => 2,
+            FaultKind::SpillLoss => 3,
+            FaultKind::SegAbort => 4,
+            FaultKind::Crash => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        Self::NAMES[self.index()]
+    }
+
+    /// Whether the bounded-retry policy applies.  Spill loss and segment
+    /// aborts are fire-and-forget side effects with no requester waiting
+    /// on the spot to retry them; crashes are scenario events.
+    pub fn retryable(self) -> bool {
+        matches!(self, FaultKind::PsiFail | FaultKind::ReloadFail | FaultKind::TriggerDrop)
+    }
+}
+
+/// Crash injection point: a percentage through the arrival sequence and
+/// an optional target cell (`None` ⇒ every cell crashes one instance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrashSpec {
+    /// Percent of the request trace after which the crash fires (1–99).
+    pub pct: u32,
+    /// Target cell index; `None` hits every cell.
+    pub cell: Option<usize>,
+}
+
+/// Parsed `--faults` spec: per-kind injection rates plus the retry /
+/// degradation policy.  The all-zero default (`--faults none`) disables
+/// the plane entirely — zero draws, zero folded budget — so a fault-off
+/// run is decision-bit-identical to a build without the plane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Injection probability per [`FaultKind`] (crash's slot is unused —
+    /// crashes are scheduled via [`FaultConfig::crash`], not drawn).
+    pub rates: [f64; FaultKind::COUNT],
+    /// Scheduled instance crash, if any.
+    pub crash: Option<CrashSpec>,
+    /// Bounded retry attempts per injected retryable fault (0 = off).
+    pub retries: u32,
+    /// Base exponential-backoff step in µs (attempt i waits `2^(i-1)·backoff`).
+    pub backoff_us: u64,
+    /// Degradation-ladder shed probability: an unrecovered fault sheds
+    /// with this probability instead of degrading to full inference.
+    pub shed: f64,
+    /// Draw seed, folded in by the engines from their run seed (the
+    /// `batch_window_us` precedent) — not part of the spec grammar.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            rates: [0.0; FaultKind::COUNT],
+            crash: None,
+            retries: 0,
+            backoff_us: 200,
+            shed: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Parse a `--faults` spec: comma-separated items of
+    /// `psi-fail:R | reload-fail:R | trigger-drop:R | spill-loss:R |
+    /// seg-abort:R | crash@P%[:cellK] | retry:N | backoff:USus | shed:R`,
+    /// or `none`.
+    pub fn parse(spec: &str) -> Result<FaultConfig> {
+        let mut cfg = FaultConfig::default();
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(cfg);
+        }
+        for item in spec.split(',') {
+            let item = item.trim();
+            if let Some(rest) = item.strip_prefix("crash@") {
+                let (pct_s, cell) = match rest.split_once(':') {
+                    Some((p, c)) => {
+                        let Some(idx) = c.strip_prefix("cell") else {
+                            bail!("faults: crash target must be cellK, got '{c}'");
+                        };
+                        (p, Some(idx.parse::<usize>().map_err(|_| {
+                            anyhow::anyhow!("faults: bad crash cell index '{idx}'")
+                        })?))
+                    }
+                    None => (rest, None),
+                };
+                let Some(pct_s) = pct_s.strip_suffix('%') else {
+                    bail!("faults: crash point must be a percentage, got '{pct_s}'");
+                };
+                let pct: u32 = pct_s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("faults: bad crash percentage '{pct_s}'"))?;
+                if !(1..=99).contains(&pct) {
+                    bail!("faults: crash percentage must be in 1..=99, got {pct}");
+                }
+                cfg.crash = Some(CrashSpec { pct, cell });
+                continue;
+            }
+            let Some((key, val)) = item.split_once(':') else {
+                bail!("faults: expected key:value, got '{item}'");
+            };
+            match key {
+                "retry" => {
+                    cfg.retries = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("faults: bad retry count '{val}'"))?;
+                    if cfg.retries > 8 {
+                        bail!("faults: retry count must be <= 8, got {}", cfg.retries);
+                    }
+                }
+                "backoff" => {
+                    let v = val.strip_suffix("us").unwrap_or(val);
+                    cfg.backoff_us = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("faults: bad backoff '{val}'"))?;
+                    if cfg.backoff_us == 0 || cfg.backoff_us > 1_000_000 {
+                        bail!("faults: backoff must be in 1..=1000000 us, got {}", cfg.backoff_us);
+                    }
+                }
+                "shed" => {
+                    cfg.shed = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("faults: bad shed rate '{val}'"))?;
+                    if !(0.0..=1.0).contains(&cfg.shed) {
+                        bail!("faults: shed rate must be in [0, 1], got {}", cfg.shed);
+                    }
+                }
+                "crash" => bail!("faults: crash is scheduled, not drawn — use crash@P%[:cellK]"),
+                kind => {
+                    let Some(k) = FaultKind::ALL.iter().find(|k| k.name() == kind) else {
+                        bail!(
+                            "faults: unknown key '{kind}' (expected one of {}, crash@P%, retry, backoff, shed)",
+                            FaultKind::NAMES[..5].join(", ")
+                        );
+                    };
+                    let rate: f64 = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("faults: bad rate '{val}' for {kind}"))?;
+                    if !(0.0..=1.0).contains(&rate) {
+                        bail!("faults: {kind} rate must be in [0, 1], got {rate}");
+                    }
+                    cfg.rates[k.index()] = rate;
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Canonical spec string — `parse(label())` round-trips (seed aside).
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        for k in FaultKind::ALL {
+            if self.rates[k.index()] > 0.0 {
+                parts.push(format!("{}:{}", k.name(), self.rates[k.index()]));
+            }
+        }
+        if let Some(c) = self.crash {
+            match c.cell {
+                Some(i) => parts.push(format!("crash@{}%:cell{i}", c.pct)),
+                None => parts.push(format!("crash@{}%", c.pct)),
+            }
+        }
+        if self.retries > 0 {
+            parts.push(format!("retry:{}", self.retries));
+            parts.push(format!("backoff:{}us", self.backoff_us));
+        }
+        if self.shed > 0.0 {
+            parts.push(format!("shed:{}", self.shed));
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+
+    /// Whether the plane does anything at all.
+    pub fn enabled(&self) -> bool {
+        self.crash.is_some() || self.rates.iter().any(|&r| r > 0.0)
+    }
+
+    /// Worst-case retry latency, priced into the trigger's admission
+    /// estimate: `backoff · (2^retries − 1)` µs, the sum of the
+    /// exponential-backoff waits.  Zero when no retryable fault can
+    /// inject, so `--faults none` folds nothing.
+    pub fn retry_budget_us(&self) -> u64 {
+        let retryable = FaultKind::ALL
+            .iter()
+            .any(|k| k.retryable() && self.rates[k.index()] > 0.0);
+        if !retryable || self.retries == 0 {
+            return 0;
+        }
+        self.backoff_us.saturating_mul((1u64 << self.retries) - 1)
+    }
+}
+
+/// Result of resolving one decision point against the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOutcome {
+    /// No fault at this decision point.
+    Clean,
+    /// Injected, recovered by a bounded retry on the given attempt.
+    Recovered { attempts: u32 },
+    /// Injected; every retry (if any) failed — take the ladder.
+    Failed,
+}
+
+/// Per-kind fault counters (the `FaultReport` of `RunMetrics`); merges
+/// across per-cell coordinators like the other stat blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultReport {
+    pub injected: [u64; FaultKind::COUNT],
+    pub retried: [u64; FaultKind::COUNT],
+    pub recovered: [u64; FaultKind::COUNT],
+    pub degraded: [u64; FaultKind::COUNT],
+    pub shed: [u64; FaultKind::COUNT],
+}
+
+impl FaultReport {
+    pub fn merge(&mut self, b: &FaultReport) {
+        for i in 0..FaultKind::COUNT {
+            self.injected[i] += b.injected[i];
+            self.retried[i] += b.retried[i];
+            self.recovered[i] += b.recovered[i];
+            self.degraded[i] += b.degraded[i];
+            self.shed[i] += b.shed[i];
+        }
+    }
+
+    pub fn any(&self) -> bool {
+        self.injected.iter().any(|&c| c > 0)
+    }
+
+    /// `(injected, retried, recovered, degraded, shed)` summed over kinds.
+    pub fn totals(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.injected.iter().sum(),
+            self.retried.iter().sum(),
+            self.recovered.iter().sum(),
+            self.degraded.iter().sum(),
+            self.shed.iter().sum(),
+        )
+    }
+}
+
+/// SplitMix64 finalizer — the stateless mixing step behind every draw.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Salt domain separating shed draws from injection draws.
+const SHED_SALT: u64 = 0x51ed_0000_0000_5a17;
+
+/// The compiled plan a coordinator owns: the parsed config, the run
+/// seed, and the counters.  All methods are allocation-free — the
+/// inject/retry/degrade path sits on the rank hot path and
+/// `bench_faults.rs` gates it at zero allocations per op.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    report: FaultReport,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> FaultPlan {
+        FaultPlan { cfg, report: FaultReport::default() }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    pub fn report(&self) -> FaultReport {
+        self.report
+    }
+
+    /// A uniform draw in `[0, 1)` from `(seed, kind, id, attempt)` only.
+    fn draw(&self, kind: FaultKind, id: u64, attempt: u32) -> f64 {
+        let mut h = splitmix64(self.cfg.seed ^ (kind.index() as u64 + 1));
+        h = splitmix64(h ^ id);
+        h = splitmix64(h ^ ((attempt as u64) << 32));
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Resolve one decision point: inject with the configured rate,
+    /// then (for retryable kinds) run the bounded-retry ladder — each
+    /// attempt is an independent seeded draw against the same rate, so
+    /// recovery is deterministic per `(kind, id)` and identical on every
+    /// engine regardless of where the retry would have waited.
+    pub fn resolve(&mut self, kind: FaultKind, id: u64) -> FaultOutcome {
+        let rate = self.cfg.rates[kind.index()];
+        if rate <= 0.0 {
+            return FaultOutcome::Clean;
+        }
+        if self.draw(kind, id, 0) >= rate {
+            return FaultOutcome::Clean;
+        }
+        self.report.injected[kind.index()] += 1;
+        if kind.retryable() {
+            for attempt in 1..=self.cfg.retries {
+                self.report.retried[kind.index()] += 1;
+                if self.draw(kind, id, attempt) >= rate {
+                    self.report.recovered[kind.index()] += 1;
+                    return FaultOutcome::Recovered { attempts: attempt };
+                }
+            }
+        }
+        FaultOutcome::Failed
+    }
+
+    /// Count an injection decided outside the draw path — scheduled
+    /// crashes are compiled to cell events, not drawn per request.
+    pub fn note_injected(&mut self, kind: FaultKind) {
+        self.report.injected[kind.index()] += 1;
+    }
+
+    /// Degradation ladder for an unrecovered fault: shed with the
+    /// configured probability (a seeded draw on the request id), else
+    /// degrade to full inference.  Returns `true` to shed.
+    pub fn shed_or_degrade(&mut self, kind: FaultKind, id: u64) -> bool {
+        if self.cfg.shed > 0.0 {
+            let mut h = splitmix64(self.cfg.seed ^ SHED_SALT);
+            h = splitmix64(h ^ id);
+            let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+            if u < self.cfg.shed {
+                self.report.shed[kind.index()] += 1;
+                return true;
+            }
+        }
+        self.report.degraded[kind.index()] += 1;
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_none_and_empty_disable() {
+        for spec in ["none", "", "  none  "] {
+            let cfg = FaultConfig::parse(spec).unwrap();
+            assert!(!cfg.enabled(), "{spec:?}");
+            assert_eq!(cfg.retry_budget_us(), 0);
+            assert_eq!(cfg.label(), "none");
+        }
+    }
+
+    #[test]
+    fn parse_full_spec_and_label_round_trip() {
+        let spec = "psi-fail:0.01,reload-fail:0.05,trigger-drop:0.02,crash@40%:cell0,retry:3,backoff:400us,shed:0.25";
+        let cfg = FaultConfig::parse(spec).unwrap();
+        assert!(cfg.enabled());
+        assert_eq!(cfg.rates[FaultKind::PsiFail.index()], 0.01);
+        assert_eq!(cfg.rates[FaultKind::ReloadFail.index()], 0.05);
+        assert_eq!(cfg.rates[FaultKind::TriggerDrop.index()], 0.02);
+        assert_eq!(cfg.crash, Some(CrashSpec { pct: 40, cell: Some(0) }));
+        assert_eq!(cfg.retries, 3);
+        assert_eq!(cfg.backoff_us, 400);
+        assert_eq!(cfg.shed, 0.25);
+        // Worst-case budget: 400·(2³−1) = 2800 µs.
+        assert_eq!(cfg.retry_budget_us(), 2800);
+        let relabel = FaultConfig::parse(&cfg.label()).unwrap();
+        assert_eq!(relabel, cfg);
+        // Crash with no cell target round-trips too.
+        let all = FaultConfig::parse("crash@60%").unwrap();
+        assert_eq!(all.crash, Some(CrashSpec { pct: 60, cell: None }));
+        assert_eq!(FaultConfig::parse(&all.label()).unwrap(), all);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "psi-fail",           // no rate
+            "psi-fail:2.0",       // rate out of range
+            "warp-core:0.1",      // unknown kind
+            "crash:0.1",          // crash is scheduled, not drawn
+            "crash@0%",           // pct out of range
+            "crash@140%",         // pct out of range
+            "crash@40",           // missing %
+            "crash@40%:node0",    // bad cell prefix
+            "retry:9",            // retry cap
+            "backoff:0us",        // zero backoff
+            "shed:1.5",           // shed out of range
+        ] {
+            assert!(FaultConfig::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn retry_budget_requires_retryable_rate() {
+        // Retries configured but only non-retryable kinds active: no
+        // budget is folded (nothing can consume a retry).
+        let cfg = FaultConfig::parse("spill-loss:0.5,retry:4,backoff:100us").unwrap();
+        assert_eq!(cfg.retry_budget_us(), 0);
+        let cfg = FaultConfig::parse("trigger-drop:0.5,retry:4,backoff:100us").unwrap();
+        assert_eq!(cfg.retry_budget_us(), 100 * 15);
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_rate_accurate() {
+        let mut cfg = FaultConfig::parse("psi-fail:0.1").unwrap();
+        cfg.seed = 42;
+        let mut a = FaultPlan::new(cfg.clone());
+        let mut b = FaultPlan::new(cfg);
+        let mut injected = 0u64;
+        for id in 0..10_000u64 {
+            let oa = a.resolve(FaultKind::PsiFail, id);
+            assert_eq!(oa, b.resolve(FaultKind::PsiFail, id), "id {id}");
+            if oa != FaultOutcome::Clean {
+                injected += 1;
+            }
+        }
+        assert_eq!(a.report(), b.report());
+        assert_eq!(a.report().injected[FaultKind::PsiFail.index()], injected);
+        // ~10% of 10k with generous slack.
+        assert!((800..=1200).contains(&injected), "injected {injected}");
+        // A different seed draws a different fault set.
+        let mut cfg2 = FaultConfig::parse("psi-fail:0.1").unwrap();
+        cfg2.seed = 43;
+        let mut c = FaultPlan::new(cfg2);
+        let mut differs = false;
+        for id in 0..10_000u64 {
+            if c.resolve(FaultKind::PsiFail, id) != b.resolve(FaultKind::PsiFail, id) {
+                differs = true;
+                break;
+            }
+        }
+        assert!(differs, "seed must matter");
+    }
+
+    #[test]
+    fn retries_recover_a_strict_subset() {
+        let base = FaultConfig::parse("trigger-drop:0.2").unwrap();
+        let with_retry = FaultConfig::parse("trigger-drop:0.2,retry:3,backoff:100us").unwrap();
+        let mut off = FaultPlan::new(base);
+        let mut on = FaultPlan::new(with_retry);
+        let (mut failed_off, mut failed_on) = (0u64, 0u64);
+        for id in 0..10_000u64 {
+            if off.resolve(FaultKind::TriggerDrop, id) == FaultOutcome::Failed {
+                failed_off += 1;
+            }
+            if on.resolve(FaultKind::TriggerDrop, id) == FaultOutcome::Failed {
+                failed_on += 1;
+            }
+        }
+        // Same injection draw (attempt 0) → same injected set; retries
+        // can only convert Failed → Recovered.
+        assert_eq!(off.report().injected, on.report().injected);
+        assert!(failed_on < failed_off, "retries must recover: {failed_on} vs {failed_off}");
+        let r = on.report();
+        let idx = FaultKind::TriggerDrop.index();
+        assert_eq!(r.recovered[idx], failed_off - failed_on);
+        assert!(r.retried[idx] >= r.recovered[idx]);
+    }
+
+    #[test]
+    fn non_retryable_kinds_never_retry() {
+        let cfg = FaultConfig::parse("spill-loss:0.5,seg-abort:0.5,retry:4").unwrap();
+        let mut plan = FaultPlan::new(cfg);
+        for id in 0..1000u64 {
+            for kind in [FaultKind::SpillLoss, FaultKind::SegAbort] {
+                let o = plan.resolve(kind, id);
+                assert!(o == FaultOutcome::Clean || o == FaultOutcome::Failed, "{o:?}");
+            }
+        }
+        let r = plan.report();
+        assert!(r.any());
+        assert_eq!(r.retried, [0; FaultKind::COUNT]);
+        assert_eq!(r.recovered, [0; FaultKind::COUNT]);
+    }
+
+    #[test]
+    fn shed_or_degrade_partitions_by_rate() {
+        let mut cfg = FaultConfig::parse("psi-fail:1.0,shed:0.3").unwrap();
+        cfg.seed = 7;
+        let mut plan = FaultPlan::new(cfg);
+        let mut sheds = 0u64;
+        for id in 0..10_000u64 {
+            if plan.shed_or_degrade(FaultKind::PsiFail, id) {
+                sheds += 1;
+            }
+        }
+        let r = plan.report();
+        let idx = FaultKind::PsiFail.index();
+        assert_eq!(r.shed[idx], sheds);
+        assert_eq!(r.degraded[idx], 10_000 - sheds);
+        assert!((2700..=3300).contains(&sheds), "sheds {sheds}");
+        // shed:0 always degrades.
+        let mut plan = FaultPlan::new(FaultConfig::parse("psi-fail:1.0").unwrap());
+        assert!(!plan.shed_or_degrade(FaultKind::PsiFail, 1));
+        assert_eq!(plan.report().degraded[idx], 1);
+        assert_eq!(plan.report().shed[idx], 0);
+    }
+
+    #[test]
+    fn report_merge_sums_per_kind() {
+        let mut a = FaultReport::default();
+        let mut b = FaultReport::default();
+        a.injected[0] = 3;
+        a.shed[4] = 2;
+        b.injected[0] = 5;
+        b.recovered[1] = 7;
+        a.merge(&b);
+        assert_eq!(a.injected[0], 8);
+        assert_eq!(a.recovered[1], 7);
+        assert_eq!(a.shed[4], 2);
+        assert_eq!(a.totals(), (8, 0, 7, 0, 2));
+    }
+}

@@ -128,6 +128,16 @@ pub enum SpanKind {
     /// [`SpanKind::CellRouted`] when the picker overrode the user's home
     /// cell (load spill, drain, failure eligibility).
     CellFailover = 21,
+    /// Fault plane injected a fault at a decision point.  a = fault kind
+    /// index ([`crate::relay::fault::FaultKind`]), b = 1 when the retry
+    /// ladder later recovered it, 0 when it stuck.
+    FaultInjected = 22,
+    /// A deterministic retry attempt against an injected fault.  a =
+    /// fault kind index, b = attempt number (1-based).
+    RetryScheduled = 23,
+    /// Degradation-ladder verdict for an unrecovered fault.  a = fault
+    /// kind index, b = rung (0 degraded-to-fallback, 1 shed).
+    Degraded = 24,
 }
 
 impl SpanKind {
@@ -156,6 +166,9 @@ impl SpanKind {
             19 => SpillEnd,
             20 => CellRouted,
             21 => CellFailover,
+            22 => FaultInjected,
+            23 => RetryScheduled,
+            24 => Degraded,
             _ => return None,
         })
     }
@@ -185,6 +198,9 @@ impl SpanKind {
             SpillEnd => "spill-end",
             CellRouted => "cell-routed",
             CellFailover => "cell-failover",
+            FaultInjected => "fault-injected",
+            RetryScheduled => "retry",
+            Degraded => "degraded",
         }
     }
 
@@ -196,9 +212,10 @@ impl SpanKind {
         use SpanKind::*;
         match self {
             Arrival | CellRouted | CellFailover => "arrival",
-            TriggerDecision | PsiLookup | Route | ProduceBegin | ProduceEnd => "admission",
+            TriggerDecision | PsiLookup | Route | ProduceBegin | ProduceEnd | FaultInjected
+            | RetryScheduled => "admission",
             RankStart => "rank-queue",
-            WaitResolved | ReloadBegin | ReloadEnd | Fallback => "psi-wait",
+            WaitResolved | ReloadBegin | ReloadEnd | Fallback | Degraded => "psi-wait",
             BatchOpen | BatchJoin | BatchFilled | BatchFlush | BatchSolo => "batch-form",
             ExecStart => "batch-wait",
             RankDone => "rank-exec",
@@ -524,6 +541,24 @@ impl FlightRecorder {
         self.emit(t, rid, SpanKind::Fallback, cause, 0);
     }
 
+    /// Fault-plane injection at a decision point.  Takes `rid` directly
+    /// (like spills) — some injection sites (reload completion) have no
+    /// slab slot in hand.
+    pub fn note_fault(&mut self, t: u64, rid: u64, kind_idx: u64, recovered: bool) {
+        self.emit(t, rid, SpanKind::FaultInjected, kind_idx, u64::from(recovered));
+    }
+
+    /// One deterministic retry attempt (1-based) against an injected fault.
+    pub fn note_retry(&mut self, t: u64, rid: u64, kind_idx: u64, attempt: u64) {
+        self.emit(t, rid, SpanKind::RetryScheduled, kind_idx, attempt);
+    }
+
+    /// Degradation-ladder verdict for an unrecovered fault (`shed` picks
+    /// the rung).
+    pub fn note_degraded(&mut self, t: u64, rid: u64, kind_idx: u64, shed: bool) {
+        self.emit(t, rid, SpanKind::Degraded, kind_idx, u64::from(shed));
+    }
+
     pub fn note_spill_begin(&mut self, t: u64, rid: u64, user: u64, instance: u64, bytes: u64) {
         self.pending_spill.insert(user, (rid, t));
         self.emit(t, rid, SpanKind::SpillBegin, instance, bytes);
@@ -789,6 +824,21 @@ fn describe(s: &Span) -> String {
         SpillBegin => format!("instance={} bytes={}", inst(s.a), s.b),
         SpillEnd => format!("accepted={} bytes={}", s.a == 1, s.b),
         CellRouted | CellFailover => format!("cell={} home={}", s.a, s.b),
+        FaultInjected => format!(
+            "{} recovered={}",
+            name(&crate::relay::fault::FaultKind::NAMES, s.a),
+            s.b == 1
+        ),
+        RetryScheduled => format!(
+            "{} attempt={}",
+            name(&crate::relay::fault::FaultKind::NAMES, s.a),
+            s.b
+        ),
+        Degraded => format!(
+            "{} rung={}",
+            name(&crate::relay::fault::FaultKind::NAMES, s.a),
+            if s.b == 1 { "shed" } else { "fallback" }
+        ),
     }
 }
 
@@ -982,7 +1032,10 @@ mod tests {
         // Tags are append-only past the PR 8 table.
         assert_eq!(SpanKind::from_u8(20), Some(SpanKind::CellRouted));
         assert_eq!(SpanKind::from_u8(21), Some(SpanKind::CellFailover));
-        assert_eq!(SpanKind::from_u8(22), None);
+        assert_eq!(SpanKind::from_u8(22), Some(SpanKind::FaultInjected));
+        assert_eq!(SpanKind::from_u8(23), Some(SpanKind::RetryScheduled));
+        assert_eq!(SpanKind::from_u8(24), Some(SpanKind::Degraded));
+        assert_eq!(SpanKind::from_u8(25), None);
         let path = tmp("cells.rgsp");
         fl.write_rgsp(&path).unwrap();
         let back = read_rgsp(&path).unwrap();

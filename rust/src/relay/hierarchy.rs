@@ -343,6 +343,34 @@ impl<T: Clone> CacheHierarchy<T> {
         }
     }
 
+    /// Remove and return every lower-tier host copy, in ascending user
+    /// order (cell-drain migration needs an engine-independent order).
+    /// The top-most tier's copy wins when a stale duplicate survives in
+    /// a deeper tier — the same precedence as [`Self::payload_below`].
+    /// Bypasses eviction stats: the copies leave by migration, not
+    /// capacity pressure.
+    pub fn drain_lower(&mut self) -> Vec<(u64, usize, T)> {
+        let mut users: Vec<u64> = Vec::new();
+        for t in &self.lower {
+            users.extend(t.users_sorted());
+        }
+        users.sort_unstable();
+        users.dedup();
+        let mut out = Vec::with_capacity(users.len());
+        for user in users {
+            let mut taken = None;
+            for t in &mut self.lower {
+                if let Some(e) = t.remove_entry(user) {
+                    taken.get_or_insert(e);
+                }
+            }
+            if let Some((bytes, payload)) = taken {
+                out.push((user, bytes, payload));
+            }
+        }
+        out
+    }
+
     /// Drop a user's lower-tier entries (e.g. behaviours were refreshed
     /// upstream and the cached prefix is stale).
     pub fn invalidate(&mut self, user: u64) -> bool {

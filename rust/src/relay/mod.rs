@@ -56,6 +56,7 @@
 pub mod baseline;
 pub mod cell;
 pub mod coordinator;
+pub mod fault;
 pub mod flight;
 pub mod hbm;
 pub mod hierarchy;
@@ -73,6 +74,7 @@ pub use coordinator::{
     Completion, CoordinatorConfig, FailStats, QueuedReload, RankAction, RankCompute,
     RelayCoordinator, ReloadResolution, ReqId, SignalAction, Stage,
 };
+pub use fault::{CrashSpec, FaultConfig, FaultKind, FaultOutcome, FaultPlan, FaultReport};
 pub use flight::{FlightRecorder, Span, SpanKind, StageBreakdown, Timeline};
 pub use hbm::{EntryState, HbmCache, HbmStats, InsertError, Micros};
 pub use hierarchy::{CacheHierarchy, HierarchyStats, PseudoAction, ReloadDone};

@@ -91,6 +91,10 @@ pub enum CacheOutcome {
     /// Admitted but the cache was unavailable at ranking time (evicted,
     /// affinity break, production too slow) — safe fallback to full.
     Fallback,
+    /// Load-shedding rung of the degradation ladder: an unrecovered
+    /// fault plus shed pressure — the request is answered degraded
+    /// (coarse-rank order) instead of paying full inference.
+    Shed,
 }
 
 /// Per-request lifecycle record (timestamps in µs since sim start).

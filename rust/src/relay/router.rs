@@ -230,6 +230,13 @@ impl Router {
         self.stats
     }
 
+    /// Read-only peek at the special instance `user`'s affinity keys
+    /// map to — no stats, no connection bookkeeping.  Used when state
+    /// is *placed* for a user (drain migration) rather than routed.
+    pub fn peek_special(&self, user: u64) -> Option<usize> {
+        self.special_ring.route(user)
+    }
+
     /// Route a user-keyed request (pre-infer signal *or* long-sequence
     /// ranking request): consistent hashing at both hops, so coupled
     /// requests rendezvous deterministically.

@@ -246,6 +246,15 @@ impl<T> PolicyTier<T> {
         self.entries.contains_key(&user)
     }
 
+    /// Resident users in ascending id order.  Callers that act on the
+    /// result (e.g. drain migration) need an engine-independent order,
+    /// so the hash map's iteration order must never leak out.
+    pub fn users_sorted(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.entries.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
     pub fn stats(&self) -> TierStats {
         self.stats
     }

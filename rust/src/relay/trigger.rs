@@ -250,6 +250,16 @@ pub struct TriggerConfig {
     /// wait to compute.  The static path is untouched: Eqs. 1–3 have no
     /// batching term and must keep reproducing the paper exactly.
     pub batch_window_us: u64,
+    /// Decision-synchronous worst-case retry budget, folded in by the
+    /// coordinator from the fault plan (`FaultConfig::retry_budget_us`,
+    /// the same single-source-of-truth rule as `batch_window_us`).  An
+    /// admitted request may spend up to this long in exponential-backoff
+    /// retries before the degradation ladder fires, so the adaptive
+    /// controller charges it to the admission estimate.  Zero whenever
+    /// the fault plane is off, keeping fault-free runs decision-bit-
+    /// identical to the pre-fault trigger; the static path (Eqs. 1–3)
+    /// ignores it either way.
+    pub retry_budget_us: u64,
     /// Closed-loop admission knobs; `AdmissionMode::Static` (the
     /// default) reproduces the original Eqs. 1–3 flow exactly.
     pub admission: AdmissionConfig,
@@ -270,6 +280,7 @@ impl TriggerConfig {
             r2: 0.1,
             n_instances: 100,
             batch_window_us: 0,
+            retry_budget_us: 0,
             admission: AdmissionConfig::default(),
         }
     }
@@ -684,8 +695,11 @@ impl Trigger {
         // window to admission: an admitted request cannot start ranking
         // before the batch former releases it, so an aggressive window
         // consumes real headroom the controller would otherwise
-        // attribute to compute.
-        let est_eff = est_full_us + self.cfg.batch_window_us as f64;
+        // attribute to compute.  The fault plan's worst-case retry
+        // budget is charged the same way — backoff is latency the
+        // request may pay before the ladder resolves it.
+        let est_eff =
+            est_full_us + (self.cfg.batch_window_us + self.cfg.retry_budget_us) as f64;
         self.stats.adapted += 1;
         self.adapt.est.push(self.cfg.admission.est_window, est_eff);
         let (headroom, rate_mult) = self.operating_point();
@@ -776,6 +790,7 @@ pub fn plan_cli(args: &Args) -> Result<()> {
         r2: args.get_f64("r2", d.r2)?,
         n_instances: args.get_usize("instances", d.n_instances)?,
         batch_window_us: d.batch_window_us,
+        retry_budget_us: d.retry_budget_us,
         admission: AdmissionConfig::from_args(args, &d.admission)?,
     };
     let lim = cfg.limits();
@@ -950,7 +965,12 @@ mod tests {
     /// Satellite: releases pair with admits exactly — `live` equals
     /// `admitted − released` under paired usage, and a stray release is
     /// surfaced as `spurious_release` instead of silently under-counting
-    /// the Eq. 2 feedback.
+    /// the Eq. 2 feedback.  The event mix covers the fault plane's new
+    /// failure-path orderings: *retry-then-cancel* (an admit whose
+    /// production retried, then got overcommit-cancelled — retries are
+    /// priced, not slotted, so the cancel is the one and only release)
+    /// and *crash-mid-rank* (the instance dies after admit; the wipe's
+    /// release must still pair exactly once, never once per retry).
     #[test]
     fn prop_live_equals_admitted_minus_released() {
         crate::util::prop::check("trigger-release-accounting", 100, |rng| {
@@ -959,18 +979,40 @@ mod tests {
             if rng.bernoulli(0.5) {
                 cfg.admission = AdmissionConfig::adaptive();
             }
+            // Retry pricing must not perturb the slot ledger either way.
+            if rng.bernoulli(0.5) {
+                cfg.retry_budget_us = 2_800;
+            }
             let mut t = Trigger::new(cfg, Box::new(|_| 1e9));
-            let mut outstanding = 0u64;
+            // Users with an admit outstanding, so cancels/releases pair.
+            let mut open: Vec<u64> = Vec::new();
             let mut now = 0u64;
-            for user in 0..200u64 {
+            for user in 0..300u64 {
                 now += rng.range(0, 20_000) as u64;
-                if rng.bernoulli(0.6) {
-                    if t.decide(now, &user_meta(user), KV) == Decision::Admit {
-                        outstanding += 1;
+                match rng.range(0, 10) {
+                    0..=4 => {
+                        if t.decide(now, &user_meta(user), KV) == Decision::Admit {
+                            open.push(user);
+                        }
                     }
-                } else if outstanding > 0 {
-                    t.release();
-                    outstanding -= 1;
+                    5..=6 => {
+                        // Completion or crash-mid-rank wipe: both paths
+                        // release exactly once, whatever retries the
+                        // production suffered before dying.
+                        if open.pop().is_some() {
+                            t.release();
+                        }
+                    }
+                    _ => {
+                        // Retry-then-cancel: the admit is cancelled at
+                        // signal time after its (priced) retry window —
+                        // one cancel, one release, footprint freed.
+                        if !open.is_empty() {
+                            let i = rng.range(0, open.len());
+                            let u = open.swap_remove(i);
+                            t.cancel_admit(u);
+                        }
+                    }
                 }
                 let s = t.stats();
                 if s.spurious_release != 0 {
@@ -982,6 +1024,13 @@ mod tests {
                         t.live(),
                         s.admitted,
                         s.released
+                    ));
+                }
+                if t.live() != open.len() {
+                    return Err(format!(
+                        "live {} != outstanding admits {}",
+                        t.live(),
+                        open.len()
                     ));
                 }
             }
@@ -1067,6 +1116,31 @@ mod tests {
         assert_eq!(t.stats().not_at_risk, 0);
         // Static admission has no batching term: same window, same
         // estimator, still NotAtRisk (the paper's flow is untouched).
+        cfg.admission = AdmissionConfig::default();
+        let mut t = Trigger::new(cfg, boundary_est());
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::NotAtRisk);
+    }
+
+    /// The fault plan's worst-case retry budget is priced exactly like
+    /// the batch window: it moves the adaptive risk classification and
+    /// stacks with the window, while the static path ignores it.
+    #[test]
+    fn adaptive_estimate_charges_retry_budget() {
+        let boundary_est: fn() -> Estimator = || Box::new(|_: &BehaviorMeta| 39_000.0);
+        let mut cfg = adaptive_cfg();
+        cfg.q_m = 1e9;
+        let mut t = Trigger::new(cfg.clone(), boundary_est());
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::NotAtRisk);
+        // A 2.8 ms retry budget (400 µs · (2³−1)) pushes 39 ms over the
+        // 40 ms line: the request is now at risk and relayed.
+        cfg.retry_budget_us = 2_800;
+        let mut t = Trigger::new(cfg.clone(), boundary_est());
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::Admit);
+        // Budget and window stack — both are latency the request pays.
+        cfg.batch_window_us = 20_000;
+        let mut t = Trigger::new(cfg.clone(), boundary_est());
+        assert_eq!(t.decide(0, &meta(4096), KV), Decision::Admit);
+        // Static admission keeps the paper's Eqs. 1–3 untouched.
         cfg.admission = AdmissionConfig::default();
         let mut t = Trigger::new(cfg, boundary_est());
         assert_eq!(t.decide(0, &meta(4096), KV), Decision::NotAtRisk);

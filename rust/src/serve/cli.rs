@@ -56,6 +56,9 @@ pub fn run(args: &Args) -> Result<()> {
             cfg.cell_spill
         ));
     }
+    if let Some(s) = args.get("faults") {
+        cfg.faults = crate::relay::fault::FaultConfig::parse(s)?;
+    }
     cfg.trace_spans = args.get_usize("trace-spans", cfg.trace_spans)?;
     cfg.heartbeat_path = args.get("heartbeat").map(str::to_string);
     cfg.heartbeat_ms = args.get_u64("heartbeat-ms", cfg.heartbeat_ms)?;
@@ -149,6 +152,9 @@ pub fn run(args: &Args) -> Result<()> {
         println!("  {line}");
     }
     for line in m.cells_report() {
+        println!("  {line}");
+    }
+    for line in m.faults_report() {
         println!("  {line}");
     }
     if let Some(line) = m.admission_brief() {

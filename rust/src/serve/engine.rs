@@ -26,6 +26,7 @@ use crate::relay::coordinator::{
     BatchDecision, CoordinatorConfig, QueuedReload, RankAction, RelayCoordinator, ReqId,
     SignalAction, Stage,
 };
+use crate::relay::fault::FaultConfig;
 use crate::relay::pipeline::{CacheOutcome, Lifecycle, PipelineConfig, StageSampler};
 use crate::relay::router::RouterConfig;
 use crate::relay::segment::SegmentConfig;
@@ -100,6 +101,10 @@ pub struct LiveConfig {
     pub heartbeat_path: Option<String>,
     /// Heartbeat emission interval, milliseconds (`--heartbeat-ms`).
     pub heartbeat_ms: u64,
+    /// Fault-injection plan (`--faults`; default off).  Scheduled crash
+    /// events are sim/reference-only — wall-clock runs have no fixed
+    /// duration to anchor `crash@P%` against.
+    pub faults: FaultConfig,
     pub seed: u64,
 }
 
@@ -130,6 +135,7 @@ impl LiveConfig {
             trace_spans: 0,
             heartbeat_path: None,
             heartbeat_ms: 1_000,
+            faults: FaultConfig::default(),
             seed: 42,
         }
     }
@@ -173,8 +179,10 @@ impl LiveConfig {
                 m_slots: self.m_slots,
                 r2: 0.5,
                 n_instances: self.n_instances,
-                // Filled in by the coordinator from `batch_window_us`.
+                // Filled in by the coordinator from `batch_window_us`
+                // and the fault plan's retry pricing.
                 batch_window_us: 0,
+                retry_budget_us: 0,
                 admission: self.admission.clone(),
             },
             tiers: self.tier_stack(),
@@ -194,6 +202,13 @@ impl LiveConfig {
             batch_window_us: self.batch_window_us,
             batch_max: self.batch_max,
             trace_spans: self.trace_spans,
+            faults: {
+                // Fold the run seed so identical `--faults` specs draw
+                // identically across engines and job counts.
+                let mut f = self.faults.clone();
+                f.seed = self.seed;
+                f
+            },
         }
     }
 
@@ -206,6 +221,9 @@ impl LiveConfig {
             picker: self.cell_picker,
             spill_ratio: self.cell_spill,
             scenario: CellScenario::None,
+            // Passed through for validation; the duration-0 event
+            // compile above means no crash ever fires on this engine.
+            crash: self.faults.crash,
         }
     }
 
@@ -958,11 +976,13 @@ impl LiveCluster {
             m.hierarchy = cells.coord(0).hierarchy_stats();
             m.trigger = cells.coord(0).trigger_stats();
             m.segments = cells.coord(0).segment_stats();
+            m.faults = cells.coord(0).fault_report();
             for c in 1..cells.n_cells() {
                 m.hbm.merge(cells.coord(c).hbm_stats());
                 m.hierarchy.merge(cells.coord(c).hierarchy_stats());
                 m.trigger.merge(cells.coord(c).trigger_stats());
                 m.segments.merge(cells.coord(c).segment_stats());
+                m.faults.merge(&cells.coord(c).fault_report());
             }
             m.cells = cells.reports();
             if let Some(fl) = cells.take_flight() {

@@ -255,6 +255,7 @@ fn sim_and_serial_driver_agree_on_service_class() {
                 "cached"
             }
             CacheOutcome::Fallback => "fallback",
+            CacheOutcome::Shed => "shed",
         }
     }
     let wl = workload(true);
@@ -287,6 +288,7 @@ fn engines_agree_under_nondefault_eviction_policies() {
                 "cached"
             }
             CacheOutcome::Fallback => "fallback",
+            CacheOutcome::Shed => "shed",
         }
     }
     let wl = workload(true);
@@ -508,6 +510,7 @@ fn segments_agree_under_nondefault_tier_policies() {
                 "cached"
             }
             CacheOutcome::Fallback => "fallback",
+            CacheOutcome::Shed => "shed",
         }
     }
     let wl = workload(true);

@@ -1,0 +1,150 @@
+//! Fault-plane determinism: injection draws are pure functions of
+//! decision-plane state (plan seed, fault kind, stable request/user id,
+//! attempt number) — never clocks, never event ordinals, never executor
+//! scheduling.  So a `--faults` spec + seed must reproduce byte-identical
+//! per-request outcomes AND a byte-identical [`FaultReport`] across
+//! repeat runs, across the sim/reference engines (under the strict
+//! timing-insensitive shape), and at any `--jobs` count.  And `--faults
+//! none` must be decision-bit-identical to a run that never heard of the
+//! fault plane — the PR 9 pin.
+
+use relaygr::cluster::{run_reference, run_sim, SimConfig};
+use relaygr::relay::baseline::Mode;
+use relaygr::relay::fault::{FaultConfig, FaultReport};
+use relaygr::relay::pipeline::CacheOutcome;
+use relaygr::relay::tier::DramPolicy;
+use relaygr::util::parallel;
+use relaygr::workload::{ScenarioKind, WorkloadConfig};
+
+const SPEC: &str = "psi-fail:0.1,trigger-drop:0.05,shed:0.4,retry:2,backoff:200us";
+
+fn workload(scenario: &str) -> WorkloadConfig {
+    WorkloadConfig {
+        qps: 60.0,
+        duration_us: 5_000_000,
+        num_users: 800,
+        fixed_long_len: Some(4096),
+        max_prefix: 4096,
+        refresh_prob: 0.0,
+        scenario: ScenarioKind::parse(scenario).expect("built-in scenario"),
+        seed: 1234,
+        ..Default::default()
+    }
+}
+
+/// Strict engine-identity shape: no DRAM tier, lifecycle beyond the
+/// trace — any divergence is a leaked draw, not clock skew.
+fn config(spec: &str, cells: usize, wl: &WorkloadConfig) -> SimConfig {
+    let mut cfg = SimConfig::standard(Mode::RelayGr { dram: DramPolicy::Disabled });
+    cfg.pipeline.t_life_us = 2 * wl.duration_us;
+    cfg.router.servers = 8; // divisible by 1 and 2 cells
+    cfg.cells = cells;
+    cfg.faults = FaultConfig::parse(spec).expect("valid fault spec");
+    cfg.log_outcomes = true;
+    cfg
+}
+
+fn sim_run(cfg: &SimConfig, wl: &WorkloadConfig) -> (Vec<(u64, CacheOutcome)>, FaultReport) {
+    let m = run_sim(cfg.clone(), wl).expect("simulation runs");
+    let mut log = m.outcome_log();
+    log.sort_by_key(|&(id, _)| id);
+    (log, m.faults)
+}
+
+/// Same spec + seed ⇒ byte-identical outcomes and fault report, run to
+/// run and engine to engine.
+#[test]
+fn same_spec_same_seed_byte_identical_across_runs_and_engines() {
+    let wl = workload("steady");
+    let cfg = config(SPEC, 1, &wl);
+    let (log_a, rep_a) = sim_run(&cfg, &wl);
+    let (log_b, rep_b) = sim_run(&cfg, &wl);
+    assert_eq!(log_a, log_b, "sim is not run-to-run deterministic under faults");
+    assert_eq!(rep_a, rep_b, "fault report is not run-to-run deterministic");
+
+    let serial = run_reference(&cfg, &wl).expect("serialized reference runs");
+    assert_eq!(log_a, serial.outcomes, "engines diverged on per-request outcomes");
+    assert_eq!(rep_a, serial.faults, "engines diverged on the fault report");
+    let again = run_reference(&cfg, &wl).expect("serialized reference runs");
+    assert_eq!(serial.outcomes, again.outcomes);
+    assert_eq!(serial.faults, again.faults);
+
+    // The plan actually fired — and the retry policy actually recovered.
+    let (inj, ret, rec, _, _) = rep_a.totals();
+    assert!(inj > 0, "spec injected nothing: {rep_a:?}");
+    assert!(ret > 0 && rec > 0, "retries never recovered: {rep_a:?}");
+
+    // A different run seed draws a different fault pattern on the SAME
+    // trace (the folded plan seed is live, not vestigial).
+    let mut other = cfg.clone();
+    other.seed ^= 0xDEAD_BEEF;
+    let (_, rep_c) = sim_run(&other, &wl);
+    assert_ne!(rep_a, rep_c, "run seed does not reach the fault draws");
+}
+
+/// The figure-grid executor may only change wall-clock time: a faulted
+/// grid evaluated at `--jobs 1` and `--jobs 4` must produce identical
+/// (outcomes, report) pairs for every cell, including the multi-cell
+/// scheduled-crash row.
+#[test]
+fn jobs_count_never_changes_faulted_results() {
+    let grid: Vec<(&str, &str, usize)> = vec![
+        (SPEC, "steady", 1),
+        (SPEC, "burst", 1),
+        ("psi-fail:0.1,trigger-drop:0.05", "steady", 1), // retry off
+        ("psi-fail:0.1,crash@50%", "steady", 2),
+    ];
+    let eval = |jobs: usize| -> Vec<(Vec<(u64, CacheOutcome)>, FaultReport)> {
+        parallel::map_indexed(jobs, grid.len(), |i| {
+            let (spec, scenario, cells) = grid[i];
+            let wl = workload(scenario);
+            let cfg = config(spec, cells, &wl);
+            sim_run(&cfg, &wl)
+        })
+    };
+    let serial = eval(1);
+    let threaded = eval(4);
+    for (i, (a, b)) in serial.iter().zip(&threaded).enumerate() {
+        assert_eq!(a.0, b.0, "grid cell {i}: outcomes depend on the job count");
+        assert_eq!(a.1, b.1, "grid cell {i}: fault report depends on the job count");
+    }
+    // The crash row scheduled its event in both engines identically.
+    let crash_row = &serial[3];
+    use relaygr::relay::fault::FaultKind;
+    // `crash@50%` with no target cell hits every cell once.
+    assert_eq!(crash_row.1.injected[FaultKind::Crash.index()], 2, "crash never fired");
+    let wl = workload("steady");
+    let cfg = config("psi-fail:0.1,crash@50%", 2, &wl);
+    let reference = run_reference(&cfg, &wl).expect("serialized reference runs");
+    assert_eq!(crash_row.0, reference.outcomes, "crash run diverged across engines");
+    assert_eq!(crash_row.1, reference.faults, "crash report diverged across engines");
+}
+
+/// `--faults none` is the PR 9 pin: the disabled plane folds no retry
+/// budget, draws nothing, sheds nothing, and every decision matches a
+/// run whose fault config differs only in its (never-consulted) seed.
+#[test]
+fn faults_none_is_decision_identical_to_fault_free_runs() {
+    for scenario in ["steady", "burst"] {
+        let wl = workload(scenario);
+        let off = config("none", 1, &wl);
+        assert!(!off.faults.enabled());
+        assert_eq!(off.faults.retry_budget_us(), 0);
+        let (log_off, rep_off) = sim_run(&off, &wl);
+        assert!(!rep_off.any(), "{scenario}: disabled plane injected something");
+        assert!(
+            log_off.iter().all(|&(_, o)| o != CacheOutcome::Shed),
+            "{scenario}: disabled plane shed a request"
+        );
+        // A different plan seed must be invisible when nothing can draw.
+        let mut reseeded = off.clone();
+        reseeded.faults.seed = 0x5EED;
+        let (log_re, rep_re) = sim_run(&reseeded, &wl);
+        assert_eq!(log_off, log_re, "{scenario}: dormant fault seed moved a decision");
+        assert!(!rep_re.any());
+        // And both engines agree, as they always did pre-fault-plane.
+        let serial = run_reference(&off, &wl).expect("serialized reference runs");
+        assert_eq!(log_off, serial.outcomes, "{scenario}: engines diverged with faults off");
+        assert!(!serial.faults.any());
+    }
+}
